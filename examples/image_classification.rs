@@ -1,0 +1,87 @@
+//! Image classification with an embedded dense QP layer (paper §5.3,
+//! Table 6, Fig. 4) on the synthetic-digits MNIST substitute.
+//!
+//! Trains the identical network twice — optimization layer backed by
+//! Alt-Diff vs by OptNet (IPM + implicit KKT) — and reports test accuracy
+//! and time per epoch, plus an Alt-Diff tolerance sweep (Fig. 4's
+//! truncation claim).
+//!
+//! Run: cargo run --release --example image_classification [--epochs 3]
+
+use altdiff::nn::OptBackend;
+use altdiff::train::{train_mnist, MnistConfig};
+use altdiff::util::{Args, Table};
+
+fn main() {
+    let args = Args::parse();
+    let epochs = args.get_usize("epochs", 3);
+    let train_size = args.get_usize("train", 400);
+
+    println!("== image classification with a QP optimization layer ==\n");
+
+    let base = MnistConfig {
+        epochs,
+        train_size,
+        test_size: 150,
+        ..Default::default()
+    };
+
+    // Table 6: Alt-Diff vs OptNet
+    let alt = train_mnist(&MnistConfig {
+        backend: OptBackend::AltDiff,
+        ..base.clone()
+    });
+    let opt = train_mnist(&MnistConfig {
+        backend: OptBackend::OptNetKkt,
+        ..base.clone()
+    });
+
+    let mut t = Table::new(
+        "Table 6 — accuracy & time per epoch",
+        &["model", "test acc (%)", "time/epoch (s)", "layer iters"],
+    );
+    for r in [&opt, &alt] {
+        let acc = 100.0 * r.test_accs.last().unwrap();
+        let tm = r.epoch_times.iter().sum::<f64>()
+            / r.epoch_times.len() as f64;
+        t.row(&[
+            r.backend_label.clone(),
+            format!("{acc:.2}"),
+            format!("{tm:.3}"),
+            format!("{:.1}", r.mean_layer_iters),
+        ]);
+    }
+    t.print();
+
+    // Fig. 4: tolerance sweep for Alt-Diff
+    let mut t2 = Table::new(
+        "Fig 4 — alt-diff truncation sweep",
+        &["tol", "final test acc (%)", "time/epoch (s)"],
+    );
+    for tol in [1e-1, 1e-2, 1e-3] {
+        let r = train_mnist(&MnistConfig {
+            backend: OptBackend::AltDiff,
+            tol,
+            ..base.clone()
+        });
+        t2.row(&[
+            format!("{tol:.0e}"),
+            format!("{:.2}", 100.0 * r.test_accs.last().unwrap()),
+            format!(
+                "{:.3}",
+                r.epoch_times.iter().sum::<f64>()
+                    / r.epoch_times.len() as f64
+            ),
+        ]);
+    }
+    t2.print();
+
+    let speedup = (opt.epoch_times.iter().sum::<f64>())
+        / (alt.epoch_times.iter().sum::<f64>()).max(1e-9);
+    println!("\nalt-diff epoch speedup over optnet: {speedup:.2}x");
+    println!(
+        "accuracy parity: optnet {:.1}% vs alt-diff {:.1}%",
+        100.0 * opt.test_accs.last().unwrap(),
+        100.0 * alt.test_accs.last().unwrap()
+    );
+}

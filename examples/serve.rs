@@ -1,0 +1,105 @@
+//! Serve batched optimization-layer differentiation requests through the
+//! L3 coordinator, exercising the full stack: router → truncation table →
+//! dynamic batcher → PJRT-compiled AOT artifacts (Pallas kernels inside),
+//! with the native engine as fallback. Reports latency & throughput.
+//!
+//! Run: cargo run --release --example serve [--requests 200] [--workers 2]
+//!      (needs `make artifacts` for the compiled path; otherwise serves
+//!       natively and says so)
+
+use altdiff::coordinator::{Config, Coordinator, Reply};
+use altdiff::prob::dense_qp;
+use altdiff::util::{Args, Pcg64};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::parse();
+    let nreq = args.get_usize("requests", 200);
+    let workers = args.get_usize("workers", 2);
+
+    let artifacts = {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.tsv").exists().then_some(dir)
+    };
+    println!(
+        "backend: {}",
+        if artifacts.is_some() {
+            "pjrt (compiled artifacts) + native fallback"
+        } else {
+            "native only (run `make artifacts` for the compiled path)"
+        }
+    );
+
+    // register two layer sizes from the compiled family
+    let qp16 = dense_qp(16, 8, 4, 1);
+    let qp64 = dense_qp(64, 32, 12, 2);
+    let mut coord = Coordinator::builder(Config {
+        workers,
+        max_batch: 8,
+        batch_deadline: Duration::from_millis(2),
+        artifacts,
+        ..Default::default()
+    })
+    .register("qp16", qp16.clone(), 1.0)
+    .unwrap()
+    .register("qp64", qp64.clone(), 1.0)
+    .unwrap()
+    .start();
+
+    // wait for workers to finish compiling their artifact sets so the
+    // measurement below is steady-state serving, not XLA compile time
+    let ready = coord.wait_ready(Duration::from_secs(120));
+    println!("workers ready: {ready}");
+
+    // synthetic request trace: mixed layers, mixed tolerances
+    let mut rng = Pcg64::new(0);
+    let tols = [1e-1, 1e-2, 1e-3];
+    let t0 = Instant::now();
+    for i in 0..nreq {
+        let tol = tols[rng.below(3)];
+        if i % 3 == 0 {
+            let s = 1.0 + 0.1 * rng.normal();
+            coord.submit(
+                "qp64",
+                qp64.q.iter().map(|&v| v * s).collect(),
+                qp64.b.clone(),
+                qp64.h.clone(),
+                tol,
+            );
+        } else {
+            let s = 1.0 + 0.1 * rng.normal();
+            coord.submit(
+                "qp16",
+                qp16.q.iter().map(|&v| v * s).collect(),
+                qp16.b.clone(),
+                qp16.h.clone(),
+                tol,
+            );
+        }
+    }
+    let mut ok = 0;
+    let mut pjrt = 0;
+    let mut max_lat = 0.0f64;
+    for _ in 0..nreq {
+        match coord.recv_timeout(Duration::from_secs(60)) {
+            Some(Reply::Ok(r)) => {
+                ok += 1;
+                if r.backend == "pjrt" {
+                    pjrt += 1;
+                }
+                max_lat = max_lat.max(r.latency);
+            }
+            Some(Reply::Err(f)) => {
+                eprintln!("request {} failed: {}", f.id, f.error)
+            }
+            None => break,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\nserved {ok}/{nreq} requests in {wall:.3}s");
+    println!("throughput: {:.0} req/s", ok as f64 / wall);
+    println!("compiled-path share: {:.0}%", 100.0 * pjrt as f64 / ok.max(1) as f64);
+    println!("max latency: {:.1}ms", max_lat * 1e3);
+    println!("metrics: {}", coord.metrics.summary());
+}

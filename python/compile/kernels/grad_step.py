@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: fused backward (alternating differentiation) update.
+
+Implements eq. (7a)-(7d) specialized to QP layers and theta = b. Unlike the
+forward step (matrix-*vector*), the backward propagates whole Jacobian
+*matrices* — (n,p), (m,p), (p,p) — so every product is a true MXU matmul.
+This is where Alt-Diff's O(k n^2) backward lives: the only n×n operand is
+the cached H^-1 from the forward pass (paper Appendix B.1 "Inheritance of
+the Hessian matrix"); nothing (n+n_c)-dimensional is ever factorized.
+
+The sgn(s+) gating of (7b) is a VPU row-mask fused onto the matmul output:
+a row of Js is zeroed exactly when the corresponding slack coordinate is
+clamped at the boundary — the differentiable relaxation of complementary
+slackness that Appendix C uses to recover the KKT gradient in the limit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _grad_kernel(hinv_ref, a_ref, g_ref, s1_ref,
+                 jx_ref, js_ref, jl_ref, jn_ref,
+                 jx_out, js_out, jl_out, jn_out, *, rho: float):
+    a = a_ref[...]        # (p, n)
+    g = g_ref[...]        # (m, n)
+    s1 = s1_ref[...]      # (m, 1) — updated slack, gates (7b)
+    jx = jx_ref[...]      # (n, p)
+    js = js_ref[...]      # (m, p)
+    jl = jl_ref[...]      # (p, p)
+    jn = jn_ref[...]      # (m, p)
+
+    p = jl.shape[0]
+    eye = jnp.eye(p, dtype=jx.dtype)
+
+    # (7a): Jx+ = -H^-1 ( A^T Jl + G^T Jn - rho A^T + rho G^T Js )
+    lxb = a.T @ jl + g.T @ jn - rho * a.T + rho * (g.T @ js)
+    jx1 = -(hinv_ref[...] @ lxb)
+    # (7b): row-masked slack Jacobian (dh/db = 0).
+    gjx = g @ jx1
+    mask = (s1 > 0.0).astype(jx.dtype)          # (m, 1) broadcasts over p
+    js1 = mask * (-(1.0 / rho)) * (jn + rho * gjx)
+    # (7c)/(7d): dual Jacobian ascent.
+    jl1 = jl + rho * (a @ jx1 - eye)
+    jn1 = jn + rho * (gjx + js1)
+
+    jx_out[...] = jx1
+    js_out[...] = js1
+    jl_out[...] = jl1
+    jn_out[...] = jn1
+
+
+def grad_step(hinv, a, g, s1, jx, js, jl, jn, *, rho: float,
+              interpret: bool = True):
+    """One fused backward update (7a)-(7d) w.r.t. b as a Pallas call.
+
+    `s1` is the slack produced by the *same* iteration's forward step.
+    Returns (Jx+, Js+, Jl+, Jn+).
+    """
+    n, p = jx.shape
+    m = js.shape[0]
+    dt = jx.dtype
+    out_shape = (
+        jax.ShapeDtypeStruct((n, p), dt),
+        jax.ShapeDtypeStruct((m, p), dt),
+        jax.ShapeDtypeStruct((p, p), dt),
+        jax.ShapeDtypeStruct((m, p), dt),
+    )
+    return pl.pallas_call(
+        functools.partial(_grad_kernel, rho=rho),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(hinv, a, g, s1.reshape(-1, 1), jx, js, jl, jn)

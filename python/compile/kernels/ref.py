@@ -1,0 +1,95 @@
+"""Pure-jnp oracle for the Alt-Diff ADMM + alternating-differentiation steps.
+
+This file is the CORRECTNESS CONTRACT for the Pallas kernels: every kernel
+in this package must match the corresponding function here bit-for-bit in
+f32 (up to accumulation-order noise) under pytest/hypothesis sweeps.
+
+Math (paper eqs. (5) and (7), QP specialization, theta = b):
+
+  QP layer:   min_x 0.5 x^T P x + q^T x   s.t.  A x = b,  G x <= h
+  Augmented Lagrangian Hessian  H = P + rho A^T A + rho G^T G  (constant).
+
+  Forward (5a-5d), with slack s >= 0 and duals lam (eq), nu (ineq):
+      x+   = Hinv @ (-q - A^T lam - G^T nu + rho A^T b + rho G^T (h - s))
+      s+   = relu(-nu/rho - (G x+ - h))
+      lam+ = lam + rho (A x+ - b)
+      nu+  = nu  + rho (G x+ + s+ - h)
+
+  Backward (7a-7d), Jacobians w.r.t. b:  Jx (n,p), Js (m,p), Jl (p,p),
+  Jn (m,p); I_p the p-identity:
+      Jx+ = -Hinv @ (A^T Jl + G^T Jn - rho A^T + rho G^T Js)
+      Js+ = sgn(s+) * (-(1/rho)) * (Jn + rho G Jx+)        [dh/db = 0]
+      Jl+ = Jl + rho (A Jx+ - I_p)
+      Jn+ = Jn + rho (G Jx+ + Js+)
+
+At the ADMM fixed point Jx converges to dx*/db (paper Thm 4.2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def admm_step_ref(hinv, a, g, q, b, h, x, s, lam, nu, rho):
+    """One forward ADMM update (5a)-(5d). Shapes: hinv (n,n), a (p,n),
+    g (m,n), q/x (n,), b/lam (p,), h/s/nu (m,). Returns (x+, s+, lam+, nu+).
+    """
+    rhs = -q - a.T @ lam - g.T @ nu + rho * (a.T @ b) + rho * (g.T @ (h - s))
+    x1 = hinv @ rhs
+    s1 = jnp.maximum(-nu / rho - (g @ x1 - h), 0.0)
+    lam1 = lam + rho * (a @ x1 - b)
+    nu1 = nu + rho * (g @ x1 + s1 - h)
+    return x1, s1, lam1, nu1
+
+
+def grad_step_ref(hinv, a, g, s1, jx, js, jl, jn, rho):
+    """One backward (alternating differentiation) update (7a)-(7d) w.r.t. b.
+
+    `s1` is the *already updated* slack s_{k+1} (its sign pattern gates Js).
+    Jacobian shapes: jx (n,p), js (m,p), jl (p,p), jn (m,p).
+    """
+    p = jl.shape[0]
+    eye = jnp.eye(p, dtype=jx.dtype)
+    jx1 = -(hinv @ (a.T @ jl + g.T @ jn - rho * a.T + rho * (g.T @ js)))
+    mask = (s1 > 0.0).astype(jx.dtype)[:, None]
+    js1 = mask * (-(1.0 / rho)) * (jn + rho * (g @ jx1))
+    jl1 = jl + rho * (a @ jx1 - eye)
+    jn1 = jn + rho * (g @ jx1 + js1)
+    return jx1, js1, jl1, jn1
+
+
+def fused_step_ref(hinv, a, g, q, b, h, state, rho):
+    """Forward + backward fused (what the compiled scan body computes).
+
+    state = (x, s, lam, nu, jx, js, jl, jn); returns the updated tuple.
+    """
+    x, s, lam, nu, jx, js, jl, jn = state
+    x1, s1, lam1, nu1 = admm_step_ref(hinv, a, g, q, b, h, x, s, lam, nu, rho)
+    jx1, js1, jl1, jn1 = grad_step_ref(hinv, a, g, s1, jx, js, jl, jn, rho)
+    return (x1, s1, lam1, nu1, jx1, js1, jl1, jn1)
+
+
+def init_state_ref(n, m, p, dtype=jnp.float32):
+    """Zero-initialized ADMM + Jacobian state (paper initializes duals/slack
+    at zero; Jacobians start at zero as well)."""
+    return (
+        jnp.zeros((n,), dtype),
+        jnp.zeros((m,), dtype),
+        jnp.zeros((p,), dtype),
+        jnp.zeros((m,), dtype),
+        jnp.zeros((n, p), dtype),
+        jnp.zeros((m, p), dtype),
+        jnp.zeros((p, p), dtype),
+        jnp.zeros((m, p), dtype),
+    )
+
+
+def alt_diff_ref(hinv, a, g, q, b, h, rho, iters):
+    """Run `iters` fused steps from the zero state; returns final state."""
+    n = q.shape[0]
+    m = h.shape[0]
+    p = b.shape[0]
+    state = init_state_ref(n, m, p, dtype=q.dtype)
+    for _ in range(iters):
+        state = fused_step_ref(hinv, a, g, q, b, h, state, rho)
+    return state

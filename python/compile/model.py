@@ -1,0 +1,134 @@
+"""L2: the Alt-Diff QP optimization layer as a JAX compute graph.
+
+`alt_diff_qp` is the function that gets AOT-lowered into the serving
+artifacts: a fixed-trip-count `lax.scan` whose body is the pair of L1
+Pallas kernels (fused forward ADMM step + fused Jacobian step). Fixed k is
+deliberate — truncation (paper §4.3) is a *routing* decision made by the
+rust coordinator, which picks the artifact variant whose k matches the
+requested tolerance via the calibrated truncation table.
+
+Also provides `kkt_solve_and_grad`, the pure-jnp differentiate-the-KKT
+reference (OptNet/CvxpyLayer semantics) used ONLY in tests — it calls
+jnp.linalg.solve, which lowers to LAPACK custom calls the rust PJRT CPU
+client cannot execute, so it must never be exported.
+
+IMPORTANT for lowering: nothing here may emit custom calls. The scan body
+is matmuls / elementwise only; H^-1 is an *input* (computed by the rust
+linalg substrate at variant-registration time).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.admm_step import admm_step
+from compile.kernels.grad_step import grad_step
+from compile.kernels import ref
+
+
+def alt_diff_qp(hinv, a, g, q, b, h, *, rho: float, iters: int,
+                interpret: bool = True, use_pallas: bool = True):
+    """Solve + differentiate one QP layer instance.
+
+    Args:
+      hinv: (n,n) inverse of H = P + rho AᵀA + rho GᵀG (registration-time).
+      a: (p,n) equality matrix; g: (m,n) inequality matrix.
+      q, b, h: per-request parameters (theta).
+      rho: ADMM penalty (baked per artifact variant).
+      iters: fixed trip count k (baked per artifact variant).
+      use_pallas: scan body through the L1 kernels (True) or the jnp
+        oracle (False — used by tests to isolate kernel bugs).
+
+    Returns (x, jx, prim_res, dual_res):
+      x: (n,) primal solution estimate x_k.
+      jx: (n,p) Jacobian dx_k/db.
+      prim_res: scalar ||Ax-b|| + ||Gx+s-h|| (feasibility monitor).
+      dual_res: scalar rho*||x_k - x_{k-1}|| (convergence monitor; the
+        coordinator uses it to validate its truncation table online).
+    """
+    n = q.shape[0]
+    m = h.shape[0]
+    p = b.shape[0]
+    dt = q.dtype
+    state0 = ref.init_state_ref(n, m, p, dtype=dt)
+
+    def body(state, _):
+        x, s, lam, nu, jx, js, jl, jn = state
+        if use_pallas:
+            x1, s1, lam1, nu1 = admm_step(
+                hinv, a, g, q, b, h, x, s, lam, nu, rho=rho,
+                interpret=interpret)
+            jx1, js1, jl1, jn1 = grad_step(
+                hinv, a, g, s1, jx, js, jl, jn, rho=rho, interpret=interpret)
+        else:
+            x1, s1, lam1, nu1, jx1, js1, jl1, jn1 = ref.fused_step_ref(
+                hinv, a, g, q, b, h, state, rho)
+        step = jnp.linalg.norm(x1 - x)  # reduces to sqrt(sum sq): native HLO
+        return (x1, s1, lam1, nu1, jx1, js1, jl1, jn1), step
+
+    state, steps = jax.lax.scan(body, state0, None, length=iters)
+    x, s, lam, nu, jx, _, _, _ = state
+    prim = jnp.linalg.norm(a @ x - b) + jnp.linalg.norm(g @ x + s - h)
+    dual = rho * steps[-1]
+    return x, jx, prim, dual
+
+
+def alt_diff_qp_batched(hinv, a, g, qb, bb, hb, *, rho: float, iters: int,
+                        interpret: bool = True, use_pallas: bool = True):
+    """vmap over the request batch (qb (B,n), bb (B,p), hb (B,m)).
+
+    The structure operands (hinv, a, g) are shared across the batch —
+    exactly the serving model: one registered variant, B requests.
+    """
+    fn = functools.partial(alt_diff_qp, rho=rho, iters=iters,
+                           interpret=interpret, use_pallas=use_pallas)
+    return jax.vmap(fn, in_axes=(None, None, None, 0, 0, 0))(
+        hinv, a, g, qb, bb, hb)
+
+
+# --------------------------------------------------------------------------
+# Test-only references (never exported to artifacts).
+# --------------------------------------------------------------------------
+
+def qp_solve_kkt(p_mat, q, a, b, g, h, *, iters: int = 2000,
+                 rho: float = 1.0):
+    """High-accuracy QP solve by running the jnp oracle ADMM to near-fixed
+    point. Test-only helper (slow, python loop)."""
+    hmat = p_mat + rho * (a.T @ a) + rho * (g.T @ g)
+    hinv = jnp.linalg.inv(hmat)
+    st = ref.alt_diff_ref(hinv, a, g, q, b, h, rho, iters)
+    return st[0], st[2], st[3]  # x, lam, nu
+
+
+def kkt_grad_b(p_mat, q, a, b, g, h, x, lam, nu):
+    """dx*/db by implicit differentiation of the KKT system (eq. 25),
+    the OptNet/CvxpyLayer reference semantics. Test-only (LAPACK solve).
+
+    KKT residual F(z, b) = 0 with z = (x, lam, nu):
+        Px + q + A^T lam + G^T nu      = 0
+        Ax - b                         = 0
+        diag(nu) (Gx - h)              = 0
+    dz/db = -J_z^{-1} J_b ; J_b rows: (0, -I, 0).
+    """
+    n = x.shape[0]
+    p = b.shape[0]
+    m = h.shape[0]
+    dt = x.dtype
+    top = jnp.concatenate([p_mat, a.T, g.T], axis=1)
+    mid = jnp.concatenate(
+        [a, jnp.zeros((p, p), dt), jnp.zeros((p, m), dt)], axis=1)
+    bot = jnp.concatenate(
+        [nu[:, None] * g, jnp.zeros((m, p), dt),
+         jnp.diag(g @ x - h)], axis=1)
+    jz = jnp.concatenate([top, mid, bot], axis=0)
+    jb = jnp.concatenate(
+        [jnp.zeros((n, p), dt), -jnp.eye(p, dtype=dt),
+         jnp.zeros((m, p), dt)], axis=0)
+    # Regularize: strict complementarity can make Jz singular at active-set
+    # boundaries; tiny Tikhonov matches what diffcp/qpth do in practice.
+    jz = jz + 1e-9 * jnp.eye(n + p + m, dtype=dt)
+    dz = -jnp.linalg.solve(jz, jb)
+    return dz[:n, :]

@@ -1,0 +1,150 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal of the compile path. hypothesis sweeps
+shapes and seeds; every kernel output must match the oracle to f32
+accumulation noise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.admm_step import admm_step, matvec_tiled, vmem_report
+from compile.kernels.grad_step import grad_step
+from tests.util import random_qp, hinv_of
+
+RHO = 1.0
+TOL = dict(rtol=2e-4, atol=2e-5)
+
+dims = st.tuples(
+    st.integers(min_value=2, max_value=24),   # n
+    st.integers(min_value=1, max_value=16),   # m
+    st.integers(min_value=1, max_value=8),    # p
+)
+
+
+def _mid_state(n, m, p, seed):
+    """A plausible mid-iteration state (nonzero duals, mixed-sign slack)."""
+    rng = np.random.default_rng(seed + 1000)
+    f = lambda *s: jnp.asarray(rng.standard_normal(s).astype(np.float32))
+    return f(n), jnp.abs(f(m)), f(p), f(m)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dims=dims, seed=st.integers(min_value=0, max_value=2**16))
+def test_admm_step_matches_ref(dims, seed):
+    n, m, p = dims
+    p_mat, q, a, b, g, h = random_qp(n, m, p, seed)
+    hinv = hinv_of(p_mat, a, g, RHO)
+    x, s, lam, nu = _mid_state(n, m, p, seed)
+    got = admm_step(hinv, a, g, q, b, h, x, s, lam, nu, rho=RHO)
+    want = ref.admm_step_ref(hinv, a, g, q, b, h, x, s, lam, nu, RHO)
+    for gv, wv in zip(got, want):
+        np.testing.assert_allclose(np.asarray(gv), np.asarray(wv), **TOL)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dims=dims, seed=st.integers(min_value=0, max_value=2**16))
+def test_grad_step_matches_ref(dims, seed):
+    n, m, p = dims
+    p_mat, q, a, b, g, h = random_qp(n, m, p, seed)
+    hinv = hinv_of(p_mat, a, g, RHO)
+    rng = np.random.default_rng(seed + 7)
+    f = lambda *s: jnp.asarray(rng.standard_normal(s).astype(np.float32))
+    s1 = f(m)  # mixed signs: exercises both branches of the sgn gate
+    jx, js, jl, jn = f(n, p), f(m, p), f(p, p), f(m, p)
+    got = grad_step(hinv, a, g, s1, jx, js, jl, jn, rho=RHO)
+    want = ref.grad_step_ref(hinv, a, g, s1, jx, js, jl, jn, RHO)
+    for gv, wv in zip(got, want):
+        np.testing.assert_allclose(np.asarray(gv), np.asarray(wv), **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nblocks=st.integers(min_value=1, max_value=4),
+    tile=st.sampled_from([4, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_matvec_tiled_matches_dense(nblocks, tile, seed):
+    n = nblocks * tile
+    rng = np.random.default_rng(seed)
+    mat = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    vec = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got = matvec_tiled(mat, vec, tile=tile)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(mat @ vec),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_grad_step_sgn_gate_zeroes_clamped_rows():
+    """Rows of Js where the slack is clamped (s<=0) must be exactly zero."""
+    n, m, p = 6, 5, 3
+    p_mat, q, a, b, g, h = random_qp(n, m, p, 3)
+    hinv = hinv_of(p_mat, a, g, RHO)
+    s1 = jnp.asarray([0.5, 0.0, -0.2, 1.0, 0.0], jnp.float32)
+    z = lambda *sh: jnp.ones(sh, jnp.float32)
+    _, js1, _, _ = grad_step(hinv, a, g, s1, z(n, p), z(m, p), z(p, p),
+                             z(m, p), rho=RHO)
+    js1 = np.asarray(js1)
+    assert np.all(js1[1] == 0) and np.all(js1[2] == 0) and np.all(js1[4] == 0)
+    assert np.any(js1[0] != 0)
+
+
+def test_admm_step_slack_nonnegative():
+    """Invariant: the slack projection output is always >= 0."""
+    for seed in range(5):
+        n, m, p = 8, 6, 3
+        p_mat, q, a, b, g, h = random_qp(n, m, p, seed)
+        hinv = hinv_of(p_mat, a, g, RHO)
+        x, s, lam, nu = _mid_state(n, m, p, seed)
+        _, s1, _, _ = admm_step(hinv, a, g, q, b, h, x, s, lam, nu, rho=RHO)
+        assert float(jnp.min(s1)) >= 0.0
+
+
+def test_admm_fixed_point_is_qp_solution():
+    """Iterating the kernel converges to a KKT point of the QP."""
+    n, m, p = 10, 6, 3
+    p_mat, q, a, b, g, h = random_qp(n, m, p, 11)
+    hinv = hinv_of(p_mat, a, g, RHO)
+    x = jnp.zeros(n)
+    s = jnp.zeros(m)
+    lam = jnp.zeros(p)
+    nu = jnp.zeros(m)
+    for _ in range(600):
+        x, s, lam, nu = admm_step(hinv, a, g, q, b, h, x, s, lam, nu,
+                                  rho=RHO)
+    # stationarity + primal feasibility + dual feasibility
+    grad = p_mat @ x + q + a.T @ lam + g.T @ nu
+    assert float(jnp.linalg.norm(grad)) < 1e-3
+    assert float(jnp.linalg.norm(a @ x - b)) < 1e-3
+    assert float(jnp.max(g @ x - h)) < 1e-3
+    assert float(jnp.min(nu)) > -1e-4
+
+
+def test_vmem_report_fields():
+    r = vmem_report(64, 32, 12, 40)
+    assert r["fits_one_vmem_16mb"]
+    assert r["mxu_macs_total"] == r["mxu_macs_per_iter"] * 40
+    assert r["resident_bytes"] == (64 + 32 + 12 + 32) * 4
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_kernels_dtype_sweep(dtype):
+    """Kernels are dtype-polymorphic (f64 only under x64 double mode the
+    interpreter still runs; result dtype must follow inputs)."""
+    n, m, p = 6, 4, 2
+    p_mat, q, a, b, g, h = random_qp(n, m, p, 5)
+    cast = lambda v: v.astype(dtype)
+    hinv = hinv_of(cast(p_mat), cast(a), cast(g), RHO)
+    x, s, lam, nu = (jnp.zeros(n, dtype), jnp.zeros(m, dtype),
+                     jnp.zeros(p, dtype), jnp.zeros(m, dtype))
+    x1, s1, _, _ = admm_step(hinv, cast(a), cast(g), cast(q), cast(b),
+                             cast(h), x, s, lam, nu, rho=RHO)
+    # under default x64-disabled jax, f64 inputs degrade to f32 — accept
+    # either, but forward numerics must stay finite and slack nonneg.
+    assert bool(jnp.all(jnp.isfinite(x1)))
+    assert float(jnp.min(s1)) >= 0.0

@@ -1,0 +1,125 @@
+"""L2 correctness: the scanned Alt-Diff graph vs oracle and vs KKT gradient.
+
+Validates the two theorems the artifacts rely on:
+  Thm 4.2 — the Alt-Diff Jacobian converges to the implicit-KKT Jacobian;
+  Thm 4.3 — truncation error in the Jacobian is O(||x_k - x*||).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (alt_diff_qp, alt_diff_qp_batched, kkt_grad_b,
+                           qp_solve_kkt)
+from compile.kernels import ref
+from tests.util import random_qp, hinv_of
+
+RHO = 1.0
+
+
+def _cosine(a, b):
+    a = np.asarray(a).ravel()
+    b = np.asarray(b).ravel()
+    return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-30))
+
+
+@pytest.mark.parametrize("dims", [(8, 4, 2), (12, 8, 4), (20, 10, 5)])
+def test_scan_matches_oracle(dims):
+    n, m, p = dims
+    p_mat, q, a, b, g, h = random_qp(n, m, p, seed=n)
+    hinv = hinv_of(p_mat, a, g, RHO)
+    x, jx, prim, dual = alt_diff_qp(hinv, a, g, q, b, h, rho=RHO, iters=30)
+    st = ref.alt_diff_ref(hinv, a, g, q, b, h, RHO, 30)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(st[0]),
+                               rtol=5e-4, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(jx), np.asarray(st[4]),
+                               rtol=5e-4, atol=5e-5)
+    assert float(prim) >= 0 and float(dual) >= 0
+
+
+def test_pallas_and_jnp_paths_agree():
+    n, m, p = 10, 6, 3
+    p_mat, q, a, b, g, h = random_qp(n, m, p, 2)
+    hinv = hinv_of(p_mat, a, g, RHO)
+    xk, jxk, _, _ = alt_diff_qp(hinv, a, g, q, b, h, rho=RHO, iters=25,
+                                use_pallas=True)
+    xj, jxj, _, _ = alt_diff_qp(hinv, a, g, q, b, h, rho=RHO, iters=25,
+                                use_pallas=False)
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xj),
+                               rtol=5e-4, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(jxk), np.asarray(jxj),
+                               rtol=5e-4, atol=5e-5)
+
+
+def test_jacobian_converges_to_kkt_gradient():
+    """Thm 4.2: lim_k dx_k/db = dx*/db (implicit KKT differentiation)."""
+    n, m, p = 10, 6, 3
+    p_mat, q, a, b, g, h = random_qp(n, m, p, 4)
+    hinv = hinv_of(p_mat, a, g, RHO)
+    _, jx, _, _ = alt_diff_qp(hinv, a, g, q, b, h, rho=RHO, iters=400,
+                              use_pallas=False)
+    x, lam, nu = qp_solve_kkt(p_mat, q, a, b, g, h, iters=3000, rho=RHO)
+    jkkt = kkt_grad_b(p_mat, q, a, b, g, h, x, lam, nu)
+    assert _cosine(jx, jkkt) > 0.999
+
+
+def test_jacobian_matches_finite_difference():
+    """End-to-end check independent of the KKT machinery: perturb b."""
+    n, m, p = 9, 5, 3
+    p_mat, q, a, b, g, h = random_qp(n, m, p, 9)
+    hinv = hinv_of(p_mat, a, g, RHO)
+    iters = 400
+    _, jx, _, _ = alt_diff_qp(hinv, a, g, q, b, h, rho=RHO, iters=iters,
+                              use_pallas=False)
+    eps = 1e-3
+    fd = np.zeros((n, p), np.float32)
+    for j in range(p):
+        bp = b.at[j].add(eps)
+        bm = b.at[j].add(-eps)
+        xp, _, _, _ = alt_diff_qp(hinv, a, g, q, bp, h, rho=RHO,
+                                  iters=iters, use_pallas=False)
+        xm, _, _, _ = alt_diff_qp(hinv, a, g, q, bm, h, rho=RHO,
+                                  iters=iters, use_pallas=False)
+        fd[:, j] = (np.asarray(xp) - np.asarray(xm)) / (2 * eps)
+    assert _cosine(jx, fd) > 0.995
+
+
+def test_truncation_error_scales_with_x_error():
+    """Thm 4.3 qualitatively: Jacobian error shrinks with iterate error."""
+    n, m, p = 10, 6, 3
+    p_mat, q, a, b, g, h = random_qp(n, m, p, 6)
+    hinv = hinv_of(p_mat, a, g, RHO)
+    xs, jxs = [], []
+    for k in (10, 40, 160, 640):
+        x, jx, _, _ = alt_diff_qp(hinv, a, g, q, b, h, rho=RHO, iters=k,
+                                  use_pallas=False)
+        xs.append(np.asarray(x))
+        jxs.append(np.asarray(jx))
+    xerr = [np.linalg.norm(x - xs[-1]) for x in xs[:-1]]
+    jerr = [np.linalg.norm(j - jxs[-1]) for j in jxs[:-1]]
+    assert jerr[0] > jerr[1] > jerr[2]           # monotone improvement
+    # same order: ratio bounded (C1 of Thm 4.3), not exploding
+    ratios = [je / (xe + 1e-12) for je, xe in zip(jerr, xerr)]
+    assert max(ratios) < 100 * (min(ratios) + 1e-12)
+
+
+def test_batched_matches_loop():
+    n, m, p, bsz = 8, 4, 2, 3
+    p_mat, q, a, b, g, h = random_qp(n, m, p, 8)
+    hinv = hinv_of(p_mat, a, g, RHO)
+    rng = np.random.default_rng(0)
+    qb = jnp.asarray(rng.standard_normal((bsz, n)).astype(np.float32))
+    bb = jnp.stack([b, b * 1.1, b * 0.9])
+    hb = jnp.stack([h, h + 0.1, h + 0.2])
+    xb, jxb, primb, dualb = alt_diff_qp_batched(
+        hinv, a, g, qb, bb, hb, rho=RHO, iters=20, use_pallas=False)
+    assert xb.shape == (bsz, n) and jxb.shape == (bsz, n, p)
+    for i in range(bsz):
+        xi, jxi, _, _ = alt_diff_qp(hinv, a, g, qb[i], bb[i], hb[i],
+                                    rho=RHO, iters=20, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(xb[i]), np.asarray(xi),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(jxb[i]), np.asarray(jxi),
+                                   rtol=1e-5, atol=1e-6)

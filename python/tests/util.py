@@ -1,0 +1,32 @@
+"""Shared problem generators for the python test-suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def random_qp(n: int, m: int, p: int, seed: int = 0, dtype=np.float32):
+    """A well-conditioned, strictly feasible random QP.
+
+    P = 0.1 I + M Mᵀ / n  (SPD); x0 random; b = A x0 (equalities active at
+    x0); h = G x0 + |u| + 0.1 (inequalities strictly slack at x0, so the
+    problem is strictly feasible and the active set at the optimum is
+    data-dependent rather than degenerate).
+    """
+    rng = np.random.default_rng(seed)
+    mmat = rng.standard_normal((n, n)).astype(dtype)
+    p_mat = (0.1 * np.eye(n, dtype=dtype) + mmat @ mmat.T / n).astype(dtype)
+    q = rng.standard_normal(n).astype(dtype)
+    a = rng.standard_normal((p, n)).astype(dtype) / np.sqrt(n)
+    g = rng.standard_normal((m, n)).astype(dtype) / np.sqrt(n)
+    x0 = rng.standard_normal(n).astype(dtype)
+    b = (a @ x0).astype(dtype)
+    h = (g @ x0 + np.abs(rng.standard_normal(m)) + 0.1).astype(dtype)
+    return (jnp.asarray(p_mat), jnp.asarray(q), jnp.asarray(a),
+            jnp.asarray(b), jnp.asarray(g), jnp.asarray(h))
+
+
+def hinv_of(p_mat, a, g, rho: float):
+    h = p_mat + rho * (a.T @ a) + rho * (g.T @ g)
+    return jnp.linalg.inv(h)

@@ -1,0 +1,104 @@
+//! Table 4 reproduction: constrained Sparsemax layers (sparse QPs).
+//!
+//! Paper sizes n = 5000…20000 with A = 1ᵀ, G = [−I; I]; we run n up to
+//! 4000 (÷5). Alt-Diff uses the Sherman–Morrison closed form of paper
+//! Table 3 — H = (2+2ρ)I + ρ11ᵀ — so its per-iteration cost is O(n);
+//! OptNet pays dense (n+2n+1)³; the unrolling baseline shows the §2
+//! memory/projection costs.
+
+use altdiff::altdiff::{Options, Param, SparseAltDiff};
+use altdiff::baselines::{self, unrolled};
+use altdiff::linalg::cosine;
+use altdiff::prob::sparsemax_qp;
+use altdiff::util::{Args, Table};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse();
+    let sizes: Vec<usize> = if args.has("quick") {
+        vec![100, 400]
+    } else {
+        vec![200, 500, 1000, 2000, 4000]
+    };
+    let tol = args.get_f64("tol", 1e-3);
+    // dense baselines become cubic in 3n+1; cap them
+    let optnet_cap = args.get_usize("optnet-cap", 200);
+
+    let mut t = Table::new(
+        &format!("Table 4 — constrained sparsemax layers (tol={tol:.0e})"),
+        &[
+            "n", "m(=2n)", "optnet(s)", "unrolled(s)", "unroll-mem",
+            "altdiff(s)", "SM-path", "iters", "cos-dist",
+        ],
+    );
+
+    for &n in &sizes {
+        let sq = sparsemax_qp(n, 3);
+
+        // --- Alt-Diff (Sherman–Morrison sparse path)
+        let t0 = Instant::now();
+        let solver = SparseAltDiff::new(sq.clone(), 1.0).unwrap();
+        let sol = solver.solve(&Options {
+            tol,
+            jacobian: Some(Param::B),
+            ..Default::default()
+        });
+        let t_alt = t0.elapsed().as_secs_f64();
+
+        // --- OptNet (dense KKT at 3n+1) — capped
+        let (t_opt, cos) = if n <= optnet_cap {
+            let qp = sq.to_dense();
+            let t0 = Instant::now();
+            let (_, jk, _) =
+                baselines::optnet_layer(&qp, Param::B, tol * 1e-3)
+                    .unwrap();
+            let dt = t0.elapsed().as_secs_f64();
+            let c =
+                cosine(&sol.jacobian.as_ref().unwrap().data, &jk.data);
+            (dt, c)
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+
+        // --- Unrolled PGD (simplex projection; dx/dy Jacobian) — capped
+        // at moderate n (it builds an n×n Jacobian by n reverse sweeps).
+        let (t_unr, mem) = if n <= 1000 {
+            let y: Vec<f64> = sq.q.iter().map(|&v| -v / 2.0).collect();
+            let t0 = Instant::now();
+            let r = unrolled::unrolled_sparsemax(&y, 0.25, 500, tol);
+            (t0.elapsed().as_secs_f64(), r.peak_stored_floats)
+        } else {
+            (f64::NAN, 0)
+        };
+
+        let fmt = |v: f64| {
+            if v.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{v:.3}")
+            }
+        };
+        t.row(&[
+            n.to_string(),
+            (2 * n).to_string(),
+            fmt(t_opt),
+            fmt(t_unr),
+            if mem > 0 { format!("{mem}") } else { "-".into() },
+            format!("{t_alt:.4}"),
+            format!("{}", solver.uses_sherman_morrison()),
+            sol.iters.to_string(),
+            if cos.is_nan() {
+                "-".into()
+            } else {
+                format!("{cos:.4}")
+            },
+        ]);
+    }
+    t.print();
+    let csv = t.write_csv("table4_sparsemax").unwrap();
+    println!("\ncsv: {csv}");
+    println!(
+        "paper claims: optnet blows up on sparse problems; alt-diff scales \
+         ~linearly via the Table-3 closed form; cosine ≈ 0.998"
+    );
+}

@@ -1,0 +1,537 @@
+//! General-objective Alt-Diff (paper §4.2 "general cases", Table 5):
+//! the x-update (5a) has no closed form, so each ADMM iteration runs an
+//! inner (damped) Newton solve; the *final inner Hessian* is inherited by
+//! the backward step (7a) — Appendix B.1's argument in the general case.
+//!
+//! Fast path: when ∇²f is diagonal and the constraints have the
+//! softmax/sparsemax structure (one dense equality row, box inequalities)
+//! the Newton system H = diag + ρ11ᵀ is solved by Sherman–Morrison in
+//! O(n) (paper Table 3's closed form for the constrained Softmax layer).
+
+use super::{Options, Param, Solution, TraceEntry};
+use crate::error::Result;
+use crate::linalg::{dot, norm2, Chol, Mat};
+use crate::prob::{Objective, SparseQp};
+use crate::sparse::Csr;
+
+/// A registered general-objective layer with polyhedral constraints.
+pub struct NewtonAltDiff<O: Objective> {
+    pub obj: O,
+    pub a: Csr,
+    pub b: Vec<f64>,
+    pub g: Csr,
+    pub h: Vec<f64>,
+    pub rho: f64,
+    /// max inner Newton iterations per ADMM step
+    pub newton_max: usize,
+    /// inner gradient tolerance
+    pub newton_tol: f64,
+    sm_structured: bool,
+}
+
+impl<O: Objective> NewtonAltDiff<O> {
+    pub fn new(
+        obj: O,
+        a: Csr,
+        b: Vec<f64>,
+        g: Csr,
+        h: Vec<f64>,
+        rho: f64,
+    ) -> Result<Self> {
+        let n = a.cols;
+        let box_like = g.rows > 0
+            && (0..g.rows).all(|i| {
+                let lo = g.indptr[i];
+                let hi = g.indptr[i + 1];
+                hi - lo == 1 && g.values[lo].abs() == 1.0
+            });
+        let sm_structured = box_like && a.rows == 1 && a.nnz() == n;
+        Ok(NewtonAltDiff {
+            obj,
+            a,
+            b,
+            g,
+            h,
+            rho,
+            newton_max: 50,
+            newton_tol: 1e-10,
+            sm_structured,
+        })
+    }
+
+    /// From a SparseQp-shaped constraint block.
+    pub fn from_parts(obj: O, qp: &SparseQp, rho: f64) -> Result<Self> {
+        Self::new(
+            obj,
+            qp.a.clone(),
+            qp.b.clone(),
+            qp.g.clone(),
+            qp.h.clone(),
+            rho,
+        )
+    }
+
+    /// ∇L(x) for fixed (s, λ, ν).
+    fn lag_grad(
+        &self,
+        x: &[f64],
+        s: &[f64],
+        lam: &[f64],
+        nu: &[f64],
+    ) -> Vec<f64> {
+        let mut grad = self.obj.grad(x);
+        self.a.spmv_t_acc(&mut grad, 1.0, lam);
+        self.g.spmv_t_acc(&mut grad, 1.0, nu);
+        // ρAᵀ(Ax−b)
+        let mut ax = self.a.spmv(x);
+        for (axi, bi) in ax.iter_mut().zip(&self.b) {
+            *axi -= bi;
+        }
+        self.a.spmv_t_acc(&mut grad, self.rho, &ax);
+        // ρGᵀ(Gx+s−h)
+        let mut gx = self.g.spmv(x);
+        for i in 0..gx.len() {
+            gx[i] += s[i] - self.h[i];
+        }
+        self.g.spmv_t_acc(&mut grad, self.rho, &gx);
+        grad
+    }
+
+    /// Solve H d = -grad where H = ∇²f(x) + ρAᵀA + ρGᵀG.
+    /// Returns (d, HessianHandle for the backward reuse).
+    fn newton_dir(&self, x: &[f64], grad: &[f64]) -> (Vec<f64>, HessH) {
+        let n = x.len();
+        if self.sm_structured {
+            if let Some(hd) = self.obj.hess_diag(x) {
+                // d_i = hd_i + ρ * (#box rows on i); plus ρ a aᵀ
+                let mut dvec = hd;
+                for &j in &self.g.indices {
+                    dvec[j] += self.rho;
+                }
+                let mut arow = vec![0.0; n];
+                for k in 0..self.a.nnz() {
+                    arow[self.a.indices[k]] = self.a.values[k];
+                }
+                let dinv: Vec<f64> =
+                    dvec.iter().map(|&v| 1.0 / v).collect();
+                let u: Vec<f64> = dinv
+                    .iter()
+                    .zip(&arow)
+                    .map(|(di, ai)| di * ai)
+                    .collect();
+                let denom = 1.0 + self.rho * dot(&arow, &u);
+                let hh = HessH::Sm { dinv, u, denom, rho: self.rho };
+                let mut d = vec![0.0; n];
+                hh.solve(grad, &mut d);
+                for v in &mut d {
+                    *v = -*v;
+                }
+                return (d, hh);
+            }
+        }
+        // dense assembly fallback
+        let mut hmat = self.obj.hess(x);
+        let ata = self.a.ata().to_dense();
+        let gtg = self.g.ata().to_dense();
+        hmat.axpy(self.rho, &ata);
+        hmat.axpy(self.rho, &gtg);
+        let ch = Chol::factor(&hmat).expect("Lagrangian Hessian SPD");
+        let mut d = ch.solve(grad);
+        for v in &mut d {
+            *v = -*v;
+        }
+        (d, HessH::Dense(ch))
+    }
+
+    /// Inner Newton for (5a) with domain-respecting backtracking.
+    /// Returns the final Hessian handle for backward reuse.
+    fn x_update(
+        &self,
+        x: &mut Vec<f64>,
+        s: &[f64],
+        lam: &[f64],
+        nu: &[f64],
+    ) -> HessH {
+        let mut hh = None;
+        for _ in 0..self.newton_max {
+            let grad = self.lag_grad(x, s, lam, nu);
+            if norm2(&grad) < self.newton_tol {
+                break;
+            }
+            let (dir, handle) = self.newton_dir(x, &grad);
+            hh = Some(handle);
+            // backtracking: stay in the objective's domain (entropy: x>0)
+            // and require gradient-norm progress (sufficient for the
+            // strongly-convex inner problems here).
+            let g0 = norm2(&grad);
+            let mut alpha = 1.0;
+            for _ in 0..40 {
+                let cand: Vec<f64> = x
+                    .iter()
+                    .zip(&dir)
+                    .map(|(xi, di)| xi + alpha * di)
+                    .collect();
+                let in_domain = self
+                    .obj
+                    .hess_diag(&cand)
+                    .map(|d| d.iter().all(|v| v.is_finite()))
+                    .unwrap_or(true)
+                    && cand.iter().all(|v| v.is_finite());
+                // entropy domain: grad finite requires x > 0
+                let dom_ok = in_domain
+                    && self.obj.grad(&cand).iter().all(|v| v.is_finite());
+                if dom_ok {
+                    let g1 = norm2(&self.lag_grad(&cand, s, lam, nu));
+                    if g1 < g0 {
+                        *x = cand;
+                        break;
+                    }
+                }
+                alpha *= 0.5;
+            }
+            if alpha < 1e-11 {
+                break;
+            }
+        }
+        hh.unwrap_or_else(|| {
+            // converged immediately: still need the Hessian for backward
+            let grad = vec![0.0; x.len()];
+            self.newton_dir(x, &grad).1
+        })
+    }
+
+    /// Full Alt-Diff loop. `param` semantics: Param::Q differentiates
+    /// w.r.t. a linear coefficient c appearing as +cᵀx in f — for the
+    /// entropy objective f = −yᵀx + Σx log x, ∂x/∂y = −(∂x/∂c).
+    pub fn solve(&self, opts: &Options) -> Solution {
+        let n = self.a.cols;
+        let m = self.h.len();
+        let p = self.b.len();
+        let rho = self.rho;
+        let mut x = self.obj.domain_start(n);
+        let mut s = vec![0.0; m];
+        let mut lam = vec![0.0; p];
+        let mut nu = vec![0.0; m];
+
+        let d = opts.jacobian.map(|pm| pm.dim(n, m, p));
+        let mut jx = d.map(|d| Mat::zeros(n, d));
+        let mut js = d.map(|d| Mat::zeros(m, d));
+        let mut jl = d.map(|d| Mat::zeros(p, d));
+        let mut jn = d.map(|d| Mat::zeros(m, d));
+
+        let mut trace = Vec::new();
+        let mut xprev = x.clone();
+        let mut iters = 0;
+        let mut step_rel = f64::INFINITY;
+
+        for k in 0..opts.max_iter {
+            iters = k + 1;
+            xprev.copy_from_slice(&x);
+
+            let hess = self.x_update(&mut x, &s, &lam, &nu);
+
+            let gx = self.g.spmv(&x);
+            for i in 0..m {
+                s[i] = (-nu[i] / rho - (gx[i] - self.h[i])).max(0.0);
+            }
+            let ax = self.a.spmv(&x);
+            for i in 0..p {
+                lam[i] += rho * (ax[i] - self.b[i]);
+            }
+            for i in 0..m {
+                nu[i] += rho * (gx[i] + s[i] - self.h[i]);
+            }
+
+            if let (Some(jx), Some(js), Some(jl), Some(jn)) =
+                (jx.as_mut(), js.as_mut(), jl.as_mut(), jn.as_mut())
+            {
+                self.jacobian_step(
+                    opts.jacobian.unwrap(),
+                    &hess,
+                    &s,
+                    jx,
+                    js,
+                    jl,
+                    jn,
+                );
+            }
+
+            let dx: f64 = x
+                .iter()
+                .zip(&xprev)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            step_rel = dx / norm2(&xprev).max(1.0);
+            if opts.trace {
+                trace.push(TraceEntry {
+                    iter: k,
+                    step_rel,
+                    jac_norm: jx.as_ref().map(|j| j.fro()).unwrap_or(0.0),
+                });
+            }
+            if step_rel < opts.tol {
+                break;
+            }
+        }
+
+        Solution { x, s, lam, nu, jacobian: jx, iters, step_rel, trace }
+    }
+
+    fn jacobian_step(
+        &self,
+        param: Param,
+        hess: &HessH,
+        s1: &[f64],
+        jx: &mut Mat,
+        js: &mut Mat,
+        jl: &mut Mat,
+        jn: &mut Mat,
+    ) {
+        let rho = self.rho;
+        let n = self.a.cols;
+        let d = jx.cols;
+        let mut lxt = Mat::zeros(n, d);
+        let mut coljl = vec![0.0; jl.rows];
+        let mut coljn = vec![0.0; jn.rows];
+        let mut coljs = vec![0.0; js.rows];
+        for c in 0..d {
+            for i in 0..jl.rows {
+                coljl[i] = jl[(i, c)];
+            }
+            for i in 0..jn.rows {
+                coljn[i] = jn[(i, c)];
+            }
+            for i in 0..js.rows {
+                coljs[i] = js[(i, c)];
+            }
+            let mut col = vec![0.0; n];
+            self.a.spmv_t_acc(&mut col, 1.0, &coljl);
+            self.g.spmv_t_acc(&mut col, 1.0, &coljn);
+            self.g.spmv_t_acc(&mut col, rho, &coljs);
+            lxt.set_col(c, &col);
+        }
+        match param {
+            Param::Q => {
+                for i in 0..n.min(d) {
+                    lxt[(i, i)] += 1.0;
+                }
+            }
+            Param::B => {
+                for r in 0..self.a.rows.min(d) {
+                    for k in self.a.indptr[r]..self.a.indptr[r + 1] {
+                        lxt[(self.a.indices[k], r)] -=
+                            rho * self.a.values[k];
+                    }
+                }
+            }
+            Param::H => {
+                for r in 0..self.g.rows.min(d) {
+                    for k in self.g.indptr[r]..self.g.indptr[r + 1] {
+                        lxt[(self.g.indices[k], r)] -=
+                            rho * self.g.values[k];
+                    }
+                }
+            }
+        }
+        let mut newjx = Mat::zeros(n, d);
+        let mut colbuf = vec![0.0; n];
+        let mut out = vec![0.0; n];
+        for c in 0..d {
+            for i in 0..n {
+                colbuf[i] = lxt[(i, c)];
+            }
+            hess.solve(&colbuf, &mut out);
+            for i in 0..n {
+                newjx[(i, c)] = -out[i];
+            }
+        }
+        *jx = newjx;
+
+        let mut gjx = Mat::zeros(js.rows, d);
+        let mut jxcol = vec![0.0; n];
+        for c in 0..d {
+            for i in 0..n {
+                jxcol[i] = jx[(i, c)];
+            }
+            gjx.set_col(c, &self.g.spmv(&jxcol));
+        }
+        if param == Param::H {
+            for i in 0..gjx.rows.min(d) {
+                gjx[(i, i)] -= 1.0;
+            }
+        }
+        for i in 0..js.rows {
+            let gate = if s1[i] > 0.0 { 1.0 } else { 0.0 };
+            for c in 0..d {
+                js[(i, c)] = gate
+                    * (-(1.0 / rho))
+                    * (jn[(i, c)] + rho * gjx[(i, c)]);
+            }
+        }
+        for c in 0..d {
+            for i in 0..n {
+                jxcol[i] = jx[(i, c)];
+            }
+            let a = self.a.spmv(&jxcol);
+            for i in 0..jl.rows {
+                jl[(i, c)] += rho * a[i];
+            }
+        }
+        if param == Param::B {
+            for i in 0..jl.rows.min(d) {
+                jl[(i, i)] -= rho;
+            }
+        }
+        jn.axpy(rho, &gjx);
+        jn.axpy(rho, js);
+    }
+}
+
+/// Handle to the inner Hessian, reused by the backward pass.
+enum HessH {
+    Sm { dinv: Vec<f64>, u: Vec<f64>, denom: f64, rho: f64 },
+    Dense(Chol),
+}
+
+impl HessH {
+    fn solve(&self, rhs: &[f64], out: &mut [f64]) {
+        match self {
+            HessH::Sm { dinv, u, denom, rho } => {
+                let ur = dot(u, rhs);
+                let coef = rho * ur / denom;
+                for i in 0..out.len() {
+                    out[i] = dinv[i] * rhs[i] - coef * u[i];
+                }
+            }
+            HessH::Dense(ch) => {
+                out.copy_from_slice(rhs);
+                ch.solve_in_place(out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prob::{softmax_layer, EntropyObjective};
+
+    fn softmax_solver(n: usize, seed: u64) -> NewtonAltDiff<EntropyObjective>
+    {
+        let (y, u) = softmax_layer(n, seed);
+        let ones: Vec<(usize, usize, f64)> =
+            (0..n).map(|j| (0, j, 1.0)).collect();
+        let a = Csr::from_triplets(1, n, &ones);
+        let mut gt = Vec::new();
+        for i in 0..n {
+            gt.push((i, i, -1.0));
+            gt.push((n + i, i, 1.0));
+        }
+        let g = Csr::from_triplets(2 * n, n, &gt);
+        let mut h = vec![0.0; 2 * n];
+        for i in 0..n {
+            h[n + i] = u[i];
+        }
+        NewtonAltDiff::new(EntropyObjective { y }, a, vec![1.0], g, h, 1.0)
+            .unwrap()
+    }
+
+    #[test]
+    fn softmax_layer_converges_to_simplex_point() {
+        let s = softmax_solver(15, 1);
+        assert!(s.sm_structured);
+        let sol = s.solve(&Options {
+            tol: 1e-9,
+            max_iter: 20_000,
+            jacobian: None,
+            ..Default::default()
+        });
+        let sum: f64 = sol.x.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "sum {sum}");
+        assert!(sol.x.iter().all(|&v| v > 0.0));
+        for i in 0..15 {
+            assert!(sol.x[i] <= s.h[15 + i] + 1e-6);
+        }
+    }
+
+    #[test]
+    fn unconstrained_cap_softmax_matches_closed_form() {
+        // with caps u >= 1 the box never binds and the solution is the
+        // classic softmax(y) (KKT: log x_i + 1 - y_i + lam = 0).
+        let n = 8;
+        let (y, _) = softmax_layer(n, 2);
+        let ones: Vec<(usize, usize, f64)> =
+            (0..n).map(|j| (0, j, 1.0)).collect();
+        let a = Csr::from_triplets(1, n, &ones);
+        let mut gt = Vec::new();
+        for i in 0..n {
+            gt.push((i, i, -1.0));
+            gt.push((n + i, i, 1.0));
+        }
+        let g = Csr::from_triplets(2 * n, n, &gt);
+        let mut h = vec![0.0; 2 * n];
+        for i in 0..n {
+            h[n + i] = 2.0; // cap never active
+        }
+        let s = NewtonAltDiff::new(
+            EntropyObjective { y: y.clone() },
+            a,
+            vec![1.0],
+            g,
+            h,
+            1.0,
+        )
+        .unwrap();
+        let sol = s.solve(&Options {
+            tol: 1e-10,
+            max_iter: 30_000,
+            jacobian: None,
+            ..Default::default()
+        });
+        let mx = y.iter().cloned().fold(f64::MIN, f64::max);
+        let z: f64 = y.iter().map(|v| (v - mx).exp()).sum();
+        for i in 0..n {
+            let want = (y[i] - mx).exp() / z;
+            assert!(
+                (sol.x[i] - want).abs() < 1e-4,
+                "x[{i}]={} softmax={want}",
+                sol.x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn jacobian_q_finite_difference_entropy() {
+        let n = 10;
+        let s = softmax_solver(n, 3);
+        let opts = Options {
+            tol: 1e-11,
+            max_iter: 40_000,
+            jacobian: Some(Param::Q),
+            ..Default::default()
+        };
+        let sol = s.solve(&opts);
+        let j = sol.jacobian.as_ref().unwrap();
+        // Param::Q is d/dc with f = cᵀx + entropy; here c = -y, so
+        // dx/dy = -J. Check against FD on y.
+        let eps = 1e-5;
+        let fopts = Options { jacobian: None, ..opts.clone() };
+        for c in [0usize, 5] {
+            let mut sp = softmax_solver(n, 3);
+            sp.obj.y[c] += eps;
+            let mut sm = softmax_solver(n, 3);
+            sm.obj.y[c] -= eps;
+            let xp = sp.solve(&fopts).x;
+            let xm = sm.solve(&fopts).x;
+            for i in 0..n {
+                let fd = (xp[i] - xm[i]) / (2.0 * eps);
+                let got = -j[(i, c)];
+                assert!(
+                    (got - fd).abs() < 5e-3 * (1.0 + fd.abs()),
+                    "dx{i}/dy{c}: got {got} fd {fd}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,458 @@
+//! Sparse Alt-Diff: the Table 4 path (constrained sparsemax & friends).
+//!
+//! Two x-update engines, picked automatically:
+//!
+//! 1. **Sherman–Morrison** when H = D + ρ·aaᵀ for diagonal D and a single
+//!    dense equality row a (exactly the sparsemax/softmax structure of
+//!    paper Table 3: H = (2+2ρ)I + ρ11ᵀ). O(n) per solve.
+//! 2. **Matrix-free CG** otherwise: H = diag(P) + ρAᵀA + ρGᵀG applied via
+//!    three spmv's, Jacobi-preconditioned, warm-started from the previous
+//!    iterate (ADMM iterates drift slowly, so warm starts cut CG counts
+//!    dramatically — the sparse analogue of "inheriting" the Hessian).
+
+use super::{Options, Param, Solution, TraceEntry};
+use crate::error::Result;
+use crate::linalg::{dot, norm2, Mat};
+use crate::prob::SparseQp;
+use crate::sparse::{cg, Csr, HessianOp};
+
+/// x-update engine.
+enum Engine {
+    /// H = diag(d) + ρ a aᵀ ; cached: dinv, u = dinv*a, denom = 1 + ρ aᵀu.
+    ShermanMorrison { dinv: Vec<f64>, u: Vec<f64>, denom: f64, rho: f64 },
+    /// Matrix-free CG on the assembled operator.
+    Cg { cg_tol: f64, cg_max: usize },
+}
+
+/// A registered sparse QP layer.
+pub struct SparseAltDiff {
+    pub qp: SparseQp,
+    pub rho: f64,
+    engine: Engine,
+    /// diag(P) + ρ diag(GᵀG) + ρ diag(AᵀA) (for the CG operator).
+    hdiag_p: Vec<f64>,
+}
+
+impl SparseAltDiff {
+    pub fn new(qp: SparseQp, rho: f64) -> Result<Self> {
+        let n = qp.n();
+        let engine = Self::pick_engine(&qp, rho);
+        let hdiag_p = qp.pdiag.clone();
+        assert_eq!(hdiag_p.len(), n);
+        Ok(SparseAltDiff { qp, rho, engine, hdiag_p })
+    }
+
+    /// Detect the Sherman–Morrison structure: G has exactly one nonzero
+    /// per row with value ±1 (box rows → GᵀG diagonal), and A is a single
+    /// dense row. This is precisely the sparsemax/softmax constraint set.
+    fn pick_engine(qp: &SparseQp, rho: f64) -> Engine {
+        let n = qp.n();
+        let box_like = qp.g.rows > 0
+            && (0..qp.g.rows).all(|i| {
+                let lo = qp.g.indptr[i];
+                let hi = qp.g.indptr[i + 1];
+                hi - lo == 1 && qp.g.values[lo].abs() == 1.0
+            });
+        if box_like && qp.a.rows == 1 && qp.a.nnz() == n {
+            // d_i = P_ii + rho * (#box rows touching i)
+            let mut d = qp.pdiag.clone();
+            for &j in &qp.g.indices {
+                d[j] += rho;
+            }
+            let arow: Vec<f64> = {
+                let mut v = vec![0.0; n];
+                for k in 0..qp.a.nnz() {
+                    v[qp.a.indices[k]] = qp.a.values[k];
+                }
+                v
+            };
+            let dinv: Vec<f64> = d.iter().map(|&v| 1.0 / v).collect();
+            let u: Vec<f64> =
+                dinv.iter().zip(&arow).map(|(di, ai)| di * ai).collect();
+            let denom = 1.0 + rho * dot(&arow, &u);
+            return Engine::ShermanMorrison { dinv, u, denom, rho };
+        }
+        Engine::Cg { cg_tol: 1e-10, cg_max: 10 * n }
+    }
+
+    /// Apply H⁻¹ to `rhs` (in/out `x` doubles as CG warm start).
+    fn hsolve(&self, rhs: &[f64], x: &mut [f64]) {
+        match &self.engine {
+            Engine::ShermanMorrison { dinv, u, denom, rho } => {
+                // (D + ρ a aᵀ)⁻¹ r = D⁻¹r − u (ρ aᵀ D⁻¹ r)/denom
+                //   with u = D⁻¹a; note aᵀD⁻¹r = uᵀr.
+                let ur = dot(u, rhs);
+                let coef = rho * ur / denom;
+                for i in 0..x.len() {
+                    x[i] = dinv[i] * rhs[i] - coef * u[i];
+                }
+            }
+            Engine::Cg { cg_tol, cg_max } => {
+                let op = HessianOp::new(
+                    &self.hdiag_p,
+                    &self.qp.a,
+                    &self.qp.g,
+                    self.rho,
+                );
+                // warm start from incoming x
+                cg(&op, rhs, x, *cg_tol, *cg_max)
+                    .expect("CG failed on SPD Hessian");
+            }
+        }
+    }
+
+    /// Solve + differentiate. Mirrors [`DenseAltDiff::solve_with`].
+    pub fn solve_with(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        opts: &Options,
+    ) -> Solution {
+        let n = self.qp.n();
+        let m = self.qp.h.len();
+        let p = self.qp.b.len();
+        let rho = self.rho;
+        let q = q.unwrap_or(&self.qp.q);
+        let b = b.unwrap_or(&self.qp.b);
+        let h = h.unwrap_or(&self.qp.h);
+
+        let mut x = vec![0.0; n];
+        let mut s = vec![0.0; m];
+        let mut lam = vec![0.0; p];
+        let mut nu = vec![0.0; m];
+
+        let d = opts.jacobian.map(|pm| pm.dim(n, m, p));
+        let mut jx = d.map(|d| Mat::zeros(n, d));
+        let mut js = d.map(|d| Mat::zeros(m, d));
+        let mut jl = d.map(|d| Mat::zeros(p, d));
+        let mut jn = d.map(|d| Mat::zeros(m, d));
+
+        let mut trace = Vec::new();
+        let mut rhs = vec![0.0; n];
+        let mut xprev = vec![0.0; n];
+        let mut iters = 0;
+        let mut step_rel = f64::INFINITY;
+
+        for k in 0..opts.max_iter {
+            iters = k + 1;
+            xprev.copy_from_slice(&x);
+
+            // forward (5a)
+            for i in 0..n {
+                rhs[i] = -q[i];
+            }
+            self.qp.a.spmv_t_acc(&mut rhs, -1.0, &lam);
+            self.qp.g.spmv_t_acc(&mut rhs, -1.0, &nu);
+            self.qp.a.spmv_t_acc(&mut rhs, rho, b);
+            let hms: Vec<f64> =
+                h.iter().zip(&s).map(|(hi, si)| hi - si).collect();
+            self.qp.g.spmv_t_acc(&mut rhs, rho, &hms);
+            self.hsolve(&rhs, &mut x);
+
+            // (6), (5c), (5d)
+            let gx = self.qp.g.spmv(&x);
+            for i in 0..m {
+                s[i] = (-nu[i] / rho - (gx[i] - h[i])).max(0.0);
+            }
+            let ax = self.qp.a.spmv(&x);
+            for i in 0..p {
+                lam[i] += rho * (ax[i] - b[i]);
+            }
+            for i in 0..m {
+                nu[i] += rho * (gx[i] + s[i] - h[i]);
+            }
+
+            // backward (7)
+            if let (Some(jx), Some(js), Some(jl), Some(jn)) =
+                (jx.as_mut(), js.as_mut(), jl.as_mut(), jn.as_mut())
+            {
+                self.jacobian_step(
+                    opts.jacobian.unwrap(),
+                    &s,
+                    jx,
+                    js,
+                    jl,
+                    jn,
+                    rho,
+                );
+            }
+
+            let dx: f64 = x
+                .iter()
+                .zip(&xprev)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            step_rel = dx / norm2(&xprev).max(1.0);
+            if opts.trace {
+                trace.push(TraceEntry {
+                    iter: k,
+                    step_rel,
+                    jac_norm: jx.as_ref().map(|j| j.fro()).unwrap_or(0.0),
+                });
+            }
+            if step_rel < opts.tol {
+                break;
+            }
+        }
+
+        Solution { x, s, lam, nu, jacobian: jx, iters, step_rel, trace }
+    }
+
+    pub fn solve(&self, opts: &Options) -> Solution {
+        self.solve_with(None, None, None, opts)
+    }
+
+    fn jacobian_step(
+        &self,
+        param: Param,
+        s1: &[f64],
+        jx: &mut Mat,
+        js: &mut Mat,
+        jl: &mut Mat,
+        jn: &mut Mat,
+        rho: f64,
+    ) {
+        let n = self.qp.n();
+        let d = jx.cols;
+        // lxt = Aᵀ Jλ + Gᵀ Jν + ρGᵀ Js + const(θ), built column-wise with
+        // spmv_t (CSR has no gemm; d is small in the sparse regimes).
+        let mut lxt = Mat::zeros(n, d);
+        let mut coljl = vec![0.0; jl.rows];
+        let mut coljn = vec![0.0; jn.rows];
+        let mut coljs = vec![0.0; js.rows];
+        for c in 0..d {
+            for i in 0..jl.rows {
+                coljl[i] = jl[(i, c)];
+            }
+            for i in 0..jn.rows {
+                coljn[i] = jn[(i, c)];
+            }
+            for i in 0..js.rows {
+                coljs[i] = js[(i, c)];
+            }
+            let mut col = vec![0.0; n];
+            self.qp.a.spmv_t_acc(&mut col, 1.0, &coljl);
+            self.qp.g.spmv_t_acc(&mut col, 1.0, &coljn);
+            self.qp.g.spmv_t_acc(&mut col, rho, &coljs);
+            lxt.set_col(c, &col);
+        }
+        match param {
+            Param::Q => {
+                for i in 0..n.min(d) {
+                    lxt[(i, i)] += 1.0;
+                }
+            }
+            Param::B => {
+                // -ρAᵀ : column c is -ρ * (row c of A) scattered
+                for r in 0..self.qp.a.rows.min(d) {
+                    for k in self.qp.a.indptr[r]..self.qp.a.indptr[r + 1] {
+                        lxt[(self.qp.a.indices[k], r)] -=
+                            rho * self.qp.a.values[k];
+                    }
+                }
+            }
+            Param::H => {
+                for r in 0..self.qp.g.rows.min(d) {
+                    for k in self.qp.g.indptr[r]..self.qp.g.indptr[r + 1] {
+                        lxt[(self.qp.g.indices[k], r)] -=
+                            rho * self.qp.g.values[k];
+                    }
+                }
+            }
+        }
+        // (7a): column-wise H⁻¹ apply (SM: O(nd); CG: warm-started per col)
+        let mut newjx = Mat::zeros(n, d);
+        let mut colbuf = vec![0.0; n];
+        let mut xcol = vec![0.0; n];
+        for c in 0..d {
+            for i in 0..n {
+                colbuf[i] = lxt[(i, c)];
+                xcol[i] = -jx[(i, c)]; // warm start from previous -Jx col
+            }
+            self.hsolve(&colbuf, &mut xcol);
+            for i in 0..n {
+                newjx[(i, c)] = -xcol[i];
+            }
+        }
+        *jx = newjx;
+
+        // (7b)
+        let mut gjx = Mat::zeros(js.rows, d);
+        let mut jxcol = vec![0.0; n];
+        for c in 0..d {
+            for i in 0..n {
+                jxcol[i] = jx[(i, c)];
+            }
+            let g = self.qp.g.spmv(&jxcol);
+            gjx.set_col(c, &g);
+        }
+        if param == Param::H {
+            for i in 0..gjx.rows.min(d) {
+                gjx[(i, i)] -= 1.0;
+            }
+        }
+        for i in 0..js.rows {
+            let gate = if s1[i] > 0.0 { 1.0 } else { 0.0 };
+            for c in 0..d {
+                js[(i, c)] = gate
+                    * (-(1.0 / rho))
+                    * (jn[(i, c)] + rho * gjx[(i, c)]);
+            }
+        }
+        // (7c)
+        for c in 0..d {
+            for i in 0..n {
+                jxcol[i] = jx[(i, c)];
+            }
+            let a = self.qp.a.spmv(&jxcol);
+            for i in 0..jl.rows {
+                jl[(i, c)] += rho * a[i];
+            }
+        }
+        if param == Param::B {
+            for i in 0..jl.rows.min(d) {
+                jl[(i, i)] -= rho;
+            }
+        }
+        // (7d)
+        jn.axpy(rho, &gjx);
+        jn.axpy(rho, js);
+    }
+
+    /// True when the Sherman–Morrison fast path is active.
+    pub fn uses_sherman_morrison(&self) -> bool {
+        matches!(self.engine, Engine::ShermanMorrison { .. })
+    }
+}
+
+/// Build a sparse layer directly from CSR parts (public convenience).
+pub fn sparse_layer(
+    pdiag: Vec<f64>,
+    q: Vec<f64>,
+    a: Csr,
+    b: Vec<f64>,
+    g: Csr,
+    h: Vec<f64>,
+    rho: f64,
+) -> Result<SparseAltDiff> {
+    SparseAltDiff::new(SparseQp { pdiag, q, a, b, g, h }, rho)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::altdiff::DenseAltDiff;
+    use crate::prob::{sparse_qp, sparsemax_qp};
+
+    #[test]
+    fn sparsemax_uses_sherman_morrison() {
+        let s = SparseAltDiff::new(sparsemax_qp(50, 1), 1.0).unwrap();
+        assert!(s.uses_sherman_morrison());
+        let r = SparseAltDiff::new(sparse_qp(30, 10, 4, 0.1, 1), 1.0)
+            .unwrap();
+        assert!(!r.uses_sherman_morrison());
+    }
+
+    #[test]
+    fn sparsemax_solution_is_simplex_point() {
+        let s = SparseAltDiff::new(sparsemax_qp(40, 2), 1.0).unwrap();
+        let sol = s.solve(&Options {
+            tol: 1e-10,
+            max_iter: 50_000,
+            jacobian: None,
+            ..Default::default()
+        });
+        let sum: f64 = sol.x.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "simplex sum {sum}");
+        for (i, &xi) in sol.x.iter().enumerate() {
+            assert!(xi >= -1e-7, "x[{i}]={xi} below 0");
+            assert!(xi <= s.qp.h[40 + i] + 1e-6, "x[{i}] above cap");
+        }
+    }
+
+    #[test]
+    fn sparse_matches_dense_solution_and_jacobian() {
+        let sq = sparse_qp(18, 9, 4, 0.3, 3);
+        let dense = DenseAltDiff::new(sq.to_dense(), 1.0).unwrap();
+        let sparse = SparseAltDiff::new(sq, 1.0).unwrap();
+        let opts = Options {
+            tol: 1e-11,
+            max_iter: 40_000,
+            jacobian: Some(Param::B),
+            ..Default::default()
+        };
+        let sd = dense.solve(&opts);
+        let ss = sparse.solve(&opts);
+        for i in 0..18 {
+            assert!(
+                (sd.x[i] - ss.x[i]).abs() < 1e-6,
+                "x[{i}] {} vs {}",
+                sd.x[i],
+                ss.x[i]
+            );
+        }
+        let jd = sd.jacobian.unwrap();
+        let js = ss.jacobian.unwrap();
+        assert!(jd.max_abs_diff(&js) < 1e-5);
+    }
+
+    #[test]
+    fn sherman_morrison_matches_cg_on_same_structure() {
+        // force CG by perturbing one G row to two entries, compare with a
+        // dense assembly of the SM problem
+        let sq = sparsemax_qp(12, 4);
+        let dense = DenseAltDiff::new(sq.to_dense(), 1.0).unwrap();
+        let sm = SparseAltDiff::new(sq, 1.0).unwrap();
+        assert!(sm.uses_sherman_morrison());
+        let opts = Options {
+            tol: 1e-11,
+            max_iter: 60_000,
+            jacobian: Some(Param::B),
+            ..Default::default()
+        };
+        let a = sm.solve(&opts);
+        let b = dense.solve(&opts);
+        for i in 0..12 {
+            assert!((a.x[i] - b.x[i]).abs() < 1e-6);
+        }
+        assert!(a
+            .jacobian
+            .unwrap()
+            .max_abs_diff(&b.jacobian.unwrap())
+            < 1e-5);
+    }
+
+    #[test]
+    fn jacobian_b_finite_difference_sparse() {
+        let sq = sparse_qp(14, 7, 3, 0.25, 5);
+        let s = SparseAltDiff::new(sq, 1.0).unwrap();
+        let opts = Options {
+            tol: 1e-11,
+            max_iter: 40_000,
+            jacobian: Some(Param::B),
+            ..Default::default()
+        };
+        let sol = s.solve(&opts);
+        let j = sol.jacobian.unwrap();
+        let fopts = Options { jacobian: None, ..opts };
+        let eps = 1e-5;
+        for c in 0..3 {
+            let mut bp = s.qp.b.clone();
+            bp[c] += eps;
+            let mut bm = s.qp.b.clone();
+            bm[c] -= eps;
+            let xp = s.solve_with(None, Some(&bp), None, &fopts).x;
+            let xm = s.solve_with(None, Some(&bm), None, &fopts).x;
+            for i in 0..14 {
+                let fd = (xp[i] - xm[i]) / (2.0 * eps);
+                assert!(
+                    (j[(i, c)] - fd).abs() < 2e-3 * (1.0 + fd.abs()),
+                    "J[{i},{c}]={} fd={fd}",
+                    j[(i, c)]
+                );
+            }
+        }
+    }
+}

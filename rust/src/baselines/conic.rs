@@ -1,0 +1,212 @@
+//! CvxpyLayer-style comparator (simulated — see DESIGN.md §6).
+//!
+//! CvxpyLayer canonicalizes the program into cone form, solves it with an
+//! operator-splitting conic solver (SCS), and differentiates the *cone
+//! program* — all at the embedded dimension. We reproduce that pipeline
+//! and its phase structure:
+//!
+//!   canonicalize : embed z = (x, s), Ã z = (b, h), cone s ≥ 0  — O(nnz)
+//!   initialize   : factor the embedded (n+m)-dim operator       — O((n+m)³)
+//!   forward      : ADMM on the embedded program                 — O(T(n+m)²)
+//!   backward     : implicit diff of the embedded KKT system     — O((n+2m+p)³)
+//!
+//! The embedded sizes are what make CvxpyLayer the slowest column of the
+//! paper's Tables 2/4/5: every phase pays for n + n_c, never just n.
+
+use crate::altdiff::{DenseAltDiff, Options, Param};
+use crate::baselines::kkt_diff;
+use crate::error::Result;
+use crate::linalg::Mat;
+use crate::prob::Qp;
+use std::time::Instant;
+
+/// Phase timing breakdown (the per-row structure of Tables 2/4/5).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Phases {
+    pub canon: f64,
+    pub init: f64,
+    pub forward: f64,
+    pub backward: f64,
+}
+
+impl Phases {
+    pub fn total(&self) -> f64 {
+        self.canon + self.init + self.forward + self.backward
+    }
+}
+
+/// Result of one layer evaluation through the conic pipeline.
+pub struct ConicResult {
+    pub x: Vec<f64>,
+    pub jacobian: Mat,
+    pub iters: usize,
+    pub phases: Phases,
+}
+
+/// Embed the QP into the slack cone form.
+///
+/// z = (x, s) ∈ R^{n+m};  min ½zᵀP̃z + q̃ᵀz
+/// s.t. [A 0; G I] z = (b, h)   and   −s ≤ 0.
+fn canonicalize(qp: &Qp, eps_reg: f64) -> Qp {
+    let n = qp.n();
+    let m = qp.m_ineq();
+    let p = qp.p_eq();
+    let nz = n + m;
+    let mut pt = Mat::zeros(nz, nz);
+    for i in 0..n {
+        for j in 0..n {
+            pt[(i, j)] = qp.p[(i, j)];
+        }
+    }
+    for i in n..nz {
+        pt[(i, i)] = eps_reg; // keep P̃ SPD on the slack block
+    }
+    let mut qt = vec![0.0; nz];
+    qt[..n].copy_from_slice(&qp.q);
+    let mut at = Mat::zeros(p + m, nz);
+    for i in 0..p {
+        for j in 0..n {
+            at[(i, j)] = qp.a[(i, j)];
+        }
+    }
+    for i in 0..m {
+        for j in 0..n {
+            at[(p + i, j)] = qp.g[(i, j)];
+        }
+        at[(p + i, n + i)] = 1.0;
+    }
+    let mut bt = vec![0.0; p + m];
+    bt[..p].copy_from_slice(&qp.b);
+    bt[p..].copy_from_slice(&qp.h);
+    // cone: s >= 0  ⇔  -z_{n+i} <= 0
+    let mut gt = Mat::zeros(m, nz);
+    for i in 0..m {
+        gt[(i, n + i)] = -1.0;
+    }
+    Qp { p: pt, q: qt, a: at, b: bt, g: gt, h: vec![0.0; m] }
+}
+
+/// Evaluate the layer through the simulated CvxpyLayer pipeline.
+/// `param` refers to the ORIGINAL problem's parameters; only the x-block
+/// of the embedded Jacobian is returned.
+pub fn cvxpylayer_sim(
+    qp: &Qp,
+    param: Param,
+    tol: f64,
+) -> Result<ConicResult> {
+    let n = qp.n();
+    let m = qp.m_ineq();
+    let p = qp.p_eq();
+    let mut ph = Phases::default();
+
+    let t0 = Instant::now();
+    let emb = canonicalize(qp, 1e-6);
+    ph.canon = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    // "initialization": factor the embedded operator (SCS caches an LDL of
+    // the full system; our splitting solver caches the (n+m) Hessian).
+    let solver = DenseAltDiff::new(emb.clone(), 1.0)?;
+    ph.init = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let sol = solver.solve(&Options {
+        tol,
+        max_iter: 20_000,
+        jacobian: None,
+        ..Default::default()
+    });
+    ph.forward = t0.elapsed().as_secs_f64();
+
+    // backward: implicit differentiation at the embedded size. The
+    // embedded duals for the cone rows come from the splitting solver.
+    let t0 = Instant::now();
+    let emb_param = match param {
+        Param::Q => Param::Q, // q̃ = (q, 0): first n columns
+        Param::B => Param::B, // b̃ = (b, h): first p columns
+        Param::H => Param::B, // h lives in b̃ columns p..p+m
+    };
+    let jfull = kkt_diff::kkt_jacobian(
+        &emb, &sol.x, &sol.lam, &sol.nu, emb_param,
+    )?;
+    // slice x-rows and the columns of the original parameter
+    let (col_off, d) = match param {
+        Param::Q => (0usize, n),
+        Param::B => (0usize, p),
+        Param::H => (p, m),
+    };
+    let mut j = Mat::zeros(n, d);
+    for i in 0..n {
+        for c in 0..d {
+            j[(i, c)] = jfull[(i, col_off + c)];
+        }
+    }
+    ph.backward = t0.elapsed().as_secs_f64();
+
+    Ok(ConicResult {
+        x: sol.x[..n].to_vec(),
+        jacobian: j,
+        iters: sol.iters,
+        phases: ph,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cosine;
+    use crate::prob::dense_qp;
+
+    #[test]
+    fn embedded_solution_matches_direct() {
+        let qp = dense_qp(10, 5, 2, 21);
+        let res = cvxpylayer_sim(&qp, Param::B, 1e-9).unwrap();
+        let direct = crate::altdiff::DenseAltDiff::new(qp.clone(), 1.0)
+            .unwrap()
+            .solve(&Options {
+                tol: 1e-10,
+                max_iter: 50_000,
+                jacobian: None,
+                ..Default::default()
+            });
+        for i in 0..10 {
+            assert!(
+                (res.x[i] - direct.x[i]).abs() < 1e-4,
+                "x[{i}]: {} vs {}",
+                res.x[i],
+                direct.x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn embedded_jacobian_matches_altdiff() {
+        let qp = dense_qp(10, 5, 2, 22);
+        for param in [Param::B, Param::Q] {
+            let res = cvxpylayer_sim(&qp, param, 1e-10).unwrap();
+            let ja = crate::altdiff::DenseAltDiff::new(qp.clone(), 1.0)
+                .unwrap()
+                .solve(&Options {
+                    tol: 1e-12,
+                    max_iter: 60_000,
+                    jacobian: Some(param),
+                    ..Default::default()
+                })
+                .jacobian
+                .unwrap();
+            let cos = cosine(&res.jacobian.data, &ja.data);
+            assert!(cos > 0.995, "{param:?}: cosine {cos}");
+        }
+    }
+
+    #[test]
+    fn phases_are_populated() {
+        let qp = dense_qp(8, 4, 2, 23);
+        let res = cvxpylayer_sim(&qp, Param::B, 1e-8).unwrap();
+        assert!(res.phases.init > 0.0);
+        assert!(res.phases.forward > 0.0);
+        assert!(res.phases.backward > 0.0);
+        assert!(res.phases.total() >= res.phases.forward);
+        assert!(res.iters > 0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Implicit differentiation of the KKT conditions (paper Appendix C.1,
+//! eq. 25) — the OptNet/CvxpyLayer backward semantics that Alt-Diff is
+//! benchmarked against.
+//!
+//! J_z dz/dθ = -J_θ with z = (x, λ, ν) and
+//!     J_z = [ ∇²f        Aᵀ              Gᵀ            ]
+//!           [ A          0               0             ]
+//!           [ diag(ν)G   0               diag(Gx - h)  ]
+//! One dense (n+p+m) LU factorization; O((n+n_c)³) — the cost Table 1
+//! assigns to this school of methods.
+
+use crate::altdiff::Param;
+use crate::error::Result;
+use crate::linalg::{gemv, Lu, Mat};
+use crate::prob::Qp;
+
+/// ∂x*/∂θ via KKT implicit differentiation at the solution (x, λ, ν).
+pub fn kkt_jacobian(
+    qp: &Qp,
+    x: &[f64],
+    _lam: &[f64],
+    nu: &[f64],
+    param: Param,
+) -> Result<Mat> {
+    let n = qp.n();
+    let p = qp.p_eq();
+    let m = qp.m_ineq();
+    let dim = n + p + m;
+    let d = param.dim(n, m, p);
+
+    let gx = gemv(&qp.g, x);
+    let mut jz = Mat::zeros(dim, dim);
+    for i in 0..n {
+        for j in 0..n {
+            jz[(i, j)] = qp.p[(i, j)];
+        }
+        for j in 0..p {
+            jz[(i, n + j)] = qp.a[(j, i)];
+        }
+        for j in 0..m {
+            jz[(i, n + p + j)] = qp.g[(j, i)];
+        }
+    }
+    for i in 0..p {
+        for j in 0..n {
+            jz[(n + i, j)] = qp.a[(i, j)];
+        }
+    }
+    for i in 0..m {
+        for j in 0..n {
+            jz[(n + p + i, j)] = nu[i] * qp.g[(i, j)];
+        }
+        jz[(n + p + i, n + p + i)] = gx[i] - qp.h[i];
+    }
+    // strict-complementarity boundary regularization (qpth/diffcp do the
+    // same in spirit): keeps the factorization well-posed when an
+    // inequality is weakly active.
+    for i in 0..dim {
+        jz[(i, i)] += if i < n { 0.0 } else { -1e-10 };
+    }
+
+    // -J_θ columns
+    let mut jt = Mat::zeros(dim, d);
+    match param {
+        Param::Q => {
+            // ∂(∇f + q)/∂q = I in the stationarity block
+            for i in 0..n {
+                jt[(i, i)] = 1.0;
+            }
+        }
+        Param::B => {
+            // ∂(Ax - b)/∂b = -I in the equality block
+            for i in 0..p {
+                jt[(n + i, i)] = -1.0;
+            }
+        }
+        Param::H => {
+            // ∂[diag(ν)(Gx - h)]/∂h = -diag(ν)
+            for i in 0..m {
+                jt[(n + p + i, i)] = -nu[i];
+            }
+        }
+    }
+    let lu = Lu::factor(&jz)?;
+    let mut dz = lu.solve_mat(&jt);
+    dz.scale(-1.0);
+    // top n rows = dx/dθ
+    let mut out = Mat::zeros(n, d);
+    for i in 0..n {
+        out.row_mut(i).copy_from_slice(dz.row(i));
+    }
+    Ok(out)
+}
+
+/// Full OptNet-style layer evaluation: IPM forward + KKT backward.
+/// Returns (x, jacobian, forward_iters).
+pub fn optnet_layer(
+    qp: &Qp,
+    param: Param,
+    tol: f64,
+) -> Result<(Vec<f64>, Mat, usize)> {
+    let sol = super::ipm::solve(qp, tol, 200)?;
+    let j = kkt_jacobian(qp, &sol.x, &sol.lam, &sol.nu, param)?;
+    Ok((sol.x, j, sol.iters))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::altdiff::{DenseAltDiff, Options};
+    use crate::linalg::cosine;
+    use crate::prob::dense_qp;
+
+    #[test]
+    fn kkt_jacobian_matches_altdiff_thm42() {
+        // Thm 4.2: Alt-Diff converges to the KKT-implicit gradient.
+        let qp = dense_qp(14, 7, 3, 11);
+        for param in [Param::B, Param::Q, Param::H] {
+            let (_, jk, _) = optnet_layer(&qp, param, 1e-10).unwrap();
+            let ad = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+            let ja = ad
+                .solve(&Options {
+                    tol: 1e-12,
+                    max_iter: 60_000,
+                    jacobian: Some(param),
+                    ..Default::default()
+                })
+                .jacobian
+                .unwrap();
+            let cos = cosine(&jk.data, &ja.data);
+            assert!(cos > 0.999, "param {param:?}: cosine {cos}");
+        }
+    }
+
+    #[test]
+    fn kkt_jacobian_b_finite_difference() {
+        let qp = dense_qp(10, 5, 2, 12);
+        let (_, j, _) = optnet_layer(&qp, Param::B, 1e-10).unwrap();
+        let eps = 1e-5;
+        for c in 0..2 {
+            let mut qpp = qp.clone();
+            qpp.b[c] += eps;
+            let mut qpm = qp.clone();
+            qpm.b[c] -= eps;
+            let xp = super::super::ipm::solve(&qpp, 1e-11, 200).unwrap().x;
+            let xm = super::super::ipm::solve(&qpm, 1e-11, 200).unwrap().x;
+            for i in 0..10 {
+                let fd = (xp[i] - xm[i]) / (2.0 * eps);
+                assert!(
+                    (j[(i, c)] - fd).abs() < 2e-3 * (1.0 + fd.abs()),
+                    "J[{i},{c}]={} fd={fd}",
+                    j[(i, c)]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! The comparators the paper benchmarks Alt-Diff against.
+//!
+//! - [`ipm`] + [`kkt_diff`]: OptNet semantics (IPM forward, implicit KKT
+//!   differentiation backward) — dense O((n+n_c)³).
+//! - [`conic`]: CvxpyLayer semantics (canonicalize → embedded cone solve →
+//!   embedded implicit differentiation), with the phase breakdown the
+//!   paper's tables report.
+//! - [`unrolled`]: reverse-mode through unrolled projected gradient
+//!   descent (the §2 "unrolling methods" school).
+pub mod conic;
+pub mod ipm;
+pub mod kkt_diff;
+pub mod unrolled;
+
+pub use conic::{cvxpylayer_sim, ConicResult, Phases};
+pub use ipm::{solve as ipm_solve, IpmSolution};
+pub use kkt_diff::{kkt_jacobian, optnet_layer};
+pub use unrolled::{unrolled_sparsemax, UnrolledResult};

@@ -1,0 +1,202 @@
+//! Unrolling baseline (paper §2 "Unrolling methods").
+//!
+//! Projected gradient descent on the simplex-constrained quadratic
+//! (the sparsemax family: min ‖x − y‖² s.t. 1ᵀx = 1, x ≥ 0), with the
+//! gradient of the layer obtained by *reverse-mode through the unrolled
+//! iterations*. This exhibits exactly the two costs the paper attributes
+//! to unrolling:
+//!
+//!  1. every iterate must be stored for the reverse sweep (memory grows
+//!     linearly in iteration count — `peak_stored_floats` reports it);
+//!  2. each forward step needs an exact projection onto the feasible set
+//!     (here the O(n log n) sort-based simplex projection; for general
+//!     polyhedra this is itself a QP — the reason unrolling does not
+//!     scale to Alt-Diff's problem class).
+
+use crate::linalg::Mat;
+
+/// Exact Euclidean projection onto the simplex {x ≥ 0, 1ᵀx = 1}
+/// (Held–Wolfe–Crowder / sort-based). Returns (projection, support mask).
+pub fn project_simplex(v: &[f64]) -> (Vec<f64>, Vec<bool>) {
+    let _n = v.len();
+    let mut u: Vec<f64> = v.to_vec();
+    u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut css = 0.0;
+    let mut rho = 0;
+    let mut theta = 0.0;
+    for (i, &ui) in u.iter().enumerate() {
+        css += ui;
+        let t = (css - 1.0) / (i + 1) as f64;
+        if ui - t > 0.0 {
+            rho = i + 1;
+            theta = t;
+        }
+    }
+    let _ = rho;
+    let x: Vec<f64> = v.iter().map(|&vi| (vi - theta).max(0.0)).collect();
+    let mask: Vec<bool> = x.iter().map(|&xi| xi > 0.0).collect();
+    (x, mask)
+}
+
+/// VJP of `project_simplex` at a point with support `mask`:
+/// J = I_S − (1/|S|) 1_S 1_Sᵀ on the support, 0 off-support.
+fn project_simplex_vjp(gbar: &[f64], mask: &[bool]) -> Vec<f64> {
+    let k = mask.iter().filter(|&&b| b).count().max(1) as f64;
+    let ssum: f64 = gbar
+        .iter()
+        .zip(mask)
+        .filter(|(_, &b)| b)
+        .map(|(g, _)| *g)
+        .sum();
+    gbar.iter()
+        .zip(mask)
+        .map(|(g, &b)| if b { g - ssum / k } else { 0.0 })
+        .collect()
+}
+
+/// Result of the unrolled layer.
+pub struct UnrolledResult {
+    pub x: Vec<f64>,
+    /// dx/dy (n×n) for the sparsemax objective min ‖x − y‖².
+    pub jacobian: Mat,
+    pub iters: usize,
+    /// floats retained for the reverse sweep (the memory cost).
+    pub peak_stored_floats: usize,
+}
+
+/// Unrolled PGD sparsemax: forward stores every support mask, backward
+/// reverse-propagates an identity seed to build the full Jacobian dx/dy.
+///
+/// step x_{t+1} = Π(x_t − η(2x_t − 2y)):  linear map between projections,
+/// so the reverse sweep composes (I − η·2I) with the projection VJPs.
+pub fn unrolled_sparsemax(
+    y: &[f64],
+    eta: f64,
+    iters: usize,
+    tol: f64,
+) -> UnrolledResult {
+    let n = y.len();
+    let mut x = vec![1.0 / n as f64; n];
+    let mut masks: Vec<Vec<bool>> = Vec::with_capacity(iters);
+    let mut used = 0;
+    for _ in 0..iters {
+        let pre: Vec<f64> = x
+            .iter()
+            .zip(y)
+            .map(|(xi, yi)| xi - eta * (2.0 * xi - 2.0 * yi))
+            .collect();
+        let (xn, mask) = project_simplex(&pre);
+        let dx: f64 = xn
+            .iter()
+            .zip(&x)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        x = xn;
+        masks.push(mask);
+        used += 1;
+        if dx < tol {
+            break;
+        }
+    }
+    // reverse sweep: for each output coordinate seed e_i, propagate
+    // v ← (1 − 2η) Πᵀv  backwards; the y-gradient accumulates 2η Πᵀv at
+    // every step. (All iterates' masks required → the memory cost.)
+    let mut jac = Mat::zeros(n, n);
+    for seed in 0..n {
+        let mut v = vec![0.0; n];
+        v[seed] = 1.0;
+        let mut gy = vec![0.0; n];
+        for mask in masks[..used].iter().rev() {
+            let pv = project_simplex_vjp(&v, mask);
+            for i in 0..n {
+                gy[i] += 2.0 * eta * pv[i];
+                v[i] = (1.0 - 2.0 * eta) * pv[i];
+            }
+        }
+        for i in 0..n {
+            jac[(seed, i)] = gy[i];
+        }
+    }
+    // jac rows currently = d x_seed / d y_i — already (n,n) as desired.
+    UnrolledResult {
+        x,
+        jacobian: jac,
+        iters: used,
+        peak_stored_floats: used * n, // one mask per iteration (as bytes ~ n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn projection_is_simplex_point_and_idempotent() {
+        let v = vec![0.5, -1.0, 2.0, 0.1];
+        let (x, _) = project_simplex(&v);
+        let sum: f64 = x.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(x.iter().all(|&xi| xi >= 0.0));
+        let (x2, _) = project_simplex(&x);
+        for i in 0..4 {
+            assert!((x[i] - x2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn projection_of_simplex_interior_point_is_identity() {
+        let v = vec![0.25, 0.25, 0.25, 0.25];
+        let (x, mask) = project_simplex(&v);
+        assert_eq!(x, v);
+        assert!(mask.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn unrolled_matches_sparsemax_fixed_point() {
+        // The unrolled PGD solves min ‖x−y‖² on the simplex = sparsemax(y).
+        let y = vec![0.3, -0.1, 0.9, 0.05, -0.4];
+        let r = unrolled_sparsemax(&y, 0.25, 2000, 1e-12);
+        // compare with direct projection of y (sparsemax(y) = Π(y))
+        let (want, _) = project_simplex(&y);
+        for i in 0..5 {
+            assert!(
+                (r.x[i] - want[i]).abs() < 1e-6,
+                "x[{i}]={} want {}",
+                r.x[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn unrolled_jacobian_matches_finite_difference() {
+        let y = vec![0.3, -0.1, 0.9, 0.05, -0.4];
+        let r = unrolled_sparsemax(&y, 0.25, 4000, 1e-13);
+        let eps = 1e-6;
+        for c in 0..5 {
+            let mut yp = y.clone();
+            yp[c] += eps;
+            let mut ym = y.clone();
+            ym[c] -= eps;
+            let xp = unrolled_sparsemax(&yp, 0.25, 4000, 1e-13).x;
+            let xm = unrolled_sparsemax(&ym, 0.25, 4000, 1e-13).x;
+            for i in 0..5 {
+                let fd = (xp[i] - xm[i]) / (2.0 * eps);
+                assert!(
+                    (r.jacobian[(i, c)] - fd).abs() < 1e-4,
+                    "J[{i},{c}]={} fd={fd}",
+                    r.jacobian[(i, c)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_grows_with_iterations() {
+        let y = vec![0.5, 0.2, -0.3, 0.8];
+        let short = unrolled_sparsemax(&y, 0.05, 10, 0.0);
+        let long = unrolled_sparsemax(&y, 0.05, 100, 0.0);
+        assert!(long.peak_stored_floats > 5 * short.peak_stored_floats);
+    }
+}

@@ -1,0 +1,173 @@
+//! Dynamic batcher: groups compatible requests into padded batches.
+//!
+//! Compatibility key = (layer, k): only requests against the same
+//! registered layer and the same routed iteration count may share an
+//! executable launch. Flush policy: a batch launches when it reaches the
+//! target batch size, or when its oldest member has waited past the
+//! deadline (classic vLLM-style deadline batching — latency bounded, and
+//! throughput recovers the MXU efficiency of the batched artifact).
+
+use super::messages::Request;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Batch of compatible requests ready for execution.
+#[derive(Debug)]
+pub struct Batch {
+    pub layer: String,
+    pub k: usize,
+    pub requests: Vec<Request>,
+}
+
+/// Keyed accumulation with deadline-based flushing.
+pub struct Batcher {
+    pub max_batch: usize,
+    pub deadline: Duration,
+    pending: BTreeMap<(String, usize), Vec<Request>>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, deadline: Duration) -> Self {
+        Batcher { max_batch, deadline, pending: BTreeMap::new() }
+    }
+
+    /// Add a routed request; returns a full batch if one is ready.
+    pub fn push(&mut self, layer: &str, k: usize, req: Request)
+        -> Option<Batch>
+    {
+        let key = (layer.to_string(), k);
+        let slot = self.pending.entry(key.clone()).or_default();
+        slot.push(req);
+        if slot.len() >= self.max_batch {
+            let requests = self.pending.remove(&key).unwrap();
+            return Some(Batch { layer: key.0, k, requests });
+        }
+        None
+    }
+
+    /// Flush every group whose oldest request has exceeded the deadline.
+    pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch> {
+        let expired: Vec<(String, usize)> = self
+            .pending
+            .iter()
+            .filter(|(_, reqs)| {
+                reqs.first()
+                    .map(|r| now.duration_since(r.submitted) >= self.deadline)
+                    .unwrap_or(false)
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired
+            .into_iter()
+            .map(|key| {
+                let requests = self.pending.remove(&key).unwrap();
+                Batch { layer: key.0, k: key.1, requests }
+            })
+            .collect()
+    }
+
+    /// Flush everything (shutdown).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let keys: Vec<(String, usize)> =
+            self.pending.keys().cloned().collect();
+        keys.into_iter()
+            .map(|key| {
+                let requests = self.pending.remove(&key).unwrap();
+                Batch { layer: key.0, k: key.1, requests }
+            })
+            .collect()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.values().map(|v| v.len()).sum()
+    }
+
+    /// Earliest deadline among pending groups (for the dispatcher's sleep).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending
+            .values()
+            .filter_map(|v| v.first())
+            .map(|r| r.submitted + self.deadline)
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, layer: &str) -> Request {
+        Request {
+            id,
+            layer: layer.into(),
+            q: vec![],
+            b: vec![],
+            h: vec![],
+            tol: 1e-3,
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fills_batch_at_max() {
+        let mut b = Batcher::new(3, Duration::from_millis(100));
+        assert!(b.push("l", 10, req(1, "l")).is_none());
+        assert!(b.push("l", 10, req(2, "l")).is_none());
+        let batch = b.push("l", 10, req(3, "l")).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn never_mixes_layers_or_k() {
+        let mut b = Batcher::new(2, Duration::from_millis(100));
+        assert!(b.push("a", 10, req(1, "a")).is_none());
+        assert!(b.push("b", 10, req(2, "b")).is_none());
+        assert!(b.push("a", 20, req(3, "a")).is_none());
+        assert_eq!(b.pending_count(), 3);
+        let batch = b.push("a", 10, req(4, "a")).unwrap();
+        assert_eq!(batch.k, 10);
+        assert!(batch.requests.iter().all(|r| r.layer == "a"));
+        assert_eq!(batch.requests.len(), 2);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = Batcher::new(10, Duration::from_millis(1));
+        b.push("l", 10, req(1, "l"));
+        let later = Instant::now() + Duration::from_millis(5);
+        let flushed = b.flush_expired(later);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].requests.len(), 1);
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn not_expired_not_flushed() {
+        let mut b = Batcher::new(10, Duration::from_secs(60));
+        b.push("l", 10, req(1, "l"));
+        assert!(b.flush_expired(Instant::now()).is_empty());
+        assert_eq!(b.pending_count(), 1);
+    }
+
+    #[test]
+    fn preserves_arrival_order_within_key() {
+        let mut b = Batcher::new(3, Duration::from_millis(100));
+        b.push("l", 10, req(7, "l"));
+        b.push("l", 10, req(8, "l"));
+        let batch = b.push("l", 10, req(9, "l")).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn flush_all_drains() {
+        let mut b = Batcher::new(10, Duration::from_secs(1));
+        b.push("a", 10, req(1, "a"));
+        b.push("b", 20, req(2, "b"));
+        let all = b.flush_all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(b.pending_count(), 0);
+        assert!(b.next_deadline().is_none());
+    }
+}

@@ -1,0 +1,61 @@
+//! Request/response types of the optimization-layer server.
+
+use std::time::Instant;
+
+/// A differentiation request against a registered layer.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// registered layer this request targets
+    pub layer: String,
+    /// per-request parameters θ
+    pub q: Vec<f64>,
+    pub b: Vec<f64>,
+    pub h: Vec<f64>,
+    /// requested truncation tolerance (paper §4.3) — the router maps this
+    /// to an iteration count k via the calibrated truncation table.
+    pub tol: f64,
+    pub submitted: Instant,
+}
+
+/// The solved layer + gradient.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub x: Vec<f64>,
+    /// ∂x/∂b, row-major (n × p)
+    pub jx: Vec<f64>,
+    /// primal residual reported by the executable
+    pub prim_residual: f64,
+    /// iterations the router selected
+    pub k_used: usize,
+    /// how many requests shared the executed batch
+    pub batch_size: usize,
+    /// end-to-end latency in seconds
+    pub latency: f64,
+    /// which backend served it ("pjrt" | "native")
+    pub backend: &'static str,
+}
+
+/// Failure envelope (never panics across the channel boundary).
+#[derive(Clone, Debug)]
+pub struct Failure {
+    pub id: u64,
+    pub error: String,
+}
+
+/// What workers send back.
+#[derive(Clone, Debug)]
+pub enum Reply {
+    Ok(Response),
+    Err(Failure),
+}
+
+impl Reply {
+    pub fn id(&self) -> u64 {
+        match self {
+            Reply::Ok(r) => r.id,
+            Reply::Err(f) => f.id,
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Lock-free serving metrics (atomics only on the hot path).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency histogram buckets (microseconds, upper bounds).
+pub const LAT_BUCKETS_US: [u64; 8] =
+    [50, 100, 250, 500, 1_000, 5_000, 25_000, u64::MAX];
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub failures: AtomicU64,
+    pub batches: AtomicU64,
+    pub pjrt_execs: AtomicU64,
+    pub native_execs: AtomicU64,
+    /// slots wasted by padding partial batches to the artifact batch size
+    pub padded_slots: AtomicU64,
+    /// truncation-table online corrections
+    pub bumps: AtomicU64,
+    pub total_latency_us: AtomicU64,
+    lat_hist: [AtomicU64; 8],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn observe_latency(&self, secs: f64) {
+        let us = (secs * 1e6) as u64;
+        self.total_latency_us.fetch_add(us, Ordering::Relaxed);
+        for (i, &ub) in LAT_BUCKETS_US.iter().enumerate() {
+            if us <= ub {
+                self.lat_hist[i].fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.responses.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.total_latency_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate latency quantile from the histogram.
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let total: u64 =
+            self.lat_hist.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.lat_hist.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return LAT_BUCKETS_US[i];
+            }
+        }
+        u64::MAX
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "req={} resp={} fail={} batches={} pjrt={} native={} pad={} \
+             bumps={} mean_lat={:.0}us p90<={}us",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.failures.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.pjrt_execs.load(Ordering::Relaxed),
+            self.native_execs.load(Ordering::Relaxed),
+            self.padded_slots.load(Ordering::Relaxed),
+            self.bumps.load(Ordering::Relaxed),
+            self.mean_latency_us(),
+            match self.latency_quantile_us(0.9) {
+                u64::MAX => 999_999_999, // top (unbounded) bucket
+                v => v,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn latency_accounting() {
+        let m = Metrics::new();
+        m.responses.store(2, Ordering::Relaxed);
+        m.observe_latency(100e-6);
+        m.observe_latency(300e-6);
+        assert!((m.mean_latency_us() - 200.0).abs() < 1.0);
+        assert!(m.latency_quantile_us(0.5) <= 500);
+        assert!(m.latency_quantile_us(1.0) >= 250);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.latency_quantile_us(0.9), 0);
+        assert!(m.summary().contains("req=0"));
+    }
+}

@@ -1,0 +1,18 @@
+//! L3: the optimization-layer serving coordinator.
+//!
+//! The paper's truncation theory (§4.3) becomes a serving policy here:
+//! requests carry a tolerance; the router maps it to a compiled iteration
+//! count via a calibrated [`truncation::TruncationTable`]; the
+//! [`batcher::Batcher`] groups compatible requests; workers execute the
+//! AOT PJRT artifacts (or the native engine as fallback/oracle).
+pub mod batcher;
+pub mod messages;
+pub mod metrics;
+pub mod server;
+pub mod truncation;
+
+pub use batcher::{Batch, Batcher};
+pub use messages::{Failure, Reply, Request, Response};
+pub use metrics::Metrics;
+pub use server::{Config, Coordinator, CoordinatorBuilder, RegisteredLayer};
+pub use truncation::TruncationTable;

@@ -1,0 +1,617 @@
+//! The optimization-layer server: router → dynamic batcher → worker pool.
+//!
+//! Topology (std threads; tokio is unavailable offline and the workload is
+//! CPU-bound anyway):
+//!
+//!   clients ──tx──▶ dispatcher ──(round-robin)──▶ worker 0..W ──▶ replies
+//!                     │ routes tol→k (truncation table)
+//!!                    │ batches per (layer, k), deadline-flushed
+//!
+//! Each worker owns its own PJRT [`Engine`] (the xla handles are not Send,
+//! so engines are constructed *inside* the worker thread) and falls back
+//! to the native Alt-Diff solver for layers without compiled artifacts.
+
+use super::batcher::{Batch, Batcher};
+use super::messages::{Failure, Reply, Request, Response};
+use super::metrics::Metrics;
+use super::truncation::TruncationTable;
+use crate::altdiff::{DenseAltDiff, Options, Param};
+use crate::error::{AltDiffError, Result};
+use crate::prob::Qp;
+use crate::runtime::Engine;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A layer registered with the server (immutable after startup, shared
+/// across workers).
+pub struct RegisteredLayer {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    pub p: usize,
+    pub rho: f64,
+    /// native engine (fallback + calibration + parity checks)
+    pub solver: DenseAltDiff,
+    /// artifact inputs, precomputed once at registration (f32 contract)
+    pub hinv_f32: Vec<f32>,
+    pub a_f32: Vec<f32>,
+    pub g_f32: Vec<f32>,
+    /// tol → k router table (Mutex: workers bump it online)
+    pub table: Mutex<TruncationTable>,
+    /// batch sizes available in the compiled family (empty → native only)
+    pub batches: Vec<usize>,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub batch_deadline: Duration,
+    /// artifact directory; None → native backend only
+    pub artifacts: Option<PathBuf>,
+    /// calibration tolerances for new layers
+    pub calib_tols: Vec<f64>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            workers: 2,
+            max_batch: 8,
+            batch_deadline: Duration::from_millis(2),
+            artifacts: None,
+            calib_tols: vec![1e-1, 1e-2, 1e-3, 1e-4],
+        }
+    }
+}
+
+enum DispatchMsg {
+    Req(Request),
+    Shutdown,
+}
+
+enum WorkerMsg {
+    Work(Batch),
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: Sender<DispatchMsg>,
+    reply_rx: Receiver<Reply>,
+    pub metrics: Arc<Metrics>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    ready: Arc<std::sync::atomic::AtomicUsize>,
+    n_workers: usize,
+    next_id: u64,
+}
+
+/// Builder: register layers, then start.
+pub struct CoordinatorBuilder {
+    config: Config,
+    layers: BTreeMap<String, Arc<RegisteredLayer>>,
+    ladder: Vec<usize>,
+}
+
+impl CoordinatorBuilder {
+    pub fn new(config: Config) -> Self {
+        CoordinatorBuilder {
+            config,
+            layers: BTreeMap::new(),
+            // must match python/compile/aot.py ITERS
+            ladder: vec![10, 20, 40, 80],
+        }
+    }
+
+    /// Override the artifact iteration ladder (must match the manifest).
+    pub fn ladder(mut self, ladder: Vec<usize>) -> Self {
+        self.ladder = ladder;
+        self
+    }
+
+    /// Register a dense QP layer: factors H, precomputes the f32 artifact
+    /// inputs, and calibrates the truncation table on the layer's own
+    /// registered parameters.
+    pub fn register(mut self, name: &str, qp: Qp, rho: f64) -> Result<Self> {
+        let n = qp.n();
+        let m = qp.m_ineq();
+        let p = qp.p_eq();
+        let solver = DenseAltDiff::new(qp, rho)?;
+        let hinv = solver.hinv();
+        // calibration trace on the registered θ
+        let sol = solver.solve(&Options {
+            tol: 1e-9,
+            max_iter: *self.ladder.last().unwrap_or(&80) * 4,
+            jacobian: None,
+            trace: true,
+            ..Default::default()
+        });
+        let trace: Vec<f64> =
+            sol.trace.iter().map(|t| t.step_rel).collect();
+        let table = TruncationTable::calibrate(
+            &self.ladder,
+            &trace,
+            &self.config.calib_tols,
+        );
+        // compiled family available?
+        let batches = match &self.config.artifacts {
+            Some(dir) => match crate::runtime::Manifest::load(dir) {
+                Ok(man) => {
+                    let mut bs: Vec<usize> = man
+                        .variants
+                        .iter()
+                        .filter(|v| v.n == n && v.m == m && v.p == p)
+                        .map(|v| v.batch)
+                        .collect();
+                    bs.sort_unstable();
+                    bs.dedup();
+                    bs
+                }
+                Err(_) => vec![],
+            },
+            None => vec![],
+        };
+        let a_f32 = solver.qp.a.to_f32();
+        let g_f32 = solver.qp.g.to_f32();
+        let layer = RegisteredLayer {
+            name: name.to_string(),
+            n,
+            m,
+            p,
+            rho,
+            hinv_f32: hinv.to_f32(),
+            a_f32,
+            g_f32,
+            solver,
+            table: Mutex::new(table),
+            batches,
+        };
+        self.layers.insert(name.to_string(), Arc::new(layer));
+        Ok(self)
+    }
+
+    /// Start dispatcher + workers.
+    pub fn start(self) -> Coordinator {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, dispatch_rx) = channel::<DispatchMsg>();
+        let (reply_tx, reply_rx) = channel::<Reply>();
+
+        // worker channels
+        let ready = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let mut worker_txs = Vec::new();
+        let mut workers = Vec::new();
+        let n_workers = self.config.workers.max(1);
+        for wid in 0..n_workers {
+            let (wtx, wrx) = channel::<WorkerMsg>();
+            worker_txs.push(wtx);
+            let layers = self.layers.clone();
+            let reply_tx = reply_tx.clone();
+            let metrics = metrics.clone();
+            let artifacts = self.config.artifacts.clone();
+            let ready = ready.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("altdiff-worker-{wid}"))
+                    .spawn(move || {
+                        worker_loop(
+                            wrx, layers, reply_tx, metrics, artifacts,
+                            ready,
+                        )
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        // dispatcher
+        let layers = self.layers.clone();
+        let metrics_d = metrics.clone();
+        let config = self.config.clone();
+        let reply_tx_d = reply_tx;
+        let dispatcher = std::thread::Builder::new()
+            .name("altdiff-dispatcher".into())
+            .spawn(move || {
+                dispatcher_loop(
+                    dispatch_rx,
+                    worker_txs,
+                    layers,
+                    config,
+                    metrics_d,
+                    reply_tx_d,
+                )
+            })
+            .expect("spawn dispatcher");
+
+        Coordinator {
+            tx,
+            reply_rx,
+            metrics,
+            dispatcher: Some(dispatcher),
+            workers,
+            ready,
+            n_workers,
+            next_id: 0,
+        }
+    }
+}
+
+fn dispatcher_loop(
+    rx: Receiver<DispatchMsg>,
+    worker_txs: Vec<Sender<WorkerMsg>>,
+    layers: BTreeMap<String, Arc<RegisteredLayer>>,
+    config: Config,
+    metrics: Arc<Metrics>,
+    reply_tx: Sender<Reply>,
+) {
+    let mut batcher = Batcher::new(config.max_batch, config.batch_deadline);
+    let mut rr = 0usize;
+    let send_batch = |b: Batch, rr: &mut usize| {
+        metrics
+            .batches
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let t = &worker_txs[*rr % worker_txs.len()];
+        *rr += 1;
+        let _ = t.send(WorkerMsg::Work(b));
+    };
+    let mut shutdown = false;
+    'outer: loop {
+        // sleep until next deadline or new message
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        // block for the first message, then DRAIN the burst: batches only
+        // form if concurrent arrivals are routed before dispatching (perf:
+        // this took the serve bench from batches-of-1 to full batches).
+        let mut msgs: Vec<DispatchMsg> = Vec::new();
+        match rx.recv_timeout(timeout) {
+            Ok(m) => {
+                msgs.push(m);
+                while let Ok(m) = rx.try_recv() {
+                    msgs.push(m);
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                break 'outer;
+            }
+        }
+        for msg in msgs {
+            match msg {
+                DispatchMsg::Req(req) => {
+                    metrics
+                        .requests
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    match layers.get(&req.layer) {
+                        None => {
+                            metrics.failures.fetch_add(
+                                1,
+                                std::sync::atomic::Ordering::Relaxed,
+                            );
+                            let _ = reply_tx.send(Reply::Err(Failure {
+                                id: req.id,
+                                error: format!(
+                                    "unknown layer '{}'",
+                                    req.layer
+                                ),
+                            }));
+                        }
+                        Some(layer) => {
+                            let k =
+                                layer.table.lock().unwrap().k_for(req.tol);
+                            let lname = req.layer.clone();
+                            if let Some(b) = batcher.push(&lname, k, req) {
+                                send_batch(b, &mut rr);
+                            }
+                        }
+                    }
+                }
+                DispatchMsg::Shutdown => {
+                    shutdown = true;
+                }
+            }
+        }
+        for b in batcher.flush_expired(Instant::now()) {
+            send_batch(b, &mut rr);
+        }
+        if shutdown {
+            break;
+        }
+    }
+    for b in batcher.flush_all() {
+        send_batch(b, &mut rr);
+    }
+    for t in &worker_txs {
+        let _ = t.send(WorkerMsg::Shutdown);
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<WorkerMsg>,
+    layers: BTreeMap<String, Arc<RegisteredLayer>>,
+    reply_tx: Sender<Reply>,
+    metrics: Arc<Metrics>,
+    artifacts: Option<PathBuf>,
+    ready: Arc<std::sync::atomic::AtomicUsize>,
+) {
+    // PJRT engine is constructed inside the worker thread (not Send).
+    let mut engine: Option<Engine> = artifacts
+        .as_deref()
+        .and_then(|dir| Engine::new(dir).ok());
+    // Eagerly compile the variants matching registered layer sizes so the
+    // first request doesn't pay XLA compile latency (perf: this cut the
+    // serve example's max latency from ~3.6s to the steady-state ms range).
+    if let Some(eng) = engine.as_mut() {
+        let names: Vec<String> = eng
+            .manifest
+            .variants
+            .iter()
+            .filter(|v| {
+                layers
+                    .values()
+                    .any(|l| l.n == v.n && l.m == v.m && l.p == v.p)
+            })
+            .map(|v| v.name.clone())
+            .collect();
+        for name in names {
+            let _ = eng.compile(&name);
+        }
+    }
+    ready.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    while let Ok(WorkerMsg::Work(batch)) = rx.recv() {
+        let layer = match layers.get(&batch.layer) {
+            Some(l) => l.clone(),
+            None => continue,
+        };
+        let replies =
+            execute_batch(&mut engine, &layer, &batch, &metrics);
+        for r in replies {
+            match &r {
+                Reply::Ok(resp) => {
+                    metrics.responses.fetch_add(
+                        1,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                    metrics.observe_latency(resp.latency);
+                }
+                Reply::Err(_) => {
+                    metrics.failures.fetch_add(
+                        1,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                }
+            }
+            let _ = reply_tx.send(r);
+        }
+    }
+}
+
+/// Execute one batch on the best available backend.
+fn execute_batch(
+    engine: &mut Option<Engine>,
+    layer: &RegisteredLayer,
+    batch: &Batch,
+    metrics: &Metrics,
+) -> Vec<Reply> {
+    let t0 = Instant::now();
+    let reqs = &batch.requests;
+    // PJRT path: pick the smallest compiled batch size >= len, pad.
+    if let Some(eng) = engine.as_mut() {
+        if let Some(&bsz) = layer.batches.iter().find(|&&b| b >= reqs.len())
+        {
+            match execute_pjrt(eng, layer, batch, bsz) {
+                Ok(mut replies) => {
+                    metrics.pjrt_execs.fetch_add(
+                        1,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                    metrics.padded_slots.fetch_add(
+                        (bsz - reqs.len()) as u64,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                    let lat = t0.elapsed().as_secs_f64();
+                    for r in replies.iter_mut() {
+                        if let Reply::Ok(resp) = r {
+                            resp.latency = lat
+                                + resp.latency; // queue time added below
+                        }
+                    }
+                    return replies;
+                }
+                Err(e) => {
+                    // fall through to native; record the failure mode
+                    let _ = e;
+                }
+            }
+        }
+    }
+    // Native fallback.
+    metrics
+        .native_execs
+        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    reqs.iter()
+        .map(|req| {
+            let opts = Options {
+                tol: 0.0, // run exactly k iterations (artifact parity)
+                max_iter: batch.k,
+                jacobian: Some(Param::B),
+                rho: layer.rho,
+                trace: false,
+            };
+            let sol = layer.solver.solve_with(
+                Some(&req.q),
+                Some(&req.b),
+                Some(&req.h),
+                &opts,
+            );
+            let (prim, _) = layer.solver.qp.feasibility(&sol.x);
+            Reply::Ok(Response {
+                id: req.id,
+                x: sol.x,
+                jx: sol.jacobian.map(|j| j.data).unwrap_or_default(),
+                prim_residual: prim,
+                k_used: batch.k,
+                batch_size: reqs.len(),
+                latency: req.submitted.elapsed().as_secs_f64(),
+                backend: "native",
+            })
+        })
+        .collect()
+}
+
+fn execute_pjrt(
+    eng: &mut Engine,
+    layer: &RegisteredLayer,
+    batch: &Batch,
+    bsz: usize,
+) -> std::result::Result<Vec<Reply>, AltDiffError> {
+    let reqs = &batch.requests;
+    let (n, m, p) = (layer.n, layer.m, layer.p);
+    let name = format!(
+        "qp_n{}_m{}_p{}_k{}_b{}",
+        n, m, p, batch.k, bsz
+    );
+    // pad by repeating the last request's θ
+    let mut q = Vec::with_capacity(bsz * n);
+    let mut b = Vec::with_capacity(bsz * p);
+    let mut h = Vec::with_capacity(bsz * m);
+    for i in 0..bsz {
+        let r = &reqs[i.min(reqs.len() - 1)];
+        q.extend(r.q.iter().map(|&v| v as f32));
+        b.extend(r.b.iter().map(|&v| v as f32));
+        h.extend(r.h.iter().map(|&v| v as f32));
+    }
+    let out = eng.execute(
+        &name,
+        &layer.hinv_f32,
+        &layer.a_f32,
+        &layer.g_f32,
+        &q,
+        &b,
+        &h,
+    )?;
+    let mut replies = Vec::with_capacity(reqs.len());
+    for (i, req) in reqs.iter().enumerate() {
+        let x: Vec<f64> =
+            out.x[i * n..(i + 1) * n].iter().map(|&v| v as f64).collect();
+        let jx: Vec<f64> = out.jx[i * n * p..(i + 1) * n * p]
+            .iter()
+            .map(|&v| v as f64)
+            .collect();
+        let prim = out.prim[i] as f64;
+        // online truncation correction (Thm 4.3 in production): if the
+        // executable reports a residual above the requested tolerance,
+        // future requests at this tolerance get the next rung.
+        if out.dual[i] as f64 > req.tol * 10.0 {
+            layer.table.lock().unwrap().bump(req.tol);
+        }
+        replies.push(Reply::Ok(Response {
+            id: req.id,
+            x,
+            jx,
+            prim_residual: prim,
+            k_used: batch.k,
+            batch_size: reqs.len(),
+            latency: req.submitted.elapsed().as_secs_f64(),
+            backend: "pjrt",
+        }));
+    }
+    Ok(replies)
+}
+
+impl Coordinator {
+    pub fn builder(config: Config) -> CoordinatorBuilder {
+        CoordinatorBuilder::new(config)
+    }
+
+    /// Block until every worker finished warmup (compiled its artifact
+    /// set). Serving benchmarks call this so startup cost is not billed
+    /// to request latency.
+    pub fn wait_ready(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while self.ready.load(std::sync::atomic::Ordering::SeqCst)
+            < self.n_workers
+        {
+            if t0.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        true
+    }
+
+    /// Submit a request; returns its id. Replies arrive on [`Self::recv`].
+    pub fn submit(
+        &mut self,
+        layer: &str,
+        q: Vec<f64>,
+        b: Vec<f64>,
+        h: Vec<f64>,
+        tol: f64,
+    ) -> u64 {
+        self.next_id += 1;
+        let id = self.next_id;
+        let _ = self.tx.send(DispatchMsg::Req(Request {
+            id,
+            layer: layer.to_string(),
+            q,
+            b,
+            h,
+            tol,
+            submitted: Instant::now(),
+        }));
+        id
+    }
+
+    /// Blocking receive of the next reply.
+    pub fn recv(&self) -> Option<Reply> {
+        self.reply_rx.recv().ok()
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Option<Reply> {
+        self.reply_rx.recv_timeout(d).ok()
+    }
+
+    /// Submit many, wait for all (convenience for examples/benches).
+    pub fn run_all(
+        &mut self,
+        layer: &str,
+        thetas: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)>,
+        tol: f64,
+    ) -> Vec<Reply> {
+        let count = thetas.len();
+        for (q, b, h) in thetas {
+            self.submit(layer, q, b, h, tol);
+        }
+        let mut out = Vec::with_capacity(count);
+        while out.len() < count {
+            match self.recv_timeout(Duration::from_secs(60)) {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out.sort_by_key(|r| r.id());
+        out
+    }
+
+    /// Graceful shutdown (also runs on Drop).
+    pub fn shutdown(&mut self) {
+        let _ = self.tx.send(DispatchMsg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

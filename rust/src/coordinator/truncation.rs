@@ -1,0 +1,169 @@
+//! Truncation policy: tolerance → iteration count.
+//!
+//! The paper's §4.3 result (gradient error = O(iterate error), Thm 4.3)
+//! makes truncation safe; serving makes it *discrete*: compiled variants
+//! exist for a ladder of iteration counts k, so the router needs a
+//! calibrated map tol → smallest k whose expected relative step falls
+//! below tol.
+//!
+//! Calibration: run the native engine on a representative instance of the
+//! registered layer, record the first iteration at which the truncation
+//! criterion ‖x_{k+1}−x_k‖/max(‖x_k‖,1) crosses each tolerance, then snap
+//! up to the artifact ladder. The table self-corrects online: if an
+//! executed batch reports a dual residual above the requested tolerance,
+//! the entry for that tolerance is bumped to the next rung.
+
+use std::collections::BTreeMap;
+
+/// Calibrated tol → k table over a fixed k-ladder.
+#[derive(Clone, Debug)]
+pub struct TruncationTable {
+    /// ascending iteration ladder available as compiled artifacts
+    ladder: Vec<usize>,
+    /// map from tolerance (as sortable bits, descending tol) to chosen k
+    entries: BTreeMap<u64, usize>,
+}
+
+fn tol_key(tol: f64) -> u64 {
+    // total-order key for positive floats
+    tol.to_bits()
+}
+
+impl TruncationTable {
+    /// Build from a convergence trace: `trace[i]` = relative step at
+    /// iteration i (from `altdiff::Solution::trace`).
+    pub fn calibrate(ladder: &[usize], trace: &[f64], tols: &[f64]) -> Self {
+        assert!(!ladder.is_empty(), "empty artifact ladder");
+        let mut ladder = ladder.to_vec();
+        ladder.sort_unstable();
+        let mut entries = BTreeMap::new();
+        for &tol in tols {
+            // first iteration where the criterion holds
+            let needed = trace
+                .iter()
+                .position(|&s| s < tol)
+                .map(|i| i + 1)
+                .unwrap_or(*ladder.last().unwrap());
+            let k = *ladder
+                .iter()
+                .find(|&&k| k >= needed)
+                .unwrap_or(ladder.last().unwrap());
+            entries.insert(tol_key(tol), k);
+        }
+        TruncationTable { ladder, entries }
+    }
+
+    /// Uncalibrated fallback: everything maps to the largest k.
+    pub fn conservative(ladder: &[usize]) -> Self {
+        let mut ladder = ladder.to_vec();
+        ladder.sort_unstable();
+        TruncationTable { ladder, entries: BTreeMap::new() }
+    }
+
+    /// Iterations to run for a requested tolerance: the calibrated entry
+    /// for the tightest calibrated tolerance ≤ requested, else max rung.
+    pub fn k_for(&self, tol: f64) -> usize {
+        // exact entry
+        if let Some(&k) = self.entries.get(&tol_key(tol)) {
+            return k;
+        }
+        // tightest calibrated tolerance that is <= requested tol is safe
+        // (more iterations than strictly needed, never fewer).
+        let mut best: Option<usize> = None;
+        let mut best_tol = 0.0f64;
+        for (&key, &k) in &self.entries {
+            let t = f64::from_bits(key);
+            if t <= tol && t > best_tol {
+                best_tol = t;
+                best = Some(k);
+            }
+        }
+        best.unwrap_or(*self.ladder.last().unwrap())
+    }
+
+    /// Online correction: the executed batch at tolerance `tol` reported a
+    /// residual above target → move that tolerance one rung up the ladder.
+    pub fn bump(&mut self, tol: f64) {
+        let cur = self.k_for(tol);
+        let next = self
+            .ladder
+            .iter()
+            .find(|&&k| k > cur)
+            .copied()
+            .unwrap_or(cur);
+        self.entries.insert(tol_key(tol), next);
+    }
+
+    pub fn ladder(&self) -> &[usize] {
+        &self.ladder
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geometric_trace(len: usize, rate: f64) -> Vec<f64> {
+        (0..len).map(|i| rate.powi(i as i32)).collect()
+    }
+
+    #[test]
+    fn calibrate_monotone_in_tol() {
+        // step shrinks by 0.7 per iter: tighter tol → larger k
+        let trace = geometric_trace(100, 0.7);
+        let t = TruncationTable::calibrate(
+            &[10, 20, 40, 80],
+            &trace,
+            &[1e-1, 1e-2, 1e-3, 1e-6],
+        );
+        let ks: Vec<usize> =
+            [1e-1, 1e-2, 1e-3, 1e-6].iter().map(|&x| t.k_for(x)).collect();
+        assert!(ks[0] <= ks[1] && ks[1] <= ks[2] && ks[2] <= ks[3], "{ks:?}");
+        assert_eq!(ks[0], 10); // 0.7^7 < 0.1 → needs 8 iters → rung 10
+        assert_eq!(ks[3], 40); // 0.7^39 ~ 9e-7 → rung 40
+    }
+
+    #[test]
+    fn uncalibrated_tol_uses_safe_entry() {
+        let trace = geometric_trace(100, 0.7);
+        let t = TruncationTable::calibrate(
+            &[10, 20, 40, 80],
+            &trace,
+            &[1e-2, 1e-4],
+        );
+        // 1e-3 not calibrated: must pick the 1e-4 entry (safe, tighter)
+        assert_eq!(t.k_for(1e-3), t.k_for(1e-4));
+        // 1e-1 not calibrated, nothing tighter→ k_for(1e-2) is <= tol? 1e-2<=1e-1 yes
+        assert_eq!(t.k_for(1e-1), t.k_for(1e-2));
+    }
+
+    #[test]
+    fn never_converging_trace_maps_to_max() {
+        let trace = vec![1.0; 50];
+        let t =
+            TruncationTable::calibrate(&[10, 20, 40], &trace, &[1e-3]);
+        assert_eq!(t.k_for(1e-3), 40);
+    }
+
+    #[test]
+    fn bump_moves_up_ladder_and_saturates() {
+        let trace = geometric_trace(100, 0.5);
+        let mut t =
+            TruncationTable::calibrate(&[10, 20, 40], &trace, &[1e-2]);
+        let k0 = t.k_for(1e-2);
+        t.bump(1e-2);
+        let k1 = t.k_for(1e-2);
+        assert!(k1 > k0);
+        t.bump(1e-2);
+        t.bump(1e-2);
+        t.bump(1e-2);
+        assert_eq!(t.k_for(1e-2), 40); // saturates at top rung
+    }
+
+    #[test]
+    fn conservative_always_max() {
+        let t = TruncationTable::conservative(&[10, 80, 40]);
+        assert_eq!(t.k_for(1e-1), 80);
+        assert_eq!(t.k_for(1e-9), 80);
+    }
+}

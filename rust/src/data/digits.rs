@@ -1,0 +1,155 @@
+//! Procedurally rendered digit images (MNIST substitute — DESIGN.md §6).
+//!
+//! 16×16 seven-segment-style digits with random per-sample translation,
+//! thickness jitter and pixel noise. Harder than it sounds at high noise;
+//! crucially it exercises the identical training pipeline as the paper's
+//! Table 6: feature net → optimization layer → softmax/NLL.
+
+use crate::util::rng::Pcg64;
+
+pub const IMG: usize = 16;
+pub const NCLASS: usize = 10;
+
+/// segments: a b c d e f g  (standard seven-segment labeling)
+///    aaaa
+///   f    b
+///   f    b
+///    gggg
+///   e    c
+///   e    c
+///    dddd
+const SEGMENTS: [[bool; 7]; 10] = [
+    [true, true, true, true, true, true, false],    // 0
+    [false, true, true, false, false, false, false], // 1
+    [true, true, false, true, true, false, true],   // 2
+    [true, true, true, true, false, false, true],   // 3
+    [false, true, true, false, false, true, true],  // 4
+    [true, false, true, true, false, true, true],   // 5
+    [true, false, true, true, true, true, true],    // 6
+    [true, true, true, false, false, false, false], // 7
+    [true, true, true, true, true, true, true],     // 8
+    [true, true, true, true, false, true, true],    // 9
+];
+
+/// One labeled image.
+#[derive(Clone)]
+pub struct DigitSample {
+    pub pixels: Vec<f64>, // IMG*IMG in [0,1]
+    pub label: usize,
+}
+
+/// Dataset generator.
+pub struct Digits;
+
+impl Digits {
+    /// Render one digit with jitter controlled by `noise` ∈ [0, 1].
+    pub fn render(label: usize, noise: f64, rng: &mut Pcg64) -> DigitSample {
+        let mut px = vec![0.0f64; IMG * IMG];
+        let segs = SEGMENTS[label % 10];
+        // glyph box: rows 2..14, cols 4..12, with ±1 translation
+        let dy = rng.below(3) as isize - 1;
+        let dx = rng.below(3) as isize - 1;
+        let mut set = |r: isize, c: isize| {
+            let r = r + dy;
+            let c = c + dx;
+            if r >= 0 && r < IMG as isize && c >= 0 && c < IMG as isize {
+                px[r as usize * IMG + c as usize] = 1.0;
+            }
+        };
+        let (top, mid, bot) = (2isize, 8isize, 14isize);
+        let (left, right) = (4isize, 11isize);
+        if segs[0] {
+            for c in left..=right {
+                set(top, c);
+            }
+        }
+        if segs[6] {
+            for c in left..=right {
+                set(mid, c);
+            }
+        }
+        if segs[3] {
+            for c in left..=right {
+                set(bot, c);
+            }
+        }
+        if segs[5] {
+            for r in top..=mid {
+                set(r, left);
+            }
+        }
+        if segs[4] {
+            for r in mid..=bot {
+                set(r, left);
+            }
+        }
+        if segs[1] {
+            for r in top..=mid {
+                set(r, right);
+            }
+        }
+        if segs[2] {
+            for r in mid..=bot {
+                set(r, right);
+            }
+        }
+        // noise: flip-ish additive
+        for v in px.iter_mut() {
+            let u = rng.normal() * 0.25 * noise;
+            *v = (*v + u).clamp(0.0, 1.0);
+        }
+        DigitSample { pixels: px, label }
+    }
+
+    /// Balanced dataset of `count` samples.
+    pub fn dataset(count: usize, noise: f64, seed: u64) -> Vec<DigitSample> {
+        let mut rng = Pcg64::new(seed);
+        (0..count)
+            .map(|i| Self::render(i % NCLASS, noise, &mut rng))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_are_in_range_and_labeled() {
+        let ds = Digits::dataset(50, 0.5, 1);
+        assert_eq!(ds.len(), 50);
+        for (i, s) in ds.iter().enumerate() {
+            assert_eq!(s.label, i % 10);
+            assert_eq!(s.pixels.len(), IMG * IMG);
+            assert!(s.pixels.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn digits_are_distinguishable_without_noise() {
+        let mut rng = Pcg64::new(2);
+        let one = Digits::render(1, 0.0, &mut rng);
+        let mut rng = Pcg64::new(2);
+        let eight = Digits::render(8, 0.0, &mut rng);
+        // 8 lights every segment; 1 only the right column
+        let s1: f64 = one.pixels.iter().sum();
+        let s8: f64 = eight.pixels.iter().sum();
+        assert!(s8 > 2.0 * s1, "s1={s1} s8={s8}");
+    }
+
+    #[test]
+    fn noise_zero_is_binary() {
+        let mut rng = Pcg64::new(3);
+        let d = Digits::render(5, 0.0, &mut rng);
+        assert!(d.pixels.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Digits::dataset(10, 0.3, 9);
+        let b = Digits::dataset(10, 0.3, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.pixels, y.pixels);
+        }
+    }
+}

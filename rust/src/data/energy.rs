@@ -1,0 +1,117 @@
+//! Synthetic hourly electricity demand (the paper's §5.2 uses PJM data,
+//! which is access-gated; see DESIGN.md §6 for the substitution argument).
+//!
+//! Model: daily + weekly harmonics + AR(1) noise + occasional demand
+//! spikes, normalized into [0, 100] exactly as the paper describes.
+//! Samples are (72h history → next 24h) pairs for predict-then-optimize.
+
+use crate::util::rng::Pcg64;
+
+/// A generated hourly demand trace with windowing helpers.
+pub struct EnergyTrace {
+    /// hourly demand, normalized to [0, 100]
+    pub demand: Vec<f64>,
+}
+
+impl EnergyTrace {
+    /// Generate `hours` of demand.
+    pub fn generate(hours: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let mut raw = Vec::with_capacity(hours);
+        let mut ar = 0.0f64;
+        for t in 0..hours {
+            let h = t as f64;
+            // daily cycle (peak ~18:00), weekly dip on weekends
+            let daily = (2.0 * std::f64::consts::PI * (h - 10.0) / 24.0)
+                .sin()
+                .max(-0.6);
+            let weekly =
+                (2.0 * std::f64::consts::PI * h / (24.0 * 7.0)).sin();
+            ar = 0.85 * ar + 0.15 * rng.normal();
+            let spike = if rng.uniform() < 0.005 {
+                2.0 + rng.uniform() * 2.0
+            } else {
+                0.0
+            };
+            raw.push(3.0 + 1.6 * daily + 0.4 * weekly + 0.5 * ar + spike);
+        }
+        // normalize to [0, 100]
+        let mn = raw.iter().cloned().fold(f64::MAX, f64::min);
+        let mx = raw.iter().cloned().fold(f64::MIN, f64::max);
+        let demand = raw
+            .iter()
+            .map(|&v| 100.0 * (v - mn) / (mx - mn + 1e-12))
+            .collect();
+        EnergyTrace { demand }
+    }
+
+    /// (history 72h, target 24h) windows, stride 24 (one sample per day).
+    pub fn windows(&self) -> Vec<(Vec<f64>, Vec<f64>)> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start + 96 <= self.demand.len() {
+            out.push((
+                self.demand[start..start + 72].to_vec(),
+                self.demand[start + 72..start + 96].to_vec(),
+            ));
+            start += 24;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalized_range_and_length() {
+        let t = EnergyTrace::generate(24 * 30, 1);
+        assert_eq!(t.demand.len(), 720);
+        let mn = t.demand.iter().cloned().fold(f64::MAX, f64::min);
+        let mx = t.demand.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(mn >= 0.0 && mn < 1.0);
+        assert!(mx > 99.0 && mx <= 100.0);
+    }
+
+    #[test]
+    fn daily_periodicity_present() {
+        // autocorrelation at lag 24 should be clearly positive
+        let t = EnergyTrace::generate(24 * 60, 2);
+        let d = &t.demand;
+        let n = d.len() - 24;
+        let mean: f64 = d.iter().sum::<f64>() / d.len() as f64;
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..n {
+            num += (d[i] - mean) * (d[i + 24] - mean);
+        }
+        for v in d {
+            den += (v - mean) * (v - mean);
+        }
+        let rho = num / den;
+        assert!(rho > 0.4, "lag-24 autocorrelation {rho}");
+    }
+
+    #[test]
+    fn windows_shapes_and_alignment() {
+        let t = EnergyTrace::generate(24 * 10, 3);
+        let w = t.windows();
+        assert_eq!(w.len(), 7); // 10 days → windows starting day 0..6
+        for (hist, fut) in &w {
+            assert_eq!(hist.len(), 72);
+            assert_eq!(fut.len(), 24);
+        }
+        // second window starts 24h later
+        assert_eq!(w[1].0[0], t.demand[24]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = EnergyTrace::generate(100, 7).demand;
+        let b = EnergyTrace::generate(100, 7).demand;
+        assert_eq!(a, b);
+        let c = EnergyTrace::generate(100, 8).demand;
+        assert_ne!(a, c);
+    }
+}

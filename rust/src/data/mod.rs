@@ -1,0 +1,8 @@
+//! Synthetic datasets replacing the paper's gated/external data
+//! (substitutions documented in DESIGN.md §6).
+
+pub mod digits;
+pub mod energy;
+
+pub use digits::{DigitSample, Digits};
+pub use energy::EnergyTrace;

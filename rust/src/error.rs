@@ -1,0 +1,35 @@
+//! Error taxonomy for the whole stack.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum AltDiffError {
+    #[error("matrix is not SPD: pivot {pivot} has value {value}")]
+    NotSpd { pivot: usize, value: f64 },
+
+    #[error("singular matrix at pivot {pivot}")]
+    Singular { pivot: usize },
+
+    #[error("solver did not converge: {iters} iterations, residual {residual}")]
+    NoConvergence { iters: usize, residual: f64 },
+
+    #[error("problem is infeasible or unbounded: {0}")]
+    Infeasible(String),
+
+    #[error("dimension mismatch: {0}")]
+    DimMismatch(String),
+
+    #[error("artifact registry error: {0}")]
+    Registry(String),
+
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, AltDiffError>;

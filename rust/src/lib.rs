@@ -1,0 +1,24 @@
+//! # Alt-Diff: Alternating Differentiation for Optimization Layers
+//!
+//! Rust + JAX + Pallas reproduction of Sun et al., ICLR 2023.
+//!
+//! The crate is organized in layers (see DESIGN.md):
+//! - substrates: [`linalg`], [`sparse`], [`util`], [`prob`], [`data`]
+//! - the paper's algorithm: [`altdiff`] (+ comparators in [`baselines`])
+//! - end-to-end learning: [`nn`] (optimization layers inside networks)
+//! - serving: [`runtime`] (PJRT artifacts) + [`coordinator`] (router,
+//!   batcher, truncation policy)
+pub mod altdiff;
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod linalg;
+pub mod nn;
+pub mod prob;
+pub mod runtime;
+pub mod sparse;
+pub mod train;
+pub mod util;
+
+pub use error::{AltDiffError, Result};

@@ -1,0 +1,200 @@
+//! Blocked matrix kernels (the in-repo BLAS).
+//!
+//! `gemm` uses an i-k-j loop order with row-panel blocking: the inner loop
+//! is a contiguous axpy over a row of B, which the compiler auto-vectorizes
+//! well. This is the single hottest routine in the native engine (Hessian
+//! assembly AᵀA/GᵀG, Jacobian propagation, KKT factorizations) — see
+//! EXPERIMENTS.md §Perf for the before/after of the blocking.
+
+use super::dense::Mat;
+
+/// Tile edge for the k/j blocking. 64 keeps an A-panel (64x64 f64 = 32 KB)
+/// inside L1/L2 comfortably; measured best among {32, 64, 128} here.
+const KB: usize = 64;
+const JB: usize = 256;
+
+/// C = A @ B.
+pub fn gemm(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    gemm_acc(&mut c, 1.0, a, b);
+    c
+}
+
+/// C += alpha * A @ B (blocked i-k-j).
+pub fn gemm_acc(c: &mut Mat, alpha: f64, a: &Mat, b: &Mat) {
+    assert_eq!(a.cols, b.rows, "gemm dims");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let (n, k, m) = (a.rows, a.cols, b.cols);
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for jb in (0..m).step_by(JB) {
+            let jend = (jb + JB).min(m);
+            for i in 0..n {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * m + jb..i * m + jend];
+                for kk in kb..kend {
+                    let aik = alpha * arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * m + jb..kk * m + jend];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C = Aᵀ @ A (symmetric rank-k style; exploits symmetry: computes the
+/// upper triangle then mirrors). Used for the ρAᵀA/ρGᵀG Hessian terms.
+pub fn ata(a: &Mat) -> Mat {
+    let (r, n) = (a.rows, a.cols);
+    let mut c = Mat::zeros(n, n);
+    for kk in 0..r {
+        let row = &a.data[kk * n..(kk + 1) * n];
+        for i in 0..n {
+            let aik = row[i];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * n + i..(i + 1) * n];
+            let brow = &row[i..];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+    // mirror upper to lower
+    for i in 0..n {
+        for j in (i + 1)..n {
+            c.data[j * n + i] = c.data[i * n + j];
+        }
+    }
+    c
+}
+
+/// y = A @ x.
+pub fn gemv(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols, x.len(), "gemv dims");
+    let mut y = vec![0.0; a.rows];
+    gemv_acc(&mut y, 1.0, a, x);
+    y
+}
+
+/// y += alpha * A @ x (row-wise dot: contiguous per row).
+pub fn gemv_acc(y: &mut [f64], alpha: f64, a: &Mat, x: &[f64]) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    for i in 0..a.rows {
+        y[i] += alpha * super::dense::dot(a.row(i), x);
+    }
+}
+
+/// y = Aᵀ @ x without materializing the transpose (column axpys).
+pub fn gemv_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, x.len(), "gemv_t dims");
+    let mut y = vec![0.0; a.cols];
+    gemv_t_acc(&mut y, 1.0, a, x);
+    y
+}
+
+/// y += alpha * Aᵀ @ x.
+pub fn gemv_t_acc(y: &mut [f64], alpha: f64, a: &Mat, x: &[f64]) {
+    assert_eq!(a.rows, x.len());
+    assert_eq!(a.cols, y.len());
+    for i in 0..a.rows {
+        let s = alpha * x[i];
+        if s == 0.0 {
+            continue;
+        }
+        super::dense::axpy(y, s, a.row(i));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randmat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
+        Mat::from_vec(r, c, rng.normal_vec(r * c))
+    }
+
+    fn gemm_naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive_odd_sizes() {
+        let mut rng = Pcg64::new(1);
+        for &(n, k, m) in &[(3, 5, 7), (65, 64, 63), (130, 70, 129)] {
+            let a = randmat(n, k, &mut rng);
+            let b = randmat(k, m, &mut rng);
+            let c = gemm(&a, &b);
+            let cn = gemm_naive(&a, &b);
+            assert!(c.max_abs_diff(&cn) < 1e-10, "n={n} k={k} m={m}");
+        }
+    }
+
+    #[test]
+    fn gemm_identity() {
+        let mut rng = Pcg64::new(2);
+        let a = randmat(20, 20, &mut rng);
+        let c = gemm(&a, &Mat::eye(20));
+        assert!(c.max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn ata_matches_gemm() {
+        let mut rng = Pcg64::new(3);
+        let a = randmat(17, 23, &mut rng);
+        let direct = ata(&a);
+        let viag = gemm(&a.transpose(), &a);
+        assert!(direct.max_abs_diff(&viag) < 1e-10);
+    }
+
+    #[test]
+    fn gemv_and_t_match_gemm() {
+        let mut rng = Pcg64::new(4);
+        let a = randmat(9, 13, &mut rng);
+        let x = rng.normal_vec(13);
+        let z = rng.normal_vec(9);
+        let xm = Mat::from_vec(13, 1, x.clone());
+        let want = gemm(&a, &xm);
+        let got = gemv(&a, &x);
+        for i in 0..9 {
+            assert!((got[i] - want[(i, 0)]).abs() < 1e-12);
+        }
+        let wt = gemm(&a.transpose(), &Mat::from_vec(9, 1, z.clone()));
+        let gt = gemv_t(&a, &z);
+        for i in 0..13 {
+            assert!((gt[i] - wt[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gemm_acc_alpha() {
+        let mut rng = Pcg64::new(5);
+        let a = randmat(8, 8, &mut rng);
+        let b = randmat(8, 8, &mut rng);
+        let mut c = Mat::eye(8);
+        gemm_acc(&mut c, -2.0, &a, &b);
+        let mut want = gemm(&a, &b);
+        want.scale(-2.0);
+        want.axpy(1.0, &Mat::eye(8));
+        assert!(c.max_abs_diff(&want) < 1e-10);
+    }
+}

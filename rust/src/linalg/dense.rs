@@ -1,0 +1,337 @@
+//! Dense row-major matrix type and core operations.
+//!
+//! No external BLAS in this environment; `gemm`/`gemv` live in
+//! [`super::blas`] with blocked kernels. This module owns the storage
+//! type, constructors, and the small structural ops everything builds on.
+
+use std::fmt;
+
+/// Dense row-major `rows x cols` matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{}", self.rows, self.cols)?;
+        for i in 0..self.rows.min(6) {
+            let cols = self.cols.min(8);
+            let row: Vec<String> = (0..cols)
+                .map(|j| format!("{:9.4}", self[(i, j)]))
+                .collect();
+            writeln!(f, "  [{}{}]", row.join(", "),
+                if self.cols > 8 { ", ..." } else { "" })?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  ...")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Scaled diagonal matrix diag(d).
+    pub fn diag(d: &[f64]) -> Self {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] =
+                            self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// self += s * other (axpy on matrices).
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.axpy(1.0, other);
+        out
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.axpy(-1.0, other);
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Symmetrize in place: A <- (A + A^T)/2 (numerical hygiene for SPD).
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    /// Horizontal stack [self | other].
+    pub fn hstack(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Vertical stack [self; other].
+    pub fn vstack(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// Extract column j.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Set column j.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// f32 export (PJRT literals are f32 in the compiled family).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+}
+
+// ------------------------------------------------------------- vector ops
+
+/// Euclidean norm.
+pub fn norm2(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: measurably faster than the naive zip
+    // and deterministic (fixed association order).
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += s * x.
+#[inline]
+pub fn axpy(y: &mut [f64], s: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += s * xi;
+    }
+}
+
+/// Elementwise max(v, 0) — the ReLU slack projection (paper eq. 6).
+pub fn relu(v: &[f64]) -> Vec<f64> {
+    v.iter().map(|&x| x.max(0.0)).collect()
+}
+
+pub fn sub_vec(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+pub fn add_vec(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// Cosine similarity of two flattened arrays (paper's "cosine distance"
+/// metric reports this value; 1.0 = identical direction).
+pub fn cosine(a: &[f64], b: &[f64]) -> f64 {
+    let na = norm2(a);
+    let nb = norm2(b);
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot(a, b) / (na * nb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_eye() {
+        let e = Mat::eye(3);
+        assert_eq!(e[(0, 0)], 1.0);
+        assert_eq!(e[(0, 1)], 0.0);
+        assert_eq!(e.fro(), 3f64.sqrt());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_rows(&[&[1., 2., 3.], &[4., 5., 6.]]);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t[(2, 1)], 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn stack_ops() {
+        let a = Mat::eye(2);
+        let b = Mat::zeros(2, 2);
+        let h = a.hstack(&b);
+        assert_eq!((h.rows, h.cols), (2, 4));
+        let v = a.vstack(&b);
+        assert_eq!((v.rows, v.cols), (4, 2));
+        assert_eq!(v[(0, 0)], 1.0);
+        assert_eq!(v[(2, 0)], 0.0);
+    }
+
+    #[test]
+    fn vector_ops() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(dot(&a, &b), 35.0);
+        assert!((norm2(&a) - 55f64.sqrt()).abs() < 1e-12);
+        assert_eq!(relu(&[-1.0, 2.0]), vec![0.0, 2.0]);
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_matrix() {
+        let mut a = Mat::eye(2);
+        let b = Mat::eye(2);
+        a.axpy(2.0, &b);
+        assert_eq!(a[(0, 0)], 3.0);
+    }
+
+    #[test]
+    fn symmetrize() {
+        let mut m = Mat::from_rows(&[&[1., 2.], &[4., 1.]]);
+        m.symmetrize();
+        assert_eq!(m[(0, 1)], 3.0);
+        assert_eq!(m[(1, 0)], 3.0);
+    }
+
+    #[test]
+    fn col_ops() {
+        let mut m = Mat::zeros(3, 2);
+        m.set_col(1, &[1.0, 2.0, 3.0]);
+        assert_eq!(m.col(1), vec![1.0, 2.0, 3.0]);
+        assert_eq!(m.col(0), vec![0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,156 @@
+//! LU factorization with partial pivoting — for the *indefinite* systems
+//! the baselines need: the KKT matrix of OptNet-style implicit
+//! differentiation (eq. 25) and the IPM Newton systems are symmetric but
+//! indefinite, so Cholesky does not apply.
+
+use super::dense::Mat;
+use crate::error::AltDiffError;
+
+/// P A = L U with row-pivot permutation `perm` (perm[i] = original row).
+#[derive(Clone, Debug)]
+pub struct Lu {
+    pub lu: Mat,
+    pub perm: Vec<usize>,
+    pub sign: f64,
+}
+
+impl Lu {
+    pub fn factor(a: &Mat) -> Result<Lu, AltDiffError> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // pivot: max |a_ik| over i >= k
+            let mut piv = k;
+            let mut pmax = lu[(k, k)].abs();
+            for i in (k + 1)..n {
+                let v = lu[(i, k)].abs();
+                if v > pmax {
+                    pmax = v;
+                    piv = i;
+                }
+            }
+            if pmax < 1e-300 || !pmax.is_finite() {
+                return Err(AltDiffError::Singular { pivot: k });
+            }
+            if piv != k {
+                perm.swap(k, piv);
+                sign = -sign;
+                // swap rows k, piv
+                for j in 0..n {
+                    lu.data.swap(k * n + j, piv * n + j);
+                }
+            }
+            let pivval = lu[(k, k)];
+            let inv = 1.0 / pivval;
+            // split borrows: row k immutable, rows > k mutable
+            let (upper, lower) = lu.data.split_at_mut((k + 1) * n);
+            let rowk = &upper[k * n..k * n + n];
+            for i in (k + 1)..n {
+                let ri = &mut lower[(i - k - 1) * n..(i - k) * n];
+                let f = ri[k] * inv;
+                ri[k] = f;
+                if f != 0.0 {
+                    for j in (k + 1)..n {
+                        ri[j] -= f * rowk[j];
+                    }
+                }
+            }
+        }
+        Ok(Lu { lu, perm, sign })
+    }
+
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows;
+        debug_assert_eq!(b.len(), n);
+        // apply permutation
+        let mut x: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
+        // L y = Pb (unit diagonal)
+        for i in 1..n {
+            let row = &self.lu.data[i * n..i * n + i];
+            let mut s = x[i];
+            for (lij, xj) in row.iter().zip(x.iter()) {
+                s -= lij * xj;
+            }
+            x[i] = s;
+        }
+        // U x = y
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in (i + 1)..n {
+                s -= self.lu.data[i * n + j] * x[j];
+            }
+            x[i] = s / self.lu.data[i * n + i];
+        }
+        x
+    }
+
+    /// Solve A X = B for matrix B.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let bt = b.transpose();
+        let mut out_t = Mat::zeros(b.cols, b.rows);
+        for c in 0..b.cols {
+            let x = self.solve(bt.row(c));
+            out_t.row_mut(c).copy_from_slice(&x);
+        }
+        out_t.transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{gemm, gemv};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn solve_random_system() {
+        let mut rng = Pcg64::new(1);
+        let n = 25;
+        let a = Mat::from_vec(n, n, rng.normal_vec(n * n));
+        let xtrue = rng.normal_vec(n);
+        let b = gemv(&a, &xtrue);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve(&b);
+        for i in 0..n {
+            assert!((x[i] - xtrue[i]).abs() < 1e-8, "i={i}");
+        }
+    }
+
+    #[test]
+    fn solves_indefinite_kkt_like() {
+        // [[I, Aᵀ],[A, 0]] — indefinite, well-posed when A full row rank.
+        let mut rng = Pcg64::new(2);
+        let (n, p) = (10, 4);
+        let a = Mat::from_vec(p, n, rng.normal_vec(p * n));
+        let top = Mat::eye(n).hstack(&a.transpose());
+        let bot = a.hstack(&Mat::zeros(p, p));
+        let kkt = top.vstack(&bot);
+        let lu = Lu::factor(&kkt).unwrap();
+        let b = rng.normal_vec(n + p);
+        let x = lu.solve(&b);
+        let r = gemv(&kkt, &x);
+        for i in 0..(n + p) {
+            assert!((r[i] - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn rejects_singular() {
+        let a = Mat::from_rows(&[&[1., 2.], &[2., 4.]]);
+        assert!(Lu::factor(&a).is_err());
+    }
+
+    #[test]
+    fn solve_mat_consistency() {
+        let mut rng = Pcg64::new(3);
+        let a = Mat::from_vec(6, 6, rng.normal_vec(36));
+        let b = Mat::from_vec(6, 2, rng.normal_vec(12));
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve_mat(&b);
+        let rec = gemm(&a, &x);
+        assert!(rec.max_abs_diff(&b) < 1e-8);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense linear algebra substrate (no external BLAS/LAPACK).
+//!
+//! - [`dense`]: row-major `Mat`, vector ops.
+//! - [`blas`]: blocked gemm/gemv kernels (the native hot path).
+//! - [`chol`]: Cholesky for the SPD Alt-Diff Hessian.
+//! - [`lu`]: pivoted LU for the baselines' indefinite KKT systems.
+
+pub mod blas;
+pub mod chol;
+pub mod dense;
+pub mod lu;
+
+pub use blas::{ata, gemm, gemm_acc, gemv, gemv_acc, gemv_t, gemv_t_acc};
+pub use chol::Chol;
+pub use dense::{add_vec, axpy, cosine, dot, norm2, relu, sub_vec, Mat};
+pub use lu::Lu;

@@ -1,0 +1,166 @@
+//! `altdiff` — CLI entrypoint for the optimization-layer server and tools.
+//!
+//! Subcommands:
+//!   serve     run the coordinator on a synthetic trace and print metrics
+//!   solve     solve + differentiate one random dense QP layer
+//!   check     validate the artifact directory (manifest + compile)
+//!   info      print build/layer-family information
+
+use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::coordinator::{Config, Coordinator, Reply};
+use altdiff::prob::dense_qp;
+use altdiff::runtime::{Engine, Manifest};
+use altdiff::util::{Args, Pcg64};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_str("artifacts", "artifacts"))
+}
+
+fn cmd_info(args: &Args) {
+    println!(
+        "altdiff {} — Alt-Diff optimization-layer engine",
+        env!("CARGO_PKG_VERSION")
+    );
+    let dir = artifacts_dir(args);
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!(
+                "artifacts: {} variants in {}",
+                m.variants.len(),
+                dir.display()
+            );
+            for (n, mm, p) in m.sizes() {
+                let ks: Vec<String> = m
+                    .family(n, mm, p, 1)
+                    .iter()
+                    .map(|v| v.k.to_string())
+                    .collect();
+                println!(
+                    "  size (n={n}, m={mm}, p={p}): k ladder [{}]",
+                    ks.join(", ")
+                );
+            }
+        }
+        Err(e) => {
+            println!("artifacts: unavailable ({e}) — native backend only")
+        }
+    }
+}
+
+fn cmd_check(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let mut eng = Engine::new(&dir)?;
+    println!("platform: {}", eng.platform());
+    let t0 = Instant::now();
+    let n = eng.warmup()?;
+    println!(
+        "compiled {n} variants in {:.2}s — artifact directory OK",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) {
+    let n = args.get_usize("n", 100);
+    let m = args.get_usize("m", n / 2);
+    let p = args.get_usize("p", n / 5);
+    let tol = args.get_f64("tol", 1e-3);
+    let qp = dense_qp(n, m, p, args.get_usize("seed", 0) as u64);
+    let t0 = Instant::now();
+    let solver = DenseAltDiff::new(qp.clone(), args.get_f64("rho", 1.0))
+        .expect("register");
+    let t_reg = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let sol = solver.solve(&Options {
+        tol,
+        jacobian: Some(Param::B),
+        ..Default::default()
+    });
+    let t_solve = t0.elapsed().as_secs_f64();
+    let (eq, viol) = qp.feasibility(&sol.x);
+    println!("n={n} m={m} p={p} tol={tol:.0e}");
+    println!("register (factor H): {t_reg:.4}s");
+    println!("solve+diff: {t_solve:.4}s, {} iterations", sol.iters);
+    println!(
+        "objective {:.6}, ‖Ax−b‖ {eq:.2e}, viol {viol:.2e}",
+        qp.objective(&sol.x)
+    );
+    println!("jacobian ∂x/∂b: {}x{}", n, p);
+}
+
+fn cmd_serve(args: &Args) {
+    let nreq = args.get_usize("requests", 500);
+    let workers = args.get_usize("workers", 2);
+    let dir = artifacts_dir(args);
+    let artifacts = dir.join("manifest.tsv").exists().then_some(dir);
+    println!(
+        "serving with {} backend",
+        if artifacts.is_some() { "pjrt+native" } else { "native" }
+    );
+    let qp = dense_qp(16, 8, 4, 1);
+    let mut coord = Coordinator::builder(Config {
+        workers,
+        max_batch: args.get_usize("max-batch", 8),
+        batch_deadline: Duration::from_millis(
+            args.get_usize("deadline-ms", 2) as u64,
+        ),
+        artifacts,
+        ..Default::default()
+    })
+    .register("qp16", qp.clone(), 1.0)
+    .expect("register")
+    .start();
+    coord.wait_ready(Duration::from_secs(180));
+    let mut rng = Pcg64::new(0);
+    let t0 = Instant::now();
+    for _ in 0..nreq {
+        let s = 1.0 + 0.1 * rng.normal();
+        coord.submit(
+            "qp16",
+            qp.q.iter().map(|&v| v * s).collect(),
+            qp.b.clone(),
+            qp.h.clone(),
+            [1e-1, 1e-2, 1e-3][rng.below(3)],
+        );
+    }
+    let mut ok = 0;
+    for _ in 0..nreq {
+        match coord.recv_timeout(Duration::from_secs(60)) {
+            Some(Reply::Ok(_)) => ok += 1,
+            Some(Reply::Err(f)) => eprintln!("fail: {}", f.error),
+            None => break,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{ok}/{nreq} in {wall:.3}s → {:.0} req/s", ok as f64 / wall);
+    println!("{}", coord.metrics.summary());
+}
+
+fn main() {
+    let args = Args::parse();
+    let cmd = args
+        .positional()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("info");
+    match cmd {
+        "info" => cmd_info(&args),
+        "check" => {
+            if let Err(e) = cmd_check(&args) {
+                eprintln!("check failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        "solve" => cmd_solve(&args),
+        "serve" => cmd_serve(&args),
+        other => {
+            eprintln!("unknown command '{other}'");
+            eprintln!(
+                "usage: altdiff [info|check|solve|serve] [--key value]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Adam optimizer (Kingma & Ba, 2014) — the optimizer both end-to-end
+//! experiments in the paper use.
+
+/// Adam state for a flat list of parameter tensors.
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<Vec<f64>>,
+    v: Vec<Vec<f64>>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f64) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+
+    /// Apply one update to a list of (param, grad) pairs. The list's
+    /// length and per-tensor sizes must be stable across calls.
+    pub fn step(&mut self, params_grads: &mut [(&mut [f64], &[f64])]) {
+        if self.m.is_empty() {
+            for (p, _) in params_grads.iter() {
+                self.m.push(vec![0.0; p.len()]);
+                self.v.push(vec![0.0; p.len()]);
+            }
+        }
+        assert_eq!(self.m.len(), params_grads.len(), "param group changed");
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for (idx, (p, g)) in params_grads.iter_mut().enumerate() {
+            let m = &mut self.m[idx];
+            let v = &mut self.v[idx];
+            for i in 0..p.len() {
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
+                let mhat = m[i] / b1t;
+                let vhat = v[i] / b2t;
+                p[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // min (x-3)² — should converge to 3
+        let mut x = vec![0.0f64];
+        let mut opt = Adam::new(0.1);
+        for _ in 0..500 {
+            let g = vec![2.0 * (x[0] - 3.0)];
+            let mut pg: Vec<(&mut [f64], &[f64])> =
+                vec![(x.as_mut_slice(), g.as_slice())];
+            opt.step(&mut pg);
+        }
+        assert!((x[0] - 3.0).abs() < 1e-3, "x={}", x[0]);
+    }
+
+    #[test]
+    fn first_step_magnitude_is_lr() {
+        // Adam's first step is ~lr in the gradient direction.
+        let mut x = vec![10.0f64];
+        let mut opt = Adam::new(0.05);
+        let g = vec![123.0];
+        let mut pg: Vec<(&mut [f64], &[f64])> =
+            vec![(x.as_mut_slice(), g.as_slice())];
+        opt.step(&mut pg);
+        assert!((x[0] - (10.0 - 0.05)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,205 @@
+//! Dense layers with manual reverse-mode gradients.
+
+use crate::linalg::{gemv, gemv_t, Mat};
+use crate::util::rng::Pcg64;
+
+/// Fully-connected layer y = W x + b with cached input for backward.
+pub struct Linear {
+    pub w: Mat,
+    pub b: Vec<f64>,
+    pub gw: Mat,
+    pub gb: Vec<f64>,
+    last_x: Vec<f64>,
+}
+
+impl Linear {
+    /// He initialization.
+    pub fn new(inp: usize, out: usize, rng: &mut Pcg64) -> Self {
+        let scale = (2.0 / inp as f64).sqrt();
+        let data: Vec<f64> =
+            (0..out * inp).map(|_| rng.normal() * scale).collect();
+        Linear {
+            w: Mat::from_vec(out, inp, data),
+            b: vec![0.0; out],
+            gw: Mat::zeros(out, inp),
+            gb: vec![0.0; out],
+            last_x: vec![0.0; inp],
+        }
+    }
+
+    pub fn forward(&mut self, x: &[f64]) -> Vec<f64> {
+        self.last_x = x.to_vec();
+        let mut y = gemv(&self.w, x);
+        for (yi, bi) in y.iter_mut().zip(&self.b) {
+            *yi += bi;
+        }
+        y
+    }
+
+    /// Accumulate parameter grads; return dL/dx.
+    pub fn backward(&mut self, gy: &[f64]) -> Vec<f64> {
+        for i in 0..self.w.rows {
+            self.gb[i] += gy[i];
+            let row = self.gw.row_mut(i);
+            for j in 0..row.len() {
+                row[j] += gy[i] * self.last_x[j];
+            }
+        }
+        gemv_t(&self.w, gy)
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.gw.data.iter_mut().for_each(|v| *v = 0.0);
+        self.gb.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    pub fn params_grads(&mut self) -> Vec<(&mut [f64], &[f64])> {
+        vec![
+            (self.w.data.as_mut_slice(), self.gw.data.as_slice()),
+            (self.b.as_mut_slice(), self.gb.as_slice()),
+        ]
+    }
+}
+
+/// ReLU with cached mask.
+#[derive(Default)]
+pub struct Relu {
+    mask: Vec<bool>,
+}
+
+impl Relu {
+    pub fn forward(&mut self, x: &[f64]) -> Vec<f64> {
+        self.mask = x.iter().map(|&v| v > 0.0).collect();
+        x.iter().map(|&v| v.max(0.0)).collect()
+    }
+
+    pub fn backward(&self, gy: &[f64]) -> Vec<f64> {
+        gy.iter()
+            .zip(&self.mask)
+            .map(|(&g, &m)| if m { g } else { 0.0 })
+            .collect()
+    }
+}
+
+/// MLP: Linear→ReLU stack with a final Linear.
+pub struct Mlp {
+    pub layers: Vec<Linear>,
+    relus: Vec<Relu>,
+}
+
+impl Mlp {
+    /// dims = [in, h1, ..., out]
+    pub fn new(dims: &[usize], rng: &mut Pcg64) -> Self {
+        assert!(dims.len() >= 2);
+        let mut layers = Vec::new();
+        let mut relus = Vec::new();
+        for w in dims.windows(2) {
+            layers.push(Linear::new(w[0], w[1], rng));
+            relus.push(Relu::default());
+        }
+        relus.pop(); // no activation after the last layer
+        Mlp { layers, relus }
+    }
+
+    pub fn forward(&mut self, x: &[f64]) -> Vec<f64> {
+        let mut h = x.to_vec();
+        let nl = self.layers.len();
+        for i in 0..nl {
+            h = self.layers[i].forward(&h);
+            if i < self.relus.len() {
+                h = self.relus[i].forward(&h);
+            }
+        }
+        h
+    }
+
+    pub fn backward(&mut self, gy: &[f64]) -> Vec<f64> {
+        let mut g = gy.to_vec();
+        let nl = self.layers.len();
+        for i in (0..nl).rev() {
+            if i < self.relus.len() {
+                g = self.relus[i].backward(&g);
+            }
+            g = self.layers[i].backward(&g);
+        }
+        g
+    }
+
+    pub fn zero_grad(&mut self) {
+        for l in &mut self.layers {
+            l.zero_grad();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_forward_known_values() {
+        let mut rng = Pcg64::new(0);
+        let mut l = Linear::new(2, 2, &mut rng);
+        l.w = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        l.b = vec![0.5, -0.5];
+        let y = l.forward(&[1.0, 1.0]);
+        assert_eq!(y, vec![3.5, 6.5]);
+    }
+
+    #[test]
+    fn linear_gradcheck() {
+        let mut rng = Pcg64::new(1);
+        let mut l = Linear::new(3, 2, &mut rng);
+        let x = [0.3, -0.8, 0.5];
+        // L = sum(y); dL/dW_ij = x_j, dL/db = 1, dL/dx_j = sum_i W_ij
+        let _ = l.forward(&x);
+        let gx = l.backward(&[1.0, 1.0]);
+        for j in 0..3 {
+            assert!((l.gw[(0, j)] - x[j]).abs() < 1e-12);
+            let want = l.w[(0, j)] + l.w[(1, j)];
+            assert!((gx[j] - want).abs() < 1e-12);
+        }
+        assert_eq!(l.gb, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn mlp_gradcheck_fd() {
+        let mut rng = Pcg64::new(2);
+        let mut net = Mlp::new(&[4, 6, 3], &mut rng);
+        let x: Vec<f64> = rng.normal_vec(4);
+        // L = 0.5 sum y²
+        let y = net.forward(&x);
+        let gy: Vec<f64> = y.clone();
+        net.zero_grad();
+        let _ = net.backward(&gy);
+        // FD check on first layer's first weight
+        let eps = 1e-6;
+        let lossf = |net: &mut Mlp, x: &[f64]| -> f64 {
+            let y = net.forward(x);
+            0.5 * y.iter().map(|v| v * v).sum::<f64>()
+        };
+        for (i, j) in [(0usize, 0usize), (2, 3), (5, 1)] {
+            let saved = net.layers[0].w[(i, j)];
+            net.layers[0].w[(i, j)] = saved + eps;
+            let lp = lossf(&mut net, &x);
+            net.layers[0].w[(i, j)] = saved - eps;
+            let lm = lossf(&mut net, &x);
+            net.layers[0].w[(i, j)] = saved;
+            let fd = (lp - lm) / (2.0 * eps);
+            let got = net.layers[0].gw[(i, j)];
+            assert!(
+                (got - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "gw[{i},{j}]={got} fd={fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn relu_masks() {
+        let mut r = Relu::default();
+        let y = r.forward(&[-1.0, 2.0, 0.0]);
+        assert_eq!(y, vec![0.0, 2.0, 0.0]);
+        let g = r.backward(&[1.0, 1.0, 1.0]);
+        assert_eq!(g, vec![0.0, 1.0, 0.0]);
+    }
+}

@@ -1,0 +1,85 @@
+//! Loss functions with analytic gradients.
+
+/// Mean-squared-error ½Σ(pred−target)² (paper eq. 13 uses this form).
+/// Returns (loss, dL/dpred).
+pub fn mse_loss(pred: &[f64], target: &[f64]) -> (f64, Vec<f64>) {
+    assert_eq!(pred.len(), target.len());
+    let mut loss = 0.0;
+    let grad: Vec<f64> = pred
+        .iter()
+        .zip(target)
+        .map(|(&p, &t)| {
+            let d = p - t;
+            loss += 0.5 * d * d;
+            d
+        })
+        .collect();
+    (loss, grad)
+}
+
+/// Softmax + negative log likelihood for one example.
+/// Returns (loss, dL/dlogits).
+pub fn softmax_nll(logits: &[f64], label: usize) -> (f64, Vec<f64>) {
+    let mx = logits.iter().cloned().fold(f64::MIN, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|&v| (v - mx).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    let probs: Vec<f64> = exps.iter().map(|&e| e / z).collect();
+    let loss = -probs[label].max(1e-300).ln();
+    let grad: Vec<f64> = probs
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| if i == label { p - 1.0 } else { p })
+        .collect();
+    (loss, grad)
+}
+
+/// argmax helper for accuracy computation.
+pub fn argmax(v: &[f64]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_known() {
+        let (l, g) = mse_loss(&[1.0, 2.0], &[0.0, 0.0]);
+        assert!((l - 2.5).abs() < 1e-12);
+        assert_eq!(g, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn nll_gradient_sums_to_zero_and_fd() {
+        let logits = vec![0.2, -0.5, 1.3];
+        let (_, g) = softmax_nll(&logits, 2);
+        assert!(g.iter().sum::<f64>().abs() < 1e-12);
+        let eps = 1e-6;
+        for i in 0..3 {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let mut lm = logits.clone();
+            lm[i] -= eps;
+            let fd = (softmax_nll(&lp, 2).0 - softmax_nll(&lm, 2).0)
+                / (2.0 * eps);
+            assert!((g[i] - fd).abs() < 1e-6, "i={i}");
+        }
+    }
+
+    #[test]
+    fn nll_confident_correct_is_small() {
+        let (l, _) = softmax_nll(&[10.0, 0.0, 0.0], 0);
+        assert!(l < 1e-3);
+        let (l2, _) = softmax_nll(&[10.0, 0.0, 0.0], 1);
+        assert!(l2 > 5.0);
+    }
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+}

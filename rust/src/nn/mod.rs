@@ -1,0 +1,17 @@
+//! Minimal neural-network substrate for the end-to-end experiments
+//! (Fig. 2 predict-then-optimize; Table 6 image classification).
+//!
+//! Deliberately small: dense layers, ReLU, softmax/NLL and MSE losses,
+//! Adam — plus [`optlayer::OptLayer`], the optimization layer whose
+//! backward pass is Alt-Diff (or the OptNet-style KKT baseline, switchable
+//! for the Table 6 comparison).
+
+pub mod adam;
+pub mod layers;
+pub mod loss;
+pub mod optlayer;
+
+pub use adam::Adam;
+pub use layers::{Linear, Mlp};
+pub use loss::{mse_loss, softmax_nll};
+pub use optlayer::{OptLayer, OptBackend};

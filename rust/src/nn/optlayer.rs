@@ -1,0 +1,157 @@
+//! The optimization layer as a network module (paper Definition 3.1).
+//!
+//! Forward: x* = argmin ½xᵀPx + qᵀx s.t. Ax=b, Gx≤h with q supplied by the
+//! previous layer. Backward: dL/dq = (∂x*/∂q)ᵀ dL/dx*, computed either by
+//! Alt-Diff (the paper) or by IPM + implicit KKT differentiation (the
+//! OptNet baseline) — switchable so Table 6 can compare both inside the
+//! identical network.
+
+use crate::altdiff::{DenseAltDiff, Options, Param};
+use crate::baselines;
+use crate::error::Result;
+use crate::linalg::{gemv_t, Mat};
+use crate::prob::Qp;
+
+/// Which differentiation engine backs the layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptBackend {
+    /// Alt-Diff with the given truncation tolerance.
+    AltDiff,
+    /// OptNet semantics: interior point + KKT implicit differentiation.
+    OptNetKkt,
+}
+
+/// Optimization layer with fixed structure (P, A, b, G, h); input is q.
+pub struct OptLayer {
+    solver: DenseAltDiff,
+    pub backend: OptBackend,
+    pub tol: f64,
+    /// cached ∂x/∂q from the last forward (n×n)
+    last_jac: Option<Mat>,
+    /// iterations used by the last forward (metrics)
+    pub last_iters: usize,
+}
+
+impl OptLayer {
+    pub fn new(qp: Qp, rho: f64, backend: OptBackend, tol: f64)
+        -> Result<Self>
+    {
+        Ok(OptLayer {
+            solver: DenseAltDiff::new(qp, rho)?,
+            backend,
+            tol,
+            last_jac: None,
+            last_iters: 0,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.solver.qp.n()
+    }
+
+    /// Forward: solve with the supplied q, cache ∂x/∂q for backward.
+    pub fn forward(&mut self, q: &[f64]) -> Vec<f64> {
+        match self.backend {
+            OptBackend::AltDiff => {
+                let sol = self.solver.solve_with(
+                    Some(q),
+                    None,
+                    None,
+                    &Options {
+                        tol: self.tol,
+                        max_iter: 20_000,
+                        jacobian: Some(Param::Q),
+                        ..Default::default()
+                    },
+                );
+                self.last_iters = sol.iters;
+                self.last_jac = sol.jacobian;
+                sol.x
+            }
+            OptBackend::OptNetKkt => {
+                let mut qp = self.solver.qp.clone();
+                qp.q = q.to_vec();
+                let (x, j, iters) =
+                    baselines::optnet_layer(&qp, Param::Q, self.tol * 1e-3)
+                        .expect("optnet layer");
+                self.last_iters = iters;
+                self.last_jac = Some(j);
+                x
+            }
+        }
+    }
+
+    /// Backward: dL/dq = Jᵀ · dL/dx.
+    pub fn backward(&self, gx: &[f64]) -> Vec<f64> {
+        let j = self
+            .last_jac
+            .as_ref()
+            .expect("backward before forward");
+        gemv_t(j, gx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prob::dense_qp;
+
+    fn layer(backend: OptBackend) -> OptLayer {
+        OptLayer::new(dense_qp(10, 5, 2, 31), 1.0, backend, 1e-8).unwrap()
+    }
+
+    #[test]
+    fn forward_matches_between_backends() {
+        let mut a = layer(OptBackend::AltDiff);
+        let mut b = layer(OptBackend::OptNetKkt);
+        let q: Vec<f64> = (0..10).map(|i| 0.1 * i as f64 - 0.4).collect();
+        let xa = a.forward(&q);
+        let xb = b.forward(&q);
+        for i in 0..10 {
+            assert!(
+                (xa[i] - xb[i]).abs() < 1e-4,
+                "x[{i}]: altdiff {} optnet {}",
+                xa[i],
+                xb[i]
+            );
+        }
+    }
+
+    #[test]
+    fn backward_matches_between_backends() {
+        let mut a = layer(OptBackend::AltDiff);
+        let mut b = layer(OptBackend::OptNetKkt);
+        let q: Vec<f64> = (0..10).map(|i| 0.05 * i as f64).collect();
+        let _ = a.forward(&q);
+        let _ = b.forward(&q);
+        let gx: Vec<f64> = (0..10).map(|i| 1.0 - 0.1 * i as f64).collect();
+        let ga = a.backward(&gx);
+        let gb = b.backward(&gx);
+        let cos = crate::linalg::cosine(&ga, &gb);
+        assert!(cos > 0.999, "cosine {cos}");
+    }
+
+    #[test]
+    fn backward_matches_loss_finite_difference() {
+        // L(q) = sum x*(q); check dL/dq by FD through the solver.
+        let mut l = layer(OptBackend::AltDiff);
+        let q: Vec<f64> = (0..10).map(|i| -0.2 + 0.07 * i as f64).collect();
+        let _x = l.forward(&q);
+        let g = l.backward(&vec![1.0; 10]);
+        let eps = 1e-5;
+        for c in [0usize, 3, 9] {
+            let mut qp = q.clone();
+            qp[c] += eps;
+            let mut qm = q.clone();
+            qm[c] -= eps;
+            let lp: f64 = l.forward(&qp).iter().sum();
+            let lm: f64 = l.forward(&qm).iter().sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (g[c] - fd).abs() < 1e-3 * (1.0 + fd.abs()),
+                "g[{c}]={} fd={fd}",
+                g[c]
+            );
+        }
+    }
+}

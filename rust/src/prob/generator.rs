@@ -1,0 +1,227 @@
+//! Workload generators: random feasible QPs matching the paper's setups.
+//!
+//! Table 2 (dense): P ⪰ 0 random dense, A/G random dense, sizes with
+//! n : m : p = 10 : 5 : 2. Feasibility by construction: pick x0, set
+//! b = A x0 and h = G x0 + |u| + margin, so x0 is strictly feasible.
+
+use super::qp::{Qp, SparseQp};
+use crate::linalg::{ata, gemv, Mat};
+use crate::sparse::Csr;
+use crate::util::rng::Pcg64;
+
+/// Dense QP in the paper's Table 2 style.
+pub fn dense_qp(n: usize, m: usize, p: usize, seed: u64) -> Qp {
+    let mut rng = Pcg64::new(seed);
+    // P = 0.1 I + M Mᵀ / n : SPD, spectrum O(1)
+    let mraw = Mat::from_vec(n, n, rng.normal_vec(n * n));
+    let mut pm = ata(&mraw);
+    pm.scale(1.0 / n as f64);
+    for i in 0..n {
+        pm[(i, i)] += 0.1;
+    }
+    let q = rng.normal_vec(n);
+    let scale = 1.0 / (n as f64).sqrt();
+    let mut a = Mat::from_vec(p, n, rng.normal_vec(p * n));
+    a.scale(scale);
+    let mut g = Mat::from_vec(m, n, rng.normal_vec(m * n));
+    g.scale(scale);
+    let x0 = rng.normal_vec(n);
+    let b = gemv(&a, &x0);
+    let h: Vec<f64> = gemv(&g, &x0)
+        .into_iter()
+        .map(|gx| gx + rng.uniform().abs() + 0.1)
+        .collect();
+    Qp { p: pm, q, a, b, g, h }
+}
+
+/// Constrained-sparsemax layer (paper Table 3/4):
+///     min ‖x − y‖²  s.t.  1ᵀx = 1,  0 ≤ x ≤ u
+/// i.e. P = 2I, q = −2y, A = 1ᵀ (p=1), G = [−I; I], h = [0; u].
+pub fn sparsemax_qp(n: usize, seed: u64) -> SparseQp {
+    let mut rng = Pcg64::new(seed);
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let q: Vec<f64> = y.iter().map(|v| -2.0 * v).collect();
+    let ones: Vec<(usize, usize, f64)> =
+        (0..n).map(|j| (0, j, 1.0)).collect();
+    let a = Csr::from_triplets(1, n, &ones);
+    // G = [-I; I]
+    let mut gt = Vec::with_capacity(2 * n);
+    for i in 0..n {
+        gt.push((i, i, -1.0));
+        gt.push((n + i, i, 1.0));
+    }
+    let g = Csr::from_triplets(2 * n, n, &gt);
+    // upper bounds u in (0.5, 1.5): simplex cap, strictly feasible at 1/n.
+    let mut h = vec![0.0; 2 * n];
+    for i in 0..n {
+        h[n + i] = 0.5 + rng.uniform();
+    }
+    SparseQp { pdiag: vec![2.0; n], q, a, b: vec![1.0], g, h }
+}
+
+/// Random sparse QP with controllable density (general sparse workloads).
+pub fn sparse_qp(
+    n: usize,
+    m: usize,
+    p: usize,
+    density: f64,
+    seed: u64,
+) -> SparseQp {
+    let mut rng = Pcg64::new(seed);
+    let pdiag: Vec<f64> = (0..n).map(|_| 0.5 + rng.uniform()).collect();
+    let q = rng.normal_vec(n);
+    let gen_mat = |rows: usize, rng: &mut Pcg64| {
+        let mut t = Vec::new();
+        for i in 0..rows {
+            // ensure at least one entry per row: full row rank-ish
+            let j0 = rng.below(n);
+            t.push((i, j0, rng.normal()));
+            for j in 0..n {
+                if j != j0 && rng.uniform() < density {
+                    t.push((i, j, rng.normal()));
+                }
+            }
+        }
+        Csr::from_triplets(rows, n, &t)
+    };
+    let a = gen_mat(p, &mut rng);
+    let g = gen_mat(m, &mut rng);
+    let x0 = rng.normal_vec(n);
+    let b = a.spmv(&x0);
+    let h: Vec<f64> = g
+        .spmv(&x0)
+        .into_iter()
+        .map(|gx| gx + rng.uniform().abs() + 0.1)
+        .collect();
+    SparseQp { pdiag, q, a, b, g, h }
+}
+
+/// Constrained-softmax layer data (paper Table 5):
+///     min −yᵀx + Σ x log x   s.t. 1ᵀx = 1,  0 ≤ x ≤ u
+/// Returns (y, u). The solver couples it with `EntropyObjective`.
+pub fn softmax_layer(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg64::new(seed);
+    let y = rng.normal_vec(n);
+    let u: Vec<f64> = (0..n).map(|_| 0.3 + rng.uniform()).collect();
+    (y, u)
+}
+
+/// Energy-generation-scheduling QP (paper §5.2, eq. 14):
+///     min Σ_k ‖x_k − P_dk‖²  s.t. |x_{k+1} − x_k| ≤ r
+/// Horizon T=24, ramp limit r. As a QP: P = 2I, q = −2 P_d,
+/// G = [D; −D] with D the (T−1, T) difference matrix, h = r·1. No
+/// equalities (paper has none) — we add a vacuous one (0ᵀx = 0) so the
+/// uniform (A,b) interface holds; it does not alter the solution.
+pub fn energy_qp(demand: &[f64], ramp: f64) -> SparseQp {
+    let t = demand.len();
+    assert!(t >= 2);
+    let q: Vec<f64> = demand.iter().map(|d| -2.0 * d).collect();
+    let mut gt = Vec::with_capacity(4 * (t - 1));
+    for k in 0..(t - 1) {
+        // (x_{k+1} - x_k) <= r
+        gt.push((k, k + 1, 1.0));
+        gt.push((k, k, -1.0));
+        // -(x_{k+1} - x_k) <= r
+        gt.push((t - 1 + k, k + 1, -1.0));
+        gt.push((t - 1 + k, k, 1.0));
+    }
+    let g = Csr::from_triplets(2 * (t - 1), t, &gt);
+    let h = vec![ramp; 2 * (t - 1)];
+    let a = Csr::from_triplets(1, t, &[(0, 0, 0.0)]);
+    SparseQp { pdiag: vec![2.0; t], q, a, b: vec![0.0], g, h }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_qp_is_strictly_feasible_and_spd() {
+        let qp = dense_qp(30, 15, 6, 7);
+        assert_eq!(qp.n(), 30);
+        assert_eq!(qp.m_ineq(), 15);
+        assert_eq!(qp.p_eq(), 6);
+        // SPD check via Cholesky
+        assert!(crate::linalg::Chol::factor(&qp.p).is_ok());
+        // the generator's x0 satisfied Ax=b; verify a feasible point exists
+        // by solving the least-squares x = A⁺b and checking Gx < h is
+        // not required — directly test with the generator's construction:
+        // regenerate with same seed and confirm h - G x0 > 0 by margin.
+        // (structural: h was built as G x0 + pos)
+        let (eq, _) = qp.feasibility(&crate::linalg::gemv(
+            &qp.a.transpose(),
+            &crate::linalg::Lu::factor(&crate::linalg::gemm(
+                &qp.a,
+                &qp.a.transpose(),
+            ))
+            .unwrap()
+            .solve(&qp.b),
+        ));
+        assert!(eq < 1e-8, "min-norm equality solution exists, eq={eq}");
+    }
+
+    #[test]
+    fn dense_qp_deterministic_per_seed() {
+        let a = dense_qp(10, 5, 2, 3);
+        let b = dense_qp(10, 5, 2, 3);
+        assert_eq!(a.q, b.q);
+        assert_eq!(a.p.data, b.p.data);
+        let c = dense_qp(10, 5, 2, 4);
+        assert_ne!(a.q, c.q);
+    }
+
+    #[test]
+    fn sparsemax_structure() {
+        let sq = sparsemax_qp(8, 1);
+        assert_eq!(sq.n(), 8);
+        assert_eq!(sq.a.rows, 1);
+        assert_eq!(sq.a.nnz(), 8);
+        assert_eq!(sq.g.rows, 16);
+        assert_eq!(sq.g.nnz(), 16);
+        // uniform x = 1/n is strictly feasible
+        let x = vec![1.0 / 8.0; 8];
+        let ax = sq.a.spmv(&x);
+        assert!((ax[0] - 1.0).abs() < 1e-12);
+        let gx = sq.g.spmv(&x);
+        for i in 0..16 {
+            assert!(gx[i] < sq.h[i]);
+        }
+    }
+
+    #[test]
+    fn sparse_qp_density_scales_nnz() {
+        let lo = sparse_qp(100, 50, 20, 0.01, 5);
+        let hi = sparse_qp(100, 50, 20, 0.2, 5);
+        assert!(hi.g.nnz() > 2 * lo.g.nnz());
+        assert!(lo.a.nnz() >= 20); // at least one entry per row
+    }
+
+    #[test]
+    fn energy_qp_ramp_encoding() {
+        let demand = vec![10.0, 12.0, 9.0, 11.0];
+        let qp = energy_qp(&demand, 1.5);
+        assert_eq!(qp.n(), 4);
+        assert_eq!(qp.g.rows, 6);
+        // x = demand violates ramps where |Δd| > 1.5
+        let gx = qp.g.spmv(&demand);
+        let viol = gx
+            .iter()
+            .zip(&qp.h)
+            .filter(|(g, h)| *g > *h)
+            .count();
+        assert_eq!(viol, 3); // Δ = +2, -3, +2 all exceed 1.5
+        // constant schedule is feasible
+        let flat = vec![10.0; 4];
+        let gx2 = qp.g.spmv(&flat);
+        for (g, h) in gx2.iter().zip(&qp.h) {
+            assert!(g <= h);
+        }
+    }
+
+    #[test]
+    fn softmax_layer_bounds_positive() {
+        let (y, u) = softmax_layer(12, 9);
+        assert_eq!(y.len(), 12);
+        assert!(u.iter().all(|&v| v > 0.29));
+    }
+}

@@ -1,0 +1,7 @@
+//! Problem models + workload generators for every experiment.
+pub mod generator;
+pub mod qp;
+
+pub use generator::{dense_qp, energy_qp, softmax_layer, sparse_qp,
+                    sparsemax_qp};
+pub use qp::{EntropyObjective, Objective, Qp, QuadObjective, SparseQp};

@@ -1,0 +1,249 @@
+//! Parameterized convex problems with polyhedral constraints (paper eq. 1).
+//!
+//! The canonical object is the QP layer
+//!     min_x 0.5 xᵀPx + qᵀx   s.t.  Ax = b,  Gx ≤ h
+//! plus the general-objective variant (entropy etc.) via [`Objective`].
+
+use crate::linalg::{gemv, norm2, sub_vec, Mat};
+use crate::sparse::Csr;
+
+/// Dense QP instance.
+#[derive(Clone, Debug)]
+pub struct Qp {
+    pub p: Mat,      // (n,n) SPD (or PSD + regularized)
+    pub q: Vec<f64>, // (n)
+    pub a: Mat,      // (p,n)
+    pub b: Vec<f64>, // (p)
+    pub g: Mat,      // (m,n)
+    pub h: Vec<f64>, // (m)
+}
+
+impl Qp {
+    pub fn n(&self) -> usize {
+        self.q.len()
+    }
+    pub fn p_eq(&self) -> usize {
+        self.b.len()
+    }
+    pub fn m_ineq(&self) -> usize {
+        self.h.len()
+    }
+
+    /// Objective value at x.
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        let px = gemv(&self.p, x);
+        0.5 * crate::linalg::dot(x, &px) + crate::linalg::dot(&self.q, x)
+    }
+
+    /// (‖Ax−b‖, max(Gx−h)_+) — primal feasibility metrics.
+    pub fn feasibility(&self, x: &[f64]) -> (f64, f64) {
+        let eq = norm2(&sub_vec(&gemv(&self.a, x), &self.b));
+        let viol = gemv(&self.g, x)
+            .iter()
+            .zip(&self.h)
+            .map(|(gx, h)| (gx - h).max(0.0))
+            .fold(0.0, f64::max);
+        (eq, viol)
+    }
+
+    /// KKT residual norm at (x, λ, ν): stationarity, primal, complementarity.
+    pub fn kkt_residual(&self, x: &[f64], lam: &[f64], nu: &[f64]) -> f64 {
+        let mut st = gemv(&self.p, x);
+        crate::linalg::axpy(&mut st, 1.0, &self.q);
+        let at_lam = crate::linalg::gemv_t(&self.a, lam);
+        let gt_nu = crate::linalg::gemv_t(&self.g, nu);
+        crate::linalg::axpy(&mut st, 1.0, &at_lam);
+        crate::linalg::axpy(&mut st, 1.0, &gt_nu);
+        let (eq, viol) = self.feasibility(x);
+        let comp: f64 = gemv(&self.g, x)
+            .iter()
+            .zip(&self.h)
+            .zip(nu)
+            .map(|((gx, h), nui)| (nui * (gx - h)).abs())
+            .sum();
+        norm2(&st) + eq + viol + comp
+    }
+}
+
+/// Sparse QP instance (diagonal P — the regime of Table 4).
+#[derive(Clone, Debug)]
+pub struct SparseQp {
+    pub pdiag: Vec<f64>,
+    pub q: Vec<f64>,
+    pub a: Csr,
+    pub b: Vec<f64>,
+    pub g: Csr,
+    pub h: Vec<f64>,
+}
+
+impl SparseQp {
+    pub fn n(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn to_dense(&self) -> Qp {
+        Qp {
+            p: Mat::diag(&self.pdiag),
+            q: self.q.clone(),
+            a: self.a.to_dense(),
+            b: self.b.clone(),
+            g: self.g.to_dense(),
+            h: self.h.clone(),
+        }
+    }
+}
+
+/// General convex objective for the non-QP layers (paper Table 5).
+pub trait Objective: Send + Sync {
+    /// f(x)
+    fn value(&self, x: &[f64]) -> f64;
+    /// ∇f(x)
+    fn grad(&self, x: &[f64]) -> Vec<f64>;
+    /// ∇²f(x) — dense; diagonal objectives may override `hess_diag`.
+    fn hess(&self, x: &[f64]) -> Mat;
+    /// Diagonal of the Hessian if the Hessian is diagonal (fast path).
+    fn hess_diag(&self, _x: &[f64]) -> Option<Vec<f64>> {
+        None
+    }
+    /// A strictly feasible starting point for the domain (e.g. entropy
+    /// needs x > 0).
+    fn domain_start(&self, n: usize) -> Vec<f64> {
+        vec![0.0; n]
+    }
+}
+
+/// Quadratic objective wrapper (makes the QP a special case).
+pub struct QuadObjective {
+    pub p: Mat,
+    pub q: Vec<f64>,
+}
+
+impl Objective for QuadObjective {
+    fn value(&self, x: &[f64]) -> f64 {
+        let px = gemv(&self.p, x);
+        0.5 * crate::linalg::dot(x, &px) + crate::linalg::dot(&self.q, x)
+    }
+    fn grad(&self, x: &[f64]) -> Vec<f64> {
+        let mut g = gemv(&self.p, x);
+        crate::linalg::axpy(&mut g, 1.0, &self.q);
+        g
+    }
+    fn hess(&self, _x: &[f64]) -> Mat {
+        self.p.clone()
+    }
+}
+
+/// Negative-entropy objective  f(x) = -yᵀx + Σ x_i log x_i  (paper §F.1,
+/// constrained Softmax layer). Domain x > 0.
+pub struct EntropyObjective {
+    pub y: Vec<f64>,
+}
+
+impl Objective for EntropyObjective {
+    fn value(&self, x: &[f64]) -> f64 {
+        x.iter()
+            .zip(&self.y)
+            .map(|(&xi, &yi)| {
+                let xl = xi.max(1e-12);
+                -yi * xi + xl * xl.ln()
+            })
+            .sum()
+    }
+    fn grad(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .zip(&self.y)
+            .map(|(&xi, &yi)| -yi + xi.max(1e-12).ln() + 1.0)
+            .collect()
+    }
+    fn hess(&self, x: &[f64]) -> Mat {
+        Mat::diag(&self.hess_diag(x).unwrap())
+    }
+    fn hess_diag(&self, x: &[f64]) -> Option<Vec<f64>> {
+        Some(x.iter().map(|&xi| 1.0 / xi.max(1e-12)).collect())
+    }
+    fn domain_start(&self, n: usize) -> Vec<f64> {
+        vec![1.0 / n as f64; n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_qp() -> Qp {
+        // min x1^2 + x2^2  s.t. x1 + x2 = 1, x <= 2  → x* = (0.5, 0.5)
+        Qp {
+            p: Mat::diag(&[2.0, 2.0]),
+            q: vec![0.0, 0.0],
+            a: Mat::from_rows(&[&[1.0, 1.0]]),
+            b: vec![1.0],
+            g: Mat::eye(2),
+            h: vec![2.0, 2.0],
+        }
+    }
+
+    #[test]
+    fn objective_and_feasibility() {
+        let qp = tiny_qp();
+        let x = [0.5, 0.5];
+        assert!((qp.objective(&x) - 0.5).abs() < 1e-12);
+        let (eq, viol) = qp.feasibility(&x);
+        assert!(eq < 1e-12 && viol == 0.0);
+        let (eq2, viol2) = qp.feasibility(&[3.0, 3.0]);
+        assert!(eq2 > 0.0 && viol2 == 1.0);
+    }
+
+    #[test]
+    fn kkt_residual_zero_at_optimum() {
+        let qp = tiny_qp();
+        // x* = (.5,.5): 2x + λ·1 = 0 → λ = -1; inactive ineq → ν = 0.
+        let r = qp.kkt_residual(&[0.5, 0.5], &[-1.0], &[0.0, 0.0]);
+        assert!(r < 1e-12, "r={r}");
+        let r_bad = qp.kkt_residual(&[0.9, 0.1], &[-1.0], &[0.0, 0.0]);
+        assert!(r_bad > 0.1);
+    }
+
+    #[test]
+    fn entropy_gradient_matches_fd() {
+        let obj = EntropyObjective { y: vec![0.3, -0.2, 0.5] };
+        let x = [0.2, 0.5, 0.3];
+        let g = obj.grad(&x);
+        let eps = 1e-6;
+        for i in 0..3 {
+            let mut xp = x;
+            xp[i] += eps;
+            let mut xm = x;
+            xm[i] -= eps;
+            let fd = (obj.value(&xp) - obj.value(&xm)) / (2.0 * eps);
+            assert!((g[i] - fd).abs() < 1e-5, "i={i} g={} fd={fd}", g[i]);
+        }
+    }
+
+    #[test]
+    fn entropy_hess_diag_consistent() {
+        let obj = EntropyObjective { y: vec![0.0, 0.0] };
+        let x = [0.25, 0.5];
+        let d = obj.hess_diag(&x).unwrap();
+        assert!((d[0] - 4.0).abs() < 1e-9);
+        assert!((d[1] - 2.0).abs() < 1e-9);
+        let h = obj.hess(&x);
+        assert!((h[(0, 0)] - 4.0).abs() < 1e-9);
+        assert_eq!(h[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn sparse_to_dense_roundtrip() {
+        let sq = SparseQp {
+            pdiag: vec![2.0, 2.0],
+            q: vec![-1.0, 0.5],
+            a: Csr::from_triplets(1, 2, &[(0, 0, 1.0), (0, 1, 1.0)]),
+            b: vec![1.0],
+            g: Csr::eye(2),
+            h: vec![1.0, 1.0],
+        };
+        let d = sq.to_dense();
+        assert_eq!(d.p[(0, 0)], 2.0);
+        assert_eq!(d.a[(0, 1)], 1.0);
+        assert_eq!(d.n(), 2);
+    }
+}

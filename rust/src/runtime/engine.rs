@@ -1,0 +1,218 @@
+//! PJRT execution engine: compile-once, execute-many.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO text →
+//! `HloModuleProto` → `XlaComputation` → `PjRtLoadedExecutable`, memoized
+//! per variant. Executables are compiled lazily on first use (startup
+//! stays fast) or eagerly via [`Engine::warmup`] (serving avoids
+//! first-request latency spikes).
+//!
+//! Threading: `PjRtClient` and executables are not `Sync`; the coordinator
+//! gives each worker thread its own `Engine` (cheap: compilation is
+//! per-thread but the artifact files are shared).
+
+use crate::error::{AltDiffError, Result};
+use crate::linalg::Mat;
+use crate::runtime::manifest::{Manifest, Variant};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Output of one compiled QP-layer execution.
+#[derive(Clone, Debug)]
+pub struct LayerOutput {
+    /// x iterate(s): batch-major, (B, n) flattened.
+    pub x: Vec<f32>,
+    /// ∂x/∂b Jacobian(s): (B, n, p) flattened.
+    pub jx: Vec<f32>,
+    /// primal residual per batch element.
+    pub prim: Vec<f32>,
+    /// dual residual (ρ‖x_k − x_{k−1}‖) per batch element.
+    pub dual: Vec<f32>,
+}
+
+/// Compile-once, execute-many PJRT engine over one artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// executions served (metrics)
+    pub exec_count: u64,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| {
+            AltDiffError::Runtime(format!("PjRtClient::cpu: {e:?}"))
+        })?;
+        Ok(Engine {
+            client,
+            manifest,
+            executables: BTreeMap::new(),
+            exec_count: 0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and memoize) the executable for `name`.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let v = self.manifest.get(name).ok_or_else(|| {
+            AltDiffError::Registry(format!("unknown variant '{name}'"))
+        })?;
+        let path = v.hlo_path.clone();
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(
+            |e| {
+                AltDiffError::Runtime(format!(
+                    "parse {}: {e:?}",
+                    path.display()
+                ))
+            },
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| {
+            AltDiffError::Runtime(format!("compile {name}: {e:?}"))
+        })?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile every variant (serving startup).
+    pub fn warmup(&mut self) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .variants
+            .iter()
+            .map(|v| v.name.clone())
+            .collect();
+        for n in &names {
+            self.compile(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Execute one variant.
+    ///
+    /// `hinv` is the registration-time H⁻¹ (n,n); `a` (p,n), `g` (m,n);
+    /// `q`, `b`, `h` are batch-major flattened per the variant's batch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute(
+        &mut self,
+        name: &str,
+        hinv: &[f32],
+        a: &[f32],
+        g: &[f32],
+        q: &[f32],
+        b: &[f32],
+        h: &[f32],
+    ) -> Result<LayerOutput> {
+        self.compile(name)?;
+        let v = self.manifest.get(name).unwrap().clone();
+        self.check_arity(&v, hinv, a, g, q, b, h)?;
+        let lit = |data: &[f32], dims: &[usize]| -> Result<xla::Literal> {
+            let l = xla::Literal::vec1(data);
+            let dims_i64: Vec<i64> =
+                dims.iter().map(|&d| d as i64).collect();
+            l.reshape(&dims_i64).map_err(|e| {
+                AltDiffError::Runtime(format!("reshape {dims:?}: {e:?}"))
+            })
+        };
+        let args = [
+            lit(hinv, &v.in_shapes[0])?,
+            lit(a, &v.in_shapes[1])?,
+            lit(g, &v.in_shapes[2])?,
+            lit(q, &v.in_shapes[3])?,
+            lit(b, &v.in_shapes[4])?,
+            lit(h, &v.in_shapes[5])?,
+        ];
+        let exe = self.executables.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&args).map_err(|e| {
+            AltDiffError::Runtime(format!("execute {name}: {e:?}"))
+        })?;
+        self.exec_count += 1;
+        let lit_out = result[0][0].to_literal_sync().map_err(|e| {
+            AltDiffError::Runtime(format!("to_literal: {e:?}"))
+        })?;
+        let parts = lit_out.to_tuple().map_err(|e| {
+            AltDiffError::Runtime(format!("to_tuple: {e:?}"))
+        })?;
+        if parts.len() != 4 {
+            return Err(AltDiffError::Runtime(format!(
+                "variant {name}: expected 4 outputs, got {}",
+                parts.len()
+            )));
+        }
+        let take = |l: &xla::Literal| -> Result<Vec<f32>> {
+            l.to_vec::<f32>().map_err(|e| {
+                AltDiffError::Runtime(format!("to_vec: {e:?}"))
+            })
+        };
+        Ok(LayerOutput {
+            x: take(&parts[0])?,
+            jx: take(&parts[1])?,
+            prim: take(&parts[2])?,
+            dual: take(&parts[3])?,
+        })
+    }
+
+    fn check_arity(
+        &self,
+        v: &Variant,
+        hinv: &[f32],
+        a: &[f32],
+        g: &[f32],
+        q: &[f32],
+        b: &[f32],
+        h: &[f32],
+    ) -> Result<()> {
+        let want = |dims: &[usize]| dims.iter().product::<usize>();
+        let checks = [
+            ("hinv", hinv.len(), want(&v.in_shapes[0])),
+            ("a", a.len(), want(&v.in_shapes[1])),
+            ("g", g.len(), want(&v.in_shapes[2])),
+            ("q", q.len(), want(&v.in_shapes[3])),
+            ("b", b.len(), want(&v.in_shapes[4])),
+            ("h", h.len(), want(&v.in_shapes[5])),
+        ];
+        for (what, got, want) in checks {
+            if got != want {
+                return Err(AltDiffError::DimMismatch(format!(
+                    "{}: input '{what}' has {got} elements, want {want}",
+                    v.name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Convenience: run a *registered dense layer* through the compiled
+    /// path (converts f64 problem data to the f32 artifact contract).
+    pub fn execute_dense(
+        &mut self,
+        name: &str,
+        hinv: &Mat,
+        a: &Mat,
+        g: &Mat,
+        q: &[f64],
+        b: &[f64],
+        h: &[f64],
+    ) -> Result<LayerOutput> {
+        let f = |v: &[f64]| -> Vec<f32> {
+            v.iter().map(|&x| x as f32).collect()
+        };
+        self.execute(
+            name,
+            &hinv.to_f32(),
+            &a.to_f32(),
+            &g.to_f32(),
+            &f(q),
+            &f(b),
+            &f(h),
+        )
+    }
+}

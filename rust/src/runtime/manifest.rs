@@ -1,0 +1,190 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. TSV, one row per compiled variant:
+//!     name  n  m  p  k  batch  rho  in_shapes  out_shapes
+
+use crate::error::{AltDiffError, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One compiled variant of the QP layer family.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Variant {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    pub p: usize,
+    pub k: usize,
+    pub batch: usize,
+    pub rho: f64,
+    pub in_shapes: Vec<Vec<usize>>,
+    pub out_shapes: Vec<Vec<usize>>,
+    pub hlo_path: PathBuf,
+}
+
+/// Parsed manifest + lookup indices.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub variants: Vec<Variant>,
+    by_name: BTreeMap<String, usize>,
+}
+
+fn parse_shape(s: &str) -> Vec<usize> {
+    if s.is_empty() {
+        return vec![]; // scalar
+    }
+    s.split('x').map(|t| t.parse().unwrap_or(0)).collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`; HLO paths resolve relative to `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            AltDiffError::Registry(format!("read {}: {e}", path.display()))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut variants = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 9 {
+                return Err(AltDiffError::Registry(format!(
+                    "manifest line {} has {} fields, want 9",
+                    lineno + 1,
+                    f.len()
+                )));
+            }
+            let parse_usize = |s: &str, what: &str| -> Result<usize> {
+                s.parse().map_err(|_| {
+                    AltDiffError::Registry(format!(
+                        "bad {what} '{s}' at line {}",
+                        lineno + 1
+                    ))
+                })
+            };
+            let v = Variant {
+                name: f[0].to_string(),
+                n: parse_usize(f[1], "n")?,
+                m: parse_usize(f[2], "m")?,
+                p: parse_usize(f[3], "p")?,
+                k: parse_usize(f[4], "k")?,
+                batch: parse_usize(f[5], "batch")?,
+                rho: f[6].parse().map_err(|_| {
+                    AltDiffError::Registry(format!("bad rho '{}'", f[6]))
+                })?,
+                in_shapes: f[7].split(';').map(parse_shape).collect(),
+                out_shapes: f[8].split(';').map(parse_shape).collect(),
+                hlo_path: dir.join(format!("{}.hlo.txt", f[0])),
+            };
+            variants.push(v);
+        }
+        if variants.is_empty() {
+            return Err(AltDiffError::Registry(
+                "manifest has no variants".into(),
+            ));
+        }
+        let by_name = variants
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v.name.clone(), i))
+            .collect();
+        Ok(Manifest { variants, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Variant> {
+        self.by_name.get(name).map(|&i| &self.variants[i])
+    }
+
+    /// All variants with a given problem size, sorted by k ascending —
+    /// the truncation router's selection domain.
+    pub fn family(&self, n: usize, m: usize, p: usize, batch: usize)
+        -> Vec<&Variant>
+    {
+        let mut out: Vec<&Variant> = self
+            .variants
+            .iter()
+            .filter(|v| {
+                v.n == n && v.m == m && v.p == p && v.batch == batch
+            })
+            .collect();
+        out.sort_by_key(|v| v.k);
+        out
+    }
+
+    /// Distinct (n, m, p) sizes present.
+    pub fn sizes(&self) -> Vec<(usize, usize, usize)> {
+        let mut s: Vec<(usize, usize, usize)> =
+            self.variants.iter().map(|v| (v.n, v.m, v.p)).collect();
+        s.sort();
+        s.dedup();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# name\tn\tm\tp\tk\tbatch\trho\tin_shapes\tout_shapes
+qp_n8_m4_p2_k5_b1\t8\t4\t2\t5\t1\t1.0\t8x8;2x8;4x8;8;2;4\t8;8x2;;
+qp_n8_m4_p2_k20_b1\t8\t4\t2\t20\t1\t1.0\t8x8;2x8;4x8;8;2;4\t8;8x2;;
+qp_n16_m8_p4_k5_b8\t16\t8\t4\t5\t8\t1.0\t16x16;4x16;8x16;8x16;8x4;8x8\t8x16;8x16x4;8;8
+";
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.variants.len(), 3);
+        let v = m.get("qp_n8_m4_p2_k5_b1").unwrap();
+        assert_eq!((v.n, v.m, v.p, v.k, v.batch), (8, 4, 2, 5, 1));
+        assert_eq!(v.in_shapes[0], vec![8, 8]);
+        assert_eq!(v.in_shapes[3], vec![8]);
+        assert_eq!(v.out_shapes[2], Vec::<usize>::new()); // scalar
+        assert!(v.hlo_path.ends_with("qp_n8_m4_p2_k5_b1.hlo.txt"));
+    }
+
+    #[test]
+    fn family_sorted_by_k() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        let fam = m.family(8, 4, 2, 1);
+        assert_eq!(fam.len(), 2);
+        assert!(fam[0].k < fam[1].k);
+        assert!(m.family(99, 1, 1, 1).is_empty());
+    }
+
+    #[test]
+    fn sizes_deduped() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert_eq!(m.sizes(), vec![(8, 4, 2), (16, 8, 4)]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("bad\tline", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("# only comments\n", Path::new("/tmp"))
+            .is_err());
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.variants.is_empty());
+            for v in &m.variants {
+                assert!(v.hlo_path.exists(), "{} missing", v.name);
+                assert_eq!(v.in_shapes.len(), 6);
+                assert_eq!(v.out_shapes.len(), 4);
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the serving hot path.
+//!
+//! - [`manifest`]: parses `artifacts/manifest.tsv` into variant metadata.
+//! - [`engine`]: PJRT CPU client + lazily compiled executables, keyed by
+//!   variant name; typed f32 I/O matched to the artifact contract.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, LayerOutput};
+pub use manifest::{Manifest, Variant};

@@ -1,0 +1,263 @@
+//! Compressed Sparse Row matrices.
+//!
+//! The paper's Table 4 regime (constrained sparsemax, n up to 20k) is all
+//! about structure: A = 1ᵀ, G = [−I; I], P = 2I. Generic dense algebra
+//! would be O(n²) per matvec where O(nnz) suffices; this module provides
+//! the CSR type and the kernels the sparse Alt-Diff path uses.
+
+use crate::linalg::Mat;
+
+/// CSR sparse matrix (f64).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from (row, col, value) triplets (duplicates summed).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Csr {
+        let mut sorted: Vec<_> = triplets.to_vec();
+        sorted.sort_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(sorted.len());
+        let mut values: Vec<f64> = Vec::with_capacity(sorted.len());
+        let mut last: Option<(usize, usize)> = None;
+        for &(r, c, v) in &sorted {
+            assert!(r < rows && c < cols, "triplet out of bounds");
+            if last == Some((r, c)) {
+                // duplicates are adjacent after the sort → merge
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(c);
+                values.push(v);
+                indptr[r + 1] = indices.len();
+                last = Some((r, c));
+            }
+        }
+        // make indptr cumulative-max (rows with no entries)
+        for r in 1..=rows {
+            if indptr[r] < indptr[r - 1] {
+                indptr[r] = indptr[r - 1];
+            }
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Csr {
+        Csr {
+            rows: n,
+            cols: n,
+            indptr: (0..=n).collect(),
+            indices: (0..n).collect(),
+            values: vec![1.0; n],
+        }
+    }
+
+    /// Dense → CSR (drop zeros).
+    pub fn from_dense(m: &Mat) -> Csr {
+        let mut t = Vec::new();
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                let v = m[(i, j)];
+                if v != 0.0 {
+                    t.push((i, j, v));
+                }
+            }
+        }
+        Csr::from_triplets(m.rows, m.cols, &t)
+    }
+
+    /// CSR → dense.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                m[(i, self.indices[k])] += self.values[k];
+            }
+        }
+        m
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// y = A x.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.spmv_acc(&mut y, 1.0, x);
+        y
+    }
+
+    /// y += alpha * A x.
+    pub fn spmv_acc(&self, y: &mut [f64], alpha: f64, x: &[f64]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let mut s = 0.0;
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                s += self.values[k] * x[self.indices[k]];
+            }
+            y[i] += alpha * s;
+        }
+    }
+
+    /// y = Aᵀ x (no transpose materialization).
+    pub fn spmv_t(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.spmv_t_acc(&mut y, 1.0, x);
+        y
+    }
+
+    /// y += alpha * Aᵀ x.
+    pub fn spmv_t_acc(&self, y: &mut [f64], alpha: f64, x: &[f64]) {
+        debug_assert_eq!(x.len(), self.rows);
+        debug_assert_eq!(y.len(), self.cols);
+        for i in 0..self.rows {
+            let s = alpha * x[i];
+            if s == 0.0 {
+                continue;
+            }
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                y[self.indices[k]] += s * self.values[k];
+            }
+        }
+    }
+
+    /// Explicit transpose.
+    pub fn transpose(&self) -> Csr {
+        let mut t = Vec::with_capacity(self.nnz());
+        for i in 0..self.rows {
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                t.push((self.indices[k], i, self.values[k]));
+            }
+        }
+        Csr::from_triplets(self.cols, self.rows, &t)
+    }
+
+    /// AᵀA as CSR (via per-row outer products; fine for the thin/structured
+    /// constraint matrices this repo generates).
+    pub fn ata(&self) -> Csr {
+        let mut t = Vec::new();
+        for i in 0..self.rows {
+            let lo = self.indptr[i];
+            let hi = self.indptr[i + 1];
+            for a in lo..hi {
+                for b in lo..hi {
+                    t.push((
+                        self.indices[a],
+                        self.indices[b],
+                        self.values[a] * self.values[b],
+                    ));
+                }
+            }
+        }
+        Csr::from_triplets(self.cols, self.cols, &t)
+    }
+
+    /// Diagonal of AᵀA (cheap preconditioner input).
+    pub fn ata_diag(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.cols];
+        for k in 0..self.nnz() {
+            d[self.indices[k]] += self.values[k] * self.values[k];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, gemv};
+    use crate::util::rng::Pcg64;
+
+    fn random_sparse(r: usize, c: usize, density: f64, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed);
+        let mut t = Vec::new();
+        for i in 0..r {
+            for j in 0..c {
+                if rng.uniform() < density {
+                    t.push((i, j, rng.normal()));
+                }
+            }
+        }
+        Csr::from_triplets(r, c, &t)
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let s = random_sparse(13, 9, 0.3, 1);
+        let d = s.to_dense();
+        let s2 = Csr::from_dense(&d);
+        assert!(s2.to_dense().max_abs_diff(&d) < 1e-15);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let s = random_sparse(17, 11, 0.25, 2);
+        let d = s.to_dense();
+        let mut rng = Pcg64::new(3);
+        let x = rng.normal_vec(11);
+        let ys = s.spmv(&x);
+        let yd = gemv(&d, &x);
+        for i in 0..17 {
+            assert!((ys[i] - yd[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spmv_t_matches_dense() {
+        let s = random_sparse(17, 11, 0.25, 4);
+        let d = s.to_dense().transpose();
+        let mut rng = Pcg64::new(5);
+        let x = rng.normal_vec(17);
+        let ys = s.spmv_t(&x);
+        let yd = gemv(&d, &x);
+        for i in 0..11 {
+            assert!((ys[i] - yd[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ata_matches_dense() {
+        let s = random_sparse(9, 7, 0.4, 6);
+        let d = s.to_dense();
+        let want = gemm(&d.transpose(), &d);
+        let got = s.ata().to_dense();
+        assert!(got.max_abs_diff(&want) < 1e-12);
+        let diag = s.ata_diag();
+        for i in 0..7 {
+            assert!((diag[i] - want[(i, i)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let s = random_sparse(8, 5, 0.5, 7);
+        let tt = s.transpose().transpose();
+        assert!(tt.to_dense().max_abs_diff(&s.to_dense()) < 1e-15);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let s = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.0)]);
+        assert_eq!(s.to_dense()[(0, 0)], 3.0);
+        assert_eq!(s.nnz(), 1);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let s = Csr::from_triplets(4, 3, &[(0, 1, 1.0), (3, 2, 2.0)]);
+        let y = s.spmv(&[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![1.0, 0.0, 0.0, 2.0]);
+    }
+}

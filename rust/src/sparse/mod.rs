@@ -1,0 +1,6 @@
+//! Sparse linear algebra substrate (CSR + matrix-free CG).
+pub mod cg;
+pub mod csr;
+
+pub use cg::{cg, CgInfo, HessianOp, SpdOp};
+pub use csr::Csr;

@@ -1,0 +1,12 @@
+//! End-to-end training drivers (shared by examples/ and benches/).
+//!
+//! - [`energy`]: predict-then-optimize energy scheduling (paper §5.2 /
+//!   Fig. 2) — MLP demand forecaster trained through the scheduling QP.
+//! - [`mnist`]: image classification with an embedded dense QP layer
+//!   (paper §5.3 / Table 6 / Fig. 4), Alt-Diff vs OptNet backends.
+
+pub mod energy;
+pub mod mnist;
+
+pub use energy::{train_energy, EnergyBackend, EnergyConfig, EnergyReport};
+pub use mnist::{train_mnist, MnistConfig, MnistReport};

@@ -1,0 +1,153 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free
+//! positional arguments. Typed getters with defaults; `usage()` renders a
+//! help string from registered options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    registered: Vec<(String, String, String)>, // (name, default, help)
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args()`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    flags.insert(stripped.to_string(), v);
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Args { flags, positional, registered: Vec::new() }
+    }
+
+    /// Parse the process arguments (skipping argv[0]; also skips a bare
+    /// `--bench` token that `cargo bench` appends to harness binaries).
+    pub fn parse() -> Self {
+        Args::parse_from(
+            std::env::args().skip(1).filter(|a| a != "--bench"),
+        )
+    }
+
+    /// Register an option for `usage()`.
+    pub fn describe(&mut self, name: &str, default: &str, help: &str) {
+        self.registered.push((
+            name.to_string(),
+            default.to_string(),
+            help.to_string(),
+        ));
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("usage: {prog} [--key value]...\n");
+        for (n, d, h) in &self.registered {
+            s.push_str(&format!("  --{n:<18} {h} (default: {d})\n"));
+        }
+        s
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.flags
+            .get(key)
+            .map(|v| v == "true" || v == "1" || v == "yes")
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize, e.g. `--sizes 100,200,400`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.flags.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn kv_and_eq_and_bool() {
+        // note: a bare `--flag` followed by a non-flag token would consume
+        // it as a value (greedy semantics) — flags go last or use `=`.
+        let a = parse(&["--n", "100", "--tol=1e-3", "pos1", "--verbose"]);
+        assert_eq!(a.get_usize("n", 0), 100);
+        assert!((a.get_f64("tol", 0.0) - 1e-3).abs() < 1e-12);
+        assert!(a.get_bool("verbose", false));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_str("mode", "fast"), "fast");
+        assert!(!a.get_bool("verbose", false));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--sizes", "10,20,30"]);
+        assert_eq!(a.get_usize_list("sizes", &[1]), vec![10, 20, 30]);
+        assert_eq!(a.get_usize_list("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn flag_before_flag_is_boolean() {
+        let a = parse(&["--fast", "--n", "5"]);
+        assert!(a.get_bool("fast", false));
+        assert_eq!(a.get_usize("n", 0), 5);
+    }
+}

@@ -1,0 +1,195 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Each `[[bench]]` target is a `harness = false` binary that uses
+//! [`Bencher`] for warmup + repeated timing and [`Table`] to print the
+//! paper-style rows, and writes machine-readable CSV next to the binary
+//! output (`target/bench_csv/<name>.csv`).
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub reps: usize,
+}
+
+/// Repeated-measurement micro/macro benchmark runner.
+pub struct Bencher {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, reps: 5 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, reps: usize) -> Self {
+        Bencher { warmup, reps }
+    }
+
+    /// Time `f`, returning stats over `reps` runs after `warmup` runs.
+    /// `f` should return something cheap to keep the compiler honest.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        Stats {
+            mean,
+            median: times[times.len() / 2],
+            min: times[0],
+            max: times[times.len() - 1],
+            reps: self.reps,
+        }
+    }
+
+    /// Time one run only (for expensive end-to-end cells).
+    pub fn run_once<T, F: FnOnce() -> T>(&self, f: F) -> (f64, T) {
+        let t0 = Instant::now();
+        let out = f();
+        (t0.elapsed().as_secs_f64(), out)
+    }
+}
+
+/// Fixed-width table printer mirroring the paper's layout.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to stdout with aligned columns.
+    pub fn print(&self) {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut out = String::new();
+            for i in 0..ncol {
+                out.push_str(&format!("{:>w$}  ", cells[i], w = widths[i]));
+            }
+            out
+        };
+        println!("\n== {} ==", self.title);
+        println!("{}", line(&self.header));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+
+    /// Write CSV to `target/bench_csv/<name>.csv`.
+    pub fn write_csv(&self, name: &str) -> std::io::Result<String> {
+        let dir = std::path::Path::new("target/bench_csv");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut body = self.header.join(",") + "\n";
+        for r in &self.rows {
+            body.push_str(&r.join(","));
+            body.push('\n');
+        }
+        std::fs::write(&path, body)?;
+        Ok(path.display().to_string())
+    }
+}
+
+/// Format seconds with sensible precision (paper prints seconds).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-4 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 0.1 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Least-squares slope of log(y) on log(x) — scaling-exponent estimator
+/// used by the Table 1 complexity bench.
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let n = lx.len() as f64;
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let cov: f64 =
+        lx.iter().zip(&ly).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let var: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+    cov / var
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_runs_and_orders_stats() {
+        let b = Bencher::new(1, 5);
+        let s = b.run(|| {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.mean > 0.0);
+        assert_eq!(s.reps, 5);
+    }
+
+    #[test]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn loglog_slope_recovers_cubic() {
+        let xs = [100.0, 200.0, 400.0, 800.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x * x * x).collect();
+        let s = loglog_slope(&xs, &ys);
+        assert!((s - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2.0).ends_with('s'));
+        assert!(fmt_secs(0.005).ends_with("ms"));
+        assert!(fmt_secs(5e-6).ends_with("us"));
+    }
+}

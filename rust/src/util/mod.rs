@@ -1,0 +1,9 @@
+//! Self-contained utilities. The offline environment lacks rand / clap /
+//! criterion / serde; these modules replace exactly what this repo needs.
+pub mod args;
+pub mod bench;
+pub mod rng;
+
+pub use args::Args;
+pub use bench::{Bencher, Stats, Table};
+pub use rng::Pcg64;

@@ -1,0 +1,174 @@
+//! PCG64 (XSL-RR 128/64) pseudo-random generator + distributions.
+//!
+//! The offline environment has no `rand` crate; this is a small,
+//! well-tested PCG implementation (O'Neill 2014) sufficient for workload
+//! generation and property tests. Deterministic given a seed — every
+//! benchmark and test seeds explicitly so runs are reproducible.
+
+/// PCG64: 128-bit LCG state, XSL-RR output to 64 bits.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed with an arbitrary 64-bit value (stream fixed).
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: (0xda3e_39cb_94b9_5bdb_u128 << 1) | 1,
+        };
+        rng.state = rng
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(rng.inc)
+            .wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Next uniform u64.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = self.state;
+        self.step();
+        let xored = ((s >> 64) as u64) ^ (s as u64);
+        let rot = (s >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) (Lemire-ish rejection; n > 0).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (no cached spare: keeps state simple).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-300 {
+                let u2 = self.uniform();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from 0..n (k <= n), sorted.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        // Floyd's algorithm
+        let mut chosen = std::collections::BTreeSet::new();
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        chosen.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_and_roughly_uniform() {
+        let mut r = Pcg64::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(7);
+        let n = 50_000;
+        let xs = r.normal_vec(n);
+        let mean: f64 = xs.iter().sum::<f64>() / n as f64;
+        let var: f64 =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Pcg64::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_indices_distinct_sorted() {
+        let mut r = Pcg64::new(9);
+        let idx = r.sample_indices(50, 10);
+        assert_eq!(idx.len(), 10);
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(idx.iter().all(|&i| i < 50));
+    }
+}

@@ -1,0 +1,195 @@
+//! End-to-end coordinator tests: routing, batching, truncation policy,
+//! fallback, failure handling — on both backends.
+
+use altdiff::coordinator::{Config, Coordinator, Reply};
+use altdiff::prob::dense_qp;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+fn native_coordinator(n: usize, m: usize, p: usize) -> Coordinator {
+    Coordinator::builder(Config {
+        workers: 2,
+        max_batch: 4,
+        batch_deadline: Duration::from_millis(1),
+        artifacts: None,
+        ..Default::default()
+    })
+    .register("layer0", dense_qp(n, m, p, 9), 1.0)
+    .unwrap()
+    .start()
+}
+
+#[test]
+fn native_roundtrip_single_request() {
+    let mut c = native_coordinator(12, 6, 3);
+    let qp = dense_qp(12, 6, 3, 9);
+    c.submit("layer0", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-3);
+    let reply = c.recv_timeout(Duration::from_secs(30)).expect("reply");
+    match reply {
+        Reply::Ok(r) => {
+            assert_eq!(r.x.len(), 12);
+            assert_eq!(r.jx.len(), 12 * 3);
+            assert_eq!(r.backend, "native");
+            assert!(r.k_used >= 10);
+            assert!(r.latency >= 0.0);
+        }
+        Reply::Err(f) => panic!("unexpected failure: {}", f.error),
+    }
+}
+
+#[test]
+fn unknown_layer_yields_failure_not_hang() {
+    let mut c = native_coordinator(8, 4, 2);
+    c.submit("nope", vec![0.0; 8], vec![0.0; 2], vec![0.0; 4], 1e-3);
+    match c.recv_timeout(Duration::from_secs(10)).expect("reply") {
+        Reply::Err(f) => assert!(f.error.contains("unknown layer")),
+        Reply::Ok(_) => panic!("expected failure"),
+    }
+}
+
+#[test]
+fn many_requests_all_answered_exactly_once() {
+    let mut c = native_coordinator(10, 5, 2);
+    let qp = dense_qp(10, 5, 2, 9);
+    let thetas: Vec<_> = (0..17)
+        .map(|i| {
+            let s = 1.0 + 0.01 * i as f64;
+            (
+                qp.q.iter().map(|&v| v * s).collect::<Vec<_>>(),
+                qp.b.clone(),
+                qp.h.clone(),
+            )
+        })
+        .collect();
+    let replies = c.run_all("layer0", thetas, 1e-2);
+    assert_eq!(replies.len(), 17);
+    let mut seen = std::collections::BTreeSet::new();
+    for r in &replies {
+        assert!(seen.insert(r.id()), "duplicate reply id");
+        if let Reply::Ok(ok) = r {
+            assert!(ok.x.iter().all(|v| v.is_finite()));
+        } else {
+            panic!("failure in batch");
+        }
+    }
+    assert!(
+        c.metrics.batches.load(std::sync::atomic::Ordering::Relaxed) >= 5
+    );
+}
+
+#[test]
+fn looser_tolerance_routes_to_fewer_iterations() {
+    let mut c = native_coordinator(12, 6, 3);
+    let qp = dense_qp(12, 6, 3, 9);
+    c.submit("layer0", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-1);
+    let loose = match c.recv_timeout(Duration::from_secs(30)).unwrap() {
+        Reply::Ok(r) => r.k_used,
+        Reply::Err(f) => panic!("{}", f.error),
+    };
+    c.submit("layer0", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-4);
+    let tight = match c.recv_timeout(Duration::from_secs(30)).unwrap() {
+        Reply::Ok(r) => r.k_used,
+        Reply::Err(f) => panic!("{}", f.error),
+    };
+    assert!(
+        loose <= tight,
+        "k(1e-1)={loose} should be <= k(1e-4)={tight}"
+    );
+}
+
+#[test]
+fn pjrt_backend_serves_compiled_sizes() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("artifacts missing; skipping pjrt coordinator test");
+        return;
+    };
+    let qp = dense_qp(16, 8, 4, 3);
+    let mut c = Coordinator::builder(Config {
+        workers: 1,
+        max_batch: 8,
+        batch_deadline: Duration::from_millis(1),
+        artifacts: Some(dir),
+        ..Default::default()
+    })
+    .register("qp16", qp.clone(), 1.0)
+    .unwrap()
+    .start();
+    let thetas: Vec<_> = (0..8)
+        .map(|i| {
+            let s = 1.0 + 0.02 * i as f64;
+            (
+                qp.q.iter().map(|&v| v * s).collect::<Vec<_>>(),
+                qp.b.clone(),
+                qp.h.clone(),
+            )
+        })
+        .collect();
+    let replies = c.run_all("qp16", thetas, 1e-3);
+    assert_eq!(replies.len(), 8);
+    let mut pjrt_served = 0;
+    for r in replies {
+        if let Reply::Ok(ok) = r {
+            if ok.backend == "pjrt" {
+                pjrt_served += 1;
+            }
+            assert!(ok.x.iter().all(|v| v.is_finite()));
+            assert!(ok.prim_residual.is_finite());
+        } else {
+            panic!("failure");
+        }
+    }
+    assert!(pjrt_served > 0, "no request served by the compiled path");
+}
+
+#[test]
+fn pjrt_and_native_agree_through_coordinator() {
+    let Some(dir) = artifacts_dir() else { return };
+    let qp = dense_qp(16, 8, 4, 5);
+    let mk = |artifacts: Option<PathBuf>| {
+        Coordinator::builder(Config {
+            workers: 1,
+            max_batch: 1,
+            batch_deadline: Duration::from_millis(1),
+            artifacts,
+            ..Default::default()
+        })
+        .register("l", qp.clone(), 1.0)
+        .unwrap()
+        .start()
+    };
+    let solve = |c: &mut Coordinator| -> Vec<f64> {
+        c.submit("l", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-3);
+        match c.recv_timeout(Duration::from_secs(30)).unwrap() {
+            Reply::Ok(r) => r.x,
+            Reply::Err(f) => panic!("{}", f.error),
+        }
+    };
+    let mut cp = mk(Some(dir));
+    let mut cn = mk(None);
+    let xp = solve(&mut cp);
+    let xn = solve(&mut cn);
+    for i in 0..16 {
+        assert!(
+            (xp[i] - xn[i]).abs() < 1e-3,
+            "x[{i}]: pjrt {} native {}",
+            xp[i],
+            xn[i]
+        );
+    }
+}
+
+#[test]
+fn shutdown_is_clean_with_pending_work() {
+    let mut c = native_coordinator(10, 5, 2);
+    let qp = dense_qp(10, 5, 2, 9);
+    for _ in 0..3 {
+        c.submit("layer0", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-2);
+    }
+    // immediate shutdown must not deadlock; pending work is flushed.
+    c.shutdown();
+}

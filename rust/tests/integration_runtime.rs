@@ -1,0 +1,174 @@
+//! Compiled-path parity: the PJRT-executed artifact must reproduce the
+//! native Rust engine bit-for-bit up to f32 round-off. This is the test
+//! that proves L1 (Pallas) → L2 (JAX scan) → AOT HLO → L3 (rust PJRT)
+//! compose into the same algorithm as the native implementation.
+
+use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::prob::dense_qp;
+use altdiff::runtime::{Engine, Manifest};
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+/// Run variant (n,m,p,k,b1) on PJRT and natively; compare x and ∂x/∂b.
+fn parity_case(n: usize, m: usize, p: usize, k: usize) {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    };
+    let mut eng = Engine::new(&dir).expect("engine");
+    let name = format!("qp_n{n}_m{m}_p{p}_k{k}_b1");
+    if eng.manifest.get(&name).is_none() {
+        eprintln!("variant {name} not in manifest; skipping");
+        return;
+    }
+    let qp = dense_qp(n, m, p, 42 + n as u64);
+    let native = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+    let hinv = native.hinv();
+
+    let out = eng
+        .execute_dense(&name, &hinv, &qp.a, &qp.g, &qp.q, &qp.b, &qp.h)
+        .expect("pjrt execute");
+
+    // native, exactly k iterations (tol=0 disables truncation)
+    let sol = native.solve(&Options {
+        tol: 0.0,
+        max_iter: k,
+        jacobian: Some(Param::B),
+        ..Default::default()
+    });
+    assert_eq!(sol.iters, k);
+
+    let xerr: f64 = out
+        .x
+        .iter()
+        .zip(&sol.x)
+        .map(|(&a, &b)| (a as f64 - b).abs())
+        .fold(0.0, f64::max);
+    assert!(xerr < 5e-4, "{name}: max |x_pjrt - x_native| = {xerr}");
+
+    let j = sol.jacobian.unwrap();
+    let jerr: f64 = out
+        .jx
+        .iter()
+        .zip(&j.data)
+        .map(|(&a, &b)| (a as f64 - b).abs())
+        .fold(0.0, f64::max);
+    assert!(jerr < 5e-3, "{name}: max |J_pjrt - J_native| = {jerr}");
+
+    // residual outputs are finite and sane
+    assert!(out.prim[0].is_finite() && out.prim[0] >= 0.0);
+    assert!(out.dual[0].is_finite() && out.dual[0] >= 0.0);
+}
+
+#[test]
+fn pjrt_matches_native_n16_k40() {
+    parity_case(16, 8, 4, 40);
+}
+
+#[test]
+fn pjrt_matches_native_n32_k20() {
+    parity_case(32, 16, 8, 20);
+}
+
+#[test]
+fn pjrt_matches_native_n64_k80() {
+    parity_case(64, 32, 12, 80);
+}
+
+#[test]
+fn pjrt_batched_variant_matches_per_request() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut eng = Engine::new(&dir).unwrap();
+    let (n, m, p, k, bsz) = (16usize, 8usize, 4usize, 20usize, 8usize);
+    let name = format!("qp_n{n}_m{m}_p{p}_k{k}_b{bsz}");
+    if eng.manifest.get(&name).is_none() {
+        return;
+    }
+    let qp = dense_qp(n, m, p, 7);
+    let native = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+    let hinv = native.hinv();
+    // batch of 8 perturbed θ
+    let mut qs = Vec::new();
+    let mut bs = Vec::new();
+    let mut hs = Vec::new();
+    for i in 0..bsz {
+        let scale = 1.0 + 0.05 * i as f64;
+        qs.extend(qp.q.iter().map(|&v| (v * scale) as f32));
+        bs.extend(qp.b.iter().map(|&v| (v * scale) as f32));
+        hs.extend(qp.h.iter().map(|&v| (v + 0.01 * i as f64) as f32));
+    }
+    let out = eng
+        .execute(
+            &name,
+            &hinv.to_f32(),
+            &qp.a.to_f32(),
+            &qp.g.to_f32(),
+            &qs,
+            &bs,
+            &hs,
+        )
+        .unwrap();
+    assert_eq!(out.x.len(), bsz * n);
+    assert_eq!(out.jx.len(), bsz * n * p);
+    // element 3 must match a single native run with the same θ
+    let i = 3;
+    let scale = 1.0 + 0.05 * i as f64;
+    let q3: Vec<f64> = qp.q.iter().map(|&v| v * scale).collect();
+    let b3: Vec<f64> = qp.b.iter().map(|&v| v * scale).collect();
+    let h3: Vec<f64> = qp.h.iter().map(|&v| v + 0.01 * i as f64).collect();
+    let sol = native.solve_with(
+        Some(&q3),
+        Some(&b3),
+        Some(&h3),
+        &Options {
+            tol: 0.0,
+            max_iter: k,
+            jacobian: Some(Param::B),
+            ..Default::default()
+        },
+    );
+    for j in 0..n {
+        let got = out.x[i * n + j] as f64;
+        assert!(
+            (got - sol.x[j]).abs() < 1e-3,
+            "batched x[{j}]: {got} vs {}",
+            sol.x[j]
+        );
+    }
+}
+
+#[test]
+fn engine_rejects_wrong_arity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut eng = Engine::new(&dir).unwrap();
+    let name = eng.manifest.variants[0].name.clone();
+    let err = eng.execute(&name, &[0.0f32; 3], &[], &[], &[], &[], &[]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn engine_unknown_variant_is_registry_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut eng = Engine::new(&dir).unwrap();
+    assert!(eng.compile("qp_nope").is_err());
+}
+
+#[test]
+fn manifest_families_cover_ladder() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    for (n, m, p) in man.sizes() {
+        let fam = man.family(n, m, p, 1);
+        assert!(
+            fam.len() >= 2,
+            "size ({n},{m},{p}) needs a k-ladder for truncation routing"
+        );
+        for w in fam.windows(2) {
+            assert!(w[0].k < w[1].k);
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Cross-module validation of the paper's two theorems and the complexity
+//! story, at sizes larger than the unit tests use.
+
+use altdiff::altdiff::{DenseAltDiff, Options, Param, SparseAltDiff};
+use altdiff::baselines::{self, conic};
+use altdiff::linalg::{cosine, norm2, sub_vec};
+use altdiff::prob::{dense_qp, sparse_qp, sparsemax_qp};
+
+/// Thm 4.2 at n=80 for all three parameterizations.
+#[test]
+fn thm42_altdiff_converges_to_kkt_gradient() {
+    let qp = dense_qp(80, 40, 16, 1);
+    let solver = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+    for param in [Param::B, Param::Q, Param::H] {
+        let (_, jkkt, _) =
+            baselines::optnet_layer(&qp, param, 1e-11).unwrap();
+        let sol = solver.solve(&Options {
+            tol: 1e-11,
+            max_iter: 200_000,
+            jacobian: Some(param),
+            ..Default::default()
+        });
+        let cos = cosine(&sol.jacobian.unwrap().data, &jkkt.data);
+        assert!(cos > 0.999, "{param:?}: cosine {cos}");
+    }
+}
+
+/// Thm 4.3: the Jacobian error is bounded by C₁‖x_k − x*‖ with a single
+/// constant across tolerances.
+#[test]
+fn thm43_truncation_error_is_same_order() {
+    let qp = dense_qp(60, 30, 12, 2);
+    let solver = DenseAltDiff::new(qp, 1.0).unwrap();
+    let exact = solver.solve(&Options {
+        tol: 1e-12,
+        max_iter: 200_000,
+        jacobian: Some(Param::B),
+        ..Default::default()
+    });
+    let jstar = exact.jacobian.as_ref().unwrap();
+    let mut ratios = Vec::new();
+    for tol in [1e-1, 1e-2, 1e-3, 1e-4, 1e-5] {
+        let sol = solver.solve(&Options {
+            tol,
+            max_iter: 200_000,
+            jacobian: Some(Param::B),
+            ..Default::default()
+        });
+        let xerr = norm2(&sub_vec(&sol.x, &exact.x)).max(1e-14);
+        let jerr = sol.jacobian.unwrap().sub(jstar).fro();
+        ratios.push(jerr / xerr);
+    }
+    let mx = ratios.iter().cloned().fold(f64::MIN, f64::max);
+    let mn = ratios.iter().cloned().fold(f64::MAX, f64::min).max(1e-9);
+    assert!(
+        mx / mn < 200.0,
+        "C1 ratio not same-order across tolerances: {ratios:?}"
+    );
+}
+
+/// All differentiation engines agree on the same problem.
+#[test]
+fn multi_engine_gradient_agreement() {
+    let qp = dense_qp(40, 20, 8, 3);
+    let dense = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+    let j_alt = dense
+        .solve(&Options {
+            tol: 1e-11,
+            max_iter: 100_000,
+            jacobian: Some(Param::B),
+            ..Default::default()
+        })
+        .jacobian
+        .unwrap();
+    let (_, j_kkt, _) =
+        baselines::optnet_layer(&qp, Param::B, 1e-11).unwrap();
+    let j_cvx = conic::cvxpylayer_sim(&qp, Param::B, 1e-10)
+        .unwrap()
+        .jacobian;
+    assert!(cosine(&j_alt.data, &j_kkt.data) > 0.999);
+    assert!(cosine(&j_alt.data, &j_cvx.data) > 0.995);
+
+    // sparse engine (CG path) vs dense engine on a diagonal-P problem
+    let sq = sparse_qp(40, 20, 8, 0.2, 3);
+    let j_sp = SparseAltDiff::new(sq.clone(), 1.0)
+        .unwrap()
+        .solve(&Options {
+            tol: 1e-11,
+            max_iter: 100_000,
+            jacobian: Some(Param::B),
+            ..Default::default()
+        })
+        .jacobian
+        .unwrap();
+    let j_dd = DenseAltDiff::new(sq.to_dense(), 1.0)
+        .unwrap()
+        .solve(&Options {
+            tol: 1e-11,
+            max_iter: 100_000,
+            jacobian: Some(Param::B),
+            ..Default::default()
+        })
+        .jacobian
+        .unwrap();
+    assert!(cosine(&j_sp.data, &j_dd.data) > 0.9999);
+}
+
+/// The sparse engine's two paths (Sherman–Morrison vs CG) agree with the
+/// dense engine on their respective problem classes at n=200.
+#[test]
+fn sparse_engines_match_dense_at_scale() {
+    let opts = Options {
+        tol: 1e-10,
+        max_iter: 100_000,
+        jacobian: Some(Param::B),
+        ..Default::default()
+    };
+    // SM path
+    let sm = sparsemax_qp(200, 4);
+    let s_sm = SparseAltDiff::new(sm.clone(), 1.0).unwrap();
+    assert!(s_sm.uses_sherman_morrison());
+    let d_sm = DenseAltDiff::new(sm.to_dense(), 1.0).unwrap();
+    let a = s_sm.solve(&opts);
+    let b = d_sm.solve(&opts);
+    assert!(norm2(&sub_vec(&a.x, &b.x)) < 1e-6);
+    assert!(a.jacobian.unwrap().sub(&b.jacobian.unwrap()).fro() < 1e-5);
+
+    // CG path
+    let sq = sparse_qp(150, 70, 25, 0.05, 5);
+    let s_cg = SparseAltDiff::new(sq.clone(), 1.0).unwrap();
+    assert!(!s_cg.uses_sherman_morrison());
+    let d_cg = DenseAltDiff::new(sq.to_dense(), 1.0).unwrap();
+    let a = s_cg.solve(&opts);
+    let b = d_cg.solve(&opts);
+    assert!(norm2(&sub_vec(&a.x, &b.x)) < 1e-5);
+}
+
+/// Failure injection: infeasible equality constraints must not panic —
+/// ADMM fails to converge but stays finite.
+#[test]
+fn infeasible_problem_does_not_panic() {
+    let mut qp = dense_qp(10, 5, 2, 6);
+    for j in 0..10 {
+        let v = qp.a[(0, j)];
+        qp.a[(1, j)] = v;
+    }
+    qp.b[1] = qp.b[0] + 10.0;
+    let solver = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+    let sol = solver.solve(&Options {
+        tol: 1e-8,
+        max_iter: 500,
+        jacobian: Some(Param::B),
+        ..Default::default()
+    });
+    // ADMM on an infeasible program: x may stabilize (the least-squares
+    // compromise) but primal feasibility is impossible — detectable.
+    assert!(sol.x.iter().all(|v| v.is_finite()));
+    let (eq, _) = qp.feasibility(&sol.x);
+    assert!(eq > 1e-2, "infeasibility must show up in the residual: {eq}");
+}
+
+/// Failure injection: a PSD-but-singular P still registers (ρAᵀA + ρGᵀG
+/// regularize H) and solves the resulting LP.
+#[test]
+fn singular_p_is_handled_by_penalty_terms() {
+    // H = ρAᵀA + ρGᵀG alone can be singular (rank m+p < n) — the ridge
+    // fallback in registration must absorb it.
+    let mut qp = dense_qp(12, 6, 3, 7);
+    qp.p = altdiff::linalg::Mat::zeros(12, 12);
+    let solver = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+    let sol = solver.solve(&Options {
+        tol: 1e-8,
+        max_iter: 50_000,
+        jacobian: None,
+        ..Default::default()
+    });
+    let (eq, viol) = qp.feasibility(&sol.x);
+    assert!(eq < 1e-4 && viol < 1e-4, "LP solve infeasible: {eq} {viol}");
+}

@@ -1,0 +1,73 @@
+//! End-to-end training smoke tests (the §5.2 / §5.3 pipelines), small
+//! enough for CI but exercising the full network + optimization layer +
+//! optimizer loop.
+
+use altdiff::nn::OptBackend;
+use altdiff::train::{
+    train_energy, train_mnist, EnergyBackend, EnergyConfig, MnistConfig,
+};
+
+#[test]
+fn energy_pipeline_trains_and_truncation_is_cheap() {
+    let tight = train_energy(&EnergyConfig {
+        backend: EnergyBackend::AltDiff(1e-3),
+        epochs: 4,
+        days: 8,
+        seed: 5,
+        ..Default::default()
+    });
+    assert!(tight.losses.last().unwrap() < &tight.losses[0]);
+    let loose = train_energy(&EnergyConfig {
+        backend: EnergyBackend::AltDiff(1e-1),
+        epochs: 4,
+        days: 8,
+        seed: 5,
+        ..Default::default()
+    });
+    // truncation cuts layer iterations (the Fig. 2b mechanism)
+    assert!(loose.mean_iters < tight.mean_iters);
+    // and still trains
+    assert!(loose.losses.last().unwrap() < &loose.losses[0]);
+}
+
+#[test]
+fn energy_cvxpylayer_sim_backend_runs() {
+    let rep = train_energy(&EnergyConfig {
+        backend: EnergyBackend::CvxpyLayerSim,
+        epochs: 2,
+        days: 5,
+        seed: 6,
+        ..Default::default()
+    });
+    assert_eq!(rep.losses.len(), 2);
+    assert!(rep.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn mnist_pipeline_altdiff_vs_optnet_parity() {
+    let base = MnistConfig {
+        epochs: 2,
+        train_size: 120,
+        test_size: 60,
+        layer_dim: 16,
+        layer_eq: 4,
+        layer_ineq: 4,
+        noise: 0.3,
+        seed: 2,
+        ..Default::default()
+    };
+    let alt = train_mnist(&MnistConfig {
+        backend: OptBackend::AltDiff,
+        ..base.clone()
+    });
+    let opt = train_mnist(&MnistConfig {
+        backend: OptBackend::OptNetKkt,
+        ..base
+    });
+    let aa = *alt.test_accs.last().unwrap();
+    let oa = *opt.test_accs.last().unwrap();
+    assert!(aa > 0.3, "alt-diff acc {aa}");
+    assert!(oa > 0.3, "optnet acc {oa}");
+    // Table 6 parity claim: same network, comparable accuracy
+    assert!((aa - oa).abs() < 0.25, "parity broken: {aa} vs {oa}");
+}

@@ -1,0 +1,237 @@
+//! Property-based tests (in-repo generator loops — proptest is not
+//! available offline; seeds are explicit so failures reproduce).
+
+use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::coordinator::{Batcher, Request, TruncationTable};
+use altdiff::linalg::{gemv, Chol, Lu, Mat};
+use altdiff::prob::dense_qp;
+use altdiff::sparse::Csr;
+use altdiff::util::Pcg64;
+use std::time::{Duration, Instant};
+
+const CASES: usize = 40;
+
+fn rand_mat(r: usize, c: usize, rng: &mut Pcg64) -> Mat {
+    Mat::from_vec(r, c, rng.normal_vec(r * c))
+}
+
+/// ∀ random SPD A, b: Chol solve residual ≈ 0 and A = LLᵀ.
+#[test]
+fn prop_cholesky_solve_residual() {
+    let mut rng = Pcg64::new(101);
+    for case in 0..CASES {
+        let n = 2 + rng.below(30);
+        let raw = rand_mat(n, n, &mut rng);
+        let mut spd = altdiff::linalg::ata(&raw);
+        for i in 0..n {
+            spd[(i, i)] += n as f64;
+        }
+        let ch = Chol::factor(&spd).unwrap();
+        let b = rng.normal_vec(n);
+        let x = ch.solve(&b);
+        let ax = gemv(&spd, &x);
+        for i in 0..n {
+            assert!(
+                (ax[i] - b[i]).abs() < 1e-7,
+                "case {case} n={n}: residual {}",
+                (ax[i] - b[i]).abs()
+            );
+        }
+    }
+}
+
+/// ∀ random square A (well-conditioned by diagonal boost): LU solves.
+#[test]
+fn prop_lu_solve_residual() {
+    let mut rng = Pcg64::new(102);
+    for _ in 0..CASES {
+        let n = 2 + rng.below(25);
+        let mut a = rand_mat(n, n, &mut rng);
+        for i in 0..n {
+            a[(i, i)] += 3.0;
+        }
+        let xtrue = rng.normal_vec(n);
+        let b = gemv(&a, &xtrue);
+        let x = Lu::factor(&a).unwrap().solve(&b);
+        for i in 0..n {
+            assert!((x[i] - xtrue[i]).abs() < 1e-6);
+        }
+    }
+}
+
+/// ∀ random sparse matrices: spmv agrees with dense, transpose twice is id.
+#[test]
+fn prop_csr_spmv_matches_dense() {
+    let mut rng = Pcg64::new(103);
+    for _ in 0..CASES {
+        let r = 1 + rng.below(20);
+        let c = 1 + rng.below(20);
+        let mut t = Vec::new();
+        for i in 0..r {
+            for j in 0..c {
+                if rng.uniform() < 0.3 {
+                    t.push((i, j, rng.normal()));
+                }
+            }
+        }
+        let s = Csr::from_triplets(r, c, &t);
+        let d = s.to_dense();
+        let x = rng.normal_vec(c);
+        let ys = s.spmv(&x);
+        let yd = gemv(&d, &x);
+        for i in 0..r {
+            assert!((ys[i] - yd[i]).abs() < 1e-10);
+        }
+        let tt = s.transpose().transpose();
+        assert!(tt.to_dense().max_abs_diff(&d) < 1e-12);
+    }
+}
+
+/// ∀ random QPs: ADMM invariants hold at every iteration — s ≥ 0 always,
+/// and the solution is primal-feasible at convergence.
+#[test]
+fn prop_admm_slack_nonnegative_and_feasible() {
+    let mut rng = Pcg64::new(104);
+    for case in 0..15 {
+        let n = 5 + rng.below(20);
+        let m = 1 + rng.below(n);
+        let p = 1 + rng.below(n / 2 + 1);
+        let qp = dense_qp(n, m, p, 1000 + case as u64);
+        let solver = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+        let sol = solver.solve(&Options {
+            tol: 1e-9,
+            max_iter: 100_000,
+            jacobian: None,
+            ..Default::default()
+        });
+        assert!(sol.s.iter().all(|&v| v >= 0.0), "case {case}");
+        let (eq, viol) = qp.feasibility(&sol.x);
+        assert!(eq < 1e-4, "case {case}: eq {eq}");
+        assert!(viol < 1e-4, "case {case}: viol {viol}");
+        assert!(sol.nu.iter().all(|&v| v >= -1e-6), "dual feasibility");
+    }
+}
+
+/// ∀ random QPs: the Jacobian is the derivative — directional FD check
+/// in a random direction (cheaper than the full FD in unit tests).
+#[test]
+fn prop_jacobian_directional_derivative() {
+    let mut rng = Pcg64::new(105);
+    for case in 0..10 {
+        let n = 6 + rng.below(10);
+        let m = 2 + rng.below(4);
+        let p = 1 + rng.below(3);
+        let qp = dense_qp(n, m, p, 2000 + case as u64);
+        let solver = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+        let opts = Options {
+            tol: 1e-11,
+            max_iter: 100_000,
+            jacobian: Some(Param::B),
+            ..Default::default()
+        };
+        let sol = solver.solve(&opts);
+        let j = sol.jacobian.unwrap();
+        let dir: Vec<f64> = rng.normal_vec(p);
+        let eps = 1e-5;
+        let bp: Vec<f64> =
+            qp.b.iter().zip(&dir).map(|(b, d)| b + eps * d).collect();
+        let bm: Vec<f64> =
+            qp.b.iter().zip(&dir).map(|(b, d)| b - eps * d).collect();
+        let fopts = Options { jacobian: None, ..opts };
+        let xp = solver.solve_with(None, Some(&bp), None, &fopts).x;
+        let xm = solver.solve_with(None, Some(&bm), None, &fopts).x;
+        for i in 0..n {
+            let fd = (xp[i] - xm[i]) / (2.0 * eps);
+            let jd: f64 = (0..p).map(|c| j[(i, c)] * dir[c]).sum();
+            assert!(
+                (jd - fd).abs() < 5e-3 * (1.0 + fd.abs()),
+                "case {case} x[{i}]: J·d={jd} fd={fd}"
+            );
+        }
+    }
+}
+
+/// Batcher properties under random traffic: never mixes keys, never drops
+/// or duplicates a request, preserves arrival order within a key.
+#[test]
+fn prop_batcher_conservation() {
+    let mut rng = Pcg64::new(106);
+    for _ in 0..30 {
+        let max_batch = 1 + rng.below(6);
+        let mut b = Batcher::new(max_batch, Duration::from_secs(3600));
+        let layers = ["a", "b", "c"];
+        let ks = [10usize, 20];
+        let total = 30 + rng.below(50);
+        let mut sent: Vec<(String, usize, u64)> = Vec::new();
+        let mut got: Vec<(String, usize, u64)> = Vec::new();
+        for id in 0..total as u64 {
+            let layer = layers[rng.below(3)];
+            let k = ks[rng.below(2)];
+            sent.push((layer.to_string(), k, id));
+            let req = Request {
+                id,
+                layer: layer.to_string(),
+                q: vec![],
+                b: vec![],
+                h: vec![],
+                tol: 1e-3,
+                submitted: Instant::now(),
+            };
+            if let Some(batch) = b.push(layer, k, req) {
+                assert!(batch.requests.len() <= max_batch);
+                for r in &batch.requests {
+                    assert_eq!(r.layer, batch.layer, "mixed layers");
+                    got.push((batch.layer.clone(), batch.k, r.id));
+                }
+            }
+        }
+        for batch in b.flush_all() {
+            for r in &batch.requests {
+                got.push((batch.layer.clone(), batch.k, r.id));
+            }
+        }
+        assert_eq!(got.len(), sent.len(), "lost or duplicated requests");
+        let mut gs: Vec<u64> = got.iter().map(|(_, _, id)| *id).collect();
+        gs.sort_unstable();
+        gs.dedup();
+        assert_eq!(gs.len(), sent.len());
+        // order within key preserved
+        for layer in layers {
+            for k in ks {
+                let s: Vec<u64> = sent
+                    .iter()
+                    .filter(|(l, kk, _)| l == layer && *kk == k)
+                    .map(|(_, _, id)| *id)
+                    .collect();
+                let g: Vec<u64> = got
+                    .iter()
+                    .filter(|(l, kk, _)| l == layer && *kk == k)
+                    .map(|(_, _, id)| *id)
+                    .collect();
+                assert_eq!(s, g, "order broken for ({layer},{k})");
+            }
+        }
+    }
+}
+
+/// Truncation table properties: k_for is monotone (tighter tol → ≥ k) and
+/// always lands on a ladder rung.
+#[test]
+fn prop_truncation_table_monotone_on_ladder() {
+    let mut rng = Pcg64::new(107);
+    for _ in 0..30 {
+        let rate = 0.5 + 0.45 * rng.uniform();
+        let trace: Vec<f64> =
+            (0..200).map(|i| rate.powi(i as i32)).collect();
+        let ladder = [10usize, 20, 40, 80];
+        let tols = [1e-1, 1e-2, 1e-3, 1e-4, 1e-5];
+        let t = TruncationTable::calibrate(&ladder, &trace, &tols);
+        let mut prev = 0usize;
+        for &tol in tols.iter() {
+            let k = t.k_for(tol);
+            assert!(ladder.contains(&k), "k={k} off ladder");
+            assert!(k >= prev, "not monotone");
+            prev = k;
+        }
+    }
+}
