@@ -9,7 +9,7 @@ use altdiff::baselines;
 use altdiff::linalg::cosine;
 use altdiff::prob::dense_qp;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> altdiff::Result<()> {
     // a dense QP layer: min ½xᵀPx + qᵀx  s.t. Ax=b, Gx≤h
     let (n, m, p) = (50, 25, 10);
     let qp = dense_qp(n, m, p, 0);

@@ -1,0 +1,148 @@
+//! Batched vs sequential native Alt-Diff throughput (ours): the tentpole
+//! claim of the `batch` subsystem — solving B instances of one registered
+//! layer as a single batch-major launch beats B sequential
+//! `DenseAltDiff::solve_with` calls, because every per-instance gemv and
+//! d-column gemm becomes one GEMM with B-fold more columns (plus the
+//! parallel row-split kernels engage).
+//!
+//! Grid: B ∈ {1, 8, 32, 128} × n ∈ {50, 200, 500} (m = n/2, p = n/5),
+//! fixed-k forward+Jacobian (∂x/∂b) runs, the serving configuration.
+//! Every cell also cross-checks max |x_batched − x_sequential|.
+//!
+//! Run: cargo bench --bench bench_batched_native [-- --quick]
+//!      [--sizes 50,200] [--batches 1,8,32] [--k 10]
+
+use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::batch::BatchedAltDiff;
+use altdiff::prob::dense_qp;
+use altdiff::util::{Args, Pcg64, Table};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse();
+    let quick = args.has("quick");
+    let default_sizes: &[usize] =
+        if quick { &[50, 200] } else { &[50, 200, 500] };
+    let default_batches: &[usize] =
+        if quick { &[1, 8, 32] } else { &[1, 8, 32, 128] };
+    let sizes = args.get_usize_list("sizes", default_sizes);
+    let batches = args.get_usize_list("batches", default_batches);
+    let k = args.get_usize("k", 10);
+
+    let mut t = Table::new(
+        &format!(
+            "Batched native engine — one launch vs B sequential solves \
+             (k={k}, ∂x/∂b)"
+        ),
+        &[
+            "n",
+            "B",
+            "seq (s)",
+            "batched (s)",
+            "seq inst/s",
+            "batched inst/s",
+            "speedup",
+            "max|Δx|",
+        ],
+    );
+
+    let mut b32_n200_speedup = None;
+    for &n in &sizes {
+        let (m, p) = (n / 2, n / 5);
+        let qp = dense_qp(n, m, p, 42 + n as u64);
+        let dense = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+        let batched = BatchedAltDiff::from_dense(&dense);
+        let opts = Options {
+            tol: 0.0, // serving semantics: exactly k iterations
+            max_iter: k,
+            jacobian: Some(Param::B),
+            ..Default::default()
+        };
+        for &bsz in &batches {
+            // perturbed θ per instance (same structure, different rhs)
+            let mut rng = Pcg64::new(7 + bsz as u64);
+            let qs: Vec<Vec<f64>> = (0..bsz)
+                .map(|_| {
+                    qp.q.iter()
+                        .map(|&v| v * (1.0 + 0.1 * rng.normal()))
+                        .collect()
+                })
+                .collect();
+            let bs: Vec<Vec<f64>> = (0..bsz)
+                .map(|_| {
+                    qp.b.iter().map(|&v| v + 0.05 * rng.normal()).collect()
+                })
+                .collect();
+            let hs: Vec<Vec<f64>> = (0..bsz)
+                .map(|_| {
+                    qp.h.iter()
+                        .map(|&v| v + (0.1 * rng.normal()).abs())
+                        .collect()
+                })
+                .collect();
+
+            // sequential arm: B independent dense solves
+            let t0 = Instant::now();
+            let seq: Vec<Vec<f64>> = (0..bsz)
+                .map(|e| {
+                    dense
+                        .solve_with(
+                            Some(&qs[e]),
+                            Some(&bs[e]),
+                            Some(&hs[e]),
+                            &opts,
+                        )
+                        .x
+                })
+                .collect();
+            let t_seq = t0.elapsed().as_secs_f64();
+
+            // batched arm: one launch
+            let qr: Vec<&[f64]> = qs.iter().map(|v| v.as_slice()).collect();
+            let br: Vec<&[f64]> = bs.iter().map(|v| v.as_slice()).collect();
+            let hr: Vec<&[f64]> = hs.iter().map(|v| v.as_slice()).collect();
+            let t0 = Instant::now();
+            let sol = batched.solve_batch(
+                Some(&qr),
+                Some(&br),
+                Some(&hr),
+                &opts,
+            );
+            let t_bat = t0.elapsed().as_secs_f64();
+
+            let mut dx = 0.0f64;
+            for e in 0..bsz {
+                for i in 0..n {
+                    dx = dx.max((sol.xs[e][i] - seq[e][i]).abs());
+                }
+            }
+            let speedup = t_seq / t_bat.max(1e-12);
+            if n == 200 && bsz == 32 {
+                b32_n200_speedup = Some(speedup);
+            }
+            t.row(&[
+                n.to_string(),
+                bsz.to_string(),
+                format!("{t_seq:.4}"),
+                format!("{t_bat:.4}"),
+                format!("{:.0}", bsz as f64 / t_seq),
+                format!("{:.0}", bsz as f64 / t_bat),
+                format!("{speedup:.2}x"),
+                format!("{dx:.1e}"),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv("batched_native").unwrap();
+    if let Some(s) = b32_n200_speedup {
+        println!(
+            "\nheadline cell (n=200, B=32): {s:.2}x batched over \
+             sequential (target ≥ 3x)"
+        );
+    }
+    println!(
+        "claims: batch-major GEMM + masked kernels turn the native \
+         fallback and minibatch training into one launch per batch; \
+         max|Δx| confirms per-element parity."
+    );
+}

@@ -17,14 +17,16 @@ use crate::prob::Qp;
 pub struct DenseAltDiff {
     pub qp: Qp,
     pub rho: f64,
-    chol: Chol,
+    pub(crate) chol: Chol,
     /// Explicit H⁻¹. One extra n³ at registration, but the backward's
     /// (7a) becomes a single blocked gemm instead of d column-wise
     /// triangular-solve pairs — measured 2.3× faster on the n=128
     /// full-Jacobian training path (EXPERIMENTS.md §Perf).
-    hinv_cache: Mat,
-    at: Mat, // Aᵀ cached (n,p)
-    gt: Mat, // Gᵀ cached (n,m)
+    /// (pub(crate): `batch::BatchedAltDiff` shares the factorization
+    /// instead of re-paying the registration n³.)
+    pub(crate) hinv_cache: Mat,
+    pub(crate) at: Mat, // Aᵀ cached (n,p)
+    pub(crate) gt: Mat, // Gᵀ cached (n,m)
 }
 
 impl DenseAltDiff {

@@ -1,0 +1,466 @@
+//! The batched dense-QP Alt-Diff engine.
+//!
+//! Registration shares the [`DenseAltDiff`] Cholesky/H⁻¹ caches (no
+//! second n³); every iteration is then batch-major GEMM work:
+//!
+//!   forward (5a): RHS = C_q − Λ A − N G + ρ(H_θ − S) G;  X = RHS H⁻¹
+//!   backward (7a): J_x = −H⁻¹ (Aᵀ J_λ + Gᵀ J_ν + ρGᵀ J_s + ∂θ-const)
+//!
+//! with per-element truncation handled by the row/column masks (see the
+//! module docs in [`super`]). FP note: the masked kernels preserve the
+//! serial accumulation order per output entry, and the (5a) solve uses
+//! the cached explicit H⁻¹ (like the dense backward), so per-element
+//! results agree with `DenseAltDiff` to solver tolerance.
+
+use super::mask::ActiveSet;
+use super::BatchSolution;
+use crate::altdiff::{DenseAltDiff, Options, Param};
+use crate::error::Result;
+use crate::linalg::{
+    axpy_cols, gemm_acc_cols, gemm_acc_rows, norm2, par_gemm_acc, Mat,
+};
+use crate::prob::Qp;
+
+/// A registered QP structure ready to solve B right-hand sides per launch.
+pub struct BatchedAltDiff {
+    pub qp: Qp,
+    pub rho: f64,
+    /// explicit H⁻¹ shared by forward (5a) and backward (7a)
+    hinv: Mat,
+    at: Mat, // Aᵀ (n,p)
+    gt: Mat, // Gᵀ (n,m)
+}
+
+impl BatchedAltDiff {
+    /// Register from scratch (factors H once, like `DenseAltDiff::new`).
+    pub fn new(qp: Qp, rho: f64) -> Result<Self> {
+        let dense = DenseAltDiff::new(qp, rho)?;
+        Ok(Self::from_dense(&dense))
+    }
+
+    /// Share an already-registered layer's factorization caches — the
+    /// cheap path for the server, which keeps both engines per layer.
+    pub fn from_dense(solver: &DenseAltDiff) -> Self {
+        BatchedAltDiff {
+            qp: solver.qp.clone(),
+            rho: solver.rho,
+            hinv: solver.hinv_cache.clone(),
+            at: solver.at.clone(),
+            gt: solver.gt.clone(),
+        }
+    }
+
+    /// Solve + differentiate B instances in one launch. Each of
+    /// `qs`/`bs`/`hs` is either one slice per element or `None` to
+    /// broadcast the registered parameter; the batch size is inferred
+    /// from whichever is provided (1 if none are).
+    pub fn solve_batch(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        opts: &Options,
+    ) -> BatchSolution {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        let rho = self.rho; // registration-time, like DenseAltDiff
+        let bsz = qs
+            .map(|v| v.len())
+            .or_else(|| bs.map(|v| v.len()))
+            .or_else(|| hs.map(|v| v.len()))
+            .unwrap_or(1);
+        assert!(bsz > 0, "empty batch");
+
+        // batch-major parameter matrices (broadcast registered θ)
+        let qm = gather(qs, &self.qp.q, bsz, n);
+        let bm = gather(bs, &self.qp.b, bsz, p);
+        let hm = gather(hs, &self.qp.h, bsz, m);
+
+        // θ-constant part of the (5a) rhs: −q + ρAᵀb, per element
+        let mut cq = qm;
+        cq.scale(-1.0);
+        par_gemm_acc(&mut cq, rho, &bm, &self.qp.a);
+
+        // iterates, batch-major
+        let mut x = Mat::zeros(bsz, n);
+        let mut s = Mat::zeros(bsz, m);
+        let mut lam = Mat::zeros(bsz, p);
+        let mut nu = Mat::zeros(bsz, m);
+        let mut xprev = Mat::zeros(bsz, n);
+        let mut rhs = Mat::zeros(bsz, n);
+        let mut hms = Mat::zeros(bsz, m);
+        let mut gx = Mat::zeros(bsz, m);
+        let mut ax = Mat::zeros(bsz, p);
+
+        // Jacobian state: per-element (n×d) blocks stacked along columns
+        let d = opts.jacobian.map(|pm| pm.dim(n, m, p));
+        let mut jac = d.map(|d| JacState::new(n, m, p, bsz, d));
+
+        let mut act = ActiveSet::new(bsz);
+        let mut iters = vec![0usize; bsz];
+        let mut step_rel = vec![f64::INFINITY; bsz];
+
+        for k in 0..opts.max_iter {
+            if act.all_done() {
+                break;
+            }
+            let live: Vec<usize> = act.iter().collect();
+            for &e in &live {
+                iters[e] = k + 1;
+                xprev.row_mut(e).copy_from_slice(x.row(e));
+            }
+
+            // ---- forward (5a): H x = −q − Aᵀλ − Gᵀν + ρAᵀb + ρGᵀ(h−s)
+            for &e in &live {
+                rhs.row_mut(e).copy_from_slice(cq.row(e));
+                let hr = hm.row(e);
+                let sr = s.row(e);
+                let out = hms.row_mut(e);
+                for i in 0..m {
+                    out[i] = hr[i] - sr[i];
+                }
+            }
+            gemm_acc_rows(&mut rhs, -1.0, &lam, &self.qp.a, act.flags());
+            gemm_acc_rows(&mut rhs, -1.0, &nu, &self.qp.g, act.flags());
+            gemm_acc_rows(&mut rhs, rho, &hms, &self.qp.g, act.flags());
+            for &e in &live {
+                x.row_mut(e).fill(0.0);
+            }
+            gemm_acc_rows(&mut x, 1.0, &rhs, &self.hinv, act.flags());
+
+            // ---- (6): slack, (5c)/(5d): duals
+            for &e in &live {
+                gx.row_mut(e).fill(0.0);
+                ax.row_mut(e).fill(0.0);
+            }
+            gemm_acc_rows(&mut gx, 1.0, &x, &self.gt, act.flags());
+            gemm_acc_rows(&mut ax, 1.0, &x, &self.at, act.flags());
+            for &e in &live {
+                let gxr = gx.row(e);
+                let hr = hm.row(e);
+                let sr = s.row_mut(e);
+                let nur = nu.row(e);
+                for i in 0..m {
+                    sr[i] =
+                        (-nur[i] / rho - (gxr[i] - hr[i])).max(0.0);
+                }
+            }
+            for &e in &live {
+                let axr = ax.row(e);
+                let br = bm.row(e);
+                let lr = lam.row_mut(e);
+                for i in 0..p {
+                    lr[i] += rho * (axr[i] - br[i]);
+                }
+                let gxr = gx.row(e);
+                let hr = hm.row(e);
+                let sr = s.row(e);
+                let nur = nu.row_mut(e);
+                for i in 0..m {
+                    nur[i] += rho * (gxr[i] + sr[i] - hr[i]);
+                }
+            }
+
+            // ---- backward (7a)-(7d), only active column blocks
+            if let Some(jac) = jac.as_mut() {
+                let param = opts.jacobian.unwrap();
+                jac.step(self, param, &s, &act, &live, rho);
+            }
+
+            // ---- per-element truncation (Algorithm 1 condition)
+            for &e in &live {
+                let xr = x.row(e);
+                let xp = xprev.row(e);
+                let dx: f64 = xr
+                    .iter()
+                    .zip(xp)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                let step = dx / norm2(xp).max(1.0);
+                step_rel[e] = step;
+                if step < opts.tol {
+                    act.deactivate(e);
+                }
+            }
+        }
+
+        // unpack batch-major state into per-element vectors
+        let rows = |mat: &Mat| -> Vec<Vec<f64>> {
+            (0..bsz).map(|e| mat.row(e).to_vec()).collect()
+        };
+        let jacobians = jac.map(|j| j.unstack(n, bsz));
+        BatchSolution {
+            xs: rows(&x),
+            ss: rows(&s),
+            lams: rows(&lam),
+            nus: rows(&nu),
+            jacobians,
+            iters,
+            step_rel,
+        }
+    }
+}
+
+/// Batch-major parameter matrix: provided per-element slices or the
+/// registered fallback broadcast to every row.
+fn gather(
+    rows: Option<&[&[f64]]>,
+    fallback: &[f64],
+    bsz: usize,
+    dim: usize,
+) -> Mat {
+    let mut m = Mat::zeros(bsz, dim);
+    match rows {
+        Some(rs) => {
+            assert_eq!(rs.len(), bsz, "batch arity");
+            for (e, r) in rs.iter().enumerate() {
+                assert_eq!(r.len(), dim, "θ dimension");
+                m.row_mut(e).copy_from_slice(r);
+            }
+        }
+        None => {
+            for e in 0..bsz {
+                m.row_mut(e).copy_from_slice(fallback);
+            }
+        }
+    }
+    m
+}
+
+/// Column-stacked Jacobian recursion state: J_x (n, B·d), J_s (m, B·d),
+/// J_λ (p, B·d), J_ν (m, B·d), plus the work buffers the step reuses.
+struct JacState {
+    d: usize,
+    jx: Mat,
+    js: Mat,
+    jl: Mat,
+    jn: Mat,
+    lxt: Mat,
+    gjx: Mat,
+    ajx: Mat,
+}
+
+fn zero_cols(mat: &mut Mat, ranges: &[(usize, usize)]) {
+    for i in 0..mat.rows {
+        let row = mat.row_mut(i);
+        for &(j0, j1) in ranges {
+            row[j0..j1].fill(0.0);
+        }
+    }
+}
+
+impl JacState {
+    fn new(n: usize, m: usize, p: usize, bsz: usize, d: usize) -> Self {
+        let bd = bsz * d;
+        JacState {
+            d,
+            jx: Mat::zeros(n, bd),
+            js: Mat::zeros(m, bd),
+            jl: Mat::zeros(p, bd),
+            jn: Mat::zeros(m, bd),
+            lxt: Mat::zeros(n, bd),
+            gjx: Mat::zeros(m, bd),
+            ajx: Mat::zeros(p, bd),
+        }
+    }
+
+    /// One batched backward update (7a)-(7d); mirrors
+    /// `DenseAltDiff::jacobian_step` per column block. `slack` is the
+    /// freshly updated batch-major slack matrix.
+    fn step(
+        &mut self,
+        eng: &BatchedAltDiff,
+        param: Param,
+        slack: &Mat,
+        act: &ActiveSet,
+        live: &[usize],
+        rho: f64,
+    ) {
+        let d = self.d;
+        let n = eng.qp.n();
+        let m = eng.qp.m_ineq();
+        let p = eng.qp.p_eq();
+        let ranges = act.col_ranges(d);
+
+        // ∇_{x,θ}L = Aᵀ Jλ + Gᵀ Jν + ρGᵀ Js + const(θ)
+        zero_cols(&mut self.lxt, &ranges);
+        gemm_acc_cols(&mut self.lxt, 1.0, &eng.at, &self.jl, &ranges);
+        gemm_acc_cols(&mut self.lxt, 1.0, &eng.gt, &self.jn, &ranges);
+        gemm_acc_cols(&mut self.lxt, rho, &eng.gt, &self.js, &ranges);
+        match param {
+            Param::Q => {
+                // + I per element block (from ∂q)
+                for &e in live {
+                    let base = e * d;
+                    for i in 0..n.min(d) {
+                        self.lxt[(i, base + i)] += 1.0;
+                    }
+                }
+            }
+            Param::B => {
+                // − ρAᵀ per element block
+                for i in 0..n {
+                    let arow = eng.at.row(i);
+                    let row = self.lxt.row_mut(i);
+                    for &e in live {
+                        let base = e * d;
+                        for (c, &v) in arow.iter().enumerate() {
+                            row[base + c] -= rho * v;
+                        }
+                    }
+                }
+            }
+            Param::H => {
+                // − ρGᵀ per element block (from ρGᵀ(s−h) term)
+                for i in 0..n {
+                    let grow = eng.gt.row(i);
+                    let row = self.lxt.row_mut(i);
+                    for &e in live {
+                        let base = e * d;
+                        for (c, &v) in grow.iter().enumerate() {
+                            row[base + c] -= rho * v;
+                        }
+                    }
+                }
+            }
+        }
+
+        // (7a): Jx = −H⁻¹ ∇L — one blocked gemm over every live block
+        zero_cols(&mut self.jx, &ranges);
+        gemm_acc_cols(&mut self.jx, -1.0, &eng.hinv, &self.lxt, &ranges);
+
+        // (7b): Js = sgn(s⁺) ⊙ (−1/ρ)(Jν + ρ(G Jx − ∂h/∂θ))
+        zero_cols(&mut self.gjx, &ranges);
+        gemm_acc_cols(&mut self.gjx, 1.0, &eng.qp.g, &self.jx, &ranges);
+        if param == Param::H {
+            for &e in live {
+                let base = e * d;
+                for i in 0..m.min(d) {
+                    self.gjx[(i, base + i)] -= 1.0;
+                }
+            }
+        }
+        for i in 0..m {
+            let jnr = self.jn.row(i);
+            let gjr = self.gjx.row(i);
+            let jsr = self.js.row_mut(i);
+            for &e in live {
+                let gate =
+                    if slack[(e, i)] > 0.0 { 1.0 } else { 0.0 };
+                let base = e * d;
+                for c in base..base + d {
+                    jsr[c] = gate
+                        * (-(1.0 / rho))
+                        * (jnr[c] + rho * gjr[c]);
+                }
+            }
+        }
+
+        // (7c): Jλ += ρ(A Jx − ∂b/∂θ)
+        zero_cols(&mut self.ajx, &ranges);
+        gemm_acc_cols(&mut self.ajx, 1.0, &eng.qp.a, &self.jx, &ranges);
+        axpy_cols(&mut self.jl, rho, &self.ajx, &ranges);
+        if param == Param::B {
+            for &e in live {
+                let base = e * d;
+                for i in 0..p.min(d) {
+                    self.jl[(i, base + i)] -= rho;
+                }
+            }
+        }
+
+        // (7d): Jν += ρ(G Jx + Js − ∂h/∂θ)  [gjx already holds GJx − ∂h]
+        axpy_cols(&mut self.jn, rho, &self.gjx, &ranges);
+        axpy_cols(&mut self.jn, rho, &self.js, &ranges);
+    }
+
+    /// Split the stacked (n, B·d) Jacobian back into per-element mats.
+    fn unstack(&self, n: usize, bsz: usize) -> Vec<Mat> {
+        let d = self.d;
+        let bd = bsz * d;
+        (0..bsz)
+            .map(|e| {
+                let mut jm = Mat::zeros(n, d);
+                for i in 0..n {
+                    jm.row_mut(i).copy_from_slice(
+                        &self.jx.data[i * bd + e * d..i * bd + (e + 1) * d],
+                    );
+                }
+                jm
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prob::dense_qp;
+
+    fn engines(
+        n: usize,
+        m: usize,
+        p: usize,
+        seed: u64,
+    ) -> (DenseAltDiff, BatchedAltDiff) {
+        let dense = DenseAltDiff::new(dense_qp(n, m, p, seed), 1.0).unwrap();
+        let batched = BatchedAltDiff::from_dense(&dense);
+        (dense, batched)
+    }
+
+    #[test]
+    fn broadcast_batch_matches_dense_solve() {
+        let (dense, batched) = engines(14, 7, 3, 21);
+        let opts = Options {
+            tol: 1e-10,
+            max_iter: 50_000,
+            jacobian: Some(Param::B),
+            ..Default::default()
+        };
+        let sd = dense.solve(&opts);
+        let sb = batched.solve_batch(None, None, None, &opts);
+        assert_eq!(sb.len(), 1);
+        for i in 0..14 {
+            assert!((sb.xs[0][i] - sd.x[i]).abs() < 1e-8, "x[{i}]");
+        }
+        let jb = &sb.jacobians.as_ref().unwrap()[0];
+        let jd = sd.jacobian.as_ref().unwrap();
+        assert!(jb.max_abs_diff(jd) < 1e-8);
+        assert_eq!(sb.iters[0], sd.iters);
+    }
+
+    #[test]
+    fn fixed_k_runs_every_element_exactly_k() {
+        let (_, batched) = engines(10, 5, 2, 22);
+        let q2: Vec<f64> =
+            batched.qp.q.iter().map(|&v| 2.0 * v).collect();
+        let qs: Vec<&[f64]> = vec![&batched.qp.q, &q2];
+        let opts = Options {
+            tol: 0.0,
+            max_iter: 17,
+            jacobian: Some(Param::Q),
+            ..Default::default()
+        };
+        let sb = batched.solve_batch(Some(&qs), None, None, &opts);
+        assert_eq!(sb.iters, vec![17, 17]);
+        assert!(sb.xs.iter().all(|x| x.iter().all(|v| v.is_finite())));
+    }
+
+    #[test]
+    fn vjp_matches_explicit_product() {
+        let (_, batched) = engines(8, 4, 2, 23);
+        let sb = batched.solve_batch(None, None, None, &Options::default());
+        let g: Vec<f64> = (0..8).map(|i| (i as f64) - 3.5).collect();
+        let v = sb.vjp(0, &g);
+        let j = &sb.jacobians.as_ref().unwrap()[0];
+        for c in 0..2 {
+            let want: f64 = (0..8).map(|i| g[i] * j[(i, c)]).sum();
+            assert!((v[c] - want).abs() < 1e-12);
+        }
+        let sol = sb.element(0);
+        assert_eq!(sol.iters, sb.iters[0]);
+        assert_eq!(sol.x, sb.xs[0]);
+    }
+}

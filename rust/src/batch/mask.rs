@@ -1,0 +1,123 @@
+//! Active-set bookkeeping for per-element truncation.
+//!
+//! The batch engine runs every element of a batch through the same ADMM +
+//! Jacobian iteration. An element whose truncation criterion (paper §4.3)
+//! fires is *deactivated*: its iterate rows and its Jacobian column block
+//! are frozen at their final values, and every subsequent masked kernel
+//! launch ([`crate::linalg::gemm_acc_rows`] /
+//! [`crate::linalg::gemm_acc_cols`]) skips its flops entirely. This is
+//! what keeps a mixed-convergence batch as cheap as its slowest member,
+//! not its slowest member times B.
+
+/// Which batch elements are still iterating.
+pub struct ActiveSet {
+    flags: Vec<bool>,
+    remaining: usize,
+}
+
+impl ActiveSet {
+    /// All `size` elements start active.
+    pub fn new(size: usize) -> Self {
+        ActiveSet { flags: vec![true; size], remaining: size }
+    }
+
+    /// Total batch size (active + frozen).
+    pub fn len(&self) -> usize {
+        self.flags.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.flags.is_empty()
+    }
+
+    /// Elements still iterating.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.remaining == 0
+    }
+
+    pub fn is_active(&self, e: usize) -> bool {
+        self.flags[e]
+    }
+
+    /// Freeze element `e` (idempotent).
+    pub fn deactivate(&mut self, e: usize) {
+        if self.flags[e] {
+            self.flags[e] = false;
+            self.remaining -= 1;
+        }
+    }
+
+    /// Row mask for [`crate::linalg::gemm_acc_rows`].
+    pub fn flags(&self) -> &[bool] {
+        &self.flags
+    }
+
+    /// Indices of active elements, ascending.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.flags
+            .iter()
+            .enumerate()
+            .filter(|(_, &f)| f)
+            .map(|(i, _)| i)
+    }
+
+    /// Active column ranges when each element owns `block` consecutive
+    /// columns (adjacent active elements merge into one range) — the
+    /// argument for [`crate::linalg::gemm_acc_cols`].
+    pub fn col_ranges(&self, block: usize) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for e in self.iter() {
+            let (j0, j1) = (e * block, (e + 1) * block);
+            match out.last_mut() {
+                Some(last) if last.1 == j0 => last.1 = j1,
+                _ => out.push((j0, j1)),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deactivation_counts_down_once() {
+        let mut a = ActiveSet::new(3);
+        assert_eq!(a.remaining(), 3);
+        a.deactivate(1);
+        a.deactivate(1); // idempotent
+        assert_eq!(a.remaining(), 2);
+        assert!(!a.is_active(1));
+        assert!(a.is_active(0) && a.is_active(2));
+        a.deactivate(0);
+        a.deactivate(2);
+        assert!(a.all_done());
+    }
+
+    #[test]
+    fn col_ranges_merge_adjacent_blocks() {
+        let mut a = ActiveSet::new(5);
+        // active: 0, 1, 3  → with block 4: [0,8) and [12,16)
+        a.deactivate(2);
+        a.deactivate(4);
+        assert_eq!(a.col_ranges(4), vec![(0, 8), (12, 16)]);
+        assert_eq!(a.iter().collect::<Vec<_>>(), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn full_and_empty_ranges() {
+        let mut a = ActiveSet::new(3);
+        assert_eq!(a.col_ranges(2), vec![(0, 6)]);
+        for e in 0..3 {
+            a.deactivate(e);
+        }
+        assert!(a.col_ranges(2).is_empty());
+        assert_eq!(a.len(), 3);
+        assert!(!a.is_empty());
+    }
+}

@@ -6,15 +6,20 @@
 //! target batch size, or when its oldest member has waited past the
 //! deadline (classic vLLM-style deadline batching — latency bounded, and
 //! throughput recovers the MXU efficiency of the batched artifact).
+//!
+//! Layer names are interned as `Arc<str>` on first sight, so the
+//! per-push hot path pays one map lookup and a refcount bump instead of
+//! a heap `String` clone per request.
 
 use super::messages::Request;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Batch of compatible requests ready for execution.
 #[derive(Debug)]
 pub struct Batch {
-    pub layer: String,
+    pub layer: Arc<str>,
     pub k: usize,
     pub requests: Vec<Request>,
 }
@@ -23,19 +28,36 @@ pub struct Batch {
 pub struct Batcher {
     pub max_batch: usize,
     pub deadline: Duration,
-    pending: BTreeMap<(String, usize), Vec<Request>>,
+    /// layer-name intern table (bounded by the number of distinct layer
+    /// names ever seen; `Arc<str>: Borrow<str>` gives by-&str lookup)
+    names: BTreeSet<Arc<str>>,
+    pending: BTreeMap<(Arc<str>, usize), Vec<Request>>,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, deadline: Duration) -> Self {
-        Batcher { max_batch, deadline, pending: BTreeMap::new() }
+        Batcher {
+            max_batch,
+            deadline,
+            names: BTreeSet::new(),
+            pending: BTreeMap::new(),
+        }
     }
 
-    /// Add a routed request; returns a full batch if one is ready.
-    pub fn push(&mut self, layer: &str, k: usize, req: Request)
-        -> Option<Batch>
-    {
-        let key = (layer.to_string(), k);
+    fn intern(&mut self, layer: &str) -> Arc<str> {
+        if let Some(a) = self.names.get(layer) {
+            return a.clone();
+        }
+        let a: Arc<str> = Arc::from(layer);
+        self.names.insert(a.clone());
+        a
+    }
+
+    /// Add a routed request (keyed by its own `layer` field); returns a
+    /// full batch if one is ready.
+    pub fn push(&mut self, k: usize, req: Request) -> Option<Batch> {
+        let name = self.intern(&req.layer);
+        let key = (name, k);
         let slot = self.pending.entry(key.clone()).or_default();
         slot.push(req);
         if slot.len() >= self.max_batch {
@@ -47,7 +69,7 @@ impl Batcher {
 
     /// Flush every group whose oldest request has exceeded the deadline.
     pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch> {
-        let expired: Vec<(String, usize)> = self
+        let expired: Vec<(Arc<str>, usize)> = self
             .pending
             .iter()
             .filter(|(_, reqs)| {
@@ -68,7 +90,7 @@ impl Batcher {
 
     /// Flush everything (shutdown).
     pub fn flush_all(&mut self) -> Vec<Batch> {
-        let keys: Vec<(String, usize)> =
+        let keys: Vec<(Arc<str>, usize)> =
             self.pending.keys().cloned().collect();
         keys.into_iter()
             .map(|key| {
@@ -111,9 +133,9 @@ mod tests {
     #[test]
     fn fills_batch_at_max() {
         let mut b = Batcher::new(3, Duration::from_millis(100));
-        assert!(b.push("l", 10, req(1, "l")).is_none());
-        assert!(b.push("l", 10, req(2, "l")).is_none());
-        let batch = b.push("l", 10, req(3, "l")).unwrap();
+        assert!(b.push(10, req(1, "l")).is_none());
+        assert!(b.push(10, req(2, "l")).is_none());
+        let batch = b.push(10, req(3, "l")).unwrap();
         assert_eq!(batch.requests.len(), 3);
         assert_eq!(b.pending_count(), 0);
     }
@@ -121,11 +143,11 @@ mod tests {
     #[test]
     fn never_mixes_layers_or_k() {
         let mut b = Batcher::new(2, Duration::from_millis(100));
-        assert!(b.push("a", 10, req(1, "a")).is_none());
-        assert!(b.push("b", 10, req(2, "b")).is_none());
-        assert!(b.push("a", 20, req(3, "a")).is_none());
+        assert!(b.push(10, req(1, "a")).is_none());
+        assert!(b.push(10, req(2, "b")).is_none());
+        assert!(b.push(20, req(3, "a")).is_none());
         assert_eq!(b.pending_count(), 3);
-        let batch = b.push("a", 10, req(4, "a")).unwrap();
+        let batch = b.push(10, req(4, "a")).unwrap();
         assert_eq!(batch.k, 10);
         assert!(batch.requests.iter().all(|r| r.layer == "a"));
         assert_eq!(batch.requests.len(), 2);
@@ -134,7 +156,7 @@ mod tests {
     #[test]
     fn deadline_flush() {
         let mut b = Batcher::new(10, Duration::from_millis(1));
-        b.push("l", 10, req(1, "l"));
+        b.push(10, req(1, "l"));
         let later = Instant::now() + Duration::from_millis(5);
         let flushed = b.flush_expired(later);
         assert_eq!(flushed.len(), 1);
@@ -145,7 +167,7 @@ mod tests {
     #[test]
     fn not_expired_not_flushed() {
         let mut b = Batcher::new(10, Duration::from_secs(60));
-        b.push("l", 10, req(1, "l"));
+        b.push(10, req(1, "l"));
         assert!(b.flush_expired(Instant::now()).is_empty());
         assert_eq!(b.pending_count(), 1);
     }
@@ -153,9 +175,9 @@ mod tests {
     #[test]
     fn preserves_arrival_order_within_key() {
         let mut b = Batcher::new(3, Duration::from_millis(100));
-        b.push("l", 10, req(7, "l"));
-        b.push("l", 10, req(8, "l"));
-        let batch = b.push("l", 10, req(9, "l")).unwrap();
+        b.push(10, req(7, "l"));
+        b.push(10, req(8, "l"));
+        let batch = b.push(10, req(9, "l")).unwrap();
         let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![7, 8, 9]);
     }
@@ -163,11 +185,20 @@ mod tests {
     #[test]
     fn flush_all_drains() {
         let mut b = Batcher::new(10, Duration::from_secs(1));
-        b.push("a", 10, req(1, "a"));
-        b.push("b", 20, req(2, "b"));
+        b.push(10, req(1, "a"));
+        b.push(20, req(2, "b"));
         let all = b.flush_all();
         assert_eq!(all.len(), 2);
         assert_eq!(b.pending_count(), 0);
         assert!(b.next_deadline().is_none());
+    }
+
+    #[test]
+    fn interned_names_are_shared_across_batches() {
+        let mut b = Batcher::new(1, Duration::from_secs(1));
+        let b1 = b.push(10, req(1, "layer")).unwrap();
+        let b2 = b.push(10, req(2, "layer")).unwrap();
+        assert!(Arc::ptr_eq(&b1.layer, &b2.layer), "name not interned");
+        assert_eq!(&*b1.layer, "layer");
     }
 }

@@ -13,7 +13,10 @@ pub struct Metrics {
     pub failures: AtomicU64,
     pub batches: AtomicU64,
     pub pjrt_execs: AtomicU64,
+    /// native batched launches (one per `Batch`, not per request)
     pub native_execs: AtomicU64,
+    /// requests served by native launches (occupancy numerator)
+    pub native_elems: AtomicU64,
     /// slots wasted by padding partial batches to the artifact batch size
     pub padded_slots: AtomicU64,
     /// truncation-table online corrections
@@ -64,17 +67,28 @@ impl Metrics {
         u64::MAX
     }
 
+    /// Mean requests per native batched launch (0 when nothing ran
+    /// natively) — the batcher's win on the fallback path.
+    pub fn native_batch_occupancy(&self) -> f64 {
+        let execs = self.native_execs.load(Ordering::Relaxed);
+        if execs == 0 {
+            return 0.0;
+        }
+        self.native_elems.load(Ordering::Relaxed) as f64 / execs as f64
+    }
+
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "req={} resp={} fail={} batches={} pjrt={} native={} pad={} \
-             bumps={} mean_lat={:.0}us p90<={}us",
+            "req={} resp={} fail={} batches={} pjrt={} native={} \
+             native_occ={:.1} pad={} bumps={} mean_lat={:.0}us p90<={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.failures.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.pjrt_execs.load(Ordering::Relaxed),
             self.native_execs.load(Ordering::Relaxed),
+            self.native_batch_occupancy(),
             self.padded_slots.load(Ordering::Relaxed),
             self.bumps.load(Ordering::Relaxed),
             self.mean_latency_us(),
@@ -108,5 +122,15 @@ mod tests {
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.latency_quantile_us(0.9), 0);
         assert!(m.summary().contains("req=0"));
+        assert_eq!(m.native_batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn native_occupancy_is_elems_per_launch() {
+        let m = Metrics::new();
+        m.native_execs.store(4, Ordering::Relaxed);
+        m.native_elems.store(10, Ordering::Relaxed);
+        assert!((m.native_batch_occupancy() - 2.5).abs() < 1e-12);
+        assert!(m.summary().contains("native_occ=2.5"));
     }
 }

@@ -5,17 +5,20 @@
 //!
 //!   clients ──tx──▶ dispatcher ──(round-robin)──▶ worker 0..W ──▶ replies
 //!                     │ routes tol→k (truncation table)
-//!!                    │ batches per (layer, k), deadline-flushed
+//!                     │ batches per (layer, k), deadline-flushed
 //!
 //! Each worker owns its own PJRT [`Engine`] (the xla handles are not Send,
 //! so engines are constructed *inside* the worker thread) and falls back
-//! to the native Alt-Diff solver for layers without compiled artifacts.
+//! to the native **batched** Alt-Diff engine for layers without compiled
+//! artifacts — one [`BatchedAltDiff`] launch per [`Batch`], never a
+//! per-request solve loop.
 
 use super::batcher::{Batch, Batcher};
 use super::messages::{Failure, Reply, Request, Response};
 use super::metrics::Metrics;
 use super::truncation::TruncationTable;
 use crate::altdiff::{DenseAltDiff, Options, Param};
+use crate::batch::BatchedAltDiff;
 use crate::error::{AltDiffError, Result};
 use crate::prob::Qp;
 use crate::runtime::Engine;
@@ -33,8 +36,11 @@ pub struct RegisteredLayer {
     pub m: usize,
     pub p: usize,
     pub rho: f64,
-    /// native engine (fallback + calibration + parity checks)
+    /// native engine (calibration + parity checks + residual reporting)
     pub solver: DenseAltDiff,
+    /// native batched engine (fallback execution path; shares the
+    /// solver's registration-time factorization)
+    pub batched: BatchedAltDiff,
     /// artifact inputs, precomputed once at registration (f32 contract)
     pub hinv_f32: Vec<f32>,
     pub a_f32: Vec<f32>,
@@ -158,6 +164,7 @@ impl CoordinatorBuilder {
         };
         let a_f32 = solver.qp.a.to_f32();
         let g_f32 = solver.qp.g.to_f32();
+        let batched = BatchedAltDiff::from_dense(&solver);
         let layer = RegisteredLayer {
             name: name.to_string(),
             n,
@@ -168,6 +175,7 @@ impl CoordinatorBuilder {
             a_f32,
             g_f32,
             solver,
+            batched,
             table: Mutex::new(table),
             batches,
         };
@@ -301,10 +309,38 @@ fn dispatcher_loop(
                             }));
                         }
                         Some(layer) => {
+                            // validate θ dimensions here so a malformed
+                            // request becomes a Failure reply instead of
+                            // panicking the worker's batched launch (and
+                            // taking its whole batch down with it)
+                            if req.q.len() != layer.n
+                                || req.b.len() != layer.p
+                                || req.h.len() != layer.m
+                            {
+                                metrics.failures.fetch_add(
+                                    1,
+                                    std::sync::atomic::Ordering::Relaxed,
+                                );
+                                let _ = reply_tx.send(Reply::Err(Failure {
+                                    id: req.id,
+                                    error: format!(
+                                        "bad θ dims for layer '{}': \
+                                         q={} b={} h={}, want n={} p={} \
+                                         m={}",
+                                        req.layer,
+                                        req.q.len(),
+                                        req.b.len(),
+                                        req.h.len(),
+                                        layer.n,
+                                        layer.p,
+                                        layer.m
+                                    ),
+                                }));
+                                continue;
+                            }
                             let k =
                                 layer.table.lock().unwrap().k_for(req.tol);
-                            let lname = req.layer.clone();
-                            if let Some(b) = batcher.push(&lname, k, req) {
+                            if let Some(b) = batcher.push(k, req) {
                                 send_batch(b, &mut rr);
                             }
                         }
@@ -363,7 +399,7 @@ fn worker_loop(
     }
     ready.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
     while let Ok(WorkerMsg::Work(batch)) = rx.recv() {
-        let layer = match layers.get(&batch.layer) {
+        let layer = match layers.get(&*batch.layer) {
             Some(l) => l.clone(),
             None => continue,
         };
@@ -429,30 +465,36 @@ fn execute_batch(
             }
         }
     }
-    // Native fallback.
+    // Native fallback: ONE batched launch for the whole Batch. tol=0
+    // disables per-element truncation so every element runs exactly k
+    // iterations (artifact parity, same contract as the compiled path).
     metrics
         .native_execs
         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    metrics
+        .native_elems
+        .fetch_add(reqs.len() as u64, std::sync::atomic::Ordering::Relaxed);
+    let opts = Options {
+        tol: 0.0,
+        max_iter: batch.k,
+        jacobian: Some(Param::B),
+        rho: layer.rho,
+        trace: false,
+    };
+    let qs: Vec<&[f64]> = reqs.iter().map(|r| r.q.as_slice()).collect();
+    let bs: Vec<&[f64]> = reqs.iter().map(|r| r.b.as_slice()).collect();
+    let hs: Vec<&[f64]> = reqs.iter().map(|r| r.h.as_slice()).collect();
+    let sol =
+        layer.batched.solve_batch(Some(&qs), Some(&bs), Some(&hs), &opts);
+    let mut jacs = sol.jacobians.unwrap_or_default().into_iter();
     reqs.iter()
-        .map(|req| {
-            let opts = Options {
-                tol: 0.0, // run exactly k iterations (artifact parity)
-                max_iter: batch.k,
-                jacobian: Some(Param::B),
-                rho: layer.rho,
-                trace: false,
-            };
-            let sol = layer.solver.solve_with(
-                Some(&req.q),
-                Some(&req.b),
-                Some(&req.h),
-                &opts,
-            );
-            let (prim, _) = layer.solver.qp.feasibility(&sol.x);
+        .zip(sol.xs)
+        .map(|(req, x)| {
+            let (prim, _) = layer.solver.qp.feasibility(&x);
             Reply::Ok(Response {
                 id: req.id,
-                x: sol.x,
-                jx: sol.jacobian.map(|j| j.data).unwrap_or_default(),
+                x,
+                jx: jacs.next().map(|j| j.data).unwrap_or_default(),
                 prim_residual: prim,
                 k_used: batch.k,
                 batch_size: reqs.len(),

@@ -1,35 +1,106 @@
 //! Error taxonomy for the whole stack.
+//!
+//! Hand-rolled `Display`/`Error` impls: the offline environment has no
+//! `thiserror`, and the taxonomy is small enough that the derive buys
+//! nothing but a dependency.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum AltDiffError {
-    #[error("matrix is not SPD: pivot {pivot} has value {value}")]
     NotSpd { pivot: usize, value: f64 },
 
-    #[error("singular matrix at pivot {pivot}")]
     Singular { pivot: usize },
 
-    #[error("solver did not converge: {iters} iterations, residual {residual}")]
     NoConvergence { iters: usize, residual: f64 },
 
-    #[error("problem is infeasible or unbounded: {0}")]
     Infeasible(String),
 
-    #[error("dimension mismatch: {0}")]
     DimMismatch(String),
 
-    #[error("artifact registry error: {0}")]
     Registry(String),
 
-    #[error("runtime (PJRT) error: {0}")]
     Runtime(String),
 
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for AltDiffError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AltDiffError::NotSpd { pivot, value } => write!(
+                f,
+                "matrix is not SPD: pivot {pivot} has value {value}"
+            ),
+            AltDiffError::Singular { pivot } => {
+                write!(f, "singular matrix at pivot {pivot}")
+            }
+            AltDiffError::NoConvergence { iters, residual } => write!(
+                f,
+                "solver did not converge: {iters} iterations, residual \
+                 {residual}"
+            ),
+            AltDiffError::Infeasible(s) => {
+                write!(f, "problem is infeasible or unbounded: {s}")
+            }
+            AltDiffError::DimMismatch(s) => {
+                write!(f, "dimension mismatch: {s}")
+            }
+            AltDiffError::Registry(s) => {
+                write!(f, "artifact registry error: {s}")
+            }
+            AltDiffError::Runtime(s) => {
+                write!(f, "runtime (PJRT) error: {s}")
+            }
+            AltDiffError::Coordinator(s) => {
+                write!(f, "coordinator error: {s}")
+            }
+            AltDiffError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for AltDiffError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            AltDiffError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for AltDiffError {
+    fn from(e: std::io::Error) -> Self {
+        AltDiffError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, AltDiffError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_stable() {
+        let e = AltDiffError::NotSpd { pivot: 3, value: -0.5 };
+        assert_eq!(
+            e.to_string(),
+            "matrix is not SPD: pivot 3 has value -0.5"
+        );
+        assert!(AltDiffError::Registry("x".into())
+            .to_string()
+            .contains("artifact registry"));
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        use std::error::Error;
+        let io = std::io::Error::other("gone");
+        let e: AltDiffError = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(e.source().is_some());
+    }
+}

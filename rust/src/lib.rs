@@ -5,11 +5,24 @@
 //! The crate is organized in layers (see DESIGN.md):
 //! - substrates: [`linalg`], [`sparse`], [`util`], [`prob`], [`data`]
 //! - the paper's algorithm: [`altdiff`] (+ comparators in [`baselines`])
+//! - batched execution: [`batch`] (one launch solves B instances of a
+//!   registered layer, batch-major GEMMs + per-element truncation masks)
 //! - end-to-end learning: [`nn`] (optimization layers inside networks)
 //! - serving: [`runtime`] (PJRT artifacts) + [`coordinator`] (router,
-//!   batcher, truncation policy)
+//!   batcher, truncation policy; native fallback = one [`batch`] launch
+//!   per dynamic batch)
+
+// Numeric-kernel house style: explicit index loops mirror the paper's
+// equations and the blocked-BLAS layout; several solver entry points
+// genuinely take θ = (q, b, h) plus options.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
+#![allow(clippy::manual_memcpy)]
+
 pub mod altdiff;
 pub mod baselines;
+pub mod batch;
 pub mod coordinator;
 pub mod data;
 pub mod error;

@@ -7,11 +7,18 @@
 //! EXPERIMENTS.md §Perf for the before/after of the blocking.
 
 use super::dense::Mat;
+use std::thread;
 
 /// Tile edge for the k/j blocking. 64 keeps an A-panel (64x64 f64 = 32 KB)
 /// inside L1/L2 comfortably; measured best among {32, 64, 128} here.
 const KB: usize = 64;
 const JB: usize = 256;
+
+/// Multiply-add count below which the parallel dispatcher stays serial
+/// (thread-spawn overhead would dominate the kernel).
+const PAR_MIN_FLOPS: usize = 1 << 20;
+/// Worker-thread cap for one kernel launch.
+const PAR_MAX_THREADS: usize = 8;
 
 /// C = A @ B.
 pub fn gemm(a: &Mat, b: &Mat) -> Mat {
@@ -43,6 +50,181 @@ pub fn gemm_acc(c: &mut Mat, alpha: f64, a: &Mat, b: &Mat) {
                         *cv += aik * bv;
                     }
                 }
+            }
+        }
+    }
+}
+
+/// Blocked kernel over one horizontal slab of C (rows `r0..r1`, stored in
+/// `cdata`), with an optional per-row activity mask (absolute indices into
+/// A's rows) and optional column ranges. Accumulation order over k for any
+/// (i, j) matches [`gemm_acc`] exactly (ascending k blocks, ascending k),
+/// so masked/parallel results are bitwise identical to the serial kernel.
+fn gemm_span(
+    cdata: &mut [f64],
+    r0: usize,
+    r1: usize,
+    alpha: f64,
+    a: &Mat,
+    b: &Mat,
+    rows_active: Option<&[bool]>,
+    col_ranges: Option<&[(usize, usize)]>,
+) {
+    let k = a.cols;
+    let m = b.cols;
+    let full = [(0usize, m)];
+    let ranges: &[(usize, usize)] = match col_ranges {
+        Some(r) => r,
+        None => &full,
+    };
+    for &(j0, j1) in ranges {
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            for jb in (j0..j1).step_by(JB) {
+                let jend = (jb + JB).min(j1);
+                for i in r0..r1 {
+                    if let Some(act) = rows_active {
+                        if !act[i] {
+                            continue;
+                        }
+                    }
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let crow = &mut cdata
+                        [(i - r0) * m + jb..(i - r0) * m + jend];
+                    for kk in kb..kend {
+                        let aik = alpha * arow[kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[kk * m + jb..kk * m + jend];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Shared entry point for the plain / row-masked / column-ranged gemm
+/// variants: validates shapes, estimates the live flop count, and splits
+/// C's rows across up to [`PAR_MAX_THREADS`] scoped threads when the
+/// kernel is large enough to amortize the spawns.
+fn gemm_dispatch(
+    c: &mut Mat,
+    alpha: f64,
+    a: &Mat,
+    b: &Mat,
+    rows_active: Option<&[bool]>,
+    col_ranges: Option<&[(usize, usize)]>,
+) {
+    assert_eq!(a.cols, b.rows, "gemm dims");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    if let Some(act) = rows_active {
+        assert_eq!(act.len(), a.rows, "row mask length");
+    }
+    if let Some(rs) = col_ranges {
+        let mut prev = 0usize;
+        for &(j0, j1) in rs {
+            assert!(j0 >= prev && j1 >= j0 && j1 <= c.cols, "col ranges");
+            prev = j1;
+        }
+    }
+    let rows_live = rows_active
+        .map(|act| act.iter().filter(|&&f| f).count())
+        .unwrap_or(a.rows);
+    let cols_live = col_ranges
+        .map(|rs| rs.iter().map(|&(j0, j1)| j1 - j0).sum())
+        .unwrap_or(b.cols);
+    if rows_live == 0 || cols_live == 0 || a.cols == 0 || c.cols == 0 {
+        return;
+    }
+    let flops = rows_live * a.cols * cols_live;
+    let threads = if flops < PAR_MIN_FLOPS || c.rows < 2 {
+        1
+    } else {
+        thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(PAR_MAX_THREADS)
+            .min(c.rows)
+    };
+    if threads <= 1 {
+        gemm_span(
+            &mut c.data, 0, c.rows, alpha, a, b, rows_active, col_ranges,
+        );
+        return;
+    }
+    let m = c.cols;
+    let n = c.rows;
+    let rows_per = n.div_ceil(threads);
+    thread::scope(|s| {
+        let mut rest: &mut [f64] = &mut c.data;
+        let mut r0 = 0usize;
+        while r0 < n {
+            let r1 = (r0 + rows_per).min(n);
+            let (head, tail) = rest.split_at_mut((r1 - r0) * m);
+            rest = tail;
+            s.spawn(move || {
+                gemm_span(head, r0, r1, alpha, a, b, rows_active, col_ranges)
+            });
+            r0 = r1;
+        }
+    });
+}
+
+/// C += alpha * A @ B, row-split across up to 8 worker threads when the
+/// kernel is large enough to pay for them. Bitwise identical to
+/// [`gemm_acc`] (per-row accumulation order is unchanged).
+pub fn par_gemm_acc(c: &mut Mat, alpha: f64, a: &Mat, b: &Mat) {
+    gemm_dispatch(c, alpha, a, b, None, None);
+}
+
+/// Row-masked C += alpha * A @ B: rows with `active[i] == false` are left
+/// untouched and consume no flops. This is the batch engine's iterate
+/// update — converged batch elements stop costing work (§4.3 truncation,
+/// per element).
+pub fn gemm_acc_rows(
+    c: &mut Mat,
+    alpha: f64,
+    a: &Mat,
+    b: &Mat,
+    active: &[bool],
+) {
+    gemm_dispatch(c, alpha, a, b, Some(active), None);
+}
+
+/// Column-range-masked C += alpha * A @ B: only columns inside the given
+/// disjoint ascending `[j0, j1)` ranges are updated. The batch engine
+/// stacks per-element Jacobians as column blocks; deactivated elements'
+/// blocks are simply absent from the ranges.
+pub fn gemm_acc_cols(
+    c: &mut Mat,
+    alpha: f64,
+    a: &Mat,
+    b: &Mat,
+    ranges: &[(usize, usize)],
+) {
+    gemm_dispatch(c, alpha, a, b, None, Some(ranges));
+}
+
+/// Y += alpha * X restricted to the given column ranges (the cheap
+/// element-wise companion of [`gemm_acc_cols`]).
+pub fn axpy_cols(
+    y: &mut Mat,
+    alpha: f64,
+    x: &Mat,
+    ranges: &[(usize, usize)],
+) {
+    assert_eq!((y.rows, y.cols), (x.rows, x.cols), "axpy_cols dims");
+    for i in 0..y.rows {
+        let yr = y.row_mut(i);
+        let xr = x.row(i);
+        for &(j0, j1) in ranges {
+            for j in j0..j1 {
+                yr[j] += alpha * xr[j];
             }
         }
     }
@@ -183,6 +365,83 @@ mod tests {
         for i in 0..13 {
             assert!((gt[i] - wt[(i, 0)]).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn par_gemm_matches_serial_bitwise() {
+        let mut rng = Pcg64::new(11);
+        // large enough to cross the parallel threshold (>= 2^20 flops)
+        let a = randmat(128, 96, &mut rng);
+        let b = randmat(96, 120, &mut rng);
+        let mut serial = Mat::zeros(128, 120);
+        gemm_acc(&mut serial, 0.7, &a, &b);
+        let mut par = Mat::zeros(128, 120);
+        par_gemm_acc(&mut par, 0.7, &a, &b);
+        assert_eq!(serial.data, par.data, "parallel split changed results");
+    }
+
+    #[test]
+    fn row_masked_gemm_skips_inactive_rows() {
+        let mut rng = Pcg64::new(12);
+        let a = randmat(9, 7, &mut rng);
+        let b = randmat(7, 5, &mut rng);
+        let active: Vec<bool> =
+            (0..9).map(|i| i % 3 != 1).collect();
+        let mut c = Mat::zeros(9, 5);
+        // poison inactive rows to prove they are untouched
+        for i in 0..9 {
+            if !active[i] {
+                c.row_mut(i).iter_mut().for_each(|v| *v = 42.0);
+            }
+        }
+        gemm_acc_rows(&mut c, 1.0, &a, &b, &active);
+        let full = gemm(&a, &b);
+        for i in 0..9 {
+            for j in 0..5 {
+                let want = if active[i] { full[(i, j)] } else { 42.0 };
+                assert!((c[(i, j)] - want).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn col_ranged_gemm_matches_full_inside_ranges() {
+        let mut rng = Pcg64::new(13);
+        let a = randmat(8, 6, &mut rng);
+        let b = randmat(6, 12, &mut rng);
+        let ranges = [(0usize, 3usize), (6, 9)];
+        let mut c = Mat::zeros(8, 12);
+        gemm_acc_cols(&mut c, 2.0, &a, &b, &ranges);
+        let mut full = Mat::zeros(8, 12);
+        gemm_acc(&mut full, 2.0, &a, &b);
+        for i in 0..8 {
+            for j in 0..12 {
+                let inside = (j < 3) || (6..9).contains(&j);
+                let want = if inside { full[(i, j)] } else { 0.0 };
+                assert!((c[(i, j)] - want).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_cols_restricted() {
+        let mut y = Mat::zeros(2, 4);
+        let x = Mat::from_rows(&[&[1., 2., 3., 4.], &[5., 6., 7., 8.]]);
+        axpy_cols(&mut y, 2.0, &x, &[(1, 3)]);
+        assert_eq!(y.row(0), &[0.0, 4.0, 6.0, 0.0]);
+        assert_eq!(y.row(1), &[0.0, 12.0, 14.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_masks_are_noops() {
+        let mut rng = Pcg64::new(14);
+        let a = randmat(4, 4, &mut rng);
+        let b = randmat(4, 4, &mut rng);
+        let mut c = Mat::zeros(4, 4);
+        gemm_acc_rows(&mut c, 1.0, &a, &b, &[false; 4]);
+        assert_eq!(c.data, vec![0.0; 16]);
+        gemm_acc_cols(&mut c, 1.0, &a, &b, &[]);
+        assert_eq!(c.data, vec![0.0; 16]);
     }
 
     #[test]

@@ -10,7 +10,10 @@ pub mod chol;
 pub mod dense;
 pub mod lu;
 
-pub use blas::{ata, gemm, gemm_acc, gemv, gemv_acc, gemv_t, gemv_t_acc};
+pub use blas::{
+    ata, axpy_cols, gemm, gemm_acc, gemm_acc_cols, gemm_acc_rows, gemv,
+    gemv_acc, gemv_t, gemv_t_acc, par_gemm_acc,
+};
 pub use chol::Chol;
 pub use dense::{add_vec, axpy, cosine, dot, norm2, relu, sub_vec, Mat};
 pub use lu::Lu;

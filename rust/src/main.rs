@@ -49,7 +49,7 @@ fn cmd_info(args: &Args) {
     }
 }
 
-fn cmd_check(args: &Args) -> anyhow::Result<()> {
+fn cmd_check(args: &Args) -> altdiff::Result<()> {
     let dir = artifacts_dir(args);
     let mut eng = Engine::new(&dir)?;
     println!("platform: {}", eng.platform());

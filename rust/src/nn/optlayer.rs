@@ -8,6 +8,7 @@
 
 use crate::altdiff::{DenseAltDiff, Options, Param};
 use crate::baselines;
+use crate::batch::BatchedAltDiff;
 use crate::error::Result;
 use crate::linalg::{gemv_t, Mat};
 use crate::prob::Qp;
@@ -24,24 +25,38 @@ pub enum OptBackend {
 /// Optimization layer with fixed structure (P, A, b, G, h); input is q.
 pub struct OptLayer {
     solver: DenseAltDiff,
+    /// batched engine sharing the solver's factorization (minibatches;
+    /// only built for the Alt-Diff backend — OptNet has no batched path)
+    batched: Option<BatchedAltDiff>,
     pub backend: OptBackend,
     pub tol: f64,
     /// cached ∂x/∂q from the last forward (n×n)
     last_jac: Option<Mat>,
-    /// iterations used by the last forward (metrics)
+    /// cached per-element ∂x/∂q from the last `forward_batch`
+    last_jacs: Vec<Mat>,
+    /// iterations used by the last forward (metrics; mean over the batch
+    /// after `forward_batch`)
     pub last_iters: usize,
+    /// per-element iterations from the last `forward_batch`
+    pub last_batch_iters: Vec<usize>,
 }
 
 impl OptLayer {
     pub fn new(qp: Qp, rho: f64, backend: OptBackend, tol: f64)
         -> Result<Self>
     {
+        let solver = DenseAltDiff::new(qp, rho)?;
+        let batched = (backend == OptBackend::AltDiff)
+            .then(|| BatchedAltDiff::from_dense(&solver));
         Ok(OptLayer {
-            solver: DenseAltDiff::new(qp, rho)?,
+            solver,
+            batched,
             backend,
             tol,
             last_jac: None,
+            last_jacs: Vec::new(),
             last_iters: 0,
+            last_batch_iters: Vec::new(),
         })
     }
 
@@ -89,6 +104,66 @@ impl OptLayer {
             .expect("backward before forward");
         gemv_t(j, gx)
     }
+
+    /// Minibatch forward: solve B instances of the layer in one
+    /// [`BatchedAltDiff`] launch (Alt-Diff backend; the OptNet baseline
+    /// has no batched KKT path and falls back to a per-sample loop).
+    /// Caches one Jacobian per element for [`Self::backward_element`].
+    pub fn forward_batch(&mut self, qs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        assert!(!qs.is_empty(), "empty minibatch");
+        if qs.len() == 1 || self.backend == OptBackend::OptNetKkt {
+            // per-sample path (exact single-sample semantics)
+            let mut xs = Vec::with_capacity(qs.len());
+            self.last_jacs = Vec::with_capacity(qs.len());
+            self.last_batch_iters = Vec::with_capacity(qs.len());
+            for q in qs {
+                let x = self.forward(q);
+                self.last_jacs.push(
+                    self.last_jac.clone().expect("forward caches jac"),
+                );
+                self.last_batch_iters.push(self.last_iters);
+                xs.push(x);
+            }
+            return xs;
+        }
+        let qrefs: Vec<&[f64]> =
+            qs.iter().map(|q| q.as_slice()).collect();
+        let batched =
+            self.batched.as_ref().expect("alt-diff backend has engine");
+        let sol = batched.solve_batch(
+            Some(&qrefs),
+            None,
+            None,
+            &Options {
+                tol: self.tol,
+                max_iter: 20_000,
+                jacobian: Some(Param::Q),
+                ..Default::default()
+            },
+        );
+        self.last_batch_iters = sol.iters.clone();
+        self.last_iters = sol.iters.iter().sum::<usize>() / sol.iters.len();
+        self.last_jacs = sol.jacobians.expect("jacobian requested");
+        self.last_jac = None; // single-sample cache is now stale
+        sol.xs
+    }
+
+    /// Backward for minibatch element `e`: dL/dq_e = J_eᵀ · dL/dx_e.
+    pub fn backward_element(&self, e: usize, gx: &[f64]) -> Vec<f64> {
+        let j = self
+            .last_jacs
+            .get(e)
+            .expect("backward_element before forward_batch");
+        gemv_t(j, gx)
+    }
+
+    /// Backward for a whole minibatch (pairs with [`Self::forward_batch`]).
+    pub fn backward_batch(&self, gxs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        gxs.iter()
+            .enumerate()
+            .map(|(e, gx)| self.backward_element(e, gx))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -132,12 +207,58 @@ mod tests {
     }
 
     #[test]
+    fn forward_batch_matches_sequential_forward() {
+        let mut seq = layer(OptBackend::AltDiff);
+        let mut bat = layer(OptBackend::AltDiff);
+        let qs: Vec<Vec<f64>> = (0..3)
+            .map(|s| {
+                (0..10)
+                    .map(|i| 0.1 * i as f64 - 0.3 + 0.2 * s as f64)
+                    .collect()
+            })
+            .collect();
+        let xs = bat.forward_batch(&qs);
+        assert_eq!(xs.len(), 3);
+        assert_eq!(bat.last_batch_iters.len(), 3);
+        let gx: Vec<f64> = (0..10).map(|i| 0.5 - 0.1 * i as f64).collect();
+        for (e, q) in qs.iter().enumerate() {
+            let x = seq.forward(q);
+            for i in 0..10 {
+                assert!(
+                    (xs[e][i] - x[i]).abs() < 1e-6,
+                    "x[{e}][{i}]: batched {} sequential {}",
+                    xs[e][i],
+                    x[i]
+                );
+            }
+            let gb = bat.backward_element(e, &gx);
+            let gs = seq.backward(&gx);
+            for i in 0..10 {
+                assert!((gb[i] - gs[i]).abs() < 1e-6, "g[{e}][{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_optnet_fallback_works() {
+        let mut l = layer(OptBackend::OptNetKkt);
+        let qs: Vec<Vec<f64>> = (0..2)
+            .map(|s| (0..10).map(|i| 0.05 * i as f64 + s as f64 * 0.1).collect())
+            .collect();
+        let xs = l.forward_batch(&qs);
+        assert_eq!(xs.len(), 2);
+        let gq = l.backward_batch(&[vec![1.0; 10], vec![1.0; 10]]);
+        assert_eq!(gq.len(), 2);
+        assert!(gq[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
     fn backward_matches_loss_finite_difference() {
         // L(q) = sum x*(q); check dL/dq by FD through the solver.
         let mut l = layer(OptBackend::AltDiff);
         let q: Vec<f64> = (0..10).map(|i| -0.2 + 0.07 * i as f64).collect();
         let _x = l.forward(&q);
-        let g = l.backward(&vec![1.0; 10]);
+        let g = l.backward(&[1.0; 10]);
         let eps = 1e-5;
         for c in [0usize, 3, 9] {
             let mut qp = q.clone();

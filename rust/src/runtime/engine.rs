@@ -9,6 +9,10 @@
 //! Threading: `PjRtClient` and executables are not `Sync`; the coordinator
 //! gives each worker thread its own `Engine` (cheap: compilation is
 //! per-thread but the artifact files are shared).
+//!
+//! Compiled only with `--features pjrt`, which requires the vendored
+//! `xla` crate (see Cargo.toml); the default build uses
+//! [`super::engine` = `engine_stub`] instead.
 
 use crate::error::{AltDiffError, Result};
 use crate::linalg::Mat;

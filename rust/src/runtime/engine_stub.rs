@@ -1,0 +1,98 @@
+//! Native-only stand-in for the PJRT engine, compiled when the `pjrt`
+//! feature is disabled (the default — the offline build has no `xla`
+//! crate). The API surface is identical to [`super::engine`]'s real
+//! implementation so the coordinator, CLI, and tests compile unchanged;
+//! construction fails with a `Runtime` error and every caller falls back
+//! to the native batched engine.
+
+use crate::error::{AltDiffError, Result};
+use crate::linalg::Mat;
+use crate::runtime::manifest::Manifest;
+use std::path::Path;
+
+/// Output of one compiled QP-layer execution (shape contract shared with
+/// the real engine).
+#[derive(Clone, Debug)]
+pub struct LayerOutput {
+    /// x iterate(s): batch-major, (B, n) flattened.
+    pub x: Vec<f32>,
+    /// ∂x/∂b Jacobian(s): (B, n, p) flattened.
+    pub jx: Vec<f32>,
+    /// primal residual per batch element.
+    pub prim: Vec<f32>,
+    /// dual residual (ρ‖x_k − x_{k−1}‖) per batch element.
+    pub dual: Vec<f32>,
+}
+
+/// Disabled engine: exists only so the `Engine` name resolves.
+pub struct Engine {
+    pub manifest: Manifest,
+    /// executions served (always 0 here)
+    pub exec_count: u64,
+}
+
+fn disabled<T>() -> Result<T> {
+    Err(AltDiffError::Runtime(
+        "PJRT runtime unavailable: built without the `pjrt` feature \
+         (native batched backend only)"
+            .into(),
+    ))
+}
+
+impl Engine {
+    /// Always fails: the compiled path needs `--features pjrt`.
+    pub fn new(_dir: &Path) -> Result<Engine> {
+        disabled()
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".to_string()
+    }
+
+    pub fn compile(&mut self, _name: &str) -> Result<()> {
+        disabled()
+    }
+
+    pub fn warmup(&mut self) -> Result<usize> {
+        disabled()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute(
+        &mut self,
+        _name: &str,
+        _hinv: &[f32],
+        _a: &[f32],
+        _g: &[f32],
+        _q: &[f32],
+        _b: &[f32],
+        _h: &[f32],
+    ) -> Result<LayerOutput> {
+        disabled()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_dense(
+        &mut self,
+        _name: &str,
+        _hinv: &Mat,
+        _a: &Mat,
+        _g: &Mat,
+        _q: &[f64],
+        _b: &[f64],
+        _h: &[f64],
+    ) -> Result<LayerOutput> {
+        disabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_runtime_unavailable() {
+        let err = Engine::new(Path::new("/nonexistent")).err().unwrap();
+        assert!(err.to_string().contains("pjrt"));
+    }
+}

@@ -3,8 +3,15 @@
 //!
 //! - [`manifest`]: parses `artifacts/manifest.tsv` into variant metadata.
 //! - [`engine`]: PJRT CPU client + lazily compiled executables, keyed by
-//!   variant name; typed f32 I/O matched to the artifact contract.
+//!   variant name; typed f32 I/O matched to the artifact contract. Built
+//!   only with the `pjrt` feature (needs the vendored `xla` crate); the
+//!   default offline build substitutes a same-API stub whose constructor
+//!   fails, so serving falls back to the native batched engine.
 
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 pub mod manifest;
 

@@ -9,6 +9,11 @@ use altdiff::runtime::{Engine, Manifest};
 use std::path::{Path, PathBuf};
 
 fn artifacts_dir() -> Option<PathBuf> {
+    if cfg!(not(feature = "pjrt")) {
+        // default build substitutes the stub Engine (constructor always
+        // fails) — skip even when artifacts are present on disk
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.tsv").exists().then_some(dir)
 }

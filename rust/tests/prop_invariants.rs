@@ -177,17 +177,21 @@ fn prop_batcher_conservation() {
                 tol: 1e-3,
                 submitted: Instant::now(),
             };
-            if let Some(batch) = b.push(layer, k, req) {
+            if let Some(batch) = b.push(k, req) {
                 assert!(batch.requests.len() <= max_batch);
                 for r in &batch.requests {
-                    assert_eq!(r.layer, batch.layer, "mixed layers");
-                    got.push((batch.layer.clone(), batch.k, r.id));
+                    assert_eq!(
+                        r.layer.as_str(),
+                        &*batch.layer,
+                        "mixed layers"
+                    );
+                    got.push((batch.layer.to_string(), batch.k, r.id));
                 }
             }
         }
         for batch in b.flush_all() {
             for r in &batch.requests {
-                got.push((batch.layer.clone(), batch.k, r.id));
+                got.push((batch.layer.to_string(), batch.k, r.id));
             }
         }
         assert_eq!(got.len(), sent.len(), "lost or duplicated requests");
