@@ -15,7 +15,7 @@
 use altdiff::altdiff::{DenseAltDiff, Options, Param};
 use altdiff::batch::BatchedAltDiff;
 use altdiff::prob::dense_qp;
-use altdiff::util::{Args, Pcg64, Table};
+use altdiff::util::{Args, JsonReport, Pcg64, Stats, Table};
 use std::time::Instant;
 
 fn main() {
@@ -46,6 +46,7 @@ fn main() {
         ],
     );
 
+    let mut json = JsonReport::new("batched_native");
     let mut b32_n200_speedup = None;
     for &n in &sizes {
         let (m, p) = (n / 2, n / 5);
@@ -130,10 +131,24 @@ fn main() {
                 format!("{speedup:.2}x"),
                 format!("{dx:.1e}"),
             ]);
+            json.entry(
+                &[("n", &n.to_string()), ("B", &bsz.to_string())],
+                &Stats::from_samples(&[t_bat]),
+                &[
+                    ("seq_median", t_seq),
+                    ("speedup", speedup),
+                    ("max_dx", dx),
+                    ("batched_inst_per_s", bsz as f64 / t_bat),
+                ],
+            );
         }
     }
     t.print();
     t.write_csv("batched_native").unwrap();
+    match json.write() {
+        Ok(path) => println!("machine-readable results: {path}"),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
     if let Some(s) = b32_n200_speedup {
         println!(
             "\nheadline cell (n=200, B=32): {s:.2}x batched over \

@@ -15,7 +15,10 @@ use crate::prob::Qp;
 
 /// A registered dense QP layer: problem structure + cached factorization.
 pub struct DenseAltDiff {
+    /// The registered problem.
     pub qp: Qp,
+    /// ADMM penalty ρ (fixed at registration: the cached factor is of
+    /// H(ρ)).
     pub rho: f64,
     pub(crate) chol: Chol,
     /// Explicit H⁻¹. One extra n³ at registration, but the backward's

@@ -74,10 +74,12 @@ impl Default for Options {
 }
 
 impl Options {
+    /// Defaults with Jacobian propagation disabled (forward solve only).
     pub fn forward_only() -> Self {
         Options { jacobian: None, ..Default::default() }
     }
 
+    /// Defaults at the given truncation tolerance.
     pub fn with_tol(tol: f64) -> Self {
         Options { tol, ..Default::default() }
     }
@@ -86,6 +88,7 @@ impl Options {
 /// Per-iteration trace entry (drives the Fig. 1 reproduction).
 #[derive(Clone, Debug)]
 pub struct TraceEntry {
+    /// Iteration index (0-based).
     pub iter: usize,
     /// ‖x_{k+1} − x_k‖ / max(‖x_k‖, 1)
     pub step_rel: f64,
@@ -96,15 +99,21 @@ pub struct TraceEntry {
 /// Solution + gradients of one optimization-layer evaluation.
 #[derive(Clone, Debug)]
 pub struct Solution {
+    /// Primal minimizer x*.
     pub x: Vec<f64>,
+    /// Slack s ≥ 0 for the inequalities.
     pub s: Vec<f64>,
+    /// Equality duals λ.
     pub lam: Vec<f64>,
+    /// Inequality duals ν.
     pub nu: Vec<f64>,
     /// ∂x/∂θ (n × dim(θ)) when requested.
     pub jacobian: Option<Mat>,
+    /// Iterations actually run before the truncation criterion fired.
     pub iters: usize,
     /// Final relative step size (the truncation criterion value).
     pub step_rel: f64,
+    /// Per-iteration trace when [`Options::trace`] was set.
     pub trace: Vec<TraceEntry>,
 }
 

@@ -16,11 +16,17 @@ use crate::sparse::Csr;
 
 /// A registered general-objective layer with polyhedral constraints.
 pub struct NewtonAltDiff<O: Objective> {
+    /// The convex objective f.
     pub obj: O,
+    /// Equality constraint matrix A, (p,n) CSR.
     pub a: Csr,
+    /// Equality right-hand side b, (p).
     pub b: Vec<f64>,
+    /// Inequality constraint matrix G, (m,n) CSR.
     pub g: Csr,
+    /// Inequality right-hand side h, (m).
     pub h: Vec<f64>,
+    /// ADMM penalty ρ.
     pub rho: f64,
     /// max inner Newton iterations per ADMM step
     pub newton_max: usize,
@@ -30,6 +36,8 @@ pub struct NewtonAltDiff<O: Objective> {
 }
 
 impl<O: Objective> NewtonAltDiff<O> {
+    /// Register: detect the softmax/sparsemax structure for the O(n)
+    /// Sherman–Morrison inner solves.
     pub fn new(
         obj: O,
         a: Csr,

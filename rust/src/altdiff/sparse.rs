@@ -16,8 +16,11 @@ use crate::linalg::{dot, norm2, Mat};
 use crate::prob::SparseQp;
 use crate::sparse::{cg, Csr, HessianOp};
 
-/// x-update engine.
-enum Engine {
+/// x-update engine. `pub(crate)` so [`crate::batch::BatchedSparseAltDiff`]
+/// can inherit the registration-time pick (and the Sherman–Morrison
+/// caches) instead of re-deriving them.
+#[derive(Clone)]
+pub(crate) enum Engine {
     /// H = diag(d) + ρ a aᵀ ; cached: dinv, u = dinv*a, denom = 1 + ρ aᵀu.
     ShermanMorrison { dinv: Vec<f64>, u: Vec<f64>, denom: f64, rho: f64 },
     /// Matrix-free CG on the assembled operator.
@@ -26,14 +29,20 @@ enum Engine {
 
 /// A registered sparse QP layer.
 pub struct SparseAltDiff {
+    /// The registered problem (CSR constraints, diagonal P).
     pub qp: SparseQp,
+    /// ADMM penalty ρ (fixed at registration, like the dense path).
     pub rho: f64,
-    engine: Engine,
-    /// diag(P) + ρ diag(GᵀG) + ρ diag(AᵀA) (for the CG operator).
-    hdiag_p: Vec<f64>,
+    pub(crate) engine: Engine,
+    /// diag(P) (assembled into the CG operator's diagonal together with
+    /// the ρ·diag(AᵀA/GᵀG) terms).
+    pub(crate) hdiag_p: Vec<f64>,
 }
 
 impl SparseAltDiff {
+    /// Register: pick the x-update engine from the constraint structure
+    /// (Sherman–Morrison for the sparsemax shape, matrix-free CG
+    /// otherwise).
     pub fn new(qp: SparseQp, rho: f64) -> Result<Self> {
         let n = qp.n();
         let engine = Self::pick_engine(&qp, rho);
@@ -101,7 +110,8 @@ impl SparseAltDiff {
         }
     }
 
-    /// Solve + differentiate. Mirrors [`DenseAltDiff::solve_with`].
+    /// Solve + differentiate. Mirrors
+    /// [`DenseAltDiff::solve_with`](super::DenseAltDiff::solve_with).
     pub fn solve_with(
         &self,
         q: Option<&[f64]>,
@@ -200,6 +210,7 @@ impl SparseAltDiff {
         Solution { x, s, lam, nu, jacobian: jx, iters, step_rel, trace }
     }
 
+    /// Convenience: solve with the registered parameters θ.
     pub fn solve(&self, opts: &Options) -> Solution {
         self.solve_with(None, None, None, opts)
     }

@@ -23,13 +23,18 @@ use std::time::Instant;
 /// Phase timing breakdown (the per-row structure of Tables 2/4/5).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Phases {
+    /// Canonicalization seconds.
     pub canon: f64,
+    /// Initialization seconds.
     pub init: f64,
+    /// Forward-solve seconds.
     pub forward: f64,
+    /// Backward (differentiation) seconds.
     pub backward: f64,
 }
 
 impl Phases {
+    /// Sum of all phases.
     pub fn total(&self) -> f64 {
         self.canon + self.init + self.forward + self.backward
     }
@@ -37,9 +42,13 @@ impl Phases {
 
 /// Result of one layer evaluation through the conic pipeline.
 pub struct ConicResult {
+    /// Primal minimizer (original variables).
     pub x: Vec<f64>,
+    /// ∂x/∂θ for the requested parameter.
     pub jacobian: Mat,
+    /// Interior-point iterations of the embedded solve.
     pub iters: usize,
+    /// Where the time went.
     pub phases: Phases,
 }
 

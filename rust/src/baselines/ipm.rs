@@ -13,11 +13,15 @@ use crate::prob::Qp;
 /// IPM outcome: primal + duals (ν ≥ 0 for Gx ≤ h) and iteration count.
 #[derive(Clone, Debug)]
 pub struct IpmSolution {
+    /// Primal minimizer x*.
     pub x: Vec<f64>,
+    /// Equality duals λ.
     pub lam: Vec<f64>,
+    /// Inequality duals ν ≥ 0.
     pub nu: Vec<f64>,
     /// slack t = h − Gx > 0
     pub t: Vec<f64>,
+    /// Newton iterations run.
     pub iters: usize,
 }
 

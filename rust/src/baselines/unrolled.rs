@@ -56,9 +56,11 @@ fn project_simplex_vjp(gbar: &[f64], mask: &[bool]) -> Vec<f64> {
 
 /// Result of the unrolled layer.
 pub struct UnrolledResult {
+    /// Final iterate x_T.
     pub x: Vec<f64>,
     /// dx/dy (n×n) for the sparsemax objective min ‖x − y‖².
     pub jacobian: Mat,
+    /// Forward iterations unrolled.
     pub iters: usize,
     /// floats retained for the reverse sweep (the memory cost).
     pub peak_stored_floats: usize,

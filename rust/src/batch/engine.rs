@@ -21,9 +21,28 @@ use crate::linalg::{
 };
 use crate::prob::Qp;
 
-/// A registered QP structure ready to solve B right-hand sides per launch.
+/// A registered QP structure ready to solve B right-hand sides per
+/// launch.
+///
+/// ```
+/// use altdiff::altdiff::Options;
+/// use altdiff::batch::BatchedAltDiff;
+/// use altdiff::prob::dense_qp;
+///
+/// // register once (factors H), then launch batches of per-request θ
+/// let engine = BatchedAltDiff::new(dense_qp(6, 3, 1, 7), 1.0).unwrap();
+/// let q2: Vec<f64> = engine.qp.q.iter().map(|v| 0.5 * v).collect();
+/// let qs: Vec<&[f64]> = vec![&engine.qp.q, &q2];
+/// let sol = engine.solve_batch(Some(&qs), None, None, &Options::default());
+/// assert_eq!(sol.len(), 2);
+/// assert!(sol.xs.iter().flatten().all(|v| v.is_finite()));
+/// // per-element Jacobians ∂x/∂b ride the same launch
+/// assert_eq!(sol.jacobians.as_ref().unwrap()[0].cols, 1);
+/// ```
 pub struct BatchedAltDiff {
+    /// The registered problem.
     pub qp: Qp,
+    /// ADMM penalty ρ (registration-time).
     pub rho: f64,
     /// explicit H⁻¹ shared by forward (5a) and backward (7a)
     hinv: Mat,

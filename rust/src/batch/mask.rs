@@ -26,6 +26,7 @@ impl ActiveSet {
         self.flags.len()
     }
 
+    /// True when the batch has zero elements.
     pub fn is_empty(&self) -> bool {
         self.flags.is_empty()
     }
@@ -35,10 +36,12 @@ impl ActiveSet {
         self.remaining
     }
 
+    /// True when every element has been deactivated.
     pub fn all_done(&self) -> bool {
         self.remaining == 0
     }
 
+    /// Whether element `e` is still iterating.
     pub fn is_active(&self, e: usize) -> bool {
         self.flags[e]
     }

@@ -20,12 +20,21 @@
 //! Appendix B.1) serves the whole batch; per-element results match
 //! [`crate::altdiff::DenseAltDiff`] run element-by-element (see
 //! `tests/prop_batched.rs`).
+//!
+//! The sparse path ([`sparse::BatchedSparseAltDiff`]) carries the same
+//! contract into the Table 4 regime: element-major (n, B) blocks,
+//! multi-RHS SpMM on the CSR constraints, a batched Sherman–Morrison
+//! fast path for sparsemax-structured Hessians, and blocked CG
+//! ([`block_cg`](crate::sparse::block_cg())) otherwise — per-element
+//! truncation via the same [`ActiveSet`].
 
 pub mod engine;
 pub mod mask;
+pub mod sparse;
 
 pub use engine::BatchedAltDiff;
 pub use mask::ActiveSet;
+pub use sparse::BatchedSparseAltDiff;
 
 use crate::altdiff::Solution;
 use crate::linalg::Mat;
@@ -56,6 +65,7 @@ impl BatchSolution {
         self.xs.len()
     }
 
+    /// True for a zero-element solution.
     pub fn is_empty(&self) -> bool {
         self.xs.is_empty()
     }

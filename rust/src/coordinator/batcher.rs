@@ -19,14 +19,19 @@ use std::time::{Duration, Instant};
 /// Batch of compatible requests ready for execution.
 #[derive(Debug)]
 pub struct Batch {
+    /// Target layer (interned name).
     pub layer: Arc<str>,
+    /// Routed iteration count shared by every member.
     pub k: usize,
+    /// The member requests, in arrival order.
     pub requests: Vec<Request>,
 }
 
 /// Keyed accumulation with deadline-based flushing.
 pub struct Batcher {
+    /// Flush threshold: a group launches at this many requests.
     pub max_batch: usize,
+    /// Max time the oldest member of a group may wait.
     pub deadline: Duration,
     /// layer-name intern table (bounded by the number of distinct layer
     /// names ever seen; `Arc<str>: Borrow<str>` gives by-&str lookup)
@@ -35,6 +40,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Empty batcher with the given flush policy.
     pub fn new(max_batch: usize, deadline: Duration) -> Self {
         Batcher {
             max_batch,
@@ -100,6 +106,7 @@ impl Batcher {
             .collect()
     }
 
+    /// Requests currently waiting across all groups.
     pub fn pending_count(&self) -> usize {
         self.pending.values().map(|v| v.len()).sum()
     }

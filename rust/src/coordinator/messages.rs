@@ -5,23 +5,29 @@ use std::time::Instant;
 /// A differentiation request against a registered layer.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Client-assigned correlation id.
     pub id: u64,
     /// registered layer this request targets
     pub layer: String,
-    /// per-request parameters θ
+    /// per-request parameter θ: objective linear term q
     pub q: Vec<f64>,
+    /// per-request parameter θ: equality right-hand side b
     pub b: Vec<f64>,
+    /// per-request parameter θ: inequality right-hand side h
     pub h: Vec<f64>,
     /// requested truncation tolerance (paper §4.3) — the router maps this
     /// to an iteration count k via the calibrated truncation table.
     pub tol: f64,
+    /// submission timestamp (end-to-end latency accounting)
     pub submitted: Instant,
 }
 
 /// The solved layer + gradient.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Correlation id of the request this answers.
     pub id: u64,
+    /// Primal minimizer x*.
     pub x: Vec<f64>,
     /// ∂x/∂b, row-major (n × p)
     pub jx: Vec<f64>,
@@ -33,25 +39,30 @@ pub struct Response {
     pub batch_size: usize,
     /// end-to-end latency in seconds
     pub latency: f64,
-    /// which backend served it ("pjrt" | "native")
+    /// which backend served it ("pjrt" | "native" | "native-sparse")
     pub backend: &'static str,
 }
 
 /// Failure envelope (never panics across the channel boundary).
 #[derive(Clone, Debug)]
 pub struct Failure {
+    /// Correlation id of the failed request.
     pub id: u64,
+    /// Human-readable failure description.
     pub error: String,
 }
 
 /// What workers send back.
 #[derive(Clone, Debug)]
 pub enum Reply {
+    /// The request was served.
     Ok(Response),
+    /// The request failed (routing, validation, or execution).
     Err(Failure),
 }
 
 impl Reply {
+    /// Correlation id, whichever arm.
     pub fn id(&self) -> u64 {
         match self {
             Reply::Ok(r) => r.id,

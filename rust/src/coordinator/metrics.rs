@@ -6,30 +6,41 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub const LAT_BUCKETS_US: [u64; 8] =
     [50, 100, 250, 500, 1_000, 5_000, 25_000, u64::MAX];
 
+/// Counters and latency histogram shared by dispatcher and workers.
 #[derive(Default)]
 pub struct Metrics {
+    /// requests accepted by the dispatcher
     pub requests: AtomicU64,
+    /// successful replies sent
     pub responses: AtomicU64,
+    /// failure replies sent
     pub failures: AtomicU64,
+    /// batches dispatched to workers
     pub batches: AtomicU64,
+    /// compiled-artifact executions
     pub pjrt_execs: AtomicU64,
     /// native batched launches (one per `Batch`, not per request)
     pub native_execs: AtomicU64,
+    /// the subset of native launches executed by the sparse batch engine
+    pub native_sparse_execs: AtomicU64,
     /// requests served by native launches (occupancy numerator)
     pub native_elems: AtomicU64,
     /// slots wasted by padding partial batches to the artifact batch size
     pub padded_slots: AtomicU64,
     /// truncation-table online corrections
     pub bumps: AtomicU64,
+    /// summed end-to-end latency (µs) over all responses
     pub total_latency_us: AtomicU64,
     lat_hist: [AtomicU64; 8],
 }
 
 impl Metrics {
+    /// All-zero metrics.
     pub fn new() -> Self {
         Metrics::default()
     }
 
+    /// Record one response's end-to-end latency (seconds).
     pub fn observe_latency(&self, secs: f64) {
         let us = (secs * 1e6) as u64;
         self.total_latency_us.fetch_add(us, Ordering::Relaxed);
@@ -41,6 +52,7 @@ impl Metrics {
         }
     }
 
+    /// Mean end-to-end latency in microseconds (0 with no responses).
     pub fn mean_latency_us(&self) -> f64 {
         let n = self.responses.load(Ordering::Relaxed);
         if n == 0 {
@@ -81,13 +93,15 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "req={} resp={} fail={} batches={} pjrt={} native={} \
-             native_occ={:.1} pad={} bumps={} mean_lat={:.0}us p90<={}us",
+             sparse={} native_occ={:.1} pad={} bumps={} mean_lat={:.0}us \
+             p90<={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.failures.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.pjrt_execs.load(Ordering::Relaxed),
             self.native_execs.load(Ordering::Relaxed),
+            self.native_sparse_execs.load(Ordering::Relaxed),
             self.native_batch_occupancy(),
             self.padded_slots.load(Ordering::Relaxed),
             self.bumps.load(Ordering::Relaxed),

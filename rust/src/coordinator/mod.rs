@@ -14,5 +14,7 @@ pub mod truncation;
 pub use batcher::{Batch, Batcher};
 pub use messages::{Failure, Reply, Request, Response};
 pub use metrics::Metrics;
-pub use server::{Config, Coordinator, CoordinatorBuilder, RegisteredLayer};
+pub use server::{
+    Config, Coordinator, CoordinatorBuilder, LayerEngine, RegisteredLayer,
+};
 pub use truncation::TruncationTable;

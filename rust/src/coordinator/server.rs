@@ -17,10 +17,10 @@ use super::batcher::{Batch, Batcher};
 use super::messages::{Failure, Reply, Request, Response};
 use super::metrics::Metrics;
 use super::truncation::TruncationTable;
-use crate::altdiff::{DenseAltDiff, Options, Param};
-use crate::batch::BatchedAltDiff;
+use crate::altdiff::{DenseAltDiff, Options, Param, SparseAltDiff};
+use crate::batch::{BatchSolution, BatchedAltDiff, BatchedSparseAltDiff};
 use crate::error::{AltDiffError, Result};
-use crate::prob::Qp;
+use crate::prob::{Qp, SparseQp};
 use crate::runtime::Engine;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -28,34 +28,63 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// Which execution engines back a registered layer.
+pub enum LayerEngine {
+    /// Dense QP layer: PJRT-eligible, with the native dense batch engine
+    /// as fallback/oracle.
+    Dense {
+        /// native engine (calibration + parity checks + residuals)
+        solver: DenseAltDiff,
+        /// native batched engine (fallback execution path; shares the
+        /// solver's registration-time factorization)
+        batched: BatchedAltDiff,
+        /// H⁻¹ artifact input, precomputed at registration (f32 contract)
+        hinv_f32: Vec<f32>,
+        /// A artifact input
+        a_f32: Vec<f32>,
+        /// G artifact input
+        g_f32: Vec<f32>,
+        /// batch sizes available in the compiled family (empty → native
+        /// only)
+        batches: Vec<usize>,
+    },
+    /// Sparse QP layer (Table 4 regime): no compiled family — every
+    /// batch is one [`BatchedSparseAltDiff`] launch.
+    Sparse {
+        /// sequential engine (calibration + residual reporting)
+        solver: SparseAltDiff,
+        /// batched engine sharing the solver's registration
+        batched: BatchedSparseAltDiff,
+    },
+}
+
 /// A layer registered with the server (immutable after startup, shared
 /// across workers).
 pub struct RegisteredLayer {
+    /// Registration name (routing key).
     pub name: String,
+    /// Variables n.
     pub n: usize,
+    /// Inequality constraints m.
     pub m: usize,
+    /// Equality constraints p.
     pub p: usize,
+    /// ADMM penalty ρ.
     pub rho: f64,
-    /// native engine (calibration + parity checks + residual reporting)
-    pub solver: DenseAltDiff,
-    /// native batched engine (fallback execution path; shares the
-    /// solver's registration-time factorization)
-    pub batched: BatchedAltDiff,
-    /// artifact inputs, precomputed once at registration (f32 contract)
-    pub hinv_f32: Vec<f32>,
-    pub a_f32: Vec<f32>,
-    pub g_f32: Vec<f32>,
+    /// The execution engines backing this layer.
+    pub engine: LayerEngine,
     /// tol → k router table (Mutex: workers bump it online)
     pub table: Mutex<TruncationTable>,
-    /// batch sizes available in the compiled family (empty → native only)
-    pub batches: Vec<usize>,
 }
 
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Worker threads (each owns its own PJRT engine).
     pub workers: usize,
+    /// Dynamic-batcher flush threshold.
     pub max_batch: usize,
+    /// Dynamic-batcher deadline (latency bound on partial batches).
     pub batch_deadline: Duration,
     /// artifact directory; None → native backend only
     pub artifacts: Option<PathBuf>,
@@ -89,6 +118,7 @@ enum WorkerMsg {
 pub struct Coordinator {
     tx: Sender<DispatchMsg>,
     reply_rx: Receiver<Reply>,
+    /// Shared serving metrics (live; read any time).
     pub metrics: Arc<Metrics>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -105,6 +135,7 @@ pub struct CoordinatorBuilder {
 }
 
 impl CoordinatorBuilder {
+    /// Empty builder over the given configuration.
     pub fn new(config: Config) -> Self {
         CoordinatorBuilder {
             config,
@@ -120,6 +151,22 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Calibrate a truncation table from a convergence trace against the
+    /// builder's ladder and tolerance grid.
+    fn calibrate(&self, trace: &[f64]) -> TruncationTable {
+        TruncationTable::calibrate(
+            &self.ladder,
+            trace,
+            &self.config.calib_tols,
+        )
+    }
+
+    /// Iteration budget for the calibration solve (generous multiple of
+    /// the top ladder rung).
+    fn calib_iters(&self) -> usize {
+        *self.ladder.last().unwrap_or(&80) * 4
+    }
+
     /// Register a dense QP layer: factors H, precomputes the f32 artifact
     /// inputs, and calibrates the truncation table on the layer's own
     /// registered parameters.
@@ -132,18 +179,14 @@ impl CoordinatorBuilder {
         // calibration trace on the registered θ
         let sol = solver.solve(&Options {
             tol: 1e-9,
-            max_iter: *self.ladder.last().unwrap_or(&80) * 4,
+            max_iter: self.calib_iters(),
             jacobian: None,
             trace: true,
             ..Default::default()
         });
         let trace: Vec<f64> =
             sol.trace.iter().map(|t| t.step_rel).collect();
-        let table = TruncationTable::calibrate(
-            &self.ladder,
-            &trace,
-            &self.config.calib_tols,
-        );
+        let table = self.calibrate(&trace);
         // compiled family available?
         let batches = match &self.config.artifacts {
             Some(dir) => match crate::runtime::Manifest::load(dir) {
@@ -171,13 +214,53 @@ impl CoordinatorBuilder {
             m,
             p,
             rho,
-            hinv_f32: hinv.to_f32(),
-            a_f32,
-            g_f32,
-            solver,
-            batched,
+            engine: LayerEngine::Dense {
+                hinv_f32: hinv.to_f32(),
+                a_f32,
+                g_f32,
+                solver,
+                batched,
+                batches,
+            },
             table: Mutex::new(table),
-            batches,
+        };
+        self.layers.insert(name.to_string(), Arc::new(layer));
+        Ok(self)
+    }
+
+    /// Register a sparse QP layer (Table 4 regime: diagonal P, CSR
+    /// constraints). No compiled family exists for sparse layers — every
+    /// dispatched batch becomes one [`BatchedSparseAltDiff`] launch on
+    /// the native path, with the same tol→k routing as dense layers.
+    pub fn register_sparse(
+        mut self,
+        name: &str,
+        qp: SparseQp,
+        rho: f64,
+    ) -> Result<Self> {
+        let n = qp.n();
+        let m = qp.m_ineq();
+        let p = qp.p_eq();
+        let solver = SparseAltDiff::new(qp, rho)?;
+        let sol = solver.solve(&Options {
+            tol: 1e-9,
+            max_iter: self.calib_iters(),
+            jacobian: None,
+            trace: true,
+            ..Default::default()
+        });
+        let trace: Vec<f64> =
+            sol.trace.iter().map(|t| t.step_rel).collect();
+        let table = self.calibrate(&trace);
+        let batched = BatchedSparseAltDiff::from_sparse(&solver);
+        let layer = RegisteredLayer {
+            name: name.to_string(),
+            n,
+            m,
+            p,
+            rho,
+            engine: LayerEngine::Sparse { solver, batched },
+            table: Mutex::new(table),
         };
         self.layers.insert(name.to_string(), Arc::new(layer));
         Ok(self)
@@ -435,37 +518,51 @@ fn execute_batch(
 ) -> Vec<Reply> {
     let t0 = Instant::now();
     let reqs = &batch.requests;
-    // PJRT path: pick the smallest compiled batch size >= len, pad.
-    if let Some(eng) = engine.as_mut() {
-        if let Some(&bsz) = layer.batches.iter().find(|&&b| b >= reqs.len())
-        {
-            match execute_pjrt(eng, layer, batch, bsz) {
-                Ok(mut replies) => {
-                    metrics.pjrt_execs.fetch_add(
-                        1,
-                        std::sync::atomic::Ordering::Relaxed,
-                    );
-                    metrics.padded_slots.fetch_add(
-                        (bsz - reqs.len()) as u64,
-                        std::sync::atomic::Ordering::Relaxed,
-                    );
-                    let lat = t0.elapsed().as_secs_f64();
-                    for r in replies.iter_mut() {
-                        if let Reply::Ok(resp) = r {
-                            resp.latency = lat
-                                + resp.latency; // queue time added below
+    // PJRT path (dense layers only): pick the smallest compiled batch
+    // size >= len, pad.
+    if let LayerEngine::Dense {
+        hinv_f32,
+        a_f32,
+        g_f32,
+        batches,
+        ..
+    } = &layer.engine
+    {
+        if let Some(eng) = engine.as_mut() {
+            if let Some(&bsz) =
+                batches.iter().find(|&&b| b >= reqs.len())
+            {
+                match execute_pjrt(
+                    eng, layer, batch, bsz, hinv_f32, a_f32, g_f32,
+                ) {
+                    Ok(mut replies) => {
+                        metrics.pjrt_execs.fetch_add(
+                            1,
+                            std::sync::atomic::Ordering::Relaxed,
+                        );
+                        metrics.padded_slots.fetch_add(
+                            (bsz - reqs.len()) as u64,
+                            std::sync::atomic::Ordering::Relaxed,
+                        );
+                        let lat = t0.elapsed().as_secs_f64();
+                        for r in replies.iter_mut() {
+                            if let Reply::Ok(resp) = r {
+                                resp.latency = lat
+                                    + resp.latency; // queue time added below
+                            }
                         }
+                        return replies;
                     }
-                    return replies;
-                }
-                Err(e) => {
-                    // fall through to native; record the failure mode
-                    let _ = e;
+                    Err(e) => {
+                        // fall through to native; record the failure mode
+                        let _ = e;
+                    }
                 }
             }
         }
     }
-    // Native fallback: ONE batched launch for the whole Batch. tol=0
+    // Native fallback: ONE batched launch for the whole Batch — the
+    // dense or sparse batch engine depending on the layer. tol=0
     // disables per-element truncation so every element runs exactly k
     // iterations (artifact parity, same contract as the compiled path).
     metrics
@@ -484,13 +581,51 @@ fn execute_batch(
     let qs: Vec<&[f64]> = reqs.iter().map(|r| r.q.as_slice()).collect();
     let bs: Vec<&[f64]> = reqs.iter().map(|r| r.b.as_slice()).collect();
     let hs: Vec<&[f64]> = reqs.iter().map(|r| r.h.as_slice()).collect();
-    let sol =
-        layer.batched.solve_batch(Some(&qs), Some(&bs), Some(&hs), &opts);
+    let (sol, backend): (BatchSolution, &'static str) = match &layer.engine
+    {
+        LayerEngine::Dense { batched, .. } => (
+            batched.solve_batch(Some(&qs), Some(&bs), Some(&hs), &opts),
+            "native",
+        ),
+        LayerEngine::Sparse { batched, .. } => {
+            metrics
+                .native_sparse_execs
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            // fallible: a blocked-CG breakdown must become per-request
+            // failure replies, never a worker panic (which would kill
+            // the thread and silently drop every batch routed to it)
+            match batched
+                .try_solve_batch(Some(&qs), Some(&bs), Some(&hs), &opts)
+            {
+                Ok(sol) => (sol, "native-sparse"),
+                Err(e) => {
+                    return reqs
+                        .iter()
+                        .map(|req| {
+                            Reply::Err(Failure {
+                                id: req.id,
+                                error: format!(
+                                    "sparse batched solve failed: {e}"
+                                ),
+                            })
+                        })
+                        .collect();
+                }
+            }
+        }
+    };
     let mut jacs = sol.jacobians.unwrap_or_default().into_iter();
     reqs.iter()
         .zip(sol.xs)
         .map(|(req, x)| {
-            let (prim, _) = layer.solver.qp.feasibility(&x);
+            let prim = match &layer.engine {
+                LayerEngine::Dense { solver, .. } => {
+                    solver.qp.feasibility(&x).0
+                }
+                LayerEngine::Sparse { solver, .. } => {
+                    solver.qp.feasibility(&x).0
+                }
+            };
             Reply::Ok(Response {
                 id: req.id,
                 x,
@@ -499,7 +634,7 @@ fn execute_batch(
                 k_used: batch.k,
                 batch_size: reqs.len(),
                 latency: req.submitted.elapsed().as_secs_f64(),
-                backend: "native",
+                backend,
             })
         })
         .collect()
@@ -510,6 +645,9 @@ fn execute_pjrt(
     layer: &RegisteredLayer,
     batch: &Batch,
     bsz: usize,
+    hinv_f32: &[f32],
+    a_f32: &[f32],
+    g_f32: &[f32],
 ) -> std::result::Result<Vec<Reply>, AltDiffError> {
     let reqs = &batch.requests;
     let (n, m, p) = (layer.n, layer.m, layer.p);
@@ -529,9 +667,9 @@ fn execute_pjrt(
     }
     let out = eng.execute(
         &name,
-        &layer.hinv_f32,
-        &layer.a_f32,
-        &layer.g_f32,
+        hinv_f32,
+        a_f32,
+        g_f32,
         &q,
         &b,
         &h,
@@ -566,6 +704,7 @@ fn execute_pjrt(
 }
 
 impl Coordinator {
+    /// Start building a coordinator (register layers, then `start`).
     pub fn builder(config: Config) -> CoordinatorBuilder {
         CoordinatorBuilder::new(config)
     }
@@ -614,6 +753,7 @@ impl Coordinator {
         self.reply_rx.recv().ok()
     }
 
+    /// Blocking receive with a timeout; `None` on expiry/disconnect.
     pub fn recv_timeout(&self, d: Duration) -> Option<Reply> {
         self.reply_rx.recv_timeout(d).ok()
     }

@@ -32,6 +32,21 @@ fn tol_key(tol: f64) -> u64 {
 impl TruncationTable {
     /// Build from a convergence trace: `trace[i]` = relative step at
     /// iteration i (from `altdiff::Solution::trace`).
+    ///
+    /// ```
+    /// use altdiff::coordinator::TruncationTable;
+    ///
+    /// // relative step shrinks geometrically: 0.5^i per iteration
+    /// let trace: Vec<f64> = (0..40).map(|i| 0.5f64.powi(i)).collect();
+    /// let table =
+    ///     TruncationTable::calibrate(&[10, 20, 40], &trace, &[1e-2, 1e-6]);
+    /// // 0.5^7 < 1e-2 → 8 iterations needed → snaps up to rung 10
+    /// assert_eq!(table.k_for(1e-2), 10);
+    /// // tighter tolerance routes to a higher rung, never lower
+    /// assert!(table.k_for(1e-6) >= table.k_for(1e-2));
+    /// // uncalibrated-but-looser tolerances reuse a safe entry
+    /// assert_eq!(table.k_for(5e-2), table.k_for(1e-2));
+    /// ```
     pub fn calibrate(ladder: &[usize], trace: &[f64], tols: &[f64]) -> Self {
         assert!(!ladder.is_empty(), "empty artifact ladder");
         let mut ladder = ladder.to_vec();
@@ -94,6 +109,7 @@ impl TruncationTable {
         self.entries.insert(tol_key(tol), next);
     }
 
+    /// The ascending artifact iteration ladder.
     pub fn ladder(&self) -> &[usize] {
         &self.ladder
     }

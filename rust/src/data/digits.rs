@@ -7,7 +7,9 @@
 
 use crate::util::rng::Pcg64;
 
+/// Image edge length (images are IMG×IMG).
 pub const IMG: usize = 16;
+/// Number of digit classes.
 pub const NCLASS: usize = 10;
 
 /// segments: a b c d e f g  (standard seven-segment labeling)
@@ -34,7 +36,9 @@ const SEGMENTS: [[bool; 7]; 10] = [
 /// One labeled image.
 #[derive(Clone)]
 pub struct DigitSample {
-    pub pixels: Vec<f64>, // IMG*IMG in [0,1]
+    /// IMG·IMG pixel intensities in [0, 1], row-major.
+    pub pixels: Vec<f64>,
+    /// Class label 0..NCLASS.
     pub label: usize,
 }
 

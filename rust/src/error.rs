@@ -6,24 +6,49 @@
 
 use std::fmt;
 
+/// Everything that can go wrong across registration, solving, artifact
+/// loading, and serving.
 #[derive(Debug)]
 pub enum AltDiffError {
-    NotSpd { pivot: usize, value: f64 },
+    /// A Cholesky factorization (or CG curvature check) found the
+    /// Hessian not symmetric positive definite.
+    NotSpd {
+        /// Pivot (or iteration) at which definiteness failed.
+        pivot: usize,
+        /// The offending pivot/curvature value.
+        value: f64,
+    },
 
-    Singular { pivot: usize },
+    /// A pivoted LU hit an (effectively) zero pivot.
+    Singular {
+        /// Pivot index at which elimination broke down.
+        pivot: usize,
+    },
 
-    NoConvergence { iters: usize, residual: f64 },
+    /// An iterative solver exhausted its budget above tolerance.
+    NoConvergence {
+        /// Iterations actually run.
+        iters: usize,
+        /// Final (relative) residual.
+        residual: f64,
+    },
 
+    /// The problem is infeasible or unbounded.
     Infeasible(String),
 
+    /// Inputs have inconsistent dimensions.
     DimMismatch(String),
 
+    /// The artifact registry/manifest is missing or malformed.
     Registry(String),
 
+    /// The PJRT runtime failed (or is unavailable in this build).
     Runtime(String),
 
+    /// A coordinator-level failure (routing, channels, shutdown).
     Coordinator(String),
 
+    /// An underlying I/O error.
     Io(std::io::Error),
 }
 
@@ -77,6 +102,7 @@ impl From<std::io::Error> for AltDiffError {
     }
 }
 
+/// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, AltDiffError>;
 
 #[cfg(test)]

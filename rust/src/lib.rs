@@ -19,6 +19,9 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::type_complexity)]
 #![allow(clippy::manual_memcpy)]
+// Every public item carries rustdoc; CI denies regressions
+// (`cargo doc --no-deps` with RUSTDOCFLAGS="-D warnings").
+#![warn(missing_docs)]
 
 pub mod altdiff;
 pub mod baselines;

@@ -12,6 +12,7 @@ use crate::error::AltDiffError;
 /// Lower-triangular Cholesky factor L with A = L Lᵀ.
 #[derive(Clone, Debug)]
 pub struct Chol {
+    /// The factor L (lower triangle; upper entries are zero).
     pub l: Mat,
 }
 

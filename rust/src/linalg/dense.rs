@@ -9,8 +9,11 @@ use std::fmt;
 /// Dense row-major `rows x cols` matrix of f64.
 #[derive(Clone, PartialEq)]
 pub struct Mat {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row-major storage: entry (i, j) lives at `data[i * cols + j]`.
     pub data: Vec<f64>,
 }
 
@@ -50,10 +53,12 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
 }
 
 impl Mat {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Identity matrix.
     pub fn eye(n: usize) -> Self {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {
@@ -62,6 +67,7 @@ impl Mat {
         m
     }
 
+    /// Build from row slices (all the same length).
     pub fn from_rows(rows: &[&[f64]]) -> Self {
         let r = rows.len();
         let c = rows.first().map(|x| x.len()).unwrap_or(0);
@@ -73,6 +79,7 @@ impl Mat {
         Mat { rows: r, cols: c, data }
     }
 
+    /// Wrap a row-major buffer (length must be rows·cols).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Mat { rows, cols, data }
@@ -87,16 +94,19 @@ impl Mat {
         m
     }
 
+    /// Row i as a contiguous slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row i as a mutable contiguous slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Blocked out-of-place transpose.
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         // blocked transpose for cache friendliness
@@ -114,6 +124,7 @@ impl Mat {
         t
     }
 
+    /// In-place scalar multiply.
     pub fn scale(&mut self, s: f64) {
         for v in &mut self.data {
             *v *= s;
@@ -128,12 +139,14 @@ impl Mat {
         }
     }
 
+    /// self + other (allocating).
     pub fn add(&self, other: &Mat) -> Mat {
         let mut out = self.clone();
         out.axpy(1.0, other);
         out
     }
 
+    /// self − other (allocating).
     pub fn sub(&self, other: &Mat) -> Mat {
         let mut out = self.clone();
         out.axpy(-1.0, other);
@@ -249,10 +262,12 @@ pub fn relu(v: &[f64]) -> Vec<f64> {
     v.iter().map(|&x| x.max(0.0)).collect()
 }
 
+/// Elementwise a − b.
 pub fn sub_vec(a: &[f64], b: &[f64]) -> Vec<f64> {
     a.iter().zip(b).map(|(x, y)| x - y).collect()
 }
 
+/// Elementwise a + b.
 pub fn add_vec(a: &[f64], b: &[f64]) -> Vec<f64> {
     a.iter().zip(b).map(|(x, y)| x + y).collect()
 }

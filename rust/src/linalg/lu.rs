@@ -9,12 +9,17 @@ use crate::error::AltDiffError;
 /// P A = L U with row-pivot permutation `perm` (perm[i] = original row).
 #[derive(Clone, Debug)]
 pub struct Lu {
+    /// Packed factors: L below the unit diagonal, U on and above it.
     pub lu: Mat,
+    /// Row permutation (perm[i] = original row index).
     pub perm: Vec<usize>,
+    /// Permutation parity (±1; the determinant's sign factor).
     pub sign: f64,
 }
 
 impl Lu {
+    /// Factor with partial pivoting; fails on an (effectively) zero
+    /// pivot.
     pub fn factor(a: &Mat) -> Result<Lu, AltDiffError> {
         assert_eq!(a.rows, a.cols);
         let n = a.rows;
@@ -62,6 +67,7 @@ impl Lu {
         Ok(Lu { lu, perm, sign })
     }
 
+    /// Solve A x = b via the cached factors.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
         let n = self.lu.rows;
         debug_assert_eq!(b.len(), n);

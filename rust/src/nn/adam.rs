@@ -3,9 +3,13 @@
 
 /// Adam state for a flat list of parameter tensors.
 pub struct Adam {
+    /// Learning rate.
     pub lr: f64,
+    /// First-moment decay β₁.
     pub beta1: f64,
+    /// Second-moment decay β₂.
     pub beta2: f64,
+    /// Denominator fuzz ε.
     pub eps: f64,
     m: Vec<Vec<f64>>,
     v: Vec<Vec<f64>>,
@@ -13,6 +17,7 @@ pub struct Adam {
 }
 
 impl Adam {
+    /// Fresh state with the standard (0.9, 0.999, 1e-8) moments.
     pub fn new(lr: f64) -> Self {
         Adam {
             lr,

@@ -5,9 +5,13 @@ use crate::util::rng::Pcg64;
 
 /// Fully-connected layer y = W x + b with cached input for backward.
 pub struct Linear {
+    /// Weights (out, in).
     pub w: Mat,
+    /// Bias (out).
     pub b: Vec<f64>,
+    /// Accumulated weight gradient.
     pub gw: Mat,
+    /// Accumulated bias gradient.
     pub gb: Vec<f64>,
     last_x: Vec<f64>,
 }
@@ -27,6 +31,7 @@ impl Linear {
         }
     }
 
+    /// y = W x + b, caching x for backward.
     pub fn forward(&mut self, x: &[f64]) -> Vec<f64> {
         self.last_x = x.to_vec();
         let mut y = gemv(&self.w, x);
@@ -48,11 +53,13 @@ impl Linear {
         gemv_t(&self.w, gy)
     }
 
+    /// Reset accumulated gradients to zero.
     pub fn zero_grad(&mut self) {
         self.gw.data.iter_mut().for_each(|v| *v = 0.0);
         self.gb.iter_mut().for_each(|v| *v = 0.0);
     }
 
+    /// (param, grad) pairs in optimizer order.
     pub fn params_grads(&mut self) -> Vec<(&mut [f64], &[f64])> {
         vec![
             (self.w.data.as_mut_slice(), self.gw.data.as_slice()),
@@ -68,11 +75,13 @@ pub struct Relu {
 }
 
 impl Relu {
+    /// max(x, 0), caching the activation mask.
     pub fn forward(&mut self, x: &[f64]) -> Vec<f64> {
         self.mask = x.iter().map(|&v| v > 0.0).collect();
         x.iter().map(|&v| v.max(0.0)).collect()
     }
 
+    /// Gate the upstream gradient by the cached mask.
     pub fn backward(&self, gy: &[f64]) -> Vec<f64> {
         gy.iter()
             .zip(&self.mask)
@@ -83,6 +92,7 @@ impl Relu {
 
 /// MLP: Linear→ReLU stack with a final Linear.
 pub struct Mlp {
+    /// The linear layers, first to last.
     pub layers: Vec<Linear>,
     relus: Vec<Relu>,
 }
@@ -101,6 +111,7 @@ impl Mlp {
         Mlp { layers, relus }
     }
 
+    /// Forward through every Linear(+ReLU) stage.
     pub fn forward(&mut self, x: &[f64]) -> Vec<f64> {
         let mut h = x.to_vec();
         let nl = self.layers.len();
@@ -113,6 +124,7 @@ impl Mlp {
         h
     }
 
+    /// Reverse pass; accumulates layer grads, returns dL/dx.
     pub fn backward(&mut self, gy: &[f64]) -> Vec<f64> {
         let mut g = gy.to_vec();
         let nl = self.layers.len();
@@ -125,6 +137,7 @@ impl Mlp {
         g
     }
 
+    /// Reset every layer's accumulated gradients.
     pub fn zero_grad(&mut self) {
         for l in &mut self.layers {
             l.zero_grad();

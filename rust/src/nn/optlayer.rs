@@ -5,13 +5,20 @@
 //! Alt-Diff (the paper) or by IPM + implicit KKT differentiation (the
 //! OptNet baseline) — switchable so Table 6 can compare both inside the
 //! identical network.
+//!
+//! Layers come in two structural flavours sharing one interface: dense
+//! ([`OptLayer::new`], Table 2 structure) and sparse
+//! ([`OptLayer::new_sparse`], Table 4 structure — diagonal P, CSR
+//! constraints, e.g. a constrained-sparsemax output layer). Minibatch
+//! forwards route through the matching batched engine
+//! ([`BatchedAltDiff`] / [`BatchedSparseAltDiff`]): B samples per launch.
 
-use crate::altdiff::{DenseAltDiff, Options, Param};
+use crate::altdiff::{DenseAltDiff, Options, Param, SparseAltDiff};
 use crate::baselines;
-use crate::batch::BatchedAltDiff;
+use crate::batch::{BatchedAltDiff, BatchedSparseAltDiff};
 use crate::error::Result;
 use crate::linalg::{gemv_t, Mat};
-use crate::prob::Qp;
+use crate::prob::{Qp, SparseQp};
 
 /// Which differentiation engine backs the layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,13 +29,27 @@ pub enum OptBackend {
     OptNetKkt,
 }
 
+/// Structure-specific solver pair: the sequential engine plus the
+/// batched engine sharing its registration.
+enum LayerSolver {
+    Dense {
+        solver: DenseAltDiff,
+        /// minibatches; only built for the Alt-Diff backend — OptNet
+        /// has no batched path
+        batched: Option<BatchedAltDiff>,
+    },
+    Sparse {
+        solver: SparseAltDiff,
+        batched: BatchedSparseAltDiff,
+    },
+}
+
 /// Optimization layer with fixed structure (P, A, b, G, h); input is q.
 pub struct OptLayer {
-    solver: DenseAltDiff,
-    /// batched engine sharing the solver's factorization (minibatches;
-    /// only built for the Alt-Diff backend — OptNet has no batched path)
-    batched: Option<BatchedAltDiff>,
+    solver: LayerSolver,
+    /// Differentiation engine behind [`Self::forward`].
     pub backend: OptBackend,
+    /// Truncation tolerance (paper §4.3).
     pub tol: f64,
     /// cached ∂x/∂q from the last forward (n×n)
     last_jac: Option<Mat>,
@@ -42,6 +63,7 @@ pub struct OptLayer {
 }
 
 impl OptLayer {
+    /// Register a dense QP layer.
     pub fn new(qp: Qp, rho: f64, backend: OptBackend, tol: f64)
         -> Result<Self>
     {
@@ -49,8 +71,7 @@ impl OptLayer {
         let batched = (backend == OptBackend::AltDiff)
             .then(|| BatchedAltDiff::from_dense(&solver));
         Ok(OptLayer {
-            solver,
-            batched,
+            solver: LayerSolver::Dense { solver, batched },
             backend,
             tol,
             last_jac: None,
@@ -60,40 +81,60 @@ impl OptLayer {
         })
     }
 
+    /// Register a sparse QP layer (diagonal P, CSR constraints — the
+    /// Table 4 structure). Always Alt-Diff: the OptNet baseline has no
+    /// sparse KKT path.
+    pub fn new_sparse(qp: SparseQp, rho: f64, tol: f64) -> Result<Self> {
+        let solver = SparseAltDiff::new(qp, rho)?;
+        let batched = BatchedSparseAltDiff::from_sparse(&solver);
+        Ok(OptLayer {
+            solver: LayerSolver::Sparse { solver, batched },
+            backend: OptBackend::AltDiff,
+            tol,
+            last_jac: None,
+            last_jacs: Vec::new(),
+            last_iters: 0,
+            last_batch_iters: Vec::new(),
+        })
+    }
+
+    /// Number of layer variables n.
     pub fn n(&self) -> usize {
-        self.solver.qp.n()
+        match &self.solver {
+            LayerSolver::Dense { solver, .. } => solver.qp.n(),
+            LayerSolver::Sparse { solver, .. } => solver.qp.n(),
+        }
     }
 
     /// Forward: solve with the supplied q, cache ∂x/∂q for backward.
     pub fn forward(&mut self, q: &[f64]) -> Vec<f64> {
-        match self.backend {
-            OptBackend::AltDiff => {
-                let sol = self.solver.solve_with(
-                    Some(q),
-                    None,
-                    None,
-                    &Options {
-                        tol: self.tol,
-                        max_iter: 20_000,
-                        jacobian: Some(Param::Q),
-                        ..Default::default()
-                    },
-                );
-                self.last_iters = sol.iters;
-                self.last_jac = sol.jacobian;
-                sol.x
+        let opts = Options {
+            tol: self.tol,
+            max_iter: 20_000,
+            jacobian: Some(Param::Q),
+            ..Default::default()
+        };
+        let (x, jac, iters) = match (&self.solver, self.backend) {
+            (LayerSolver::Dense { solver, .. }, OptBackend::AltDiff) => {
+                let sol = solver.solve_with(Some(q), None, None, &opts);
+                (sol.x, sol.jacobian, sol.iters)
             }
-            OptBackend::OptNetKkt => {
-                let mut qp = self.solver.qp.clone();
+            (LayerSolver::Dense { solver, .. }, OptBackend::OptNetKkt) => {
+                let mut qp = solver.qp.clone();
                 qp.q = q.to_vec();
                 let (x, j, iters) =
                     baselines::optnet_layer(&qp, Param::Q, self.tol * 1e-3)
                         .expect("optnet layer");
-                self.last_iters = iters;
-                self.last_jac = Some(j);
-                x
+                (x, Some(j), iters)
             }
-        }
+            (LayerSolver::Sparse { solver, .. }, _) => {
+                let sol = solver.solve_with(Some(q), None, None, &opts);
+                (sol.x, sol.jacobian, sol.iters)
+            }
+        };
+        self.last_iters = iters;
+        self.last_jac = jac;
+        x
     }
 
     /// Backward: dL/dq = Jᵀ · dL/dx.
@@ -105,9 +146,10 @@ impl OptLayer {
         gemv_t(j, gx)
     }
 
-    /// Minibatch forward: solve B instances of the layer in one
-    /// [`BatchedAltDiff`] launch (Alt-Diff backend; the OptNet baseline
-    /// has no batched KKT path and falls back to a per-sample loop).
+    /// Minibatch forward: solve B instances of the layer in one batched
+    /// launch ([`BatchedAltDiff`] for dense layers,
+    /// [`BatchedSparseAltDiff`] for sparse ones; the OptNet baseline has
+    /// no batched KKT path and falls back to a per-sample loop).
     /// Caches one Jacobian per element for [`Self::backward_element`].
     pub fn forward_batch(&mut self, qs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         assert!(!qs.is_empty(), "empty minibatch");
@@ -128,19 +170,21 @@ impl OptLayer {
         }
         let qrefs: Vec<&[f64]> =
             qs.iter().map(|q| q.as_slice()).collect();
-        let batched =
-            self.batched.as_ref().expect("alt-diff backend has engine");
-        let sol = batched.solve_batch(
-            Some(&qrefs),
-            None,
-            None,
-            &Options {
-                tol: self.tol,
-                max_iter: 20_000,
-                jacobian: Some(Param::Q),
-                ..Default::default()
-            },
-        );
+        let opts = Options {
+            tol: self.tol,
+            max_iter: 20_000,
+            jacobian: Some(Param::Q),
+            ..Default::default()
+        };
+        let sol = match &self.solver {
+            LayerSolver::Dense { batched, .. } => batched
+                .as_ref()
+                .expect("alt-diff backend has engine")
+                .solve_batch(Some(&qrefs), None, None, &opts),
+            LayerSolver::Sparse { batched, .. } => {
+                batched.solve_batch(Some(&qrefs), None, None, &opts)
+            }
+        };
         self.last_batch_iters = sol.iters.clone();
         self.last_iters = sol.iters.iter().sum::<usize>() / sol.iters.len();
         self.last_jacs = sol.jacobians.expect("jacobian requested");
@@ -169,7 +213,7 @@ impl OptLayer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::prob::dense_qp;
+    use crate::prob::{dense_qp, sparsemax_qp};
 
     fn layer(backend: OptBackend) -> OptLayer {
         OptLayer::new(dense_qp(10, 5, 2, 31), 1.0, backend, 1e-8).unwrap()
@@ -273,6 +317,56 @@ mod tests {
                 "g[{c}]={} fd={fd}",
                 g[c]
             );
+        }
+    }
+
+    #[test]
+    fn sparse_layer_forward_is_simplex_projection() {
+        // constrained sparsemax as an output layer: x lands on the
+        // capped simplex for any input q
+        let mut l = OptLayer::new_sparse(sparsemax_qp(20, 4), 1.0, 1e-9)
+            .unwrap();
+        assert_eq!(l.n(), 20);
+        let q: Vec<f64> = (0..20).map(|i| 0.3 * (i as f64).sin()).collect();
+        let x = l.forward(&q);
+        let sum: f64 = x.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "simplex sum {sum}");
+        assert!(x.iter().all(|&v| v >= -1e-6));
+        let g = l.backward(&[1.0; 20]);
+        assert!(g.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn sparse_forward_batch_matches_sequential_forward() {
+        let mut seq =
+            OptLayer::new_sparse(sparsemax_qp(16, 5), 1.0, 1e-9).unwrap();
+        let mut bat =
+            OptLayer::new_sparse(sparsemax_qp(16, 5), 1.0, 1e-9).unwrap();
+        let qs: Vec<Vec<f64>> = (0..4)
+            .map(|s| {
+                (0..16)
+                    .map(|i| 0.2 * ((i + s) as f64).cos())
+                    .collect()
+            })
+            .collect();
+        let xs = bat.forward_batch(&qs);
+        assert_eq!(xs.len(), 4);
+        let gx: Vec<f64> = (0..16).map(|i| 0.1 * i as f64 - 0.8).collect();
+        for (e, q) in qs.iter().enumerate() {
+            let x = seq.forward(q);
+            for i in 0..16 {
+                assert!(
+                    (xs[e][i] - x[i]).abs() < 1e-6,
+                    "x[{e}][{i}]: batched {} sequential {}",
+                    xs[e][i],
+                    x[i]
+                );
+            }
+            let gb = bat.backward_element(e, &gx);
+            let gs = seq.backward(&gx);
+            for i in 0..16 {
+                assert!((gb[i] - gs[i]).abs() < 1e-6, "g[{e}][{i}]");
+            }
         }
     }
 }

@@ -10,21 +10,30 @@ use crate::sparse::Csr;
 /// Dense QP instance.
 #[derive(Clone, Debug)]
 pub struct Qp {
-    pub p: Mat,      // (n,n) SPD (or PSD + regularized)
-    pub q: Vec<f64>, // (n)
-    pub a: Mat,      // (p,n)
-    pub b: Vec<f64>, // (p)
-    pub g: Mat,      // (m,n)
-    pub h: Vec<f64>, // (m)
+    /// Quadratic term P, (n,n) SPD (or PSD + regularized).
+    pub p: Mat,
+    /// Linear term q, (n).
+    pub q: Vec<f64>,
+    /// Equality constraint matrix A, (p,n).
+    pub a: Mat,
+    /// Equality right-hand side b, (p).
+    pub b: Vec<f64>,
+    /// Inequality constraint matrix G, (m,n).
+    pub g: Mat,
+    /// Inequality right-hand side h, (m).
+    pub h: Vec<f64>,
 }
 
 impl Qp {
+    /// Number of variables n.
     pub fn n(&self) -> usize {
         self.q.len()
     }
+    /// Number of equality constraints p.
     pub fn p_eq(&self) -> usize {
         self.b.len()
     }
+    /// Number of inequality constraints m.
     pub fn m_ineq(&self) -> usize {
         self.h.len()
     }
@@ -68,19 +77,51 @@ impl Qp {
 /// Sparse QP instance (diagonal P — the regime of Table 4).
 #[derive(Clone, Debug)]
 pub struct SparseQp {
+    /// Diagonal of the quadratic term P, (n).
     pub pdiag: Vec<f64>,
+    /// Linear term q, (n).
     pub q: Vec<f64>,
+    /// Equality constraint matrix A, (p,n) CSR.
     pub a: Csr,
+    /// Equality right-hand side b, (p).
     pub b: Vec<f64>,
+    /// Inequality constraint matrix G, (m,n) CSR.
     pub g: Csr,
+    /// Inequality right-hand side h, (m).
     pub h: Vec<f64>,
 }
 
 impl SparseQp {
+    /// Number of variables n.
     pub fn n(&self) -> usize {
         self.q.len()
     }
 
+    /// Number of equality constraints p.
+    pub fn p_eq(&self) -> usize {
+        self.b.len()
+    }
+
+    /// Number of inequality constraints m.
+    pub fn m_ineq(&self) -> usize {
+        self.h.len()
+    }
+
+    /// (‖Ax−b‖, max(Gx−h)_+) — primal feasibility metrics, the sparse
+    /// sibling of [`Qp::feasibility`].
+    pub fn feasibility(&self, x: &[f64]) -> (f64, f64) {
+        let eq = norm2(&sub_vec(&self.a.spmv(x), &self.b));
+        let viol = self
+            .g
+            .spmv(x)
+            .iter()
+            .zip(&self.h)
+            .map(|(gx, h)| (gx - h).max(0.0))
+            .fold(0.0, f64::max);
+        (eq, viol)
+    }
+
+    /// Densify (diagnostics and small-n cross-checks).
     pub fn to_dense(&self) -> Qp {
         Qp {
             p: Mat::diag(&self.pdiag),
@@ -114,7 +155,9 @@ pub trait Objective: Send + Sync {
 
 /// Quadratic objective wrapper (makes the QP a special case).
 pub struct QuadObjective {
+    /// Quadratic term P.
     pub p: Mat,
+    /// Linear term q.
     pub q: Vec<f64>,
 }
 
@@ -136,6 +179,7 @@ impl Objective for QuadObjective {
 /// Negative-entropy objective  f(x) = -yᵀx + Σ x_i log x_i  (paper §F.1,
 /// constrained Softmax layer). Domain x > 0.
 pub struct EntropyObjective {
+    /// The layer input y (logits).
     pub y: Vec<f64>,
 }
 

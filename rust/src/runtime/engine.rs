@@ -36,6 +36,7 @@ pub struct LayerOutput {
 /// Compile-once, execute-many PJRT engine over one artifact directory.
 pub struct Engine {
     client: xla::PjRtClient,
+    /// Manifest of available compiled variants.
     pub manifest: Manifest,
     executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
     /// executions served (metrics)
@@ -57,6 +58,7 @@ impl Engine {
         })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

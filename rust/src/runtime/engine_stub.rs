@@ -26,6 +26,7 @@ pub struct LayerOutput {
 
 /// Disabled engine: exists only so the `Engine` name resolves.
 pub struct Engine {
+    /// Manifest of compiled variants (always empty here).
     pub manifest: Manifest,
     /// executions served (always 0 here)
     pub exec_count: u64,
@@ -45,18 +46,22 @@ impl Engine {
         disabled()
     }
 
+    /// Placeholder platform string.
     pub fn platform(&self) -> String {
         "pjrt-disabled".to_string()
     }
 
+    /// Always fails (see [`Engine::new`]).
     pub fn compile(&mut self, _name: &str) -> Result<()> {
         disabled()
     }
 
+    /// Always fails (see [`Engine::new`]).
     pub fn warmup(&mut self) -> Result<usize> {
         disabled()
     }
 
+    /// Always fails (see [`Engine::new`]).
     #[allow(clippy::too_many_arguments)]
     pub fn execute(
         &mut self,
@@ -71,6 +76,7 @@ impl Engine {
         disabled()
     }
 
+    /// Always fails (see [`Engine::new`]).
     #[allow(clippy::too_many_arguments)]
     pub fn execute_dense(
         &mut self,

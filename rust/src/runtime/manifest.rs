@@ -9,21 +9,32 @@ use std::path::{Path, PathBuf};
 /// One compiled variant of the QP layer family.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Variant {
+    /// Variant name (`qp_n{n}_m{m}_p{p}_k{k}_b{batch}`).
     pub name: String,
+    /// Variables n.
     pub n: usize,
+    /// Inequality constraints m.
     pub m: usize,
+    /// Equality constraints p.
     pub p: usize,
+    /// Unrolled iteration count k.
     pub k: usize,
+    /// Compiled batch size B.
     pub batch: usize,
+    /// ADMM penalty ρ baked into the artifact.
     pub rho: f64,
+    /// Input literal shapes, in argument order.
     pub in_shapes: Vec<Vec<usize>>,
+    /// Output literal shapes, in result order.
     pub out_shapes: Vec<Vec<usize>>,
+    /// HLO protobuf path (resolved relative to the manifest dir).
     pub hlo_path: PathBuf,
 }
 
 /// Parsed manifest + lookup indices.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Every variant, in manifest order.
     pub variants: Vec<Variant>,
     by_name: BTreeMap<String, usize>,
 }
@@ -98,6 +109,7 @@ impl Manifest {
         Ok(Manifest { variants, by_name })
     }
 
+    /// Look up a variant by name.
     pub fn get(&self, name: &str) -> Option<&Variant> {
         self.by_name.get(name).map(|&i| &self.variants[i])
     }

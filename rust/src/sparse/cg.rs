@@ -11,7 +11,9 @@ use crate::linalg::dense::{axpy, dot, norm2};
 
 /// An SPD linear operator y = Op(x).
 pub trait SpdOp {
+    /// y = Op(x).
     fn apply(&self, x: &[f64], y: &mut [f64]);
+    /// Operator dimension n.
     fn dim(&self) -> usize;
     /// Diagonal (for Jacobi preconditioning); None → identity.
     fn diag(&self) -> Option<Vec<f64>> {
@@ -21,15 +23,20 @@ pub trait SpdOp {
 
 /// H = diag(pdiag) + rho AᵀA + rho GᵀG, matrix-free.
 pub struct HessianOp<'a> {
+    /// diag(P).
     pub pdiag: &'a [f64],
+    /// Equality constraint matrix A (p, n).
     pub a: &'a Csr,
+    /// Inequality constraint matrix G (m, n).
     pub g: &'a Csr,
+    /// ADMM penalty ρ.
     pub rho: f64,
     /// scratch for A x / G x (len = max(a.rows, g.rows))
     scratch: std::cell::RefCell<Vec<f64>>,
 }
 
 impl<'a> HessianOp<'a> {
+    /// Assemble the operator over borrowed problem parts.
     pub fn new(pdiag: &'a [f64], a: &'a Csr, g: &'a Csr, rho: f64) -> Self {
         let cap = a.rows.max(g.rows);
         HessianOp { pdiag, a, g, rho, scratch: vec![0.0; cap].into() }
@@ -73,7 +80,9 @@ impl<'a> SpdOp for HessianOp<'a> {
 /// CG outcome.
 #[derive(Debug, Clone, Copy)]
 pub struct CgInfo {
+    /// Iterations run before the criterion fired.
     pub iters: usize,
+    /// Final relative residual.
     pub residual: f64,
 }
 

@@ -10,10 +10,15 @@ use crate::linalg::Mat;
 /// CSR sparse matrix (f64).
 #[derive(Clone, Debug)]
 pub struct Csr {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row pointers: row i's nonzeros live at `indptr[i]..indptr[i+1]`.
     pub indptr: Vec<usize>,
+    /// Column index of each nonzero.
     pub indices: Vec<usize>,
+    /// Value of each nonzero.
     pub values: Vec<f64>,
 }
 
@@ -87,6 +92,7 @@ impl Csr {
         m
     }
 
+    /// Number of stored nonzeros.
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
@@ -129,6 +135,90 @@ impl Csr {
             }
             for k in self.indptr[i]..self.indptr[i + 1] {
                 y[self.indices[k]] += s * self.values[k];
+            }
+        }
+    }
+
+    /// Y += alpha · A X over the given column ranges, where X is a
+    /// (cols, w) and Y a (rows, w) element-major block: column `e` of
+    /// each block belongs to batch element `e`, so one CSR traversal
+    /// serves the whole batch (the index decode is amortized across a
+    /// contiguous row of `w` element lanes — the multi-RHS SpMM win).
+    ///
+    /// `ranges` are disjoint ascending `[c0, c1)` column ranges (see
+    /// [`crate::batch::ActiveSet::col_ranges`]); columns outside them
+    /// are left untouched and consume no flops. Per column, the
+    /// accumulation order over a row's nonzeros matches [`Self::spmv`]
+    /// exactly (row-local sum, then one scaled add into Y).
+    pub fn spmm_acc(
+        &self,
+        y: &mut Mat,
+        alpha: f64,
+        x: &Mat,
+        ranges: &[(usize, usize)],
+    ) {
+        let w = x.cols;
+        debug_assert_eq!(x.rows, self.cols, "spmm x rows");
+        debug_assert_eq!(y.rows, self.rows, "spmm y rows");
+        debug_assert_eq!(y.cols, w, "spmm y cols");
+        let mut acc = vec![0.0; w];
+        for i in 0..self.rows {
+            let lo = self.indptr[i];
+            let hi = self.indptr[i + 1];
+            if lo == hi {
+                continue;
+            }
+            for &(c0, c1) in ranges {
+                acc[c0..c1].fill(0.0);
+            }
+            for k in lo..hi {
+                let v = self.values[k];
+                let xr = x.row(self.indices[k]);
+                for &(c0, c1) in ranges {
+                    for c in c0..c1 {
+                        acc[c] += v * xr[c];
+                    }
+                }
+            }
+            let yr = y.row_mut(i);
+            for &(c0, c1) in ranges {
+                for c in c0..c1 {
+                    yr[c] += alpha * acc[c];
+                }
+            }
+        }
+    }
+
+    /// Y += alpha · Aᵀ X over the given column ranges (multi-RHS
+    /// companion of [`Self::spmv_t_acc`]; X is (rows, w), Y is
+    /// (cols, w) element-major). Scatter order per output entry matches
+    /// the single-vector kernel (ascending source row, ascending
+    /// nonzero within the row).
+    pub fn spmm_t_acc(
+        &self,
+        y: &mut Mat,
+        alpha: f64,
+        x: &Mat,
+        ranges: &[(usize, usize)],
+    ) {
+        let w = x.cols;
+        debug_assert_eq!(x.rows, self.rows, "spmm_t x rows");
+        debug_assert_eq!(y.rows, self.cols, "spmm_t y rows");
+        debug_assert_eq!(y.cols, w, "spmm_t y cols");
+        for i in 0..self.rows {
+            let xr = &x.data[i * w..(i + 1) * w];
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                let av = alpha * self.values[k];
+                if av == 0.0 {
+                    continue;
+                }
+                let j = self.indices[k];
+                let yr = &mut y.data[j * w..(j + 1) * w];
+                for &(c0, c1) in ranges {
+                    for c in c0..c1 {
+                        yr[c] += av * xr[c];
+                    }
+                }
             }
         }
     }
@@ -245,6 +335,78 @@ mod tests {
         let s = random_sparse(8, 5, 0.5, 7);
         let tt = s.transpose().transpose();
         assert!(tt.to_dense().max_abs_diff(&s.to_dense()) < 1e-15);
+    }
+
+    #[test]
+    fn spmm_matches_columnwise_spmv() {
+        let s = random_sparse(11, 7, 0.3, 8);
+        let mut rng = Pcg64::new(9);
+        let w = 5;
+        let x = Mat::from_vec(7, w, rng.normal_vec(7 * w));
+        let mut y = Mat::zeros(11, w);
+        s.spmm_acc(&mut y, 1.5, &x, &[(0, w)]);
+        for c in 0..w {
+            let xc = x.col(c);
+            let yc = s.spmv(&xc);
+            for i in 0..11 {
+                assert!(
+                    (y[(i, c)] - 1.5 * yc[i]).abs() < 1e-12,
+                    "({i},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_t_matches_columnwise_spmv_t() {
+        let s = random_sparse(11, 7, 0.3, 10);
+        let mut rng = Pcg64::new(11);
+        let w = 4;
+        let x = Mat::from_vec(11, w, rng.normal_vec(11 * w));
+        let mut y = Mat::zeros(7, w);
+        s.spmm_t_acc(&mut y, -0.5, &x, &[(0, w)]);
+        for c in 0..w {
+            let xc = x.col(c);
+            let yc = s.spmv_t(&xc);
+            for i in 0..7 {
+                assert!(
+                    (y[(i, c)] + 0.5 * yc[i]).abs() < 1e-12,
+                    "({i},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_masked_columns_untouched() {
+        let s = random_sparse(6, 6, 0.5, 12);
+        let mut rng = Pcg64::new(13);
+        let x = Mat::from_vec(6, 4, rng.normal_vec(24));
+        // poison the masked columns to prove they are skipped
+        let mut y = Mat::zeros(6, 4);
+        let mut yt = Mat::zeros(6, 4);
+        for i in 0..6 {
+            y[(i, 1)] = 42.0;
+            yt[(i, 1)] = 42.0;
+        }
+        let ranges = [(0usize, 1usize), (2, 4)];
+        s.spmm_acc(&mut y, 1.0, &x, &ranges);
+        s.spmm_t_acc(&mut yt, 1.0, &x, &ranges);
+        let mut full = Mat::zeros(6, 4);
+        let mut fullt = Mat::zeros(6, 4);
+        s.spmm_acc(&mut full, 1.0, &x, &[(0, 4)]);
+        s.spmm_t_acc(&mut fullt, 1.0, &x, &[(0, 4)]);
+        for i in 0..6 {
+            for c in 0..4 {
+                let (want, want_t) = if c == 1 {
+                    (42.0, 42.0)
+                } else {
+                    (full[(i, c)], fullt[(i, c)])
+                };
+                assert_eq!(y[(i, c)], want, "spmm ({i},{c})");
+                assert_eq!(yt[(i, c)], want_t, "spmm_t ({i},{c})");
+            }
+        }
     }
 
     #[test]

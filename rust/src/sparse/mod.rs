@@ -1,6 +1,9 @@
-//! Sparse linear algebra substrate (CSR + matrix-free CG).
+//! Sparse linear algebra substrate: CSR storage, matrix-free CG, and the
+//! blocked (multi-RHS) variants the batched sparse engine runs on.
+pub mod block_cg;
 pub mod cg;
 pub mod csr;
 
+pub use block_cg::{block_cg, BlockCgInfo, BlockHessianOp, SpdBlockOp};
 pub use cg::{cg, CgInfo, HessianOp, SpdOp};
 pub use csr::Csr;

@@ -30,14 +30,22 @@ pub enum EnergyBackend {
     CvxpyLayerSim,
 }
 
+/// §5.2 experiment configuration.
 #[derive(Clone, Debug)]
 pub struct EnergyConfig {
+    /// Differentiation backend for the scheduling layer.
     pub backend: EnergyBackend,
+    /// Training epochs.
     pub epochs: usize,
+    /// Days of synthetic demand trace to train on.
     pub days: usize,
+    /// Ramp limit r of the scheduling QP.
     pub ramp: f64,
+    /// Adam learning rate.
     pub lr: f64,
+    /// MLP hidden width.
     pub hidden: usize,
+    /// Data/init RNG seed.
     pub seed: u64,
     /// samples per optimizer step; B > 1 runs the scheduling QPs of the
     /// whole minibatch as ONE `BatchedAltDiff` launch (Alt-Diff backend
@@ -60,8 +68,10 @@ impl Default for EnergyConfig {
     }
 }
 
+/// Per-backend training outcome (one Fig. 2 curve).
 #[derive(Clone, Debug)]
 pub struct EnergyReport {
+    /// Which backend/tolerance produced this curve.
     pub config_label: String,
     /// mean decision loss per epoch
     pub losses: Vec<f64>,
@@ -69,6 +79,7 @@ pub struct EnergyReport {
     pub epoch_times: Vec<f64>,
     /// mean solver iterations per layer call (Alt-Diff only)
     pub mean_iters: f64,
+    /// Total wallclock seconds for the run.
     pub total_time: f64,
 }
 

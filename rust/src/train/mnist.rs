@@ -15,21 +15,30 @@ use crate::prob::dense_qp;
 use crate::util::rng::Pcg64;
 use std::time::Instant;
 
+/// §5.3 experiment configuration.
 #[derive(Clone, Debug)]
 pub struct MnistConfig {
+    /// Differentiation backend inside the optimization layer.
     pub backend: OptBackend,
     /// Alt-Diff truncation tolerance
     pub tol: f64,
+    /// Training epochs.
     pub epochs: usize,
+    /// Training-set size.
     pub train_size: usize,
+    /// Test-set size.
     pub test_size: usize,
     /// optimization-layer dimension (paper: 200; scaled default 32)
     pub layer_dim: usize,
     /// equality / inequality constraint counts (paper: 50/50; scaled 8/8)
     pub layer_eq: usize,
+    /// inequality constraint count (see `layer_eq`)
     pub layer_ineq: usize,
+    /// Adam learning rate.
     pub lr: f64,
+    /// Digit-glyph pixel noise ∈ [0, 1].
     pub noise: f64,
+    /// Data/init RNG seed.
     pub seed: u64,
     /// samples pushed through the optimization layer per step: B > 1 runs
     /// ONE `BatchedAltDiff` launch per minibatch (and one optimizer step,
@@ -56,23 +65,33 @@ impl Default for MnistConfig {
     }
 }
 
+/// Per-backend training outcome (one Table 6 row).
 #[derive(Clone, Debug)]
 pub struct MnistReport {
+    /// Which backend produced this row.
     pub backend_label: String,
+    /// Mean training loss per epoch.
     pub train_losses: Vec<f64>,
+    /// Test accuracy per epoch.
     pub test_accs: Vec<f64>,
+    /// Wallclock seconds per epoch.
     pub epoch_times: Vec<f64>,
+    /// Mean solver iterations per optimization-layer call.
     pub mean_layer_iters: f64,
 }
 
 /// The classifier with an embedded optimization layer.
 pub struct OptNetClassifier {
+    /// Pixel → q feature extractor.
     pub features: Mlp,
+    /// The embedded QP layer.
     pub optlayer: OptLayer,
+    /// x* → logits head.
     pub head: Linear,
 }
 
 impl OptNetClassifier {
+    /// Build the network for a configuration.
     pub fn new(cfg: &MnistConfig, rng: &mut Pcg64) -> Self {
         let d = cfg.layer_dim;
         let qp = dense_qp(d, cfg.layer_ineq, cfg.layer_eq, cfg.seed + 7);
@@ -87,23 +106,27 @@ impl OptNetClassifier {
         }
     }
 
+    /// pixels → features → optimization layer → logits.
     pub fn forward(&mut self, pixels: &[f64]) -> Vec<f64> {
         let feat = self.features.forward(pixels);
         let x = self.optlayer.forward(&feat);
         self.head.forward(&x)
     }
 
+    /// Reverse pass through head, optimization layer, and features.
     pub fn backward(&mut self, glogits: &[f64]) {
         let gx = self.head.backward(glogits);
         let gq = self.optlayer.backward(&gx);
         self.features.backward(&gq);
     }
 
+    /// Reset accumulated gradients.
     pub fn zero_grad(&mut self) {
         self.features.zero_grad();
         self.head.zero_grad();
     }
 
+    /// One Adam update over every trainable tensor.
     pub fn step(&mut self, opt: &mut Adam) {
         let mut pg: Vec<(&mut [f64], &[f64])> = Vec::new();
         for l in &mut self.features.layers {

@@ -57,6 +57,7 @@ impl Args {
         ));
     }
 
+    /// Render a help string from the registered options.
     pub fn usage(&self, prog: &str) -> String {
         let mut s = format!("usage: {prog} [--key value]...\n");
         for (n, d, h) in &self.registered {
@@ -65,14 +66,17 @@ impl Args {
         s
     }
 
+    /// Whether `--key` was passed at all.
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// String value of `--key`, or `default`.
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// usize value of `--key`, or `default` (also on parse failure).
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.flags
             .get(key)
@@ -80,6 +84,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// f64 value of `--key`, or `default` (also on parse failure).
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.flags
             .get(key)
@@ -87,6 +92,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Boolean value of `--key` ("true"/"1"/"yes"), or `default`.
     pub fn get_bool(&self, key: &str, default: bool) -> bool {
         self.flags
             .get(key)
@@ -105,6 +111,7 @@ impl Args {
         }
     }
 
+    /// Free (non-`--key`) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

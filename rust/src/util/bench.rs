@@ -3,23 +3,37 @@
 //! Each `[[bench]]` target is a `harness = false` binary that uses
 //! [`Bencher`] for warmup + repeated timing and [`Table`] to print the
 //! paper-style rows, and writes machine-readable CSV next to the binary
-//! output (`target/bench_csv/<name>.csv`).
+//! output (`target/bench_csv/<name>.csv`). For longitudinal tracking,
+//! [`JsonReport`] additionally emits `target/bench_json/BENCH_<name>.json`
+//! with median/p10/p90 per measured configuration — stable keys a
+//! perf-trajectory script can diff across commits.
 
 use std::time::Instant;
 
 /// Timing statistics over repeated runs (seconds).
 #[derive(Clone, Copy, Debug)]
 pub struct Stats {
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Median (upper-middle sample for even counts).
     pub median: f64,
+    /// 10th percentile (nearest-rank over the sorted samples).
+    pub p10: f64,
+    /// 90th percentile (nearest-rank over the sorted samples).
+    pub p90: f64,
+    /// Fastest sample.
     pub min: f64,
+    /// Slowest sample.
     pub max: f64,
+    /// Number of measured repetitions.
     pub reps: usize,
 }
 
 /// Repeated-measurement micro/macro benchmark runner.
 pub struct Bencher {
+    /// Untimed warmup runs before measuring.
     pub warmup: usize,
+    /// Timed repetitions.
     pub reps: usize,
 }
 
@@ -30,6 +44,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Runner with explicit warmup/repetition counts.
     pub fn new(warmup: usize, reps: usize) -> Self {
         Bencher { warmup, reps }
     }
@@ -51,6 +66,8 @@ impl Bencher {
         Stats {
             mean,
             median: times[times.len() / 2],
+            p10: percentile(&times, 0.10),
+            p90: percentile(&times, 0.90),
             min: times[0],
             max: times[times.len() - 1],
             reps: self.reps,
@@ -65,14 +82,45 @@ impl Bencher {
     }
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample vector.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+impl Stats {
+    /// Build from raw timing samples (any order). One-sample inputs are
+    /// legal: every statistic degenerates to that sample — the case for
+    /// expensive cells measured via [`Bencher::run_once`].
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty(), "no samples");
+        let mut times = samples.to_vec();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            mean: times.iter().sum::<f64>() / times.len() as f64,
+            median: times[times.len() / 2],
+            p10: percentile(&times, 0.10),
+            p90: percentile(&times, 0.90),
+            min: times[0],
+            max: times[times.len() - 1],
+            reps: times.len(),
+        }
+    }
+}
+
 /// Fixed-width table printer mirroring the paper's layout.
 pub struct Table {
+    /// Table title (printed above the header).
     pub title: String,
+    /// Column headers.
     pub header: Vec<String>,
+    /// Row cells (each row matches the header arity).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -81,6 +129,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.header.len(), "row arity");
         self.rows.push(cells.to_vec());
@@ -122,6 +171,106 @@ impl Table {
             body.push('\n');
         }
         std::fs::write(&path, body)?;
+        Ok(path.display().to_string())
+    }
+}
+
+/// Machine-readable benchmark report: one JSON object per measured
+/// configuration, written to `target/bench_json/BENCH_<name>.json` so
+/// the perf trajectory can be tracked across commits (the printed
+/// [`Table`] stays the human-facing view).
+///
+/// Schema: `{"bench": <name>, "results": [{<config k/v as strings>,
+/// "median": s, "p10": s, "p90": s, "mean": s, "min": s, "max": s,
+/// "reps": n, <extra metric k/v as numbers>}, ...]}`.
+pub struct JsonReport {
+    name: String,
+    entries: Vec<String>,
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A finite f64 as a JSON number (non-finite → null, which JSON lacks a
+/// number for).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl JsonReport {
+    /// Start a report for bench `name` (used in the output filename).
+    pub fn new(name: &str) -> Self {
+        JsonReport { name: name.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one configuration: `config` are identifying key/values
+    /// (e.g. `[("n", "1000"), ("B", "32")]`), `stats` the timing, and
+    /// `extra` additional numeric metrics (e.g. speedup, max|Δx|).
+    pub fn entry(
+        &mut self,
+        config: &[(&str, &str)],
+        stats: &Stats,
+        extra: &[(&str, f64)],
+    ) {
+        let mut fields: Vec<String> = config
+            .iter()
+            .map(|(k, v)| {
+                format!("\"{}\": \"{}\"", json_escape(k), json_escape(v))
+            })
+            .collect();
+        for (k, v) in [
+            ("median", stats.median),
+            ("p10", stats.p10),
+            ("p90", stats.p90),
+            ("mean", stats.mean),
+            ("min", stats.min),
+            ("max", stats.max),
+        ] {
+            fields.push(format!("\"{k}\": {}", json_num(v)));
+        }
+        fields.push(format!("\"reps\": {}", stats.reps));
+        for (k, v) in extra {
+            fields.push(format!(
+                "\"{}\": {}",
+                json_escape(k),
+                json_num(*v)
+            ));
+        }
+        self.entries.push(format!("    {{{}}}", fields.join(", ")));
+    }
+
+    /// Render the report body.
+    pub fn render(&self) -> String {
+        format!(
+            "{{\n  \"bench\": \"{}\",\n  \"results\": [\n{}\n  ]\n}}\n",
+            json_escape(&self.name),
+            self.entries.join(",\n")
+        )
+    }
+
+    /// Write `target/bench_json/BENCH_<name>.json`; returns the path.
+    pub fn write(&self) -> std::io::Result<String> {
+        let dir = std::path::Path::new("target/bench_json");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.render())?;
         Ok(path.display().to_string())
     }
 }
@@ -176,6 +325,47 @@ mod tests {
         let mut t = Table::new("t", &["a", "b"]);
         t.row(&["1".into(), "2".into()]);
         assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn stats_from_samples_percentiles() {
+        let s = Stats::from_samples(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.p10, 1.0); // nearest rank over 5 samples
+        assert_eq!(s.p90, 5.0);
+        assert_eq!(s.reps, 5);
+        // one-sample degenerate case (run_once cells)
+        let one = Stats::from_samples(&[0.25]);
+        assert_eq!(one.median, 0.25);
+        assert_eq!(one.p10, 0.25);
+        assert_eq!(one.p90, 0.25);
+        assert_eq!(one.reps, 1);
+    }
+
+    #[test]
+    fn json_report_renders_valid_shape() {
+        let mut r = JsonReport::new("unit_test");
+        r.entry(
+            &[("n", "100"), ("B", "8")],
+            &Stats::from_samples(&[0.5]),
+            &[("speedup", 2.0), ("bad", f64::NAN)],
+        );
+        let body = r.render();
+        assert!(body.starts_with("{\n  \"bench\": \"unit_test\""));
+        assert!(body.contains("\"n\": \"100\""));
+        assert!(body.contains("\"median\": 0.5"));
+        assert!(body.contains("\"p90\": 0.5"));
+        assert!(body.contains("\"speedup\": 2"));
+        assert!(body.contains("\"bad\": null"));
+        assert!(body.contains("\"reps\": 1"));
+        // braces balance (cheap well-formedness check)
+        let open = body.matches('{').count();
+        let close = body.matches('}').count();
+        assert_eq!(open, close);
+        // escaping
+        assert_eq!(super::json_escape("a\"b\\c"), "a\\\"b\\\\c");
     }
 
     #[test]

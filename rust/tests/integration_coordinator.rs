@@ -2,7 +2,7 @@
 //! fallback, failure handling — on both backends.
 
 use altdiff::coordinator::{Config, Coordinator, Reply};
-use altdiff::prob::dense_qp;
+use altdiff::prob::{dense_qp, sparsemax_qp};
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
@@ -162,6 +162,94 @@ fn native_fallback_is_one_batched_launch_per_batch() {
         "burst of 8 compatible requests fragmented into {execs} launches"
     );
     assert!(c.metrics.native_batch_occupancy() >= 2.0);
+}
+
+#[test]
+fn sparse_layer_batches_run_on_the_sparse_engine() {
+    // a sparsemax layer served natively: every dispatched batch must be
+    // ONE BatchedSparseAltDiff launch, counted by native_sparse_execs
+    let sq = sparsemax_qp(40, 11);
+    let mut c = Coordinator::builder(Config {
+        workers: 1,
+        max_batch: 8,
+        batch_deadline: Duration::from_millis(200),
+        artifacts: None,
+        ..Default::default()
+    })
+    .register_sparse("smax40", sq.clone(), 1.0)
+    .unwrap()
+    .start();
+    let thetas: Vec<_> = (0..8)
+        .map(|i| {
+            let s = 1.0 + 0.05 * i as f64;
+            (
+                sq.q.iter().map(|&v| v * s).collect::<Vec<_>>(),
+                sq.b.clone(),
+                sq.h.clone(),
+            )
+        })
+        .collect();
+    let replies = c.run_all("smax40", thetas, 1e-3);
+    assert_eq!(replies.len(), 8);
+    for r in &replies {
+        match r {
+            Reply::Ok(ok) => {
+                assert_eq!(ok.backend, "native-sparse");
+                assert_eq!(ok.x.len(), 40);
+                // ∂x/∂b for the single equality row
+                assert_eq!(ok.jx.len(), 40);
+                assert!(ok.x.iter().all(|v| v.is_finite()));
+                // simplex structure survives the serving path
+                let sum: f64 = ok.x.iter().sum();
+                assert!((sum - 1.0).abs() < 0.2, "sum {sum}");
+            }
+            Reply::Err(f) => panic!("failure: {}", f.error),
+        }
+    }
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    let sparse_execs = c.metrics.native_sparse_execs.load(ord);
+    let execs = c.metrics.native_execs.load(ord);
+    assert!(sparse_execs >= 1, "no sparse batched launch recorded");
+    assert_eq!(
+        sparse_execs, execs,
+        "sparse layer must only run on the sparse engine"
+    );
+    assert_eq!(c.metrics.native_elems.load(ord), 8);
+    assert!(
+        execs <= 4,
+        "burst of 8 compatible requests fragmented into {execs} launches"
+    );
+}
+
+#[test]
+fn dense_and_sparse_layers_coexist() {
+    let qp = dense_qp(10, 5, 2, 9);
+    let sq = sparsemax_qp(12, 3);
+    let mut c = Coordinator::builder(Config {
+        workers: 2,
+        max_batch: 4,
+        batch_deadline: Duration::from_millis(1),
+        artifacts: None,
+        ..Default::default()
+    })
+    .register("dense10", qp.clone(), 1.0)
+    .unwrap()
+    .register_sparse("smax12", sq.clone(), 1.0)
+    .unwrap()
+    .start();
+    c.submit("dense10", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-3);
+    c.submit("smax12", sq.q.clone(), sq.b.clone(), sq.h.clone(), 1e-3);
+    let mut backends = std::collections::BTreeSet::new();
+    for _ in 0..2 {
+        match c.recv_timeout(Duration::from_secs(30)).expect("reply") {
+            Reply::Ok(r) => {
+                backends.insert(r.backend);
+            }
+            Reply::Err(f) => panic!("failure: {}", f.error),
+        }
+    }
+    assert!(backends.contains("native"));
+    assert!(backends.contains("native-sparse"));
 }
 
 #[test]

@@ -1,0 +1,289 @@
+//! Property tests for the batched sparse engine: `BatchedSparseAltDiff`
+//! must reproduce `SparseAltDiff` run element-by-element — solutions,
+//! duals, slacks, and Jacobians to 1e-8 — across ragged batch sizes,
+//! every Jacobian parameter, both x-update engines (batched
+//! Sherman–Morrison and blocked CG), fixed-iteration (server)
+//! semantics, and mixed per-element convergence speeds (the truncation
+//! mask).
+
+use altdiff::altdiff::{Options, Param, SparseAltDiff};
+use altdiff::batch::BatchedSparseAltDiff;
+use altdiff::prob::{sparse_qp, sparsemax_qp, SparseQp};
+use altdiff::sparse::Csr;
+use altdiff::util::Pcg64;
+
+/// Per-element q perturbations (q is unconstrained, so any perturbation
+/// keeps the problem feasible).
+fn random_qs(base: &[f64], bsz: usize, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+    (0..bsz)
+        .map(|_| {
+            base.iter().map(|&v| v * (1.0 + 0.2 * rng.normal())).collect()
+        })
+        .collect()
+}
+
+fn refs(v: &[Vec<f64>]) -> Vec<&[f64]> {
+    v.iter().map(|x| x.as_slice()).collect()
+}
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// ∀ sparse problems (both engine picks), ragged batch sizes, and
+/// Jacobian parameters: converged batched results match per-element
+/// sequential results to 1e-8.
+#[test]
+fn prop_batched_sparse_matches_sequential_elementwise() {
+    let mut rng = Pcg64::new(901);
+    let params = [Param::Q, Param::B, Param::H];
+    for case in 0..6u64 {
+        // alternate engine picks: even cases sparsemax (SM), odd random
+        // sparse (CG)
+        let sq = if case % 2 == 0 {
+            sparsemax_qp(10 + 2 * case as usize, 9000 + case)
+        } else {
+            sparse_qp(
+                8 + 2 * case as usize,
+                4 + case as usize,
+                1 + (case as usize % 3),
+                0.3,
+                9100 + case,
+            )
+        };
+        let seq = SparseAltDiff::new(sq.clone(), 1.0).unwrap();
+        let batched = BatchedSparseAltDiff::from_sparse(&seq);
+        assert_eq!(
+            batched.uses_sherman_morrison(),
+            case % 2 == 0,
+            "engine pick case {case}"
+        );
+        let bsz = 1 + rng.below(9); // ragged: 1..=9
+        let param = params[case as usize % 3];
+        let opts = Options {
+            tol: 1e-11,
+            max_iter: 60_000,
+            jacobian: Some(param),
+            ..Default::default()
+        };
+        let qs = random_qs(&sq.q, bsz, &mut rng);
+        let qr = refs(&qs);
+        let sb = batched.solve_batch(Some(&qr), None, None, &opts);
+        assert_eq!(sb.len(), bsz);
+        for e in 0..bsz {
+            let sd = seq.solve_with(Some(&qs[e]), None, None, &opts);
+            let ctx = format!(
+                "case {case} elem {e}/{bsz} n={} param {param:?}",
+                sq.n()
+            );
+            assert!(
+                max_abs_diff(&sb.xs[e], &sd.x) < 1e-8,
+                "{ctx}: x diff {}",
+                max_abs_diff(&sb.xs[e], &sd.x)
+            );
+            assert!(max_abs_diff(&sb.lams[e], &sd.lam) < 1e-8, "{ctx}: λ");
+            assert!(max_abs_diff(&sb.nus[e], &sd.nu) < 1e-8, "{ctx}: ν");
+            assert!(max_abs_diff(&sb.ss[e], &sd.s) < 1e-8, "{ctx}: s");
+            let jb = &sb.jacobians.as_ref().unwrap()[e];
+            let jd = sd.jacobian.as_ref().unwrap();
+            assert!(
+                jb.max_abs_diff(jd) < 1e-8,
+                "{ctx}: jacobian diff {}",
+                jb.max_abs_diff(jd)
+            );
+        }
+    }
+}
+
+/// Server semantics (tol = 0, fixed k): every element runs exactly k
+/// iterations and matches the sequential engine's fixed-k run to 1e-8,
+/// on both engines.
+#[test]
+fn prop_batched_sparse_fixed_k_matches_sequential() {
+    let mut rng = Pcg64::new(902);
+    for &k in &[5usize, 25] {
+        for (sq, label) in [
+            (sparsemax_qp(18, 920 + k as u64), "sm"),
+            (sparse_qp(14, 6, 3, 0.3, 930 + k as u64), "cg"),
+        ] {
+            let seq = SparseAltDiff::new(sq.clone(), 1.0).unwrap();
+            let batched = BatchedSparseAltDiff::from_sparse(&seq);
+            let bsz = 6;
+            let qs = random_qs(&sq.q, bsz, &mut rng);
+            let qr = refs(&qs);
+            let opts = Options {
+                tol: 0.0,
+                max_iter: k,
+                jacobian: Some(Param::B),
+                ..Default::default()
+            };
+            let sb = batched.solve_batch(Some(&qr), None, None, &opts);
+            assert!(
+                sb.iters.iter().all(|&it| it == k),
+                "{label}: {:?}",
+                sb.iters
+            );
+            for e in 0..bsz {
+                let sd = seq.solve_with(Some(&qs[e]), None, None, &opts);
+                assert_eq!(sd.iters, k);
+                assert!(
+                    max_abs_diff(&sb.xs[e], &sd.x) < 1e-8,
+                    "{label} k={k} elem {e}"
+                );
+                let jb = &sb.jacobians.as_ref().unwrap()[e];
+                assert!(
+                    jb.max_abs_diff(sd.jacobian.as_ref().unwrap()) < 1e-8,
+                    "{label} k={k} elem {e}: jacobian"
+                );
+            }
+        }
+    }
+}
+
+/// Mixed convergence speeds: elements on very different objective
+/// scales cross the relative-step threshold at different iterations;
+/// the active mask must freeze fast elements without perturbing slow
+/// ones, on both engines.
+#[test]
+fn prop_batched_sparse_mixed_convergence_speeds() {
+    for (sq, label) in [
+        (sparsemax_qp(20, 940), "sm"),
+        (sparse_qp(16, 7, 2, 0.3, 941), "cg"),
+    ] {
+        let seq = SparseAltDiff::new(sq.clone(), 1.0).unwrap();
+        let batched = BatchedSparseAltDiff::from_sparse(&seq);
+        let scales = [1e-2, 1.0, 50.0, 0.1, 10.0];
+        let qs: Vec<Vec<f64>> = scales
+            .iter()
+            .map(|&s| sq.q.iter().map(|&v| v * s).collect())
+            .collect();
+        let qr = refs(&qs);
+        let opts = Options {
+            tol: 1e-6,
+            max_iter: 60_000,
+            jacobian: Some(Param::Q),
+            ..Default::default()
+        };
+        let sb = batched.solve_batch(Some(&qr), None, None, &opts);
+        // the mask actually fired at different times
+        let min_it = *sb.iters.iter().min().unwrap();
+        let max_it = *sb.iters.iter().max().unwrap();
+        assert!(
+            min_it < max_it,
+            "{label}: expected heterogeneous convergence, got {:?}",
+            sb.iters
+        );
+        for (e, q) in qs.iter().enumerate() {
+            let sd = seq.solve_with(Some(q), None, None, &opts);
+            // identical stopping rule; ±2 iteration slack for blocked-
+            // kernel vs unrolled-dot rounding at the threshold
+            assert!(
+                (sb.iters[e] as i64 - sd.iters as i64).abs() <= 2,
+                "{label} elem {e}: batched {} vs sequential {} iters",
+                sb.iters[e],
+                sd.iters
+            );
+            for i in 0..sq.n() {
+                let tol_here = 1e-4 * (1.0 + sd.x[i].abs());
+                assert!(
+                    (sb.xs[e][i] - sd.x[i]).abs() < tol_here,
+                    "{label} elem {e} x[{i}]: {} vs {}",
+                    sb.xs[e][i],
+                    sd.x[i]
+                );
+            }
+            assert!(sb.step_rel[e] < 1e-6);
+        }
+    }
+}
+
+/// Mixed engine picks on the same underlying problem: the sparsemax
+/// structure run through the batched Sherman–Morrison path must agree
+/// with a mathematically equivalent formulation (G rows rescaled by 2,
+/// which defeats the ±1 box detection) run through the blocked-CG path
+/// — same minimizer, same ∂x/∂b.
+#[test]
+fn prop_engine_picks_agree_on_equivalent_problems() {
+    let sm_qp = sparsemax_qp(24, 950);
+    // rescale every G row and its h entry by 2: {2gᵀx ≤ 2h} ≡ {gᵀx ≤ h}
+    let n = sm_qp.n();
+    let mut triplets = Vec::new();
+    for i in 0..sm_qp.g.rows {
+        for k in sm_qp.g.indptr[i]..sm_qp.g.indptr[i + 1] {
+            triplets.push((i, sm_qp.g.indices[k], 2.0 * sm_qp.g.values[k]));
+        }
+    }
+    let cg_qp = SparseQp {
+        pdiag: sm_qp.pdiag.clone(),
+        q: sm_qp.q.clone(),
+        a: sm_qp.a.clone(),
+        b: sm_qp.b.clone(),
+        g: Csr::from_triplets(sm_qp.g.rows, n, &triplets),
+        h: sm_qp.h.iter().map(|&v| 2.0 * v).collect(),
+    };
+    let sm = BatchedSparseAltDiff::new(sm_qp, 1.0).unwrap();
+    let cg = BatchedSparseAltDiff::new(cg_qp, 1.0).unwrap();
+    assert!(sm.uses_sherman_morrison());
+    assert!(!cg.uses_sherman_morrison());
+    let opts = Options {
+        tol: 1e-11,
+        max_iter: 80_000,
+        jacobian: Some(Param::B),
+        ..Default::default()
+    };
+    let qs: Vec<Vec<f64>> = (0..3)
+        .map(|s| {
+            sm.qp
+                .q
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| v + 0.1 * ((i + s) as f64).sin())
+                .collect()
+        })
+        .collect();
+    let qr = refs(&qs);
+    let a = sm.solve_batch(Some(&qr), None, None, &opts);
+    let b = cg.solve_batch(Some(&qr), None, None, &opts);
+    for e in 0..3 {
+        assert!(
+            max_abs_diff(&a.xs[e], &b.xs[e]) < 1e-6,
+            "elem {e}: x diff {}",
+            max_abs_diff(&a.xs[e], &b.xs[e])
+        );
+        let ja = &a.jacobians.as_ref().unwrap()[e];
+        let jb = &b.jacobians.as_ref().unwrap()[e];
+        assert!(
+            ja.max_abs_diff(jb) < 1e-5,
+            "elem {e}: jacobian diff {}",
+            ja.max_abs_diff(jb)
+        );
+    }
+}
+
+/// Broadcast semantics: omitted θ falls back to the registered
+/// parameters, matching an explicit broadcast element-for-element.
+#[test]
+fn prop_broadcast_equals_explicit_replication() {
+    let sq = sparse_qp(12, 5, 2, 0.35, 960);
+    let batched = BatchedSparseAltDiff::new(sq.clone(), 1.0).unwrap();
+    let opts = Options {
+        tol: 1e-10,
+        max_iter: 40_000,
+        jacobian: Some(Param::H),
+        ..Default::default()
+    };
+    let qs: Vec<Vec<f64>> = vec![sq.q.clone(); 4];
+    let qr = refs(&qs);
+    // qs explicit, b/h broadcast vs everything explicit
+    let bs: Vec<Vec<f64>> = vec![sq.b.clone(); 4];
+    let hs: Vec<Vec<f64>> = vec![sq.h.clone(); 4];
+    let br = refs(&bs);
+    let hr = refs(&hs);
+    let partial = batched.solve_batch(Some(&qr), None, None, &opts);
+    let full =
+        batched.solve_batch(Some(&qr), Some(&br), Some(&hr), &opts);
+    for e in 0..4 {
+        assert_eq!(partial.xs[e], full.xs[e], "elem {e}");
+        assert_eq!(partial.iters[e], full.iters[e]);
+    }
+}
