@@ -4,7 +4,7 @@
 //!
 //! Run: cargo run --release --example quickstart
 
-use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::baselines;
 use altdiff::linalg::cosine;
 use altdiff::prob::dense_qp;
@@ -21,7 +21,7 @@ fn main() -> altdiff::Result<()> {
     // 2) solve + differentiate w.r.t. b in one alternating loop
     let sol = layer.solve(&Options {
         tol: 1e-6,
-        jacobian: Some(Param::B),
+        backward: BackwardMode::Forward(Param::B),
         ..Default::default()
     });
     println!(
@@ -48,7 +48,7 @@ fn main() -> altdiff::Result<()> {
     for tol in [1e-1, 1e-2, 1e-3, 1e-4] {
         let s = layer.solve(&Options {
             tol,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         });
         let c = cosine(&s.jacobian.unwrap().data, &jkkt.data);

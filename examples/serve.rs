@@ -93,6 +93,7 @@ fn main() {
             Some(Reply::Err(f)) => {
                 eprintln!("request {} failed: {}", f.id, f.error)
             }
+            Some(Reply::Grad(_)) => {}
             None => break,
         }
     }

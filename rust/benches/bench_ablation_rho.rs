@@ -5,7 +5,7 @@
 //! fidelity — the practical answer to "does serving need per-layer ρ
 //! tuning?" (moderate ρ ∈ [0.5, 2] is flat; extreme ρ slows convergence).
 
-use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::baselines;
 use altdiff::linalg::cosine;
 use altdiff::prob::dense_qp;
@@ -29,7 +29,7 @@ fn main() {
         let sol = solver.solve(&Options {
             tol: 1e-4,
             max_iter: 50_000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             rho,
             trace: false,
         });

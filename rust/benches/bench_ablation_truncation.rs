@@ -5,7 +5,7 @@
 //! The claim under test: the ratio is bounded (same order), so loosening
 //! the tolerance degrades the gradient *linearly*, not catastrophically.
 
-use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::linalg::{norm2, sub_vec};
 use altdiff::prob::dense_qp;
 use altdiff::util::{Args, Table};
@@ -20,7 +20,7 @@ fn main() {
     let exact = solver.solve(&Options {
         tol: 1e-12,
         max_iter: 100_000,
-        jacobian: Some(Param::B),
+        backward: BackwardMode::Forward(Param::B),
         ..Default::default()
     });
     let jstar = exact.jacobian.as_ref().unwrap();
@@ -34,7 +34,7 @@ fn main() {
         let sol = solver.solve(&Options {
             tol,
             max_iter: 100_000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         });
         let xerr = norm2(&sub_vec(&sol.x, &exact.x));

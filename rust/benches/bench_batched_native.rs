@@ -9,10 +9,14 @@
 //! fixed-k forward+Jacobian (∂x/∂b) runs, the serving configuration.
 //! Every cell also cross-checks max |x_batched − x_sequential|.
 //!
-//! Run: cargo bench --bench bench_batched_native [-- --quick]
+//! Run: cargo bench --bench bench_batched_native [-- --quick|--smoke]
 //!      [--sizes 50,200] [--batches 1,8,32] [--k 10]
+//!
+//! `--smoke` runs a tiny CI-sized grid (seconds) and skips the
+//! repo-root baseline write; full runs refresh `BENCH_batched_native.json`
+//! at the repository root (the committed perf trajectory).
 
-use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::batch::BatchedAltDiff;
 use altdiff::prob::dense_qp;
 use altdiff::util::{Args, JsonReport, Pcg64, Stats, Table};
@@ -20,11 +24,22 @@ use std::time::Instant;
 
 fn main() {
     let args = Args::parse();
+    let smoke = args.has("smoke");
     let quick = args.has("quick");
-    let default_sizes: &[usize] =
-        if quick { &[50, 200] } else { &[50, 200, 500] };
-    let default_batches: &[usize] =
-        if quick { &[1, 8, 32] } else { &[1, 8, 32, 128] };
+    let default_sizes: &[usize] = if smoke {
+        &[24]
+    } else if quick {
+        &[50, 200]
+    } else {
+        &[50, 200, 500]
+    };
+    let default_batches: &[usize] = if smoke {
+        &[1, 4]
+    } else if quick {
+        &[1, 8, 32]
+    } else {
+        &[1, 8, 32, 128]
+    };
     let sizes = args.get_usize_list("sizes", default_sizes);
     let batches = args.get_usize_list("batches", default_batches);
     let k = args.get_usize("k", 10);
@@ -56,7 +71,7 @@ fn main() {
         let opts = Options {
             tol: 0.0, // serving semantics: exactly k iterations
             max_iter: k,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         };
         for &bsz in &batches {
@@ -148,6 +163,12 @@ fn main() {
     match json.write() {
         Ok(path) => println!("machine-readable results: {path}"),
         Err(e) => eprintln!("json write failed: {e}"),
+    }
+    if !smoke {
+        match json.write_repo_root() {
+            Ok(path) => println!("perf baseline: {path}"),
+            Err(e) => eprintln!("baseline write failed: {e}"),
+        }
     }
     if let Some(s) = b32_n200_speedup {
         println!(

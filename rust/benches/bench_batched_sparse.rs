@@ -13,11 +13,15 @@
 //! table is also written to `target/bench_json/BENCH_batched_sparse.json`
 //! (median/p10/p90 per cell) for perf-trajectory tracking.
 //!
-//! Run: cargo bench --bench bench_batched_sparse [-- --quick]
+//! Run: cargo bench --bench bench_batched_sparse [-- --quick|--smoke]
 //!      [--sizes 1000,10000] [--batches 1,8,32] [--k 10]
 //!      [--max-elems 4000000]
+//!
+//! `--smoke` runs a tiny CI-sized grid (seconds) and skips the
+//! repo-root baseline write; full runs refresh `BENCH_batched_sparse.json`
+//! at the repository root (the committed perf trajectory).
 
-use altdiff::altdiff::{Options, Param, SparseAltDiff};
+use altdiff::altdiff::{BackwardMode, Options, Param, SparseAltDiff};
 use altdiff::batch::BatchedSparseAltDiff;
 use altdiff::prob::{sparse_qp, sparsemax_qp};
 use altdiff::util::{Args, JsonReport, Pcg64, Stats, Table};
@@ -84,16 +88,29 @@ fn bench_cell(
 
 fn main() {
     let args = Args::parse();
+    let smoke = args.has("smoke");
     let quick = args.has("quick");
-    let default_sizes: &[usize] = if quick {
+    let default_sizes: &[usize] = if smoke {
+        &[200]
+    } else if quick {
         &[1_000, 10_000]
     } else {
         &[1_000, 10_000, 100_000]
     };
-    let default_batches: &[usize] =
-        if quick { &[1, 8, 32] } else { &[1, 8, 32, 128] };
-    let default_cg_sizes: &[usize] =
-        if quick { &[1_000] } else { &[1_000, 4_000] };
+    let default_batches: &[usize] = if smoke {
+        &[1, 4]
+    } else if quick {
+        &[1, 8, 32]
+    } else {
+        &[1, 8, 32, 128]
+    };
+    let default_cg_sizes: &[usize] = if smoke {
+        &[100]
+    } else if quick {
+        &[1_000]
+    } else {
+        &[1_000, 4_000]
+    };
     let sizes = args.get_usize_list("sizes", default_sizes);
     let batches = args.get_usize_list("batches", default_batches);
     let cg_sizes = args.get_usize_list("cg-sizes", default_cg_sizes);
@@ -126,7 +143,7 @@ fn main() {
     let opts = Options {
         tol: 0.0, // serving semantics: exactly k iterations
         max_iter: k,
-        jacobian: Some(Param::B),
+        backward: BackwardMode::Forward(Param::B),
         ..Default::default()
     };
 
@@ -228,6 +245,12 @@ fn main() {
     match json.write() {
         Ok(path) => println!("\nmachine-readable results: {path}"),
         Err(e) => eprintln!("json write failed: {e}"),
+    }
+    if !smoke {
+        match json.write_repo_root() {
+            Ok(path) => println!("perf baseline: {path}"),
+            Err(e) => eprintln!("baseline write failed: {e}"),
+        }
     }
     for (n, s) in &acceptance {
         println!(

@@ -5,7 +5,7 @@
 //! asymptote. Panel (b): cosine similarity between the Alt-Diff Jacobian
 //! at iteration k and the KKT Jacobian.
 
-use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::baselines;
 use altdiff::linalg::cosine;
 use altdiff::prob::dense_qp;
@@ -36,7 +36,7 @@ fn main() {
         let sol = solver.solve(&Options {
             tol: 0.0,
             max_iter: k,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             trace: true,
             ..Default::default()
         });
@@ -57,7 +57,7 @@ fn main() {
     let sol = solver.solve(&Options {
         tol: 1e-12,
         max_iter: 100_000,
-        jacobian: Some(Param::B),
+        backward: BackwardMode::Forward(Param::B),
         ..Default::default()
     });
     let final_cos = cosine(&sol.jacobian.unwrap().data, &jkkt.data);

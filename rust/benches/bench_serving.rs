@@ -65,6 +65,7 @@ fn run_trace(
                 got += 1;
             }
             Some(Reply::Err(_)) => got += 1,
+            Some(Reply::Grad(_)) => got += 1,
             None => break,
         }
     }

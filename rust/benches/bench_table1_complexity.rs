@@ -6,7 +6,7 @@
 //! exponents should straddle ~2 for the Alt-Diff backward and ~3 for the
 //! baselines' backward.
 
-use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::baselines;
 use altdiff::prob::dense_qp;
 use altdiff::util::bench::loglog_slope;
@@ -47,7 +47,7 @@ fn main() {
         let _ = solver.solve(&Options {
             tol: 0.0,
             max_iter: fixed_k,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         });
         let bwd_alt = t0.elapsed().as_secs_f64();

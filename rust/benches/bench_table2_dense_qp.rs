@@ -7,7 +7,7 @@
 //! both, and the gap widens with problem size; gradients agree to
 //! cosine ≈ 0.999.
 
-use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::baselines::{self, conic};
 use altdiff::linalg::cosine;
 use altdiff::prob::dense_qp;
@@ -43,7 +43,7 @@ fn main() {
         let t0 = Instant::now();
         let sol = solver.solve(&Options {
             tol,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         });
         let t_iter = t0.elapsed().as_secs_f64();

@@ -6,7 +6,7 @@
 //! OptNet pays dense (n+2n+1)³; the unrolling baseline shows the §2
 //! memory/projection costs.
 
-use altdiff::altdiff::{Options, Param, SparseAltDiff};
+use altdiff::altdiff::{BackwardMode, Options, Param, SparseAltDiff};
 use altdiff::baselines::{self, unrolled};
 use altdiff::linalg::cosine;
 use altdiff::prob::sparsemax_qp;
@@ -40,7 +40,7 @@ fn main() {
         let solver = SparseAltDiff::new(sq.clone(), 1.0).unwrap();
         let sol = solver.solve(&Options {
             tol,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         });
         let t_alt = t0.elapsed().as_secs_f64();

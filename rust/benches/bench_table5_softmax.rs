@@ -9,7 +9,7 @@
 //! prices the *pipeline* (embedded sizes, full-dimension backward), which
 //! is what the paper's timing rows measure.
 
-use altdiff::altdiff::{NewtonAltDiff, Options, Param};
+use altdiff::altdiff::{BackwardMode, NewtonAltDiff, Options, Param};
 use altdiff::baselines::conic;
 use altdiff::linalg::{cosine, Mat};
 use altdiff::prob::{softmax_layer, EntropyObjective, Qp};
@@ -60,7 +60,7 @@ fn main() {
         let t0 = Instant::now();
         let sol = layer.solve(&Options {
             tol,
-            jacobian: Some(Param::Q),
+            backward: BackwardMode::Forward(Param::Q),
             max_iter: 10_000,
             ..Default::default()
         });

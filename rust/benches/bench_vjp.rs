@@ -1,0 +1,299 @@
+//! Reverse-mode (adjoint) vs forward-mode backward — the tentpole claim
+//! of the adjoint subsystem: training only consumes vᵀ∂x*/∂θ, and the
+//! transposed recursion computes it in O(k·n²) per element instead of
+//! the full-Jacobian O(k·n²·d), so at d = n (the ∂x/∂q training case)
+//! the backward stops paying the factor-of-d cost entirely — and the
+//! O(B·n·d) Jacobian state (the batched-serving memory cliff) never
+//! exists.
+//!
+//! Grids (per-element gradients agree between both modes; every cell
+//! cross-checks max |Δgrad|):
+//! - dense batched: n ∈ {100, 200} × B ∈ {8, 32}, d = n
+//! - sparse Sherman–Morrison (sparsemax): n ∈ {500, 1000}, B = 4
+//! - sparse blocked-CG: n = 300, B = 8
+//!
+//! Run: cargo bench --bench bench_vjp [-- --smoke] [--sizes 100,200]
+//!      [--batches 8,32] [--tol 1e-8]
+
+use altdiff::altdiff::{BackwardMode, Options, Param};
+use altdiff::batch::{BatchedAltDiff, BatchedSparseAltDiff};
+use altdiff::prob::{dense_qp, sparse_qp, sparsemax_qp};
+use altdiff::util::{fmt_secs, Args, JsonReport, Pcg64, Stats, Table};
+use std::time::Instant;
+
+/// Per-element q perturbations + incoming gradients for one cell.
+fn make_inputs(
+    q0: &[f64],
+    n: usize,
+    bsz: usize,
+    seed: u64,
+) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let mut rng = Pcg64::new(seed);
+    let qs: Vec<Vec<f64>> = (0..bsz)
+        .map(|_| {
+            q0.iter().map(|&v| v * (1.0 + 0.1 * rng.normal())).collect()
+        })
+        .collect();
+    let vs: Vec<Vec<f64>> =
+        (0..bsz).map(|_| rng.normal_vec(n)).collect();
+    (qs, vs)
+}
+
+struct Cell {
+    t_fwd: f64,
+    t_adj: f64,
+    max_dg: f64,
+}
+
+/// Time forward-mode (full ∂x/∂q + per-element gemv_t) against adjoint
+/// on one engine; generic over the two batched engines via closures.
+fn run_cell<FF, FA>(reps: usize, fwd: FF, adj: FA) -> Cell
+where
+    FF: Fn() -> Vec<Vec<f64>>,
+    FA: Fn() -> Vec<Vec<f64>>,
+{
+    // warmup + correctness cross-check
+    let gf = fwd();
+    let ga = adj();
+    let mut max_dg = 0.0f64;
+    for (a, b) in gf.iter().zip(&ga) {
+        for (x, y) in a.iter().zip(b) {
+            max_dg = max_dg.max((x - y).abs());
+        }
+    }
+    let mut tf = Vec::with_capacity(reps);
+    let mut ta = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(fwd());
+        tf.push(t0.elapsed().as_secs_f64());
+        let t0 = Instant::now();
+        std::hint::black_box(adj());
+        ta.push(t0.elapsed().as_secs_f64());
+    }
+    Cell {
+        t_fwd: Stats::from_samples(&tf).median,
+        t_adj: Stats::from_samples(&ta).median,
+        max_dg,
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let smoke = args.has("smoke");
+    let default_sizes: &[usize] = if smoke { &[24] } else { &[100, 200] };
+    let default_batches: &[usize] = if smoke { &[2] } else { &[8, 32] };
+    let sizes = args.get_usize_list("sizes", default_sizes);
+    let batches = args.get_usize_list("batches", default_batches);
+    let tol = args.get_f64("tol", 1e-8);
+    let reps = if smoke { 1 } else { 3 };
+    let opts_fwd = Options {
+        tol,
+        max_iter: 20_000,
+        backward: BackwardMode::Forward(Param::Q),
+        ..Default::default()
+    };
+    let opts_adj = Options {
+        tol,
+        max_iter: 20_000,
+        backward: BackwardMode::Adjoint,
+        ..Default::default()
+    };
+
+    let mut t = Table::new(
+        &format!(
+            "Adjoint vs full-Jacobian backward, d = n (∂x/∂q, tol={tol:.0e})"
+        ),
+        &[
+            "engine",
+            "n",
+            "B",
+            "fwd-mode",
+            "adjoint",
+            "speedup",
+            "max|Δgrad|",
+        ],
+    );
+    let mut json = JsonReport::new("vjp");
+    let mut headline = None;
+
+    // ---- dense batched grid
+    for &n in &sizes {
+        let (m, p) = (n / 2, n / 5);
+        let engine =
+            BatchedAltDiff::new(dense_qp(n, m, p, 42 + n as u64), 1.0)
+                .unwrap();
+        for &bsz in &batches {
+            let (qs, vs) =
+                make_inputs(&engine.qp.q, n, bsz, 7 + bsz as u64);
+            let qr: Vec<&[f64]> = qs.iter().map(|v| v.as_slice()).collect();
+            let vr: Vec<&[f64]> = vs.iter().map(|v| v.as_slice()).collect();
+            let cell = run_cell(
+                reps,
+                || {
+                    let sol = engine
+                        .solve_batch(Some(&qr), None, None, &opts_fwd);
+                    (0..bsz).map(|e| sol.vjp(e, &vs[e])).collect()
+                },
+                || {
+                    engine
+                        .solve_batch_vjp(
+                            Some(&qr), None, None, &vr, &opts_adj,
+                        )
+                        .vjp
+                        .grads_q
+                },
+            );
+            let speedup = cell.t_fwd / cell.t_adj.max(1e-12);
+            if n == 200 && bsz == 32 {
+                headline = Some(speedup);
+            }
+            t.row(&[
+                "dense".into(),
+                n.to_string(),
+                bsz.to_string(),
+                fmt_secs(cell.t_fwd),
+                fmt_secs(cell.t_adj),
+                format!("{speedup:.1}x"),
+                format!("{:.1e}", cell.max_dg),
+            ]);
+            json.entry(
+                &[
+                    ("engine", "dense"),
+                    ("n", &n.to_string()),
+                    ("B", &bsz.to_string()),
+                ],
+                &Stats::from_samples(&[cell.t_adj]),
+                &[
+                    ("fwd_median", cell.t_fwd),
+                    ("speedup", speedup),
+                    ("max_dgrad", cell.max_dg),
+                ],
+            );
+        }
+    }
+
+    // ---- sparse grids: Sherman–Morrison (sparsemax) and blocked CG
+    let sm_sizes: Vec<usize> =
+        if smoke { vec![40] } else { vec![500, 1000] };
+    let sm_b = if smoke { 2 } else { 4 };
+    for &n in &sm_sizes {
+        let engine =
+            BatchedSparseAltDiff::new(sparsemax_qp(n, 3), 1.0).unwrap();
+        assert!(engine.uses_sherman_morrison());
+        let (qs, vs) = make_inputs(&engine.qp.q, n, sm_b, 11);
+        let qr: Vec<&[f64]> = qs.iter().map(|v| v.as_slice()).collect();
+        let vr: Vec<&[f64]> = vs.iter().map(|v| v.as_slice()).collect();
+        let cell = run_cell(
+            reps,
+            || {
+                let sol =
+                    engine.solve_batch(Some(&qr), None, None, &opts_fwd);
+                (0..sm_b).map(|e| sol.vjp(e, &vs[e])).collect()
+            },
+            || {
+                engine
+                    .solve_batch_vjp(Some(&qr), None, None, &vr, &opts_adj)
+                    .vjp
+                    .grads_q
+            },
+        );
+        let speedup = cell.t_fwd / cell.t_adj.max(1e-12);
+        t.row(&[
+            "sparse-sm".into(),
+            n.to_string(),
+            sm_b.to_string(),
+            fmt_secs(cell.t_fwd),
+            fmt_secs(cell.t_adj),
+            format!("{speedup:.1}x"),
+            format!("{:.1e}", cell.max_dg),
+        ]);
+        json.entry(
+            &[
+                ("engine", "sparse-sm"),
+                ("n", &n.to_string()),
+                ("B", &sm_b.to_string()),
+            ],
+            &Stats::from_samples(&[cell.t_adj]),
+            &[
+                ("fwd_median", cell.t_fwd),
+                ("speedup", speedup),
+                ("max_dgrad", cell.max_dg),
+            ],
+        );
+    }
+    {
+        let (n, m, p, cg_b) =
+            if smoke { (30, 12, 6, 2) } else { (300, 120, 60, 8) };
+        let engine = BatchedSparseAltDiff::new(
+            sparse_qp(n, m, p, 0.05, 5),
+            1.0,
+        )
+        .unwrap();
+        assert!(!engine.uses_sherman_morrison());
+        let (qs, vs) = make_inputs(&engine.qp.q, n, cg_b, 13);
+        let qr: Vec<&[f64]> = qs.iter().map(|v| v.as_slice()).collect();
+        let vr: Vec<&[f64]> = vs.iter().map(|v| v.as_slice()).collect();
+        let cell = run_cell(
+            reps,
+            || {
+                let sol =
+                    engine.solve_batch(Some(&qr), None, None, &opts_fwd);
+                (0..cg_b).map(|e| sol.vjp(e, &vs[e])).collect()
+            },
+            || {
+                engine
+                    .solve_batch_vjp(Some(&qr), None, None, &vr, &opts_adj)
+                    .vjp
+                    .grads_q
+            },
+        );
+        let speedup = cell.t_fwd / cell.t_adj.max(1e-12);
+        t.row(&[
+            "sparse-cg".into(),
+            n.to_string(),
+            cg_b.to_string(),
+            fmt_secs(cell.t_fwd),
+            fmt_secs(cell.t_adj),
+            format!("{speedup:.1}x"),
+            format!("{:.1e}", cell.max_dg),
+        ]);
+        json.entry(
+            &[
+                ("engine", "sparse-cg"),
+                ("n", &n.to_string()),
+                ("B", &cg_b.to_string()),
+            ],
+            &Stats::from_samples(&[cell.t_adj]),
+            &[
+                ("fwd_median", cell.t_fwd),
+                ("speedup", speedup),
+                ("max_dgrad", cell.max_dg),
+            ],
+        );
+    }
+
+    t.print();
+    t.write_csv("vjp").unwrap();
+    match json.write() {
+        Ok(path) => println!("machine-readable results: {path}"),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
+    if !smoke {
+        match json.write_repo_root() {
+            Ok(path) => println!("perf baseline: {path}"),
+            Err(e) => eprintln!("baseline write failed: {e}"),
+        }
+    }
+    if let Some(s) = headline {
+        println!(
+            "\nheadline cell (dense n=200, B=32, d=n): {s:.1}x adjoint \
+             over full-Jacobian backward (target ≥ 5x)"
+        );
+    }
+    println!(
+        "claims: the adjoint backward is d-free — one H⁻¹ apply per \
+         iteration per element instead of d Jacobian columns — and \
+         max|Δgrad| confirms both modes agree at the solve tolerance."
+    );
+}

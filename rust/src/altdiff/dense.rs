@@ -6,10 +6,12 @@
 //! same factor — the paper's "inheritance of the Hessian" (Appendix B.1)
 //! and its O(kn²) backward complexity claim (Table 1).
 
-use super::{Options, Param, Solution, TraceEntry};
+use super::{
+    BackwardMode, Options, Param, Solution, TraceEntry, Vjp, VjpSolution,
+};
 use crate::error::Result;
 use crate::linalg::{
-    self, gemm, gemm_acc, gemv_acc, gemv_t_acc, norm2, Chol, Mat,
+    self, gemm_acc, gemv_acc, gemv_t_acc, norm2, Chol, Mat,
 };
 use crate::prob::Qp;
 
@@ -89,17 +91,22 @@ impl DenseAltDiff {
         let mut lam = vec![0.0; p];
         let mut nu = vec![0.0; m];
 
-        // Jacobian state (eq. 7), present only when requested.
-        let d = opts.jacobian.map(|pm| pm.dim(n, m, p));
+        // Jacobian state (eq. 7), present only in forward mode.
+        let param = opts.backward.forward_param();
+        let d = param.map(|pm| pm.dim(n, m, p));
         let mut jx = d.map(|d| Mat::zeros(n, d));
         let mut js = d.map(|d| Mat::zeros(m, d));
         let mut jl = d.map(|d| Mat::zeros(p, d));
         let mut jn = d.map(|d| Mat::zeros(m, d));
+        // backward work buffers, allocated once per solve (not per iter)
+        let mut work = d.map(|d| JacWork::new(n, m, p, d));
 
         let mut trace = Vec::new();
         let mut rhs = vec![0.0; n];
         let mut xprev = vec![0.0; n];
         let mut gx = vec![0.0; m];
+        let mut ax = vec![0.0; p];
+        let mut hms = vec![0.0; m];
         let mut iters = 0;
         let mut step_rel = f64::INFINITY;
 
@@ -114,8 +121,9 @@ impl DenseAltDiff {
             gemv_t_acc(&mut rhs, -1.0, &self.qp.a, &lam);
             gemv_t_acc(&mut rhs, -1.0, &self.qp.g, &nu);
             gemv_t_acc(&mut rhs, rho, &self.qp.a, b);
-            let hms: Vec<f64> =
-                h.iter().zip(&s).map(|(hi, si)| hi - si).collect();
+            for i in 0..m {
+                hms[i] = h[i] - s[i];
+            }
             gemv_t_acc(&mut rhs, rho, &self.qp.g, &hms);
             x.copy_from_slice(&rhs);
             self.chol.solve_in_place(&mut x);
@@ -126,7 +134,7 @@ impl DenseAltDiff {
             for i in 0..m {
                 s[i] = (-nu[i] / rho - (gx[i] - h[i])).max(0.0);
             }
-            let mut ax = vec![0.0; p];
+            ax.iter_mut().for_each(|v| *v = 0.0);
             gemv_acc(&mut ax, 1.0, &self.qp.a, &x);
             for i in 0..p {
                 lam[i] += rho * (ax[i] - b[i]);
@@ -136,11 +144,23 @@ impl DenseAltDiff {
             }
 
             // ---- backward (7a)-(7d)
-            if let (Some(jx), Some(js), Some(jl), Some(jn)) =
-                (jx.as_mut(), js.as_mut(), jl.as_mut(), jn.as_mut())
-            {
-                let param = opts.jacobian.unwrap();
-                self.jacobian_step(param, &s, jx, js, jl, jn, rho);
+            if let (Some(jx), Some(js), Some(jl), Some(jn), Some(w)) = (
+                jx.as_mut(),
+                js.as_mut(),
+                jl.as_mut(),
+                jn.as_mut(),
+                work.as_mut(),
+            ) {
+                self.jacobian_step(
+                    param.unwrap(),
+                    &s,
+                    jx,
+                    js,
+                    jl,
+                    jn,
+                    w,
+                    rho,
+                );
             }
 
             // ---- truncation check (Algorithm 1 condition)
@@ -171,7 +191,9 @@ impl DenseAltDiff {
         self.solve_with(None, None, None, opts)
     }
 
-    /// One backward update (7a)-(7d). `s1` is the freshly updated slack.
+    /// One backward update (7a)-(7d). `s1` is the freshly updated slack;
+    /// `w` is the per-solve workspace (no per-iteration heap traffic).
+    #[allow(clippy::too_many_arguments)]
     fn jacobian_step(
         &self,
         param: Param,
@@ -180,17 +202,18 @@ impl DenseAltDiff {
         js: &mut Mat,
         jl: &mut Mat,
         jn: &mut Mat,
+        w: &mut JacWork,
         rho: f64,
     ) {
         let n = self.qp.n();
-        let _m = self.qp.m_ineq();
-        let _p = self.qp.p_eq();
         let d = jx.cols;
 
         // ∇_{x,θ}L = Aᵀ Jλ + Gᵀ Jν + ρGᵀ Js + const(θ)
-        let mut lxt = gemm(&self.at, jl);
-        gemm_acc(&mut lxt, 1.0, &self.gt, jn);
-        gemm_acc(&mut lxt, rho, &self.gt, js);
+        let lxt = &mut w.lxt;
+        lxt.data.fill(0.0);
+        gemm_acc(lxt, 1.0, &self.at, jl);
+        gemm_acc(lxt, 1.0, &self.gt, jn);
+        gemm_acc(lxt, rho, &self.gt, js);
         match param {
             Param::Q => {
                 // + I (from ∂q)
@@ -209,12 +232,14 @@ impl DenseAltDiff {
         }
         // (7a): Jx = -H⁻¹ lxt — one blocked gemm against the cached
         // explicit inverse (Appendix B.1: H⁻¹ is constant for QP layers).
-        let mut new_jx = Mat::zeros(n, d);
-        gemm_acc(&mut new_jx, -1.0, &self.hinv_cache, &lxt);
-        *jx = new_jx;
+        w.newjx.data.fill(0.0);
+        gemm_acc(&mut w.newjx, -1.0, &self.hinv_cache, &w.lxt);
+        std::mem::swap(jx, &mut w.newjx);
 
         // (7b): Js = sgn(s⁺) ⊙ (-(1/ρ))(Jν + ρ(G Jx - ∂h/∂θ))
-        let mut gjx = gemm(&self.qp.g, jx);
+        let gjx = &mut w.gjx;
+        gjx.data.fill(0.0);
+        gemm_acc(gjx, 1.0, &self.qp.g, jx);
         if param == Param::H {
             for i in 0..gjx.rows.min(d) {
                 gjx[(i, i)] -= 1.0;
@@ -230,8 +255,9 @@ impl DenseAltDiff {
         }
 
         // (7c): Jλ += ρ(A Jx - ∂b/∂θ)
-        let ajx = gemm(&self.qp.a, jx);
-        jl.axpy(rho, &ajx);
+        w.ajx.data.fill(0.0);
+        gemm_acc(&mut w.ajx, 1.0, &self.qp.a, jx);
+        jl.axpy(rho, &w.ajx);
         if param == Param::B {
             for i in 0..jl.rows.min(d) {
                 jl[(i, i)] -= rho;
@@ -239,8 +265,173 @@ impl DenseAltDiff {
         }
 
         // (7d): Jν += ρ(G Jx + Js - ∂h/∂θ)  [gjx already holds GJx - ∂h]
-        jn.axpy(rho, &gjx);
+        jn.axpy(rho, &w.gjx);
         jn.axpy(rho, js);
+    }
+
+    /// Reverse-mode backward against an already-solved forward pass:
+    /// given the final slack `s*` (whose sign pattern gates (7b)) and the
+    /// incoming gradient `v = dL/dx*`, iterate the transposed recursion
+    ///
+    ///   z  = −H⁻¹(−Gᵀ(σ ⊙ wₛ) + ρAᵀw_λ + ρGᵀ((1−σ) ⊙ w_ν))
+    ///   wₛ ← ρGz + ρGt,   w_λ ← w_λ + Az + At,
+    ///   w_ν ← (1−σ) ⊙ w_ν + Gz − (σ ⊙ wₛ)/ρ + Gt,   t = −H⁻¹v
+    ///
+    /// to its fixed point, then project out vᵀ∂x*/∂θ for every θ at once.
+    /// Cost per iteration: one Cholesky solve + four gemvs — independent
+    /// of the parameter dimension d. Truncation mirrors Algorithm 1 on
+    /// the adjoint iterate z (`opts.tol`; `tol = 0` runs exactly
+    /// `opts.max_iter` iterations, the serving contract).
+    pub fn vjp(&self, slack: &[f64], v: &[f64], opts: &Options) -> Vjp {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        let rho = self.rho;
+        assert_eq!(slack.len(), m, "slack dimension");
+        assert_eq!(v.len(), n, "v dimension");
+        let gate: Vec<f64> =
+            slack.iter().map(|&s| if s > 0.0 { 1.0 } else { 0.0 }).collect();
+
+        // t = −H⁻¹ v, and the parameter-independent seeds
+        // (vs, vl, vn) = (ρGt, At, Gt).
+        let mut t = v.to_vec();
+        self.chol.solve_in_place(&mut t);
+        t.iter_mut().for_each(|ti| *ti = -*ti);
+        let mut vn = vec![0.0; m];
+        gemv_acc(&mut vn, 1.0, &self.qp.g, &t);
+        let mut vl = vec![0.0; p];
+        gemv_acc(&mut vl, 1.0, &self.qp.a, &t);
+
+        // W₁ = V (first application of the series Σ (Mᵀ)ʲ V)
+        let mut ws: Vec<f64> = vn.iter().map(|&g| rho * g).collect();
+        let mut wl = vl.clone();
+        let mut wn = vn.clone();
+
+        let mut z = vec![0.0; n];
+        let mut zprev = vec![0.0; n];
+        let mut rhs = vec![0.0; n];
+        let mut dws = vec![0.0; m];
+        let mut ewn = vec![0.0; m];
+        let mut gz = vec![0.0; m];
+        let mut az = vec![0.0; p];
+        let mut iters = 1;
+        let mut step_rel = f64::INFINITY;
+
+        let zstep = |rhs: &mut Vec<f64>,
+                     z: &mut Vec<f64>,
+                     dws: &mut Vec<f64>,
+                     ewn: &mut Vec<f64>,
+                     ws: &[f64],
+                     wl: &[f64],
+                     wn: &[f64]| {
+            for i in 0..m {
+                dws[i] = gate[i] * ws[i];
+                ewn[i] = (1.0 - gate[i]) * wn[i];
+            }
+            rhs.iter_mut().for_each(|r| *r = 0.0);
+            gemv_t_acc(rhs, 1.0, &self.qp.g, dws);
+            gemv_t_acc(rhs, -rho, &self.qp.a, wl);
+            gemv_t_acc(rhs, -rho, &self.qp.g, ewn);
+            z.copy_from_slice(rhs);
+            self.chol.solve_in_place(z);
+        };
+
+        for k in 1..opts.max_iter {
+            zprev.copy_from_slice(&z);
+            zstep(
+                &mut rhs, &mut z, &mut dws, &mut ewn, &ws, &wl, &wn,
+            );
+            // W ← MᵀW + V
+            gz.iter_mut().for_each(|g| *g = 0.0);
+            gemv_acc(&mut gz, 1.0, &self.qp.g, &z);
+            az.iter_mut().for_each(|a| *a = 0.0);
+            gemv_acc(&mut az, 1.0, &self.qp.a, &z);
+            for i in 0..m {
+                // order matters: wn reads the OLD ws
+                wn[i] = (1.0 - gate[i]) * wn[i] + gz[i]
+                    - gate[i] * ws[i] / rho
+                    + vn[i];
+                ws[i] = rho * gz[i] + rho * vn[i];
+            }
+            for i in 0..p {
+                wl[i] += az[i] + vl[i];
+            }
+            iters = k + 1;
+            let dz: f64 = z
+                .iter()
+                .zip(&zprev)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            step_rel = dz / norm2(&zprev).max(1.0);
+            if step_rel < opts.tol {
+                break;
+            }
+        }
+        // final z at the converged adjoint state
+        zstep(&mut rhs, &mut z, &mut dws, &mut ewn, &ws, &wl, &wn);
+
+        // project: grad_q = z+t; grad_b = −ρA(z+t) − ρw_λ;
+        // grad_h = −ρG(z+t) + σ⊙wₛ − ρ(1−σ)⊙w_ν.
+        let zt: Vec<f64> =
+            z.iter().zip(&t).map(|(zi, ti)| zi + ti).collect();
+        let mut grad_b: Vec<f64> = wl.iter().map(|&w| -rho * w).collect();
+        gemv_acc(&mut grad_b, -rho, &self.qp.a, &zt);
+        let mut grad_h: Vec<f64> = (0..m)
+            .map(|i| gate[i] * ws[i] - rho * (1.0 - gate[i]) * wn[i])
+            .collect();
+        gemv_acc(&mut grad_h, -rho, &self.qp.g, &zt);
+        Vjp { grad_q: zt, grad_b, grad_h, iters, step_rel }
+    }
+
+    /// Forward solve + reverse-mode backward in one call: solves the QP
+    /// (no Jacobian state), then runs the adjoint iteration for
+    /// `v = dL/dx*`. This is the training entry point — O(d)-free.
+    ///
+    /// ```
+    /// use altdiff::altdiff::{DenseAltDiff, Options};
+    /// use altdiff::prob::dense_qp;
+    ///
+    /// let layer = DenseAltDiff::new(dense_qp(8, 4, 2, 3), 1.0).unwrap();
+    /// let v = vec![1.0; 8]; // dL/dx*
+    /// let out = layer.solve_vjp(None, None, None, &v, &Options::with_tol(1e-9));
+    /// assert_eq!(out.vjp.grad_q.len(), 8); // vᵀ∂x*/∂q
+    /// assert_eq!(out.vjp.grad_b.len(), 2); // vᵀ∂x*/∂b — same backward
+    /// assert!(out.solution.jacobian.is_none()); // never materialized
+    /// ```
+    pub fn solve_vjp(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        v: &[f64],
+        opts: &Options,
+    ) -> VjpSolution {
+        let fopts =
+            Options { backward: BackwardMode::None, ..opts.clone() };
+        let solution = self.solve_with(q, b, h, &fopts);
+        let vjp = self.vjp(&solution.s, v, opts);
+        VjpSolution { solution, vjp }
+    }
+}
+
+/// Forward-mode backward work buffers, allocated once per solve and
+/// reused across iterations (hoisted out of the hot loop).
+struct JacWork {
+    lxt: Mat,
+    newjx: Mat,
+    gjx: Mat,
+    ajx: Mat,
+}
+
+impl JacWork {
+    fn new(n: usize, m: usize, p: usize, d: usize) -> Self {
+        JacWork {
+            lxt: Mat::zeros(n, d),
+            newjx: Mat::zeros(n, d),
+            gjx: Mat::zeros(m, d),
+            ajx: Mat::zeros(p, d),
+        }
     }
 }
 
@@ -259,7 +450,7 @@ mod tests {
         let sol = s.solve(&Options {
             tol: 1e-9,
             max_iter: 20_000,
-            jacobian: None,
+            backward: BackwardMode::None,
             ..Default::default()
         });
         let r = s.qp.kkt_residual(&sol.x, &sol.lam, &sol.nu);
@@ -274,13 +465,13 @@ mod tests {
         let opts = Options {
             tol: 1e-10,
             max_iter: 30_000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         };
         let sol = s.solve(&opts);
         let j = sol.jacobian.as_ref().unwrap();
         let eps = 1e-5;
-        let fopts = Options { jacobian: None, ..opts.clone() };
+        let fopts = Options { backward: BackwardMode::None, ..opts.clone() };
         for c in 0..3 {
             let mut bp = s.qp.b.clone();
             bp[c] += eps;
@@ -305,13 +496,13 @@ mod tests {
         let opts = Options {
             tol: 1e-10,
             max_iter: 30_000,
-            jacobian: Some(Param::Q),
+            backward: BackwardMode::Forward(Param::Q),
             ..Default::default()
         };
         let sol = s.solve(&opts);
         let j = sol.jacobian.as_ref().unwrap();
         let eps = 1e-5;
-        let fopts = Options { jacobian: None, ..opts.clone() };
+        let fopts = Options { backward: BackwardMode::None, ..opts.clone() };
         for c in [0usize, 4, 9] {
             let mut qp_ = s.qp.q.clone();
             qp_[c] += eps;
@@ -336,13 +527,13 @@ mod tests {
         let opts = Options {
             tol: 1e-10,
             max_iter: 30_000,
-            jacobian: Some(Param::H),
+            backward: BackwardMode::Forward(Param::H),
             ..Default::default()
         };
         let sol = s.solve(&opts);
         let j = sol.jacobian.as_ref().unwrap();
         let eps = 1e-5;
-        let fopts = Options { jacobian: None, ..opts.clone() };
+        let fopts = Options { backward: BackwardMode::None, ..opts.clone() };
         for c in 0..5 {
             let mut hp = s.qp.h.clone();
             hp[c] += eps;

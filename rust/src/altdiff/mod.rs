@@ -23,6 +23,38 @@ pub use sparse::SparseAltDiff;
 
 use crate::linalg::Mat;
 
+/// How gradients are propagated through the solve.
+///
+/// Forward mode materializes the full (n × d) Jacobian ∂x/∂θ alongside
+/// the ADMM iteration (eq. 7) — O(k·n²·d) work, the right choice when
+/// the Jacobian itself is the product (serving, Fig. 1 traces). Adjoint
+/// mode never forms the Jacobian: training only ever consumes a
+/// vector-Jacobian product vᵀ∂x*/∂θ, and the transposed recursion
+/// propagates a single (m+p+m) adjoint vector per backward — O(k·n²)
+/// total, d-free — via [`DenseAltDiff::solve_vjp`] and friends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackwardMode {
+    /// Forward solve only: no gradient state of any kind.
+    None,
+    /// Forward-mode (eq. 7): materialize ∂x/∂θ for this parameter.
+    Forward(Param),
+    /// Reverse-mode: the solve itself carries no Jacobian state; pair
+    /// with `solve_vjp`/`solve_batch_vjp`, which run the transposed
+    /// recursion after the forward pass. Plain `solve`/`solve_batch`
+    /// treat this like [`BackwardMode::None`].
+    Adjoint,
+}
+
+impl BackwardMode {
+    /// The forward-mode parameter, if this mode materializes a Jacobian.
+    pub fn forward_param(&self) -> Option<Param> {
+        match self {
+            BackwardMode::Forward(p) => Some(*p),
+            _ => None,
+        }
+    }
+}
+
 /// Which layer parameter θ the Jacobian ∂x/∂θ is propagated against.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Param {
@@ -55,8 +87,8 @@ pub struct Options {
     pub tol: f64,
     /// Hard iteration cap.
     pub max_iter: usize,
-    /// Propagate ∂x/∂θ for this parameter (None = forward only).
-    pub jacobian: Option<Param>,
+    /// Gradient propagation mode (see [`BackwardMode`]).
+    pub backward: BackwardMode,
     /// Record a per-iteration trace (Fig. 1).
     pub trace: bool,
 }
@@ -67,21 +99,26 @@ impl Default for Options {
             rho: 1.0,
             tol: 1e-3,
             max_iter: 5000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             trace: false,
         }
     }
 }
 
 impl Options {
-    /// Defaults with Jacobian propagation disabled (forward solve only).
+    /// Defaults with gradient propagation disabled (forward solve only).
     pub fn forward_only() -> Self {
-        Options { jacobian: None, ..Default::default() }
+        Options { backward: BackwardMode::None, ..Default::default() }
     }
 
     /// Defaults at the given truncation tolerance.
     pub fn with_tol(tol: f64) -> Self {
         Options { tol, ..Default::default() }
+    }
+
+    /// Defaults in adjoint (reverse) mode — see [`BackwardMode::Adjoint`].
+    pub fn adjoint() -> Self {
+        Options { backward: BackwardMode::Adjoint, ..Default::default() }
     }
 }
 
@@ -119,8 +156,55 @@ pub struct Solution {
 
 impl Solution {
     /// Vector-Jacobian product gᵀ(∂x/∂θ): the quantity backprop needs.
+    ///
+    /// Requires a forward-mode solve ([`BackwardMode::Forward`]); in
+    /// adjoint mode the same product comes out of
+    /// [`DenseAltDiff::solve_vjp`] (and its sparse/batched siblings)
+    /// without the Jacobian ever existing.
     pub fn vjp(&self, g: &[f64]) -> Vec<f64> {
         let j = self.jacobian.as_ref().expect("no jacobian tracked");
         crate::linalg::gemv_t(j, g)
     }
+}
+
+/// Result of one reverse-mode (adjoint) backward pass: the gradients of
+/// L = vᵀx* with respect to every right-hand-side parameter at once.
+///
+/// One adjoint iteration is parameter-independent (the parameter only
+/// enters the final projection), so a single backward yields all three
+/// gradients for the price of one — unlike forward mode, which commits
+/// to one [`Param`] up front.
+#[derive(Clone, Debug)]
+pub struct Vjp {
+    /// vᵀ(∂x*/∂q), length n.
+    pub grad_q: Vec<f64>,
+    /// vᵀ(∂x*/∂b), length p.
+    pub grad_b: Vec<f64>,
+    /// vᵀ(∂x*/∂h), length m.
+    pub grad_h: Vec<f64>,
+    /// Adjoint iterations actually run before truncation fired.
+    pub iters: usize,
+    /// Final relative step of the adjoint iterate (truncation value).
+    pub step_rel: f64,
+}
+
+impl Vjp {
+    /// The gradient for one parameter (same selector forward mode uses).
+    pub fn grad(&self, p: Param) -> &[f64] {
+        match p {
+            Param::Q => &self.grad_q,
+            Param::B => &self.grad_b,
+            Param::H => &self.grad_h,
+        }
+    }
+}
+
+/// Forward solution plus the adjoint backward result, as returned by the
+/// `solve_vjp` entry points.
+#[derive(Clone, Debug)]
+pub struct VjpSolution {
+    /// The forward solve (no Jacobian is ever materialized).
+    pub solution: Solution,
+    /// Gradients of vᵀx* w.r.t. q, b, and h.
+    pub vjp: Vjp,
 }

@@ -8,7 +8,7 @@
 //! the Newton system H = diag + ρ11ᵀ is solved by Sherman–Morrison in
 //! O(n) (paper Table 3's closed form for the constrained Softmax layer).
 
-use super::{Options, Param, Solution, TraceEntry};
+use super::{BackwardMode, Options, Param, Solution, TraceEntry};
 use crate::error::Result;
 use crate::linalg::{dot, norm2, Chol, Mat};
 use crate::prob::{Objective, SparseQp};
@@ -221,7 +221,7 @@ impl<O: Objective> NewtonAltDiff<O> {
         let mut lam = vec![0.0; p];
         let mut nu = vec![0.0; m];
 
-        let d = opts.jacobian.map(|pm| pm.dim(n, m, p));
+        let d = opts.backward.forward_param().map(|pm| pm.dim(n, m, p));
         let mut jx = d.map(|d| Mat::zeros(n, d));
         let mut js = d.map(|d| Mat::zeros(m, d));
         let mut jl = d.map(|d| Mat::zeros(p, d));
@@ -254,7 +254,7 @@ impl<O: Objective> NewtonAltDiff<O> {
                 (jx.as_mut(), js.as_mut(), jl.as_mut(), jn.as_mut())
             {
                 self.jacobian_step(
-                    opts.jacobian.unwrap(),
+                    opts.backward.forward_param().unwrap(),
                     &hess,
                     &s,
                     jx,
@@ -452,7 +452,7 @@ mod tests {
         let sol = s.solve(&Options {
             tol: 1e-9,
             max_iter: 20_000,
-            jacobian: None,
+            backward: BackwardMode::None,
             ..Default::default()
         });
         let sum: f64 = sol.x.iter().sum();
@@ -494,7 +494,7 @@ mod tests {
         let sol = s.solve(&Options {
             tol: 1e-10,
             max_iter: 30_000,
-            jacobian: None,
+            backward: BackwardMode::None,
             ..Default::default()
         });
         let mx = y.iter().cloned().fold(f64::MIN, f64::max);
@@ -516,7 +516,7 @@ mod tests {
         let opts = Options {
             tol: 1e-11,
             max_iter: 40_000,
-            jacobian: Some(Param::Q),
+            backward: BackwardMode::Forward(Param::Q),
             ..Default::default()
         };
         let sol = s.solve(&opts);
@@ -524,7 +524,7 @@ mod tests {
         // Param::Q is d/dc with f = cᵀx + entropy; here c = -y, so
         // dx/dy = -J. Check against FD on y.
         let eps = 1e-5;
-        let fopts = Options { jacobian: None, ..opts.clone() };
+        let fopts = Options { backward: BackwardMode::None, ..opts.clone() };
         for c in [0usize, 5] {
             let mut sp = softmax_solver(n, 3);
             sp.obj.y[c] += eps;

@@ -10,11 +10,45 @@
 //!    iterate (ADMM iterates drift slowly, so warm starts cut CG counts
 //!    dramatically — the sparse analogue of "inheriting" the Hessian).
 
-use super::{Options, Param, Solution, TraceEntry};
+use super::{
+    BackwardMode, Options, Param, Solution, TraceEntry, Vjp, VjpSolution,
+};
 use crate::error::Result;
 use crate::linalg::{dot, norm2, Mat};
 use crate::prob::SparseQp;
 use crate::sparse::{cg, Csr, HessianOp};
+
+/// Forward-mode backward work buffers for the sparse path, allocated
+/// once per solve and reused every iteration.
+struct SparseJacWork {
+    lxt: Mat,
+    newjx: Mat,
+    gjx: Mat,
+    coljl: Vec<f64>,
+    coljn: Vec<f64>,
+    coljs: Vec<f64>,
+    colbuf: Vec<f64>,
+    xcol: Vec<f64>,
+    jxcol: Vec<f64>,
+    spmv: Vec<f64>,
+}
+
+impl SparseJacWork {
+    fn new(n: usize, m: usize, p: usize, d: usize) -> Self {
+        SparseJacWork {
+            lxt: Mat::zeros(n, d),
+            newjx: Mat::zeros(n, d),
+            gjx: Mat::zeros(m, d),
+            coljl: vec![0.0; p],
+            coljn: vec![0.0; m],
+            coljs: vec![0.0; m],
+            colbuf: vec![0.0; n],
+            xcol: vec![0.0; n],
+            jxcol: vec![0.0; n],
+            spmv: vec![0.0; m.max(p)],
+        }
+    }
+}
 
 /// x-update engine. `pub(crate)` so [`crate::batch::BatchedSparseAltDiff`]
 /// can inherit the registration-time pick (and the Sherman–Morrison
@@ -132,15 +166,20 @@ impl SparseAltDiff {
         let mut lam = vec![0.0; p];
         let mut nu = vec![0.0; m];
 
-        let d = opts.jacobian.map(|pm| pm.dim(n, m, p));
+        let param = opts.backward.forward_param();
+        let d = param.map(|pm| pm.dim(n, m, p));
         let mut jx = d.map(|d| Mat::zeros(n, d));
         let mut js = d.map(|d| Mat::zeros(m, d));
         let mut jl = d.map(|d| Mat::zeros(p, d));
         let mut jn = d.map(|d| Mat::zeros(m, d));
+        let mut work = d.map(|d| SparseJacWork::new(n, m, p, d));
 
         let mut trace = Vec::new();
         let mut rhs = vec![0.0; n];
         let mut xprev = vec![0.0; n];
+        let mut hms = vec![0.0; m];
+        let mut gx = vec![0.0; m];
+        let mut ax = vec![0.0; p];
         let mut iters = 0;
         let mut step_rel = f64::INFINITY;
 
@@ -155,17 +194,20 @@ impl SparseAltDiff {
             self.qp.a.spmv_t_acc(&mut rhs, -1.0, &lam);
             self.qp.g.spmv_t_acc(&mut rhs, -1.0, &nu);
             self.qp.a.spmv_t_acc(&mut rhs, rho, b);
-            let hms: Vec<f64> =
-                h.iter().zip(&s).map(|(hi, si)| hi - si).collect();
+            for i in 0..m {
+                hms[i] = h[i] - s[i];
+            }
             self.qp.g.spmv_t_acc(&mut rhs, rho, &hms);
             self.hsolve(&rhs, &mut x);
 
             // (6), (5c), (5d)
-            let gx = self.qp.g.spmv(&x);
+            gx.iter_mut().for_each(|v| *v = 0.0);
+            self.qp.g.spmv_acc(&mut gx, 1.0, &x);
             for i in 0..m {
                 s[i] = (-nu[i] / rho - (gx[i] - h[i])).max(0.0);
             }
-            let ax = self.qp.a.spmv(&x);
+            ax.iter_mut().for_each(|v| *v = 0.0);
+            self.qp.a.spmv_acc(&mut ax, 1.0, &x);
             for i in 0..p {
                 lam[i] += rho * (ax[i] - b[i]);
             }
@@ -174,16 +216,21 @@ impl SparseAltDiff {
             }
 
             // backward (7)
-            if let (Some(jx), Some(js), Some(jl), Some(jn)) =
-                (jx.as_mut(), js.as_mut(), jl.as_mut(), jn.as_mut())
-            {
+            if let (Some(jx), Some(js), Some(jl), Some(jn), Some(w)) = (
+                jx.as_mut(),
+                js.as_mut(),
+                jl.as_mut(),
+                jn.as_mut(),
+                work.as_mut(),
+            ) {
                 self.jacobian_step(
-                    opts.jacobian.unwrap(),
+                    param.unwrap(),
                     &s,
                     jx,
                     js,
                     jl,
                     jn,
+                    w,
                     rho,
                 );
             }
@@ -215,6 +262,7 @@ impl SparseAltDiff {
         self.solve_with(None, None, None, opts)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn jacobian_step(
         &self,
         param: Param,
@@ -223,16 +271,17 @@ impl SparseAltDiff {
         js: &mut Mat,
         jl: &mut Mat,
         jn: &mut Mat,
+        w: &mut SparseJacWork,
         rho: f64,
     ) {
         let n = self.qp.n();
         let d = jx.cols;
         // lxt = Aᵀ Jλ + Gᵀ Jν + ρGᵀ Js + const(θ), built column-wise with
         // spmv_t (CSR has no gemm; d is small in the sparse regimes).
-        let mut lxt = Mat::zeros(n, d);
-        let mut coljl = vec![0.0; jl.rows];
-        let mut coljn = vec![0.0; jn.rows];
-        let mut coljs = vec![0.0; js.rows];
+        let lxt = &mut w.lxt;
+        let coljl = &mut w.coljl;
+        let coljn = &mut w.coljn;
+        let coljs = &mut w.coljs;
         for c in 0..d {
             for i in 0..jl.rows {
                 coljl[i] = jl[(i, c)];
@@ -243,11 +292,12 @@ impl SparseAltDiff {
             for i in 0..js.rows {
                 coljs[i] = js[(i, c)];
             }
-            let mut col = vec![0.0; n];
-            self.qp.a.spmv_t_acc(&mut col, 1.0, &coljl);
-            self.qp.g.spmv_t_acc(&mut col, 1.0, &coljn);
-            self.qp.g.spmv_t_acc(&mut col, rho, &coljs);
-            lxt.set_col(c, &col);
+            let col = &mut w.colbuf;
+            col.iter_mut().for_each(|v| *v = 0.0);
+            self.qp.a.spmv_t_acc(col, 1.0, coljl);
+            self.qp.g.spmv_t_acc(col, 1.0, coljn);
+            self.qp.g.spmv_t_acc(col, rho, coljs);
+            lxt.set_col(c, col);
         }
         match param {
             Param::Q => {
@@ -274,30 +324,31 @@ impl SparseAltDiff {
             }
         }
         // (7a): column-wise H⁻¹ apply (SM: O(nd); CG: warm-started per col)
-        let mut newjx = Mat::zeros(n, d);
-        let mut colbuf = vec![0.0; n];
-        let mut xcol = vec![0.0; n];
+        let colbuf = &mut w.colbuf;
+        let xcol = &mut w.xcol;
         for c in 0..d {
             for i in 0..n {
-                colbuf[i] = lxt[(i, c)];
+                colbuf[i] = w.lxt[(i, c)];
                 xcol[i] = -jx[(i, c)]; // warm start from previous -Jx col
             }
-            self.hsolve(&colbuf, &mut xcol);
+            self.hsolve(colbuf, xcol);
             for i in 0..n {
-                newjx[(i, c)] = -xcol[i];
+                w.newjx[(i, c)] = -xcol[i];
             }
         }
-        *jx = newjx;
+        std::mem::swap(jx, &mut w.newjx);
 
         // (7b)
-        let mut gjx = Mat::zeros(js.rows, d);
-        let mut jxcol = vec![0.0; n];
+        let gjx = &mut w.gjx;
+        let jxcol = &mut w.jxcol;
         for c in 0..d {
             for i in 0..n {
                 jxcol[i] = jx[(i, c)];
             }
-            let g = self.qp.g.spmv(&jxcol);
-            gjx.set_col(c, &g);
+            let g = &mut w.spmv[..js.rows];
+            g.iter_mut().for_each(|v| *v = 0.0);
+            self.qp.g.spmv_acc(g, 1.0, jxcol);
+            gjx.set_col(c, g);
         }
         if param == Param::H {
             for i in 0..gjx.rows.min(d) {
@@ -317,7 +368,9 @@ impl SparseAltDiff {
             for i in 0..n {
                 jxcol[i] = jx[(i, c)];
             }
-            let a = self.qp.a.spmv(&jxcol);
+            let a = &mut w.spmv[..jl.rows];
+            a.iter_mut().for_each(|v| *v = 0.0);
+            self.qp.a.spmv_acc(a, 1.0, jxcol);
             for i in 0..jl.rows {
                 jl[(i, c)] += rho * a[i];
             }
@@ -328,8 +381,125 @@ impl SparseAltDiff {
             }
         }
         // (7d)
-        jn.axpy(rho, &gjx);
+        jn.axpy(rho, &w.gjx);
         jn.axpy(rho, js);
+    }
+
+    /// Reverse-mode backward against an already-solved forward pass —
+    /// the sparse sibling of [`DenseAltDiff::vjp`](super::DenseAltDiff::vjp):
+    /// same transposed recursion, with the H⁻¹ applies going through the
+    /// registration-time engine (Sherman–Morrison O(n) per iteration, or
+    /// warm-started matrix-free CG) and every constraint product a CSR
+    /// spmv. Per-iteration cost is O(nnz + n) — independent of d.
+    pub fn vjp(&self, slack: &[f64], v: &[f64], opts: &Options) -> Vjp {
+        let n = self.qp.n();
+        let m = self.qp.h.len();
+        let p = self.qp.b.len();
+        let rho = self.rho;
+        assert_eq!(slack.len(), m, "slack dimension");
+        assert_eq!(v.len(), n, "v dimension");
+        let gate: Vec<f64> =
+            slack.iter().map(|&s| if s > 0.0 { 1.0 } else { 0.0 }).collect();
+
+        // t = −H⁻¹v and seeds (vs, vl, vn) = (ρGt, At, Gt)
+        let negv: Vec<f64> = v.iter().map(|&vi| -vi).collect();
+        let mut t = vec![0.0; n];
+        self.hsolve(&negv, &mut t);
+        let mut vn = vec![0.0; m];
+        self.qp.g.spmv_acc(&mut vn, 1.0, &t);
+        let mut vl = vec![0.0; p];
+        self.qp.a.spmv_acc(&mut vl, 1.0, &t);
+
+        let mut ws: Vec<f64> = vn.iter().map(|&g| rho * g).collect();
+        let mut wl = vl.clone();
+        let mut wn = vn.clone();
+
+        let mut z = vec![0.0; n];
+        let mut zprev = vec![0.0; n];
+        let mut rhs = vec![0.0; n];
+        let mut dws = vec![0.0; m];
+        let mut ewn = vec![0.0; m];
+        let mut gz = vec![0.0; m];
+        let mut az = vec![0.0; p];
+        let mut iters = 1;
+        let mut step_rel = f64::INFINITY;
+
+        // z = −H⁻¹(−Gᵀ(σ⊙wₛ) + ρAᵀw_λ + ρGᵀ((1−σ)⊙w_ν)); `z` is in/out
+        // (warm start for the CG engine).
+        let zstep = |rhs: &mut Vec<f64>,
+                     z: &mut Vec<f64>,
+                     dws: &mut Vec<f64>,
+                     ewn: &mut Vec<f64>,
+                     ws: &[f64],
+                     wl: &[f64],
+                     wn: &[f64]| {
+            for i in 0..m {
+                dws[i] = gate[i] * ws[i];
+                ewn[i] = (1.0 - gate[i]) * wn[i];
+            }
+            rhs.iter_mut().for_each(|r| *r = 0.0);
+            self.qp.g.spmv_t_acc(rhs, 1.0, dws);
+            self.qp.a.spmv_t_acc(rhs, -rho, wl);
+            self.qp.g.spmv_t_acc(rhs, -rho, ewn);
+            self.hsolve(rhs, z);
+        };
+
+        for k in 1..opts.max_iter {
+            zprev.copy_from_slice(&z);
+            zstep(&mut rhs, &mut z, &mut dws, &mut ewn, &ws, &wl, &wn);
+            gz.iter_mut().for_each(|g| *g = 0.0);
+            self.qp.g.spmv_acc(&mut gz, 1.0, &z);
+            az.iter_mut().for_each(|a| *a = 0.0);
+            self.qp.a.spmv_acc(&mut az, 1.0, &z);
+            for i in 0..m {
+                wn[i] = (1.0 - gate[i]) * wn[i] + gz[i]
+                    - gate[i] * ws[i] / rho
+                    + vn[i];
+                ws[i] = rho * gz[i] + rho * vn[i];
+            }
+            for i in 0..p {
+                wl[i] += az[i] + vl[i];
+            }
+            iters = k + 1;
+            let dz: f64 = z
+                .iter()
+                .zip(&zprev)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            step_rel = dz / norm2(&zprev).max(1.0);
+            if step_rel < opts.tol {
+                break;
+            }
+        }
+        zstep(&mut rhs, &mut z, &mut dws, &mut ewn, &ws, &wl, &wn);
+
+        let zt: Vec<f64> =
+            z.iter().zip(&t).map(|(zi, ti)| zi + ti).collect();
+        let mut grad_b: Vec<f64> = wl.iter().map(|&w| -rho * w).collect();
+        self.qp.a.spmv_acc(&mut grad_b, -rho, &zt);
+        let mut grad_h: Vec<f64> = (0..m)
+            .map(|i| gate[i] * ws[i] - rho * (1.0 - gate[i]) * wn[i])
+            .collect();
+        self.qp.g.spmv_acc(&mut grad_h, -rho, &zt);
+        Vjp { grad_q: zt, grad_b, grad_h, iters, step_rel }
+    }
+
+    /// Forward solve + reverse-mode backward in one call (the training
+    /// entry point) — see [`DenseAltDiff::solve_vjp`](super::DenseAltDiff::solve_vjp).
+    pub fn solve_vjp(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        v: &[f64],
+        opts: &Options,
+    ) -> VjpSolution {
+        let fopts =
+            Options { backward: BackwardMode::None, ..opts.clone() };
+        let solution = self.solve_with(q, b, h, &fopts);
+        let vjp = self.vjp(&solution.s, v, opts);
+        VjpSolution { solution, vjp }
     }
 
     /// True when the Sherman–Morrison fast path is active.
@@ -372,7 +542,7 @@ mod tests {
         let sol = s.solve(&Options {
             tol: 1e-10,
             max_iter: 50_000,
-            jacobian: None,
+            backward: BackwardMode::None,
             ..Default::default()
         });
         let sum: f64 = sol.x.iter().sum();
@@ -391,7 +561,7 @@ mod tests {
         let opts = Options {
             tol: 1e-11,
             max_iter: 40_000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         };
         let sd = dense.solve(&opts);
@@ -420,7 +590,7 @@ mod tests {
         let opts = Options {
             tol: 1e-11,
             max_iter: 60_000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         };
         let a = sm.solve(&opts);
@@ -442,12 +612,12 @@ mod tests {
         let opts = Options {
             tol: 1e-11,
             max_iter: 40_000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         };
         let sol = s.solve(&opts);
         let j = sol.jacobian.unwrap();
-        let fopts = Options { jacobian: None, ..opts };
+        let fopts = Options { backward: BackwardMode::None, ..opts };
         let eps = 1e-5;
         for c in 0..3 {
             let mut bp = s.qp.b.clone();

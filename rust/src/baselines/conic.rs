@@ -13,7 +13,7 @@
 //! The embedded sizes are what make CvxpyLayer the slowest column of the
 //! paper's Tables 2/4/5: every phase pays for n + n_c, never just n.
 
-use crate::altdiff::{DenseAltDiff, Options, Param};
+use crate::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use crate::baselines::kkt_diff;
 use crate::error::Result;
 use crate::linalg::Mat;
@@ -122,7 +122,7 @@ pub fn cvxpylayer_sim(
     let sol = solver.solve(&Options {
         tol,
         max_iter: 20_000,
-        jacobian: None,
+        backward: BackwardMode::None,
         ..Default::default()
     });
     ph.forward = t0.elapsed().as_secs_f64();
@@ -175,7 +175,7 @@ mod tests {
             .solve(&Options {
                 tol: 1e-10,
                 max_iter: 50_000,
-                jacobian: None,
+                backward: BackwardMode::None,
                 ..Default::default()
             });
         for i in 0..10 {
@@ -198,7 +198,7 @@ mod tests {
                 .solve(&Options {
                     tol: 1e-12,
                     max_iter: 60_000,
-                    jacobian: Some(param),
+                    backward: BackwardMode::Forward(param),
                     ..Default::default()
                 })
                 .jacobian

@@ -157,7 +157,7 @@ mod tests {
         let sol = ad.solve(&crate::altdiff::Options {
             tol: 1e-10,
             max_iter: 50_000,
-            jacobian: None,
+            backward: crate::altdiff::BackwardMode::None,
             ..Default::default()
         });
         for i in 0..12 {

@@ -107,7 +107,7 @@ pub fn optnet_layer(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::altdiff::{DenseAltDiff, Options};
+    use crate::altdiff::{BackwardMode, DenseAltDiff, Options};
     use crate::linalg::cosine;
     use crate::prob::dense_qp;
 
@@ -122,7 +122,7 @@ mod tests {
                 .solve(&Options {
                     tol: 1e-12,
                     max_iter: 60_000,
-                    jacobian: Some(param),
+                    backward: BackwardMode::Forward(param),
                     ..Default::default()
                 })
                 .jacobian

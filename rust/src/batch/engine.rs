@@ -13,11 +13,12 @@
 //! results agree with `DenseAltDiff` to solver tolerance.
 
 use super::mask::ActiveSet;
-use super::BatchSolution;
-use crate::altdiff::{DenseAltDiff, Options, Param};
+use super::{BatchSolution, BatchVjp, BatchVjpSolution};
+use crate::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use crate::error::Result;
 use crate::linalg::{
-    axpy_cols, gemm_acc_cols, gemm_acc_rows, norm2, par_gemm_acc, Mat,
+    axpy_cols, gemm_acc, gemm_acc_cols, gemm_acc_rows, norm2, par_gemm_acc,
+    Mat,
 };
 use crate::prob::Qp;
 
@@ -113,18 +114,21 @@ impl BatchedAltDiff {
         let mut ax = Mat::zeros(bsz, p);
 
         // Jacobian state: per-element (n×d) blocks stacked along columns
-        let d = opts.jacobian.map(|pm| pm.dim(n, m, p));
+        let param = opts.backward.forward_param();
+        let d = param.map(|pm| pm.dim(n, m, p));
         let mut jac = d.map(|d| JacState::new(n, m, p, bsz, d));
 
         let mut act = ActiveSet::new(bsz);
         let mut iters = vec![0usize; bsz];
         let mut step_rel = vec![f64::INFINITY; bsz];
+        let mut live: Vec<usize> = Vec::with_capacity(bsz);
 
         for k in 0..opts.max_iter {
             if act.all_done() {
                 break;
             }
-            let live: Vec<usize> = act.iter().collect();
+            live.clear();
+            live.extend(act.iter());
             for &e in &live {
                 iters[e] = k + 1;
                 xprev.row_mut(e).copy_from_slice(x.row(e));
@@ -183,8 +187,7 @@ impl BatchedAltDiff {
 
             // ---- backward (7a)-(7d), only active column blocks
             if let Some(jac) = jac.as_mut() {
-                let param = opts.jacobian.unwrap();
-                jac.step(self, param, &s, &act, &live, rho);
+                jac.step(self, param.unwrap(), &s, &act, &live, rho);
             }
 
             // ---- per-element truncation (Algorithm 1 condition)
@@ -219,6 +222,235 @@ impl BatchedAltDiff {
             iters,
             step_rel,
         }
+    }
+
+    /// Batched reverse-mode backward: B adjoint vectors advance as one
+    /// (B, ·) panel per state, so every iteration of the transposed
+    /// recursion is one GEMM launch against the shared H⁻¹/A/G — cost
+    /// per iteration O(B·(n² + nm + np)), independent of d. `slacks` are
+    /// the per-element final slacks of the forward launch (the (7b) gate
+    /// pattern), `vs` the per-element incoming gradients dL/dx*ₑ.
+    /// Per-element truncation mirrors the forward engine: a converged
+    /// element's rows freeze and stop consuming flops (`opts.tol`;
+    /// `tol = 0` runs exactly `opts.max_iter` iterations).
+    pub fn batch_vjp(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        opts: &Options,
+    ) -> BatchVjp {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        let rho = self.rho;
+        let bsz = vs.len();
+        assert!(bsz > 0, "empty batch");
+        assert_eq!(slacks.len(), bsz, "slack arity");
+
+        // gates σ (B, m) from the forward launch's final slacks
+        let mut gates = Mat::zeros(bsz, m);
+        for (e, s) in slacks.iter().enumerate() {
+            assert_eq!(s.len(), m, "slack dimension");
+            let gr = gates.row_mut(e);
+            for i in 0..m {
+                gr[i] = if s[i] > 0.0 { 1.0 } else { 0.0 };
+            }
+        }
+
+        // T = −V H⁻¹ (row-major stacked t's) and the seeds
+        // (Vₛ, V_λ, V_ν) = (ρ·T Gᵀ, T Aᵀ, T Gᵀ)
+        let vmat = gather(Some(vs), &[], bsz, n);
+        let mut t = Mat::zeros(bsz, n);
+        par_gemm_acc(&mut t, -1.0, &vmat, &self.hinv);
+        let mut vn = Mat::zeros(bsz, m);
+        par_gemm_acc(&mut vn, 1.0, &t, &self.gt);
+        let mut vl = Mat::zeros(bsz, p);
+        par_gemm_acc(&mut vl, 1.0, &t, &self.at);
+
+        // W₁ = V
+        let mut ws = vn.clone();
+        ws.scale(rho);
+        let mut wl = vl.clone();
+        let mut wn = vn.clone();
+
+        let mut z = Mat::zeros(bsz, n);
+        let mut zprev = Mat::zeros(bsz, n);
+        let mut rhs = Mat::zeros(bsz, n);
+        let mut dws = Mat::zeros(bsz, m);
+        let mut ewn = Mat::zeros(bsz, m);
+        let mut gz = Mat::zeros(bsz, m);
+        let mut az = Mat::zeros(bsz, p);
+
+        let mut act = ActiveSet::new(bsz);
+        let mut iters = vec![1usize; bsz];
+        let mut step_rel = vec![f64::INFINITY; bsz];
+        let mut live: Vec<usize> = Vec::with_capacity(bsz);
+
+        for k in 1..opts.max_iter {
+            if act.all_done() {
+                break;
+            }
+            live.clear();
+            live.extend(act.iter());
+            // z = H⁻¹(Gᵀ(σ⊙wₛ) − ρAᵀw_λ − ρGᵀ((1−σ)⊙w_ν)), one GEMM
+            // per term over the live rows only
+            for &e in &live {
+                zprev.row_mut(e).copy_from_slice(z.row(e));
+                let gr = gates.row(e);
+                let wsr = ws.row(e);
+                let wnr = wn.row(e);
+                let dr = dws.row_mut(e);
+                for i in 0..m {
+                    dr[i] = gr[i] * wsr[i];
+                }
+                let er = ewn.row_mut(e);
+                for i in 0..m {
+                    er[i] = (1.0 - gr[i]) * wnr[i];
+                }
+                rhs.row_mut(e).fill(0.0);
+            }
+            gemm_acc_rows(&mut rhs, 1.0, &dws, &self.qp.g, act.flags());
+            gemm_acc_rows(&mut rhs, -rho, &wl, &self.qp.a, act.flags());
+            gemm_acc_rows(&mut rhs, -rho, &ewn, &self.qp.g, act.flags());
+            for &e in &live {
+                z.row_mut(e).fill(0.0);
+            }
+            gemm_acc_rows(&mut z, 1.0, &rhs, &self.hinv, act.flags());
+
+            // W ← MᵀW + V
+            for &e in &live {
+                gz.row_mut(e).fill(0.0);
+                az.row_mut(e).fill(0.0);
+            }
+            gemm_acc_rows(&mut gz, 1.0, &z, &self.gt, act.flags());
+            gemm_acc_rows(&mut az, 1.0, &z, &self.at, act.flags());
+            for &e in &live {
+                iters[e] = k + 1;
+                let gr = gates.row(e);
+                let gzr = gz.row(e);
+                let vnr = vn.row(e);
+                // order matters: w_ν reads the OLD wₛ
+                {
+                    let wsr = ws.row(e);
+                    let wnr = wn.row_mut(e);
+                    for i in 0..m {
+                        wnr[i] = (1.0 - gr[i]) * wnr[i] + gzr[i]
+                            - gr[i] * wsr[i] / rho
+                            + vnr[i];
+                    }
+                }
+                let wsr = ws.row_mut(e);
+                for i in 0..m {
+                    wsr[i] = rho * gzr[i] + rho * vnr[i];
+                }
+                let azr = az.row(e);
+                let vlr = vl.row(e);
+                let wlr = wl.row_mut(e);
+                for i in 0..p {
+                    wlr[i] += azr[i] + vlr[i];
+                }
+                // per-element truncation on the adjoint iterate z
+                let zr = z.row(e);
+                let zp = zprev.row(e);
+                let dz: f64 = zr
+                    .iter()
+                    .zip(zp)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                let step = dz / norm2(zp).max(1.0);
+                step_rel[e] = step;
+                if step < opts.tol {
+                    act.deactivate(e);
+                }
+            }
+        }
+
+        // final z at every element's converged adjoint state
+        let all = vec![true; bsz];
+        for e in 0..bsz {
+            let gr = gates.row(e);
+            let wsr = ws.row(e);
+            let wnr = wn.row(e);
+            let dr = dws.row_mut(e);
+            for i in 0..m {
+                dr[i] = gr[i] * wsr[i];
+            }
+            let er = ewn.row_mut(e);
+            for i in 0..m {
+                er[i] = (1.0 - gr[i]) * wnr[i];
+            }
+        }
+        rhs.data.fill(0.0);
+        gemm_acc_rows(&mut rhs, 1.0, &dws, &self.qp.g, &all);
+        gemm_acc_rows(&mut rhs, -rho, &wl, &self.qp.a, &all);
+        gemm_acc_rows(&mut rhs, -rho, &ewn, &self.qp.g, &all);
+        z.data.fill(0.0);
+        par_gemm_acc(&mut z, 1.0, &rhs, &self.hinv);
+
+        // project out all three gradients per element
+        let mut zt = z;
+        zt.axpy(1.0, &t);
+        let mut gb = wl;
+        gb.scale(-rho);
+        gemm_acc(&mut gb, -rho, &zt, &self.at);
+        let mut gh = Mat::zeros(bsz, m);
+        for e in 0..bsz {
+            let gr = gates.row(e);
+            let wsr = ws.row(e);
+            let wnr = wn.row(e);
+            let ghr = gh.row_mut(e);
+            for i in 0..m {
+                ghr[i] =
+                    gr[i] * wsr[i] - rho * (1.0 - gr[i]) * wnr[i];
+            }
+        }
+        gemm_acc(&mut gh, -rho, &zt, &self.gt);
+
+        let rows = |mat: &Mat| -> Vec<Vec<f64>> {
+            (0..bsz).map(|e| mat.row(e).to_vec()).collect()
+        };
+        BatchVjp {
+            grads_q: rows(&zt),
+            grads_b: rows(&gb),
+            grads_h: rows(&gh),
+            iters,
+            step_rel,
+        }
+    }
+
+    /// Forward batch solve + batched reverse-mode backward in one call:
+    /// the minibatch training entry point. No Jacobian is ever
+    /// materialized — peak gradient state is O(B·(n+m+p)) instead of the
+    /// forward-mode O(B·n·d).
+    ///
+    /// ```
+    /// use altdiff::altdiff::Options;
+    /// use altdiff::batch::BatchedAltDiff;
+    /// use altdiff::prob::dense_qp;
+    ///
+    /// let engine = BatchedAltDiff::new(dense_qp(6, 3, 1, 7), 1.0).unwrap();
+    /// let q2: Vec<f64> = engine.qp.q.iter().map(|v| 0.5 * v).collect();
+    /// let qs: Vec<&[f64]> = vec![&engine.qp.q, &q2];
+    /// let vs: Vec<&[f64]> = vec![&[1.0; 6], &[1.0; 6]]; // dL/dx* per element
+    /// let out = engine.solve_batch_vjp(
+    ///     Some(&qs), None, None, &vs, &Options::with_tol(1e-9));
+    /// assert_eq!(out.vjp.grads_q.len(), 2);
+    /// assert!(out.forward.jacobians.is_none()); // never materialized
+    /// ```
+    pub fn solve_batch_vjp(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        vs: &[&[f64]],
+        opts: &Options,
+    ) -> BatchVjpSolution {
+        let fopts =
+            Options { backward: BackwardMode::None, ..opts.clone() };
+        let forward = self.solve_batch(qs, bs, hs, &fopts);
+        let vjp = self.batch_vjp(&forward.slack_refs(), vs, opts);
+        BatchVjpSolution { forward, vjp }
     }
 }
 
@@ -435,7 +667,7 @@ mod tests {
         let opts = Options {
             tol: 1e-10,
             max_iter: 50_000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         };
         let sd = dense.solve(&opts);
@@ -459,7 +691,7 @@ mod tests {
         let opts = Options {
             tol: 0.0,
             max_iter: 17,
-            jacobian: Some(Param::Q),
+            backward: BackwardMode::Forward(Param::Q),
             ..Default::default()
         };
         let sb = batched.solve_batch(Some(&qs), None, None, &opts);

@@ -90,4 +90,62 @@ impl BatchSolution {
             trace: Vec::new(),
         }
     }
+
+    /// Per-element slack slices — the gate input the batched adjoint
+    /// backward ([`BatchedAltDiff::batch_vjp`] /
+    /// [`BatchedSparseAltDiff::batch_vjp`]) needs from a forward launch.
+    pub fn slack_refs(&self) -> Vec<&[f64]> {
+        self.ss.iter().map(|s| s.as_slice()).collect()
+    }
+}
+
+/// Per-element results of one batched reverse-mode (adjoint) backward:
+/// every element's gradients of vₑᵀx*ₑ w.r.t. all three parameters —
+/// computed without ever materializing a Jacobian (O(B·n) state instead
+/// of O(B·n·d)).
+#[derive(Clone, Debug)]
+pub struct BatchVjp {
+    /// vᵀ(∂x*/∂q) per element, each length n.
+    pub grads_q: Vec<Vec<f64>>,
+    /// vᵀ(∂x*/∂b) per element, each length p.
+    pub grads_b: Vec<Vec<f64>>,
+    /// vᵀ(∂x*/∂h) per element, each length m.
+    pub grads_h: Vec<Vec<f64>>,
+    /// Adjoint iterations each element ran before truncation fired.
+    pub iters: Vec<usize>,
+    /// Final relative adjoint step per element.
+    pub step_rel: Vec<f64>,
+}
+
+impl BatchVjp {
+    /// Batch size.
+    pub fn len(&self) -> usize {
+        self.grads_q.len()
+    }
+
+    /// True for a zero-element result.
+    pub fn is_empty(&self) -> bool {
+        self.grads_q.is_empty()
+    }
+
+    /// Copy element `e` out as a standalone [`crate::altdiff::Vjp`].
+    pub fn element(&self, e: usize) -> crate::altdiff::Vjp {
+        crate::altdiff::Vjp {
+            grad_q: self.grads_q[e].clone(),
+            grad_b: self.grads_b[e].clone(),
+            grad_h: self.grads_h[e].clone(),
+            iters: self.iters[e],
+            step_rel: self.step_rel[e],
+        }
+    }
+}
+
+/// Forward batch solution plus the batched adjoint backward, as returned
+/// by the `solve_batch_vjp` entry points.
+#[derive(Clone, Debug)]
+pub struct BatchVjpSolution {
+    /// The forward launch (no Jacobians are ever materialized).
+    pub forward: BatchSolution,
+    /// Per-element gradients of vₑᵀx*ₑ w.r.t. q, b, and h.
+    pub vjp: BatchVjp,
 }

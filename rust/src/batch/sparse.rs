@@ -28,9 +28,9 @@
 //! operation-for-operation (see `tests/prop_batched_sparse.rs`).
 
 use super::mask::ActiveSet;
-use super::BatchSolution;
+use super::{BatchSolution, BatchVjp, BatchVjpSolution};
 use crate::altdiff::sparse::Engine;
-use crate::altdiff::{Options, Param, SparseAltDiff};
+use crate::altdiff::{BackwardMode, Options, Param, SparseAltDiff};
 use crate::error::Result;
 use crate::linalg::Mat;
 use crate::prob::SparseQp;
@@ -214,7 +214,8 @@ impl BatchedSparseAltDiff {
 
         // Jacobian state: per-element (rows × d) blocks stacked along
         // columns, like the dense batch engine
-        let d = opts.jacobian.map(|pm| pm.dim(n, m, p));
+        let param = opts.backward.forward_param();
+        let d = param.map(|pm| pm.dim(n, m, p));
         let mut jac = d.map(|d| JacState::new(n, m, p, bsz, d));
         let op_bwd = match (is_cg, d) {
             (true, Some(d)) => Some(BlockHessianOp::new(
@@ -230,12 +231,14 @@ impl BatchedSparseAltDiff {
         let mut act = ActiveSet::new(bsz);
         let mut iters = vec![0usize; bsz];
         let mut step_rel = vec![f64::INFINITY; bsz];
+        let mut live: Vec<usize> = Vec::with_capacity(bsz);
 
         for k in 0..opts.max_iter {
             if act.all_done() {
                 break;
             }
-            let live: Vec<usize> = act.iter().collect();
+            live.clear();
+            live.extend(act.iter());
             let ranges = act.col_ranges(1);
             for &e in &live {
                 iters[e] = k + 1;
@@ -307,11 +310,10 @@ impl BatchedSparseAltDiff {
 
             // ---- backward (7a)-(7d), only live column blocks
             if let Some(jac) = jac.as_mut() {
-                let param = opts.jacobian.unwrap();
                 jac.step(
                     self,
                     op_bwd.as_ref(),
-                    param,
+                    param.unwrap(),
                     &s,
                     &act,
                     &live,
@@ -351,6 +353,286 @@ impl BatchedSparseAltDiff {
             iters,
             step_rel,
         })
+    }
+
+    /// Batched reverse-mode backward, panicking on blocked-CG breakdown
+    /// (cannot happen on the Sherman–Morrison path). Convenience wrapper
+    /// over [`Self::try_batch_vjp`].
+    pub fn batch_vjp(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        opts: &Options,
+    ) -> BatchVjp {
+        self.try_batch_vjp(slacks, vs, opts)
+            .expect("batched sparse adjoint failed")
+    }
+
+    /// Batched reverse-mode backward: B adjoint vectors advance as one
+    /// element-major (state, B) panel, so every iteration of the
+    /// transposed recursion is one multi-RHS SpMM sweep per constraint
+    /// product plus one blocked H⁻¹ apply (batched Sherman–Morrison or
+    /// [`block_cg`](crate::sparse::block_cg()) at width B — never B·d).
+    /// `slacks` are the
+    /// per-element final slacks of the forward launch, `vs` the incoming
+    /// gradients dL/dx*ₑ. Per-element truncation freezes converged
+    /// adjoint columns through the same [`ActiveSet`] masks the forward
+    /// engine uses. Errors only on the CG engine, like
+    /// [`Self::try_solve_batch`].
+    pub fn try_batch_vjp(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        opts: &Options,
+    ) -> Result<BatchVjp> {
+        let n = self.qp.n();
+        let m = self.qp.h.len();
+        let p = self.qp.b.len();
+        let rho = self.rho;
+        let bsz = vs.len();
+        assert!(bsz > 0, "empty batch");
+        assert_eq!(slacks.len(), bsz, "slack arity");
+
+        // gates σ, element-major (m, B)
+        let mut gates = Mat::zeros(m, bsz);
+        for (e, s) in slacks.iter().enumerate() {
+            assert_eq!(s.len(), m, "slack dimension");
+            for i in 0..m {
+                gates[(i, e)] = if s[i] > 0.0 { 1.0 } else { 0.0 };
+            }
+        }
+
+        let is_cg = !self.uses_sherman_morrison();
+        let op = is_cg.then(|| {
+            BlockHessianOp::new(
+                &self.hdiag_p,
+                &self.qp.a,
+                &self.qp.g,
+                rho,
+                bsz,
+            )
+        });
+        let full = [(0usize, bsz)];
+        let all_flags = vec![true; bsz];
+        let mut ur = vec![0.0; bsz];
+
+        // T = −H⁻¹V and seeds (Vₛ, V_λ, V_ν) = (ρGT, AT, GT)
+        let mut negv = Mat::zeros(n, bsz);
+        for (e, v) in vs.iter().enumerate() {
+            assert_eq!(v.len(), n, "v dimension");
+            for i in 0..n {
+                negv[(i, e)] = -v[i];
+            }
+        }
+        let mut t = Mat::zeros(n, bsz);
+        self.hsolve_block(
+            &negv, &mut t, op.as_ref(), &full, &all_flags, &mut ur,
+        )?;
+        let mut vn = Mat::zeros(m, bsz);
+        self.qp.g.spmm_acc(&mut vn, 1.0, &t, &full);
+        let mut vl = Mat::zeros(p, bsz);
+        self.qp.a.spmm_acc(&mut vl, 1.0, &t, &full);
+
+        // W₁ = V
+        let mut ws = vn.clone();
+        ws.scale(rho);
+        let mut wl = vl.clone();
+        let mut wn = vn.clone();
+
+        let mut z = Mat::zeros(n, bsz);
+        let mut zprev = Mat::zeros(n, bsz);
+        let mut rhs = Mat::zeros(n, bsz);
+        let mut dws = Mat::zeros(m, bsz);
+        let mut ewn = Mat::zeros(m, bsz);
+        let mut gz = Mat::zeros(m, bsz);
+        let mut az = Mat::zeros(p, bsz);
+
+        let mut act = ActiveSet::new(bsz);
+        let mut iters = vec![1usize; bsz];
+        let mut step_rel = vec![f64::INFINITY; bsz];
+        let mut live: Vec<usize> = Vec::with_capacity(bsz);
+
+        for k in 1..opts.max_iter {
+            if act.all_done() {
+                break;
+            }
+            live.clear();
+            live.extend(act.iter());
+            let ranges = act.col_ranges(1);
+            copy_cols(&mut zprev, &z, &ranges);
+            // z = H⁻¹(Gᵀ(σ⊙wₛ) − ρAᵀw_λ − ρGᵀ((1−σ)⊙w_ν)); z doubles
+            // as the CG warm start across iterations
+            for i in 0..m {
+                let gr = gates.row(i);
+                let wsr = ws.row(i);
+                let wnr = wn.row(i);
+                let dr = dws.row_mut(i);
+                for &(c0, c1) in &ranges {
+                    for c in c0..c1 {
+                        dr[c] = gr[c] * wsr[c];
+                    }
+                }
+                let er = ewn.row_mut(i);
+                for &(c0, c1) in &ranges {
+                    for c in c0..c1 {
+                        er[c] = (1.0 - gr[c]) * wnr[c];
+                    }
+                }
+            }
+            zero_cols(&mut rhs, &ranges);
+            self.qp.g.spmm_t_acc(&mut rhs, 1.0, &dws, &ranges);
+            self.qp.a.spmm_t_acc(&mut rhs, -rho, &wl, &ranges);
+            self.qp.g.spmm_t_acc(&mut rhs, -rho, &ewn, &ranges);
+            self.hsolve_block(
+                &rhs,
+                &mut z,
+                op.as_ref(),
+                &ranges,
+                act.flags(),
+                &mut ur,
+            )?;
+
+            // W ← MᵀW + V
+            zero_cols(&mut gz, &ranges);
+            zero_cols(&mut az, &ranges);
+            self.qp.g.spmm_acc(&mut gz, 1.0, &z, &ranges);
+            self.qp.a.spmm_acc(&mut az, 1.0, &z, &ranges);
+            for i in 0..m {
+                let gr = gates.row(i);
+                let gzr = gz.row(i);
+                let vnr = vn.row(i);
+                // order matters: w_ν reads the OLD wₛ
+                {
+                    let wsr = ws.row(i);
+                    let wnr = wn.row_mut(i);
+                    for &(c0, c1) in &ranges {
+                        for c in c0..c1 {
+                            wnr[c] = (1.0 - gr[c]) * wnr[c] + gzr[c]
+                                - gr[c] * wsr[c] / rho
+                                + vnr[c];
+                        }
+                    }
+                }
+                let wsr = ws.row_mut(i);
+                for &(c0, c1) in &ranges {
+                    for c in c0..c1 {
+                        wsr[c] = rho * gzr[c] + rho * vnr[c];
+                    }
+                }
+            }
+            for i in 0..p {
+                let azr = az.row(i);
+                let vlr = vl.row(i);
+                let wlr = wl.row_mut(i);
+                for &(c0, c1) in &ranges {
+                    for c in c0..c1 {
+                        wlr[c] += azr[c] + vlr[c];
+                    }
+                }
+            }
+            // per-element truncation on the adjoint iterate z
+            for &e in &live {
+                iters[e] = k + 1;
+                let mut dz2 = 0.0;
+                let mut zp2 = 0.0;
+                for i in 0..n {
+                    let zv = z[(i, e)];
+                    let pv = zprev[(i, e)];
+                    dz2 += (zv - pv) * (zv - pv);
+                    zp2 += pv * pv;
+                }
+                let step = dz2.sqrt() / zp2.sqrt().max(1.0);
+                step_rel[e] = step;
+                if step < opts.tol {
+                    act.deactivate(e);
+                }
+            }
+        }
+
+        // final z at every element's converged adjoint state
+        for i in 0..m {
+            let gr = gates.row(i);
+            let wsr = ws.row(i);
+            let wnr = wn.row(i);
+            let dr = dws.row_mut(i);
+            let er = ewn.row_mut(i);
+            for c in 0..bsz {
+                dr[c] = gr[c] * wsr[c];
+                er[c] = (1.0 - gr[c]) * wnr[c];
+            }
+        }
+        rhs.data.fill(0.0);
+        self.qp.g.spmm_t_acc(&mut rhs, 1.0, &dws, &full);
+        self.qp.a.spmm_t_acc(&mut rhs, -rho, &wl, &full);
+        self.qp.g.spmm_t_acc(&mut rhs, -rho, &ewn, &full);
+        self.hsolve_block(
+            &rhs, &mut z, op.as_ref(), &full, &all_flags, &mut ur,
+        )?;
+
+        // project out all three gradients per element
+        let mut zt = z;
+        zt.axpy(1.0, &t);
+        let mut gb = wl;
+        gb.scale(-rho);
+        self.qp.a.spmm_acc(&mut gb, -rho, &zt, &full);
+        let mut gh = Mat::zeros(m, bsz);
+        for i in 0..m {
+            let gr = gates.row(i);
+            let wsr = ws.row(i);
+            let wnr = wn.row(i);
+            let ghr = gh.row_mut(i);
+            for c in 0..bsz {
+                ghr[c] =
+                    gr[c] * wsr[c] - rho * (1.0 - gr[c]) * wnr[c];
+            }
+        }
+        self.qp.g.spmm_acc(&mut gh, -rho, &zt, &full);
+
+        let cols = |mat: &Mat| -> Vec<Vec<f64>> {
+            (0..bsz).map(|e| mat.col(e)).collect()
+        };
+        Ok(BatchVjp {
+            grads_q: cols(&zt),
+            grads_b: cols(&gb),
+            grads_h: cols(&gh),
+            iters,
+            step_rel,
+        })
+    }
+
+    /// Forward batch solve + batched reverse-mode backward in one call,
+    /// panicking on blocked-CG breakdown. Convenience wrapper over
+    /// [`Self::try_solve_batch_vjp`].
+    pub fn solve_batch_vjp(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        vs: &[&[f64]],
+        opts: &Options,
+    ) -> BatchVjpSolution {
+        self.try_solve_batch_vjp(qs, bs, hs, vs, opts)
+            .expect("batched sparse solve+vjp failed")
+    }
+
+    /// Forward batch solve + batched reverse-mode backward — the sparse
+    /// minibatch training entry point, mirroring
+    /// [`super::BatchedAltDiff::solve_batch_vjp`]. No Jacobian is ever
+    /// materialized. Errors only on the CG engine (the server maps this
+    /// to per-request failure replies).
+    pub fn try_solve_batch_vjp(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        vs: &[&[f64]],
+        opts: &Options,
+    ) -> Result<BatchVjpSolution> {
+        let fopts =
+            Options { backward: BackwardMode::None, ..opts.clone() };
+        let forward = self.try_solve_batch(qs, bs, hs, &fopts)?;
+        let vjp = self.try_batch_vjp(&forward.slack_refs(), vs, opts)?;
+        Ok(BatchVjpSolution { forward, vjp })
     }
 }
 
@@ -644,7 +926,7 @@ mod tests {
             let opts = Options {
                 tol: 1e-10,
                 max_iter: 50_000,
-                jacobian: Some(Param::B),
+                backward: BackwardMode::Forward(Param::B),
                 ..Default::default()
             };
             let ss = seq.solve(&opts);
@@ -680,7 +962,7 @@ mod tests {
         let opts = Options {
             tol: 0.0,
             max_iter: 13,
-            jacobian: Some(Param::Q),
+            backward: BackwardMode::Forward(Param::Q),
             ..Default::default()
         };
         let sb = batched.solve_batch(Some(&qs), None, None, &opts);

@@ -1,8 +1,8 @@
 //! Dynamic batcher: groups compatible requests into padded batches.
 //!
-//! Compatibility key = (layer, k): only requests against the same
-//! registered layer and the same routed iteration count may share an
-//! executable launch. Flush policy: a batch launches when it reaches the
+//! Compatibility key = (layer, k, is_grad): only requests against the
+//! same registered layer, the same routed iteration count, and the same
+//! kind (solve vs adjoint-gradient) may share an executable launch. Flush policy: a batch launches when it reaches the
 //! target batch size, or when its oldest member has waited past the
 //! deadline (classic vLLM-style deadline batching — latency bounded, and
 //! throughput recovers the MXU efficiency of the batched artifact).
@@ -23,6 +23,9 @@ pub struct Batch {
     pub layer: Arc<str>,
     /// Routed iteration count shared by every member.
     pub k: usize,
+    /// True for a batch of adjoint-gradient requests (every member
+    /// carries a `grad_v` seed); solve and gradient requests never mix.
+    pub grad: bool,
     /// The member requests, in arrival order.
     pub requests: Vec<Request>,
 }
@@ -36,7 +39,7 @@ pub struct Batcher {
     /// layer-name intern table (bounded by the number of distinct layer
     /// names ever seen; `Arc<str>: Borrow<str>` gives by-&str lookup)
     names: BTreeSet<Arc<str>>,
-    pending: BTreeMap<(Arc<str>, usize), Vec<Request>>,
+    pending: BTreeMap<(Arc<str>, usize, bool), Vec<Request>>,
 }
 
 impl Batcher {
@@ -63,19 +66,19 @@ impl Batcher {
     /// full batch if one is ready.
     pub fn push(&mut self, k: usize, req: Request) -> Option<Batch> {
         let name = self.intern(&req.layer);
-        let key = (name, k);
+        let key = (name, k, req.is_grad());
         let slot = self.pending.entry(key.clone()).or_default();
         slot.push(req);
         if slot.len() >= self.max_batch {
             let requests = self.pending.remove(&key).unwrap();
-            return Some(Batch { layer: key.0, k, requests });
+            return Some(Batch { layer: key.0, k, grad: key.2, requests });
         }
         None
     }
 
     /// Flush every group whose oldest request has exceeded the deadline.
     pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch> {
-        let expired: Vec<(Arc<str>, usize)> = self
+        let expired: Vec<(Arc<str>, usize, bool)> = self
             .pending
             .iter()
             .filter(|(_, reqs)| {
@@ -89,19 +92,19 @@ impl Batcher {
             .into_iter()
             .map(|key| {
                 let requests = self.pending.remove(&key).unwrap();
-                Batch { layer: key.0, k: key.1, requests }
+                Batch { layer: key.0, k: key.1, grad: key.2, requests }
             })
             .collect()
     }
 
     /// Flush everything (shutdown).
     pub fn flush_all(&mut self) -> Vec<Batch> {
-        let keys: Vec<(Arc<str>, usize)> =
+        let keys: Vec<(Arc<str>, usize, bool)> =
             self.pending.keys().cloned().collect();
         keys.into_iter()
             .map(|key| {
                 let requests = self.pending.remove(&key).unwrap();
-                Batch { layer: key.0, k: key.1, requests }
+                Batch { layer: key.0, k: key.1, grad: key.2, requests }
             })
             .collect()
     }
@@ -133,8 +136,13 @@ mod tests {
             b: vec![],
             h: vec![],
             tol: 1e-3,
+            grad_v: None,
             submitted: Instant::now(),
         }
+    }
+
+    fn grad_req(id: u64, layer: &str) -> Request {
+        Request { grad_v: Some(vec![1.0]), ..req(id, layer) }
     }
 
     #[test]
@@ -198,6 +206,20 @@ mod tests {
         assert_eq!(all.len(), 2);
         assert_eq!(b.pending_count(), 0);
         assert!(b.next_deadline().is_none());
+    }
+
+    #[test]
+    fn never_mixes_solve_and_grad_requests() {
+        let mut b = Batcher::new(2, Duration::from_millis(100));
+        assert!(b.push(10, req(1, "l")).is_none());
+        assert!(b.push(10, grad_req(2, "l")).is_none());
+        assert_eq!(b.pending_count(), 2);
+        let batch = b.push(10, grad_req(3, "l")).unwrap();
+        assert!(batch.grad);
+        assert!(batch.requests.iter().all(|r| r.is_grad()));
+        let batch = b.push(10, req(4, "l")).unwrap();
+        assert!(!batch.grad);
+        assert!(batch.requests.iter().all(|r| !r.is_grad()));
     }
 
     #[test]

@@ -18,8 +18,21 @@ pub struct Request {
     /// requested truncation tolerance (paper §4.3) — the router maps this
     /// to an iteration count k via the calibrated truncation table.
     pub tol: f64,
+    /// Adjoint seed v = dL/dx* (length n). `Some` turns this into a
+    /// *gradient* request: the worker answers with a
+    /// [`GradientResponse`] carrying vᵀ∂x*/∂θ for every θ — the full
+    /// Jacobian never crosses the channel. `None` is the classic solve
+    /// request ([`Response`], which ships ∂x/∂b).
+    pub grad_v: Option<Vec<f64>>,
     /// submission timestamp (end-to-end latency accounting)
     pub submitted: Instant,
+}
+
+impl Request {
+    /// True when this is an adjoint (gradient) request.
+    pub fn is_grad(&self) -> bool {
+        self.grad_v.is_some()
+    }
 }
 
 /// The solved layer + gradient.
@@ -43,6 +56,33 @@ pub struct Response {
     pub backend: &'static str,
 }
 
+/// The reply to a gradient ([`Request::grad_v`]) request: the solved
+/// layer plus vᵀ∂x*/∂θ for every parameter — O(n+m+p) floats on the
+/// wire where the solve path's Jacobian is O(n·d).
+#[derive(Clone, Debug)]
+pub struct GradientResponse {
+    /// Correlation id of the request this answers.
+    pub id: u64,
+    /// Primal minimizer x*.
+    pub x: Vec<f64>,
+    /// vᵀ∂x*/∂q (length n).
+    pub grad_q: Vec<f64>,
+    /// vᵀ∂x*/∂b (length p).
+    pub grad_b: Vec<f64>,
+    /// vᵀ∂x*/∂h (length m).
+    pub grad_h: Vec<f64>,
+    /// primal feasibility residual of x*
+    pub prim_residual: f64,
+    /// iterations the router selected (forward and adjoint both run k)
+    pub k_used: usize,
+    /// how many requests shared the executed batch
+    pub batch_size: usize,
+    /// end-to-end latency in seconds
+    pub latency: f64,
+    /// which backend served it ("native" | "native-sparse")
+    pub backend: &'static str,
+}
+
 /// Failure envelope (never panics across the channel boundary).
 #[derive(Clone, Debug)]
 pub struct Failure {
@@ -57,6 +97,8 @@ pub struct Failure {
 pub enum Reply {
     /// The request was served.
     Ok(Response),
+    /// A gradient request was served (adjoint path).
+    Grad(GradientResponse),
     /// The request failed (routing, validation, or execution).
     Err(Failure),
 }
@@ -66,6 +108,7 @@ impl Reply {
     pub fn id(&self) -> u64 {
         match self {
             Reply::Ok(r) => r.id,
+            Reply::Grad(g) => g.id,
             Reply::Err(f) => f.id,
         }
     }

@@ -25,6 +25,11 @@ pub struct Metrics {
     pub native_sparse_execs: AtomicU64,
     /// requests served by native launches (occupancy numerator)
     pub native_elems: AtomicU64,
+    /// adjoint (gradient) batched launches — one per gradient `Batch`;
+    /// these ship vᵀ∂x/∂θ instead of Jacobians over the channel
+    pub adjoint_execs: AtomicU64,
+    /// gradient requests served by adjoint launches
+    pub adjoint_elems: AtomicU64,
     /// slots wasted by padding partial batches to the artifact batch size
     pub padded_slots: AtomicU64,
     /// truncation-table online corrections
@@ -93,8 +98,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "req={} resp={} fail={} batches={} pjrt={} native={} \
-             sparse={} native_occ={:.1} pad={} bumps={} mean_lat={:.0}us \
-             p90<={}us",
+             sparse={} adjoint={} native_occ={:.1} pad={} bumps={} \
+             mean_lat={:.0}us p90<={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.failures.load(Ordering::Relaxed),
@@ -102,6 +107,7 @@ impl Metrics {
             self.pjrt_execs.load(Ordering::Relaxed),
             self.native_execs.load(Ordering::Relaxed),
             self.native_sparse_execs.load(Ordering::Relaxed),
+            self.adjoint_execs.load(Ordering::Relaxed),
             self.native_batch_occupancy(),
             self.padded_slots.load(Ordering::Relaxed),
             self.bumps.load(Ordering::Relaxed),

@@ -14,11 +14,17 @@
 //! per-request solve loop.
 
 use super::batcher::{Batch, Batcher};
-use super::messages::{Failure, Reply, Request, Response};
+use super::messages::{
+    Failure, GradientResponse, Reply, Request, Response,
+};
 use super::metrics::Metrics;
 use super::truncation::TruncationTable;
-use crate::altdiff::{DenseAltDiff, Options, Param, SparseAltDiff};
-use crate::batch::{BatchSolution, BatchedAltDiff, BatchedSparseAltDiff};
+use crate::altdiff::{
+    BackwardMode, DenseAltDiff, Options, Param, SparseAltDiff,
+};
+use crate::batch::{
+    BatchSolution, BatchVjpSolution, BatchedAltDiff, BatchedSparseAltDiff,
+};
 use crate::error::{AltDiffError, Result};
 use crate::prob::{Qp, SparseQp};
 use crate::runtime::Engine;
@@ -180,7 +186,7 @@ impl CoordinatorBuilder {
         let sol = solver.solve(&Options {
             tol: 1e-9,
             max_iter: self.calib_iters(),
-            jacobian: None,
+            backward: BackwardMode::None,
             trace: true,
             ..Default::default()
         });
@@ -245,7 +251,7 @@ impl CoordinatorBuilder {
         let sol = solver.solve(&Options {
             tol: 1e-9,
             max_iter: self.calib_iters(),
-            jacobian: None,
+            backward: BackwardMode::None,
             trace: true,
             ..Default::default()
         });
@@ -396,9 +402,15 @@ fn dispatcher_loop(
                             // request becomes a Failure reply instead of
                             // panicking the worker's batched launch (and
                             // taking its whole batch down with it)
+                            let bad_v = req
+                                .grad_v
+                                .as_ref()
+                                .map(|v| v.len() != layer.n)
+                                .unwrap_or(false);
                             if req.q.len() != layer.n
                                 || req.b.len() != layer.p
                                 || req.h.len() != layer.m
+                                || bad_v
                             {
                                 metrics.failures.fetch_add(
                                     1,
@@ -407,13 +419,16 @@ fn dispatcher_loop(
                                 let _ = reply_tx.send(Reply::Err(Failure {
                                     id: req.id,
                                     error: format!(
-                                        "bad θ dims for layer '{}': \
-                                         q={} b={} h={}, want n={} p={} \
-                                         m={}",
+                                        "bad θ/v dims for layer '{}': \
+                                         q={} b={} h={} v={:?}, want \
+                                         n={} p={} m={}",
                                         req.layer,
                                         req.q.len(),
                                         req.b.len(),
                                         req.h.len(),
+                                        req.grad_v
+                                            .as_ref()
+                                            .map(|v| v.len()),
                                         layer.n,
                                         layer.p,
                                         layer.m
@@ -497,6 +512,13 @@ fn worker_loop(
                     );
                     metrics.observe_latency(resp.latency);
                 }
+                Reply::Grad(resp) => {
+                    metrics.responses.fetch_add(
+                        1,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                    metrics.observe_latency(resp.latency);
+                }
                 Reply::Err(_) => {
                     metrics.failures.fetch_add(
                         1,
@@ -518,6 +540,12 @@ fn execute_batch(
 ) -> Vec<Reply> {
     let t0 = Instant::now();
     let reqs = &batch.requests;
+    // Gradient batches take the adjoint path: one batched forward-only
+    // launch plus one batched adjoint launch, always native (no compiled
+    // adjoint family exists — and none is needed, the backward is d-free).
+    if batch.grad {
+        return execute_grad_batch(layer, batch, metrics);
+    }
     // PJRT path (dense layers only): pick the smallest compiled batch
     // size >= len, pad.
     if let LayerEngine::Dense {
@@ -574,7 +602,7 @@ fn execute_batch(
     let opts = Options {
         tol: 0.0,
         max_iter: batch.k,
-        jacobian: Some(Param::B),
+        backward: BackwardMode::Forward(Param::B),
         rho: layer.rho,
         trace: false,
     };
@@ -620,16 +648,120 @@ fn execute_batch(
         .map(|(req, x)| {
             let prim = match &layer.engine {
                 LayerEngine::Dense { solver, .. } => {
-                    solver.qp.feasibility(&x).0
+                    solver.qp.feasibility_with(&x, &req.b, &req.h).0
                 }
                 LayerEngine::Sparse { solver, .. } => {
-                    solver.qp.feasibility(&x).0
+                    solver.qp.feasibility_with(&x, &req.b, &req.h).0
                 }
             };
             Reply::Ok(Response {
                 id: req.id,
                 x,
                 jx: jacs.next().map(|j| j.data).unwrap_or_default(),
+                prim_residual: prim,
+                k_used: batch.k,
+                batch_size: reqs.len(),
+                latency: req.submitted.elapsed().as_secs_f64(),
+                backend,
+            })
+        })
+        .collect()
+}
+
+/// Execute one adjoint (gradient) batch: forward-only batched solve,
+/// then ONE batched adjoint launch over the whole batch's dL/dx seeds.
+/// Jacobians never exist, so the replies are O(n+m+p) per request.
+fn execute_grad_batch(
+    layer: &RegisteredLayer,
+    batch: &Batch,
+    metrics: &Metrics,
+) -> Vec<Reply> {
+    let reqs = &batch.requests;
+    metrics
+        .adjoint_execs
+        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    metrics.adjoint_elems.fetch_add(
+        reqs.len() as u64,
+        std::sync::atomic::Ordering::Relaxed,
+    );
+    // tol=0: forward and adjoint both run exactly k iterations (the
+    // same routing contract as the solve path).
+    let opts = Options {
+        tol: 0.0,
+        max_iter: batch.k,
+        backward: BackwardMode::Adjoint,
+        rho: layer.rho,
+        trace: false,
+    };
+    let qs: Vec<&[f64]> = reqs.iter().map(|r| r.q.as_slice()).collect();
+    let bs: Vec<&[f64]> = reqs.iter().map(|r| r.b.as_slice()).collect();
+    let hs: Vec<&[f64]> = reqs.iter().map(|r| r.h.as_slice()).collect();
+    let vs: Vec<&[f64]> = reqs
+        .iter()
+        .map(|r| {
+            r.grad_v
+                .as_deref()
+                .expect("gradient batch member carries grad_v")
+        })
+        .collect();
+    let (out, backend): (BatchVjpSolution, &'static str) =
+        match &layer.engine {
+            LayerEngine::Dense { batched, .. } => (
+                batched.solve_batch_vjp(
+                    Some(&qs),
+                    Some(&bs),
+                    Some(&hs),
+                    &vs,
+                    &opts,
+                ),
+                "native",
+            ),
+            LayerEngine::Sparse { batched, .. } => {
+                match batched.try_solve_batch_vjp(
+                    Some(&qs),
+                    Some(&bs),
+                    Some(&hs),
+                    &vs,
+                    &opts,
+                ) {
+                    Ok(out) => (out, "native-sparse"),
+                    Err(e) => {
+                        return reqs
+                            .iter()
+                            .map(|req| {
+                                Reply::Err(Failure {
+                                    id: req.id,
+                                    error: format!(
+                                        "sparse adjoint solve failed: {e}"
+                                    ),
+                                })
+                            })
+                            .collect();
+                    }
+                }
+            }
+        };
+    let BatchVjpSolution { forward, vjp } = out;
+    let mut gq = vjp.grads_q.into_iter();
+    let mut gb = vjp.grads_b.into_iter();
+    let mut gh = vjp.grads_h.into_iter();
+    reqs.iter()
+        .zip(forward.xs)
+        .map(|(req, x)| {
+            let prim = match &layer.engine {
+                LayerEngine::Dense { solver, .. } => {
+                    solver.qp.feasibility_with(&x, &req.b, &req.h).0
+                }
+                LayerEngine::Sparse { solver, .. } => {
+                    solver.qp.feasibility_with(&x, &req.b, &req.h).0
+                }
+            };
+            Reply::Grad(GradientResponse {
+                id: req.id,
+                x,
+                grad_q: gq.next().expect("vjp arity"),
+                grad_b: gb.next().expect("vjp arity"),
+                grad_h: gh.next().expect("vjp arity"),
                 prim_residual: prim,
                 k_used: batch.k,
                 batch_size: reqs.len(),
@@ -743,6 +875,35 @@ impl Coordinator {
             b,
             h,
             tol,
+            grad_v: None,
+            submitted: Instant::now(),
+        }));
+        id
+    }
+
+    /// Submit an adjoint (gradient) request: solve the layer for θ and
+    /// reply with vᵀ∂x*/∂θ for every parameter ([`Reply::Grad`]) — the
+    /// training path. Jacobians never cross the channel.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_grad(
+        &mut self,
+        layer: &str,
+        q: Vec<f64>,
+        b: Vec<f64>,
+        h: Vec<f64>,
+        v: Vec<f64>,
+        tol: f64,
+    ) -> u64 {
+        self.next_id += 1;
+        let id = self.next_id;
+        let _ = self.tx.send(DispatchMsg::Req(Request {
+            id,
+            layer: layer.to_string(),
+            q,
+            b,
+            h,
+            tol,
+            grad_v: Some(v),
             submitted: Instant::now(),
         }));
         id

@@ -151,25 +151,37 @@ fn gemm_dispatch(
             .min(PAR_MAX_THREADS)
             .min(c.rows)
     };
-    if threads <= 1 {
-        gemm_span(
-            &mut c.data, 0, c.rows, alpha, a, b, rows_active, col_ranges,
-        );
-        return;
-    }
+    row_split_dispatch(c, threads, |cdata, r0, r1| {
+        gemm_span(cdata, r0, r1, alpha, a, b, rows_active, col_ranges)
+    });
+}
+
+/// Split C's rows into up to `threads` contiguous spans and run `f` on
+/// each span from a scoped worker thread (`f(span_data, r0, r1)` with
+/// `span_data` = rows `r0..r1` of C). `threads <= 1` runs inline. The
+/// shared row-split behind [`par_gemm_acc`], the masked gemm variants,
+/// and [`ata`].
+fn row_split_dispatch(
+    c: &mut Mat,
+    threads: usize,
+    f: impl Fn(&mut [f64], usize, usize) + Sync,
+) {
     let m = c.cols;
     let n = c.rows;
+    if threads <= 1 {
+        f(&mut c.data, 0, n);
+        return;
+    }
     let rows_per = n.div_ceil(threads);
     thread::scope(|s| {
         let mut rest: &mut [f64] = &mut c.data;
         let mut r0 = 0usize;
+        let f = &f;
         while r0 < n {
             let r1 = (r0 + rows_per).min(n);
             let (head, tail) = rest.split_at_mut((r1 - r0) * m);
             rest = tail;
-            s.spawn(move || {
-                gemm_span(head, r0, r1, alpha, a, b, rows_active, col_ranges)
-            });
+            s.spawn(move || f(head, r0, r1));
             r0 = r1;
         }
     });
@@ -230,25 +242,49 @@ pub fn axpy_cols(
     }
 }
 
-/// C = Aᵀ @ A (symmetric rank-k style; exploits symmetry: computes the
-/// upper triangle then mirrors). Used for the ρAᵀA/ρGᵀG Hessian terms.
-pub fn ata(a: &Mat) -> Mat {
-    let (r, n) = (a.rows, a.cols);
-    let mut c = Mat::zeros(n, n);
-    for kk in 0..r {
+/// One horizontal slab of the Aᵀ A upper triangle: rows `r0..r1` of C
+/// (stored in `cdata`). Per-entry accumulation is ascending `kk`, so any
+/// row split produces bitwise-identical results to the serial kernel.
+fn ata_span(cdata: &mut [f64], r0: usize, r1: usize, a: &Mat) {
+    let n = a.cols;
+    for kk in 0..a.rows {
         let row = &a.data[kk * n..(kk + 1) * n];
-        for i in 0..n {
+        for i in r0..r1 {
             let aik = row[i];
             if aik == 0.0 {
                 continue;
             }
-            let crow = &mut c.data[i * n + i..(i + 1) * n];
+            let crow = &mut cdata[(i - r0) * n + i..(i - r0) * n + n];
             let brow = &row[i..];
             for (cv, bv) in crow.iter_mut().zip(brow) {
                 *cv += aik * bv;
             }
         }
     }
+}
+
+/// C = Aᵀ @ A (symmetric rank-k style; exploits symmetry: computes the
+/// upper triangle then mirrors). Used for the ρAᵀA/ρGᵀG Hessian terms —
+/// the registration hot spot at large n — so the upper-triangle build is
+/// row-split across worker threads through the same dispatcher as
+/// [`par_gemm_acc`] once the kernel is big enough to pay for spawns.
+pub fn ata(a: &Mat) -> Mat {
+    let (r, n) = (a.rows, a.cols);
+    let mut c = Mat::zeros(n, n);
+    // ~half the gemm flop count (upper triangle only)
+    let flops = r * n * n / 2;
+    let threads = if flops < PAR_MIN_FLOPS || n < 2 {
+        1
+    } else {
+        thread::available_parallelism()
+            .map(|t| t.get())
+            .unwrap_or(1)
+            .min(PAR_MAX_THREADS)
+            .min(n)
+    };
+    row_split_dispatch(&mut c, threads, |cdata, r0, r1| {
+        ata_span(cdata, r0, r1, a)
+    });
     // mirror upper to lower
     for i in 0..n {
         for j in (i + 1)..n {
@@ -346,6 +382,25 @@ mod tests {
         let direct = ata(&a);
         let viag = gemm(&a.transpose(), &a);
         assert!(direct.max_abs_diff(&viag) < 1e-10);
+    }
+
+    #[test]
+    fn parallel_ata_matches_serial_bitwise() {
+        let mut rng = Pcg64::new(17);
+        // large enough to cross the parallel threshold (r·n²/2 ≥ 2^20)
+        let a = randmat(300, 120, &mut rng);
+        let par = ata(&a);
+        // serial reference: the span kernel over the full row range
+        let mut ser = Mat::zeros(120, 120);
+        ata_span(&mut ser.data, 0, 120, &a);
+        for i in 0..120 {
+            for j in (i + 1)..120 {
+                ser.data[j * 120 + i] = ser.data[i * 120 + j];
+            }
+        }
+        assert_eq!(par.data, ser.data, "row split changed results");
+        let viag = gemm(&a.transpose(), &a);
+        assert!(par.max_abs_diff(&viag) < 1e-9);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //!   check     validate the artifact directory (manifest + compile)
 //!   info      print build/layer-family information
 
-use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::coordinator::{Config, Coordinator, Reply};
 use altdiff::prob::dense_qp;
 use altdiff::runtime::{Engine, Manifest};
@@ -75,7 +75,7 @@ fn cmd_solve(args: &Args) {
     let t0 = Instant::now();
     let sol = solver.solve(&Options {
         tol,
-        jacobian: Some(Param::B),
+        backward: BackwardMode::Forward(Param::B),
         ..Default::default()
     });
     let t_solve = t0.elapsed().as_secs_f64();
@@ -129,6 +129,7 @@ fn cmd_serve(args: &Args) {
     for _ in 0..nreq {
         match coord.recv_timeout(Duration::from_secs(60)) {
             Some(Reply::Ok(_)) => ok += 1,
+            Some(Reply::Grad(_)) => ok += 1,
             Some(Reply::Err(f)) => eprintln!("fail: {}", f.error),
             None => break,
         }

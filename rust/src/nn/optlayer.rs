@@ -6,6 +6,14 @@
 //! OptNet baseline) — switchable so Table 6 can compare both inside the
 //! identical network.
 //!
+//! The Alt-Diff backend runs **reverse mode**: forward solves carry no
+//! Jacobian state (only the final slack, whose sign pattern gates the
+//! adjoint recursion), and `backward*` iterates the transposed
+//! recursion for the incoming dL/dx* — per-sample state is O(n) instead
+//! of the O(n·d) cached Jacobian, and a minibatch backward is ONE
+//! batched adjoint launch. The OptNet baseline keeps its cached
+//! Jacobians (KKT differentiation produces them as a byproduct).
+//!
 //! Layers come in two structural flavours sharing one interface: dense
 //! ([`OptLayer::new`], Table 2 structure) and sparse
 //! ([`OptLayer::new_sparse`], Table 4 structure — diagonal P, CSR
@@ -51,10 +59,15 @@ pub struct OptLayer {
     pub backend: OptBackend,
     /// Truncation tolerance (paper §4.3).
     pub tol: f64,
-    /// cached ∂x/∂q from the last forward (n×n)
+    /// cached ∂x/∂q from the last forward — OptNet backend only
     last_jac: Option<Mat>,
-    /// cached per-element ∂x/∂q from the last `forward_batch`
+    /// cached per-element ∂x/∂q from the last `forward_batch` — OptNet
+    /// backend only (the Alt-Diff backend never materializes Jacobians)
     last_jacs: Vec<Mat>,
+    /// final slack of the last Alt-Diff forward (adjoint gate pattern)
+    last_slack: Option<Vec<f64>>,
+    /// per-element final slacks from the last Alt-Diff `forward_batch`
+    last_slacks: Vec<Vec<f64>>,
     /// iterations used by the last forward (metrics; mean over the batch
     /// after `forward_batch`)
     pub last_iters: usize,
@@ -76,6 +89,8 @@ impl OptLayer {
             tol,
             last_jac: None,
             last_jacs: Vec::new(),
+            last_slack: None,
+            last_slacks: Vec::new(),
             last_iters: 0,
             last_batch_iters: Vec::new(),
         })
@@ -93,6 +108,8 @@ impl OptLayer {
             tol,
             last_jac: None,
             last_jacs: Vec::new(),
+            last_slack: None,
+            last_slacks: Vec::new(),
             last_iters: 0,
             last_batch_iters: Vec::new(),
         })
@@ -106,18 +123,21 @@ impl OptLayer {
         }
     }
 
-    /// Forward: solve with the supplied q, cache ∂x/∂q for backward.
+    /// Solver options for one layer evaluation (forward-only; gradients
+    /// are served by the adjoint backward for the Alt-Diff backend).
+    fn opts(&self) -> Options {
+        Options { tol: self.tol, max_iter: 20_000, ..Options::adjoint() }
+    }
+
+    /// Forward: solve with the supplied q. The Alt-Diff backend caches
+    /// only the final slack (the adjoint gate pattern, O(m)); the OptNet
+    /// baseline caches the full ∂x/∂q its KKT solve produces.
     pub fn forward(&mut self, q: &[f64]) -> Vec<f64> {
-        let opts = Options {
-            tol: self.tol,
-            max_iter: 20_000,
-            jacobian: Some(Param::Q),
-            ..Default::default()
-        };
-        let (x, jac, iters) = match (&self.solver, self.backend) {
+        let opts = self.opts();
+        let (x, slack, jac, iters) = match (&self.solver, self.backend) {
             (LayerSolver::Dense { solver, .. }, OptBackend::AltDiff) => {
                 let sol = solver.solve_with(Some(q), None, None, &opts);
-                (sol.x, sol.jacobian, sol.iters)
+                (sol.x, Some(sol.s), None, sol.iters)
             }
             (LayerSolver::Dense { solver, .. }, OptBackend::OptNetKkt) => {
                 let mut qp = solver.qp.clone();
@@ -125,44 +145,64 @@ impl OptLayer {
                 let (x, j, iters) =
                     baselines::optnet_layer(&qp, Param::Q, self.tol * 1e-3)
                         .expect("optnet layer");
-                (x, Some(j), iters)
+                (x, None, Some(j), iters)
             }
             (LayerSolver::Sparse { solver, .. }, _) => {
                 let sol = solver.solve_with(Some(q), None, None, &opts);
-                (sol.x, sol.jacobian, sol.iters)
+                (sol.x, Some(sol.s), None, sol.iters)
             }
         };
         self.last_iters = iters;
+        self.last_slack = slack;
         self.last_jac = jac;
         x
     }
 
-    /// Backward: dL/dq = Jᵀ · dL/dx.
+    /// Backward: dL/dq = (∂x*/∂q)ᵀ · dL/dx. Alt-Diff backend: one
+    /// adjoint iteration against the cached slack gates — the Jacobian
+    /// is never formed. OptNet backend: gemv against its cached KKT
+    /// Jacobian.
     pub fn backward(&self, gx: &[f64]) -> Vec<f64> {
-        let j = self
-            .last_jac
+        if let Some(j) = self.last_jac.as_ref() {
+            return gemv_t(j, gx);
+        }
+        let slack = self
+            .last_slack
             .as_ref()
             .expect("backward before forward");
-        gemv_t(j, gx)
+        let opts = self.opts();
+        match &self.solver {
+            LayerSolver::Dense { solver, .. } => {
+                solver.vjp(slack, gx, &opts).grad_q
+            }
+            LayerSolver::Sparse { solver, .. } => {
+                solver.vjp(slack, gx, &opts).grad_q
+            }
+        }
     }
 
     /// Minibatch forward: solve B instances of the layer in one batched
     /// launch ([`BatchedAltDiff`] for dense layers,
     /// [`BatchedSparseAltDiff`] for sparse ones; the OptNet baseline has
     /// no batched KKT path and falls back to a per-sample loop).
-    /// Caches one Jacobian per element for [`Self::backward_element`].
+    /// The Alt-Diff backend caches one slack vector per element (O(B·m)
+    /// total — no per-element Jacobians) for the adjoint backward.
     pub fn forward_batch(&mut self, qs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         assert!(!qs.is_empty(), "empty minibatch");
         if qs.len() == 1 || self.backend == OptBackend::OptNetKkt {
             // per-sample path (exact single-sample semantics)
             let mut xs = Vec::with_capacity(qs.len());
             self.last_jacs = Vec::with_capacity(qs.len());
+            self.last_slacks = Vec::with_capacity(qs.len());
             self.last_batch_iters = Vec::with_capacity(qs.len());
             for q in qs {
                 let x = self.forward(q);
-                self.last_jacs.push(
-                    self.last_jac.clone().expect("forward caches jac"),
-                );
+                if let Some(j) = self.last_jac.clone() {
+                    self.last_jacs.push(j);
+                }
+                if let Some(s) = self.last_slack.clone() {
+                    self.last_slacks.push(s);
+                }
                 self.last_batch_iters.push(self.last_iters);
                 xs.push(x);
             }
@@ -170,12 +210,7 @@ impl OptLayer {
         }
         let qrefs: Vec<&[f64]> =
             qs.iter().map(|q| q.as_slice()).collect();
-        let opts = Options {
-            tol: self.tol,
-            max_iter: 20_000,
-            jacobian: Some(Param::Q),
-            ..Default::default()
-        };
+        let opts = self.opts();
         let sol = match &self.solver {
             LayerSolver::Dense { batched, .. } => batched
                 .as_ref()
@@ -187,26 +222,69 @@ impl OptLayer {
         };
         self.last_batch_iters = sol.iters.clone();
         self.last_iters = sol.iters.iter().sum::<usize>() / sol.iters.len();
-        self.last_jacs = sol.jacobians.expect("jacobian requested");
-        self.last_jac = None; // single-sample cache is now stale
+        self.last_slacks = sol.ss;
+        self.last_jacs = Vec::new();
+        self.last_jac = None; // single-sample caches are now stale
+        self.last_slack = None;
         sol.xs
     }
 
-    /// Backward for minibatch element `e`: dL/dq_e = J_eᵀ · dL/dx_e.
+    /// Backward for minibatch element `e`: dL/dq_e = (∂x*/∂q_e)ᵀ dL/dx_e
+    /// (one sequential adjoint run for the Alt-Diff backend; prefer
+    /// [`Self::backward_batch`], which batches the whole minibatch's
+    /// adjoints into one launch).
     pub fn backward_element(&self, e: usize, gx: &[f64]) -> Vec<f64> {
-        let j = self
-            .last_jacs
+        if let Some(j) = self.last_jacs.get(e) {
+            return gemv_t(j, gx);
+        }
+        let slack = self
+            .last_slacks
             .get(e)
             .expect("backward_element before forward_batch");
-        gemv_t(j, gx)
+        let opts = self.opts();
+        match &self.solver {
+            LayerSolver::Dense { solver, .. } => {
+                solver.vjp(slack, gx, &opts).grad_q
+            }
+            LayerSolver::Sparse { solver, .. } => {
+                solver.vjp(slack, gx, &opts).grad_q
+            }
+        }
     }
 
     /// Backward for a whole minibatch (pairs with [`Self::forward_batch`]).
+    /// Alt-Diff backend: ONE batched adjoint launch — B incoming
+    /// gradients advance as a single panel through the transposed
+    /// recursion. OptNet backend: per-element gemvs against the cached
+    /// KKT Jacobians.
     pub fn backward_batch(&self, gxs: &[Vec<f64>]) -> Vec<Vec<f64>> {
-        gxs.iter()
-            .enumerate()
-            .map(|(e, gx)| self.backward_element(e, gx))
-            .collect()
+        if !self.last_jacs.is_empty() {
+            return gxs
+                .iter()
+                .enumerate()
+                .map(|(e, gx)| self.backward_element(e, gx))
+                .collect();
+        }
+        assert_eq!(
+            gxs.len(),
+            self.last_slacks.len(),
+            "backward_batch arity (did forward_batch run?)"
+        );
+        let slack_refs: Vec<&[f64]> =
+            self.last_slacks.iter().map(|s| s.as_slice()).collect();
+        let gx_refs: Vec<&[f64]> =
+            gxs.iter().map(|g| g.as_slice()).collect();
+        let opts = self.opts();
+        match &self.solver {
+            LayerSolver::Dense { batched, .. } => batched
+                .as_ref()
+                .expect("alt-diff backend has engine")
+                .batch_vjp(&slack_refs, &gx_refs, &opts)
+                .grads_q,
+            LayerSolver::Sparse { batched, .. } => {
+                batched.batch_vjp(&slack_refs, &gx_refs, &opts).grads_q
+            }
+        }
     }
 }
 

@@ -46,11 +46,24 @@ impl Qp {
 
     /// (‖Ax−b‖, max(Gx−h)_+) — primal feasibility metrics.
     pub fn feasibility(&self, x: &[f64]) -> (f64, f64) {
-        let eq = norm2(&sub_vec(&gemv(&self.a, x), &self.b));
+        self.feasibility_with(x, &self.b, &self.h)
+    }
+
+    /// [`Self::feasibility`] against caller-supplied right-hand sides —
+    /// the per-request variant the server uses (requests may override
+    /// the registered b/h, and the residual must be judged against the
+    /// θ the solve actually ran with).
+    pub fn feasibility_with(
+        &self,
+        x: &[f64],
+        b: &[f64],
+        h: &[f64],
+    ) -> (f64, f64) {
+        let eq = norm2(&sub_vec(&gemv(&self.a, x), b));
         let viol = gemv(&self.g, x)
             .iter()
-            .zip(&self.h)
-            .map(|(gx, h)| (gx - h).max(0.0))
+            .zip(h)
+            .map(|(gx, hi)| (gx - hi).max(0.0))
             .fold(0.0, f64::max);
         (eq, viol)
     }
@@ -110,13 +123,24 @@ impl SparseQp {
     /// (‖Ax−b‖, max(Gx−h)_+) — primal feasibility metrics, the sparse
     /// sibling of [`Qp::feasibility`].
     pub fn feasibility(&self, x: &[f64]) -> (f64, f64) {
-        let eq = norm2(&sub_vec(&self.a.spmv(x), &self.b));
+        self.feasibility_with(x, &self.b, &self.h)
+    }
+
+    /// [`Self::feasibility`] against caller-supplied right-hand sides
+    /// (the per-request variant, like [`Qp::feasibility_with`]).
+    pub fn feasibility_with(
+        &self,
+        x: &[f64],
+        b: &[f64],
+        h: &[f64],
+    ) -> (f64, f64) {
+        let eq = norm2(&sub_vec(&self.a.spmv(x), b));
         let viol = self
             .g
             .spmv(x)
             .iter()
-            .zip(&self.h)
-            .map(|(gx, h)| (gx - h).max(0.0))
+            .zip(h)
+            .map(|(gx, hi)| (gx - hi).max(0.0))
             .fold(0.0, f64::max);
         (eq, viol)
     }

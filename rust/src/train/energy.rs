@@ -10,8 +10,13 @@
 //!
 //! Backends: Alt-Diff at several truncation tolerances vs the simulated
 //! CvxpyLayer pipeline — the Fig. 2 comparison.
+//!
+//! The Alt-Diff backend trains in **reverse mode**: forward solves are
+//! Jacobian-free, and each optimizer step backpropagates through the
+//! layer with the adjoint recursion (one batched adjoint launch per
+//! minibatch) — dL/dq costs O(k·n²) instead of O(k·n²·d).
 
-use crate::altdiff::{DenseAltDiff, Options, Param};
+use crate::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use crate::baselines::conic;
 use crate::batch::BatchedAltDiff;
 use crate::data::EnergyTrace;
@@ -83,27 +88,25 @@ pub struct EnergyReport {
     pub total_time: f64,
 }
 
-/// Solve the scheduling QP for demand `d` and (optionally) its Jacobian
-/// w.r.t. q. Returns (x*, layer) where layer carries the cached factor.
+/// Solve the scheduling QP for demand `d`, forward-only (gradients are
+/// served by the adjoint backward, which needs only the final slack).
 fn schedule(
     layer: &DenseAltDiff,
     demand: &[f64],
     tol: f64,
-    want_jac: bool,
-) -> (Vec<f64>, Option<crate::linalg::Mat>, usize) {
+) -> crate::altdiff::Solution {
     let q: Vec<f64> = demand.iter().map(|&d| -2.0 * d).collect();
-    let sol = layer.solve_with(
-        Some(&q),
-        None,
-        None,
-        &Options {
-            tol,
-            max_iter: 20_000,
-            jacobian: want_jac.then_some(Param::Q),
-            ..Default::default()
-        },
-    );
-    (sol.x, sol.jacobian, sol.iters)
+    layer.solve_with(Some(&q), None, None, &sched_opts(tol))
+}
+
+/// Forward-only options for one scheduling solve at tolerance `tol`.
+fn sched_opts(tol: f64) -> Options {
+    Options {
+        tol,
+        max_iter: 20_000,
+        backward: BackwardMode::None,
+        ..Default::default()
+    }
 }
 
 /// Train the forecaster through the scheduling layer.
@@ -183,7 +186,7 @@ pub fn train_energy(cfg: &EnergyConfig) -> EnergyReport {
                     &Options {
                         tol: 1e-6,
                         max_iter: 20_000,
-                        jacobian: None,
+                        backward: BackwardMode::None,
                         ..Default::default()
                     },
                 );
@@ -191,24 +194,38 @@ pub fn train_energy(cfg: &EnergyConfig) -> EnergyReport {
                     Some(&qp_),
                     None,
                     None,
-                    &Options {
-                        tol: *tol,
-                        max_iter: 20_000,
-                        jacobian: Some(Param::Q),
-                        ..Default::default()
-                    },
+                    &sched_opts(*tol),
                 );
-                // pass 2: per-sample chain rule, gradients averaged
-                net.zero_grad();
-                let inv = 1.0 / chunk.len() as f64;
+                // pass 2a: decision losses + incoming gradients dL/dx*
+                let mut gxs: Vec<Vec<f64>> =
+                    Vec::with_capacity(chunk.len());
                 for j in 0..chunk.len() {
                     let (loss, gx) =
                         mse_loss(&sol_pred.xs[j], &sol_true.xs[j]);
                     epoch_loss += loss;
                     iter_sum += sol_pred.iters[j];
                     iter_count += 1;
-                    let gq = sol_pred.vjp(j, &gx);
-                    let gpred: Vec<f64> = gq
+                    gxs.push(gx);
+                }
+                // pass 2b: ONE batched adjoint launch for the whole
+                // chunk — no Jacobian ever exists
+                let slack_refs = sol_pred.slack_refs();
+                let gx_refs: Vec<&[f64]> =
+                    gxs.iter().map(|g| g.as_slice()).collect();
+                let vjp = batched.batch_vjp(
+                    &slack_refs,
+                    &gx_refs,
+                    &Options {
+                        tol: *tol,
+                        max_iter: 20_000,
+                        ..Options::adjoint()
+                    },
+                );
+                // pass 2c: per-sample chain rule, gradients averaged
+                net.zero_grad();
+                let inv = 1.0 / chunk.len() as f64;
+                for j in 0..chunk.len() {
+                    let gpred: Vec<f64> = vjp.grads_q[j]
                         .iter()
                         .map(|&g| -2.0 * g * 100.0 * inv)
                         .collect();
@@ -235,17 +252,16 @@ pub fn train_energy(cfg: &EnergyConfig) -> EnergyReport {
                 pred.iter().map(|&v| (v + 0.5) * 100.0).collect();
 
             // decision loss: x*(pred) vs x*(true demand)
-            let (x_star_true, _, _) =
-                schedule(&layer, target_d, 1e-6, false);
-            let (x_star_pred, jac, iters, gq): (
+            let x_star_true = schedule(&layer, target_d, 1e-6).x;
+            let (x_star_pred, slack, iters, gq): (
                 Vec<f64>,
-                Option<crate::linalg::Mat>,
+                Option<Vec<f64>>,
                 usize,
                 Option<Vec<f64>>,
             ) = match cfg.backend {
                 EnergyBackend::AltDiff(tol) => {
-                    let (x, j, it) = schedule(&layer, &pred_d, tol, true);
-                    (x, j, it, None)
+                    let sol = schedule(&layer, &pred_d, tol);
+                    (sol.x, Some(sol.s), sol.iters, None)
                 }
                 EnergyBackend::CvxpyLayerSim => {
                     let mut qp2 = qp.clone();
@@ -257,9 +273,6 @@ pub fn train_energy(cfg: &EnergyConfig) -> EnergyReport {
                     let res =
                         conic::cvxpylayer_sim(&qp2, Param::Q, 1e-5)
                             .expect("conic");
-                    let (loss_grad_unused, _) =
-                        mse_loss(&res.x, &x_star_true);
-                    let _ = loss_grad_unused;
                     let (_, gx) = mse_loss(&res.x, &x_star_true);
                     let gq = gemv_t(&res.jacobian, &gx);
                     (res.x, None, res.iters, Some(gq))
@@ -270,11 +283,20 @@ pub fn train_energy(cfg: &EnergyConfig) -> EnergyReport {
             iter_sum += iters;
             iter_count += 1;
 
-            // chain rule to the forecast: q = -2 d̂ → dL/dd̂ = -2 Jᵀ gx,
-            // then through the output denormalization (×100).
-            let gq = match gq {
-                Some(g) => g,
-                None => gemv_t(jac.as_ref().unwrap(), &gx),
+            // chain rule to the forecast: q = -2 d̂ → dL/dd̂ = -2 Jᵀ gx
+            // via the adjoint backward (Alt-Diff) or the baseline's own
+            // Jacobian, then through the output denormalization (×100).
+            let gq = match (gq, slack, cfg.backend) {
+                (Some(g), _, _) => g,
+                (None, Some(s), EnergyBackend::AltDiff(tol)) => {
+                    let opts = Options {
+                        tol,
+                        max_iter: 20_000,
+                        ..Options::adjoint()
+                    };
+                    layer.vjp(&s, &gx, &opts).grad_q
+                }
+                _ => unreachable!("cvxpylayer computes gq inline"),
             };
             let gpred: Vec<f64> =
                 gq.iter().map(|&g| -2.0 * g * 100.0).collect();

@@ -5,6 +5,11 @@
 //! optimization layer (input = q, output = x*) → linear head → softmax.
 //! The only difference between the compared models is the optimization
 //! layer's differentiation backend: Alt-Diff vs OptNet (IPM + KKT).
+//!
+//! With the Alt-Diff backend the layer trains in reverse mode: each
+//! minibatch backward is ONE batched adjoint launch
+//! ([`OptLayer::backward_batch`]) — per-element Jacobians are never
+//! stored, so layer memory is O(B·n) rather than O(B·n²).
 
 use crate::data::{digits, Digits};
 use crate::nn::{
@@ -172,22 +177,31 @@ pub fn train_mnist(cfg: &MnistConfig) -> MnistReport {
                 iters_sum += it;
                 iters_n += 1;
             }
-            // pass 2: per-sample head + backward, gradients averaged over
-            // the minibatch. The feature MLP caches activations per
-            // sample, so each backward re-runs its (cheap) forward first.
+            // pass 2a: per-sample head forward/backward, collecting the
+            // incoming layer gradients dL/dx* (averaged over the chunk)
             model.zero_grad();
             let inv = 1.0 / chunk.len() as f64;
+            let mut gxs: Vec<Vec<f64>> =
+                Vec::with_capacity(chunk.len());
             for (j, &i) in chunk.iter().enumerate() {
                 let s = &train[i];
                 let logits = model.head.forward(&xs[j]);
                 let (loss, glog) = softmax_nll(&logits, s.label);
                 loss_sum += loss;
-                let _ = model.features.forward(&s.pixels);
                 let glog: Vec<f64> =
                     glog.iter().map(|g| g * inv).collect();
-                let gx = model.head.backward(&glog);
-                let gq = model.optlayer.backward_element(j, &gx);
-                model.features.backward(&gq);
+                gxs.push(model.head.backward(&glog));
+            }
+            // pass 2b: ONE batched adjoint launch through the
+            // optimization layer — no per-element Jacobians exist
+            let gqs = model.optlayer.backward_batch(&gxs);
+            // pass 2c: per-sample feature backward. The feature MLP
+            // caches activations per sample, so each backward re-runs
+            // its (cheap) forward first.
+            for (j, &i) in chunk.iter().enumerate() {
+                let s = &train[i];
+                let _ = model.features.forward(&s.pixels);
+                model.features.backward(&gqs[j]);
             }
             model.step(&mut opt);
         }

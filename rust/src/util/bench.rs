@@ -273,6 +273,28 @@ impl JsonReport {
         std::fs::write(&path, self.render())?;
         Ok(path.display().to_string())
     }
+
+    /// Write `BENCH_<name>.json` at the repository root (found by
+    /// walking up from the working directory to the first ancestor
+    /// containing `.git`; falls back to the working directory). These
+    /// are the *committed* perf baselines — benches write them on full
+    /// (non-smoke) runs so the perf trajectory can be diffed across
+    /// commits; smoke runs must not clobber them.
+    pub fn write_repo_root(&self) -> std::io::Result<String> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            if dir.join(".git").exists() {
+                break;
+            }
+            if !dir.pop() {
+                dir = std::env::current_dir()?;
+                break;
+            }
+        }
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.render())?;
+        Ok(path.display().to_string())
+    }
 }
 
 /// Format seconds with sensible precision (paper prints seconds).

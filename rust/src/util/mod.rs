@@ -5,5 +5,5 @@ pub mod bench;
 pub mod rng;
 
 pub use args::Args;
-pub use bench::{Bencher, JsonReport, Stats, Table};
+pub use bench::{fmt_secs, Bencher, JsonReport, Stats, Table};
 pub use rng::Pcg64;

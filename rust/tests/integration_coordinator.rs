@@ -44,6 +44,7 @@ fn native_roundtrip_single_request() {
             assert!(r.latency >= 0.0);
         }
         Reply::Err(f) => panic!("unexpected failure: {}", f.error),
+        Reply::Grad(_) => panic!("unexpected grad reply"),
     }
 }
 
@@ -53,7 +54,7 @@ fn unknown_layer_yields_failure_not_hang() {
     c.submit("nope", vec![0.0; 8], vec![0.0; 2], vec![0.0; 4], 1e-3);
     match c.recv_timeout(Duration::from_secs(10)).expect("reply") {
         Reply::Err(f) => assert!(f.error.contains("unknown layer")),
-        Reply::Ok(_) => panic!("expected failure"),
+        _ => panic!("expected failure"),
     }
 }
 
@@ -66,7 +67,7 @@ fn malformed_theta_dims_yield_failure_not_worker_panic() {
     c.submit("layer0", vec![0.0; 3], vec![0.0; 2], vec![0.0; 4], 1e-3);
     match c.recv_timeout(Duration::from_secs(10)).expect("reply") {
         Reply::Err(f) => assert!(f.error.contains("dims"), "{}", f.error),
-        Reply::Ok(_) => panic!("expected failure"),
+        _ => panic!("expected failure"),
     }
     // and the coordinator still serves well-formed requests afterwards
     let qp = dense_qp(8, 4, 2, 9);
@@ -74,6 +75,7 @@ fn malformed_theta_dims_yield_failure_not_worker_panic() {
     match c.recv_timeout(Duration::from_secs(30)).expect("reply") {
         Reply::Ok(r) => assert_eq!(r.x.len(), 8),
         Reply::Err(f) => panic!("healthy request failed: {}", f.error),
+        Reply::Grad(_) => panic!("unexpected grad reply"),
     }
 }
 
@@ -146,6 +148,7 @@ fn native_fallback_is_one_batched_launch_per_batch() {
                 assert!(ok.x.iter().all(|v| v.is_finite()));
             }
             Reply::Err(f) => panic!("failure: {}", f.error),
+            Reply::Grad(_) => panic!("unexpected grad reply"),
         }
     }
     let ord = std::sync::atomic::Ordering::Relaxed;
@@ -204,6 +207,7 @@ fn sparse_layer_batches_run_on_the_sparse_engine() {
                 assert!((sum - 1.0).abs() < 0.2, "sum {sum}");
             }
             Reply::Err(f) => panic!("failure: {}", f.error),
+            Reply::Grad(_) => panic!("unexpected grad reply"),
         }
     }
     let ord = std::sync::atomic::Ordering::Relaxed;
@@ -246,6 +250,7 @@ fn dense_and_sparse_layers_coexist() {
                 backends.insert(r.backend);
             }
             Reply::Err(f) => panic!("failure: {}", f.error),
+            Reply::Grad(_) => panic!("unexpected grad reply"),
         }
     }
     assert!(backends.contains("native"));
@@ -259,12 +264,12 @@ fn looser_tolerance_routes_to_fewer_iterations() {
     c.submit("layer0", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-1);
     let loose = match c.recv_timeout(Duration::from_secs(30)).unwrap() {
         Reply::Ok(r) => r.k_used,
-        Reply::Err(f) => panic!("{}", f.error),
+        _ => panic!("expected solve reply"),
     };
     c.submit("layer0", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-4);
     let tight = match c.recv_timeout(Duration::from_secs(30)).unwrap() {
         Reply::Ok(r) => r.k_used,
-        Reply::Err(f) => panic!("{}", f.error),
+        _ => panic!("expected solve reply"),
     };
     assert!(
         loose <= tight,
@@ -336,7 +341,7 @@ fn pjrt_and_native_agree_through_coordinator() {
         c.submit("l", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-3);
         match c.recv_timeout(Duration::from_secs(30)).unwrap() {
             Reply::Ok(r) => r.x,
-            Reply::Err(f) => panic!("{}", f.error),
+            _ => panic!("expected solve reply"),
         }
     };
     let mut cp = mk(Some(dir));
@@ -350,6 +355,126 @@ fn pjrt_and_native_agree_through_coordinator() {
             xp[i],
             xn[i]
         );
+    }
+}
+
+#[test]
+fn gradient_requests_round_trip_without_jacobians() {
+    use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options};
+    let qp = dense_qp(10, 5, 2, 9);
+    let mut c = native_coordinator(10, 5, 2);
+    let v: Vec<f64> = (0..10).map(|i| 1.0 - 0.1 * i as f64).collect();
+    c.submit_grad(
+        "layer0",
+        qp.q.clone(),
+        qp.b.clone(),
+        qp.h.clone(),
+        v.clone(),
+        1e-4,
+    );
+    let reply = c.recv_timeout(Duration::from_secs(30)).expect("reply");
+    let (g, k_used) = match reply {
+        Reply::Grad(g) => {
+            assert_eq!(g.x.len(), 10);
+            assert_eq!(g.grad_q.len(), 10);
+            assert_eq!(g.grad_b.len(), 2);
+            assert_eq!(g.grad_h.len(), 5);
+            assert_eq!(g.backend, "native");
+            assert!(g.grad_q.iter().all(|x| x.is_finite()));
+            let k = g.k_used;
+            (g, k)
+        }
+        Reply::Ok(_) => panic!("expected grad reply, got solve"),
+        Reply::Err(f) => panic!("grad request failed: {}", f.error),
+    };
+    // parity with a direct engine call at the same fixed k
+    let solver = DenseAltDiff::new(qp, 1.0).unwrap();
+    let opts = Options {
+        tol: 0.0,
+        max_iter: k_used,
+        backward: BackwardMode::Adjoint,
+        ..Default::default()
+    };
+    let direct = solver.solve_vjp(None, None, None, &v, &opts);
+    for i in 0..10 {
+        assert!(
+            (g.grad_q[i] - direct.vjp.grad_q[i]).abs() < 1e-8,
+            "grad_q[{i}]: served {} direct {}",
+            g.grad_q[i],
+            direct.vjp.grad_q[i]
+        );
+    }
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    assert!(c.metrics.adjoint_execs.load(ord) >= 1);
+    assert_eq!(c.metrics.adjoint_elems.load(ord), 1);
+}
+
+#[test]
+fn grad_and_solve_requests_share_the_server_but_not_batches() {
+    let qp = dense_qp(10, 5, 2, 9);
+    let mut c = Coordinator::builder(Config {
+        workers: 1,
+        max_batch: 4,
+        batch_deadline: Duration::from_millis(5),
+        artifacts: None,
+        ..Default::default()
+    })
+    .register("layer0", qp.clone(), 1.0)
+    .unwrap()
+    .start();
+    let v = vec![1.0; 10];
+    for _ in 0..4 {
+        c.submit("layer0", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-2);
+        c.submit_grad(
+            "layer0",
+            qp.q.clone(),
+            qp.b.clone(),
+            qp.h.clone(),
+            v.clone(),
+            1e-2,
+        );
+    }
+    let mut solves = 0;
+    let mut grads = 0;
+    for _ in 0..8 {
+        match c.recv_timeout(Duration::from_secs(30)).expect("reply") {
+            Reply::Ok(r) => {
+                solves += 1;
+                // solve replies still carry the Jacobian
+                assert_eq!(r.jx.len(), 10 * 2);
+            }
+            Reply::Grad(g) => {
+                grads += 1;
+                // grad replies never carry one — O(n+m+p) floats only
+                assert_eq!(
+                    g.grad_q.len() + g.grad_b.len() + g.grad_h.len(),
+                    10 + 2 + 5
+                );
+            }
+            Reply::Err(f) => panic!("failure: {}", f.error),
+        }
+    }
+    assert_eq!((solves, grads), (4, 4));
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    assert!(c.metrics.adjoint_execs.load(ord) >= 1);
+    assert_eq!(c.metrics.adjoint_elems.load(ord), 4);
+}
+
+#[test]
+fn malformed_grad_seed_yields_failure() {
+    let mut c = native_coordinator(8, 4, 2);
+    // v has the wrong length: must come back as a Failure reply
+    c.submit_grad(
+        "layer0",
+        vec![0.0; 8],
+        vec![0.0; 2],
+        vec![0.0; 4],
+        vec![1.0; 3],
+        1e-3,
+    );
+    match c.recv_timeout(Duration::from_secs(10)).expect("reply") {
+        Reply::Err(f) => assert!(f.error.contains("dims"), "{}", f.error),
+        _ => panic!("expected failure"),
     }
 }
 

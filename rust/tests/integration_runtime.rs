@@ -3,7 +3,7 @@
 //! that proves L1 (Pallas) → L2 (JAX scan) → AOT HLO → L3 (rust PJRT)
 //! compose into the same algorithm as the native implementation.
 
-use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::prob::dense_qp;
 use altdiff::runtime::{Engine, Manifest};
 use std::path::{Path, PathBuf};
@@ -42,7 +42,7 @@ fn parity_case(n: usize, m: usize, p: usize, k: usize) {
     let sol = native.solve(&Options {
         tol: 0.0,
         max_iter: k,
-        jacobian: Some(Param::B),
+        backward: BackwardMode::Forward(Param::B),
         ..Default::default()
     });
     assert_eq!(sol.iters, k);
@@ -132,7 +132,7 @@ fn pjrt_batched_variant_matches_per_request() {
         &Options {
             tol: 0.0,
             max_iter: k,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         },
     );

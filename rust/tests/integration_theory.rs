@@ -1,7 +1,7 @@
 //! Cross-module validation of the paper's two theorems and the complexity
 //! story, at sizes larger than the unit tests use.
 
-use altdiff::altdiff::{DenseAltDiff, Options, Param, SparseAltDiff};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param, SparseAltDiff};
 use altdiff::baselines::{self, conic};
 use altdiff::linalg::{cosine, norm2, sub_vec};
 use altdiff::prob::{dense_qp, sparse_qp, sparsemax_qp};
@@ -17,7 +17,7 @@ fn thm42_altdiff_converges_to_kkt_gradient() {
         let sol = solver.solve(&Options {
             tol: 1e-11,
             max_iter: 200_000,
-            jacobian: Some(param),
+            backward: BackwardMode::Forward(param),
             ..Default::default()
         });
         let cos = cosine(&sol.jacobian.unwrap().data, &jkkt.data);
@@ -34,7 +34,7 @@ fn thm43_truncation_error_is_same_order() {
     let exact = solver.solve(&Options {
         tol: 1e-12,
         max_iter: 200_000,
-        jacobian: Some(Param::B),
+        backward: BackwardMode::Forward(Param::B),
         ..Default::default()
     });
     let jstar = exact.jacobian.as_ref().unwrap();
@@ -43,7 +43,7 @@ fn thm43_truncation_error_is_same_order() {
         let sol = solver.solve(&Options {
             tol,
             max_iter: 200_000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         });
         let xerr = norm2(&sub_vec(&sol.x, &exact.x)).max(1e-14);
@@ -67,7 +67,7 @@ fn multi_engine_gradient_agreement() {
         .solve(&Options {
             tol: 1e-11,
             max_iter: 100_000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         })
         .jacobian
@@ -87,7 +87,7 @@ fn multi_engine_gradient_agreement() {
         .solve(&Options {
             tol: 1e-11,
             max_iter: 100_000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         })
         .jacobian
@@ -97,7 +97,7 @@ fn multi_engine_gradient_agreement() {
         .solve(&Options {
             tol: 1e-11,
             max_iter: 100_000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         })
         .jacobian
@@ -112,7 +112,7 @@ fn sparse_engines_match_dense_at_scale() {
     let opts = Options {
         tol: 1e-10,
         max_iter: 100_000,
-        jacobian: Some(Param::B),
+        backward: BackwardMode::Forward(Param::B),
         ..Default::default()
     };
     // SM path
@@ -149,7 +149,7 @@ fn infeasible_problem_does_not_panic() {
     let sol = solver.solve(&Options {
         tol: 1e-8,
         max_iter: 500,
-        jacobian: Some(Param::B),
+        backward: BackwardMode::Forward(Param::B),
         ..Default::default()
     });
     // ADMM on an infeasible program: x may stabilize (the least-squares
@@ -171,7 +171,7 @@ fn singular_p_is_handled_by_penalty_terms() {
     let sol = solver.solve(&Options {
         tol: 1e-8,
         max_iter: 50_000,
-        jacobian: None,
+        backward: BackwardMode::None,
         ..Default::default()
     });
     let (eq, viol) = qp.feasibility(&sol.x);

@@ -4,7 +4,7 @@
 //! parameter, fixed-iteration (server) semantics, and mixed per-element
 //! convergence speeds (the truncation mask).
 
-use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::batch::BatchedAltDiff;
 use altdiff::prob::dense_qp;
 use altdiff::util::Pcg64;
@@ -73,7 +73,7 @@ fn prop_batched_matches_dense_elementwise() {
         let opts = Options {
             tol: 1e-11,
             max_iter: 100_000,
-            jacobian: Some(param),
+            backward: BackwardMode::Forward(param),
             ..Default::default()
         };
         let th = Thetas::random(&qp, bsz, &mut rng);
@@ -123,7 +123,7 @@ fn prop_batched_fixed_k_matches_dense() {
         let opts = Options {
             tol: 0.0,
             max_iter: k,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         };
         let sb =
@@ -165,7 +165,7 @@ fn prop_batched_mixed_convergence_speeds() {
     let opts = Options {
         tol: 1e-6,
         max_iter: 50_000,
-        jacobian: Some(Param::Q),
+        backward: BackwardMode::Forward(Param::Q),
         ..Default::default()
     };
     let sb = batched.solve_batch(Some(&qr), None, None, &opts);

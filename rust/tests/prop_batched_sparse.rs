@@ -6,7 +6,7 @@
 //! semantics, and mixed per-element convergence speeds (the truncation
 //! mask).
 
-use altdiff::altdiff::{Options, Param, SparseAltDiff};
+use altdiff::altdiff::{BackwardMode, Options, Param, SparseAltDiff};
 use altdiff::batch::BatchedSparseAltDiff;
 use altdiff::prob::{sparse_qp, sparsemax_qp, SparseQp};
 use altdiff::sparse::Csr;
@@ -63,7 +63,7 @@ fn prop_batched_sparse_matches_sequential_elementwise() {
         let opts = Options {
             tol: 1e-11,
             max_iter: 60_000,
-            jacobian: Some(param),
+            backward: BackwardMode::Forward(param),
             ..Default::default()
         };
         let qs = random_qs(&sq.q, bsz, &mut rng);
@@ -114,7 +114,7 @@ fn prop_batched_sparse_fixed_k_matches_sequential() {
             let opts = Options {
                 tol: 0.0,
                 max_iter: k,
-                jacobian: Some(Param::B),
+                backward: BackwardMode::Forward(Param::B),
                 ..Default::default()
             };
             let sb = batched.solve_batch(Some(&qr), None, None, &opts);
@@ -161,7 +161,7 @@ fn prop_batched_sparse_mixed_convergence_speeds() {
         let opts = Options {
             tol: 1e-6,
             max_iter: 60_000,
-            jacobian: Some(Param::Q),
+            backward: BackwardMode::Forward(Param::Q),
             ..Default::default()
         };
         let sb = batched.solve_batch(Some(&qr), None, None, &opts);
@@ -228,7 +228,7 @@ fn prop_engine_picks_agree_on_equivalent_problems() {
     let opts = Options {
         tol: 1e-11,
         max_iter: 80_000,
-        jacobian: Some(Param::B),
+        backward: BackwardMode::Forward(Param::B),
         ..Default::default()
     };
     let qs: Vec<Vec<f64>> = (0..3)
@@ -269,7 +269,7 @@ fn prop_broadcast_equals_explicit_replication() {
     let opts = Options {
         tol: 1e-10,
         max_iter: 40_000,
-        jacobian: Some(Param::H),
+        backward: BackwardMode::Forward(Param::H),
         ..Default::default()
     };
     let qs: Vec<Vec<f64>> = vec![sq.q.clone(); 4];

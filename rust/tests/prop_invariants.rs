@@ -1,7 +1,7 @@
 //! Property-based tests (in-repo generator loops — proptest is not
 //! available offline; seeds are explicit so failures reproduce).
 
-use altdiff::altdiff::{DenseAltDiff, Options, Param};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::coordinator::{Batcher, Request, TruncationTable};
 use altdiff::linalg::{gemv, Chol, Lu, Mat};
 use altdiff::prob::dense_qp;
@@ -101,7 +101,7 @@ fn prop_admm_slack_nonnegative_and_feasible() {
         let sol = solver.solve(&Options {
             tol: 1e-9,
             max_iter: 100_000,
-            jacobian: None,
+            backward: BackwardMode::None,
             ..Default::default()
         });
         assert!(sol.s.iter().all(|&v| v >= 0.0), "case {case}");
@@ -126,7 +126,7 @@ fn prop_jacobian_directional_derivative() {
         let opts = Options {
             tol: 1e-11,
             max_iter: 100_000,
-            jacobian: Some(Param::B),
+            backward: BackwardMode::Forward(Param::B),
             ..Default::default()
         };
         let sol = solver.solve(&opts);
@@ -137,7 +137,7 @@ fn prop_jacobian_directional_derivative() {
             qp.b.iter().zip(&dir).map(|(b, d)| b + eps * d).collect();
         let bm: Vec<f64> =
             qp.b.iter().zip(&dir).map(|(b, d)| b - eps * d).collect();
-        let fopts = Options { jacobian: None, ..opts };
+        let fopts = Options { backward: BackwardMode::None, ..opts };
         let xp = solver.solve_with(None, Some(&bp), None, &fopts).x;
         let xm = solver.solve_with(None, Some(&bm), None, &fopts).x;
         for i in 0..n {
@@ -175,6 +175,7 @@ fn prop_batcher_conservation() {
                 b: vec![],
                 h: vec![],
                 tol: 1e-3,
+                grad_v: None,
                 submitted: Instant::now(),
             };
             if let Some(batch) = b.push(k, req) {

@@ -1,0 +1,348 @@
+//! Adjoint-correctness property tests: reverse mode must agree with
+//! full-Jacobian-then-`gemv_t` across all four engines.
+//!
+//! Both modes converge to the same limit (vᵀJ* = vᵀ(I−M)⁻¹C =
+//! ((I−Mᵀ)⁻¹Pᵀv)ᵀC), so at tight truncation tolerances the gradients
+//! pin to 1e-8 — on the dense sequential/batched engines, the sparse
+//! Sherman–Morrison path, and the blocked-CG path; under ragged batches
+//! and mixed per-element convergence; and against a finite-difference
+//! directional derivative of the solver itself.
+
+use altdiff::altdiff::{
+    BackwardMode, DenseAltDiff, Options, Param, SparseAltDiff,
+};
+use altdiff::batch::{BatchedAltDiff, BatchedSparseAltDiff};
+use altdiff::prob::{dense_qp, sparse_qp, sparsemax_qp};
+use altdiff::util::rng::Pcg64;
+
+fn tight(backward: BackwardMode) -> Options {
+    Options {
+        tol: 1e-12,
+        max_iter: 200_000,
+        backward,
+        ..Default::default()
+    }
+}
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn dense_adjoint_matches_full_jacobian_every_param() {
+    let solver = DenseAltDiff::new(dense_qp(14, 7, 3, 11), 1.0).unwrap();
+    let mut rng = Pcg64::new(1);
+    let v = rng.normal_vec(14);
+    // one adjoint backward yields all three gradients at once
+    let out = solver.solve_vjp(
+        None,
+        None,
+        None,
+        &v,
+        &tight(BackwardMode::Adjoint),
+    );
+    assert!(out.solution.jacobian.is_none());
+    for param in [Param::Q, Param::B, Param::H] {
+        let sol = solver.solve(&tight(BackwardMode::Forward(param)));
+        let want = sol.vjp(&v);
+        let got = out.vjp.grad(param);
+        assert!(
+            max_abs_diff(got, &want) < 1e-8,
+            "{param:?}: adjoint {got:?} vs forward-mode {want:?}"
+        );
+    }
+}
+
+#[test]
+fn dense_adjoint_matches_finite_difference_direction() {
+    let solver = DenseAltDiff::new(dense_qp(12, 6, 3, 21), 1.0).unwrap();
+    let mut rng = Pcg64::new(2);
+    let v = rng.normal_vec(12);
+    let out = solver.solve_vjp(
+        None,
+        None,
+        None,
+        &v,
+        &tight(BackwardMode::Adjoint),
+    );
+    let fopts = tight(BackwardMode::None);
+    let eps = 1e-6;
+    // directional derivative of L(θ) = vᵀx*(θ) along a random δ, per θ
+    let dirs_q = rng.normal_vec(12);
+    let dirs_b = rng.normal_vec(3);
+    let dirs_h = rng.normal_vec(6);
+    let dot = |a: &[f64], b: &[f64]| -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    };
+    // q
+    let qp: Vec<f64> = solver
+        .qp
+        .q
+        .iter()
+        .zip(&dirs_q)
+        .map(|(x, d)| x + eps * d)
+        .collect();
+    let qm: Vec<f64> = solver
+        .qp
+        .q
+        .iter()
+        .zip(&dirs_q)
+        .map(|(x, d)| x - eps * d)
+        .collect();
+    let xp = solver.solve_with(Some(&qp), None, None, &fopts).x;
+    let xm = solver.solve_with(Some(&qm), None, None, &fopts).x;
+    let fd = (dot(&v, &xp) - dot(&v, &xm)) / (2.0 * eps);
+    let an = dot(&out.vjp.grad_q, &dirs_q);
+    assert!((fd - an).abs() < 1e-5 * (1.0 + fd.abs()), "q: {fd} vs {an}");
+    // b
+    let bp: Vec<f64> = solver
+        .qp
+        .b
+        .iter()
+        .zip(&dirs_b)
+        .map(|(x, d)| x + eps * d)
+        .collect();
+    let bm: Vec<f64> = solver
+        .qp
+        .b
+        .iter()
+        .zip(&dirs_b)
+        .map(|(x, d)| x - eps * d)
+        .collect();
+    let xp = solver.solve_with(None, Some(&bp), None, &fopts).x;
+    let xm = solver.solve_with(None, Some(&bm), None, &fopts).x;
+    let fd = (dot(&v, &xp) - dot(&v, &xm)) / (2.0 * eps);
+    let an = dot(&out.vjp.grad_b, &dirs_b);
+    assert!((fd - an).abs() < 1e-5 * (1.0 + fd.abs()), "b: {fd} vs {an}");
+    // h
+    let hp: Vec<f64> = solver
+        .qp
+        .h
+        .iter()
+        .zip(&dirs_h)
+        .map(|(x, d)| x + eps * d)
+        .collect();
+    let hm: Vec<f64> = solver
+        .qp
+        .h
+        .iter()
+        .zip(&dirs_h)
+        .map(|(x, d)| x - eps * d)
+        .collect();
+    let xp = solver.solve_with(None, None, Some(&hp), &fopts).x;
+    let xm = solver.solve_with(None, None, Some(&hm), &fopts).x;
+    let fd = (dot(&v, &xp) - dot(&v, &xm)) / (2.0 * eps);
+    let an = dot(&out.vjp.grad_h, &dirs_h);
+    assert!((fd - an).abs() < 1e-5 * (1.0 + fd.abs()), "h: {fd} vs {an}");
+}
+
+#[test]
+fn sparse_adjoint_matches_full_jacobian_both_engines() {
+    // Sherman–Morrison (sparsemax) and blocked-CG structures
+    for (sq, label) in [
+        (sparsemax_qp(24, 3), "sherman-morrison"),
+        (sparse_qp(16, 7, 3, 0.3, 4), "cg"),
+    ] {
+        let solver = SparseAltDiff::new(sq, 1.0).unwrap();
+        let mut rng = Pcg64::new(5);
+        let v = rng.normal_vec(solver.qp.n());
+        let out = solver.solve_vjp(
+            None,
+            None,
+            None,
+            &v,
+            &tight(BackwardMode::Adjoint),
+        );
+        for param in [Param::Q, Param::B, Param::H] {
+            let sol = solver.solve(&tight(BackwardMode::Forward(param)));
+            let want = sol.vjp(&v);
+            let got = out.vjp.grad(param);
+            assert!(
+                max_abs_diff(got, &want) < 1e-8,
+                "{label}/{param:?} adjoint vs forward-mode"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_dense_adjoint_matches_sequential_and_forward_mode() {
+    let dense = DenseAltDiff::new(dense_qp(12, 6, 3, 31), 1.0).unwrap();
+    let batched = BatchedAltDiff::from_dense(&dense);
+    let mut rng = Pcg64::new(6);
+    // ragged batch: 3 elements, θ perturbed per element so iteration
+    // counts differ (mixed convergence under per-element truncation)
+    let qs: Vec<Vec<f64>> = (0..3)
+        .map(|e| {
+            dense
+                .qp
+                .q
+                .iter()
+                .map(|&x| x * (1.0 + 0.3 * e as f64) + 0.05 * rng.normal())
+                .collect()
+        })
+        .collect();
+    let vs: Vec<Vec<f64>> = (0..3).map(|_| rng.normal_vec(12)).collect();
+    let qr: Vec<&[f64]> = qs.iter().map(|q| q.as_slice()).collect();
+    let vr: Vec<&[f64]> = vs.iter().map(|x| x.as_slice()).collect();
+    let out = batched.solve_batch_vjp(
+        Some(&qr),
+        None,
+        None,
+        &vr,
+        &tight(BackwardMode::Adjoint),
+    );
+    assert!(out.forward.jacobians.is_none());
+    let fwd = batched.solve_batch(
+        Some(&qr),
+        None,
+        None,
+        &tight(BackwardMode::Forward(Param::Q)),
+    );
+    for e in 0..3 {
+        // vs the sequential adjoint
+        let seq = dense.solve_vjp(
+            Some(&qs[e]),
+            None,
+            None,
+            &vs[e],
+            &tight(BackwardMode::Adjoint),
+        );
+        assert!(
+            max_abs_diff(&out.vjp.grads_q[e], &seq.vjp.grad_q) < 1e-8,
+            "element {e}: batched vs sequential grad_q"
+        );
+        assert!(
+            max_abs_diff(&out.vjp.grads_b[e], &seq.vjp.grad_b) < 1e-8,
+            "element {e}: batched vs sequential grad_b"
+        );
+        assert!(
+            max_abs_diff(&out.vjp.grads_h[e], &seq.vjp.grad_h) < 1e-8,
+            "element {e}: batched vs sequential grad_h"
+        );
+        // vs full-Jacobian-then-gemv_t
+        let want = fwd.vjp(e, &vs[e]);
+        assert!(
+            max_abs_diff(&out.vjp.grads_q[e], &want) < 1e-8,
+            "element {e}: batched adjoint vs forward-mode"
+        );
+    }
+}
+
+#[test]
+fn batched_sparse_adjoint_matches_sequential_both_engines() {
+    for (sq, label) in [
+        (sparsemax_qp(20, 7), "sherman-morrison"),
+        (sparse_qp(14, 6, 3, 0.3, 8), "cg"),
+    ] {
+        let seq = SparseAltDiff::new(sq.clone(), 1.0).unwrap();
+        let batched = BatchedSparseAltDiff::from_sparse(&seq);
+        let n = sq.n();
+        let mut rng = Pcg64::new(9);
+        let qs: Vec<Vec<f64>> = (0..3)
+            .map(|e| {
+                sq.q.iter()
+                    .map(|&x| {
+                        x * (1.0 + 0.2 * e as f64) + 0.03 * rng.normal()
+                    })
+                    .collect()
+            })
+            .collect();
+        let vs: Vec<Vec<f64>> =
+            (0..3).map(|_| rng.normal_vec(n)).collect();
+        let qr: Vec<&[f64]> = qs.iter().map(|q| q.as_slice()).collect();
+        let vr: Vec<&[f64]> = vs.iter().map(|x| x.as_slice()).collect();
+        let out = batched.solve_batch_vjp(
+            Some(&qr),
+            None,
+            None,
+            &vr,
+            &tight(BackwardMode::Adjoint),
+        );
+        let fwd = batched.solve_batch(
+            Some(&qr),
+            None,
+            None,
+            &tight(BackwardMode::Forward(Param::Q)),
+        );
+        for e in 0..3 {
+            let s = seq.solve_vjp(
+                Some(&qs[e]),
+                None,
+                None,
+                &vs[e],
+                &tight(BackwardMode::Adjoint),
+            );
+            assert!(
+                max_abs_diff(&out.vjp.grads_q[e], &s.vjp.grad_q) < 1e-8,
+                "{label} element {e}: batched vs sequential grad_q"
+            );
+            assert!(
+                max_abs_diff(&out.vjp.grads_b[e], &s.vjp.grad_b) < 1e-8,
+                "{label} element {e}: batched vs sequential grad_b"
+            );
+            assert!(
+                max_abs_diff(&out.vjp.grads_h[e], &s.vjp.grad_h) < 1e-8,
+                "{label} element {e}: batched vs sequential grad_h"
+            );
+            let want = fwd.vjp(e, &vs[e]);
+            assert!(
+                max_abs_diff(&out.vjp.grads_q[e], &want) < 1e-8,
+                "{label} element {e}: batched adjoint vs forward-mode"
+            );
+        }
+    }
+}
+
+#[test]
+fn fixed_k_adjoint_runs_exactly_k_and_stays_finite() {
+    // serving contract: tol = 0 → forward AND adjoint run exactly k
+    let dense = DenseAltDiff::new(dense_qp(10, 5, 2, 41), 1.0).unwrap();
+    let batched = BatchedAltDiff::from_dense(&dense);
+    let opts = Options {
+        tol: 0.0,
+        max_iter: 17,
+        backward: BackwardMode::Adjoint,
+        ..Default::default()
+    };
+    let v = vec![1.0; 10];
+    let out = dense.solve_vjp(None, None, None, &v, &opts);
+    assert_eq!(out.solution.iters, 17);
+    assert_eq!(out.vjp.iters, 17);
+    assert!(out.vjp.grad_q.iter().all(|g| g.is_finite()));
+    let q2: Vec<f64> = dense.qp.q.iter().map(|&x| 0.5 * x).collect();
+    let qr: Vec<&[f64]> = vec![&dense.qp.q, &q2];
+    let vr: Vec<&[f64]> = vec![&v, &v];
+    let ob = batched.solve_batch_vjp(Some(&qr), None, None, &vr, &opts);
+    assert_eq!(ob.forward.iters, vec![17, 17]);
+    assert_eq!(ob.vjp.iters, vec![17, 17]);
+}
+
+#[test]
+fn adjoint_truncation_error_shrinks_with_tolerance() {
+    // Thm 4.3 analogue for the transposed recursion: looser tolerance →
+    // larger (but bounded) gradient error against the converged limit.
+    let solver = DenseAltDiff::new(dense_qp(16, 8, 3, 51), 1.0).unwrap();
+    let mut rng = Pcg64::new(12);
+    let v = rng.normal_vec(16);
+    let exact = solver
+        .solve_vjp(None, None, None, &v, &tight(BackwardMode::Adjoint))
+        .vjp;
+    let mut errs = Vec::new();
+    for tol in [1e-2, 1e-4, 1e-8] {
+        let o = Options {
+            tol,
+            max_iter: 200_000,
+            backward: BackwardMode::Adjoint,
+            ..Default::default()
+        };
+        let g = solver.solve_vjp(None, None, None, &v, &o).vjp;
+        errs.push(max_abs_diff(&g.grad_q, &exact.grad_q));
+    }
+    assert!(errs[0] >= errs[1] && errs[1] >= errs[2], "{errs:?}");
+    assert!(errs[2] < 1e-6, "{errs:?}");
+}
