@@ -6,12 +6,46 @@
 //! Run: cargo run --release --example serve [--requests 200] [--workers 2]
 //!      (needs `make artifacts` for the compiled path; otherwise serves
 //!       natively and says so)
+//!
+//! Network mode: `--net` serves the same coordinator over a loopback
+//! TCP socket and drives it with pipelined wire clients
+//! ([`altdiff::net`]) instead of in-process submits — the full
+//! service path: codec → event loop → admission control → batcher.
 
 use altdiff::coordinator::{Config, Coordinator, Reply};
+use altdiff::net::{Client, LoadgenOpts, NetConfig, NetServer};
 use altdiff::prob::dense_qp;
 use altdiff::util::{Args, Pcg64};
 use std::path::Path;
 use std::time::{Duration, Instant};
+
+/// `--net`: the same two-layer coordinator, served over loopback TCP
+/// and driven by the pipelined load generator.
+fn run_net(coord: Coordinator, nreq: usize) {
+    let server =
+        NetServer::bind("127.0.0.1:0", coord, NetConfig::default())
+            .expect("bind loopback");
+    let addr = server.local_addr().expect("local addr");
+    println!("serving on {addr}");
+    let handle = std::thread::spawn(move || server.run());
+    let report = altdiff::net::run_loadgen(
+        addr,
+        &LoadgenOpts {
+            requests: nreq,
+            clients: 4,
+            window: 8,
+            grad_share: 0.25,
+            ..Default::default()
+        },
+    )
+    .expect("loadgen");
+    println!("\n{}", report.render());
+    let mut admin = Client::connect(addr).expect("admin connect");
+    let stats = admin.stop_server().expect("stop");
+    let coord = handle.join().expect("server thread");
+    drop(coord);
+    println!("\nserver metrics at stop:\n{stats}");
+}
 
 fn main() {
     let args = Args::parse();
@@ -51,6 +85,10 @@ fn main() {
     // measurement below is steady-state serving, not XLA compile time
     let ready = coord.wait_ready(Duration::from_secs(120));
     println!("workers ready: {ready}");
+
+    if args.get_bool("net", false) {
+        return run_net(coord, nreq);
+    }
 
     // synthetic request trace: mixed layers, mixed tolerances
     let mut rng = Pcg64::new(0);

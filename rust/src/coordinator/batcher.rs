@@ -10,6 +10,11 @@
 //! Layer names are interned as `Arc<str>` on first sight, so the
 //! per-push hot path pays one map lookup and a refcount bump instead of
 //! a heap `String` clone per request.
+//!
+//! [`Batcher::pending_count`] backs the `queue_depth` gauge
+//! ([`super::Metrics::queue_depth`], refreshed by the dispatcher each
+//! loop) — the backlog signal the network front end's admission budget
+//! protects (see `net::server`).
 
 use super::messages::Request;
 use std::collections::{BTreeMap, BTreeSet};

@@ -83,13 +83,63 @@ pub struct GradientResponse {
     pub backend: &'static str,
 }
 
+/// Machine-readable failure classification — clients (in particular the
+/// wire protocol in [`crate::net`]) branch on this, never on the
+/// human-readable message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// The request was malformed or unroutable (unknown layer, wrong θ
+    /// dimensions, bad adjoint seed). Retrying unchanged will fail again.
+    Invalid,
+    /// Admission control shed the request: the serving front end was at
+    /// its in-flight budget. Retrying after backoff is expected to work.
+    Overloaded,
+    /// The request was still queued when the coordinator (or the network
+    /// front end) began a graceful shutdown.
+    Shutdown,
+    /// The solver/engine failed while executing the request's batch.
+    Exec,
+}
+
+impl FailureKind {
+    /// Stable wire tag (see `net::proto`).
+    pub fn code(self) -> u8 {
+        match self {
+            FailureKind::Invalid => 0,
+            FailureKind::Overloaded => 1,
+            FailureKind::Shutdown => 2,
+            FailureKind::Exec => 3,
+        }
+    }
+
+    /// Inverse of [`FailureKind::code`]; `None` on an unknown tag.
+    pub fn from_code(c: u8) -> Option<Self> {
+        match c {
+            0 => Some(FailureKind::Invalid),
+            1 => Some(FailureKind::Overloaded),
+            2 => Some(FailureKind::Shutdown),
+            3 => Some(FailureKind::Exec),
+            _ => None,
+        }
+    }
+}
+
 /// Failure envelope (never panics across the channel boundary).
 #[derive(Clone, Debug)]
 pub struct Failure {
     /// Correlation id of the failed request.
     pub id: u64,
+    /// Machine-readable classification (retryable or not).
+    pub kind: FailureKind,
     /// Human-readable failure description.
     pub error: String,
+}
+
+impl Failure {
+    /// Convenience constructor.
+    pub fn new(id: u64, kind: FailureKind, error: impl Into<String>) -> Self {
+        Failure { id, kind, error: error.into() }
+    }
 }
 
 /// What workers send back.
@@ -111,5 +161,29 @@ impl Reply {
             Reply::Grad(g) => g.id,
             Reply::Err(f) => f.id,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_kind_codes_round_trip() {
+        for k in [
+            FailureKind::Invalid,
+            FailureKind::Overloaded,
+            FailureKind::Shutdown,
+            FailureKind::Exec,
+        ] {
+            assert_eq!(FailureKind::from_code(k.code()), Some(k));
+        }
+        assert_eq!(FailureKind::from_code(200), None);
+    }
+
+    #[test]
+    fn reply_id_covers_every_arm() {
+        let f = Failure::new(7, FailureKind::Overloaded, "busy");
+        assert_eq!(Reply::Err(f).id(), 7);
     }
 }

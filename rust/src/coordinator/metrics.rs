@@ -34,6 +34,15 @@ pub struct Metrics {
     pub padded_slots: AtomicU64,
     /// truncation-table online corrections
     pub bumps: AtomicU64,
+    /// requests shed by admission control (the network front end replies
+    /// `Failure::Overloaded` instead of queueing past its budget)
+    pub shed: AtomicU64,
+    /// gauge: requests currently waiting in the dynamic batcher (the
+    /// dispatcher refreshes it every loop iteration)
+    pub queue_depth: AtomicU64,
+    /// gauge: requests admitted by the network front end and not yet
+    /// answered (the serving in-flight budget's numerator)
+    pub net_inflight: AtomicU64,
     /// summed end-to-end latency (µs) over all responses
     pub total_latency_us: AtomicU64,
     lat_hist: [AtomicU64; 8],
@@ -94,6 +103,143 @@ impl Metrics {
         self.native_elems.load(Ordering::Relaxed) as f64 / execs as f64
     }
 
+    /// Prometheus-style text rendering of every counter, the two queue
+    /// gauges, and the latency histogram (cumulative `le` buckets per the
+    /// exposition format). Served over the wire by the stats op of
+    /// [`crate::net`] and printed by `serve` on exit.
+    pub fn render_text(&self) -> String {
+        let c = |out: &mut String, name: &str, help: &str, v: u64| {
+            out.push_str(&format!(
+                "# HELP altdiff_{name} {help}\n\
+                 # TYPE altdiff_{name} counter\n\
+                 altdiff_{name} {v}\n"
+            ));
+        };
+        let g = |out: &mut String, name: &str, help: &str, v: u64| {
+            out.push_str(&format!(
+                "# HELP altdiff_{name} {help}\n\
+                 # TYPE altdiff_{name} gauge\n\
+                 altdiff_{name} {v}\n"
+            ));
+        };
+        let ld = Ordering::Relaxed;
+        let mut out = String::new();
+        c(
+            &mut out,
+            "requests_total",
+            "requests accepted by the dispatcher",
+            self.requests.load(ld),
+        );
+        c(
+            &mut out,
+            "responses_total",
+            "successful replies sent",
+            self.responses.load(ld),
+        );
+        c(
+            &mut out,
+            "failures_total",
+            "failure replies sent",
+            self.failures.load(ld),
+        );
+        c(
+            &mut out,
+            "shed_total",
+            "requests shed by admission control (Overloaded)",
+            self.shed.load(ld),
+        );
+        c(
+            &mut out,
+            "batches_total",
+            "batches dispatched to workers",
+            self.batches.load(ld),
+        );
+        c(
+            &mut out,
+            "pjrt_execs_total",
+            "compiled-artifact executions",
+            self.pjrt_execs.load(ld),
+        );
+        c(
+            &mut out,
+            "native_execs_total",
+            "native batched launches",
+            self.native_execs.load(ld),
+        );
+        c(
+            &mut out,
+            "native_sparse_execs_total",
+            "native launches executed by the sparse batch engine",
+            self.native_sparse_execs.load(ld),
+        );
+        c(
+            &mut out,
+            "native_elems_total",
+            "requests served by native launches",
+            self.native_elems.load(ld),
+        );
+        c(
+            &mut out,
+            "adjoint_execs_total",
+            "adjoint (gradient) batched launches",
+            self.adjoint_execs.load(ld),
+        );
+        c(
+            &mut out,
+            "adjoint_elems_total",
+            "gradient requests served by adjoint launches",
+            self.adjoint_elems.load(ld),
+        );
+        c(
+            &mut out,
+            "padded_slots_total",
+            "slots wasted padding partial batches",
+            self.padded_slots.load(ld),
+        );
+        c(
+            &mut out,
+            "truncation_bumps_total",
+            "truncation-table online corrections",
+            self.bumps.load(ld),
+        );
+        g(
+            &mut out,
+            "queue_depth",
+            "requests waiting in the dynamic batcher",
+            self.queue_depth.load(ld),
+        );
+        g(
+            &mut out,
+            "net_inflight",
+            "network requests admitted and not yet answered",
+            self.net_inflight.load(ld),
+        );
+        // histogram: Prometheus buckets are cumulative
+        out.push_str(
+            "# HELP altdiff_latency_us end-to-end reply latency \
+             (microseconds)\n\
+             # TYPE altdiff_latency_us histogram\n",
+        );
+        let mut acc = 0u64;
+        for (i, &ub) in LAT_BUCKETS_US.iter().enumerate() {
+            acc += self.lat_hist[i].load(ld);
+            let le = if ub == u64::MAX {
+                "+Inf".to_string()
+            } else {
+                ub.to_string()
+            };
+            out.push_str(&format!(
+                "altdiff_latency_us_bucket{{le=\"{le}\"}} {acc}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "altdiff_latency_us_sum {}\n",
+            self.total_latency_us.load(ld)
+        ));
+        out.push_str(&format!("altdiff_latency_us_count {acc}\n"));
+        out
+    }
+
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
@@ -143,6 +289,34 @@ mod tests {
         assert_eq!(m.latency_quantile_us(0.9), 0);
         assert!(m.summary().contains("req=0"));
         assert_eq!(m.native_batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn render_text_is_prometheus_shaped() {
+        let m = Metrics::new();
+        m.requests.store(5, Ordering::Relaxed);
+        m.responses.store(4, Ordering::Relaxed);
+        m.shed.store(1, Ordering::Relaxed);
+        m.queue_depth.store(3, Ordering::Relaxed);
+        m.observe_latency(60e-6); // bucket le=100
+        m.observe_latency(400e-6); // bucket le=500
+        let text = m.render_text();
+        assert!(text.contains("altdiff_requests_total 5"));
+        assert!(text.contains("altdiff_responses_total 4"));
+        assert!(text.contains("altdiff_shed_total 1"));
+        assert!(text.contains("# TYPE altdiff_queue_depth gauge"));
+        assert!(text.contains("altdiff_queue_depth 3"));
+        // cumulative buckets: le=50 has 0, le=100 has 1, le=500 has 2,
+        // and +Inf carries the total
+        assert!(text.contains("altdiff_latency_us_bucket{le=\"50\"} 0"));
+        assert!(text.contains("altdiff_latency_us_bucket{le=\"100\"} 1"));
+        assert!(text.contains("altdiff_latency_us_bucket{le=\"500\"} 2"));
+        assert!(text.contains("altdiff_latency_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("altdiff_latency_us_count 2"));
+        // every HELP line has a TYPE line
+        let helps = text.matches("# HELP").count();
+        let types = text.matches("# TYPE").count();
+        assert_eq!(helps, types);
     }
 
     #[test]

@@ -12,7 +12,9 @@ pub mod server;
 pub mod truncation;
 
 pub use batcher::{Batch, Batcher};
-pub use messages::{Failure, GradientResponse, Reply, Request, Response};
+pub use messages::{
+    Failure, FailureKind, GradientResponse, Reply, Request, Response,
+};
 pub use metrics::Metrics;
 pub use server::{
     Config, Coordinator, CoordinatorBuilder, LayerEngine, RegisteredLayer,

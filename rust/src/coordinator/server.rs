@@ -15,7 +15,7 @@
 
 use super::batcher::{Batch, Batcher};
 use super::messages::{
-    Failure, GradientResponse, Reply, Request, Response,
+    Failure, FailureKind, GradientResponse, Reply, Request, Response,
 };
 use super::metrics::Metrics;
 use super::truncation::TruncationTable;
@@ -131,6 +131,7 @@ pub struct Coordinator {
     ready: Arc<std::sync::atomic::AtomicUsize>,
     n_workers: usize,
     next_id: u64,
+    layer_dims: Vec<(String, usize, usize, usize)>,
 }
 
 /// Builder: register layers, then start.
@@ -275,6 +276,11 @@ impl CoordinatorBuilder {
     /// Start dispatcher + workers.
     pub fn start(self) -> Coordinator {
         let metrics = Arc::new(Metrics::new());
+        let layer_dims: Vec<(String, usize, usize, usize)> = self
+            .layers
+            .values()
+            .map(|l| (l.name.clone(), l.n, l.m, l.p))
+            .collect();
         let (tx, dispatch_rx) = channel::<DispatchMsg>();
         let (reply_tx, reply_rx) = channel::<Reply>();
 
@@ -332,6 +338,7 @@ impl CoordinatorBuilder {
             ready,
             n_workers,
             next_id: 0,
+            layer_dims,
         }
     }
 }
@@ -391,6 +398,7 @@ fn dispatcher_loop(
                             );
                             let _ = reply_tx.send(Reply::Err(Failure {
                                 id: req.id,
+                                kind: FailureKind::Invalid,
                                 error: format!(
                                     "unknown layer '{}'",
                                     req.layer
@@ -418,6 +426,7 @@ fn dispatcher_loop(
                                 );
                                 let _ = reply_tx.send(Reply::Err(Failure {
                                     id: req.id,
+                                    kind: FailureKind::Invalid,
                                     error: format!(
                                         "bad θ/v dims for layer '{}': \
                                          q={} b={} h={} v={:?}, want \
@@ -452,13 +461,37 @@ fn dispatcher_loop(
         for b in batcher.flush_expired(Instant::now()) {
             send_batch(b, &mut rr);
         }
+        metrics.queue_depth.store(
+            batcher.pending_count() as u64,
+            std::sync::atomic::Ordering::Relaxed,
+        );
         if shutdown {
             break;
         }
     }
+    // Graceful drain. Everything already routed is flushed to the
+    // workers and executes normally; anything that raced into the
+    // channel *after* the shutdown marker gets an explicit
+    // `Failure::Shutdown` reply — reply channels are never silently
+    // dropped.
     for b in batcher.flush_all() {
         send_batch(b, &mut rr);
     }
+    while let Ok(msg) = rx.try_recv() {
+        if let DispatchMsg::Req(req) = msg {
+            metrics
+                .failures
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let _ = reply_tx.send(Reply::Err(Failure {
+                id: req.id,
+                kind: FailureKind::Shutdown,
+                error: "coordinator is shutting down".to_string(),
+            }));
+        }
+    }
+    metrics
+        .queue_depth
+        .store(0, std::sync::atomic::Ordering::Relaxed);
     for t in &worker_txs {
         let _ = t.send(WorkerMsg::Shutdown);
     }
@@ -632,6 +665,7 @@ fn execute_batch(
                         .map(|req| {
                             Reply::Err(Failure {
                                 id: req.id,
+                                kind: FailureKind::Exec,
                                 error: format!(
                                     "sparse batched solve failed: {e}"
                                 ),
@@ -731,6 +765,7 @@ fn execute_grad_batch(
                             .map(|req| {
                                 Reply::Err(Failure {
                                     id: req.id,
+                                    kind: FailureKind::Exec,
                                     error: format!(
                                         "sparse adjoint solve failed: {e}"
                                     ),
@@ -857,6 +892,19 @@ impl Coordinator {
         true
     }
 
+    /// Submit an already-built [`Request`] (the network front end's
+    /// path: the request was constructed at frame-decode time and its
+    /// `submitted` timestamp is preserved, so served latency includes
+    /// time spent queued in the event loop's tick). The coordinator
+    /// assigns and returns its own correlation id, overwriting
+    /// `req.id`.
+    pub fn submit_request(&mut self, mut req: Request) -> u64 {
+        self.next_id += 1;
+        req.id = self.next_id;
+        let _ = self.tx.send(DispatchMsg::Req(req));
+        self.next_id
+    }
+
     /// Submit a request; returns its id. Replies arrive on [`Self::recv`].
     pub fn submit(
         &mut self,
@@ -866,10 +914,8 @@ impl Coordinator {
         h: Vec<f64>,
         tol: f64,
     ) -> u64 {
-        self.next_id += 1;
-        let id = self.next_id;
-        let _ = self.tx.send(DispatchMsg::Req(Request {
-            id,
+        self.submit_request(Request {
+            id: 0,
             layer: layer.to_string(),
             q,
             b,
@@ -877,8 +923,7 @@ impl Coordinator {
             tol,
             grad_v: None,
             submitted: Instant::now(),
-        }));
-        id
+        })
     }
 
     /// Submit an adjoint (gradient) request: solve the layer for θ and
@@ -894,10 +939,8 @@ impl Coordinator {
         v: Vec<f64>,
         tol: f64,
     ) -> u64 {
-        self.next_id += 1;
-        let id = self.next_id;
-        let _ = self.tx.send(DispatchMsg::Req(Request {
-            id,
+        self.submit_request(Request {
+            id: 0,
             layer: layer.to_string(),
             q,
             b,
@@ -905,13 +948,26 @@ impl Coordinator {
             tol,
             grad_v: Some(v),
             submitted: Instant::now(),
-        }));
-        id
+        })
     }
 
     /// Blocking receive of the next reply.
     pub fn recv(&self) -> Option<Reply> {
         self.reply_rx.recv().ok()
+    }
+
+    /// Nonblocking receive: `None` when no reply is currently queued.
+    /// The network front end's event loop polls this between socket
+    /// readiness sweeps instead of parking on the channel.
+    pub fn try_recv(&self) -> Option<Reply> {
+        self.reply_rx.try_recv().ok()
+    }
+
+    /// Registered layers as `(name, n, m, p)` — the wire protocol's
+    /// layer-discovery op serves this so remote load generators can
+    /// synthesize well-formed θ without out-of-band configuration.
+    pub fn layer_dims(&self) -> &[(String, usize, usize, usize)] {
+        &self.layer_dims
     }
 
     /// Blocking receive with a timeout; `None` on expiry/disconnect.

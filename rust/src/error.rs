@@ -48,6 +48,11 @@ pub enum AltDiffError {
     /// A coordinator-level failure (routing, channels, shutdown).
     Coordinator(String),
 
+    /// A wire-protocol violation (bad magic/version, oversized or
+    /// truncated frame, malformed payload). Decoders return this —
+    /// they never panic or over-allocate on hostile input.
+    Protocol(String),
+
     /// An underlying I/O error.
     Io(std::io::Error),
 }
@@ -81,6 +86,9 @@ impl fmt::Display for AltDiffError {
             }
             AltDiffError::Coordinator(s) => {
                 write!(f, "coordinator error: {s}")
+            }
+            AltDiffError::Protocol(s) => {
+                write!(f, "wire protocol error: {s}")
             }
             AltDiffError::Io(e) => write!(f, "io error: {e}"),
         }

@@ -11,6 +11,8 @@
 //! - serving: [`runtime`] (PJRT artifacts) + [`coordinator`] (router,
 //!   batcher, truncation policy; native fallback = one [`batch`] launch
 //!   per dynamic batch)
+//! - network: [`net`] (wire protocol + nonblocking TCP front end with
+//!   admission control, plus clients and a load generator)
 
 // Numeric-kernel house style: explicit index loops mirror the paper's
 // equations and the blocked-BLAS layout; several solver entry points
@@ -30,6 +32,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod linalg;
+pub mod net;
 pub mod nn;
 pub mod prob;
 pub mod runtime;

@@ -1,14 +1,19 @@
 //! `altdiff` — CLI entrypoint for the optimization-layer server and tools.
 //!
 //! Subcommands:
-//!   serve     run the coordinator on a synthetic trace and print metrics
+//!   serve     run the coordinator; `--listen <addr>` serves it over TCP
+//!             (otherwise runs a synthetic in-process trace); prints the
+//!             Prometheus metrics text on exit
+//!   loadgen   drive a running `serve --listen` server over loopback/TCP
+//!             with pipelined clients, report p50/p99 round trips
 //!   solve     solve + differentiate one random dense QP layer
 //!   check     validate the artifact directory (manifest + compile)
 //!   info      print build/layer-family information
 
 use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::coordinator::{Config, Coordinator, Reply};
-use altdiff::prob::dense_qp;
+use altdiff::net::{Client, LoadgenOpts, NetConfig, NetServer};
+use altdiff::prob::{dense_qp, sparsemax_qp};
 use altdiff::runtime::{Engine, Manifest};
 use altdiff::util::{Args, Pcg64};
 use std::path::PathBuf;
@@ -90,8 +95,10 @@ fn cmd_solve(args: &Args) {
     println!("jacobian ∂x/∂b: {}x{}", n, p);
 }
 
-fn cmd_serve(args: &Args) {
-    let nreq = args.get_usize("requests", 500);
+/// Build the default serve-mode coordinator: two dense layer sizes
+/// (matching the compiled-artifact family) plus a sparse sparsemax
+/// layer, so the wire exposes every native backend.
+fn serve_coordinator(args: &Args) -> Coordinator {
     let workers = args.get_usize("workers", 2);
     let dir = artifacts_dir(args);
     let artifacts = dir.join("manifest.tsv").exists().then_some(dir);
@@ -99,8 +106,7 @@ fn cmd_serve(args: &Args) {
         "serving with {} backend",
         if artifacts.is_some() { "pjrt+native" } else { "native" }
     );
-    let qp = dense_qp(16, 8, 4, 1);
-    let mut coord = Coordinator::builder(Config {
+    Coordinator::builder(Config {
         workers,
         max_batch: args.get_usize("max-batch", 8),
         batch_deadline: Duration::from_millis(
@@ -109,10 +115,72 @@ fn cmd_serve(args: &Args) {
         artifacts,
         ..Default::default()
     })
-    .register("qp16", qp.clone(), 1.0)
-    .expect("register")
-    .start();
+    // both dense layers use generator seed 1 so a default `loadgen`
+    // (--seed 1) synthesizes θ feasible for either (dense_qp's b/h are
+    // only feasible w.r.t. the same seed's A/G matrices)
+    .register("qp16", dense_qp(16, 8, 4, 1), 1.0)
+    .expect("register qp16")
+    .register("qp64", dense_qp(64, 32, 12, 1), 1.0)
+    .expect("register qp64")
+    .register_sparse("smax40", sparsemax_qp(40, 7), 1.0)
+    .expect("register smax40")
+    .start()
+}
+
+/// `serve --listen <addr>`: expose the coordinator over TCP until a
+/// wire stop op arrives (or `--duration-secs` expires), then drain and
+/// print the Prometheus metrics text. `--selftest` additionally runs
+/// the load generator in-process against the bound port (works with
+/// `--listen 127.0.0.1:0`) and stops the server when it finishes — a
+/// one-invocation loopback round trip over solve + grad ops.
+fn cmd_serve_net(args: &Args, listen: &str) {
+    let coord = serve_coordinator(args);
     coord.wait_ready(Duration::from_secs(180));
+    let cfg = NetConfig {
+        max_inflight: args.get_usize("max-inflight", 256),
+        max_conns: args.get_usize("max-conns", 128),
+        ..Default::default()
+    };
+    let server = NetServer::bind(listen, coord, cfg)
+        .expect("bind listen address");
+    let addr = server.local_addr().expect("local addr");
+    println!("listening on {addr} (stop via the wire stop op)");
+    let duration = args.get_usize("duration-secs", 0);
+    if duration > 0 {
+        let stop = server.stop_handle();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_secs(duration as u64));
+            stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        });
+    }
+    if args.get_bool("selftest", false) {
+        let opts = LoadgenOpts {
+            requests: args.get_usize("requests", 200),
+            ..Default::default()
+        };
+        std::thread::spawn(move || {
+            match altdiff::net::run_loadgen(addr, &opts) {
+                Ok(report) => println!("selftest: {}", report.render()),
+                Err(e) => eprintln!("selftest loadgen failed: {e}"),
+            }
+            if let Ok(mut c) = Client::connect(addr) {
+                let _ = c.stop_server();
+            }
+        });
+    }
+    let coord = server.run();
+    println!("{}", coord.metrics.render_text());
+}
+
+fn cmd_serve(args: &Args) {
+    let listen = args.get_str("listen", "");
+    if !listen.is_empty() {
+        return cmd_serve_net(args, &listen);
+    }
+    let nreq = args.get_usize("requests", 500);
+    let mut coord = serve_coordinator(args);
+    coord.wait_ready(Duration::from_secs(180));
+    let qp = dense_qp(16, 8, 4, 1);
     let mut rng = Pcg64::new(0);
     let t0 = Instant::now();
     for _ in 0..nreq {
@@ -136,7 +204,47 @@ fn cmd_serve(args: &Args) {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!("{ok}/{nreq} in {wall:.3}s → {:.0} req/s", ok as f64 / wall);
-    println!("{}", coord.metrics.summary());
+    println!("{}", coord.metrics.render_text());
+}
+
+/// `loadgen <addr>`: drive a running `serve --listen` server.
+fn cmd_loadgen(args: &Args) {
+    let Some(addr) = args.positional().get(1).cloned() else {
+        eprintln!(
+            "usage: altdiff loadgen <addr> [--requests N] [--clients C] \
+             [--window W] [--grad-share F] [--layer NAME] [--tol T] \
+             [--stop-server]"
+        );
+        std::process::exit(2);
+    };
+    let opts = LoadgenOpts {
+        requests: args.get_usize("requests", 200),
+        clients: args.get_usize("clients", 4),
+        window: args.get_usize("window", 8),
+        grad_share: args.get_f64("grad-share", 0.25),
+        layer: args.get_str("layer", ""),
+        tol: args.get_f64("tol", 1e-3),
+        seed: args.get_usize("seed", 1) as u64,
+    };
+    match altdiff::net::run_loadgen(addr.as_str(), &opts) {
+        Ok(report) => {
+            println!("{}", report.render());
+            if args.get_bool("stop-server", false) {
+                match Client::connect(addr.as_str())
+                    .and_then(|mut c| c.stop_server())
+                {
+                    Ok(stats) => {
+                        println!("\nserver final metrics:\n{stats}")
+                    }
+                    Err(e) => eprintln!("stop-server failed: {e}"),
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("loadgen failed: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn main() {
@@ -156,10 +264,12 @@ fn main() {
         }
         "solve" => cmd_solve(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         other => {
             eprintln!("unknown command '{other}'");
             eprintln!(
-                "usage: altdiff [info|check|solve|serve] [--key value]"
+                "usage: altdiff [info|check|solve|serve|loadgen] \
+                 [--key value]"
             );
             std::process::exit(2);
         }

@@ -1,0 +1,511 @@
+//! Clients for the wire protocol: a simple blocking client (one request
+//! outstanding), a pipelined client (configurable in-flight window —
+//! the load-generator workhorse), and the multi-connection load
+//! generator itself.
+
+use super::frame::blocking::{read_frame_buffered, write_frame};
+use super::frame::{Frame, FrameReader, MAX_PAYLOAD};
+use super::proto::{self, op, LayerInfo};
+use crate::coordinator::{FailureKind, Reply, Request};
+use crate::error::{AltDiffError, Result};
+use crate::prob::dense_qp;
+use crate::util::Pcg64;
+use std::collections::BTreeMap;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// Encode a request, rejecting locally anything the server's frame
+/// validation would kill the connection over. Mirrors the reply-side
+/// degradation in `proto::encode_reply`: the size check runs on the
+/// computed length, so an oversized request never allocates its frame.
+fn checked_request_bytes(req: &Request) -> Result<Vec<u8>> {
+    let payload_len = proto::request_payload_len(req);
+    if payload_len > MAX_PAYLOAD as usize {
+        return Err(AltDiffError::Protocol(format!(
+            "request payload {payload_len} bytes exceeds the wire \
+             limit {MAX_PAYLOAD}"
+        )));
+    }
+    Ok(proto::encode_request(req))
+}
+
+/// Blocking request/reply client: one outstanding call at a time — a
+/// window-1 [`PipelinedClient`] plus the admin ops (stats, layer
+/// discovery, graceful stop).
+pub struct Client {
+    inner: PipelinedClient,
+}
+
+impl Client {
+    /// Connect to a running [`super::NetServer`].
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        Ok(Client { inner: PipelinedClient::connect(addr, 1)? })
+    }
+
+    /// Bound the wait for any single reply (default: unbounded). A
+    /// timeout mid-frame is recoverable: partial bytes stay buffered.
+    pub fn set_timeout(&mut self, d: Option<Duration>) -> Result<()> {
+        self.inner.set_timeout(d)
+    }
+
+    /// Read until a frame with opcode `want` arrives, skipping stale
+    /// replies of *any* kind left over from previously timed-out calls
+    /// (data and admin alike) so one timeout does not poison later ops.
+    fn read_expected(&mut self, want: u8) -> Result<Frame> {
+        loop {
+            let f = read_frame_buffered(
+                &mut self.inner.stream,
+                &mut self.inner.rbuf,
+            )?;
+            if f.op == want {
+                return Ok(f);
+            }
+            match f.op {
+                op::R_GOODBYE => {
+                    return Err(AltDiffError::Coordinator(
+                        proto::decode_goodbye(&f.payload)
+                            .unwrap_or_else(|_| "server closed".into()),
+                    ))
+                }
+                op::R_SOLVE | op::R_GRAD | op::R_ERR => {
+                    // stale data reply: also clear its bookkeeping so
+                    // `inflight()` does not count it forever
+                    if let Ok(r) = proto::decode_reply(f.op, &f.payload)
+                    {
+                        self.inner.sent_at.remove(&r.id());
+                    }
+                }
+                op::R_STATS | op::R_LAYERS => {} // stale admin reply
+                other => {
+                    return Err(AltDiffError::Protocol(format!(
+                        "expected opcode 0x{want:02x}, got 0x{other:02x}"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// One blocking request/reply round trip through the inner
+    /// window-1 pipeline. Reads reply-by-reply (not `drain`) so a
+    /// connection-level id-0 failure — which the server sends right
+    /// before closing — is returned as the classified failure it is
+    /// instead of being masked by the EOF that follows it; stale
+    /// replies from earlier timed-out calls are skipped by id.
+    fn roundtrip(
+        &mut self,
+        layer: &str,
+        q: Vec<f64>,
+        b: Vec<f64>,
+        h: Vec<f64>,
+        grad_v: Option<Vec<f64>>,
+        tol: f64,
+    ) -> Result<Reply> {
+        self.inner.submit(layer, q, b, h, grad_v, tol)?;
+        let id = self.inner.next_id;
+        loop {
+            let t = self.inner.read_one()?;
+            if t.reply.id() == id || t.reply.id() == 0 {
+                return Ok(t.reply);
+            }
+        }
+    }
+
+    /// Solve `layer` at θ = (q, b, h); the reply carries x* and ∂x/∂b.
+    pub fn solve(
+        &mut self,
+        layer: &str,
+        q: Vec<f64>,
+        b: Vec<f64>,
+        h: Vec<f64>,
+        tol: f64,
+    ) -> Result<Reply> {
+        self.roundtrip(layer, q, b, h, None, tol)
+    }
+
+    /// Gradient request: the reply carries x* and vᵀ∂x*/∂{q,b,h}.
+    pub fn grad(
+        &mut self,
+        layer: &str,
+        q: Vec<f64>,
+        b: Vec<f64>,
+        h: Vec<f64>,
+        v: Vec<f64>,
+        tol: f64,
+    ) -> Result<Reply> {
+        self.roundtrip(layer, q, b, h, Some(v), tol)
+    }
+
+    /// Fetch the server's Prometheus-style metrics text.
+    pub fn stats(&mut self) -> Result<String> {
+        write_frame(
+            &mut self.inner.stream,
+            &proto::encode_admin(op::STATS),
+        )?;
+        let f = self.read_expected(op::R_STATS)?;
+        proto::decode_stats_reply(&f.payload)
+    }
+
+    /// List the layers registered on the server.
+    pub fn layers(&mut self) -> Result<Vec<LayerInfo>> {
+        write_frame(
+            &mut self.inner.stream,
+            &proto::encode_admin(op::LAYERS),
+        )?;
+        let f = self.read_expected(op::R_LAYERS)?;
+        proto::decode_layers_reply(&f.payload)
+    }
+
+    /// Ask the server to drain and stop. Blocks until the drain
+    /// completes: the ack is the server's *final* stats text, rendered
+    /// after every in-flight request has been answered.
+    pub fn stop_server(&mut self) -> Result<String> {
+        write_frame(
+            &mut self.inner.stream,
+            &proto::encode_admin(op::STOP),
+        )?;
+        let f = self.read_expected(op::R_STATS)?;
+        proto::decode_stats_reply(&f.payload)
+    }
+}
+
+/// A reply paired with its measured round-trip time (seconds).
+#[derive(Debug)]
+pub struct TimedReply {
+    /// The decoded reply.
+    pub reply: Reply,
+    /// Client-observed round trip: send → reply decoded.
+    pub rtt: f64,
+}
+
+/// Pipelined client: keeps up to `window` requests on the wire before
+/// insisting on a reply, so one connection can saturate the server's
+/// dynamic batcher (a window of 1 degenerates to the blocking client).
+pub struct PipelinedClient {
+    stream: TcpStream,
+    rbuf: FrameReader,
+    window: usize,
+    next_id: u64,
+    sent_at: BTreeMap<u64, Instant>,
+}
+
+impl PipelinedClient {
+    /// Connect with the given in-flight window (min 1).
+    pub fn connect<A: ToSocketAddrs>(
+        addr: A,
+        window: usize,
+    ) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(PipelinedClient {
+            stream,
+            rbuf: FrameReader::new(),
+            window: window.max(1),
+            next_id: 0,
+            sent_at: BTreeMap::new(),
+        })
+    }
+
+    /// Bound the wait for any single reply (default: unbounded). A
+    /// timeout mid-frame is recoverable: partial bytes stay buffered.
+    pub fn set_timeout(&mut self, d: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(d)?;
+        Ok(())
+    }
+
+    /// Requests currently on the wire.
+    pub fn inflight(&self) -> usize {
+        self.sent_at.len()
+    }
+
+    fn read_one(&mut self) -> Result<TimedReply> {
+        let f = read_frame_buffered(&mut self.stream, &mut self.rbuf)?;
+        if f.op == op::R_GOODBYE {
+            return Err(AltDiffError::Coordinator(
+                proto::decode_goodbye(&f.payload)
+                    .unwrap_or_else(|_| "server closed".into()),
+            ));
+        }
+        let reply = proto::decode_reply(f.op, &f.payload)?;
+        let rtt = match self.sent_at.remove(&reply.id()) {
+            Some(t0) => t0.elapsed().as_secs_f64(),
+            // id 0 = connection-level protocol failure
+            None => 0.0,
+        };
+        Ok(TimedReply { reply, rtt })
+    }
+
+    /// Send one request, collecting replies whenever the window is
+    /// full. Returns the replies drained while making room (possibly
+    /// empty).
+    pub fn submit(
+        &mut self,
+        layer: &str,
+        q: Vec<f64>,
+        b: Vec<f64>,
+        h: Vec<f64>,
+        grad_v: Option<Vec<f64>>,
+        tol: f64,
+    ) -> Result<Vec<TimedReply>> {
+        let mut drained = Vec::new();
+        while self.sent_at.len() >= self.window {
+            drained.push(self.read_one()?);
+        }
+        self.next_id += 1;
+        let req = Request {
+            id: self.next_id,
+            layer: layer.to_string(),
+            q,
+            b,
+            h,
+            tol,
+            grad_v,
+            submitted: Instant::now(),
+        };
+        let bytes = checked_request_bytes(&req)?;
+        self.sent_at.insert(req.id, Instant::now());
+        write_frame(&mut self.stream, &bytes)?;
+        Ok(drained)
+    }
+
+    /// Block until every outstanding request has replied.
+    pub fn drain(&mut self) -> Result<Vec<TimedReply>> {
+        let mut out = Vec::new();
+        while !self.sent_at.is_empty() {
+            out.push(self.read_one()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Load-generator parameters (see [`run_loadgen`]).
+#[derive(Clone, Debug)]
+pub struct LoadgenOpts {
+    /// Total requests across all client connections.
+    pub requests: usize,
+    /// Concurrent connections, each with its own pipelined window.
+    pub clients: usize,
+    /// Per-connection in-flight window.
+    pub window: usize,
+    /// Fraction of requests that take the gradient (adjoint) path.
+    pub grad_share: f64,
+    /// Target layer name; empty → first layer the server advertises.
+    pub layer: String,
+    /// Requested truncation tolerance.
+    pub tol: f64,
+    /// Seed for the synthetic θ stream. The loadgen rebuilds the
+    /// target layer's QP with `dense_qp(n, m, p, seed)`, and a
+    /// generated (b, h) is feasible only for the *same seed's* A/G
+    /// matrices — so this must match the seed the server registered
+    /// the layer with (the `serve` CLI registers its dense layers with
+    /// seed 1, the default here). A mismatched seed still round-trips
+    /// structurally but measures an infeasible workload.
+    pub seed: u64,
+}
+
+impl Default for LoadgenOpts {
+    fn default() -> Self {
+        LoadgenOpts {
+            requests: 200,
+            clients: 4,
+            window: 8,
+            grad_share: 0.25,
+            layer: String::new(),
+            tol: 1e-3,
+            seed: 1,
+        }
+    }
+}
+
+/// Aggregate load-generator outcome.
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    /// Requests sent.
+    pub sent: usize,
+    /// Successful solve replies.
+    pub ok: usize,
+    /// Successful gradient replies.
+    pub grads: usize,
+    /// Replies shed by admission control (`Overloaded`).
+    pub shed: usize,
+    /// Other failure replies.
+    pub failed: usize,
+    /// Wall-clock seconds for the whole run.
+    pub wall: f64,
+    /// Median client-observed round trip (µs).
+    pub p50_us: f64,
+    /// 99th-percentile round trip (µs).
+    pub p99_us: f64,
+    /// Round trips of *served* (Ok/Grad) replies only, seconds,
+    /// unsorted — shed/failed fast-replies are excluded so quantiles
+    /// reflect service latency even under overload.
+    pub rtts: Vec<f64>,
+}
+
+impl LoadgenReport {
+    /// Throughput over the whole run (answered requests per second).
+    pub fn throughput(&self) -> f64 {
+        if self.wall <= 0.0 {
+            return 0.0;
+        }
+        (self.ok + self.grads) as f64 / self.wall
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        format!(
+            "sent {} → ok {} grad {} shed {} failed {} in {:.3}s \
+             ({:.0} req/s)\nrtt p50 {:.0}µs p99 {:.0}µs",
+            self.sent,
+            self.ok,
+            self.grads,
+            self.shed,
+            self.failed,
+            self.wall,
+            self.throughput(),
+            self.p50_us,
+            self.p99_us,
+        )
+    }
+}
+
+fn percentile_us(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    crate::util::bench::percentile(sorted, q) * 1e6
+}
+
+fn tally(report: &mut LoadgenReport, t: &TimedReply) {
+    // only *served* replies contribute latency samples: shed replies
+    // return in microseconds and would drag p50/p99 far below the real
+    // service latency exactly when overload makes those numbers matter
+    match &t.reply {
+        Reply::Ok(_) => {
+            report.ok += 1;
+            if t.rtt > 0.0 {
+                report.rtts.push(t.rtt);
+            }
+        }
+        Reply::Grad(_) => {
+            report.grads += 1;
+            if t.rtt > 0.0 {
+                report.rtts.push(t.rtt);
+            }
+        }
+        Reply::Err(f) if f.kind == FailureKind::Overloaded => {
+            report.shed += 1
+        }
+        Reply::Err(_) => report.failed += 1,
+    }
+}
+
+/// Drive `opts.clients` pipelined connections against `addr`, each
+/// replaying a deterministic synthetic θ stream (scaled copies of the
+/// generator QP matching the layer's advertised dimensions, the same
+/// trace the in-process serving bench uses). Every client counts its
+/// replies; the merged report carries client-observed p50/p99 round
+/// trips. Shed replies are counted, not retried — the point of the
+/// load generator is to *observe* admission control, not to hide it.
+///
+/// θ is synthesized by the *dense* generator, so target a dense layer
+/// registered from the same [`LoadgenOpts::seed`] for a feasible
+/// workload (see the seed field's doc); sparse layers accept the
+/// traffic but solve whatever infeasible θ they are handed.
+pub fn run_loadgen<A: ToSocketAddrs>(
+    addr: A,
+    opts: &LoadgenOpts,
+) -> Result<LoadgenReport> {
+    let addr = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| {
+            AltDiffError::Coordinator("loadgen: no address".into())
+        })?;
+    // discover the target layer's dimensions. Every loadgen socket
+    // gets a generous read timeout so a wedged server fails the run
+    // (and CI) instead of hanging it forever.
+    let timeout = Some(Duration::from_secs(120));
+    let mut probe = Client::connect(addr)?;
+    probe.set_timeout(timeout)?;
+    let layers = probe.layers()?;
+    let info = if opts.layer.is_empty() {
+        layers.first().cloned()
+    } else {
+        layers.iter().find(|l| l.name == opts.layer).cloned()
+    }
+    .ok_or_else(|| {
+        AltDiffError::Coordinator(format!(
+            "loadgen: layer '{}' not registered on the server \
+             (advertised: {:?})",
+            opts.layer,
+            layers.iter().map(|l| &l.name).collect::<Vec<_>>()
+        ))
+    })?;
+    drop(probe);
+
+    let clients = opts.clients.max(1);
+    // distribute the remainder so exactly opts.requests are sent even
+    // when requests % clients != 0 (and small runs still send)
+    let base = opts.requests / clients;
+    let extra = opts.requests % clients;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let per_client = base + usize::from(c < extra);
+        let info = info.clone();
+        let opts = opts.clone();
+        handles.push(std::thread::spawn(move || -> Result<LoadgenReport> {
+            // the generator QP gives a feasible θ for these dimensions;
+            // scaling q keeps it feasible (b, h untouched)
+            let qp = dense_qp(info.n, info.m, info.p, opts.seed);
+            let mut rng = Pcg64::new(opts.seed ^ (c as u64 + 1));
+            let mut cl = PipelinedClient::connect(addr, opts.window)?;
+            cl.set_timeout(Some(Duration::from_secs(120)))?;
+            let mut report = LoadgenReport::default();
+            for _ in 0..per_client {
+                let s = 1.0 + 0.1 * rng.normal();
+                let q: Vec<f64> =
+                    qp.q.iter().map(|&v| v * s).collect();
+                let grad_v = (rng.uniform() < opts.grad_share)
+                    .then(|| rng.normal_vec(info.n));
+                report.sent += 1;
+                for t in cl.submit(
+                    &info.name,
+                    q,
+                    qp.b.clone(),
+                    qp.h.clone(),
+                    grad_v,
+                    opts.tol,
+                )? {
+                    tally(&mut report, &t);
+                }
+            }
+            for t in cl.drain()? {
+                tally(&mut report, &t);
+            }
+            Ok(report)
+        }));
+    }
+    let mut merged = LoadgenReport::default();
+    for h in handles {
+        let r = h
+            .join()
+            .map_err(|_| {
+                AltDiffError::Coordinator(
+                    "loadgen client thread panicked".into(),
+                )
+            })??;
+        merged.sent += r.sent;
+        merged.ok += r.ok;
+        merged.grads += r.grads;
+        merged.shed += r.shed;
+        merged.failed += r.failed;
+        merged.rtts.extend(r.rtts);
+    }
+    merged.wall = t0.elapsed().as_secs_f64();
+    let mut sorted = merged.rtts.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    merged.p50_us = percentile_us(&sorted, 0.50);
+    merged.p99_us = percentile_us(&sorted, 0.99);
+    Ok(merged)
+}

@@ -1,0 +1,390 @@
+//! Frame assembly/flushing for nonblocking sockets.
+//!
+//! A frame is an 8-byte header followed by a payload:
+//!
+//! ```text
+//!   byte 0      magic  0xAD
+//!   byte 1      protocol version (currently 1)
+//!   byte 2      opcode (see `proto::op`)
+//!   byte 3      reserved, must be 0
+//!   bytes 4..8  payload length, u32 little-endian (≤ MAX_PAYLOAD)
+//! ```
+//!
+//! [`FrameReader`] accumulates whatever bytes the socket had ready and
+//! yields complete frames; [`WriteBuf`] holds encoded frames that the
+//! kernel was not ready to accept and flushes them as the socket drains
+//! (per-connection write backpressure). Both validate eagerly: a bad
+//! magic/version/length is an error *before* any payload allocation, so
+//! a hostile peer cannot make the server reserve `u32::MAX` bytes.
+
+use crate::error::{AltDiffError, Result};
+use std::io::{Read, Write};
+
+/// First header byte of every frame.
+pub const MAGIC: u8 = 0xAD;
+/// Wire protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Header length in bytes.
+pub const HEADER_LEN: usize = 8;
+/// Hard cap on payload length — decoders reject anything larger before
+/// allocating. Generous for the QP sizes served here (a 16 MiB frame
+/// holds a dense n=1024, p=1024 Jacobian reply — 8 MiB of `jx` — with
+/// room to spare; larger layers should use the adjoint path, whose
+/// replies are O(n+m+p)).
+pub const MAX_PAYLOAD: u32 = 16 * 1024 * 1024;
+
+/// Render the 8-byte header for `(opcode, payload_len)`.
+pub fn header(op: u8, payload_len: usize) -> [u8; HEADER_LEN] {
+    debug_assert!(payload_len as u64 <= MAX_PAYLOAD as u64);
+    let len = payload_len as u32;
+    let lb = len.to_le_bytes();
+    [MAGIC, VERSION, op, 0, lb[0], lb[1], lb[2], lb[3]]
+}
+
+/// Parse and validate a header; returns `(opcode, payload_len)`.
+pub fn parse_header(h: &[u8]) -> Result<(u8, usize)> {
+    if h.len() < HEADER_LEN {
+        return Err(AltDiffError::Protocol(format!(
+            "short header: {} bytes",
+            h.len()
+        )));
+    }
+    if h[0] != MAGIC {
+        return Err(AltDiffError::Protocol(format!(
+            "bad magic byte 0x{:02x}",
+            h[0]
+        )));
+    }
+    if h[1] != VERSION {
+        return Err(AltDiffError::Protocol(format!(
+            "unsupported protocol version {} (this build speaks {})",
+            h[1], VERSION
+        )));
+    }
+    if h[3] != 0 {
+        return Err(AltDiffError::Protocol(format!(
+            "nonzero reserved header byte 0x{:02x}",
+            h[3]
+        )));
+    }
+    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]);
+    if len > MAX_PAYLOAD {
+        return Err(AltDiffError::Protocol(format!(
+            "frame payload {len} bytes exceeds limit {MAX_PAYLOAD}"
+        )));
+    }
+    Ok((h[2], len as usize))
+}
+
+/// One complete inbound frame.
+#[derive(Debug)]
+pub struct Frame {
+    /// Opcode from the header.
+    pub op: u8,
+    /// Payload bytes (header stripped).
+    pub payload: Vec<u8>,
+}
+
+/// Incremental frame reader for a nonblocking stream: feed it whatever
+/// bytes arrived, pull out complete frames. Partial frames stay
+/// buffered until their remainder shows up; header validation happens
+/// as soon as 8 bytes exist, so garbage is rejected without waiting for
+/// (or allocating) a bogus payload.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    read_pos: usize,
+}
+
+impl FrameReader {
+    /// Empty reader.
+    pub fn new() -> Self {
+        FrameReader::default()
+    }
+
+    /// Append bytes received from the socket.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        // compact lazily: only when the consumed prefix dominates
+        if self.read_pos > 4096 && self.read_pos * 2 > self.buf.len() {
+            self.buf.drain(..self.read_pos);
+            self.read_pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered but not yet consumed as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.read_pos
+    }
+
+    /// Try to extract the next complete frame. `Ok(None)` means "need
+    /// more bytes"; `Err` means the stream is unrecoverably malformed
+    /// (close the connection — framing cannot be resynchronized).
+    pub fn next_frame(&mut self) -> Result<Option<Frame>> {
+        let avail = &self.buf[self.read_pos..];
+        if avail.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let (op, len) = parse_header(&avail[..HEADER_LEN])?;
+        if avail.len() < HEADER_LEN + len {
+            return Ok(None);
+        }
+        let payload =
+            avail[HEADER_LEN..HEADER_LEN + len].to_vec();
+        self.read_pos += HEADER_LEN + len;
+        Ok(Some(Frame { op, payload }))
+    }
+}
+
+/// Outbound byte queue with partial-write support. `flush` writes as
+/// much as the kernel accepts and keeps the rest; `len` is the
+/// backpressure signal — the server stops *reading* from a connection
+/// whose write buffer is over budget, so a slow consumer throttles
+/// itself instead of ballooning server memory.
+#[derive(Default)]
+pub struct WriteBuf {
+    buf: Vec<u8>,
+    write_pos: usize,
+}
+
+impl WriteBuf {
+    /// Empty buffer.
+    pub fn new() -> Self {
+        WriteBuf::default()
+    }
+
+    /// Queue one already-encoded frame (header + payload).
+    pub fn push(&mut self, frame_bytes: &[u8]) {
+        if self.write_pos == self.buf.len() {
+            self.buf.clear();
+            self.write_pos = 0;
+        } else if self.write_pos > 4096
+            && self.write_pos * 2 > self.buf.len()
+        {
+            // compact the consumed prefix: a connection that is never
+            // momentarily idle must not accumulate every byte it ever
+            // sent (same lazy policy as `FrameReader::extend`)
+            self.buf.drain(..self.write_pos);
+            self.write_pos = 0;
+        }
+        self.buf.extend_from_slice(frame_bytes);
+    }
+
+    /// Bytes still waiting to be written.
+    pub fn len(&self) -> usize {
+        self.buf.len() - self.write_pos
+    }
+
+    /// True when everything queued has reached the kernel.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Write as much as the stream accepts without blocking. Returns
+    /// `Ok(true)` when the buffer fully drained, `Ok(false)` when bytes
+    /// remain (kernel said `WouldBlock`), `Err` on a dead connection.
+    pub fn flush<W: Write>(&mut self, w: &mut W) -> std::io::Result<bool> {
+        while self.write_pos < self.buf.len() {
+            match w.write(&self.buf[self.write_pos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "connection closed mid-frame",
+                    ))
+                }
+                Ok(n) => self.write_pos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return Ok(false)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        self.buf.clear();
+        self.write_pos = 0;
+        Ok(true)
+    }
+}
+
+/// Blocking helpers for client sockets (the server side never blocks).
+pub mod blocking {
+    use super::*;
+
+    /// Read exactly one frame from a blocking stream.
+    ///
+    /// Note: if the stream has a read timeout and it fires mid-frame,
+    /// the partially-read bytes are lost and the stream desyncs — use
+    /// [`read_frame_buffered`] (as the clients do) when timeouts are
+    /// in play.
+    pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+        let mut hdr = [0u8; HEADER_LEN];
+        r.read_exact(&mut hdr)?;
+        let (op, len) = parse_header(&hdr)?;
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload)?;
+        Ok(Frame { op, payload })
+    }
+
+    /// Read one frame via a caller-held [`FrameReader`], so a read
+    /// timeout that fires mid-frame keeps the partial bytes buffered —
+    /// the next call resumes where the stream left off instead of
+    /// desyncing.
+    pub fn read_frame_buffered<R: Read>(
+        r: &mut R,
+        fr: &mut FrameReader,
+    ) -> Result<Frame> {
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            if let Some(f) = fr.next_frame()? {
+                return Ok(f);
+            }
+            match r.read(&mut buf) {
+                Ok(0) => {
+                    return Err(AltDiffError::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-frame",
+                    )))
+                }
+                Ok(n) => fr.extend(&buf[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(AltDiffError::Io(e)),
+            }
+        }
+    }
+
+    /// Write one frame (header + payload) to a blocking stream.
+    pub fn write_frame<W: Write>(w: &mut W, bytes: &[u8]) -> Result<()> {
+        w.write_all(bytes)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_round_trips() {
+        let h = header(3, 1234);
+        let (op, len) = parse_header(&h).unwrap();
+        assert_eq!((op, len), (3, 1234));
+    }
+
+    #[test]
+    fn bad_headers_are_rejected() {
+        assert!(parse_header(&[0u8; 4]).is_err()); // short
+        let mut h = header(1, 10);
+        h[0] = 0x00;
+        assert!(parse_header(&h).is_err()); // magic
+        let mut h = header(1, 10);
+        h[1] = 99;
+        assert!(parse_header(&h).is_err()); // version
+        let mut h = header(1, 10);
+        h[3] = 1;
+        assert!(parse_header(&h).is_err()); // reserved
+        let mut h = header(1, 0);
+        h[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(parse_header(&h).is_err()); // oversized
+    }
+
+    #[test]
+    fn reader_reassembles_split_frames() {
+        let mut bytes = header(7, 5).to_vec();
+        bytes.extend_from_slice(b"hello");
+        let mut r = FrameReader::new();
+        for chunk in bytes.chunks(3) {
+            r.extend(chunk);
+        }
+        let f = r.next_frame().unwrap().expect("complete frame");
+        assert_eq!(f.op, 7);
+        assert_eq!(f.payload, b"hello");
+        assert!(r.next_frame().unwrap().is_none());
+        assert_eq!(r.buffered(), 0);
+    }
+
+    #[test]
+    fn reader_yields_back_to_back_frames() {
+        let mut bytes = header(1, 2).to_vec();
+        bytes.extend_from_slice(b"ab");
+        bytes.extend_from_slice(&header(2, 0));
+        let mut r = FrameReader::new();
+        r.extend(&bytes);
+        assert_eq!(r.next_frame().unwrap().unwrap().op, 1);
+        assert_eq!(r.next_frame().unwrap().unwrap().op, 2);
+        assert!(r.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn reader_errors_on_garbage_without_panicking() {
+        let mut r = FrameReader::new();
+        r.extend(&[0xFFu8; 64]);
+        assert!(r.next_frame().is_err());
+    }
+
+    #[test]
+    fn buffered_read_survives_midframe_timeouts() {
+        // a reader that delivers 5 bytes, then "times out", then the rest
+        struct Chunky {
+            data: Vec<u8>,
+            pos: usize,
+            timeouts_left: usize,
+        }
+        impl std::io::Read for Chunky {
+            fn read(&mut self, b: &mut [u8]) -> std::io::Result<usize> {
+                if self.pos == 5 && self.timeouts_left > 0 {
+                    self.timeouts_left -= 1;
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WouldBlock,
+                        "timed out",
+                    ));
+                }
+                let n = (self.data.len() - self.pos).min(b.len()).min(5);
+                b[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+                self.pos += n;
+                Ok(n)
+            }
+        }
+        let mut bytes = header(7, 4).to_vec();
+        bytes.extend_from_slice(b"data");
+        let mut r = Chunky { data: bytes, pos: 0, timeouts_left: 1 };
+        let mut fr = FrameReader::new();
+        // first attempt: mid-frame timeout surfaces as Err, partial
+        // bytes stay buffered in `fr`
+        assert!(blocking::read_frame_buffered(&mut r, &mut fr).is_err());
+        // second attempt resumes and completes the same frame
+        let f = blocking::read_frame_buffered(&mut r, &mut fr).unwrap();
+        assert_eq!(f.op, 7);
+        assert_eq!(f.payload, b"data");
+    }
+
+    #[test]
+    fn write_buf_tracks_partial_writes() {
+        struct Trickle(Vec<u8>, usize);
+        impl std::io::Write for Trickle {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                if self.1 == 0 {
+                    self.1 += 1;
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WouldBlock,
+                        "later",
+                    ));
+                }
+                let n = b.len().min(2);
+                self.0.extend_from_slice(&b[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut wb = WriteBuf::new();
+        wb.push(b"abcdef");
+        let mut t = Trickle(Vec::new(), 0);
+        assert!(!wb.flush(&mut t).unwrap()); // WouldBlock
+        assert_eq!(wb.len(), 6);
+        assert!(wb.flush(&mut t).unwrap()); // drains in 2-byte writes
+        assert!(wb.is_empty());
+        assert_eq!(t.0, b"abcdef");
+    }
+}

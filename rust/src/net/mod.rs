@@ -1,0 +1,40 @@
+//! L4: zero-dependency network serving front end.
+//!
+//! Everything below this module is in-process; `net` is the layer that
+//! turns the repo from a library into a service. It exposes the full
+//! coordinator API — solve, gradient/VJP, metrics — over TCP with
+//! nothing but `std::net` and nonblocking sockets (the crate's
+//! no-external-deps contract; no tokio, no serde):
+//!
+//! - [`frame`]: length-prefixed frames with a versioned 8-byte header,
+//!   incremental reassembly for nonblocking reads, and a partial-write
+//!   buffer for backpressured writes;
+//! - [`proto`]: the binary codec between frames and the coordinator's
+//!   [`Request`](crate::coordinator::Request)/
+//!   [`Reply`](crate::coordinator::Reply) types, plus admin ops (stats,
+//!   layer discovery, graceful stop) — hostile input comes back as
+//!   [`AltDiffError::Protocol`](crate::error::AltDiffError), never a
+//!   panic;
+//! - [`server`]: the poll-based event loop multiplexing N connections
+//!   onto one [`Coordinator`](crate::coordinator::Coordinator), with an
+//!   in-flight admission budget (overload → explicit
+//!   `Failure::Overloaded` replies, never stalls or drops), per-
+//!   connection write backpressure, and a graceful drain that says
+//!   goodbye;
+//! - [`client`]: blocking and pipelined clients plus the
+//!   multi-connection load generator ([`client::run_loadgen`]).
+//!
+//! See `DESIGN.md` §4b for the frame layout and the admission-control /
+//! backpressure semantics.
+
+pub mod client;
+pub mod frame;
+pub mod proto;
+pub mod server;
+
+pub use client::{
+    run_loadgen, Client, LoadgenOpts, LoadgenReport, PipelinedClient,
+    TimedReply,
+};
+pub use proto::LayerInfo;
+pub use server::{NetConfig, NetServer};

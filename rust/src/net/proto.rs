@@ -1,0 +1,720 @@
+//! Versioned binary codec for coordinator requests/replies.
+//!
+//! Every message is one frame (see [`super::frame`] for the header).
+//! Payload encoding is little-endian throughout; variable-length fields
+//! carry an explicit count and are validated against the remaining
+//! payload *before* allocation, so truncated or hostile frames return
+//! [`AltDiffError::Protocol`] — never a panic, never an over-allocation.
+//!
+//! Request payloads (`op::SOLVE` / `op::GRAD`):
+//!
+//! ```text
+//!   id u64 · tol f64 · layer str16 · q f64vec · b f64vec · h f64vec
+//!   [· v f64vec]                      -- GRAD only (adjoint seed)
+//! ```
+//!
+//! Reply payloads mirror [`Reply`]'s three arms (`op::R_SOLVE`,
+//! `op::R_GRAD`, `op::R_ERR`); admin ops (`op::STATS`, `op::LAYERS`,
+//! `op::STOP`) have empty request payloads. `str16` is a u16 byte count
+//! plus UTF-8 bytes; `f64vec` is a u32 element count plus raw LE f64s.
+
+use crate::coordinator::{
+    Failure, FailureKind, GradientResponse, Reply, Request, Response,
+};
+use crate::error::{AltDiffError, Result};
+use super::frame::header;
+use std::time::Instant;
+
+/// Frame opcodes. Requests are < 0x80, replies have the top bit set.
+pub mod op {
+    /// Solve request (classic forward + ∂x/∂b Jacobian reply).
+    pub const SOLVE: u8 = 0x01;
+    /// Gradient request (adjoint path; carries the seed v).
+    pub const GRAD: u8 = 0x02;
+    /// Stats request: reply is the Prometheus text rendering.
+    pub const STATS: u8 = 0x03;
+    /// Layer-discovery request: reply lists `(name, n, m, p)`.
+    pub const LAYERS: u8 = 0x04;
+    /// Graceful-stop request (SIGTERM over the wire; std has no
+    /// dependency-free signal handling). The reply is a final stats
+    /// frame sent *after* the drain completes (right before the
+    /// goodbye), so it includes work that finished during the drain.
+    pub const STOP: u8 = 0x05;
+    /// Solve reply ([`crate::coordinator::Response`]).
+    pub const R_SOLVE: u8 = 0x81;
+    /// Gradient reply ([`crate::coordinator::GradientResponse`]).
+    pub const R_GRAD: u8 = 0x82;
+    /// Failure reply ([`crate::coordinator::Failure`]).
+    pub const R_ERR: u8 = 0x83;
+    /// Stats reply (UTF-8 text).
+    pub const R_STATS: u8 = 0x84;
+    /// Layer-discovery reply.
+    pub const R_LAYERS: u8 = 0x85;
+    /// Server-initiated goodbye: sent to every open connection when the
+    /// server drains on shutdown, right before close.
+    pub const R_GOODBYE: u8 = 0x86;
+}
+
+/// Backend tags (`Response::backend` is `&'static str` in-process).
+fn backend_code(b: &str) -> u8 {
+    match b {
+        "native" => 0,
+        "native-sparse" => 1,
+        "pjrt" => 2,
+        _ => 255,
+    }
+}
+
+fn backend_str(c: u8) -> &'static str {
+    match c {
+        0 => "native",
+        1 => "native-sparse",
+        2 => "pjrt",
+        _ => "unknown",
+    }
+}
+
+// ---------------------------------------------------------------- write
+
+struct Wr {
+    buf: Vec<u8>,
+}
+
+impl Wr {
+    fn new(op_: u8) -> Self {
+        // header is patched with the real length in `finish`
+        let mut buf = header(op_, 0).to_vec();
+        buf.reserve(64);
+        Wr { buf }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str16(&mut self, s: &str) {
+        let n = s.len().min(u16::MAX as usize);
+        self.buf
+            .extend_from_slice(&(n as u16).to_le_bytes());
+        self.buf.extend_from_slice(&s.as_bytes()[..n]);
+    }
+
+    fn str32(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn f64_vec(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        let len = (self.buf.len() - super::frame::HEADER_LEN) as u32;
+        self.buf[4..8].copy_from_slice(&len.to_le_bytes());
+        self.buf
+    }
+}
+
+// ----------------------------------------------------------------- read
+
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Rd { b, pos: 0 }
+    }
+
+    fn need(&self, n: usize) -> Result<()> {
+        if self.b.len() - self.pos < n {
+            return Err(AltDiffError::Protocol(format!(
+                "truncated payload: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        self.need(1)?;
+        let v = self.b[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        self.need(2)?;
+        let v = u16::from_le_bytes(
+            self.b[self.pos..self.pos + 2].try_into().unwrap(),
+        );
+        self.pos += 2;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        self.need(4)?;
+        let v = u32::from_le_bytes(
+            self.b[self.pos..self.pos + 4].try_into().unwrap(),
+        );
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        self.need(8)?;
+        let v = u64::from_le_bytes(
+            self.b[self.pos..self.pos + 8].try_into().unwrap(),
+        );
+        self.pos += 8;
+        Ok(v)
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.need(n)?;
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn str16(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        let raw = self.bytes(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| {
+            AltDiffError::Protocol("string field is not UTF-8".into())
+        })
+    }
+
+    fn str32(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| {
+            AltDiffError::Protocol("string field is not UTF-8".into())
+        })
+    }
+
+    /// Count-prefixed f64 vector. The count is validated against the
+    /// *remaining payload* before the Vec is allocated — a hostile
+    /// `u32::MAX` count fails here instead of reserving 32 GiB.
+    fn f64_vec(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        self.need(n.checked_mul(8).ok_or_else(|| {
+            AltDiffError::Protocol("vector count overflows".into())
+        })?)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            return Err(AltDiffError::Protocol(format!(
+                "{} trailing bytes after payload",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- requests
+
+/// Exact payload size of a request, computed without encoding it —
+/// clients check it against the frame limit before allocating the
+/// frame (mirror of [`reply_payload_len`]; kept in sync with
+/// [`encode_request`], which debug-asserts the equality).
+pub fn request_payload_len(req: &Request) -> usize {
+    let vec_len = |v: &[f64]| 4 + 8 * v.len();
+    // id u64 + tol f64 + layer str16 (name truncated at u16::MAX)
+    8 + 8
+        + (2 + req.layer.len().min(u16::MAX as usize))
+        + vec_len(&req.q)
+        + vec_len(&req.b)
+        + vec_len(&req.h)
+        + req.grad_v.as_deref().map(vec_len).unwrap_or(0)
+}
+
+/// Encode a request as one frame (opcode chosen by the adjoint seed:
+/// `grad_v = Some` → `op::GRAD`). The `submitted` timestamp is *not*
+/// encoded — the receiving server stamps arrival time, so served
+/// latency covers queue + execution, not the client's network path.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let opcode = if req.is_grad() { op::GRAD } else { op::SOLVE };
+    let mut w = Wr::new(opcode);
+    w.u64(req.id);
+    w.f64(req.tol);
+    w.str16(&req.layer);
+    w.f64_vec(&req.q);
+    w.f64_vec(&req.b);
+    w.f64_vec(&req.h);
+    if let Some(v) = &req.grad_v {
+        w.f64_vec(v);
+    }
+    let frame = w.finish();
+    debug_assert_eq!(
+        frame.len() - super::frame::HEADER_LEN,
+        request_payload_len(req),
+        "request_payload_len out of sync with the encoder"
+    );
+    frame
+}
+
+/// Decode a request payload for `opcode` (`op::SOLVE` or `op::GRAD`).
+pub fn decode_request(opcode: u8, payload: &[u8]) -> Result<Request> {
+    if opcode != op::SOLVE && opcode != op::GRAD {
+        return Err(AltDiffError::Protocol(format!(
+            "opcode 0x{opcode:02x} is not a request"
+        )));
+    }
+    let mut r = Rd::new(payload);
+    let id = r.u64()?;
+    let tol = r.f64()?;
+    let layer = r.str16()?;
+    let q = r.f64_vec()?;
+    let b = r.f64_vec()?;
+    let h = r.f64_vec()?;
+    let grad_v = if opcode == op::GRAD {
+        Some(r.f64_vec()?)
+    } else {
+        None
+    };
+    r.done()?;
+    Ok(Request {
+        id,
+        layer,
+        q,
+        b,
+        h,
+        tol,
+        grad_v,
+        submitted: Instant::now(),
+    })
+}
+
+// -------------------------------------------------------------- replies
+
+/// Exact payload size of a reply, computed without encoding it (8
+/// bytes per f64, length prefixes per the field docs above). Keep in
+/// sync with [`encode_reply`]'s writers — `encode_reply` debug-asserts
+/// the equality.
+fn reply_payload_len(reply: &Reply) -> usize {
+    // fixed: id u64 + k u32 + bs u32 + prim f64 + lat f64 + backend u8
+    const DATA_FIXED: usize = 8 + 4 + 4 + 8 + 8 + 1;
+    let vec_len = |v: &[f64]| 4 + 8 * v.len();
+    match reply {
+        Reply::Ok(r) => DATA_FIXED + vec_len(&r.x) + vec_len(&r.jx),
+        Reply::Grad(g) => {
+            DATA_FIXED
+                + vec_len(&g.x)
+                + vec_len(&g.grad_q)
+                + vec_len(&g.grad_b)
+                + vec_len(&g.grad_h)
+        }
+        Reply::Err(f) => 8 + 1 + 4 + f.error.len(),
+    }
+}
+
+/// Encode a reply as one frame (opcode chosen by the arm). A reply
+/// whose payload would exceed [`super::frame::MAX_PAYLOAD`] — e.g. the
+/// (n × p) Jacobian of a very large dense layer — is replaced by an
+/// explicit [`FailureKind::Exec`] failure frame carrying the same id:
+/// the peer gets a parseable, classified answer instead of a frame its
+/// own header validation must reject (which would desync the stream).
+/// The size check runs on the computed length *before* any encoding,
+/// so the oversized case never allocates the doomed frame.
+pub fn encode_reply(reply: &Reply) -> Vec<u8> {
+    let payload_len = reply_payload_len(reply);
+    if payload_len > super::frame::MAX_PAYLOAD as usize {
+        return encode_reply_unchecked(&Reply::Err(Failure {
+            id: reply.id(),
+            kind: FailureKind::Exec,
+            error: format!(
+                "reply payload {payload_len} bytes exceeds the wire \
+                 limit {}; request the adjoint (grad) path instead of \
+                 the Jacobian",
+                super::frame::MAX_PAYLOAD
+            ),
+        }));
+    }
+    let frame = encode_reply_unchecked(reply);
+    debug_assert_eq!(
+        frame.len() - super::frame::HEADER_LEN,
+        payload_len,
+        "reply_payload_len out of sync with the encoder"
+    );
+    frame
+}
+
+fn encode_reply_unchecked(reply: &Reply) -> Vec<u8> {
+    match reply {
+        Reply::Ok(r) => {
+            let mut w = Wr::new(op::R_SOLVE);
+            w.u64(r.id);
+            w.u32(r.k_used as u32);
+            w.u32(r.batch_size as u32);
+            w.f64(r.prim_residual);
+            w.f64(r.latency);
+            w.u8(backend_code(r.backend));
+            w.f64_vec(&r.x);
+            w.f64_vec(&r.jx);
+            w.finish()
+        }
+        Reply::Grad(g) => {
+            let mut w = Wr::new(op::R_GRAD);
+            w.u64(g.id);
+            w.u32(g.k_used as u32);
+            w.u32(g.batch_size as u32);
+            w.f64(g.prim_residual);
+            w.f64(g.latency);
+            w.u8(backend_code(g.backend));
+            w.f64_vec(&g.x);
+            w.f64_vec(&g.grad_q);
+            w.f64_vec(&g.grad_b);
+            w.f64_vec(&g.grad_h);
+            w.finish()
+        }
+        Reply::Err(f) => {
+            let mut w = Wr::new(op::R_ERR);
+            w.u64(f.id);
+            w.u8(f.kind.code());
+            w.str32(&f.error);
+            w.finish()
+        }
+    }
+}
+
+/// Decode a reply payload for `opcode` (any of the three reply arms).
+pub fn decode_reply(opcode: u8, payload: &[u8]) -> Result<Reply> {
+    let mut r = Rd::new(payload);
+    match opcode {
+        op::R_SOLVE => {
+            let id = r.u64()?;
+            let k_used = r.u32()? as usize;
+            let batch_size = r.u32()? as usize;
+            let prim_residual = r.f64()?;
+            let latency = r.f64()?;
+            let backend = backend_str(r.u8()?);
+            let x = r.f64_vec()?;
+            let jx = r.f64_vec()?;
+            r.done()?;
+            Ok(Reply::Ok(Response {
+                id,
+                x,
+                jx,
+                prim_residual,
+                k_used,
+                batch_size,
+                latency,
+                backend,
+            }))
+        }
+        op::R_GRAD => {
+            let id = r.u64()?;
+            let k_used = r.u32()? as usize;
+            let batch_size = r.u32()? as usize;
+            let prim_residual = r.f64()?;
+            let latency = r.f64()?;
+            let backend = backend_str(r.u8()?);
+            let x = r.f64_vec()?;
+            let grad_q = r.f64_vec()?;
+            let grad_b = r.f64_vec()?;
+            let grad_h = r.f64_vec()?;
+            r.done()?;
+            Ok(Reply::Grad(GradientResponse {
+                id,
+                x,
+                grad_q,
+                grad_b,
+                grad_h,
+                prim_residual,
+                k_used,
+                batch_size,
+                latency,
+                backend,
+            }))
+        }
+        op::R_ERR => {
+            let id = r.u64()?;
+            let kind = FailureKind::from_code(r.u8()?).ok_or_else(|| {
+                AltDiffError::Protocol("unknown failure kind".into())
+            })?;
+            let error = r.str32()?;
+            r.done()?;
+            Ok(Reply::Err(Failure { id, kind, error }))
+        }
+        other => Err(AltDiffError::Protocol(format!(
+            "opcode 0x{other:02x} is not a reply"
+        ))),
+    }
+}
+
+// ------------------------------------------------------------ admin ops
+
+/// One registered layer as advertised by the discovery op.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerInfo {
+    /// Registration name (routing key).
+    pub name: String,
+    /// Variables n.
+    pub n: usize,
+    /// Inequality constraints m.
+    pub m: usize,
+    /// Equality constraints p.
+    pub p: usize,
+}
+
+/// Encode an empty-payload admin request (`op::STATS`, `op::LAYERS`,
+/// `op::STOP`).
+pub fn encode_admin(opcode: u8) -> Vec<u8> {
+    header(opcode, 0).to_vec()
+}
+
+/// Encode a stats reply (Prometheus text).
+pub fn encode_stats_reply(text: &str) -> Vec<u8> {
+    let mut w = Wr::new(op::R_STATS);
+    w.str32(text);
+    w.finish()
+}
+
+/// Decode a stats reply payload.
+pub fn decode_stats_reply(payload: &[u8]) -> Result<String> {
+    let mut r = Rd::new(payload);
+    let s = r.str32()?;
+    r.done()?;
+    Ok(s)
+}
+
+/// Encode the layer-discovery reply.
+pub fn encode_layers_reply(
+    layers: &[(String, usize, usize, usize)],
+) -> Vec<u8> {
+    let mut w = Wr::new(op::R_LAYERS);
+    w.u32(layers.len() as u32);
+    for (name, n, m, p) in layers {
+        w.str16(name);
+        w.u32(*n as u32);
+        w.u32(*m as u32);
+        w.u32(*p as u32);
+    }
+    w.finish()
+}
+
+/// Decode the layer-discovery reply payload.
+pub fn decode_layers_reply(payload: &[u8]) -> Result<Vec<LayerInfo>> {
+    let mut r = Rd::new(payload);
+    let count = r.u32()? as usize;
+    // each entry is ≥ 14 bytes; bound count before allocating
+    if count > payload.len() / 14 {
+        return Err(AltDiffError::Protocol(format!(
+            "layer count {count} exceeds payload"
+        )));
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name = r.str16()?;
+        let n = r.u32()? as usize;
+        let m = r.u32()? as usize;
+        let p = r.u32()? as usize;
+        out.push(LayerInfo { name, n, m, p });
+    }
+    r.done()?;
+    Ok(out)
+}
+
+/// Encode the server's goodbye frame (drain notice before close).
+pub fn encode_goodbye(msg: &str) -> Vec<u8> {
+    let mut w = Wr::new(op::R_GOODBYE);
+    w.str32(msg);
+    w.finish()
+}
+
+/// Decode a goodbye payload.
+pub fn decode_goodbye(payload: &[u8]) -> Result<String> {
+    let mut r = Rd::new(payload);
+    let s = r.str32()?;
+    r.done()?;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::frame::{parse_header, HEADER_LEN};
+
+    fn strip(frame: &[u8]) -> (u8, &[u8]) {
+        let (op_, len) = parse_header(frame).unwrap();
+        assert_eq!(frame.len(), HEADER_LEN + len);
+        (op_, &frame[HEADER_LEN..])
+    }
+
+    #[test]
+    fn solve_request_round_trips() {
+        let req = Request {
+            id: 42,
+            layer: "qp16".into(),
+            q: vec![1.0, -2.5, 3.25],
+            b: vec![0.5],
+            h: vec![1.0, 2.0],
+            tol: 1e-3,
+            grad_v: None,
+            submitted: Instant::now(),
+        };
+        let frame = encode_request(&req);
+        let (op_, payload) = strip(&frame);
+        assert_eq!(op_, op::SOLVE);
+        let back = decode_request(op_, payload).unwrap();
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.layer, req.layer);
+        assert_eq!(back.q, req.q);
+        assert_eq!(back.b, req.b);
+        assert_eq!(back.h, req.h);
+        assert_eq!(back.tol, req.tol);
+        assert!(back.grad_v.is_none());
+    }
+
+    #[test]
+    fn grad_request_round_trips() {
+        let req = Request {
+            id: 7,
+            layer: "l".into(),
+            q: vec![0.0; 4],
+            b: vec![],
+            h: vec![9.0],
+            tol: 1e-2,
+            grad_v: Some(vec![1.0, 0.0, -1.0, 2.0]),
+            submitted: Instant::now(),
+        };
+        let frame = encode_request(&req);
+        let (op_, payload) = strip(&frame);
+        assert_eq!(op_, op::GRAD);
+        let back = decode_request(op_, payload).unwrap();
+        assert_eq!(back.grad_v, req.grad_v);
+    }
+
+    #[test]
+    fn err_reply_round_trips_kind() {
+        let f = Failure::new(3, FailureKind::Overloaded, "busy");
+        let frame = encode_reply(&Reply::Err(f));
+        let (op_, payload) = strip(&frame);
+        match decode_reply(op_, payload).unwrap() {
+            Reply::Err(f) => {
+                assert_eq!(f.id, 3);
+                assert_eq!(f.kind, FailureKind::Overloaded);
+                assert_eq!(f.error, "busy");
+            }
+            _ => panic!("wrong arm"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let req = Request {
+            id: 1,
+            layer: "l".into(),
+            q: vec![],
+            b: vec![],
+            h: vec![],
+            tol: 0.1,
+            grad_v: None,
+            submitted: Instant::now(),
+        };
+        let frame = encode_request(&req);
+        let (op_, payload) = strip(&frame);
+        let mut longer = payload.to_vec();
+        longer.push(0);
+        assert!(decode_request(op_, &longer).is_err());
+    }
+
+    #[test]
+    fn layers_round_trip() {
+        let layers = vec![
+            ("qp16".to_string(), 16usize, 8usize, 4usize),
+            ("smax40".to_string(), 40, 40, 1),
+        ];
+        let frame = encode_layers_reply(&layers);
+        let (op_, payload) = strip(&frame);
+        assert_eq!(op_, op::R_LAYERS);
+        let back = decode_layers_reply(payload).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "qp16");
+        assert_eq!(back[1].m, 40);
+    }
+
+    #[test]
+    fn stats_and_goodbye_round_trip() {
+        let frame = encode_stats_reply("altdiff_requests_total 5\n");
+        let (_, payload) = strip(&frame);
+        assert!(decode_stats_reply(payload)
+            .unwrap()
+            .contains("requests_total"));
+        let frame = encode_goodbye("drained");
+        let (op_, payload) = strip(&frame);
+        assert_eq!(op_, op::R_GOODBYE);
+        assert_eq!(decode_goodbye(payload).unwrap(), "drained");
+    }
+
+    #[test]
+    fn oversized_reply_degrades_to_an_exec_failure_frame() {
+        // a reply that cannot fit MAX_PAYLOAD must come out as a
+        // parseable failure frame with the same id, not an over-limit
+        // frame the peer's header validation would reject
+        let reply = Reply::Ok(Response {
+            id: 99,
+            x: vec![1.0; 2_200_000], // ~17.6 MB of payload
+            jx: vec![],
+            prim_residual: 0.0,
+            k_used: 10,
+            batch_size: 1,
+            latency: 0.0,
+            backend: "native",
+        });
+        let frame = encode_reply(&reply);
+        let (op_, payload) = strip(&frame);
+        assert_eq!(op_, op::R_ERR);
+        match decode_reply(op_, payload).unwrap() {
+            Reply::Err(f) => {
+                assert_eq!(f.id, 99);
+                assert_eq!(f.kind, FailureKind::Exec);
+                assert!(f.error.contains("wire limit"));
+            }
+            _ => panic!("expected failure arm"),
+        }
+    }
+
+    #[test]
+    fn hostile_vector_count_fails_before_allocating() {
+        // a request payload whose q count claims u32::MAX elements
+        let mut w = Wr::new(op::SOLVE);
+        w.u64(1);
+        w.f64(0.1);
+        w.str16("l");
+        w.u32(u32::MAX); // q count — no data follows
+        let frame = w.finish();
+        let (op_, payload) = strip(&frame);
+        let err = decode_request(op_, payload).unwrap_err();
+        assert!(matches!(err, AltDiffError::Protocol(_)));
+    }
+}

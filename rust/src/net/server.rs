@@ -1,0 +1,546 @@
+//! Nonblocking TCP front end multiplexing N connections onto one
+//! [`Coordinator`].
+//!
+//! Single poll-style event loop (no tokio — the crate is
+//! dependency-free, and the work per tick is bounded):
+//!
+//! ```text
+//!   accept ──▶ read ready conns ──▶ decode frames ──▶ admission
+//!                                                       │ admit: Coordinator::submit
+//!                                                       │ shed:  Failure::Overloaded
+//!   Coordinator::try_recv ──▶ re-encode with client id ──▶ per-conn WriteBuf
+//!                                                       └ flush (partial writes kept)
+//! ```
+//!
+//! **Admission control.** At most [`NetConfig::max_inflight`] admitted
+//! requests may be outstanding inside the coordinator at once. A request
+//! that arrives at budget is answered *immediately* with
+//! [`FailureKind::Overloaded`] — the connection is never stalled and
+//! never dropped, so clients can tell "back off" from "broken".
+//!
+//! **Write backpressure.** Replies queue per connection in a
+//! [`WriteBuf`]; when a connection's buffer exceeds
+//! [`NetConfig::write_backpressure`] the loop stops *reading* from that
+//! connection, the kernel receive buffer fills, and TCP pushes back on
+//! the client — a slow reader throttles only itself.
+//!
+//! **Graceful drain.** On stop (the wire `STOP` op or the shared stop
+//! flag) the server stops accepting and admitting, waits for in-flight
+//! replies (bounded by [`NetConfig::drain_timeout`]), answers anything
+//! still unreplied with [`FailureKind::Shutdown`], sends every open
+//! connection a goodbye frame, and only then shuts the coordinator down
+//! — which itself flushes queued batches (see
+//! [`Coordinator::shutdown`]).
+
+use super::frame::{FrameReader, WriteBuf};
+use super::proto::{self, op};
+use crate::coordinator::{Coordinator, Failure, FailureKind, Reply};
+use crate::error::Result;
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Front-end tuning knobs.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Admission budget: max requests admitted to the coordinator and
+    /// not yet answered. Arrivals beyond it are shed with
+    /// [`FailureKind::Overloaded`].
+    pub max_inflight: usize,
+    /// Max simultaneous connections; extras get a goodbye frame and an
+    /// immediate close.
+    pub max_conns: usize,
+    /// Per-connection write-buffer size (bytes) past which the server
+    /// stops reading from that connection until it drains.
+    pub write_backpressure: usize,
+    /// How long a graceful drain may wait for in-flight replies before
+    /// answering the stragglers with [`FailureKind::Shutdown`].
+    pub drain_timeout: Duration,
+    /// Base event-loop sleep when a tick made no progress. Consecutive
+    /// idle ticks back off to 10× this value, so an idle server's
+    /// per-connection read() scanning costs bounded CPU while the
+    /// first request after a lull sees at most ~10× this latency.
+    pub idle_sleep: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_inflight: 256,
+            max_conns: 128,
+            write_backpressure: 1 << 20,
+            drain_timeout: Duration::from_secs(10),
+            idle_sleep: Duration::from_micros(300),
+        }
+    }
+}
+
+/// Per-connection state.
+struct Conn {
+    stream: TcpStream,
+    reader: FrameReader,
+    wbuf: WriteBuf,
+    /// stop reading, close once the write buffer drains and no
+    /// admitted request is still owed a reply
+    closing: bool,
+    /// peer closed its write side (or errored). Half-close is a legal
+    /// client pattern (send → `shutdown(SHUT_WR)` → read the reply),
+    /// so an eof connection is reaped only once `inflight` replies
+    /// have been delivered.
+    eof: bool,
+    /// requests admitted from this connection and not yet answered
+    inflight: usize,
+    /// sent the STOP op and is owed the post-drain stats ack — kept
+    /// alive through the drain even if half-closed
+    awaiting_stop_ack: bool,
+}
+
+impl Conn {
+    fn push_reply(&mut self, reply: &Reply) {
+        self.wbuf.push(&proto::encode_reply(reply));
+    }
+}
+
+/// A bound, not-yet-running network server. [`NetServer::run`] consumes
+/// it and gives the [`Coordinator`] back after the graceful drain so
+/// callers can inspect final metrics.
+pub struct NetServer {
+    listener: TcpListener,
+    coord: Coordinator,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) in nonblocking mode.
+    pub fn bind<A: ToSocketAddrs>(
+        addr: A,
+        coord: Coordinator,
+        cfg: NetConfig,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(NetServer {
+            listener,
+            coord,
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The actually-bound address (resolves `:0` to the chosen port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Shared stop flag: set it from any thread (a timer, a test, a
+    /// signal handler) to trigger the graceful drain.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Run the event loop until a stop is requested, then drain
+    /// gracefully and return the coordinator (already shut down) for
+    /// final metrics inspection.
+    pub fn run(self) -> Coordinator {
+        let NetServer { listener, mut coord, cfg, stop } = self;
+        let metrics = coord.metrics.clone();
+        let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
+        let mut next_conn: u64 = 0;
+        // coordinator request id → (connection, client-side id)
+        let mut routes: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+        let mut inflight: usize = 0;
+        // connections owed the post-drain stats reply to a STOP op
+        let mut stop_acks: Vec<u64> = Vec::new();
+        let mut draining = false;
+        let mut drain_start: Option<Instant> = None;
+        let mut idle_ticks: u32 = 0;
+        let mut scratch = vec![0u8; 64 * 1024];
+
+        loop {
+            let mut progress = false;
+            if stop.load(Ordering::SeqCst) {
+                draining = true;
+            }
+
+            // --- accept ------------------------------------------------
+            if !draining {
+                loop {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            progress = true;
+                            if stream.set_nonblocking(true).is_err() {
+                                continue;
+                            }
+                            let _ = stream.set_nodelay(true);
+                            let mut conn = Conn {
+                                stream,
+                                reader: FrameReader::new(),
+                                wbuf: WriteBuf::new(),
+                                closing: false,
+                                eof: false,
+                                inflight: 0,
+                                awaiting_stop_ack: false,
+                            };
+                            if conns.len() >= cfg.max_conns {
+                                conn.wbuf.push(&proto::encode_goodbye(
+                                    "connection limit reached",
+                                ));
+                                conn.closing = true;
+                            }
+                            next_conn += 1;
+                            conns.insert(next_conn, conn);
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            break
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => break,
+                    }
+                }
+            }
+
+            // --- read + decode + admit ---------------------------------
+            for (&cid, conn) in conns.iter_mut() {
+                if conn.closing || conn.eof {
+                    continue;
+                }
+                // backpressure: a connection over its write budget is
+                // not read until the peer drains what it already owes
+                if conn.wbuf.len() > cfg.write_backpressure {
+                    continue;
+                }
+                // bounded read burst so one firehose connection cannot
+                // starve the tick
+                for _ in 0..16 {
+                    match conn.stream.read(&mut scratch) {
+                        Ok(0) => {
+                            conn.eof = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            progress = true;
+                            conn.reader.extend(&scratch[..n]);
+                            if n < scratch.len() {
+                                break;
+                            }
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            break
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => {
+                            conn.eof = true;
+                            break;
+                        }
+                    }
+                }
+                loop {
+                    match conn.reader.next_frame() {
+                        Ok(None) => break,
+                        Ok(Some(frame)) => {
+                            handle_frame(
+                                frame.op,
+                                &frame.payload,
+                                cid,
+                                conn,
+                                &mut coord,
+                                &mut routes,
+                                &mut inflight,
+                                &mut stop_acks,
+                                &cfg,
+                                &mut draining,
+                            );
+                            if conn.closing {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            // framing is unrecoverable: answer with a
+                            // protocol failure and close after flush —
+                            // the coordinator never saw this request,
+                            // so nothing is poisoned
+                            metrics
+                                .failures
+                                .fetch_add(1, Ordering::Relaxed);
+                            conn.push_reply(&Reply::Err(Failure::new(
+                                0,
+                                FailureKind::Invalid,
+                                format!("{e}"),
+                            )));
+                            conn.closing = true;
+                            break;
+                        }
+                    }
+                }
+            }
+
+            // --- route coordinator replies -----------------------------
+            while let Some(mut reply) = coord.try_recv() {
+                progress = true;
+                if let Some((cid, client_id)) =
+                    routes.remove(&reply.id())
+                {
+                    inflight = inflight.saturating_sub(1);
+                    set_reply_id(&mut reply, client_id);
+                    if let Some(conn) = conns.get_mut(&cid) {
+                        conn.inflight = conn.inflight.saturating_sub(1);
+                        conn.push_reply(&reply);
+                    }
+                    // a vanished connection just drops its reply — the
+                    // request already executed; nothing to unwind
+                }
+            }
+            metrics
+                .net_inflight
+                .store(inflight as u64, Ordering::Relaxed);
+
+            // --- flush + reap ------------------------------------------
+            // a closing/eof connection survives until its write buffer
+            // drains AND every admitted request has been answered —
+            // half-closed clients still get their replies
+            conns.retain(|_, conn| match conn.wbuf.flush(&mut conn.stream)
+            {
+                Ok(true) => {
+                    !((conn.closing || conn.eof)
+                        && conn.inflight == 0
+                        && !conn.awaiting_stop_ack)
+                }
+                Ok(false) => true,
+                Err(_) => false,
+            });
+
+            // --- drain / exit ------------------------------------------
+            if draining {
+                let started =
+                    *drain_start.get_or_insert_with(Instant::now);
+                let expired = started.elapsed() > cfg.drain_timeout;
+                if inflight == 0 || expired {
+                    for (_, (cid, client_id)) in
+                        std::mem::take(&mut routes)
+                    {
+                        if let Some(conn) = conns.get_mut(&cid) {
+                            metrics
+                                .failures
+                                .fetch_add(1, Ordering::Relaxed);
+                            conn.push_reply(&Reply::Err(Failure::new(
+                                client_id,
+                                FailureKind::Shutdown,
+                                "server stopped before this request \
+                                 finished",
+                            )));
+                        }
+                    }
+                    // STOP requesters get the *final* stats — rendered
+                    // after the drain, so in-flight work that finished
+                    // during it is included
+                    let final_stats = proto::encode_stats_reply(
+                        &metrics.render_text(),
+                    );
+                    for cid in stop_acks.drain(..) {
+                        if let Some(conn) = conns.get_mut(&cid) {
+                            conn.wbuf.push(&final_stats);
+                            conn.awaiting_stop_ack = false;
+                        }
+                    }
+                    for conn in conns.values_mut() {
+                        conn.wbuf.push(&proto::encode_goodbye(
+                            "server draining; goodbye",
+                        ));
+                    }
+                    // best-effort final flush, bounded
+                    let deadline =
+                        Instant::now() + Duration::from_millis(500);
+                    loop {
+                        let mut all_empty = true;
+                        for conn in conns.values_mut() {
+                            match conn.wbuf.flush(&mut conn.stream) {
+                                Ok(true) => {}
+                                Ok(false) => all_empty = false,
+                                Err(_) => {}
+                            }
+                        }
+                        if all_empty || Instant::now() > deadline {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    break;
+                }
+            }
+
+            if !progress {
+                // linear backoff to 10× base: idle connections are
+                // scanned, not epoll-waited (zero-dep contract), so
+                // bound the idle syscall rate
+                idle_ticks = (idle_ticks + 1).min(10);
+                std::thread::sleep(cfg.idle_sleep * idle_ticks);
+            } else {
+                idle_ticks = 0;
+            }
+        }
+
+        metrics.net_inflight.store(0, Ordering::Relaxed);
+        coord.shutdown();
+        coord
+    }
+}
+
+/// Rewrite a reply's correlation id to the client-assigned one (the
+/// coordinator numbers requests itself; the wire keeps client ids).
+fn set_reply_id(reply: &mut Reply, id: u64) {
+    match reply {
+        Reply::Ok(r) => r.id = id,
+        Reply::Grad(g) => g.id = id,
+        Reply::Err(f) => f.id = id,
+    }
+}
+
+/// Handle one decoded frame on `conn`.
+#[allow(clippy::too_many_arguments)]
+fn handle_frame(
+    opcode: u8,
+    payload: &[u8],
+    cid: u64,
+    conn: &mut Conn,
+    coord: &mut Coordinator,
+    routes: &mut BTreeMap<u64, (u64, u64)>,
+    inflight: &mut usize,
+    stop_acks: &mut Vec<u64>,
+    cfg: &NetConfig,
+    draining: &mut bool,
+) {
+    match opcode {
+        op::SOLVE | op::GRAD => {
+            // Admission control runs on the RAW frame: the client id
+            // is the first 8 payload bytes, so rejecting (drain/shed)
+            // never pays the full θ deserialization — keeping the
+            // reject path cheap is the point of shedding.
+            let peek_id = payload
+                .get(..8)
+                .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+                .unwrap_or(0);
+            if *draining {
+                coord
+                    .metrics
+                    .failures
+                    .fetch_add(1, Ordering::Relaxed);
+                conn.push_reply(&Reply::Err(Failure::new(
+                    peek_id,
+                    FailureKind::Shutdown,
+                    "server is draining",
+                )));
+                return;
+            }
+            if *inflight >= cfg.max_inflight {
+                // shed instead of queueing: the reply goes out on this
+                // tick, the connection stays healthy
+                coord
+                    .metrics
+                    .shed
+                    .fetch_add(1, Ordering::Relaxed);
+                coord
+                    .metrics
+                    .failures
+                    .fetch_add(1, Ordering::Relaxed);
+                conn.push_reply(&Reply::Err(Failure::new(
+                    peek_id,
+                    FailureKind::Overloaded,
+                    format!(
+                        "in-flight budget {} exhausted; retry later",
+                        cfg.max_inflight
+                    ),
+                )));
+                return;
+            }
+            let req = match proto::decode_request(opcode, payload) {
+                Ok(r) => r,
+                Err(e) => {
+                    coord
+                        .metrics
+                        .failures
+                        .fetch_add(1, Ordering::Relaxed);
+                    conn.push_reply(&Reply::Err(Failure::new(
+                        0,
+                        FailureKind::Invalid,
+                        format!("{e}"),
+                    )));
+                    conn.closing = true;
+                    return;
+                }
+            };
+            // hand the decoded request straight to the coordinator —
+            // its decode-time `submitted` stamp survives, so latency
+            // accounting starts at server-side decode as documented
+            let client_id = req.id;
+            let sid = coord.submit_request(req);
+            routes.insert(sid, (cid, client_id));
+            conn.inflight += 1;
+            *inflight += 1;
+        }
+        op::STATS | op::LAYERS | op::STOP => {
+            // admin requests carry no payload; trailing bytes are the
+            // same framing violation the codec rejects elsewhere
+            if !payload.is_empty() {
+                coord
+                    .metrics
+                    .failures
+                    .fetch_add(1, Ordering::Relaxed);
+                conn.push_reply(&Reply::Err(Failure::new(
+                    0,
+                    FailureKind::Invalid,
+                    format!(
+                        "{} trailing bytes on admin opcode 0x{opcode:02x}",
+                        payload.len()
+                    ),
+                )));
+                conn.closing = true;
+                return;
+            }
+            match opcode {
+                op::STATS => {
+                    let text = coord.metrics.render_text();
+                    conn.wbuf.push(&proto::encode_stats_reply(&text));
+                }
+                op::LAYERS => {
+                    conn.wbuf.push(&proto::encode_layers_reply(
+                        coord.layer_dims(),
+                    ));
+                }
+                _ => {
+                    // STOP: the ack (a final stats frame) is deferred
+                    // to the end of the drain so it reflects work that
+                    // finishes during it
+                    *draining = true;
+                    stop_acks.push(cid);
+                    conn.awaiting_stop_ack = true;
+                }
+            }
+        }
+        other => {
+            coord
+                .metrics
+                .failures
+                .fetch_add(1, Ordering::Relaxed);
+            conn.push_reply(&Reply::Err(Failure::new(
+                0,
+                FailureKind::Invalid,
+                format!("unknown opcode 0x{other:02x}"),
+            )));
+            conn.closing = true;
+        }
+    }
+}

@@ -82,8 +82,11 @@ impl Bencher {
     }
 }
 
-/// Nearest-rank percentile of an ascending-sorted sample vector.
-fn percentile(sorted: &[f64], q: f64) -> f64 {
+/// Nearest-rank percentile of an ascending-sorted, non-empty sample
+/// vector — the single definition every p50/p99 in the crate uses
+/// ([`Stats`], the loadgen report, the serving benches), so reported
+/// quantiles are comparable across surfaces.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     debug_assert!(!sorted.is_empty());
     let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
     sorted[idx.min(sorted.len() - 1)]

@@ -1,0 +1,394 @@
+//! End-to-end tests of the network serving front end: loopback server,
+//! concurrent pipelined clients, solve/VJP parity against direct engine
+//! calls, overload shedding, malformed-frame isolation, admin ops, and
+//! graceful drain.
+
+use altdiff::altdiff::{
+    BackwardMode, DenseAltDiff, Options, Param, SparseAltDiff,
+};
+use altdiff::coordinator::{
+    Config, Coordinator, FailureKind, Reply,
+};
+use altdiff::net::frame::{blocking, header};
+use altdiff::net::proto::op;
+use altdiff::net::{Client, NetConfig, NetServer, PipelinedClient};
+use altdiff::prob::{dense_qp, sparsemax_qp};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Coordinator with one dense and one sparse layer (native backend).
+fn test_coordinator() -> Coordinator {
+    Coordinator::builder(Config {
+        workers: 2,
+        max_batch: 4,
+        batch_deadline: Duration::from_millis(1),
+        artifacts: None,
+        ..Default::default()
+    })
+    .register("dense12", dense_qp(12, 6, 3, 9), 1.0)
+    .unwrap()
+    .register_sparse("smax40", sparsemax_qp(40, 11), 1.0)
+    .unwrap()
+    .start()
+}
+
+struct Loopback {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<Coordinator>,
+}
+
+fn start_server(cfg: NetConfig) -> Loopback {
+    let coord = test_coordinator();
+    let server =
+        NetServer::bind("127.0.0.1:0", coord, cfg).expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run());
+    Loopback { addr, stop, handle }
+}
+
+impl Loopback {
+    fn finish(self) -> Coordinator {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handle.join().expect("server thread")
+    }
+}
+
+#[test]
+fn concurrent_pipelined_clients_pin_solves_and_vjps_to_direct_calls() {
+    let lb = start_server(NetConfig::default());
+    let addr = lb.addr;
+    let qp = dense_qp(12, 6, 3, 9);
+    let sq = sparsemax_qp(40, 11);
+
+    // ≥4 concurrent pipelined clients, mixing dense solves, dense
+    // grads, and sparse solves
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        let qp = qp.clone();
+        let sq = sq.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut cl =
+                PipelinedClient::connect(addr, 4).expect("connect");
+            let mut replies = Vec::new();
+            for i in 0..6 {
+                let s = 1.0 + 0.02 * (c * 6 + i) as f64;
+                let drained = match i % 3 {
+                    0 => cl.submit(
+                        "dense12",
+                        qp.q.iter().map(|&v| v * s).collect(),
+                        qp.b.clone(),
+                        qp.h.clone(),
+                        None,
+                        1e-3,
+                    ),
+                    1 => cl.submit(
+                        "dense12",
+                        qp.q.iter().map(|&v| v * s).collect(),
+                        qp.b.clone(),
+                        qp.h.clone(),
+                        Some((0..12)
+                            .map(|j| 1.0 - 0.1 * j as f64)
+                            .collect()),
+                        1e-3,
+                    ),
+                    _ => cl.submit(
+                        "smax40",
+                        sq.q.iter().map(|&v| v * s).collect(),
+                        sq.b.clone(),
+                        sq.h.clone(),
+                        None,
+                        1e-3,
+                    ),
+                };
+                replies.extend(drained.expect("submit"));
+            }
+            replies.extend(cl.drain().expect("drain"));
+            (c, replies)
+        }));
+    }
+
+    let dense = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+    let sparse = SparseAltDiff::new(sq.clone(), 1.0).unwrap();
+    let mut total = 0;
+    for h in handles {
+        let (c, replies) = h.join().expect("client thread");
+        assert_eq!(replies.len(), 6, "client {c} lost replies");
+        total += replies.len();
+        for t in replies {
+            match &t.reply {
+                Reply::Ok(r) => {
+                    // reconstruct this request's θ from its client id
+                    // (ids are 1-based per connection, in send order)
+                    let i = t.reply.id() - 1;
+                    let s = 1.0 + 0.02 * (c * 6 + i) as f64;
+                    let opts = Options {
+                        tol: 0.0,
+                        max_iter: r.k_used,
+                        backward: BackwardMode::Forward(Param::B),
+                        ..Default::default()
+                    };
+                    let direct = if i % 3 == 2 {
+                        let q: Vec<f64> =
+                            sq.q.iter().map(|&v| v * s).collect();
+                        sparse.solve_with(Some(&q), None, None, &opts)
+                    } else {
+                        let q: Vec<f64> =
+                            qp.q.iter().map(|&v| v * s).collect();
+                        dense.solve_with(Some(&q), None, None, &opts)
+                    };
+                    assert_eq!(r.x.len(), direct.x.len());
+                    for (a, b) in r.x.iter().zip(&direct.x) {
+                        assert!(
+                            (a - b).abs() < 1e-8,
+                            "served x {a} vs direct {b}"
+                        );
+                    }
+                    assert!(t.rtt > 0.0, "rtt measured");
+                }
+                Reply::Grad(g) => {
+                    let i = t.reply.id() - 1;
+                    let s = 1.0 + 0.02 * (c * 6 + i) as f64;
+                    let q: Vec<f64> =
+                        qp.q.iter().map(|&v| v * s).collect();
+                    let v: Vec<f64> =
+                        (0..12).map(|j| 1.0 - 0.1 * j as f64).collect();
+                    let opts = Options {
+                        tol: 0.0,
+                        max_iter: g.k_used,
+                        backward: BackwardMode::Adjoint,
+                        ..Default::default()
+                    };
+                    let direct = dense
+                        .solve_vjp(Some(&q), None, None, &v, &opts);
+                    for (a, b) in
+                        g.grad_q.iter().zip(&direct.vjp.grad_q)
+                    {
+                        assert!(
+                            (a - b).abs() < 1e-8,
+                            "served grad_q {a} vs direct {b}"
+                        );
+                    }
+                    for (a, b) in
+                        g.grad_h.iter().zip(&direct.vjp.grad_h)
+                    {
+                        assert!((a - b).abs() < 1e-8);
+                    }
+                }
+                Reply::Err(f) => {
+                    panic!("unexpected failure: {}", f.error)
+                }
+            }
+        }
+    }
+    assert_eq!(total, 24);
+    let coord = lb.finish();
+    let ord = Ordering::Relaxed;
+    assert!(coord.metrics.requests.load(ord) >= 24);
+    assert_eq!(coord.metrics.shed.load(ord), 0);
+}
+
+#[test]
+fn tiny_inflight_budget_sheds_with_overloaded_never_drops() {
+    let lb = start_server(NetConfig {
+        max_inflight: 1,
+        ..Default::default()
+    });
+    let addr = lb.addr;
+    let qp = dense_qp(12, 6, 3, 9);
+    let mut handles = Vec::new();
+    for c in 0..2u64 {
+        let qp = qp.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut cl =
+                PipelinedClient::connect(addr, 32).expect("connect");
+            let mut replies = Vec::new();
+            for i in 0..32 {
+                let s = 1.0 + 0.01 * (c * 32 + i) as f64;
+                replies.extend(
+                    cl.submit(
+                        "dense12",
+                        qp.q.iter().map(|&v| v * s).collect(),
+                        qp.b.clone(),
+                        qp.h.clone(),
+                        None,
+                        1e-3,
+                    )
+                    .expect("submit"),
+                );
+            }
+            replies.extend(cl.drain().expect("drain"));
+            replies
+        }));
+    }
+    let mut ok = 0;
+    let mut shed = 0;
+    let mut answered = 0;
+    for h in handles {
+        let replies = h.join().expect("client");
+        // never dropped: every request came back exactly once
+        assert_eq!(replies.len(), 32, "replies lost under overload");
+        answered += replies.len();
+        for t in replies {
+            match &t.reply {
+                Reply::Ok(_) => ok += 1,
+                Reply::Err(f) => {
+                    assert_eq!(
+                        f.kind,
+                        FailureKind::Overloaded,
+                        "unexpected failure kind: {}",
+                        f.error
+                    );
+                    assert!(f.error.contains("budget"));
+                    shed += 1;
+                }
+                Reply::Grad(_) => panic!("no grads sent"),
+            }
+        }
+    }
+    assert_eq!(answered, 64);
+    assert!(ok >= 1, "budget of 1 still serves");
+    assert!(shed >= 1, "64 pipelined requests at budget 1 must shed");
+    let coord = lb.finish();
+    assert_eq!(
+        coord.metrics.shed.load(Ordering::Relaxed),
+        shed as u64,
+        "server-side shed counter matches client-observed sheds"
+    );
+}
+
+#[test]
+fn malformed_frames_close_the_connection_without_poisoning_the_rest() {
+    let lb = start_server(NetConfig::default());
+    let addr = lb.addr;
+
+    // garbage bytes: server answers with a protocol Failure frame (or
+    // just closes) and the connection dies
+    let mut bad = TcpStream::connect(addr).expect("connect");
+    blocking::write_frame(&mut bad, &[0xFFu8; 32]).unwrap();
+    bad.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    match blocking::read_frame(&mut bad) {
+        Ok(f) => {
+            assert_eq!(f.op, op::R_ERR, "expected protocol failure");
+        }
+        Err(_) => {} // server may close before we read — also legal
+    }
+
+    // truncated-header frame followed by silence: no reply owed; just
+    // make sure the server stays up
+    let mut trunc = TcpStream::connect(addr).expect("connect");
+    blocking::write_frame(&mut trunc, &header(op::SOLVE, 64)[..6])
+        .unwrap();
+
+    // valid frame with an oversized declared payload
+    let mut big = TcpStream::connect(addr).expect("connect");
+    let mut hdr = header(op::SOLVE, 0).to_vec();
+    hdr[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+    blocking::write_frame(&mut big, &hdr).unwrap();
+    big.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    if let Ok(f) = blocking::read_frame(&mut big) {
+        assert_eq!(f.op, op::R_ERR);
+    }
+
+    // ...and a healthy client is entirely unaffected
+    let qp = dense_qp(12, 6, 3, 9);
+    let mut good = Client::connect(addr).expect("connect");
+    good.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    match good
+        .solve("dense12", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-3)
+        .expect("healthy solve")
+    {
+        Reply::Ok(r) => {
+            assert_eq!(r.x.len(), 12);
+            assert!(r.x.iter().all(|v| v.is_finite()));
+        }
+        other => panic!("expected solve reply, got {other:?}"),
+    }
+    lb.finish();
+}
+
+#[test]
+fn unknown_layer_and_bad_dims_come_back_as_invalid_failures() {
+    let lb = start_server(NetConfig::default());
+    let mut cl = Client::connect(lb.addr).expect("connect");
+    cl.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    match cl
+        .solve("nope", vec![0.0; 3], vec![], vec![], 1e-3)
+        .expect("reply")
+    {
+        Reply::Err(f) => {
+            assert_eq!(f.kind, FailureKind::Invalid);
+            assert!(f.error.contains("unknown layer"));
+        }
+        other => panic!("expected failure, got {other:?}"),
+    }
+    match cl
+        .solve("dense12", vec![0.0; 3], vec![0.0; 3], vec![0.0; 6], 1e-3)
+        .expect("reply")
+    {
+        Reply::Err(f) => {
+            assert_eq!(f.kind, FailureKind::Invalid);
+            assert!(f.error.contains("dims"));
+        }
+        other => panic!("expected failure, got {other:?}"),
+    }
+    lb.finish();
+}
+
+#[test]
+fn admin_ops_expose_layers_and_prometheus_stats() {
+    let lb = start_server(NetConfig::default());
+    let mut cl = Client::connect(lb.addr).expect("connect");
+    cl.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    let layers = cl.layers().expect("layers");
+    let names: Vec<&str> =
+        layers.iter().map(|l| l.name.as_str()).collect();
+    assert!(names.contains(&"dense12"));
+    assert!(names.contains(&"smax40"));
+    let d = layers.iter().find(|l| l.name == "dense12").unwrap();
+    assert_eq!((d.n, d.m, d.p), (12, 6, 3));
+
+    let qp = dense_qp(12, 6, 3, 9);
+    cl.solve("dense12", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-2)
+        .expect("solve");
+    let stats = cl.stats().expect("stats");
+    assert!(stats.contains("altdiff_requests_total"));
+    assert!(stats.contains("# TYPE altdiff_latency_us histogram"));
+    assert!(stats.contains("altdiff_queue_depth"));
+    assert!(stats.contains("le=\"+Inf\""));
+    lb.finish();
+}
+
+#[test]
+fn wire_stop_drains_gracefully_and_idle_peers_get_a_goodbye() {
+    let lb = start_server(NetConfig::default());
+    let addr = lb.addr;
+
+    // an idle connection that just listens
+    let mut idle = TcpStream::connect(addr).expect("connect");
+    idle.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // a working client completes a request, then stops the server
+    let qp = dense_qp(12, 6, 3, 9);
+    let mut cl = Client::connect(addr).expect("connect");
+    cl.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    cl.solve("dense12", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-3)
+        .expect("solve");
+    let final_stats = cl.stop_server().expect("stop ack");
+    assert!(final_stats.contains("altdiff_responses_total"));
+
+    // the idle peer receives the goodbye frame before close
+    let f = blocking::read_frame(&mut idle).expect("goodbye frame");
+    assert_eq!(f.op, op::R_GOODBYE);
+
+    let coord = lb.handle.join().expect("server thread");
+    let ord = Ordering::Relaxed;
+    assert!(coord.metrics.responses.load(ord) >= 1);
+    assert_eq!(coord.metrics.net_inflight.load(ord), 0);
+    // the coordinator behind the server was shut down cleanly too:
+    // its reply channel is drained and closed
+    assert!(coord.try_recv().is_none());
+}

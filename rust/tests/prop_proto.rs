@@ -1,0 +1,281 @@
+//! Property tests for the wire codec: encode∘decode == identity over
+//! randomized requests/replies (solve, grad, and failure variants), and
+//! hostile-input tests — truncated frames, oversized length prefixes,
+//! wrong version, garbage bytes — all return `Err`, never panic or
+//! over-allocate.
+
+use altdiff::coordinator::{
+    Failure, FailureKind, GradientResponse, Reply, Request, Response,
+};
+use altdiff::net::frame::{
+    header, parse_header, FrameReader, HEADER_LEN, MAX_PAYLOAD,
+};
+use altdiff::net::proto::{self, op};
+use altdiff::util::Pcg64;
+use std::time::Instant;
+
+fn rand_vec(rng: &mut Pcg64, max_len: usize) -> Vec<f64> {
+    let n = rng.below(max_len + 1);
+    rng.normal_vec(n)
+}
+
+fn rand_name(rng: &mut Pcg64) -> String {
+    let n = 1 + rng.below(12);
+    (0..n)
+        .map(|_| (b'a' + rng.below(26) as u8) as char)
+        .collect()
+}
+
+fn rand_request(rng: &mut Pcg64, grad: bool) -> Request {
+    Request {
+        id: rng.next_u64(),
+        layer: rand_name(rng),
+        q: rand_vec(rng, 40),
+        b: rand_vec(rng, 10),
+        h: rand_vec(rng, 20),
+        tol: 10f64.powi(-(rng.below(9) as i32)),
+        grad_v: grad.then(|| rand_vec(rng, 40)),
+        submitted: Instant::now(),
+    }
+}
+
+fn strip(frame: &[u8]) -> (u8, Vec<u8>) {
+    let (op_, len) = parse_header(frame).expect("header");
+    assert_eq!(frame.len(), HEADER_LEN + len, "frame length consistent");
+    (op_, frame[HEADER_LEN..].to_vec())
+}
+
+#[test]
+fn request_encode_decode_is_identity() {
+    let mut rng = Pcg64::new(11);
+    for trial in 0..200 {
+        let grad = trial % 2 == 1;
+        let req = rand_request(&mut rng, grad);
+        let (op_, payload) = strip(&proto::encode_request(&req));
+        assert_eq!(op_, if grad { op::GRAD } else { op::SOLVE });
+        let back = proto::decode_request(op_, &payload).unwrap();
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.layer, req.layer);
+        assert_eq!(back.q, req.q);
+        assert_eq!(back.b, req.b);
+        assert_eq!(back.h, req.h);
+        assert_eq!(back.tol, req.tol);
+        assert_eq!(back.grad_v, req.grad_v);
+    }
+}
+
+#[test]
+fn reply_encode_decode_is_identity_all_variants() {
+    let mut rng = Pcg64::new(12);
+    let backends = ["native", "native-sparse", "pjrt"];
+    for trial in 0..200 {
+        let reply = match trial % 3 {
+            0 => Reply::Ok(Response {
+                id: rng.next_u64(),
+                x: rand_vec(&mut rng, 50),
+                jx: rand_vec(&mut rng, 100),
+                prim_residual: rng.normal().abs(),
+                k_used: rng.below(100),
+                batch_size: 1 + rng.below(32),
+                latency: rng.uniform(),
+                backend: backends[rng.below(3)],
+            }),
+            1 => Reply::Grad(GradientResponse {
+                id: rng.next_u64(),
+                x: rand_vec(&mut rng, 50),
+                grad_q: rand_vec(&mut rng, 50),
+                grad_b: rand_vec(&mut rng, 10),
+                grad_h: rand_vec(&mut rng, 25),
+                prim_residual: rng.normal().abs(),
+                k_used: rng.below(100),
+                batch_size: 1 + rng.below(32),
+                latency: rng.uniform(),
+                backend: backends[rng.below(2)],
+            }),
+            _ => Reply::Err(Failure::new(
+                rng.next_u64(),
+                FailureKind::from_code(rng.below(4) as u8).unwrap(),
+                rand_name(&mut rng),
+            )),
+        };
+        let (op_, payload) = strip(&proto::encode_reply(&reply));
+        let back = proto::decode_reply(op_, &payload).unwrap();
+        match (&reply, &back) {
+            (Reply::Ok(a), Reply::Ok(b)) => {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.x, b.x);
+                assert_eq!(a.jx, b.jx);
+                assert_eq!(a.prim_residual, b.prim_residual);
+                assert_eq!(a.k_used, b.k_used);
+                assert_eq!(a.batch_size, b.batch_size);
+                assert_eq!(a.latency, b.latency);
+                assert_eq!(a.backend, b.backend);
+            }
+            (Reply::Grad(a), Reply::Grad(b)) => {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.x, b.x);
+                assert_eq!(a.grad_q, b.grad_q);
+                assert_eq!(a.grad_b, b.grad_b);
+                assert_eq!(a.grad_h, b.grad_h);
+                assert_eq!(a.backend, b.backend);
+            }
+            (Reply::Err(a), Reply::Err(b)) => {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.kind, b.kind);
+                assert_eq!(a.error, b.error);
+            }
+            _ => panic!("arm changed across the wire"),
+        }
+    }
+}
+
+#[test]
+fn every_truncation_of_a_valid_frame_errs_or_waits_never_panics() {
+    let mut rng = Pcg64::new(13);
+    let req = rand_request(&mut rng, true);
+    let frame = proto::encode_request(&req);
+    // frame-level: a FrameReader holding any prefix either says "need
+    // more bytes" or (for a complete frame) yields it — never Err on a
+    // prefix of valid bytes, never a panic
+    for cut in 0..frame.len() {
+        let mut r = FrameReader::new();
+        r.extend(&frame[..cut]);
+        match r.next_frame() {
+            Ok(None) => {}
+            Ok(Some(_)) => panic!("complete frame from {cut} bytes"),
+            Err(e) => panic!("prefix of valid frame errored: {e}"),
+        }
+    }
+    // payload-level: every strict prefix of the payload must decode to
+    // Err (truncated field), never panic
+    let (op_, payload) = strip(&frame);
+    for cut in 0..payload.len() {
+        assert!(
+            proto::decode_request(op_, &payload[..cut]).is_err(),
+            "payload prefix {cut}/{} decoded",
+            payload.len()
+        );
+    }
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_allocation() {
+    // header claiming a payload over MAX_PAYLOAD
+    let mut h = header(op::SOLVE, 0).to_vec();
+    h[4..8].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+    assert!(parse_header(&h).is_err());
+    let mut r = FrameReader::new();
+    r.extend(&h);
+    assert!(r.next_frame().is_err());
+    // in-payload: a vector count far beyond the payload fails before
+    // the decoder allocates (would be 32 GiB if it trusted the count)
+    let mut w_payload = Vec::new();
+    w_payload.extend_from_slice(&7u64.to_le_bytes()); // id
+    w_payload.extend_from_slice(&1e-3f64.to_le_bytes()); // tol
+    w_payload.extend_from_slice(&1u16.to_le_bytes()); // layer len
+    w_payload.push(b'l');
+    w_payload.extend_from_slice(&u32::MAX.to_le_bytes()); // q count
+    assert!(proto::decode_request(op::SOLVE, &w_payload).is_err());
+}
+
+#[test]
+fn wrong_version_and_magic_are_rejected() {
+    let good = proto::encode_request(&Request {
+        id: 1,
+        layer: "l".into(),
+        q: vec![1.0],
+        b: vec![],
+        h: vec![],
+        tol: 0.1,
+        grad_v: None,
+        submitted: Instant::now(),
+    });
+    let mut bad_ver = good.clone();
+    bad_ver[1] = 2; // future version
+    let mut r = FrameReader::new();
+    r.extend(&bad_ver);
+    assert!(r.next_frame().is_err());
+    let mut bad_magic = good.clone();
+    bad_magic[0] = 0x00;
+    let mut r = FrameReader::new();
+    r.extend(&bad_magic);
+    assert!(r.next_frame().is_err());
+}
+
+#[test]
+fn garbage_bytes_never_panic_the_decoder() {
+    let mut rng = Pcg64::new(14);
+    for _ in 0..300 {
+        let n = rng.below(256);
+        let bytes: Vec<u8> =
+            (0..n).map(|_| rng.next_u64() as u8).collect();
+        // frame layer
+        let mut r = FrameReader::new();
+        r.extend(&bytes);
+        let _ = r.next_frame(); // Ok(None), Ok(Some), or Err — no panic
+        // payload layer, every opcode
+        for op_ in
+            [op::SOLVE, op::GRAD, op::R_SOLVE, op::R_GRAD, op::R_ERR]
+        {
+            match op_ {
+                op::SOLVE | op::GRAD => {
+                    let _ = proto::decode_request(op_, &bytes);
+                }
+                _ => {
+                    let _ = proto::decode_reply(op_, &bytes);
+                }
+            }
+        }
+        let _ = proto::decode_stats_reply(&bytes);
+        let _ = proto::decode_layers_reply(&bytes);
+        let _ = proto::decode_goodbye(&bytes);
+    }
+}
+
+#[test]
+fn garbage_tail_after_valid_fields_is_rejected() {
+    let mut rng = Pcg64::new(15);
+    let req = rand_request(&mut rng, false);
+    let (op_, payload) = strip(&proto::encode_request(&req));
+    let mut padded = payload.clone();
+    padded.extend_from_slice(&[1, 2, 3]);
+    assert!(proto::decode_request(op_, &padded).is_err());
+}
+
+#[test]
+fn request_reply_opcode_confusion_is_an_error() {
+    let mut rng = Pcg64::new(16);
+    let req = rand_request(&mut rng, false);
+    let (_, payload) = strip(&proto::encode_request(&req));
+    assert!(proto::decode_reply(op::SOLVE, &payload).is_err());
+    assert!(proto::decode_request(op::R_SOLVE, &payload).is_err());
+    assert!(proto::decode_request(op::STATS, &[]).is_err());
+}
+
+#[test]
+fn frame_reader_survives_interleaved_valid_frames_split_arbitrarily() {
+    let mut rng = Pcg64::new(17);
+    // a stream of 20 frames chopped at random points must reassemble
+    // to exactly those 20 frames
+    let mut stream = Vec::new();
+    let mut expect = Vec::new();
+    for i in 0..20 {
+        let req = rand_request(&mut rng, i % 3 == 0);
+        expect.push(req.id);
+        stream.extend_from_slice(&proto::encode_request(&req));
+    }
+    let mut r = FrameReader::new();
+    let mut got = Vec::new();
+    let mut pos = 0;
+    while pos < stream.len() {
+        let step = 1 + rng.below(97);
+        let end = (pos + step).min(stream.len());
+        r.extend(&stream[pos..end]);
+        pos = end;
+        while let Some(f) = r.next_frame().unwrap() {
+            let req = proto::decode_request(f.op, &f.payload).unwrap();
+            got.push(req.id);
+        }
+    }
+    assert_eq!(got, expect);
+}
