@@ -60,6 +60,7 @@ fn run_net(nreq: usize, window: usize, clients: usize) -> Cell {
             layer: LAYER.to_string(),
             tol: 1e-3,
             seed: 1,
+            sessions: false,
         },
     )
     .expect("loadgen");

@@ -14,6 +14,7 @@ use crate::linalg::{
     self, gemm_acc, gemv_acc, gemv_t_acc, norm2, Chol, Mat,
 };
 use crate::prob::Qp;
+use crate::warm::{AdjointSeed, WarmStart};
 
 /// A registered dense QP layer: problem structure + cached factorization.
 pub struct DenseAltDiff {
@@ -76,6 +77,30 @@ impl DenseAltDiff {
         h: Option<&[f64]>,
         opts: &Options,
     ) -> Solution {
+        self.solve_from(q, b, h, None, opts)
+    }
+
+    /// [`Self::solve_with`] resuming the primal/dual alternation from a
+    /// prior iterate triple instead of zero. The warm slack is derived
+    /// from the triple via the (6) projection s = max(0, −ν/ρ −
+    /// (Gx − h)) against the *requested* h, so a fixed-point triple
+    /// reproduces its own slack exactly; `warm = None` is bit-identical
+    /// to the cold [`Self::solve_with`].
+    ///
+    /// Warm starts compose with [`BackwardMode::None`] and
+    /// [`BackwardMode::Adjoint`] at any tolerance, and with
+    /// [`BackwardMode::Forward`] only at `tol = 0` (fixed-k): a warm
+    /// primal converges before the cold Jacobian recursion does, so a
+    /// tol-truncated forward-mode run would stop with the Jacobian
+    /// still wrong (asserted; see DESIGN.md §5).
+    pub fn solve_from(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        warm: Option<&WarmStart>,
+        opts: &Options,
+    ) -> Solution {
         let n = self.qp.n();
         let m = self.qp.m_ineq();
         let p = self.qp.p_eq();
@@ -90,6 +115,23 @@ impl DenseAltDiff {
         let mut s = vec![0.0; m];
         let mut lam = vec![0.0; p];
         let mut nu = vec![0.0; m];
+        if let Some(w) = warm {
+            assert!(
+                opts.backward.forward_param().is_none() || opts.tol == 0.0,
+                "warm starts with forward-mode Jacobians require tol = 0 \
+                 (fixed-k); use BackwardMode::None/Adjoint for truncated \
+                 warm solves"
+            );
+            assert_eq!(w.dims(), (n, p, m), "warm-start dimensions");
+            x.copy_from_slice(&w.x);
+            lam.copy_from_slice(&w.lam);
+            nu.copy_from_slice(&w.nu);
+            let mut gx0 = vec![0.0; m];
+            gemv_acc(&mut gx0, 1.0, &self.qp.g, &x);
+            for i in 0..m {
+                s[i] = (-nu[i] / rho - (gx0[i] - h[i])).max(0.0);
+            }
+        }
 
         // Jacobian state (eq. 7), present only in forward mode.
         let param = opts.backward.forward_param();
@@ -283,6 +325,23 @@ impl DenseAltDiff {
     /// the adjoint iterate z (`opts.tol`; `tol = 0` runs exactly
     /// `opts.max_iter` iterations, the serving contract).
     pub fn vjp(&self, slack: &[f64], v: &[f64], opts: &Options) -> Vjp {
+        self.vjp_from(slack, v, None, opts).0
+    }
+
+    /// [`Self::vjp`] resuming the transposed recursion from a prior
+    /// adjoint state and returning the final state for the next caller
+    /// to reuse. The recursion w ← Mᵀw + V converges to its fixed point
+    /// from any start, so a seed harvested from a previous backward (at
+    /// a nearby v and slack pattern) cuts the iteration count the same
+    /// way a primal warm start cuts the forward pass; `warm = None` is
+    /// bit-identical to the cold [`Self::vjp`].
+    pub fn vjp_from(
+        &self,
+        slack: &[f64],
+        v: &[f64],
+        warm: Option<&AdjointSeed>,
+        opts: &Options,
+    ) -> (Vjp, AdjointSeed) {
         let n = self.qp.n();
         let m = self.qp.m_ineq();
         let p = self.qp.p_eq();
@@ -302,12 +361,21 @@ impl DenseAltDiff {
         let mut vl = vec![0.0; p];
         gemv_acc(&mut vl, 1.0, &self.qp.a, &t);
 
-        // W₁ = V (first application of the series Σ (Mᵀ)ʲ V)
+        // W₁ = V (first application of the series Σ (Mᵀ)ʲ V), unless a
+        // prior adjoint state resumes the series further along
         let mut ws: Vec<f64> = vn.iter().map(|&g| rho * g).collect();
         let mut wl = vl.clone();
         let mut wn = vn.clone();
 
         let mut z = vec![0.0; n];
+        let seeded = warm.is_some();
+        if let Some(seed) = warm {
+            assert_eq!(seed.dims(), (n, p, m), "adjoint-seed dimensions");
+            ws.copy_from_slice(&seed.ws);
+            wl.copy_from_slice(&seed.wl);
+            wn.copy_from_slice(&seed.wn);
+            z.copy_from_slice(&seed.z);
+        }
         let mut zprev = vec![0.0; n];
         let mut rhs = vec![0.0; n];
         let mut dws = vec![0.0; m];
@@ -364,12 +432,25 @@ impl DenseAltDiff {
                 .sum::<f64>()
                 .sqrt();
             step_rel = dz / norm2(&zprev).max(1.0);
-            if step_rel < opts.tol {
+            // a seeded first iteration reproduces the harvested z
+            // exactly (z₁ = zstep(w₀) = seed.z under unchanged gates),
+            // so its zero step says nothing about convergence for the
+            // NEW v — require one genuine step before trusting it
+            if step_rel < opts.tol && (k > 1 || !seeded) {
                 break;
             }
         }
         // final z at the converged adjoint state
         zstep(&mut rhs, &mut z, &mut dws, &mut ewn, &ws, &wl, &wn);
+
+        // the reusable adjoint state, harvested before the projection
+        // consumes the w's
+        let seed_out = AdjointSeed {
+            z: z.clone(),
+            ws: ws.clone(),
+            wl: wl.clone(),
+            wn: wn.clone(),
+        };
 
         // project: grad_q = z+t; grad_b = −ρA(z+t) − ρw_λ;
         // grad_h = −ρG(z+t) + σ⊙wₛ − ρ(1−σ)⊙w_ν.
@@ -381,7 +462,7 @@ impl DenseAltDiff {
             .map(|i| gate[i] * ws[i] - rho * (1.0 - gate[i]) * wn[i])
             .collect();
         gemv_acc(&mut grad_h, -rho, &self.qp.g, &zt);
-        Vjp { grad_q: zt, grad_b, grad_h, iters, step_rel }
+        (Vjp { grad_q: zt, grad_b, grad_h, iters, step_rel }, seed_out)
     }
 
     /// Forward solve + reverse-mode backward in one call: solves the QP

@@ -17,6 +17,7 @@ use crate::error::Result;
 use crate::linalg::{dot, norm2, Mat};
 use crate::prob::SparseQp;
 use crate::sparse::{cg, Csr, HessianOp};
+use crate::warm::{AdjointSeed, WarmStart};
 
 /// Forward-mode backward work buffers for the sparse path, allocated
 /// once per solve and reused every iteration.
@@ -153,6 +154,25 @@ impl SparseAltDiff {
         h: Option<&[f64]>,
         opts: &Options,
     ) -> Solution {
+        self.solve_from(q, b, h, None, opts)
+    }
+
+    /// [`Self::solve_with`] resuming from a prior iterate triple — the
+    /// sparse sibling of
+    /// [`DenseAltDiff::solve_from`](super::DenseAltDiff::solve_from),
+    /// with the same semantics: the warm slack is re-derived via the
+    /// (6) projection, `warm = None` is bit-identical to the cold path,
+    /// and warm + forward-mode Jacobians require `tol = 0`. On the CG
+    /// engine the warm x additionally warm-starts the very first inner
+    /// H-solve.
+    pub fn solve_from(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        warm: Option<&WarmStart>,
+        opts: &Options,
+    ) -> Solution {
         let n = self.qp.n();
         let m = self.qp.h.len();
         let p = self.qp.b.len();
@@ -165,6 +185,23 @@ impl SparseAltDiff {
         let mut s = vec![0.0; m];
         let mut lam = vec![0.0; p];
         let mut nu = vec![0.0; m];
+        if let Some(w) = warm {
+            assert!(
+                opts.backward.forward_param().is_none() || opts.tol == 0.0,
+                "warm starts with forward-mode Jacobians require tol = 0 \
+                 (fixed-k); use BackwardMode::None/Adjoint for truncated \
+                 warm solves"
+            );
+            assert_eq!(w.dims(), (n, p, m), "warm-start dimensions");
+            x.copy_from_slice(&w.x);
+            lam.copy_from_slice(&w.lam);
+            nu.copy_from_slice(&w.nu);
+            let mut gx0 = vec![0.0; m];
+            self.qp.g.spmv_acc(&mut gx0, 1.0, &x);
+            for i in 0..m {
+                s[i] = (-nu[i] / rho - (gx0[i] - h[i])).max(0.0);
+            }
+        }
 
         let param = opts.backward.forward_param();
         let d = param.map(|pm| pm.dim(n, m, p));
@@ -392,6 +429,22 @@ impl SparseAltDiff {
     /// warm-started matrix-free CG) and every constraint product a CSR
     /// spmv. Per-iteration cost is O(nnz + n) — independent of d.
     pub fn vjp(&self, slack: &[f64], v: &[f64], opts: &Options) -> Vjp {
+        self.vjp_from(slack, v, None, opts).0
+    }
+
+    /// [`Self::vjp`] resuming the transposed recursion from a prior
+    /// adjoint state and returning the final state for reuse — the
+    /// sparse sibling of
+    /// [`DenseAltDiff::vjp_from`](super::DenseAltDiff::vjp_from). The
+    /// seed's z also warm-starts the first inner CG solve on the CG
+    /// engine; `warm = None` is bit-identical to the cold [`Self::vjp`].
+    pub fn vjp_from(
+        &self,
+        slack: &[f64],
+        v: &[f64],
+        warm: Option<&AdjointSeed>,
+        opts: &Options,
+    ) -> (Vjp, AdjointSeed) {
         let n = self.qp.n();
         let m = self.qp.h.len();
         let p = self.qp.b.len();
@@ -415,6 +468,14 @@ impl SparseAltDiff {
         let mut wn = vn.clone();
 
         let mut z = vec![0.0; n];
+        let seeded = warm.is_some();
+        if let Some(seed) = warm {
+            assert_eq!(seed.dims(), (n, p, m), "adjoint-seed dimensions");
+            ws.copy_from_slice(&seed.ws);
+            wl.copy_from_slice(&seed.wl);
+            wn.copy_from_slice(&seed.wn);
+            z.copy_from_slice(&seed.z);
+        }
         let mut zprev = vec![0.0; n];
         let mut rhs = vec![0.0; n];
         let mut dws = vec![0.0; m];
@@ -468,11 +529,21 @@ impl SparseAltDiff {
                 .sum::<f64>()
                 .sqrt();
             step_rel = dz / norm2(&zprev).max(1.0);
-            if step_rel < opts.tol {
+            // seeded first iteration reproduces the harvested z (zero
+            // step under unchanged gates) — require one genuine step
+            if step_rel < opts.tol && (k > 1 || !seeded) {
                 break;
             }
         }
         zstep(&mut rhs, &mut z, &mut dws, &mut ewn, &ws, &wl, &wn);
+
+        // the reusable adjoint state, harvested before the projection
+        let seed_out = AdjointSeed {
+            z: z.clone(),
+            ws: ws.clone(),
+            wl: wl.clone(),
+            wn: wn.clone(),
+        };
 
         let zt: Vec<f64> =
             z.iter().zip(&t).map(|(zi, ti)| zi + ti).collect();
@@ -482,7 +553,7 @@ impl SparseAltDiff {
             .map(|i| gate[i] * ws[i] - rho * (1.0 - gate[i]) * wn[i])
             .collect();
         self.qp.g.spmv_acc(&mut grad_h, -rho, &zt);
-        Vjp { grad_q: zt, grad_b, grad_h, iters, step_rel }
+        (Vjp { grad_q: zt, grad_b, grad_h, iters, step_rel }, seed_out)
     }
 
     /// Forward solve + reverse-mode backward in one call (the training

@@ -17,10 +17,11 @@ use super::{BatchSolution, BatchVjp, BatchVjpSolution};
 use crate::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use crate::error::Result;
 use crate::linalg::{
-    axpy_cols, gemm_acc, gemm_acc_cols, gemm_acc_rows, norm2, par_gemm_acc,
-    Mat,
+    axpy_cols, gemm_acc, gemm_acc_cols, gemm_acc_rows, gemv, norm2,
+    par_gemm_acc, Mat,
 };
 use crate::prob::Qp;
+use crate::warm::{AdjointSeed, WarmStart};
 
 /// A registered QP structure ready to solve B right-hand sides per
 /// launch.
@@ -81,6 +82,28 @@ impl BatchedAltDiff {
         hs: Option<&[&[f64]]>,
         opts: &Options,
     ) -> BatchSolution {
+        self.solve_batch_from(qs, bs, hs, None, opts)
+    }
+
+    /// [`Self::solve_batch`] with per-element warm starts: element e
+    /// resumes the alternation from `warms[e]` when present and starts
+    /// cold otherwise — a batch may freely mix warm and cold members,
+    /// and per-element truncation (the existing [`ActiveSet`] masks)
+    /// lets the warm ones converge, freeze, and stop consuming flops
+    /// while cold ones keep iterating. Warm slacks are re-derived via
+    /// the (6) projection like
+    /// [`DenseAltDiff::solve_from`](crate::altdiff::DenseAltDiff::solve_from);
+    /// `warms = None` (or all-`None` elements) is bit-identical to the
+    /// cold [`Self::solve_batch`]. Warm elements with forward-mode
+    /// Jacobians require `tol = 0` (asserted — see DESIGN.md §5).
+    pub fn solve_batch_from(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        warms: Option<&[Option<WarmStart>]>,
+        opts: &Options,
+    ) -> BatchSolution {
         let n = self.qp.n();
         let m = self.qp.m_ineq();
         let p = self.qp.p_eq();
@@ -112,6 +135,34 @@ impl BatchedAltDiff {
         let mut hms = Mat::zeros(bsz, m);
         let mut gx = Mat::zeros(bsz, m);
         let mut ax = Mat::zeros(bsz, p);
+
+        if let Some(ws_) = warms {
+            assert_eq!(ws_.len(), bsz, "warm-start arity");
+            if ws_.iter().any(|w| w.is_some()) {
+                assert!(
+                    opts.backward.forward_param().is_none()
+                        || opts.tol == 0.0,
+                    "warm starts with forward-mode Jacobians require \
+                     tol = 0 (fixed-k); use BackwardMode::None/Adjoint \
+                     for truncated warm solves"
+                );
+            }
+            for (e, w) in ws_.iter().enumerate() {
+                let Some(w) = w else { continue };
+                assert_eq!(w.dims(), (n, p, m), "warm-start dimensions");
+                x.row_mut(e).copy_from_slice(&w.x);
+                lam.row_mut(e).copy_from_slice(&w.lam);
+                nu.row_mut(e).copy_from_slice(&w.nu);
+                // warm slack via the (6) projection at the warm point
+                let gx0 = gemv(&self.qp.g, &w.x);
+                let hr = hm.row(e);
+                let nur = nu.row(e);
+                let sr = s.row_mut(e);
+                for i in 0..m {
+                    sr[i] = (-nur[i] / rho - (gx0[i] - hr[i])).max(0.0);
+                }
+            }
+        }
 
         // Jacobian state: per-element (n×d) blocks stacked along columns
         let param = opts.backward.forward_param();
@@ -239,6 +290,22 @@ impl BatchedAltDiff {
         vs: &[&[f64]],
         opts: &Options,
     ) -> BatchVjp {
+        self.batch_vjp_from(slacks, vs, None, opts).0
+    }
+
+    /// [`Self::batch_vjp`] with per-element warm adjoint seeds, also
+    /// returning every element's final adjoint state for the next
+    /// backward to resume from — the batched sibling of
+    /// [`DenseAltDiff::vjp_from`](crate::altdiff::DenseAltDiff::vjp_from).
+    /// A batch may mix seeded and cold elements; `warms = None` is
+    /// bit-identical to the cold [`Self::batch_vjp`].
+    pub fn batch_vjp_from(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        warms: Option<&[Option<AdjointSeed>]>,
+        opts: &Options,
+    ) -> (BatchVjp, Vec<AdjointSeed>) {
         let n = self.qp.n();
         let m = self.qp.m_ineq();
         let p = self.qp.p_eq();
@@ -267,13 +334,30 @@ impl BatchedAltDiff {
         let mut vl = Mat::zeros(bsz, p);
         par_gemm_acc(&mut vl, 1.0, &t, &self.at);
 
-        // W₁ = V
+        // W₁ = V (per element, unless a seed resumes the series)
         let mut ws = vn.clone();
         ws.scale(rho);
         let mut wl = vl.clone();
         let mut wn = vn.clone();
 
         let mut z = Mat::zeros(bsz, n);
+        let mut seeded = vec![false; bsz];
+        if let Some(seeds) = warms {
+            assert_eq!(seeds.len(), bsz, "adjoint-seed arity");
+            for (e, seed) in seeds.iter().enumerate() {
+                let Some(seed) = seed else { continue };
+                assert_eq!(
+                    seed.dims(),
+                    (n, p, m),
+                    "adjoint-seed dimensions"
+                );
+                ws.row_mut(e).copy_from_slice(&seed.ws);
+                wl.row_mut(e).copy_from_slice(&seed.wl);
+                wn.row_mut(e).copy_from_slice(&seed.wn);
+                z.row_mut(e).copy_from_slice(&seed.z);
+                seeded[e] = true;
+            }
+        }
         let mut zprev = Mat::zeros(bsz, n);
         let mut rhs = Mat::zeros(bsz, n);
         let mut dws = Mat::zeros(bsz, m);
@@ -349,7 +433,11 @@ impl BatchedAltDiff {
                 for i in 0..p {
                     wlr[i] += azr[i] + vlr[i];
                 }
-                // per-element truncation on the adjoint iterate z
+                // per-element truncation on the adjoint iterate z. A
+                // seeded element's first iteration reproduces its
+                // harvested z exactly (zero step under unchanged
+                // gates), so it must take one genuine step before the
+                // criterion is trusted.
                 let zr = z.row(e);
                 let zp = zprev.row(e);
                 let dz: f64 = zr
@@ -360,7 +448,7 @@ impl BatchedAltDiff {
                     .sqrt();
                 let step = dz / norm2(zp).max(1.0);
                 step_rel[e] = step;
-                if step < opts.tol {
+                if step < opts.tol && (k > 1 || !seeded[e]) {
                     act.deactivate(e);
                 }
             }
@@ -388,6 +476,17 @@ impl BatchedAltDiff {
         z.data.fill(0.0);
         par_gemm_acc(&mut z, 1.0, &rhs, &self.hinv);
 
+        // reusable adjoint states, harvested before the projection
+        // consumes z and the w's
+        let seeds_out: Vec<AdjointSeed> = (0..bsz)
+            .map(|e| AdjointSeed {
+                z: z.row(e).to_vec(),
+                ws: ws.row(e).to_vec(),
+                wl: wl.row(e).to_vec(),
+                wn: wn.row(e).to_vec(),
+            })
+            .collect();
+
         // project out all three gradients per element
         let mut zt = z;
         zt.axpy(1.0, &t);
@@ -410,13 +509,16 @@ impl BatchedAltDiff {
         let rows = |mat: &Mat| -> Vec<Vec<f64>> {
             (0..bsz).map(|e| mat.row(e).to_vec()).collect()
         };
-        BatchVjp {
-            grads_q: rows(&zt),
-            grads_b: rows(&gb),
-            grads_h: rows(&gh),
-            iters,
-            step_rel,
-        }
+        (
+            BatchVjp {
+                grads_q: rows(&zt),
+                grads_b: rows(&gb),
+                grads_h: rows(&gh),
+                iters,
+                step_rel,
+            },
+            seeds_out,
+        )
     }
 
     /// Forward batch solve + batched reverse-mode backward in one call:

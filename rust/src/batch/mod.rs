@@ -97,6 +97,18 @@ impl BatchSolution {
     pub fn slack_refs(&self) -> Vec<&[f64]> {
         self.ss.iter().map(|s| s.as_slice()).collect()
     }
+
+    /// Harvest element `e`'s iterate triple for the warm-start cache
+    /// (see [`crate::warm`]) — the input a later
+    /// [`BatchedAltDiff::solve_batch_from`] /
+    /// [`BatchedSparseAltDiff::try_solve_batch_from`] resumes from.
+    pub fn warm_start(&self, e: usize) -> crate::warm::WarmStart {
+        crate::warm::WarmStart::new(
+            self.xs[e].clone(),
+            self.lams[e].clone(),
+            self.nus[e].clone(),
+        )
+    }
 }
 
 /// Per-element results of one batched reverse-mode (adjoint) backward:

@@ -36,6 +36,7 @@ use crate::linalg::Mat;
 use crate::prob::SparseQp;
 use crate::sparse::block_cg::zero_cols;
 use crate::sparse::{block_cg, BlockHessianOp};
+use crate::warm::{AdjointSeed, WarmStart};
 
 /// A registered sparse QP structure ready to solve B instances per
 /// launch.
@@ -167,6 +168,27 @@ impl BatchedSparseAltDiff {
         hs: Option<&[&[f64]]>,
         opts: &Options,
     ) -> Result<BatchSolution> {
+        self.try_solve_batch_from(qs, bs, hs, None, opts)
+    }
+
+    /// [`Self::try_solve_batch`] with per-element warm starts — the
+    /// sparse sibling of
+    /// [`super::BatchedAltDiff::solve_batch_from`]: element e resumes
+    /// from `warms[e]` when present (column e of the element-major
+    /// iterate blocks is seeded, and on the CG engine it warm-starts
+    /// the first inner H-solve), cold otherwise; mixed batches truncate
+    /// per element through the existing [`ActiveSet`] masks. Warm
+    /// slacks come from the (6) projection; `warms = None` is
+    /// bit-identical to the cold path; warm + forward-mode Jacobians
+    /// require `tol = 0` (asserted — see DESIGN.md §5).
+    pub fn try_solve_batch_from(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        warms: Option<&[Option<WarmStart>]>,
+        opts: &Options,
+    ) -> Result<BatchSolution> {
         let n = self.qp.n();
         let m = self.qp.h.len();
         let p = self.qp.b.len();
@@ -200,6 +222,40 @@ impl BatchedSparseAltDiff {
         let mut gx = Mat::zeros(m, bsz);
         let mut ax = Mat::zeros(p, bsz);
         let mut ur = vec![0.0; bsz];
+
+        if let Some(ws_) = warms {
+            assert_eq!(ws_.len(), bsz, "warm-start arity");
+            if ws_.iter().any(|w| w.is_some()) {
+                assert!(
+                    opts.backward.forward_param().is_none()
+                        || opts.tol == 0.0,
+                    "warm starts with forward-mode Jacobians require \
+                     tol = 0 (fixed-k); use BackwardMode::None/Adjoint \
+                     for truncated warm solves"
+                );
+            }
+            for (e, w) in ws_.iter().enumerate() {
+                let Some(w) = w else { continue };
+                assert_eq!(w.dims(), (n, p, m), "warm-start dimensions");
+                for i in 0..n {
+                    x[(i, e)] = w.x[i];
+                }
+                for i in 0..p {
+                    lam[(i, e)] = w.lam[i];
+                }
+                for i in 0..m {
+                    nu[(i, e)] = w.nu[i];
+                }
+                // warm slack via the (6) projection at the warm point
+                let mut gx0 = vec![0.0; m];
+                self.qp.g.spmv_acc(&mut gx0, 1.0, &w.x);
+                for i in 0..m {
+                    s[(i, e)] = (-w.nu[i] / rho
+                        - (gx0[i] - hm[(i, e)]))
+                        .max(0.0);
+                }
+            }
+        }
 
         let is_cg = !self.uses_sherman_morrison();
         let op_fwd = is_cg.then(|| {
@@ -385,6 +441,22 @@ impl BatchedSparseAltDiff {
         vs: &[&[f64]],
         opts: &Options,
     ) -> Result<BatchVjp> {
+        Ok(self.try_batch_vjp_from(slacks, vs, None, opts)?.0)
+    }
+
+    /// [`Self::try_batch_vjp`] with per-element warm adjoint seeds,
+    /// also returning every element's final adjoint state for reuse —
+    /// the sparse sibling of
+    /// [`super::BatchedAltDiff::batch_vjp_from`]. Seeded columns resume
+    /// the transposed recursion (and warm-start the inner CG solves);
+    /// `warms = None` is bit-identical to the cold path.
+    pub fn try_batch_vjp_from(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        warms: Option<&[Option<AdjointSeed>]>,
+        opts: &Options,
+    ) -> Result<(BatchVjp, Vec<AdjointSeed>)> {
         let n = self.qp.n();
         let m = self.qp.h.len();
         let p = self.qp.b.len();
@@ -433,13 +505,36 @@ impl BatchedSparseAltDiff {
         let mut vl = Mat::zeros(p, bsz);
         self.qp.a.spmm_acc(&mut vl, 1.0, &t, &full);
 
-        // W₁ = V
+        // W₁ = V (per element, unless a seed resumes the series)
         let mut ws = vn.clone();
         ws.scale(rho);
         let mut wl = vl.clone();
         let mut wn = vn.clone();
 
         let mut z = Mat::zeros(n, bsz);
+        let mut seeded = vec![false; bsz];
+        if let Some(seeds) = warms {
+            assert_eq!(seeds.len(), bsz, "adjoint-seed arity");
+            for (e, seed) in seeds.iter().enumerate() {
+                let Some(seed) = seed else { continue };
+                assert_eq!(
+                    seed.dims(),
+                    (n, p, m),
+                    "adjoint-seed dimensions"
+                );
+                for i in 0..m {
+                    ws[(i, e)] = seed.ws[i];
+                    wn[(i, e)] = seed.wn[i];
+                }
+                for i in 0..p {
+                    wl[(i, e)] = seed.wl[i];
+                }
+                for i in 0..n {
+                    z[(i, e)] = seed.z[i];
+                }
+                seeded[e] = true;
+            }
+        }
         let mut zprev = Mat::zeros(n, bsz);
         let mut rhs = Mat::zeros(n, bsz);
         let mut dws = Mat::zeros(m, bsz);
@@ -530,7 +625,11 @@ impl BatchedSparseAltDiff {
                     }
                 }
             }
-            // per-element truncation on the adjoint iterate z
+            // per-element truncation on the adjoint iterate z. A
+            // seeded element's first iteration reproduces its
+            // harvested z exactly (zero step under unchanged gates),
+            // so it must take one genuine step before the criterion
+            // is trusted.
             for &e in &live {
                 iters[e] = k + 1;
                 let mut dz2 = 0.0;
@@ -543,7 +642,7 @@ impl BatchedSparseAltDiff {
                 }
                 let step = dz2.sqrt() / zp2.sqrt().max(1.0);
                 step_rel[e] = step;
-                if step < opts.tol {
+                if step < opts.tol && (k > 1 || !seeded[e]) {
                     act.deactivate(e);
                 }
             }
@@ -569,6 +668,17 @@ impl BatchedSparseAltDiff {
             &rhs, &mut z, op.as_ref(), &full, &all_flags, &mut ur,
         )?;
 
+        // reusable adjoint states, harvested before the projection
+        // consumes z and the w's (element-major: one column each)
+        let seeds_out: Vec<AdjointSeed> = (0..bsz)
+            .map(|e| AdjointSeed {
+                z: z.col(e),
+                ws: ws.col(e),
+                wl: wl.col(e),
+                wn: wn.col(e),
+            })
+            .collect();
+
         // project out all three gradients per element
         let mut zt = z;
         zt.axpy(1.0, &t);
@@ -591,13 +701,16 @@ impl BatchedSparseAltDiff {
         let cols = |mat: &Mat| -> Vec<Vec<f64>> {
             (0..bsz).map(|e| mat.col(e)).collect()
         };
-        Ok(BatchVjp {
-            grads_q: cols(&zt),
-            grads_b: cols(&gb),
-            grads_h: cols(&gh),
-            iters,
-            step_rel,
-        })
+        Ok((
+            BatchVjp {
+                grads_q: cols(&zt),
+                grads_b: cols(&gb),
+                grads_h: cols(&gh),
+                iters,
+                step_rel,
+            },
+            seeds_out,
+        ))
     }
 
     /// Forward batch solve + batched reverse-mode backward in one call,

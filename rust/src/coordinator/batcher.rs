@@ -142,6 +142,7 @@ mod tests {
             h: vec![],
             tol: 1e-3,
             grad_v: None,
+            session: None,
             submitted: Instant::now(),
         }
     }

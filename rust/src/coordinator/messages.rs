@@ -24,6 +24,15 @@ pub struct Request {
     /// Jacobian never crosses the channel. `None` is the classic solve
     /// request ([`Response`], which ships ∂x/∂b).
     pub grad_v: Option<Vec<f64>>,
+    /// Optional warm-start session key. Requests sharing a session key
+    /// share a slot in the coordinator's [`crate::warm::WarmStartCache`]
+    /// (when one is configured): each solve's converged iterate seeds
+    /// the session's next solve, however far θ drifted — subject only
+    /// to the cache's staleness radius. `None` falls back to
+    /// content-addressed fingerprinting (hits on exact θ repeats only).
+    /// Remote callers set it per connection (see
+    /// [`crate::net::PipelinedClient::set_session`]).
+    pub session: Option<u64>,
     /// submission timestamp (end-to-end latency accounting)
     pub submitted: Instant,
 }

@@ -32,6 +32,15 @@ pub struct Metrics {
     pub adjoint_elems: AtomicU64,
     /// slots wasted by padding partial batches to the artifact batch size
     pub padded_slots: AtomicU64,
+    /// warm-start cache hits: requests that resumed from a cached
+    /// iterate (only moves when the coordinator's warm cache is enabled)
+    pub warm_hits: AtomicU64,
+    /// warm-start cache lookups that found nothing usable (absent,
+    /// stale, or mismatched dimensions)
+    pub warm_misses: AtomicU64,
+    /// iterations below the routed k that warm-enabled early stopping
+    /// avoided (summed over warm batch elements, forward + adjoint)
+    pub warm_iters_saved: AtomicU64,
     /// truncation-table online corrections
     pub bumps: AtomicU64,
     /// requests shed by admission control (the network front end replies
@@ -198,6 +207,24 @@ impl Metrics {
         );
         c(
             &mut out,
+            "warm_hits_total",
+            "requests resumed from a cached warm-start iterate",
+            self.warm_hits.load(ld),
+        );
+        c(
+            &mut out,
+            "warm_misses_total",
+            "warm-start cache lookups that missed",
+            self.warm_misses.load(ld),
+        );
+        c(
+            &mut out,
+            "warm_iters_saved_total",
+            "iterations under the routed k saved by warm starts",
+            self.warm_iters_saved.load(ld),
+        );
+        c(
+            &mut out,
             "truncation_bumps_total",
             "truncation-table online corrections",
             self.bumps.load(ld),
@@ -245,7 +272,7 @@ impl Metrics {
         format!(
             "req={} resp={} fail={} batches={} pjrt={} native={} \
              sparse={} adjoint={} native_occ={:.1} pad={} bumps={} \
-             mean_lat={:.0}us p90<={}us",
+             warm={}/{} saved={} mean_lat={:.0}us p90<={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.failures.load(Ordering::Relaxed),
@@ -257,6 +284,9 @@ impl Metrics {
             self.native_batch_occupancy(),
             self.padded_slots.load(Ordering::Relaxed),
             self.bumps.load(Ordering::Relaxed),
+            self.warm_hits.load(Ordering::Relaxed),
+            self.warm_misses.load(Ordering::Relaxed),
+            self.warm_iters_saved.load(Ordering::Relaxed),
             self.mean_latency_us(),
             match self.latency_quantile_us(0.9) {
                 u64::MAX => 999_999_999, // top (unbounded) bucket

@@ -23,11 +23,12 @@ use crate::altdiff::{
     BackwardMode, DenseAltDiff, Options, Param, SparseAltDiff,
 };
 use crate::batch::{
-    BatchSolution, BatchVjpSolution, BatchedAltDiff, BatchedSparseAltDiff,
+    BatchSolution, BatchVjp, BatchedAltDiff, BatchedSparseAltDiff,
 };
 use crate::error::{AltDiffError, Result};
 use crate::prob::{Qp, SparseQp};
 use crate::runtime::Engine;
+use crate::warm::{fingerprint, AdjointSeed, WarmStart, WarmStartCache};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -96,6 +97,21 @@ pub struct Config {
     pub artifacts: Option<PathBuf>,
     /// calibration tolerances for new layers
     pub calib_tols: Vec<f64>,
+    /// Warm-start cache capacity (entries across all layers); 0
+    /// disables the cache entirely — the default, so serving keeps the
+    /// cold fixed-k contract unless an operator opts in. When enabled,
+    /// workers consult the cache before every native batched launch
+    /// (keyed by layer, routed k, and the request's session key or θ
+    /// fingerprint) and write converged iterates back after; solve
+    /// batches still run exactly k iterations (warm ⇒ better accuracy
+    /// at the same cost, and forward-mode Jacobians stay valid), while
+    /// gradient batches with warm members may stop early per element at
+    /// the batch's tightest requested tolerance (`warm_iters_saved`).
+    pub warm_capacity: usize,
+    /// Warm-start staleness radius: a cached iterate is only reused
+    /// when the requesting θ is within this relative distance of the θ
+    /// it was solved at (see [`crate::warm::theta_distance`]).
+    pub warm_radius: f64,
 }
 
 impl Default for Config {
@@ -106,6 +122,8 @@ impl Default for Config {
             batch_deadline: Duration::from_millis(2),
             artifacts: None,
             calib_tols: vec![1e-1, 1e-2, 1e-3, 1e-4],
+            warm_capacity: 0,
+            warm_radius: 0.5,
         }
     }
 }
@@ -284,6 +302,16 @@ impl CoordinatorBuilder {
         let (tx, dispatch_rx) = channel::<DispatchMsg>();
         let (reply_tx, reply_rx) = channel::<Reply>();
 
+        // shared warm-start cache (None when disabled): workers consult
+        // it before each native batched launch and write back after
+        let warm: Option<Arc<Mutex<WarmStartCache>>> =
+            (self.config.warm_capacity > 0).then(|| {
+                Arc::new(Mutex::new(WarmStartCache::new(
+                    self.config.warm_capacity,
+                    self.config.warm_radius,
+                )))
+            });
+
         // worker channels
         let ready = Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let mut worker_txs = Vec::new();
@@ -297,13 +325,14 @@ impl CoordinatorBuilder {
             let metrics = metrics.clone();
             let artifacts = self.config.artifacts.clone();
             let ready = ready.clone();
+            let warm = warm.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("altdiff-worker-{wid}"))
                     .spawn(move || {
                         worker_loop(
                             wrx, layers, reply_tx, metrics, artifacts,
-                            ready,
+                            ready, warm,
                         )
                     })
                     .expect("spawn worker"),
@@ -445,8 +474,46 @@ fn dispatcher_loop(
                                 }));
                                 continue;
                             }
-                            let k =
-                                layer.table.lock().unwrap().k_for(req.tol);
+                            // routed via the *checked* lookup: a
+                            // tolerance tighter than everything the
+                            // layer's table was calibrated for has no
+                            // rung that certifies it — reject instead
+                            // of silently clamping to the top rung
+                            // (which would quietly serve at unknown
+                            // accuracy)
+                            let (k, tightest) = {
+                                let table = layer.table.lock().unwrap();
+                                (
+                                    table.k_for_checked(req.tol),
+                                    table.tightest_calibrated(),
+                                )
+                            };
+                            let Some(k) = k else {
+                                metrics.failures.fetch_add(
+                                    1,
+                                    std::sync::atomic::Ordering::Relaxed,
+                                );
+                                let _ = reply_tx.send(Reply::Err(Failure {
+                                    id: req.id,
+                                    kind: FailureKind::Invalid,
+                                    error: format!(
+                                        "requested tolerance {:.1e} \
+                                         exceeds the registered \
+                                         truncation table for layer \
+                                         '{}' (tightest calibrated \
+                                         tolerance: {}); relax the \
+                                         tolerance or recalibrate the \
+                                         layer",
+                                        req.tol,
+                                        req.layer,
+                                        tightest.map_or(
+                                            "none".to_string(),
+                                            |t| format!("{t:.1e}")
+                                        ),
+                                    ),
+                                }));
+                                continue;
+                            };
                             if let Some(b) = batcher.push(k, req) {
                                 send_batch(b, &mut rr);
                             }
@@ -504,6 +571,7 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     artifacts: Option<PathBuf>,
     ready: Arc<std::sync::atomic::AtomicUsize>,
+    warm: Option<Arc<Mutex<WarmStartCache>>>,
 ) {
     // PJRT engine is constructed inside the worker thread (not Send).
     let mut engine: Option<Engine> = artifacts
@@ -534,8 +602,13 @@ fn worker_loop(
             Some(l) => l.clone(),
             None => continue,
         };
-        let replies =
-            execute_batch(&mut engine, &layer, &batch, &metrics);
+        let replies = execute_batch(
+            &mut engine,
+            &layer,
+            &batch,
+            &metrics,
+            warm.as_deref(),
+        );
         for r in replies {
             match &r {
                 Reply::Ok(resp) => {
@@ -564,12 +637,73 @@ fn worker_loop(
     }
 }
 
+/// Consult the warm cache for every request of a native batch: returns
+/// per-request fingerprints, forward warm iterates, and adjoint seeds
+/// (hit/miss counts land in the metrics). One lock hold per batch, not
+/// per request.
+fn warm_lookup(
+    cache: &Mutex<WarmStartCache>,
+    layer: &str,
+    k: usize,
+    reqs: &[Request],
+    metrics: &Metrics,
+) -> (Vec<u64>, Vec<Option<WarmStart>>, Vec<Option<AdjointSeed>>) {
+    let mut c = cache.lock().unwrap();
+    let mut fps = Vec::with_capacity(reqs.len());
+    let mut warms = Vec::with_capacity(reqs.len());
+    let mut seeds = Vec::with_capacity(reqs.len());
+    let mut hits = 0u64;
+    for r in reqs {
+        let fp = fingerprint(r.session, &r.q, &r.b, &r.h);
+        let got = c.get(layer, k, fp, &r.q, &r.b, &r.h);
+        if got.is_some() {
+            hits += 1;
+        }
+        let (w, a) = got.map_or((None, None), |(w, a)| (Some(w), a));
+        fps.push(fp);
+        warms.push(w);
+        seeds.push(a);
+    }
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    metrics.warm_hits.fetch_add(hits, ord);
+    metrics.warm_misses.fetch_add(reqs.len() as u64 - hits, ord);
+    (fps, warms, seeds)
+}
+
+/// Write a finished native batch's converged iterates back into the
+/// warm cache (entry e under fingerprint `fps[e]`, recording the θ the
+/// solve ran at for later staleness checks).
+fn warm_writeback(
+    cache: &Mutex<WarmStartCache>,
+    layer: &str,
+    k: usize,
+    reqs: &[Request],
+    fps: &[u64],
+    sol: &BatchSolution,
+    seeds: Option<&[AdjointSeed]>,
+) {
+    let mut c = cache.lock().unwrap();
+    for (e, req) in reqs.iter().enumerate() {
+        c.put(
+            layer,
+            k,
+            fps[e],
+            req.q.clone(),
+            req.b.clone(),
+            req.h.clone(),
+            sol.warm_start(e),
+            seeds.map(|s| s[e].clone()),
+        );
+    }
+}
+
 /// Execute one batch on the best available backend.
 fn execute_batch(
     engine: &mut Option<Engine>,
     layer: &RegisteredLayer,
     batch: &Batch,
     metrics: &Metrics,
+    warm: Option<&Mutex<WarmStartCache>>,
 ) -> Vec<Reply> {
     let t0 = Instant::now();
     let reqs = &batch.requests;
@@ -577,7 +711,7 @@ fn execute_batch(
     // launch plus one batched adjoint launch, always native (no compiled
     // adjoint family exists — and none is needed, the backward is d-free).
     if batch.grad {
-        return execute_grad_batch(layer, batch, metrics);
+        return execute_grad_batch(layer, batch, metrics, warm);
     }
     // PJRT path (dense layers only): pick the smallest compiled batch
     // size >= len, pad.
@@ -626,12 +760,22 @@ fn execute_batch(
     // dense or sparse batch engine depending on the layer. tol=0
     // disables per-element truncation so every element runs exactly k
     // iterations (artifact parity, same contract as the compiled path).
+    // A configured warm cache seeds each element's iterate from a prior
+    // solve — the fixed-k contract is kept (warm ⇒ a *closer* iterate
+    // after the same k, and the forward-mode Jacobian stays valid: its
+    // slack gates are correct from iteration 1), so warm solve batches
+    // buy accuracy rather than iterations; the iteration savings land
+    // on the gradient path, which truncates.
     metrics
         .native_execs
         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     metrics
         .native_elems
         .fetch_add(reqs.len() as u64, std::sync::atomic::Ordering::Relaxed);
+    let warm_ctx = warm.map(|cache| {
+        warm_lookup(cache, &batch.layer, batch.k, reqs, metrics)
+    });
+    let warms = warm_ctx.as_ref().map(|(_, w, _)| w.as_slice());
     let opts = Options {
         tol: 0.0,
         max_iter: batch.k,
@@ -645,7 +789,13 @@ fn execute_batch(
     let (sol, backend): (BatchSolution, &'static str) = match &layer.engine
     {
         LayerEngine::Dense { batched, .. } => (
-            batched.solve_batch(Some(&qs), Some(&bs), Some(&hs), &opts),
+            batched.solve_batch_from(
+                Some(&qs),
+                Some(&bs),
+                Some(&hs),
+                warms,
+                &opts,
+            ),
             "native",
         ),
         LayerEngine::Sparse { batched, .. } => {
@@ -655,9 +805,13 @@ fn execute_batch(
             // fallible: a blocked-CG breakdown must become per-request
             // failure replies, never a worker panic (which would kill
             // the thread and silently drop every batch routed to it)
-            match batched
-                .try_solve_batch(Some(&qs), Some(&bs), Some(&hs), &opts)
-            {
+            match batched.try_solve_batch_from(
+                Some(&qs),
+                Some(&bs),
+                Some(&hs),
+                warms,
+                &opts,
+            ) {
                 Ok(sol) => (sol, "native-sparse"),
                 Err(e) => {
                     return reqs
@@ -676,6 +830,17 @@ fn execute_batch(
             }
         }
     };
+    if let (Some(cache), Some((fps, _, _))) = (warm, warm_ctx.as_ref()) {
+        warm_writeback(
+            cache,
+            &batch.layer,
+            batch.k,
+            reqs,
+            fps,
+            &sol,
+            None,
+        );
+    }
     let mut jacs = sol.jacobians.unwrap_or_default().into_iter();
     reqs.iter()
         .zip(sol.xs)
@@ -705,10 +870,19 @@ fn execute_batch(
 /// Execute one adjoint (gradient) batch: forward-only batched solve,
 /// then ONE batched adjoint launch over the whole batch's dL/dx seeds.
 /// Jacobians never exist, so the replies are O(n+m+p) per request.
+///
+/// With a warm cache configured, this is where warm starts turn into
+/// *saved iterations*: a batch containing any warm element runs both
+/// launches with per-element truncation at the batch's tightest
+/// requested tolerance (k stays the hard cap — the routing contract is
+/// "never more than k", and the stop criterion is the calibrated
+/// tolerance itself, so accuracy is preserved by Thm 4.3). Cold-only
+/// batches keep the exact-k contract unchanged.
 fn execute_grad_batch(
     layer: &RegisteredLayer,
     batch: &Batch,
     metrics: &Metrics,
+    warm: Option<&Mutex<WarmStartCache>>,
 ) -> Vec<Reply> {
     let reqs = &batch.requests;
     metrics
@@ -718,15 +892,31 @@ fn execute_grad_batch(
         reqs.len() as u64,
         std::sync::atomic::Ordering::Relaxed,
     );
+    let warm_ctx = warm.map(|cache| {
+        warm_lookup(cache, &batch.layer, batch.k, reqs, metrics)
+    });
+    let warms = warm_ctx.as_ref().map(|(_, w, _)| w.as_slice());
+    let seeds = warm_ctx.as_ref().map(|(_, _, s)| s.as_slice());
+    let any_warm = warms
+        .map(|w| w.iter().any(|e| e.is_some()))
+        .unwrap_or(false);
     // tol=0: forward and adjoint both run exactly k iterations (the
-    // same routing contract as the solve path).
-    let opts = Options {
-        tol: 0.0,
+    // same routing contract as the solve path) — unless warm elements
+    // let the batch truncate early at its tightest requested tolerance.
+    let tol = if any_warm {
+        reqs.iter().map(|r| r.tol).fold(f64::INFINITY, f64::min)
+    } else {
+        0.0
+    };
+    let fopts = Options {
+        tol,
         max_iter: batch.k,
-        backward: BackwardMode::Adjoint,
+        backward: BackwardMode::None,
         rho: layer.rho,
         trace: false,
     };
+    let bopts =
+        Options { backward: BackwardMode::Adjoint, ..fopts.clone() };
     let qs: Vec<&[f64]> = reqs.iter().map(|r| r.q.as_slice()).collect();
     let bs: Vec<&[f64]> = reqs.iter().map(|r| r.b.as_slice()).collect();
     let hs: Vec<&[f64]> = reqs.iter().map(|r| r.h.as_slice()).collect();
@@ -738,45 +928,88 @@ fn execute_grad_batch(
                 .expect("gradient batch member carries grad_v")
         })
         .collect();
-    let (out, backend): (BatchVjpSolution, &'static str) =
-        match &layer.engine {
-            LayerEngine::Dense { batched, .. } => (
-                batched.solve_batch_vjp(
-                    Some(&qs),
-                    Some(&bs),
-                    Some(&hs),
-                    &vs,
-                    &opts,
-                ),
-                "native",
-            ),
-            LayerEngine::Sparse { batched, .. } => {
-                match batched.try_solve_batch_vjp(
-                    Some(&qs),
-                    Some(&bs),
-                    Some(&hs),
-                    &vs,
-                    &opts,
-                ) {
-                    Ok(out) => (out, "native-sparse"),
-                    Err(e) => {
-                        return reqs
-                            .iter()
-                            .map(|req| {
-                                Reply::Err(Failure {
-                                    id: req.id,
-                                    kind: FailureKind::Exec,
-                                    error: format!(
-                                        "sparse adjoint solve failed: {e}"
-                                    ),
-                                })
-                            })
-                            .collect();
-                    }
+    let fail = |reqs: &[Request], e: &dyn std::fmt::Display| {
+        reqs.iter()
+            .map(|req| {
+                Reply::Err(Failure {
+                    id: req.id,
+                    kind: FailureKind::Exec,
+                    error: format!("sparse adjoint solve failed: {e}"),
+                })
+            })
+            .collect::<Vec<Reply>>()
+    };
+    let (forward, vjp, adj_states, backend): (
+        BatchSolution,
+        BatchVjp,
+        Vec<AdjointSeed>,
+        &'static str,
+    ) = match &layer.engine {
+        LayerEngine::Dense { batched, .. } => {
+            let forward = batched.solve_batch_from(
+                Some(&qs),
+                Some(&bs),
+                Some(&hs),
+                warms,
+                &fopts,
+            );
+            let (vjp, states) = batched.batch_vjp_from(
+                &forward.slack_refs(),
+                &vs,
+                seeds,
+                &bopts,
+            );
+            (forward, vjp, states, "native")
+        }
+        LayerEngine::Sparse { batched, .. } => {
+            let forward = match batched.try_solve_batch_from(
+                Some(&qs),
+                Some(&bs),
+                Some(&hs),
+                warms,
+                &fopts,
+            ) {
+                Ok(f) => f,
+                Err(e) => return fail(reqs, &e),
+            };
+            match batched.try_batch_vjp_from(
+                &forward.slack_refs(),
+                &vs,
+                seeds,
+                &bopts,
+            ) {
+                Ok((vjp, states)) => {
+                    (forward, vjp, states, "native-sparse")
                 }
+                Err(e) => return fail(reqs, &e),
             }
-        };
-    let BatchVjpSolution { forward, vjp } = out;
+        }
+    };
+    if let (Some(cache), Some((fps, lookups, _))) =
+        (warm, warm_ctx.as_ref())
+    {
+        // saved iterations: warm elements that truncated under the
+        // routed k, on both the forward and the adjoint launch
+        let mut saved = 0u64;
+        for (e, w) in lookups.iter().enumerate() {
+            if w.is_some() {
+                saved += (batch.k - forward.iters[e].min(batch.k)) as u64;
+                saved += (batch.k - vjp.iters[e].min(batch.k)) as u64;
+            }
+        }
+        metrics
+            .warm_iters_saved
+            .fetch_add(saved, std::sync::atomic::Ordering::Relaxed);
+        warm_writeback(
+            cache,
+            &batch.layer,
+            batch.k,
+            reqs,
+            fps,
+            &forward,
+            Some(&adj_states),
+        );
+    }
     let mut gq = vjp.grads_q.into_iter();
     let mut gb = vjp.grads_b.into_iter();
     let mut gh = vjp.grads_h.into_iter();
@@ -922,6 +1155,33 @@ impl Coordinator {
             h,
             tol,
             grad_v: None,
+            session: None,
+            submitted: Instant::now(),
+        })
+    }
+
+    /// [`Self::submit`] under a warm-start session key: repeated
+    /// submissions with the same key share a slot in the configured
+    /// [`crate::warm::WarmStartCache`] (no-op routing-wise when the
+    /// cache is disabled — see [`Config::warm_capacity`]).
+    pub fn submit_session(
+        &mut self,
+        layer: &str,
+        q: Vec<f64>,
+        b: Vec<f64>,
+        h: Vec<f64>,
+        tol: f64,
+        session: u64,
+    ) -> u64 {
+        self.submit_request(Request {
+            id: 0,
+            layer: layer.to_string(),
+            q,
+            b,
+            h,
+            tol,
+            grad_v: None,
+            session: Some(session),
             submitted: Instant::now(),
         })
     }
@@ -947,6 +1207,35 @@ impl Coordinator {
             h,
             tol,
             grad_v: Some(v),
+            session: None,
+            submitted: Instant::now(),
+        })
+    }
+
+    /// [`Self::submit_grad`] under a warm-start session key (see
+    /// [`Self::submit_session`]): warm gradient batches may stop under
+    /// the routed k at the batch's tightest requested tolerance, which
+    /// is where [`Metrics::warm_iters_saved`] accrues.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_grad_session(
+        &mut self,
+        layer: &str,
+        q: Vec<f64>,
+        b: Vec<f64>,
+        h: Vec<f64>,
+        v: Vec<f64>,
+        tol: f64,
+        session: u64,
+    ) -> u64 {
+        self.submit_request(Request {
+            id: 0,
+            layer: layer.to_string(),
+            q,
+            b,
+            h,
+            tol,
+            grad_v: Some(v),
+            session: Some(session),
             submitted: Instant::now(),
         })
     }

@@ -77,10 +77,30 @@ impl TruncationTable {
 
     /// Iterations to run for a requested tolerance: the calibrated entry
     /// for the tightest calibrated tolerance ≤ requested, else max rung.
+    ///
+    /// This is the *clamping* lookup (benches and offline callers):
+    /// a tolerance tighter than everything calibrated silently maps to
+    /// the top rung, which may not actually achieve it. The serving
+    /// router uses [`Self::k_for_checked`] instead, which refuses such
+    /// requests so the coordinator can answer
+    /// `FailureKind::Invalid` rather than quietly under-serve.
     pub fn k_for(&self, tol: f64) -> usize {
+        self.k_for_checked(tol)
+            .unwrap_or(*self.ladder.last().unwrap())
+    }
+
+    /// [`Self::k_for`] without the silent clamp: `None` when the
+    /// requested tolerance is strictly tighter than every calibrated
+    /// tolerance, i.e. the table has no entry that certifies it and the
+    /// required iteration count would exceed the registered ladder's
+    /// calibrated range. The coordinator maps `None` to a
+    /// [`crate::coordinator::FailureKind::Invalid`] failure whose
+    /// message names the tightest calibrated tolerance, instead of
+    /// silently serving the top rung at unknown accuracy.
+    pub fn k_for_checked(&self, tol: f64) -> Option<usize> {
         // exact entry
         if let Some(&k) = self.entries.get(&tol_key(tol)) {
-            return k;
+            return Some(k);
         }
         // tightest calibrated tolerance that is <= requested tol is safe
         // (more iterations than strictly needed, never fewer).
@@ -93,7 +113,19 @@ impl TruncationTable {
                 best = Some(k);
             }
         }
-        best.unwrap_or(*self.ladder.last().unwrap())
+        best
+    }
+
+    /// The tightest tolerance the table was calibrated for (the lower
+    /// bound of what [`Self::k_for_checked`] accepts); `None` for an
+    /// uncalibrated [`Self::conservative`] table.
+    pub fn tightest_calibrated(&self) -> Option<f64> {
+        self.entries
+            .keys()
+            .map(|&k| f64::from_bits(k))
+            .fold(None, |acc: Option<f64>, t| {
+                Some(acc.map_or(t, |a| a.min(t)))
+            })
     }
 
     /// Online correction: the executed batch at tolerance `tol` reported a
@@ -181,5 +213,27 @@ mod tests {
         let t = TruncationTable::conservative(&[10, 80, 40]);
         assert_eq!(t.k_for(1e-1), 80);
         assert_eq!(t.k_for(1e-9), 80);
+    }
+
+    #[test]
+    fn checked_lookup_refuses_beyond_calibrated_range() {
+        let trace = geometric_trace(100, 0.7);
+        let t = TruncationTable::calibrate(
+            &[10, 20, 40, 80],
+            &trace,
+            &[1e-1, 1e-4],
+        );
+        // calibrated and covered tolerances route normally
+        assert_eq!(t.k_for_checked(1e-1), Some(t.k_for(1e-1)));
+        assert_eq!(t.k_for_checked(1e-2), Some(t.k_for(1e-4)));
+        assert_eq!(t.k_for_checked(5e-1), Some(t.k_for(1e-1)));
+        // tighter than everything calibrated: refused, not clamped
+        assert_eq!(t.k_for_checked(1e-9), None);
+        // ... while the clamping lookup still serves the top rung
+        assert_eq!(t.k_for(1e-9), 80);
+        assert_eq!(t.tightest_calibrated(), Some(1e-4));
+        let c = TruncationTable::conservative(&[10, 20]);
+        assert_eq!(c.k_for_checked(1e-3), None);
+        assert_eq!(c.tightest_calibrated(), None);
     }
 }

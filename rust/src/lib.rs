@@ -13,6 +13,10 @@
 //!   per dynamic batch)
 //! - network: [`net`] (wire protocol + nonblocking TCP front end with
 //!   admission control, plus clients and a load generator)
+//! - warm starts: [`warm`] (cross-solve iterate reuse — every engine
+//!   accepts a prior (x, λ, ν) triple, and an LRU cache with staleness
+//!   bounds threads it through the coordinator, the wire protocol's
+//!   session keys, and the training loops)
 
 // Numeric-kernel house style: explicit index loops mirror the paper's
 // equations and the blocked-BLAS layout; several solver entry points
@@ -39,5 +43,6 @@ pub mod runtime;
 pub mod sparse;
 pub mod train;
 pub mod util;
+pub mod warm;
 
 pub use error::{AltDiffError, Result};

@@ -113,6 +113,10 @@ fn serve_coordinator(args: &Args) -> Coordinator {
             args.get_usize("deadline-ms", 2) as u64,
         ),
         artifacts,
+        // --warm-cache N enables cross-request warm starts (0 = the
+        // cold default); pair with a loadgen running --sessions
+        warm_capacity: args.get_usize("warm-cache", 0),
+        warm_radius: args.get_f64("warm-radius", 0.5),
         ..Default::default()
     })
     // both dense layers use generator seed 1 so a default `loadgen`
@@ -213,7 +217,7 @@ fn cmd_loadgen(args: &Args) {
         eprintln!(
             "usage: altdiff loadgen <addr> [--requests N] [--clients C] \
              [--window W] [--grad-share F] [--layer NAME] [--tol T] \
-             [--stop-server]"
+             [--sessions] [--stop-server]"
         );
         std::process::exit(2);
     };
@@ -225,6 +229,7 @@ fn cmd_loadgen(args: &Args) {
         layer: args.get_str("layer", ""),
         tol: args.get_f64("tol", 1e-3),
         seed: args.get_usize("seed", 1) as u64,
+        sessions: args.get_bool("sessions", false),
     };
     match altdiff::net::run_loadgen(addr.as_str(), &opts) {
         Ok(report) => {

@@ -32,6 +32,34 @@ fn checked_request_bytes(req: &Request) -> Result<Vec<u8>> {
 /// Blocking request/reply client: one outstanding call at a time — a
 /// window-1 [`PipelinedClient`] plus the admin ops (stats, layer
 /// discovery, graceful stop).
+///
+/// A full loopback round trip (the server runs in-process here; any
+/// reachable [`super::NetServer`] address works the same):
+///
+/// ```
+/// use altdiff::coordinator::{Config, Coordinator, Reply};
+/// use altdiff::net::{Client, NetConfig, NetServer};
+/// use altdiff::prob::dense_qp;
+///
+/// let coord = Coordinator::builder(Config::default())
+///     .register("qp6", dense_qp(6, 3, 1, 7), 1.0)?
+///     .start();
+/// let server =
+///     NetServer::bind("127.0.0.1:0", coord, NetConfig::default())?;
+/// let addr = server.local_addr()?;
+/// let handle = std::thread::spawn(move || server.run());
+///
+/// let mut client = Client::connect(addr)?;
+/// assert_eq!(client.layers()?[0].name, "qp6");
+/// let qp = dense_qp(6, 3, 1, 7);
+/// match client.solve("qp6", qp.q, qp.b, qp.h, 1e-2)? {
+///     Reply::Ok(r) => assert_eq!(r.x.len(), 6),
+///     other => panic!("expected a solve reply, got {other:?}"),
+/// }
+/// client.stop_server()?; // graceful drain; final stats text
+/// handle.join().unwrap();
+/// # Ok::<(), altdiff::AltDiffError>(())
+/// ```
 pub struct Client {
     inner: PipelinedClient,
 }
@@ -40,6 +68,12 @@ impl Client {
     /// Connect to a running [`super::NetServer`].
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
         Ok(Client { inner: PipelinedClient::connect(addr, 1)? })
+    }
+
+    /// Attach a warm-start session key to every subsequent request
+    /// (see [`PipelinedClient::set_session`]).
+    pub fn set_session(&mut self, key: impl Into<Option<u64>>) {
+        self.inner.set_session(key);
     }
 
     /// Bound the wait for any single reply (default: unbounded). A
@@ -180,11 +214,30 @@ pub struct TimedReply {
 /// Pipelined client: keeps up to `window` requests on the wire before
 /// insisting on a reply, so one connection can saturate the server's
 /// dynamic batcher (a window of 1 degenerates to the blocking client).
+///
+/// ```no_run
+/// use altdiff::net::PipelinedClient;
+///
+/// let mut cl = PipelinedClient::connect("127.0.0.1:7171", 8)?;
+/// cl.set_session(42); // warm-start session: solves seed each other
+/// let mut replies = Vec::new();
+/// for step in 0..32 {
+///     let scale = 1.0 + 0.01 * step as f64;
+///     let q: Vec<f64> = (0..16).map(|i| scale * i as f64).collect();
+///     // up to 8 requests ride the wire before a reply is insisted on
+///     replies.extend(cl.submit(
+///         "qp16", q, vec![0.0; 8], vec![1.0; 8], None, 1e-3)?);
+/// }
+/// replies.extend(cl.drain()?); // collect the stragglers
+/// assert_eq!(replies.len(), 32);
+/// # Ok::<(), altdiff::AltDiffError>(())
+/// ```
 pub struct PipelinedClient {
     stream: TcpStream,
     rbuf: FrameReader,
     window: usize,
     next_id: u64,
+    session: Option<u64>,
     sent_at: BTreeMap<u64, Instant>,
 }
 
@@ -201,8 +254,17 @@ impl PipelinedClient {
             rbuf: FrameReader::new(),
             window: window.max(1),
             next_id: 0,
+            session: None,
             sent_at: BTreeMap::new(),
         })
+    }
+
+    /// Attach a warm-start session key to every subsequent request:
+    /// the server's warm cache (when configured) will seed each of this
+    /// session's solves from the previous one's converged iterate (see
+    /// [`crate::warm`]). `None` reverts to anonymous requests.
+    pub fn set_session(&mut self, key: impl Into<Option<u64>>) {
+        self.session = key.into();
     }
 
     /// Bound the wait for any single reply (default: unbounded). A
@@ -259,6 +321,7 @@ impl PipelinedClient {
             h,
             tol,
             grad_v,
+            session: self.session,
             submitted: Instant::now(),
         };
         let bytes = checked_request_bytes(&req)?;
@@ -300,6 +363,14 @@ pub struct LoadgenOpts {
     /// seed 1, the default here). A mismatched seed still round-trips
     /// structurally but measures an infeasible workload.
     pub seed: u64,
+    /// Attach a distinct warm-start session key to each client
+    /// connection, so the connection's drifting θ stream repeatedly
+    /// hits the server's warm cache (requires the server to run with a
+    /// nonzero warm capacity, e.g. `serve --warm-cache 512`; without
+    /// one the keys ride along harmlessly). The server's
+    /// `warm_hits`/`warm_misses`/`warm_iters_saved` metrics quantify
+    /// the effect — see the README's cold-vs-warm comparison.
+    pub sessions: bool,
 }
 
 impl Default for LoadgenOpts {
@@ -312,6 +383,7 @@ impl Default for LoadgenOpts {
             layer: String::new(),
             tol: 1e-3,
             seed: 1,
+            sessions: false,
         }
     }
 }
@@ -461,6 +533,11 @@ pub fn run_loadgen<A: ToSocketAddrs>(
             let mut rng = Pcg64::new(opts.seed ^ (c as u64 + 1));
             let mut cl = PipelinedClient::connect(addr, opts.window)?;
             cl.set_timeout(Some(Duration::from_secs(120)))?;
+            if opts.sessions {
+                // one session per connection: its θ stream drifts
+                // slowly, which is exactly what the warm cache serves
+                cl.set_session(opts.seed ^ (0x5e55 + c as u64));
+            }
             let mut report = LoadgenReport::default();
             for _ in 0..per_client {
                 let s = 1.0 + 0.1 * rng.normal();

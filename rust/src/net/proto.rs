@@ -9,9 +9,17 @@
 //! Request payloads (`op::SOLVE` / `op::GRAD`):
 //!
 //! ```text
-//!   id u64 · tol f64 · layer str16 · q f64vec · b f64vec · h f64vec
+//!   id u64 · tol f64 · session u8 [· key u64] · layer str16
+//!   · q f64vec · b f64vec · h f64vec
 //!   [· v f64vec]                      -- GRAD only (adjoint seed)
 //! ```
+//!
+//! `session` is the optional warm-start session key: a one-byte
+//! presence tag (0 = absent, 1 = present, anything else →
+//! [`AltDiffError::Protocol`]) followed by the u64 key when present.
+//! Requests sharing a key share a slot in the server's warm-start
+//! cache (see [`crate::warm`]), so a remote caller's repeated solves
+//! resume from each other's iterates across requests.
 //!
 //! Reply payloads mirror [`Reply`]'s three arms (`op::R_SOLVE`,
 //! `op::R_GRAD`, `op::R_ERR`); admin ops (`op::STATS`, `op::LAYERS`,
@@ -248,8 +256,11 @@ impl<'a> Rd<'a> {
 /// [`encode_request`], which debug-asserts the equality).
 pub fn request_payload_len(req: &Request) -> usize {
     let vec_len = |v: &[f64]| 4 + 8 * v.len();
-    // id u64 + tol f64 + layer str16 (name truncated at u16::MAX)
+    // id u64 + tol f64 + session tag u8 [+ key u64]
+    // + layer str16 (name truncated at u16::MAX)
     8 + 8
+        + 1
+        + if req.session.is_some() { 8 } else { 0 }
         + (2 + req.layer.len().min(u16::MAX as usize))
         + vec_len(&req.q)
         + vec_len(&req.b)
@@ -266,6 +277,13 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
     let mut w = Wr::new(opcode);
     w.u64(req.id);
     w.f64(req.tol);
+    match req.session {
+        Some(key) => {
+            w.u8(1);
+            w.u64(key);
+        }
+        None => w.u8(0),
+    }
     w.str16(&req.layer);
     w.f64_vec(&req.q);
     w.f64_vec(&req.b);
@@ -292,6 +310,15 @@ pub fn decode_request(opcode: u8, payload: &[u8]) -> Result<Request> {
     let mut r = Rd::new(payload);
     let id = r.u64()?;
     let tol = r.f64()?;
+    let session = match r.u8()? {
+        0 => None,
+        1 => Some(r.u64()?),
+        tag => {
+            return Err(AltDiffError::Protocol(format!(
+                "session presence tag must be 0 or 1, got {tag}"
+            )))
+        }
+    };
     let layer = r.str16()?;
     let q = r.f64_vec()?;
     let b = r.f64_vec()?;
@@ -310,6 +337,7 @@ pub fn decode_request(opcode: u8, payload: &[u8]) -> Result<Request> {
         h,
         tol,
         grad_v,
+        session,
         submitted: Instant::now(),
     })
 }
@@ -580,6 +608,7 @@ mod tests {
             h: vec![1.0, 2.0],
             tol: 1e-3,
             grad_v: None,
+            session: None,
             submitted: Instant::now(),
         };
         let frame = encode_request(&req);
@@ -605,6 +634,7 @@ mod tests {
             h: vec![9.0],
             tol: 1e-2,
             grad_v: Some(vec![1.0, 0.0, -1.0, 2.0]),
+            session: Some(0xfeed_beef),
             submitted: Instant::now(),
         };
         let frame = encode_request(&req);
@@ -639,6 +669,7 @@ mod tests {
             h: vec![],
             tol: 0.1,
             grad_v: None,
+            session: None,
             submitted: Instant::now(),
         };
         let frame = encode_request(&req);
@@ -710,6 +741,7 @@ mod tests {
         let mut w = Wr::new(op::SOLVE);
         w.u64(1);
         w.f64(0.1);
+        w.u8(0); // no session key
         w.str16("l");
         w.u32(u32::MAX); // q count — no data follows
         let frame = w.finish();

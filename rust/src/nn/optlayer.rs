@@ -27,6 +27,11 @@ use crate::batch::{BatchedAltDiff, BatchedSparseAltDiff};
 use crate::error::Result;
 use crate::linalg::{gemv_t, Mat};
 use crate::prob::{Qp, SparseQp};
+use crate::warm::{fingerprint, AdjointSeed, WarmStart, WarmStartCache};
+
+/// Cache-layer name the optimization layer files its warm entries
+/// under (it owns its cache, so the name only has to be stable).
+const WARM_LAYER: &str = "opt";
 
 /// Which differentiation engine backs the layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,6 +78,19 @@ pub struct OptLayer {
     pub last_iters: usize,
     /// per-element iterations from the last `forward_batch`
     pub last_batch_iters: Vec<usize>,
+    /// warm-start cache for [`Self::forward_batch_keyed`] (None until
+    /// [`Self::enable_warm_start`]; Alt-Diff backend only)
+    warm: Option<WarmStartCache>,
+    /// sample keys of the last keyed forward (pairs its backward)
+    last_keys: Vec<u64>,
+    /// θ of the last keyed forward (cache write-backs record it)
+    last_qs: Vec<Vec<f64>>,
+    /// adjoint seeds recalled alongside the last keyed forward's warm
+    /// iterates — the backward resumes from them
+    last_seeds: Vec<Option<AdjointSeed>>,
+    /// converged iterates of the last keyed forward (the backward's
+    /// cache write-back pairs them with fresh adjoint seeds)
+    last_warm_out: Vec<WarmStart>,
 }
 
 impl OptLayer {
@@ -93,6 +111,11 @@ impl OptLayer {
             last_slacks: Vec::new(),
             last_iters: 0,
             last_batch_iters: Vec::new(),
+            warm: None,
+            last_keys: Vec::new(),
+            last_qs: Vec::new(),
+            last_seeds: Vec::new(),
+            last_warm_out: Vec::new(),
         })
     }
 
@@ -112,6 +135,11 @@ impl OptLayer {
             last_slacks: Vec::new(),
             last_iters: 0,
             last_batch_iters: Vec::new(),
+            warm: None,
+            last_keys: Vec::new(),
+            last_qs: Vec::new(),
+            last_seeds: Vec::new(),
+            last_warm_out: Vec::new(),
         })
     }
 
@@ -127,6 +155,125 @@ impl OptLayer {
     /// are served by the adjoint backward for the Alt-Diff backend).
     fn opts(&self) -> Options {
         Options { tol: self.tol, max_iter: 20_000, ..Options::adjoint() }
+    }
+
+    /// Enable cross-call warm starts for [`Self::forward_batch_keyed`]
+    /// / [`Self::backward_batch`]: solves keyed by the same sample key
+    /// resume from each other's iterates across epochs (Alt-Diff
+    /// backend only; a no-op request on the OptNet baseline, whose KKT
+    /// path has nothing to warm). `radius` is the staleness bound on
+    /// the relative q-drift between epochs (see
+    /// [`crate::warm::theta_distance`]) — training inputs drift slowly,
+    /// so a generous radius (≈1.0) is the right default.
+    pub fn enable_warm_start(&mut self, capacity: usize, radius: f64) {
+        self.warm = (self.backend == OptBackend::AltDiff
+            && capacity > 0)
+            .then(|| WarmStartCache::new(capacity, radius));
+    }
+
+    /// Warm-cache `(hits, misses)` so far; `None` while warm starts are
+    /// disabled.
+    pub fn warm_stats(&self) -> Option<(u64, u64)> {
+        self.warm.as_ref().map(|c| (c.hits(), c.misses()))
+    }
+
+    /// [`Self::forward_batch`] with per-sample warm-start keys (e.g.
+    /// the dataset indices of the minibatch): when warm starts are
+    /// enabled, sample `keys[e]`'s solve resumes from the iterate its
+    /// previous epoch converged to, and the converged result is written
+    /// back for the next epoch — ONE batched launch either way, mixing
+    /// first-sight (cold) and revisited (warm) samples freely. Without
+    /// [`Self::enable_warm_start`] (or on the OptNet baseline) this is
+    /// exactly [`Self::forward_batch`].
+    pub fn forward_batch_keyed(
+        &mut self,
+        qs: &[Vec<f64>],
+        keys: &[u64],
+    ) -> Vec<Vec<f64>> {
+        assert_eq!(qs.len(), keys.len(), "one warm key per sample");
+        if self.warm.is_none() || self.backend == OptBackend::OptNetKkt {
+            self.last_keys.clear();
+            return self.forward_batch(qs);
+        }
+        let opts = self.opts();
+        // recall prior iterates (and the adjoint seeds their backwards
+        // left behind) per sample key
+        let mut warms: Vec<Option<WarmStart>> =
+            Vec::with_capacity(qs.len());
+        let mut seeds: Vec<Option<AdjointSeed>> =
+            Vec::with_capacity(qs.len());
+        {
+            let cache = self.warm.as_mut().expect("warm enabled");
+            for (q, &key) in qs.iter().zip(keys) {
+                let fp = fingerprint(Some(key), q, &[], &[]);
+                match cache.get(WARM_LAYER, 0, fp, q, &[], &[]) {
+                    Some((w, a)) => {
+                        warms.push(Some(w));
+                        seeds.push(a);
+                    }
+                    None => {
+                        warms.push(None);
+                        seeds.push(None);
+                    }
+                }
+            }
+        }
+        let qrefs: Vec<&[f64]> =
+            qs.iter().map(|q| q.as_slice()).collect();
+        let sol = match &self.solver {
+            LayerSolver::Dense { batched, .. } => batched
+                .as_ref()
+                .expect("alt-diff backend has engine")
+                .solve_batch_from(
+                    Some(&qrefs),
+                    None,
+                    None,
+                    Some(&warms),
+                    &opts,
+                ),
+            LayerSolver::Sparse { batched, .. } => batched
+                .try_solve_batch_from(
+                    Some(&qrefs),
+                    None,
+                    None,
+                    Some(&warms),
+                    &opts,
+                )
+                .expect("batched sparse solve failed"),
+        };
+        // write the converged iterates back, preserving each entry's
+        // previous adjoint seed (this epoch's backward resumes from it
+        // and will overwrite it with a fresh one)
+        let warm_out: Vec<WarmStart> =
+            (0..qs.len()).map(|e| sol.warm_start(e)).collect();
+        {
+            let cache = self.warm.as_mut().expect("warm enabled");
+            for (e, (q, &key)) in qs.iter().zip(keys).enumerate() {
+                let fp = fingerprint(Some(key), q, &[], &[]);
+                cache.put(
+                    WARM_LAYER,
+                    0,
+                    fp,
+                    q.clone(),
+                    vec![],
+                    vec![],
+                    warm_out[e].clone(),
+                    seeds[e].clone(),
+                );
+            }
+        }
+        self.last_keys = keys.to_vec();
+        self.last_qs = qs.to_vec();
+        self.last_seeds = seeds;
+        self.last_warm_out = warm_out;
+        self.last_batch_iters = sol.iters.clone();
+        self.last_iters =
+            sol.iters.iter().sum::<usize>() / sol.iters.len();
+        self.last_slacks = sol.ss;
+        self.last_jacs = Vec::new();
+        self.last_jac = None;
+        self.last_slack = None;
+        sol.xs
     }
 
     /// Forward: solve with the supplied q. The Alt-Diff backend caches
@@ -189,6 +336,9 @@ impl OptLayer {
     /// total — no per-element Jacobians) for the adjoint backward.
     pub fn forward_batch(&mut self, qs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         assert!(!qs.is_empty(), "empty minibatch");
+        // unkeyed forwards must not pair a later backward with stale
+        // keyed state (the warm write-back path checks last_keys)
+        self.last_keys.clear();
         if qs.len() == 1 || self.backend == OptBackend::OptNetKkt {
             // per-sample path (exact single-sample semantics)
             let mut xs = Vec::with_capacity(qs.len());
@@ -252,12 +402,15 @@ impl OptLayer {
         }
     }
 
-    /// Backward for a whole minibatch (pairs with [`Self::forward_batch`]).
+    /// Backward for a whole minibatch (pairs with
+    /// [`Self::forward_batch`] / [`Self::forward_batch_keyed`]).
     /// Alt-Diff backend: ONE batched adjoint launch — B incoming
     /// gradients advance as a single panel through the transposed
-    /// recursion. OptNet backend: per-element gemvs against the cached
-    /// KKT Jacobians.
-    pub fn backward_batch(&self, gxs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    /// recursion; after a keyed forward with warm starts enabled, each
+    /// sample's adjoint resumes from the seed its previous epoch's
+    /// backward cached (and leaves a fresh one behind). OptNet backend:
+    /// per-element gemvs against the cached KKT Jacobians.
+    pub fn backward_batch(&mut self, gxs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         if !self.last_jacs.is_empty() {
             return gxs
                 .iter()
@@ -275,16 +428,41 @@ impl OptLayer {
         let gx_refs: Vec<&[f64]> =
             gxs.iter().map(|g| g.as_slice()).collect();
         let opts = self.opts();
-        match &self.solver {
+        let use_warm =
+            self.warm.is_some() && self.last_keys.len() == gxs.len();
+        let seeds_in = use_warm.then(|| self.last_seeds.as_slice());
+        let (vjp, seeds_out) = match &self.solver {
             LayerSolver::Dense { batched, .. } => batched
                 .as_ref()
                 .expect("alt-diff backend has engine")
-                .batch_vjp(&slack_refs, &gx_refs, &opts)
-                .grads_q,
-            LayerSolver::Sparse { batched, .. } => {
-                batched.batch_vjp(&slack_refs, &gx_refs, &opts).grads_q
+                .batch_vjp_from(&slack_refs, &gx_refs, seeds_in, &opts),
+            LayerSolver::Sparse { batched, .. } => batched
+                .try_batch_vjp_from(
+                    &slack_refs,
+                    &gx_refs,
+                    seeds_in,
+                    &opts,
+                )
+                .expect("batched sparse adjoint failed"),
+        };
+        if use_warm {
+            let cache = self.warm.as_mut().expect("warm enabled");
+            for (e, &key) in self.last_keys.iter().enumerate() {
+                let q = &self.last_qs[e];
+                let fp = fingerprint(Some(key), q, &[], &[]);
+                cache.put(
+                    WARM_LAYER,
+                    0,
+                    fp,
+                    q.clone(),
+                    vec![],
+                    vec![],
+                    self.last_warm_out[e].clone(),
+                    Some(seeds_out[e].clone()),
+                );
             }
         }
+        vjp.grads_q
     }
 }
 

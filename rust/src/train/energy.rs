@@ -24,6 +24,7 @@ use crate::linalg::gemv_t;
 use crate::nn::{mse_loss, Adam, Mlp};
 use crate::prob::energy_qp;
 use crate::util::rng::Pcg64;
+use crate::warm::{fingerprint, WarmStart, WarmStartCache};
 use std::time::Instant;
 
 /// Differentiation backend for the scheduling layer.
@@ -56,6 +57,12 @@ pub struct EnergyConfig {
     /// whole minibatch as ONE `BatchedAltDiff` launch (Alt-Diff backend
     /// only), 1 reproduces per-sample training exactly
     pub batch: usize,
+    /// reuse each window's scheduling-QP iterates across epochs
+    /// (minibatch path only): the oracle schedule x*(d) is *identical*
+    /// every epoch (its warm solve converges almost immediately from
+    /// epoch 2 on), and the predicted schedule drifts slowly with the
+    /// forecaster — both exactly the warm regime (see [`crate::warm`])
+    pub warm_start: bool,
 }
 
 impl Default for EnergyConfig {
@@ -69,6 +76,7 @@ impl Default for EnergyConfig {
             hidden: 64,
             seed: 0,
             batch: 1,
+            warm_start: true,
         }
     }
 }
@@ -109,6 +117,22 @@ fn sched_opts(tol: f64) -> Options {
     }
 }
 
+/// Recall the warm iterate cached under window-key `key` for θ = q.
+fn recall(
+    c: &mut WarmStartCache,
+    key: u64,
+    q: &[f64],
+) -> Option<WarmStart> {
+    let fp = fingerprint(Some(key), q, &[], &[]);
+    c.get("energy", 0, fp, q, &[], &[]).map(|(w, _)| w)
+}
+
+/// Cache window-key `key`'s converged iterate for the next epoch.
+fn store(c: &mut WarmStartCache, key: u64, q: &[f64], w: WarmStart) {
+    let fp = fingerprint(Some(key), q, &[], &[]);
+    c.put("energy", 0, fp, q.to_vec(), vec![], vec![], w, None);
+}
+
 /// Train the forecaster through the scheduling layer.
 pub fn train_energy(cfg: &EnergyConfig) -> EnergyReport {
     let trace = EnergyTrace::generate(24 * (cfg.days + 4), cfg.seed);
@@ -143,12 +167,16 @@ pub fn train_energy(cfg: &EnergyConfig) -> EnergyReport {
     } else {
         None
     };
+    // cross-epoch warm cache: two slots per window (oracle + predicted
+    // schedule), keyed by window index; the oracle θ repeats exactly
+    let mut wcache = (cfg.warm_start && minibatch.is_some())
+        .then(|| WarmStartCache::new(2 * windows.len().max(1), 1.0));
 
     for _epoch in 0..cfg.epochs {
         let t0 = Instant::now();
         let mut epoch_loss = 0.0;
         if let Some((batched, tol)) = &minibatch {
-            for chunk in windows.chunks(cfg.batch) {
+            for (ci, chunk) in windows.chunks(cfg.batch).enumerate() {
                 // pass 1: forecasts for the chunk
                 let x_ins: Vec<Vec<f64>> = chunk
                     .iter()
@@ -179,10 +207,25 @@ pub fn train_energy(cfg: &EnergyConfig) -> EnergyReport {
                     q_true.iter().map(|q| q.as_slice()).collect();
                 let qp_: Vec<&[f64]> =
                     q_pred.iter().map(|q| q.as_slice()).collect();
-                let sol_true = batched.solve_batch(
+                // recall last epoch's iterates per window (oracle keys
+                // are even, predicted keys odd)
+                let mut warms_true: Vec<Option<WarmStart>> =
+                    vec![None; chunk.len()];
+                let mut warms_pred: Vec<Option<WarmStart>> =
+                    vec![None; chunk.len()];
+                if let Some(c) = wcache.as_mut() {
+                    for j in 0..chunk.len() {
+                        let w = (ci * cfg.batch + j) as u64;
+                        warms_true[j] = recall(c, 2 * w, &q_true[j]);
+                        warms_pred[j] =
+                            recall(c, 2 * w + 1, &q_pred[j]);
+                    }
+                }
+                let sol_true = batched.solve_batch_from(
                     Some(&qt),
                     None,
                     None,
+                    Some(&warms_true),
                     &Options {
                         tol: 1e-6,
                         max_iter: 20_000,
@@ -190,12 +233,30 @@ pub fn train_energy(cfg: &EnergyConfig) -> EnergyReport {
                         ..Default::default()
                     },
                 );
-                let sol_pred = batched.solve_batch(
+                let sol_pred = batched.solve_batch_from(
                     Some(&qp_),
                     None,
                     None,
+                    Some(&warms_pred),
                     &sched_opts(*tol),
                 );
+                if let Some(c) = wcache.as_mut() {
+                    for j in 0..chunk.len() {
+                        let w = (ci * cfg.batch + j) as u64;
+                        store(
+                            c,
+                            2 * w,
+                            &q_true[j],
+                            sol_true.warm_start(j),
+                        );
+                        store(
+                            c,
+                            2 * w + 1,
+                            &q_pred[j],
+                            sol_pred.warm_start(j),
+                        );
+                    }
+                }
                 // pass 2a: decision losses + incoming gradients dL/dx*
                 let mut gxs: Vec<Vec<f64>> =
                     Vec::with_capacity(chunk.len());

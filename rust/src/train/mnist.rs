@@ -1,5 +1,5 @@
 //! Image classification with an embedded QP layer (paper §5.3, Table 6,
-//! Fig. 4), on the synthetic-digits substitute for MNIST (DESIGN.md §6).
+//! Fig. 4), on the synthetic-digits substitute for MNIST (DESIGN.md §7).
 //!
 //! Network (the paper's shape at reduced scale): feature MLP → dense QP
 //! optimization layer (input = q, output = x*) → linear head → softmax.
@@ -49,6 +49,12 @@ pub struct MnistConfig {
     /// ONE `BatchedAltDiff` launch per minibatch (and one optimizer step,
     /// gradient averaged); 1 reproduces per-sample SGD exactly
     pub batch_size: usize,
+    /// reuse each sample's layer iterates across epochs (Alt-Diff
+    /// minibatch path only): forward solves resume from the sample's
+    /// previous epoch's solution and backwards from its cached adjoint
+    /// seed — the per-sample features drift slowly as the network
+    /// trains, exactly the warm regime (see [`crate::warm`])
+    pub warm_start: bool,
 }
 
 impl Default for MnistConfig {
@@ -66,6 +72,7 @@ impl Default for MnistConfig {
             noise: 0.6,
             seed: 0,
             batch_size: 1,
+            warm_start: true,
         }
     }
 }
@@ -149,6 +156,12 @@ pub fn train_mnist(cfg: &MnistConfig) -> MnistReport {
     let test = Digits::dataset(cfg.test_size, cfg.noise, cfg.seed + 2);
     let mut model = OptNetClassifier::new(cfg, &mut rng);
     let mut opt = Adam::new(cfg.lr);
+    if cfg.warm_start && cfg.batch_size > 1 {
+        // minibatch path only: batch_size 1 keeps the exact per-sample
+        // seed-run semantics. One cache slot per training sample; q
+        // drifts slowly across epochs, so a generous radius is right.
+        model.optlayer.enable_warm_start(cfg.train_size.max(1), 1.0);
+    }
 
     let label = match cfg.backend {
         OptBackend::AltDiff => format!("alt-diff tol={:.0e}", cfg.tol),
@@ -172,7 +185,11 @@ pub fn train_mnist(cfg: &MnistConfig) -> MnistReport {
                 .iter()
                 .map(|&i| model.features.forward(&train[i].pixels))
                 .collect();
-            let xs = model.optlayer.forward_batch(&feats);
+            // keyed by sample index: epoch e resumes each sample's
+            // layer solve from its epoch e−1 iterate (warm cache)
+            let keys: Vec<u64> =
+                chunk.iter().map(|&i| i as u64).collect();
+            let xs = model.optlayer.forward_batch_keyed(&feats, &keys);
             for &it in &model.optlayer.last_batch_iters {
                 iters_sum += it;
                 iters_n += 1;

@@ -1,0 +1,492 @@
+//! Warm-start subsystem: cross-solve iterate reuse.
+//!
+//! The paper's truncation theorem (§4.3) bounds the gradient error of a
+//! truncated Alt-Diff run by the same order as the primal iterate's
+//! estimation error — so any mechanism that starts the alternating
+//! recursion closer to x* buys accuracy (or, equivalently, lets the run
+//! stop earlier at the same accuracy). Serving (repeated solves on
+//! slowly-drifting parameters) and training (epoch-over-epoch solves on
+//! the same minibatch schedule) are exactly that regime.
+//!
+//! This module holds the pieces every layer of the stack shares:
+//!
+//! - [`WarmStart`]: a prior primal/dual iterate triple (x, λ, ν). Every
+//!   engine accepts one through its `*_from` entry point
+//!   ([`DenseAltDiff::solve_from`](crate::altdiff::DenseAltDiff::solve_from),
+//!   [`SparseAltDiff::solve_from`](crate::altdiff::SparseAltDiff::solve_from),
+//!   [`BatchedAltDiff::solve_batch_from`](crate::batch::BatchedAltDiff::solve_batch_from),
+//!   [`BatchedSparseAltDiff::try_solve_batch_from`](crate::batch::BatchedSparseAltDiff::try_solve_batch_from))
+//!   and resumes the ADMM alternation from it; the slack is re-derived
+//!   from the warm point via the (6) projection, so the triple is all a
+//!   cache needs to store.
+//! - [`AdjointSeed`]: the matching reverse-mode state (z, wₛ, w_λ, w_ν).
+//!   The adjoint recursion w ← Mᵀw + V converges to its fixed point from
+//!   any start, so a seed harvested from a previous backward
+//!   ([`DenseAltDiff::vjp_from`](crate::altdiff::DenseAltDiff::vjp_from)
+//!   and siblings) shortens the next one the same way the primal warm
+//!   start shortens the forward pass.
+//! - [`WarmStartCache`]: an LRU map keyed by `(layer, k, fingerprint)`
+//!   with a staleness radius — a cached iterate is only handed out when
+//!   the requesting θ is within a configurable relative distance of the
+//!   θ the iterate was solved at. The coordinator consults it before
+//!   every native batched launch and writes converged iterates back
+//!   after; `nn::OptLayer` and the `train::{mnist,energy}` loops use the
+//!   same cache keyed by sample index.
+//!
+//! **Forward-mode caveat.** A warm primal converges before a cold
+//! Jacobian recursion does, so warm starts compose with
+//! [`BackwardMode::None`](crate::altdiff::BackwardMode) and
+//! [`BackwardMode::Adjoint`](crate::altdiff::BackwardMode) at any
+//! tolerance, but with [`BackwardMode::Forward`](crate::altdiff::BackwardMode)
+//! only at `tol = 0` (fixed-k): there the slack gates are correct from
+//! iteration 1, so the fixed-k Jacobian is at least as accurate as the
+//! cold one, while a tol-truncated run would stop on the (instantly
+//! converged) primal with the Jacobian still garbage. The engines
+//! enforce this with an assert. See DESIGN.md §5.
+
+use crate::altdiff::Solution;
+use std::collections::HashMap;
+
+/// A prior primal/dual iterate triple to resume the ADMM alternation
+/// from. Harvest one from any converged (or truncated) solve with
+/// [`WarmStart::of`]; the slack s is *not* stored — engines re-derive it
+/// from the warm point via the (6) projection
+/// s = max(0, −ν/ρ − (Gx − h)), which at a fixed point reproduces s*.
+#[derive(Clone, Debug)]
+pub struct WarmStart {
+    /// Primal iterate x (length n).
+    pub x: Vec<f64>,
+    /// Equality duals λ (length p).
+    pub lam: Vec<f64>,
+    /// Inequality duals ν (length m).
+    pub nu: Vec<f64>,
+}
+
+impl WarmStart {
+    /// Build from explicit iterates.
+    pub fn new(x: Vec<f64>, lam: Vec<f64>, nu: Vec<f64>) -> Self {
+        WarmStart { x, lam, nu }
+    }
+
+    /// Harvest the reusable iterate triple from a finished solve.
+    pub fn of(sol: &Solution) -> Self {
+        WarmStart {
+            x: sol.x.clone(),
+            lam: sol.lam.clone(),
+            nu: sol.nu.clone(),
+        }
+    }
+
+    /// Iterate dimensions as `(n, p, m)`.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.x.len(), self.lam.len(), self.nu.len())
+    }
+}
+
+/// A prior reverse-mode (adjoint) state `(z, wₛ, w_λ, w_ν)` to resume
+/// the transposed recursion from — returned by the `vjp_from` /
+/// `batch_vjp_from` entry points and stored alongside the forward
+/// [`WarmStart`] in the cache. Valid as a starting point for *any*
+/// later seed v (the fixed point moves, the iteration still converges);
+/// the closer the new v and slack gates are to the old ones, the more
+/// iterations it saves.
+#[derive(Clone, Debug)]
+pub struct AdjointSeed {
+    /// Adjoint primal iterate z (length n; also the CG warm start on
+    /// the sparse path).
+    pub z: Vec<f64>,
+    /// Slack adjoint wₛ (length m).
+    pub ws: Vec<f64>,
+    /// Equality-dual adjoint w_λ (length p).
+    pub wl: Vec<f64>,
+    /// Inequality-dual adjoint w_ν (length m).
+    pub wn: Vec<f64>,
+}
+
+impl AdjointSeed {
+    /// State dimensions as `(n, p, m)`.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.z.len(), self.wl.len(), self.ws.len())
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Cache fingerprint for a request's parameters.
+///
+/// With a `session` key (the wire protocol's optional client session,
+/// or a training loop's sample index) the fingerprint is a hash of the
+/// key alone — the drift-robust path: a session's next request hits the
+/// same slot however far θ moved, and the [`WarmStartCache`] staleness
+/// radius decides whether the stored iterate is still useful.
+///
+/// Without a session the fingerprint hashes the raw θ bits, so
+/// anonymous requests only hit on (near-)exact repeats of the same
+/// parameters — still worth having for idempotent retries and repeated
+/// oracle solves, but not for drifting workloads.
+pub fn fingerprint(
+    session: Option<u64>,
+    q: &[f64],
+    b: &[f64],
+    h: &[f64],
+) -> u64 {
+    if let Some(s) = session {
+        // salted so a session key never collides with a content hash
+        // except by chance
+        return splitmix64(s ^ 0x5e55_10a7_ba5e_d00d);
+    }
+    // FNV-1a over the raw f64 bits plus the field lengths (so e.g.
+    // (q=[v], b=[]) and (q=[], b=[v]) separate)
+    let mut acc: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bits: u64| {
+        acc ^= bits;
+        acc = acc.wrapping_mul(0x1_0000_0000_01b3);
+    };
+    for &v in q.iter().chain(b).chain(h) {
+        eat(v.to_bits());
+    }
+    eat(q.len() as u64);
+    eat(b.len() as u64);
+    eat(h.len() as u64);
+    acc
+}
+
+/// Relative L2 distance between two θ snapshots (concatenated q, b, h),
+/// normalized by the stored snapshot's norm: ‖θ_req − θ_stored‖ /
+/// max(‖θ_stored‖, 1). Mismatched dimensions are infinitely far apart.
+pub fn theta_distance(
+    stored: (&[f64], &[f64], &[f64]),
+    req: (&[f64], &[f64], &[f64]),
+) -> f64 {
+    let (sq, sb, sh) = stored;
+    let (rq, rb, rh) = req;
+    if sq.len() != rq.len() || sb.len() != rb.len() || sh.len() != rh.len()
+    {
+        return f64::INFINITY;
+    }
+    let mut d2 = 0.0;
+    let mut n2 = 0.0;
+    for (s, r) in sq
+        .iter()
+        .chain(sb)
+        .chain(sh)
+        .zip(rq.iter().chain(rb).chain(rh))
+    {
+        d2 += (s - r) * (s - r);
+        n2 += s * s;
+    }
+    d2.sqrt() / n2.sqrt().max(1.0)
+}
+
+/// One cached iterate: the θ it was solved at (for the staleness
+/// check), the forward warm triple, and optionally the adjoint state of
+/// the backward that followed it.
+struct Entry {
+    q: Vec<f64>,
+    b: Vec<f64>,
+    h: Vec<f64>,
+    warm: WarmStart,
+    adjoint: Option<AdjointSeed>,
+    stamp: u64,
+}
+
+/// FNV-1a of the layer name — hot-path lookups key on this hash
+/// instead of cloning the `String`. A 64-bit collision between two
+/// registered layer names is astronomically unlikely, and even then
+/// harmless: the dimension and staleness checks reject a foreign
+/// entry, and a same-shape near-θ iterate is a valid (convergent)
+/// warm start anyway.
+fn layer_hash(layer: &str) -> u64 {
+    let mut acc: u64 = 0xcbf2_9ce4_8422_2325;
+    for &byte in layer.as_bytes() {
+        acc ^= byte as u64;
+        acc = acc.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    acc
+}
+
+/// LRU warm-start cache keyed by `(layer, k, fingerprint)`.
+///
+/// `k` is the routed iteration count the iterate was produced under
+/// (callers outside the serving router — `nn::OptLayer`, training
+/// loops — use `k = 0` as the "tolerance-routed" sentinel). Lookups
+/// reject entries whose stored θ is farther than the configured
+/// `radius` from the requesting θ ([`theta_distance`]), so a slot never
+/// hands out an iterate that has drifted out of usefulness; a capacity
+/// of 0 disables the cache entirely (every `get` misses, `put` is a
+/// no-op — the serving default, so cold fixed-k semantics are opt-out).
+///
+/// ```
+/// use altdiff::warm::{fingerprint, WarmStart, WarmStartCache};
+///
+/// let mut cache = WarmStartCache::new(2, 0.5);
+/// let q = vec![1.0, 2.0];
+/// let fp = fingerprint(Some(7), &q, &[], &[]);
+/// let warm = WarmStart::new(vec![0.1, 0.2], vec![], vec![0.0]);
+/// cache.put("layer", 10, fp, q.clone(), vec![], vec![], warm, None);
+/// // same session, slightly drifted θ: within the radius → hit
+/// assert!(cache.get("layer", 10, fp, &[1.01, 2.0], &[], &[]).is_some());
+/// // same slot, θ far away: stale → miss
+/// assert!(cache.get("layer", 10, fp, &[99.0, -50.0], &[], &[]).is_none());
+/// // a different routed k is a different slot
+/// assert!(cache.get("layer", 20, fp, &[1.0, 2.0], &[], &[]).is_none());
+/// assert_eq!((cache.hits(), cache.misses()), (1, 2));
+/// ```
+pub struct WarmStartCache {
+    capacity: usize,
+    radius: f64,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    /// keyed (layer-name hash, routed k, fingerprint) — see
+    /// [`layer_hash`] for why the name is hashed rather than cloned
+    map: HashMap<(u64, usize, u64), Entry>,
+}
+
+impl WarmStartCache {
+    /// Cache holding at most `capacity` entries, handing out iterates
+    /// only within the relative staleness `radius` (see
+    /// [`theta_distance`]). `capacity = 0` disables the cache.
+    pub fn new(capacity: usize, radius: f64) -> Self {
+        WarmStartCache {
+            capacity,
+            radius,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            map: HashMap::new(),
+        }
+    }
+
+    /// True when the cache can ever hit (capacity > 0).
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Look up a warm iterate for `(layer, k, fp)` at the requesting θ.
+    /// Misses on absence, dimension mismatch, or staleness (stored θ
+    /// farther than the radius); hits bump the entry's LRU stamp and
+    /// return clones (the entry stays cached).
+    pub fn get(
+        &mut self,
+        layer: &str,
+        k: usize,
+        fp: u64,
+        q: &[f64],
+        b: &[f64],
+        h: &[f64],
+    ) -> Option<(WarmStart, Option<AdjointSeed>)> {
+        if self.capacity == 0 {
+            return None;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let key = (layer_hash(layer), k, fp);
+        match self.map.get_mut(&key) {
+            Some(e)
+                if theta_distance(
+                    (&e.q, &e.b, &e.h),
+                    (q, b, h),
+                ) <= self.radius =>
+            {
+                e.stamp = clock;
+                self.hits += 1;
+                Some((e.warm.clone(), e.adjoint.clone()))
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) the iterate for `(layer, k, fp)`, recording
+    /// the θ it was solved at for later staleness checks. Evicts the
+    /// least-recently-used entry when over capacity. `adjoint = None`
+    /// clears any previously stored seed (solve-path writes invalidate
+    /// the adjoint state, whose gates belonged to the old forward).
+    #[allow(clippy::too_many_arguments)]
+    pub fn put(
+        &mut self,
+        layer: &str,
+        k: usize,
+        fp: u64,
+        q: Vec<f64>,
+        b: Vec<f64>,
+        h: Vec<f64>,
+        warm: WarmStart,
+        adjoint: Option<AdjointSeed>,
+    ) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.clock += 1;
+        self.map.insert(
+            (layer_hash(layer), k, fp),
+            Entry { q, b, h, warm, adjoint, stamp: self.clock },
+        );
+        // LRU eviction by a min-stamp scan: O(capacity), but the scan
+        // is pure integer compares over a map that tops out at a few
+        // thousand entries — noise next to the O(k·n²)-scale solve
+        // each put amortizes against.
+        while self.map.len() > self.capacity {
+            let lru = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| *k)
+                .expect("nonempty over-capacity cache");
+            self.map.remove(&lru);
+        }
+    }
+
+    /// Cached entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Lookups that returned an iterate.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that found nothing usable (absent, stale, or mismatched
+    /// dimensions). Disabled-cache lookups count as neither.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Drop every entry (counters survive).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn warm(n: usize) -> WarmStart {
+        WarmStart::new(vec![1.0; n], vec![0.5; 1], vec![0.25; 2])
+    }
+
+    #[test]
+    fn hit_requires_radius_and_key_match() {
+        let mut c = WarmStartCache::new(4, 0.1);
+        let q = vec![1.0, 1.0];
+        let fp = fingerprint(Some(3), &q, &[], &[]);
+        c.put("l", 10, fp, q.clone(), vec![], vec![], warm(2), None);
+        assert!(c.get("l", 10, fp, &[1.0, 1.0], &[], &[]).is_some());
+        assert!(c.get("l", 10, fp, &[1.05, 1.0], &[], &[]).is_some());
+        // beyond the 0.1 relative radius
+        assert!(c.get("l", 10, fp, &[2.0, 1.0], &[], &[]).is_none());
+        // different layer / k / fingerprint: different slots
+        assert!(c.get("m", 10, fp, &q, &[], &[]).is_none());
+        assert!(c.get("l", 20, fp, &q, &[], &[]).is_none());
+        assert!(c.get("l", 10, fp ^ 1, &q, &[], &[]).is_none());
+        assert_eq!(c.hits(), 2);
+        assert_eq!(c.misses(), 4);
+    }
+
+    #[test]
+    fn dimension_mismatch_is_a_miss() {
+        let mut c = WarmStartCache::new(4, 10.0);
+        let fp = fingerprint(Some(1), &[1.0], &[], &[]);
+        c.put("l", 0, fp, vec![1.0], vec![], vec![], warm(1), None);
+        assert!(c.get("l", 0, fp, &[1.0, 2.0], &[], &[]).is_none());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = WarmStartCache::new(2, 1.0);
+        let fps: Vec<u64> =
+            (0..3).map(|i| fingerprint(Some(i), &[], &[], &[])).collect();
+        c.put("l", 0, fps[0], vec![1.0], vec![], vec![], warm(1), None);
+        c.put("l", 0, fps[1], vec![1.0], vec![], vec![], warm(1), None);
+        // touch slot 0 so slot 1 becomes the LRU
+        assert!(c.get("l", 0, fps[0], &[1.0], &[], &[]).is_some());
+        c.put("l", 0, fps[2], vec![1.0], vec![], vec![], warm(1), None);
+        assert_eq!(c.len(), 2);
+        assert!(c.get("l", 0, fps[0], &[1.0], &[], &[]).is_some());
+        assert!(c.get("l", 0, fps[1], &[1.0], &[], &[]).is_none());
+        assert!(c.get("l", 0, fps[2], &[1.0], &[], &[]).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = WarmStartCache::new(0, 1.0);
+        assert!(!c.enabled());
+        let fp = fingerprint(None, &[1.0], &[], &[]);
+        c.put("l", 0, fp, vec![1.0], vec![], vec![], warm(1), None);
+        assert!(c.get("l", 0, fp, &[1.0], &[], &[]).is_none());
+        assert_eq!(c.len(), 0);
+        assert_eq!((c.hits(), c.misses()), (0, 0));
+    }
+
+    #[test]
+    fn anonymous_fingerprint_is_content_addressed() {
+        let a = fingerprint(None, &[1.0, 2.0], &[3.0], &[]);
+        let b = fingerprint(None, &[1.0, 2.0], &[3.0], &[]);
+        let c = fingerprint(None, &[1.0, 2.0], &[], &[3.0]);
+        let d = fingerprint(None, &[1.0, 2.0], &[3.0 + 1e-12], &[]);
+        assert_eq!(a, b);
+        assert_ne!(a, c, "field boundaries must separate");
+        assert_ne!(a, d, "content-addressed: any bit change re-keys");
+        // session keys ignore content entirely
+        assert_eq!(
+            fingerprint(Some(9), &[1.0], &[], &[]),
+            fingerprint(Some(9), &[7.0], &[2.0], &[])
+        );
+    }
+
+    #[test]
+    fn put_replaces_and_adjoint_round_trips() {
+        let mut c = WarmStartCache::new(2, 1.0);
+        let fp = fingerprint(Some(5), &[], &[], &[]);
+        c.put("l", 0, fp, vec![1.0], vec![], vec![], warm(1), None);
+        let seed = AdjointSeed {
+            z: vec![0.5],
+            ws: vec![0.1, 0.2],
+            wl: vec![0.3],
+            wn: vec![0.4, 0.5],
+        };
+        c.put(
+            "l",
+            0,
+            fp,
+            vec![1.0],
+            vec![],
+            vec![],
+            warm(1),
+            Some(seed),
+        );
+        assert_eq!(c.len(), 1);
+        let (_, adj) = c.get("l", 0, fp, &[1.0], &[], &[]).unwrap();
+        let adj = adj.expect("adjoint seed survives");
+        assert_eq!(adj.dims(), (1, 1, 2));
+        assert_eq!(adj.ws, vec![0.1, 0.2]);
+    }
+
+    #[test]
+    fn theta_distance_basics() {
+        let d = theta_distance(
+            (&[1.0, 0.0], &[], &[]),
+            (&[1.0, 0.0], &[], &[]),
+        );
+        assert_eq!(d, 0.0);
+        let d = theta_distance((&[3.0, 4.0], &[], &[]), (&[3.0, 3.0], &[], &[]));
+        assert!((d - 1.0 / 5.0).abs() < 1e-12);
+        assert!(theta_distance((&[1.0], &[], &[]), (&[1.0, 2.0], &[], &[]))
+            .is_infinite());
+    }
+}

@@ -176,6 +176,7 @@ fn prop_batcher_conservation() {
                 h: vec![],
                 tol: 1e-3,
                 grad_v: None,
+                session: None,
                 submitted: Instant::now(),
             };
             if let Some(batch) = b.push(k, req) {

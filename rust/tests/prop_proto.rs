@@ -35,6 +35,7 @@ fn rand_request(rng: &mut Pcg64, grad: bool) -> Request {
         h: rand_vec(rng, 20),
         tol: 10f64.powi(-(rng.below(9) as i32)),
         grad_v: grad.then(|| rand_vec(rng, 40)),
+        session: (rng.below(2) == 1).then(|| rng.next_u64()),
         submitted: Instant::now(),
     }
 }
@@ -61,6 +62,7 @@ fn request_encode_decode_is_identity() {
         assert_eq!(back.h, req.h);
         assert_eq!(back.tol, req.tol);
         assert_eq!(back.grad_v, req.grad_v);
+        assert_eq!(back.session, req.session);
     }
 }
 
@@ -172,6 +174,7 @@ fn oversized_length_prefix_is_rejected_before_allocation() {
     let mut w_payload = Vec::new();
     w_payload.extend_from_slice(&7u64.to_le_bytes()); // id
     w_payload.extend_from_slice(&1e-3f64.to_le_bytes()); // tol
+    w_payload.push(0); // no session key
     w_payload.extend_from_slice(&1u16.to_le_bytes()); // layer len
     w_payload.push(b'l');
     w_payload.extend_from_slice(&u32::MAX.to_le_bytes()); // q count
@@ -188,6 +191,7 @@ fn wrong_version_and_magic_are_rejected() {
         h: vec![],
         tol: 0.1,
         grad_v: None,
+        session: None,
         submitted: Instant::now(),
     });
     let mut bad_ver = good.clone();
@@ -229,6 +233,19 @@ fn garbage_bytes_never_panic_the_decoder() {
         let _ = proto::decode_stats_reply(&bytes);
         let _ = proto::decode_layers_reply(&bytes);
         let _ = proto::decode_goodbye(&bytes);
+    }
+}
+
+#[test]
+fn bad_session_tag_is_rejected() {
+    let mut rng = Pcg64::new(18);
+    for grad in [false, true] {
+        let req = rand_request(&mut rng, grad);
+        let (op_, mut payload) = strip(&proto::encode_request(&req));
+        // the session presence tag sits after id (u64) + tol (f64) and
+        // must be 0 or 1 — anything else is a protocol violation
+        payload[16] = 2;
+        assert!(proto::decode_request(op_, &payload).is_err());
     }
 }
 

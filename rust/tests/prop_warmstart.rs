@@ -1,0 +1,557 @@
+//! Warm-start subsystem properties: warm-started solves converge to the
+//! cold fixed point (1e-8 parity on all four engines, forward and
+//! adjoint), mixed warm/cold batches match sequential solves, the cache
+//! honors hit/miss/staleness/LRU semantics end to end through
+//! `nn::OptLayer`, and a wire round trip with a session key observes
+//! server-side warm hits.
+
+use altdiff::altdiff::{
+    BackwardMode, DenseAltDiff, Options, Param, SparseAltDiff,
+};
+use altdiff::batch::{BatchedAltDiff, BatchedSparseAltDiff};
+use altdiff::coordinator::{Config, Coordinator, FailureKind, Reply};
+use altdiff::net::{Client, NetConfig, NetServer};
+use altdiff::nn::{OptBackend, OptLayer};
+use altdiff::prob::{dense_qp, sparse_qp, sparsemax_qp};
+use altdiff::warm::WarmStart;
+use std::time::Duration;
+
+fn tight() -> Options {
+    Options {
+        tol: 1e-11,
+        max_iter: 60_000,
+        backward: BackwardMode::None,
+        ..Default::default()
+    }
+}
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() < tol,
+            "{what}[{i}]: {x} vs {y} (|Δ|={})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[test]
+fn warm_equals_cold_dense_sequential() {
+    let solver = DenseAltDiff::new(dense_qp(16, 8, 3, 41), 1.0).unwrap();
+    let opts = tight();
+    let cold = solver.solve(&opts);
+    // warm from a *nearby* θ's solution: same fixed point, fewer iters
+    let q2: Vec<f64> =
+        solver.qp.q.iter().map(|&v| 1.05 * v).collect();
+    let near = solver.solve_with(Some(&q2), None, None, &opts);
+    let warm = solver.solve_from(
+        None,
+        None,
+        None,
+        Some(&WarmStart::of(&near)),
+        &opts,
+    );
+    assert_close(&warm.x, &cold.x, 1e-8, "x");
+    assert_close(&warm.lam, &cold.lam, 1e-8, "lam");
+    assert!(
+        warm.iters < cold.iters,
+        "warm {} vs cold {} iterations",
+        warm.iters,
+        cold.iters
+    );
+    // warm from the converged solution itself: near-instant
+    let rewarm = solver.solve_from(
+        None,
+        None,
+        None,
+        Some(&WarmStart::of(&cold)),
+        &opts,
+    );
+    assert_close(&rewarm.x, &cold.x, 1e-8, "rewarm x");
+    assert!(rewarm.iters <= 2, "rewarm took {} iters", rewarm.iters);
+}
+
+#[test]
+fn warm_equals_cold_sparse_sequential_both_engines() {
+    for (sq, label) in [
+        (sparsemax_qp(30, 5), "sherman-morrison"),
+        (sparse_qp(20, 9, 4, 0.3, 6), "cg"),
+    ] {
+        let solver = SparseAltDiff::new(sq, 1.0).unwrap();
+        let opts = tight();
+        let cold = solver.solve(&opts);
+        let q2: Vec<f64> =
+            solver.qp.q.iter().map(|&v| 0.95 * v).collect();
+        let near = solver.solve_with(Some(&q2), None, None, &opts);
+        let warm = solver.solve_from(
+            None,
+            None,
+            None,
+            Some(&WarmStart::of(&near)),
+            &opts,
+        );
+        assert_close(&warm.x, &cold.x, 1e-8, label);
+        assert!(
+            warm.iters < cold.iters,
+            "{label}: warm {} vs cold {}",
+            warm.iters,
+            cold.iters
+        );
+    }
+}
+
+#[test]
+fn warm_vjp_parity_dense_and_sparse() {
+    let opts = Options { backward: BackwardMode::Adjoint, ..tight() };
+    // dense
+    let d = DenseAltDiff::new(dense_qp(12, 6, 3, 42), 1.0).unwrap();
+    let sol = d.solve_with(None, None, None, &tight());
+    let v: Vec<f64> = (0..12).map(|i| 1.0 - 0.15 * i as f64).collect();
+    let cold = d.vjp(&sol.s, &v, &opts);
+    // seed from a backward at a perturbed v
+    let v2: Vec<f64> = v.iter().map(|&x| 1.1 * x + 0.05).collect();
+    let (_, seed) = d.vjp_from(&sol.s, &v2, None, &opts);
+    let (warm, _) = d.vjp_from(&sol.s, &v, Some(&seed), &opts);
+    assert_close(&warm.grad_q, &cold.grad_q, 1e-8, "dense grad_q");
+    assert_close(&warm.grad_b, &cold.grad_b, 1e-8, "dense grad_b");
+    assert_close(&warm.grad_h, &cold.grad_h, 1e-8, "dense grad_h");
+    // resuming from the converged state is near-instant
+    let (_, conv) = d.vjp_from(&sol.s, &v, None, &opts);
+    let (re, _) = d.vjp_from(&sol.s, &v, Some(&conv), &opts);
+    assert!(re.iters < cold.iters, "{} vs {}", re.iters, cold.iters);
+    // sparse (both x-update engines)
+    for sq in [sparsemax_qp(24, 7), sparse_qp(14, 6, 3, 0.3, 8)] {
+        let s = SparseAltDiff::new(sq, 1.0).unwrap();
+        let sol = s.solve_with(None, None, None, &tight());
+        let n = sol.x.len();
+        let v: Vec<f64> =
+            (0..n).map(|i| 0.5 - 0.07 * i as f64).collect();
+        let cold = s.vjp(&sol.s, &v, &opts);
+        let v2: Vec<f64> = v.iter().map(|&x| 0.9 * x - 0.02).collect();
+        let (_, seed) = s.vjp_from(&sol.s, &v2, None, &opts);
+        let (warm, _) = s.vjp_from(&sol.s, &v, Some(&seed), &opts);
+        assert_close(&warm.grad_q, &cold.grad_q, 1e-8, "sparse grad_q");
+        assert_close(&warm.grad_h, &cold.grad_h, 1e-8, "sparse grad_h");
+    }
+}
+
+/// Ragged mixed warm/cold batches: per-element parity against cold
+/// sequential solves at 1e-8, with warm elements finishing first.
+#[test]
+fn mixed_warm_cold_batches_dense() {
+    let dense = DenseAltDiff::new(dense_qp(14, 7, 3, 43), 1.0).unwrap();
+    let batched = BatchedAltDiff::from_dense(&dense);
+    let opts = tight();
+    for bsz in [2usize, 5] {
+        let qs: Vec<Vec<f64>> = (0..bsz)
+            .map(|e| {
+                dense
+                    .qp
+                    .q
+                    .iter()
+                    .map(|&v| v * (1.0 + 0.07 * e as f64))
+                    .collect()
+            })
+            .collect();
+        let qrefs: Vec<&[f64]> =
+            qs.iter().map(|q| q.as_slice()).collect();
+        // warm every even element from its own converged solution
+        let warms: Vec<Option<WarmStart>> = (0..bsz)
+            .map(|e| {
+                (e % 2 == 0).then(|| {
+                    WarmStart::of(&dense.solve_with(
+                        Some(&qs[e]),
+                        None,
+                        None,
+                        &opts,
+                    ))
+                })
+            })
+            .collect();
+        let sol = batched.solve_batch_from(
+            Some(&qrefs),
+            None,
+            None,
+            Some(&warms),
+            &opts,
+        );
+        for e in 0..bsz {
+            let seq =
+                dense.solve_with(Some(&qs[e]), None, None, &opts);
+            assert_close(&sol.xs[e], &seq.x, 1e-8, "x");
+            assert_close(&sol.nus[e], &seq.nu, 1e-8, "nu");
+            if e % 2 == 0 {
+                assert!(
+                    sol.iters[e] < seq.iters,
+                    "warm element {e}: {} vs cold {}",
+                    sol.iters[e],
+                    seq.iters
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_warm_cold_batches_sparse_both_engines() {
+    for (sq, label) in [
+        (sparsemax_qp(20, 9), "sherman-morrison"),
+        (sparse_qp(16, 7, 3, 0.3, 10), "cg"),
+    ] {
+        let seq = SparseAltDiff::new(sq, 1.0).unwrap();
+        let batched = BatchedSparseAltDiff::from_sparse(&seq);
+        let opts = tight();
+        let bsz = 3usize;
+        let qs: Vec<Vec<f64>> = (0..bsz)
+            .map(|e| {
+                seq.qp
+                    .q
+                    .iter()
+                    .map(|&v| v * (1.0 + 0.1 * e as f64))
+                    .collect()
+            })
+            .collect();
+        let qrefs: Vec<&[f64]> =
+            qs.iter().map(|q| q.as_slice()).collect();
+        let warms: Vec<Option<WarmStart>> = (0..bsz)
+            .map(|e| {
+                (e != 1).then(|| {
+                    WarmStart::of(&seq.solve_with(
+                        Some(&qs[e]),
+                        None,
+                        None,
+                        &opts,
+                    ))
+                })
+            })
+            .collect();
+        let sol = batched
+            .try_solve_batch_from(
+                Some(&qrefs),
+                None,
+                None,
+                Some(&warms),
+                &opts,
+            )
+            .unwrap();
+        for e in 0..bsz {
+            let direct =
+                seq.solve_with(Some(&qs[e]), None, None, &opts);
+            assert_close(&sol.xs[e], &direct.x, 1e-8, label);
+            if e != 1 {
+                assert!(
+                    sol.iters[e] < direct.iters,
+                    "{label} warm element {e}: {} vs {}",
+                    sol.iters[e],
+                    direct.iters
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_adjoint_seeds_round_trip_both_engines() {
+    let opts = Options { backward: BackwardMode::Adjoint, ..tight() };
+    // dense batched
+    let dense = DenseAltDiff::new(dense_qp(10, 5, 2, 44), 1.0).unwrap();
+    let batched = BatchedAltDiff::from_dense(&dense);
+    let fwd = batched.solve_batch(None, None, None, &tight());
+    let slacks = fwd.slack_refs();
+    let slacks2: Vec<&[f64]> = vec![slacks[0], slacks[0]];
+    let v0: Vec<f64> = (0..10).map(|i| 1.0 - 0.2 * i as f64).collect();
+    let v1: Vec<f64> = v0.iter().map(|&x| -0.5 * x).collect();
+    let vs: Vec<&[f64]> = vec![&v0, &v1];
+    let cold = batched.batch_vjp(&slacks2, &vs, &opts);
+    let (_, seeds) = batched.batch_vjp_from(&slacks2, &vs, None, &opts);
+    // warm only element 0; element 1 cold — parity for both
+    let warms: Vec<_> =
+        vec![Some(seeds[0].clone()), None];
+    let (warm, _) =
+        batched.batch_vjp_from(&slacks2, &vs, Some(&warms), &opts);
+    for e in 0..2 {
+        assert_close(
+            &warm.grads_q[e],
+            &cold.grads_q[e],
+            1e-8,
+            "dense grads_q",
+        );
+        assert_close(
+            &warm.grads_h[e],
+            &cold.grads_h[e],
+            1e-8,
+            "dense grads_h",
+        );
+    }
+    assert!(warm.iters[0] < cold.iters[0], "seeded element is faster");
+    // sparse batched (Sherman–Morrison structure)
+    let ssolver = SparseAltDiff::new(sparsemax_qp(18, 11), 1.0).unwrap();
+    let sbatched = BatchedSparseAltDiff::from_sparse(&ssolver);
+    let sfwd = sbatched.solve_batch(None, None, None, &tight());
+    let sslacks = sfwd.slack_refs();
+    let sv: Vec<f64> = (0..18).map(|i| 0.3 * (i as f64).cos()).collect();
+    let svs: Vec<&[f64]> = vec![&sv];
+    let scold = sbatched.batch_vjp(&sslacks, &svs, &opts);
+    let (_, sseeds) = sbatched
+        .try_batch_vjp_from(&sslacks, &svs, None, &opts)
+        .unwrap();
+    let swarms: Vec<_> = vec![Some(sseeds[0].clone())];
+    let (swarm, _) = sbatched
+        .try_batch_vjp_from(&sslacks, &svs, Some(&swarms), &opts)
+        .unwrap();
+    assert_close(
+        &swarm.grads_q[0],
+        &scold.grads_q[0],
+        1e-8,
+        "sparse grads_q",
+    );
+    assert!(swarm.iters[0] <= scold.iters[0]);
+}
+
+#[test]
+#[should_panic(expected = "forward-mode Jacobians require tol = 0")]
+fn warm_forward_mode_with_truncation_is_rejected() {
+    let solver = DenseAltDiff::new(dense_qp(8, 4, 2, 45), 1.0).unwrap();
+    let sol = solver.solve(&Options::forward_only());
+    let opts = Options {
+        tol: 1e-3,
+        backward: BackwardMode::Forward(Param::B),
+        ..Default::default()
+    };
+    let _ = solver.solve_from(
+        None,
+        None,
+        None,
+        Some(&WarmStart::of(&sol)),
+        &opts,
+    );
+}
+
+/// Warm + forward-mode at tol = 0 (the serving contract) is legal and
+/// at least as accurate as the cold fixed-k Jacobian.
+#[test]
+fn warm_fixed_k_forward_mode_jacobian_stays_valid() {
+    let solver = DenseAltDiff::new(dense_qp(10, 5, 2, 46), 1.0).unwrap();
+    let exact = solver.solve(&Options {
+        tol: 1e-12,
+        max_iter: 60_000,
+        backward: BackwardMode::Forward(Param::B),
+        ..Default::default()
+    });
+    let k_opts = Options {
+        tol: 0.0,
+        max_iter: 15,
+        backward: BackwardMode::Forward(Param::B),
+        ..Default::default()
+    };
+    let cold = solver.solve(&k_opts);
+    let near = solver.solve(&Options::forward_only());
+    let warm = solver.solve_from(
+        None,
+        None,
+        None,
+        Some(&WarmStart::of(&near)),
+        &k_opts,
+    );
+    let je = exact.jacobian.as_ref().unwrap();
+    let jc = cold.jacobian.as_ref().unwrap();
+    let jw = warm.jacobian.as_ref().unwrap();
+    let cold_err = jc.sub(je).fro();
+    let warm_err = jw.sub(je).fro();
+    // the warm run's slack gates are correct from iteration 1, so its
+    // fixed-k Jacobian is comparable-or-better — never garbage (the
+    // failure mode the tol=0 restriction exists to prevent)
+    assert!(
+        warm_err <= 2.0 * cold_err + 1e-10,
+        "warm fixed-k Jacobian degraded: {warm_err} vs cold {cold_err}"
+    );
+}
+
+/// `nn::OptLayer` keyed warm starts: parity with the cold layer and
+/// observable hits on revisits (epoch-over-epoch reuse).
+#[test]
+fn optlayer_keyed_warm_starts_hit_and_agree() {
+    let mk = || {
+        OptLayer::new(dense_qp(10, 5, 2, 47), 1.0, OptBackend::AltDiff, 1e-9)
+            .unwrap()
+    };
+    let mut cold = mk();
+    let mut warm = mk();
+    warm.enable_warm_start(16, 1.0);
+    let qs: Vec<Vec<f64>> = (0..3)
+        .map(|s| {
+            (0..10).map(|i| 0.1 * i as f64 - 0.2 + 0.15 * s as f64).collect()
+        })
+        .collect();
+    let keys: Vec<u64> = vec![7, 8, 9];
+    let gxs: Vec<Vec<f64>> =
+        (0..3).map(|_| vec![1.0; 10]).collect();
+    // epoch 1: all cold (misses), epoch 2: all warm (hits)
+    let x1 = warm.forward_batch_keyed(&qs, &keys);
+    let g1 = warm.backward_batch(&gxs);
+    assert_eq!(warm.warm_stats(), Some((0, 3)));
+    let e1_iters: usize = warm.last_batch_iters.iter().sum();
+    let x2 = warm.forward_batch_keyed(&qs, &keys);
+    let g2 = warm.backward_batch(&gxs);
+    assert_eq!(warm.warm_stats(), Some((3, 3)));
+    let e2_iters: usize = warm.last_batch_iters.iter().sum();
+    assert!(
+        e2_iters < e1_iters,
+        "revisit did not save iterations: {e2_iters} vs {e1_iters}"
+    );
+    // parity against the cold layer
+    let xc = cold.forward_batch(&qs);
+    let gc = cold.backward_batch(&gxs);
+    for e in 0..3 {
+        assert_close(&x1[e], &xc[e], 1e-6, "epoch-1 x");
+        assert_close(&x2[e], &xc[e], 1e-6, "epoch-2 x");
+        assert_close(&g1[e], &gc[e], 1e-6, "epoch-1 grad");
+        assert_close(&g2[e], &gc[e], 1e-6, "epoch-2 grad");
+    }
+}
+
+/// Coordinator warm cache: a repeated in-process solve under one
+/// session key hits; the warm grad path saves iterations under the
+/// routed k.
+#[test]
+fn coordinator_session_requests_hit_the_warm_cache() {
+    let qp = dense_qp(12, 6, 3, 9);
+    let mut c = Coordinator::builder(Config {
+        workers: 1,
+        max_batch: 1,
+        batch_deadline: Duration::from_millis(1),
+        artifacts: None,
+        warm_capacity: 64,
+        warm_radius: 0.5,
+        ..Default::default()
+    })
+    .register("layer0", qp.clone(), 1.0)
+    .unwrap()
+    .start();
+    let v = vec![1.0; 12];
+    for round in 0..2 {
+        c.submit_session(
+            "layer0",
+            qp.q.clone(),
+            qp.b.clone(),
+            qp.h.clone(),
+            1e-3,
+            500,
+        );
+        match c.recv_timeout(Duration::from_secs(30)).expect("reply") {
+            Reply::Ok(r) => assert_eq!(r.x.len(), 12),
+            other => panic!("round {round}: unexpected {other:?}"),
+        }
+        c.submit_grad_session(
+            "layer0",
+            qp.q.clone(),
+            qp.b.clone(),
+            qp.h.clone(),
+            v.clone(),
+            1e-3,
+            501,
+        );
+        match c.recv_timeout(Duration::from_secs(30)).expect("reply") {
+            Reply::Grad(g) => assert_eq!(g.grad_q.len(), 12),
+            other => panic!("round {round}: unexpected {other:?}"),
+        }
+    }
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    assert!(
+        c.metrics.warm_hits.load(ord) >= 2,
+        "second round should hit both sessions (hits={})",
+        c.metrics.warm_hits.load(ord)
+    );
+    assert!(c.metrics.warm_misses.load(ord) >= 2, "first round misses");
+    assert!(
+        c.metrics.warm_iters_saved.load(ord) > 0,
+        "warm grad batch should truncate under the routed k"
+    );
+}
+
+/// Wire round trip: a second request with the same session key
+/// observes `warm_hits > 0` in the server's metrics.
+#[test]
+fn wire_session_key_warms_across_requests() {
+    let qp = dense_qp(12, 6, 3, 9);
+    let coord = Coordinator::builder(Config {
+        workers: 1,
+        max_batch: 1,
+        batch_deadline: Duration::from_millis(1),
+        artifacts: None,
+        warm_capacity: 64,
+        warm_radius: 0.5,
+        ..Default::default()
+    })
+    .register("dense12", qp.clone(), 1.0)
+    .unwrap()
+    .start();
+    let server =
+        NetServer::bind("127.0.0.1:0", coord, NetConfig::default())
+            .expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let mut cl = Client::connect(addr).expect("connect");
+    cl.set_session(1234);
+    for round in 0..2 {
+        // slight per-round drift: the session key (not θ equality) is
+        // what routes round 2 onto round 1's iterate
+        let s = 1.0 + 0.02 * round as f64;
+        let q: Vec<f64> = qp.q.iter().map(|&v| v * s).collect();
+        match cl
+            .solve("dense12", q, qp.b.clone(), qp.h.clone(), 1e-3)
+            .expect("solve")
+        {
+            Reply::Ok(r) => assert_eq!(r.x.len(), 12),
+            other => panic!("round {round}: unexpected {other:?}"),
+        }
+    }
+    // the second request's warm hit is visible over the wire
+    let stats = cl.stats().expect("stats");
+    let hits: u64 = stats
+        .lines()
+        .find(|l| l.starts_with("altdiff_warm_hits_total"))
+        .and_then(|l| l.split_whitespace().last())
+        .and_then(|v| v.parse().ok())
+        .expect("warm_hits_total in stats text");
+    assert!(hits >= 1, "no warm hit observed over the wire:\n{stats}");
+    drop(cl);
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let coord = handle.join().expect("server thread");
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    assert!(coord.metrics.warm_hits.load(ord) >= 1);
+}
+
+/// The routing bugfix: a tolerance tighter than everything the layer's
+/// truncation table was calibrated for is rejected with
+/// `FailureKind::Invalid` (documented message), never silently clamped
+/// to the top rung.
+#[test]
+fn over_tight_tolerance_is_rejected_not_clamped() {
+    let qp = dense_qp(10, 5, 2, 9);
+    let mut c = Coordinator::builder(Config::default())
+        .register("layer0", qp.clone(), 1.0)
+        .unwrap()
+        .start();
+    c.submit("layer0", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-12);
+    match c.recv_timeout(Duration::from_secs(10)).expect("reply") {
+        Reply::Err(f) => {
+            assert_eq!(f.kind, FailureKind::Invalid);
+            assert!(
+                f.error.contains("truncation table"),
+                "unexpected message: {}",
+                f.error
+            );
+        }
+        other => panic!("expected Invalid failure, got {other:?}"),
+    }
+    // calibrated-range requests still serve
+    c.submit("layer0", qp.q.clone(), qp.b.clone(), qp.h.clone(), 1e-3);
+    match c.recv_timeout(Duration::from_secs(30)).expect("reply") {
+        Reply::Ok(r) => assert_eq!(r.x.len(), 10),
+        other => panic!("healthy request failed: {other:?}"),
+    }
+}
