@@ -1,0 +1,248 @@
+//! ADMM vs Alt-Diff iterations-to-KKT-target across conditioning — the
+//! offline analogue of the coordinator's cross-method router. Each cell
+//! probes both batched families with fixed-k launches up an iteration
+//! ladder (exactly the router's calibration procedure) and records the
+//! smallest rung whose batch-max KKT residual clears the target: on
+//! well-conditioned problems fixed-ρ Alt-Diff is competitive, on
+//! ill-conditioned ones the ρ-balanced ADMM family converges while
+//! Alt-Diff stalls — the gap the router monetizes per tolerance.
+//!
+//! Grid: conditioning ∈ {well, ill (P, q × 1e4)} × n ∈ {100, 500, 2000}
+//! × B ∈ {1, 8, 32}. Every ill cell asserts the ADMM rung is strictly
+//! better than Alt-Diff's (the acceptance bar; a violation aborts).
+//!
+//! Run: cargo bench --bench bench_admm [-- --quick|--smoke]
+//!      [--batches 1,8] [--scale 1e4]
+//!
+//! `--smoke` runs a tiny CI-sized grid (seconds) and skips the
+//! repo-root baseline write; full runs refresh `BENCH_admm.json` at
+//! the repository root (the committed perf trajectory).
+
+use altdiff::admm::{AdmmQp, AdmmSettings, BatchedAdmm};
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options};
+use altdiff::batch::{BatchSolution, BatchedAltDiff};
+use altdiff::prob::{dense_qp, ill_conditioned_qp, Qp};
+use altdiff::util::{Args, JsonReport, Stats, Table};
+use std::time::Instant;
+
+/// The compiled-artifact contract: exactly k iterations, no early exit.
+fn fixed_k(k: usize) -> Options {
+    Options {
+        rho: 1.0,
+        tol: 0.0,
+        max_iter: k,
+        backward: BackwardMode::None,
+        trace: false,
+    }
+}
+
+enum Fam {
+    Alt(BatchedAltDiff),
+    Admm(BatchedAdmm),
+}
+
+impl Fam {
+    /// One fixed-k launch of B replicas of the registered θ.
+    fn launch(&self, bsz: usize, opts: &Options) -> BatchSolution {
+        // replicate the registered q so every element does full work
+        // while the KKT residual stays evaluable against the cell's Qp
+        let q = match self {
+            Fam::Alt(b) => b.qp.q.clone(),
+            Fam::Admm(b) => b.qp.q.clone(),
+        };
+        let qs: Vec<&[f64]> = (0..bsz).map(|_| q.as_slice()).collect();
+        match self {
+            Fam::Alt(b) => b.solve_batch(Some(&qs), None, None, opts),
+            Fam::Admm(b) => b.solve_batch(Some(&qs), None, None, opts),
+        }
+    }
+}
+
+/// Batch-max KKT residual against the cell's problem.
+fn batch_residual(qp: &Qp, sol: &BatchSolution) -> f64 {
+    (0..sol.len())
+        .map(|e| qp.kkt_residual(&sol.xs[e], &sol.lams[e], &sol.nus[e]))
+        .fold(0.0, f64::max)
+}
+
+/// Probe up the ladder; return (winning rung, converged?, residual
+/// there). A family that never clears the target reports the top rung.
+fn calibrate(
+    fam: &Fam,
+    qp: &Qp,
+    bsz: usize,
+    ladder: &[usize],
+    target: f64,
+) -> (usize, bool, f64) {
+    let mut last = (ladder[0], false, f64::INFINITY);
+    for &k in ladder {
+        let sol = fam.launch(bsz, &fixed_k(k));
+        let res = batch_residual(qp, &sol);
+        last = (k, res <= target, res);
+        if res <= target {
+            return last;
+        }
+    }
+    last
+}
+
+/// Median wall seconds of `reps` launches at the winning rung.
+fn time_at(fam: &Fam, bsz: usize, k: usize, reps: usize) -> Stats {
+    let opts = fixed_k(k);
+    let secs: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            let _ = fam.launch(bsz, &opts);
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    Stats::from_samples(&secs)
+}
+
+fn main() {
+    let args = Args::parse();
+    let smoke = args.has("smoke");
+    let quick = args.has("quick");
+    let scale = args.get_f64("scale", 1e4);
+    let default_sizes: &[usize] = if smoke {
+        &[24, 60]
+    } else if quick {
+        &[100, 500]
+    } else {
+        &[100, 500, 2000]
+    };
+    let default_batches: &[usize] =
+        if smoke { &[1, 4] } else { &[1, 8, 32] };
+    let sizes = args.get_usize_list("sizes", default_sizes);
+    let batches = args.get_usize_list("batches", default_batches);
+    let ladder: &[usize] =
+        if smoke { &[8, 64, 256] } else { &[16, 64, 256, 1024] };
+    let reps = if smoke { 1 } else { 3 };
+
+    let mut t = Table::new(
+        &format!(
+            "ADMM vs Alt-Diff — iterations to KKT target (fixed-k \
+             ladder {ladder:?}, ill scale {scale:.0e})"
+        ),
+        &[
+            "cond",
+            "n",
+            "B",
+            "alt k",
+            "admm k",
+            "alt (s)",
+            "admm (s)",
+            "speedup",
+        ],
+    );
+    let mut json = JsonReport::new("admm");
+
+    for &n in &sizes {
+        for ill in [false, true] {
+            let (cond, qp) = if ill {
+                (
+                    "ill",
+                    ill_conditioned_qp(
+                        n,
+                        n / 2,
+                        n / 5,
+                        scale,
+                        42 + n as u64,
+                    ),
+                )
+            } else {
+                ("well", dense_qp(n, n / 2, n / 5, 42 + n as u64))
+            };
+            // accuracy target scales with the objective data so well
+            // and ill cells demand the same *relative* accuracy
+            let qmax =
+                qp.q.iter().fold(0.0f64, |a, &v| a.max(v.abs()));
+            let target = 1e-5 * (1.0 + qmax);
+            let alt = Fam::Alt(BatchedAltDiff::from_dense(
+                &DenseAltDiff::new(qp.clone(), 1.0).unwrap(),
+            ));
+            let adm = Fam::Admm(BatchedAdmm::from_single(
+                &AdmmQp::new_adapted(
+                    qp.clone(),
+                    1.0,
+                    AdmmSettings::default(),
+                )
+                .unwrap(),
+            ));
+            for &bsz in &batches {
+                let (ak, aconv, ares) =
+                    calibrate(&alt, &qp, bsz, ladder, target);
+                let (mk, mconv, mres) =
+                    calibrate(&adm, &qp, bsz, ladder, target);
+                if ill {
+                    // the acceptance bar: ρ-balanced ADMM must beat
+                    // fixed-ρ Alt-Diff on every ill-conditioned cell
+                    assert!(
+                        mconv && (mk < ak || !aconv),
+                        "ADMM did not win the ill cell n={n} B={bsz}: \
+                         admm k={mk} (res {mres:.2e}) vs alt k={ak} \
+                         (res {ares:.2e}, target {target:.2e})"
+                    );
+                }
+                let ast = time_at(&alt, bsz, ak, reps);
+                let mst = time_at(&adm, bsz, mk, reps);
+                let speedup = ast.median / mst.median.max(1e-12);
+                let mark = |k: usize, conv: bool| {
+                    if conv {
+                        k.to_string()
+                    } else {
+                        format!(">{k}")
+                    }
+                };
+                t.row(&[
+                    cond.to_string(),
+                    n.to_string(),
+                    bsz.to_string(),
+                    mark(ak, aconv),
+                    mark(mk, mconv),
+                    format!("{:.4}", ast.median),
+                    format!("{:.4}", mst.median),
+                    format!("{speedup:.2}x"),
+                ]);
+                json.entry(
+                    &[
+                        ("cond", cond),
+                        ("n", &n.to_string()),
+                        ("B", &bsz.to_string()),
+                    ],
+                    &mst,
+                    &[
+                        ("alt_k", ak as f64),
+                        ("admm_k", mk as f64),
+                        ("alt_converged", f64::from(u8::from(aconv))),
+                        ("admm_converged", f64::from(u8::from(mconv))),
+                        ("alt_median", ast.median),
+                        ("admm_median", mst.median),
+                        ("speedup", speedup),
+                        ("kkt_target", target),
+                    ],
+                );
+            }
+        }
+    }
+    t.print();
+    t.write_csv("admm").unwrap();
+    match json.write() {
+        Ok(path) => println!("machine-readable results: {path}"),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
+    if !smoke {
+        match json.write_repo_root() {
+            Ok(path) => println!("perf baseline: {path}"),
+            Err(e) => eprintln!("baseline write failed: {e}"),
+        }
+    }
+    println!(
+        "claims: on every ill-conditioned cell the residual-balanced \
+         ADMM family clears the KKT target at a strictly better ladder \
+         rung than fixed-ρ Alt-Diff (asserted above) — the per-tolerance \
+         gap the coordinator's cross-method router exploits when \
+         `register_routed` calibrates both families; the serving \
+         analogue is the `router_admm_picks` counter in `serve` stats."
+    );
+}

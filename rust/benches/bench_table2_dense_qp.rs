@@ -2,7 +2,7 @@
 //! distance of gradients, Alt-Diff vs OptNet vs CvxpyLayer(sim).
 //!
 //! Paper sizes (n, m, p) = (1500,500,200) … (10000,5000,2000); we run the
-//! same 10:5:2-ish ratios at ÷10 scale (no BLAS here — see DESIGN.md §7).
+//! same 10:5:2-ish ratios at ÷10 scale (no BLAS here — see DESIGN.md §8).
 //! The claims under test: OptNet ≫ CvxpyLayer on dense QPs, Alt-Diff beats
 //! both, and the gap widens with problem size; gradients agree to
 //! cosine ≈ 0.999.

@@ -1,0 +1,750 @@
+//! Batched ADMM: B problems of one registered structure per launch —
+//! the family sibling of [`BatchedAltDiff`](crate::batch::BatchedAltDiff).
+//!
+//! Iterates are batch-major (B, ·) panels advanced with one GEMM per
+//! term against the shared K⁻¹/C caches; per-element Jacobians are
+//! column-stacked (·, B·d) blocks; per-element truncation reuses the
+//! [`ActiveSet`] masks so converged elements freeze and stop consuming
+//! flops. The batched engine never adapts ρ — all B elements share one
+//! factorization — so register through [`AdmmQp::new_adapted`] when the
+//! layer needs a balanced penalty.
+
+use super::{AdmmQp, AdmmSettings};
+use crate::altdiff::{BackwardMode, Options, Param};
+use crate::batch::engine::{gather, zero_cols};
+use crate::batch::{
+    ActiveSet, BatchSolution, BatchVjp, BatchVjpSolution,
+};
+use crate::error::Result;
+use crate::linalg::{
+    axpy_cols, gemm_acc_cols, gemm_acc_rows, gemv, norm2, par_gemm_acc,
+    Mat,
+};
+use crate::prob::Qp;
+use crate::warm::{AdmmSeed, WarmStart};
+
+/// A registered ADMM QP structure ready to solve B right-hand sides per
+/// launch.
+///
+/// ```
+/// use altdiff::admm::BatchedAdmm;
+/// use altdiff::altdiff::Options;
+/// use altdiff::prob::dense_qp;
+///
+/// let engine = BatchedAdmm::new(dense_qp(6, 3, 1, 7), 1.0).unwrap();
+/// let q2: Vec<f64> = engine.qp.q.iter().map(|v| 0.5 * v).collect();
+/// let qs: Vec<&[f64]> = vec![&engine.qp.q, &q2];
+/// let sol = engine.solve_batch(Some(&qs), None, None, &Options::default());
+/// assert_eq!(sol.len(), 2);
+/// assert!(sol.xs.iter().flatten().all(|v| v.is_finite()));
+/// ```
+pub struct BatchedAdmm {
+    /// The registered problem (broadcast defaults for absent θ).
+    pub qp: Qp,
+    /// Penalty ρ of the shared factorization (never adapted per batch).
+    pub rho: f64,
+    /// Family knobs; `adaptive_rho` is ignored here (see module docs).
+    pub settings: AdmmSettings,
+    c: Mat,   // C = [A; G], (p+m, n)
+    ct: Mat,  // Cᵀ, (n, p+m)
+    kinv: Mat, // explicit K⁻¹ shared with the single-problem engine
+}
+
+impl BatchedAdmm {
+    /// Register from scratch (factors K once, like [`AdmmQp::new`]).
+    pub fn new(qp: Qp, rho: f64) -> Result<BatchedAdmm> {
+        Ok(BatchedAdmm::from_single(&AdmmQp::new(qp, rho)?))
+    }
+
+    /// Share an already-registered layer's factorization caches — the
+    /// cheap path for the server, which keeps both shapes per layer.
+    pub fn from_single(solver: &AdmmQp) -> BatchedAdmm {
+        BatchedAdmm {
+            qp: solver.qp.clone(),
+            rho: solver.rho,
+            settings: solver.settings,
+            c: solver.stacked.c.clone(),
+            ct: solver.stacked.ct.clone(),
+            kinv: solver.kinv_cache.clone(),
+        }
+    }
+
+    /// Solve + differentiate B instances in one launch; same θ
+    /// broadcast/arity contract as
+    /// [`BatchedAltDiff::solve_batch`](crate::batch::BatchedAltDiff::solve_batch).
+    pub fn solve_batch(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        opts: &Options,
+    ) -> BatchSolution {
+        self.solve_batch_from(qs, bs, hs, None, opts)
+    }
+
+    /// [`Self::solve_batch`] with per-element warm starts: a batch may
+    /// freely mix warm and cold members; warm state is loaded exactly
+    /// as in [`AdmmQp::solve_from`], and `warms = None` (or all-`None`)
+    /// is bit-identical to the cold [`Self::solve_batch`]. Warm
+    /// elements with forward-mode Jacobians require `tol = 0`
+    /// (asserted — see DESIGN.md §5).
+    pub fn solve_batch_from(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        warms: Option<&[Option<WarmStart>]>,
+        opts: &Options,
+    ) -> BatchSolution {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        let pm = p + m;
+        let rho = self.rho;
+        let alpha = self.settings.alpha;
+        let bsz = qs
+            .map(|v| v.len())
+            .or_else(|| bs.map(|v| v.len()))
+            .or_else(|| hs.map(|v| v.len()))
+            .unwrap_or(1);
+        assert!(bsz > 0, "empty batch");
+
+        let qm = gather(qs, &self.qp.q, bsz, n);
+        let bm = gather(bs, &self.qp.b, bsz, p);
+        let hm = gather(hs, &self.qp.h, bsz, m);
+
+        // iterates, batch-major
+        let mut x = Mat::zeros(bsz, n);
+        let mut z = Mat::zeros(bsz, pm);
+        let mut um = Mat::zeros(bsz, pm);
+        let mut vm = Mat::zeros(bsz, pm);
+        let mut xprev = Mat::zeros(bsz, n);
+        let mut rhs = Mat::zeros(bsz, n);
+        let mut cx = Mat::zeros(bsz, pm);
+        let mut zu = Mat::zeros(bsz, pm);
+
+        if let Some(ws_) = warms {
+            assert_eq!(ws_.len(), bsz, "warm-start arity");
+            if ws_.iter().any(|w| w.is_some()) {
+                assert!(
+                    opts.backward.forward_param().is_none()
+                        || opts.tol == 0.0,
+                    "warm starts with forward-mode Jacobians require \
+                     tol = 0 (fixed-k); use BackwardMode::None/Adjoint \
+                     for truncated warm solves"
+                );
+            }
+            for (e, w) in ws_.iter().enumerate() {
+                let Some(w) = w else { continue };
+                assert_eq!(w.dims(), (n, p, m), "warm-start dimensions");
+                x.row_mut(e).copy_from_slice(&w.x);
+                let gx0 = gemv(&self.qp.g, &w.x);
+                {
+                    let zr = z.row_mut(e);
+                    for i in 0..p {
+                        zr[i] = bm[(e, i)];
+                    }
+                    for i in 0..m {
+                        zr[p + i] = gx0[i].min(hm[(e, i)]);
+                    }
+                }
+                {
+                    let ur = um.row_mut(e);
+                    for i in 0..p {
+                        ur[i] = w.lam[i] / rho;
+                    }
+                    for i in 0..m {
+                        ur[p + i] = w.nu[i] / rho;
+                    }
+                }
+                let zr = z.row(e);
+                let ur = um.row(e);
+                let vr = vm.row_mut(e);
+                for i in 0..pm {
+                    vr[i] = zr[i] + ur[i];
+                }
+            }
+        }
+
+        // Jacobian state: per-element (·, d) blocks stacked along columns
+        let param = opts.backward.forward_param();
+        let d = param.map(|pp| pp.dim(n, m, p));
+        let mut jac = d.map(|d| JacFwdState::new(n, pm, bsz, d));
+
+        let mut act = ActiveSet::new(bsz);
+        let mut iters = vec![0usize; bsz];
+        let mut step_rel = vec![f64::INFINITY; bsz];
+        let mut live: Vec<usize> = Vec::with_capacity(bsz);
+
+        for k in 0..opts.max_iter {
+            if act.all_done() {
+                break;
+            }
+            live.clear();
+            live.extend(act.iter());
+            for &e in &live {
+                iters[e] = k + 1;
+                xprev.row_mut(e).copy_from_slice(x.row(e));
+            }
+
+            // ---- x-update: K x = −q + ρCᵀ(z − u), batch-major
+            for &e in &live {
+                let zr = z.row(e);
+                let ur = um.row(e);
+                let zur = zu.row_mut(e);
+                for i in 0..pm {
+                    zur[i] = zr[i] - ur[i];
+                }
+                let rr = rhs.row_mut(e);
+                let qr = qm.row(e);
+                for i in 0..n {
+                    rr[i] = -qr[i];
+                }
+            }
+            gemm_acc_rows(&mut rhs, rho, &zu, &self.c, act.flags());
+            for &e in &live {
+                x.row_mut(e).fill(0.0);
+            }
+            gemm_acc_rows(&mut x, 1.0, &rhs, &self.kinv, act.flags());
+
+            // ---- relaxation + projection input v = αCx + (1−α)z + u
+            for &e in &live {
+                cx.row_mut(e).fill(0.0);
+            }
+            gemm_acc_rows(&mut cx, 1.0, &x, &self.ct, act.flags());
+            for &e in &live {
+                let cr = cx.row(e);
+                let zr = z.row(e);
+                let ur = um.row(e);
+                let vr = vm.row_mut(e);
+                for i in 0..pm {
+                    vr[i] =
+                        alpha * cr[i] + (1.0 - alpha) * zr[i] + ur[i];
+                }
+            }
+            // ---- projection z⁺ = (b, min(v, h)); dual u⁺ = v − z⁺
+            for &e in &live {
+                let vr = vm.row(e);
+                let br = bm.row(e);
+                let hr = hm.row(e);
+                let zr = z.row_mut(e);
+                for i in 0..p {
+                    zr[i] = br[i];
+                }
+                for i in 0..m {
+                    zr[p + i] = vr[p + i].min(hr[i]);
+                }
+                let zr = z.row(e);
+                let ur = um.row_mut(e);
+                for i in 0..pm {
+                    ur[i] = vr[i] - zr[i];
+                }
+            }
+
+            // ---- forward-mode panels, only live column blocks
+            if let Some(jac) = jac.as_mut() {
+                jac.step(self, param.unwrap(), &vm, &hm, &act, &live);
+            }
+
+            // ---- per-element truncation (Algorithm 1 condition)
+            for &e in &live {
+                let xr = x.row(e);
+                let xp = xprev.row(e);
+                let dx: f64 = xr
+                    .iter()
+                    .zip(xp)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                let step = dx / norm2(xp).max(1.0);
+                step_rel[e] = step;
+                if step < opts.tol {
+                    act.deactivate(e);
+                }
+            }
+        }
+
+        // unpack: unscaled duals y = ρu, slack from the projection input
+        let xs: Vec<Vec<f64>> =
+            (0..bsz).map(|e| x.row(e).to_vec()).collect();
+        let mut ss = Vec::with_capacity(bsz);
+        let mut lams = Vec::with_capacity(bsz);
+        let mut nus = Vec::with_capacity(bsz);
+        for e in 0..bsz {
+            let vr = vm.row(e);
+            let hr = hm.row(e);
+            let ur = um.row(e);
+            ss.push(
+                (0..m)
+                    .map(|i| (hr[i] - vr[p + i]).max(0.0))
+                    .collect::<Vec<f64>>(),
+            );
+            lams.push((0..p).map(|i| rho * ur[i]).collect::<Vec<f64>>());
+            nus.push(
+                (0..m).map(|i| rho * ur[p + i]).collect::<Vec<f64>>(),
+            );
+        }
+        let jacobians = jac.map(|j| j.unstack(n, bsz));
+        BatchSolution { xs, ss, lams, nus, jacobians, iters, step_rel }
+    }
+
+    /// Batched reverse-mode backward: B adjoint states advance as (B,
+    /// p+m) panels, one GEMM per term against the shared K⁻¹/C — cost
+    /// per iteration O(B·(n² + n(p+m))), independent of d. Same
+    /// slack-gate and truncation contract as
+    /// [`BatchedAltDiff::batch_vjp`](crate::batch::BatchedAltDiff::batch_vjp).
+    pub fn batch_vjp(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        opts: &Options,
+    ) -> BatchVjp {
+        self.batch_vjp_from(slacks, vs, None, opts).0
+    }
+
+    /// [`Self::batch_vjp`] with per-element warm adjoint seeds, also
+    /// returning every element's final adjoint state for the next
+    /// backward to resume from. A batch may mix seeded and cold
+    /// elements; `warms = None` is bit-identical to the cold
+    /// [`Self::batch_vjp`].
+    pub fn batch_vjp_from(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        warms: Option<&[Option<AdmmSeed>]>,
+        opts: &Options,
+    ) -> (BatchVjp, Vec<AdmmSeed>) {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        let pm = p + m;
+        let rho = self.rho;
+        let alpha = self.settings.alpha;
+        let bsz = vs.len();
+        assert!(bsz > 0, "empty batch");
+        assert_eq!(slacks.len(), bsz, "slack arity");
+
+        // gates e (B, m): 1 on inactive rows, from the forward slacks
+        let mut gates = Mat::zeros(bsz, m);
+        for (e, s) in slacks.iter().enumerate() {
+            assert_eq!(s.len(), m, "slack dimension");
+            let gr = gates.row_mut(e);
+            for i in 0..m {
+                gr[i] = if s[i] > 0.0 { 1.0 } else { 0.0 };
+            }
+        }
+
+        // T = V K⁻¹ (row-major stacked t's) and the seed G_z = ρ T Cᵀ
+        let vmat = gather(Some(vs), &[], bsz, n);
+        let mut t = Mat::zeros(bsz, n);
+        par_gemm_acc(&mut t, 1.0, &vmat, &self.kinv);
+        let mut seedz = Mat::zeros(bsz, pm);
+        par_gemm_acc(&mut seedz, rho, &t, &self.ct);
+
+        // first series term (or resume from harvested states)
+        let mut wz = seedz.clone();
+        let mut wu = seedz.clone();
+        wu.scale(-1.0);
+        let mut seeded = vec![false; bsz];
+        if let Some(seeds) = warms {
+            assert_eq!(seeds.len(), bsz, "adjoint-seed arity");
+            for (e, seed) in seeds.iter().enumerate() {
+                let Some(seed) = seed else { continue };
+                assert_eq!(seed.dim(), pm, "adjoint-seed dimensions");
+                wz.row_mut(e).copy_from_slice(&seed.wz);
+                wu.row_mut(e).copy_from_slice(&seed.wu);
+                seeded[e] = true;
+            }
+        }
+
+        let mut amat = Mat::zeros(bsz, pm);
+        let mut cta = Mat::zeros(bsz, n);
+        let mut sa = Mat::zeros(bsz, pm);
+        let mut wzprev = Mat::zeros(bsz, pm);
+
+        let mut act = ActiveSet::new(bsz);
+        let mut iters = vec![1usize; bsz];
+        let mut step_rel = vec![f64::INFINITY; bsz];
+        let mut live: Vec<usize> = Vec::with_capacity(bsz);
+
+        for k in 1..opts.max_iter {
+            if act.all_done() {
+                break;
+            }
+            live.clear();
+            live.extend(act.iter());
+            // a = e ⊙ w_z + (1−e) ⊙ w_u (a = w_u on equality rows)
+            for &e in &live {
+                wzprev.row_mut(e).copy_from_slice(wz.row(e));
+                let gr = gates.row(e);
+                let wzr = wz.row(e);
+                let wur = wu.row(e);
+                let ar = amat.row_mut(e);
+                for i in 0..p {
+                    ar[i] = wur[i];
+                }
+                for i in 0..m {
+                    ar[p + i] = gr[i] * wzr[p + i]
+                        + (1.0 - gr[i]) * wur[p + i];
+                }
+                cta.row_mut(e).fill(0.0);
+            }
+            // Sa = αρ (a C) K⁻¹ Cᵀ, three masked GEMMs
+            gemm_acc_rows(&mut cta, 1.0, &amat, &self.c, act.flags());
+            for &e in &live {
+                sa.row_mut(e).fill(0.0);
+            }
+            {
+                let mut yk = Mat::zeros(bsz, n);
+                gemm_acc_rows(&mut yk, 1.0, &cta, &self.kinv, act.flags());
+                gemm_acc_rows(&mut sa, alpha * rho, &yk, &self.ct, act.flags());
+            }
+            // W ← FᵀW + g per live row
+            for &e in &live {
+                iters[e] = k + 1;
+                let ar = amat.row(e);
+                let sr = sa.row(e);
+                let gzr = seedz.row(e);
+                {
+                    let wzr = wz.row_mut(e);
+                    for i in 0..pm {
+                        wzr[i] =
+                            sr[i] + (1.0 - alpha) * ar[i] + gzr[i];
+                    }
+                }
+                let wur = wu.row_mut(e);
+                for i in 0..pm {
+                    wur[i] = ar[i] - sr[i] - gzr[i];
+                }
+                // per-element truncation on w_z; a seeded element must
+                // take one genuine step before the criterion is trusted
+                let wzr = wz.row(e);
+                let wp = wzprev.row(e);
+                let dz: f64 = wzr
+                    .iter()
+                    .zip(wp)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                let step = dz / norm2(wp).max(1.0);
+                step_rel[e] = step;
+                if step < opts.tol && (k > 1 || !seeded[e]) {
+                    act.deactivate(e);
+                }
+            }
+        }
+
+        // reusable adjoint states, harvested before the projection
+        let seeds_out: Vec<AdmmSeed> = (0..bsz)
+            .map(|e| AdmmSeed {
+                wz: wz.row(e).to_vec(),
+                wu: wu.row(e).to_vec(),
+            })
+            .collect();
+
+        // final a at every element's converged state, then project
+        let all = vec![true; bsz];
+        for e in 0..bsz {
+            let gr = gates.row(e);
+            let wzr = wz.row(e);
+            let wur = wu.row(e);
+            let ar = amat.row_mut(e);
+            for i in 0..p {
+                ar[i] = wur[i];
+            }
+            for i in 0..m {
+                ar[p + i] =
+                    gr[i] * wzr[p + i] + (1.0 - gr[i]) * wur[p + i];
+            }
+        }
+        cta.data.fill(0.0);
+        gemm_acc_rows(&mut cta, 1.0, &amat, &self.c, &all);
+        let mut yk = Mat::zeros(bsz, n);
+        par_gemm_acc(&mut yk, 1.0, &cta, &self.kinv);
+        // grad_q = −t − α K⁻¹Cᵀa; grad_b = w_z − w_u on equality rows;
+        // grad_h = (1−e) ⊙ (w_z − w_u) on inequality rows
+        let mut gq = t;
+        gq.scale(-1.0);
+        gq.axpy(-alpha, &yk);
+        let mut gb = Mat::zeros(bsz, p);
+        let mut gh = Mat::zeros(bsz, m);
+        for e in 0..bsz {
+            let wzr = wz.row(e);
+            let wur = wu.row(e);
+            let gbr = gb.row_mut(e);
+            for i in 0..p {
+                gbr[i] = wzr[i] - wur[i];
+            }
+            let gr = gates.row(e);
+            let ghr = gh.row_mut(e);
+            for i in 0..m {
+                ghr[i] =
+                    (1.0 - gr[i]) * (wzr[p + i] - wur[p + i]);
+            }
+        }
+
+        let rows = |mat: &Mat| -> Vec<Vec<f64>> {
+            (0..bsz).map(|e| mat.row(e).to_vec()).collect()
+        };
+        (
+            BatchVjp {
+                grads_q: rows(&gq),
+                grads_b: rows(&gb),
+                grads_h: rows(&gh),
+                iters,
+                step_rel,
+            },
+            seeds_out,
+        )
+    }
+
+    /// Forward batch solve + batched reverse-mode backward in one call —
+    /// the minibatch training entry point, no Jacobian ever materialized.
+    pub fn solve_batch_vjp(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        vs: &[&[f64]],
+        opts: &Options,
+    ) -> BatchVjpSolution {
+        let fopts =
+            Options { backward: BackwardMode::None, ..opts.clone() };
+        let forward = self.solve_batch(qs, bs, hs, &fopts);
+        let vjp = self.batch_vjp(&forward.slack_refs(), vs, opts);
+        BatchVjpSolution { forward, vjp }
+    }
+}
+
+/// Column-stacked forward-mode state: J_x (n, B·d), J_z and J_u
+/// ((p+m), B·d), plus the work panels the step reuses.
+struct JacFwdState {
+    d: usize,
+    jx: Mat,
+    jz: Mat,
+    ju: Mat,
+    jzu: Mat,
+    lrhs: Mat,
+    newjx: Mat,
+    jv: Mat,
+}
+
+impl JacFwdState {
+    fn new(n: usize, pm: usize, bsz: usize, d: usize) -> Self {
+        let bd = bsz * d;
+        JacFwdState {
+            d,
+            jx: Mat::zeros(n, bd),
+            jz: Mat::zeros(pm, bd),
+            ju: Mat::zeros(pm, bd),
+            jzu: Mat::zeros(pm, bd),
+            lrhs: Mat::zeros(n, bd),
+            newjx: Mat::zeros(n, bd),
+            jv: Mat::zeros(pm, bd),
+        }
+    }
+
+    /// One batched Jacobian update; mirrors `AdmmQp::jacobian_step` per
+    /// column block, frozen blocks untouched.
+    fn step(
+        &mut self,
+        eng: &BatchedAdmm,
+        param: Param,
+        vm: &Mat,
+        hm: &Mat,
+        act: &ActiveSet,
+        live: &[usize],
+    ) {
+        let d = self.d;
+        let n = eng.qp.n();
+        let m = eng.qp.m_ineq();
+        let p = eng.qp.p_eq();
+        let rho = eng.rho;
+        let alpha = eng.settings.alpha;
+        let ranges = act.col_ranges(d);
+
+        // Jx = K⁻¹(∂(−q)/∂θ + ρCᵀ(Jz − Ju)), live blocks only
+        zero_cols(&mut self.jzu, &ranges);
+        axpy_cols(&mut self.jzu, 1.0, &self.jz, &ranges);
+        axpy_cols(&mut self.jzu, -1.0, &self.ju, &ranges);
+        zero_cols(&mut self.lrhs, &ranges);
+        gemm_acc_cols(&mut self.lrhs, rho, &eng.ct, &self.jzu, &ranges);
+        if param == Param::Q {
+            for &e in live {
+                let base = e * d;
+                for i in 0..n.min(d) {
+                    self.lrhs[(i, base + i)] -= 1.0;
+                }
+            }
+        }
+        zero_cols(&mut self.newjx, &ranges);
+        gemm_acc_cols(&mut self.newjx, 1.0, &eng.kinv, &self.lrhs, &ranges);
+        zero_cols(&mut self.jx, &ranges);
+        axpy_cols(&mut self.jx, 1.0, &self.newjx, &ranges);
+
+        // Jv = αC Jx + (1−α)Jz + Ju
+        zero_cols(&mut self.jv, &ranges);
+        gemm_acc_cols(&mut self.jv, alpha, &eng.c, &self.jx, &ranges);
+        axpy_cols(&mut self.jv, 1.0 - alpha, &self.jz, &ranges);
+        axpy_cols(&mut self.jv, 1.0, &self.ju, &ranges);
+
+        // projection rows per live block: Jz⁺ = ∂proj/∂θ, Ju⁺ = Jv − Jz⁺
+        for &e in live {
+            let base = e * d;
+            for r in 0..p {
+                for c in 0..d {
+                    self.jz[(r, base + c)] = 0.0;
+                }
+                if param == Param::B {
+                    self.jz[(r, base + r)] = 1.0;
+                }
+                for c in 0..d {
+                    self.ju[(r, base + c)] =
+                        self.jv[(r, base + c)] - self.jz[(r, base + c)];
+                }
+            }
+            for i in 0..m {
+                let r = p + i;
+                if vm[(e, r)] < hm[(e, i)] {
+                    for c in 0..d {
+                        self.jz[(r, base + c)] = self.jv[(r, base + c)];
+                        self.ju[(r, base + c)] = 0.0;
+                    }
+                } else {
+                    for c in 0..d {
+                        self.jz[(r, base + c)] = 0.0;
+                    }
+                    if param == Param::H {
+                        self.jz[(r, base + i)] = 1.0;
+                    }
+                    for c in 0..d {
+                        self.ju[(r, base + c)] = self.jv[(r, base + c)]
+                            - self.jz[(r, base + c)];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Split the stacked (n, B·d) Jacobian back into per-element mats.
+    fn unstack(&self, n: usize, bsz: usize) -> Vec<Mat> {
+        let d = self.d;
+        let bd = bsz * d;
+        (0..bsz)
+            .map(|e| {
+                let mut jm = Mat::zeros(n, d);
+                for i in 0..n {
+                    jm.row_mut(i).copy_from_slice(
+                        &self.jx.data[i * bd + e * d..i * bd + (e + 1) * d],
+                    );
+                }
+                jm
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prob::dense_qp;
+
+    fn engines(
+        n: usize,
+        m: usize,
+        p: usize,
+        seed: u64,
+    ) -> (AdmmQp, BatchedAdmm) {
+        let single = AdmmQp::new(dense_qp(n, m, p, seed), 1.0).unwrap();
+        let batched = BatchedAdmm::from_single(&single);
+        (single, batched)
+    }
+
+    #[test]
+    fn broadcast_batch_matches_single_solve() {
+        let (single, batched) = engines(14, 7, 3, 21);
+        let opts = Options {
+            tol: 1e-10,
+            max_iter: 50_000,
+            backward: BackwardMode::Forward(Param::B),
+            ..Default::default()
+        };
+        let sd = single.solve(&opts);
+        let sb = batched.solve_batch(None, None, None, &opts);
+        assert_eq!(sb.len(), 1);
+        for i in 0..14 {
+            assert!((sb.xs[0][i] - sd.x[i]).abs() < 1e-8, "x[{i}]");
+        }
+        for i in 0..3 {
+            assert!((sb.lams[0][i] - sd.lam[i]).abs() < 1e-8, "lam[{i}]");
+        }
+        let jb = &sb.jacobians.as_ref().unwrap()[0];
+        let jd = sd.jacobian.as_ref().unwrap();
+        assert!(jb.max_abs_diff(jd) < 1e-8);
+        // the single engine back-substitutes while the batched engine
+        // multiplies by the explicit K⁻¹; allow one rounding iteration
+        assert!(sb.iters[0].abs_diff(sd.iters) <= 1);
+    }
+
+    #[test]
+    fn fixed_k_runs_every_element_exactly_k() {
+        let (_, batched) = engines(10, 5, 2, 22);
+        let q2: Vec<f64> =
+            batched.qp.q.iter().map(|&v| 2.0 * v).collect();
+        let qs: Vec<&[f64]> = vec![&batched.qp.q, &q2];
+        let opts = Options {
+            tol: 0.0,
+            max_iter: 17,
+            backward: BackwardMode::Forward(Param::Q),
+            ..Default::default()
+        };
+        let sb = batched.solve_batch(Some(&qs), None, None, &opts);
+        assert_eq!(sb.iters, vec![17, 17]);
+        assert!(sb.xs.iter().all(|x| x.iter().all(|v| v.is_finite())));
+    }
+
+    #[test]
+    fn batch_vjp_matches_single_vjp() {
+        let (single, batched) = engines(8, 4, 2, 23);
+        let opts = Options {
+            tol: 1e-11,
+            max_iter: 100_000,
+            backward: BackwardMode::None,
+            ..Default::default()
+        };
+        let q2: Vec<f64> =
+            batched.qp.q.iter().map(|&v| 0.7 * v).collect();
+        let qs: Vec<&[f64]> = vec![&batched.qp.q, &q2];
+        let fwd = batched.solve_batch(Some(&qs), None, None, &opts);
+        let v: Vec<f64> = (0..8).map(|i| (i as f64) - 3.5).collect();
+        let vs: Vec<&[f64]> = vec![&v, &v];
+        let bv = batched.batch_vjp(&fwd.slack_refs(), &vs, &opts);
+        for e in 0..2 {
+            let sf = single.solve_with(
+                Some(qs[e]),
+                None,
+                None,
+                &opts,
+            );
+            let sv = single.vjp(&sf.s, &v, &opts);
+            for i in 0..8 {
+                assert!(
+                    (bv.grads_q[e][i] - sv.grad_q[i]).abs() < 1e-8,
+                    "grad_q[{e}][{i}]"
+                );
+            }
+            for i in 0..2 {
+                assert!(
+                    (bv.grads_b[e][i] - sv.grad_b[i]).abs() < 1e-8,
+                    "grad_b[{e}][{i}]"
+                );
+            }
+            for i in 0..4 {
+                assert!(
+                    (bv.grads_h[e][i] - sv.grad_h[i]).abs() < 1e-8,
+                    "grad_h[{e}][{i}]"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! The second differentiable engine family: consensus-form ADMM.
+//!
+//! Alt-Diff (the paper's Algorithm 1) is one point in the family of
+//! operator-splitting differentiable solvers; this module provides a
+//! sibling in the style of Butler & Kwon 2021 ("Efficient differentiable
+//! quadratic programming layers: an ADMM approach"), honoring every
+//! contract the Alt-Diff engines satisfy so the coordinator can route
+//! between the two families per layer (see DESIGN.md §6).
+//!
+//! The splitting: stack the constraints as C = [A; G] and solve
+//!
+//!   min ½xᵀPx + qᵀx + I_S(z)   s.t.  Cx = z,
+//!   S = {b} × {v : v ≤ h},
+//!
+//! by scaled, over-relaxed ADMM:
+//!
+//!   x  = K⁻¹(−q + ρCᵀ(z − u)),      K = P + ρCᵀC
+//!   v  = α·Cx + (1−α)z + u          (over-relaxation, α ∈ (0, 2))
+//!   z⁺ = (b, min(v_in, h)),   u⁺ = v − z⁺
+//!
+//! K is exactly the H(ρ) matrix the Alt-Diff registration factors, so
+//! one Cholesky at registration serves every subsequent solve of either
+//! shape. The solution mapping back to the shared [`Solution`] contract
+//! is λ = ρu_eq, ν = ρu_in (the scaled duals), s = max(h − v_in, 0)
+//! (exact zeros on active rows, the same sign-gate convention the
+//! Alt-Diff adjoint uses).
+//!
+//! Differentiation mirrors the Alt-Diff engines mode-for-mode: a
+//! forward-mode Jacobian recursion rides the iteration when
+//! [`BackwardMode::Forward`](crate::altdiff::BackwardMode) is selected,
+//! and a dimension-free adjoint fixed-point iteration serves reverse
+//! mode — O(p+m) state, never an (n, d) Jacobian (DESIGN.md §6).
+//!
+//! What this family adds over Alt-Diff: the over-relaxation knob α and
+//! residual-balancing ρ adaptation ([`AdmmSettings`]), which make ADMM
+//! markedly faster on ill-conditioned layers where a fixed unit penalty
+//! crawls — the regime the coordinator's cross-method router detects at
+//! calibration time.
+
+pub mod batch;
+pub mod qp;
+mod stacked;
+
+pub use batch::BatchedAdmm;
+pub use qp::AdmmQp;
+
+/// Family-specific knobs shared by [`AdmmQp`] and [`BatchedAdmm`].
+///
+/// The default is over-relaxation α = 1.6 (the classical sweet spot)
+/// with ρ adaptation off, which keeps warm == cold and batched ==
+/// single parity exact.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmmSettings {
+    /// Over-relaxation coefficient α ∈ (0, 2); 1.0 disables relaxation.
+    pub alpha: f64,
+    /// Residual-balancing ρ adaptation (OSQP-style ρ ← ρ·√(r_p/r_d),
+    /// checked every [`Self::adapt_every`] iterations, with a local
+    /// refactorization on adoption). Applied only when no forward-mode
+    /// Jacobian rides the loop — the recursion differentiates a
+    /// fixed-ρ map — and never by the batched engine, whose elements
+    /// share one factorization. Use [`AdmmQp::new_adapted`] to balance
+    /// ρ once at registration instead; that frozen ρ then serves every
+    /// engine and mode.
+    pub adaptive_rho: bool,
+    /// Residual-balance check period, in iterations.
+    pub adapt_every: usize,
+    /// Only adopt (and refactor for) a rebalanced ρ when it differs
+    /// from the current one by more than this multiplicative factor.
+    pub adapt_threshold: f64,
+    /// Lower clamp for an adapted ρ.
+    pub rho_min: f64,
+    /// Upper clamp for an adapted ρ.
+    pub rho_max: f64,
+}
+
+impl Default for AdmmSettings {
+    fn default() -> Self {
+        AdmmSettings {
+            alpha: 1.6,
+            adaptive_rho: false,
+            adapt_every: 10,
+            adapt_threshold: 5.0,
+            rho_min: 1e-6,
+            rho_max: 1e6,
+        }
+    }
+}
+
+impl AdmmSettings {
+    /// Default knobs with residual-balancing adaptation switched on.
+    pub fn adaptive() -> Self {
+        AdmmSettings { adaptive_rho: true, ..AdmmSettings::default() }
+    }
+}

@@ -1,0 +1,758 @@
+//! Single-problem ADMM QP engine — the family sibling of
+//! [`DenseAltDiff`](crate::altdiff::DenseAltDiff), same contracts.
+
+use super::stacked::Stacked;
+use super::AdmmSettings;
+use crate::altdiff::{
+    BackwardMode, Options, Param, Solution, TraceEntry, Vjp, VjpSolution,
+};
+use crate::error::Result;
+use crate::linalg::{gemm_acc, gemv_acc, gemv_t_acc, norm2, Chol, Mat};
+use crate::prob::Qp;
+use crate::warm::{AdmmSeed, WarmStart};
+
+/// A registered ADMM QP layer: one Cholesky of K = P + ρCᵀC at
+/// registration (C = [A; G] stacked), reused by every subsequent solve,
+/// Jacobian recursion, and adjoint backward.
+pub struct AdmmQp {
+    /// The registered problem.
+    pub qp: Qp,
+    /// Penalty ρ the cached factorization was built at. A
+    /// registration-time property, like the Alt-Diff engines: per-solve
+    /// `opts.rho` is ignored (it would desynchronize the factor).
+    pub rho: f64,
+    /// Family knobs (over-relaxation α, residual-balancing adaptation).
+    pub settings: AdmmSettings,
+    pub(crate) stacked: Stacked,
+    pub(crate) chol: Chol,
+    /// Explicit K⁻¹ — the batched engine consumes it as GEMM panels,
+    /// mirroring the dense Alt-Diff `hinv_cache`.
+    pub(crate) kinv_cache: Mat,
+}
+
+impl AdmmQp {
+    /// Register with default [`AdmmSettings`] (α = 1.6, no adaptation).
+    pub fn new(qp: Qp, rho: f64) -> Result<AdmmQp> {
+        AdmmQp::with_settings(qp, rho, AdmmSettings::default())
+    }
+
+    /// Register with explicit family knobs.
+    pub fn with_settings(
+        qp: Qp,
+        rho: f64,
+        settings: AdmmSettings,
+    ) -> Result<AdmmQp> {
+        assert!(
+            settings.alpha > 0.0 && settings.alpha < 2.0,
+            "over-relaxation alpha must lie in (0, 2)"
+        );
+        let stacked = Stacked::new(&qp);
+        let chol = stacked.factor(rho)?;
+        let kinv_cache = chol.inverse();
+        Ok(AdmmQp { qp, rho, settings, stacked, chol, kinv_cache })
+    }
+
+    /// Register with residual balancing folded into registration: run
+    /// one adaptive probe solve on the registered θ, adopt the balanced
+    /// ρ it ends at, and refactor once. The returned solver is frozen
+    /// (no in-solve adaptation), so serving, the batched engine, and
+    /// both differentiation modes all run the same balanced ρ — this is
+    /// what the coordinator registers for routed layers.
+    pub fn new_adapted(
+        qp: Qp,
+        rho: f64,
+        settings: AdmmSettings,
+    ) -> Result<AdmmQp> {
+        let probe = AdmmQp::with_settings(
+            qp,
+            rho,
+            AdmmSettings { adaptive_rho: true, ..settings },
+        )?;
+        let popts = Options {
+            rho,
+            tol: 1e-10,
+            max_iter: 500,
+            backward: BackwardMode::None,
+            trace: false,
+        };
+        let rho_star = probe.adapted_rho(&popts);
+        if rho_star == probe.rho {
+            return Ok(AdmmQp { settings, ..probe });
+        }
+        let chol = probe.stacked.factor(rho_star)?;
+        let kinv_cache = chol.inverse();
+        Ok(AdmmQp { rho: rho_star, settings, chol, kinv_cache, ..probe })
+    }
+
+    /// The penalty a residual-balancing probe solve of the registered θ
+    /// ends at. Returns the registered ρ unchanged unless
+    /// `settings.adaptive_rho` is set and `opts` carries no forward-mode
+    /// Jacobian (the recursion differentiates a fixed-ρ map).
+    pub fn adapted_rho(&self, opts: &Options) -> f64 {
+        self.solve_inner(None, None, None, None, opts).1
+    }
+
+    /// Solve + differentiate with per-request parameters; `None` means
+    /// the registered value. Same contract as
+    /// [`DenseAltDiff::solve_with`](crate::altdiff::DenseAltDiff::solve_with).
+    pub fn solve_with(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        opts: &Options,
+    ) -> Solution {
+        self.solve_from(q, b, h, None, opts)
+    }
+
+    /// [`Self::solve_with`] resuming from a prior iterate triple. The
+    /// shared warm format maps onto ADMM state as u = (λ/ρ, ν/ρ) (the
+    /// scaled duals), z = (b, min(Gx, h)) against the *requested*
+    /// right-hand sides, so a fixed-point triple reproduces itself and
+    /// stops in one iteration; `warm = None` is bit-identical to the
+    /// cold [`Self::solve_with`]. The forward-mode/tol composition rule
+    /// is the same as the Alt-Diff engines' (asserted).
+    pub fn solve_from(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        warm: Option<&WarmStart>,
+        opts: &Options,
+    ) -> Solution {
+        self.solve_inner(q, b, h, warm, opts).0
+    }
+
+    /// Convenience: registered parameters, default θ.
+    ///
+    /// ```
+    /// use altdiff::admm::AdmmQp;
+    /// use altdiff::altdiff::Options;
+    /// use altdiff::prob::dense_qp;
+    ///
+    /// let qp = dense_qp(8, 4, 2, 3);
+    /// let layer = AdmmQp::new(qp.clone(), 1.0).unwrap();
+    /// let sol = layer.solve(&Options::with_tol(1e-9));
+    /// let (eq, viol) = qp.feasibility(&sol.x);
+    /// assert!(eq < 1e-6 && viol < 1e-6);
+    /// assert!(qp.kkt_residual(&sol.x, &sol.lam, &sol.nu) < 1e-5);
+    /// // ∂x/∂b rides the same loop (default forward mode), d = p
+    /// assert_eq!(sol.jacobian.as_ref().unwrap().cols, 2);
+    /// ```
+    pub fn solve(&self, opts: &Options) -> Solution {
+        self.solve_with(None, None, None, opts)
+    }
+
+    /// The full iteration; returns the solution plus the final local ρ
+    /// (differs from `self.rho` only when in-solve adaptation adopted a
+    /// rebalanced penalty).
+    fn solve_inner(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        warm: Option<&WarmStart>,
+        opts: &Options,
+    ) -> (Solution, f64) {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        let pm = p + m;
+        let alpha = self.settings.alpha;
+        let q = q.unwrap_or(&self.qp.q);
+        let b = b.unwrap_or(&self.qp.b);
+        let h = h.unwrap_or(&self.qp.h);
+
+        // ρ and the factor may be rebalanced mid-solve; the registered
+        // pair is the starting point
+        let mut rho = self.rho;
+        let mut chol_local: Option<Chol> = None;
+
+        let mut x = vec![0.0; n];
+        let mut z = vec![0.0; pm];
+        let mut u = vec![0.0; pm];
+        let mut v = vec![0.0; pm];
+        if let Some(w) = warm {
+            assert!(
+                opts.backward.forward_param().is_none() || opts.tol == 0.0,
+                "warm starts with forward-mode Jacobians require tol = 0 \
+                 (fixed-k); use BackwardMode::None/Adjoint for truncated \
+                 warm solves"
+            );
+            assert_eq!(w.dims(), (n, p, m), "warm-start dimensions");
+            x.copy_from_slice(&w.x);
+            let mut gx0 = vec![0.0; m];
+            gemv_acc(&mut gx0, 1.0, &self.qp.g, &w.x);
+            for i in 0..p {
+                z[i] = b[i];
+                u[i] = w.lam[i] / rho;
+            }
+            for i in 0..m {
+                z[p + i] = gx0[i].min(h[i]);
+                u[p + i] = w.nu[i] / rho;
+            }
+            for i in 0..pm {
+                v[i] = z[i] + u[i];
+            }
+        }
+
+        // Jacobian state, present only in forward mode
+        let param = opts.backward.forward_param();
+        let d = param.map(|pp| pp.dim(n, m, p));
+        let mut jx = d.map(|d| Mat::zeros(n, d));
+        let mut jz = d.map(|d| Mat::zeros(pm, d));
+        let mut ju = d.map(|d| Mat::zeros(pm, d));
+        let mut work = d.map(|d| FwdWork::new(n, pm, d));
+
+        // adaptation only when nothing differentiates the loop: the
+        // Jacobian recursion is the derivative of a FIXED-ρ map
+        let adapt = self.settings.adaptive_rho && param.is_none();
+
+        let mut trace = Vec::new();
+        let mut rhs = vec![0.0; n];
+        let mut xprev = vec![0.0; n];
+        let mut cx = vec![0.0; pm];
+        let mut zu = vec![0.0; pm];
+        let mut zprev = vec![0.0; pm];
+        let mut ctbuf = vec![0.0; n];
+        let mut iters = 0;
+        let mut step_rel = f64::INFINITY;
+
+        for k in 0..opts.max_iter {
+            iters = k + 1;
+            xprev.copy_from_slice(&x);
+            if adapt {
+                zprev.copy_from_slice(&z);
+            }
+
+            // ---- x-update: K x = −q + ρCᵀ(z − u)
+            for i in 0..pm {
+                zu[i] = z[i] - u[i];
+            }
+            for i in 0..n {
+                rhs[i] = -q[i];
+            }
+            gemv_t_acc(&mut rhs, rho, &self.stacked.c, &zu);
+            x.copy_from_slice(&rhs);
+            chol_local
+                .as_ref()
+                .unwrap_or(&self.chol)
+                .solve_in_place(&mut x);
+
+            // ---- relaxation + projection input: v = αCx + (1−α)z + u
+            cx.iter_mut().for_each(|ci| *ci = 0.0);
+            gemv_acc(&mut cx, 1.0, &self.stacked.c, &x);
+            for i in 0..pm {
+                v[i] = alpha * cx[i] + (1.0 - alpha) * z[i] + u[i];
+            }
+            // ---- projection z⁺ = (b, min(v, h)); scaled dual u⁺ = v − z⁺
+            for i in 0..p {
+                z[i] = b[i];
+                u[i] = v[i] - b[i];
+            }
+            for i in 0..m {
+                let zi = v[p + i].min(h[i]);
+                z[p + i] = zi;
+                u[p + i] = v[p + i] - zi;
+            }
+
+            // ---- forward-mode recursion rides the same loop
+            if let (Some(jx), Some(jz), Some(ju), Some(w)) =
+                (jx.as_mut(), jz.as_mut(), ju.as_mut(), work.as_mut())
+            {
+                self.jacobian_step(param.unwrap(), alpha, &v, h, jx, jz, ju, w);
+            }
+
+            // ---- truncation check (same criterion as Algorithm 1)
+            let dx: f64 = x
+                .iter()
+                .zip(&xprev)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            step_rel = dx / norm2(&xprev).max(1.0);
+            if opts.trace {
+                trace.push(TraceEntry {
+                    iter: k,
+                    step_rel,
+                    jac_norm: jx.as_ref().map(|j| j.fro()).unwrap_or(0.0),
+                });
+            }
+            if step_rel < opts.tol {
+                break;
+            }
+
+            // ---- residual balancing: ρ ← ρ·√(r_p/r_d) when the primal
+            // and dual residuals have drifted apart (checked every
+            // adapt_every iterations; adoption refactors locally and
+            // rescales u so the unscaled dual y = ρu is invariant)
+            if adapt && (k + 1) % self.settings.adapt_every == 0 {
+                let mut rp = 0.0;
+                for i in 0..pm {
+                    let di = cx[i] - z[i];
+                    rp += di * di;
+                }
+                let rp = rp.sqrt() / norm2(&cx).max(norm2(&z)).max(1.0);
+                for i in 0..pm {
+                    zu[i] = z[i] - zprev[i];
+                }
+                ctbuf.iter_mut().for_each(|c| *c = 0.0);
+                gemv_t_acc(&mut ctbuf, 1.0, &self.stacked.c, &zu);
+                let rd_abs = rho * norm2(&ctbuf);
+                ctbuf.iter_mut().for_each(|c| *c = 0.0);
+                gemv_t_acc(&mut ctbuf, 1.0, &self.stacked.c, &u);
+                let rd = rd_abs / (rho * norm2(&ctbuf)).max(1.0);
+                if rp > 0.0 && rd > 0.0 {
+                    let target = (rho * (rp / rd).sqrt())
+                        .clamp(self.settings.rho_min, self.settings.rho_max);
+                    let ratio = target / rho;
+                    if ratio > self.settings.adapt_threshold
+                        || ratio < 1.0 / self.settings.adapt_threshold
+                    {
+                        // a failed refactorization just skips adoption
+                        if let Ok(ch) = self.stacked.factor(target) {
+                            let f = rho / target;
+                            u.iter_mut().for_each(|ui| *ui *= f);
+                            rho = target;
+                            chol_local = Some(ch);
+                        }
+                    }
+                }
+            }
+        }
+
+        // solution mapping: unscaled duals y = ρu, slack from the final
+        // projection input (exact zeros on active rows — the same gate
+        // convention the Alt-Diff adjoint reads)
+        let mut s = vec![0.0; m];
+        for i in 0..m {
+            s[i] = (h[i] - v[p + i]).max(0.0);
+        }
+        let lam: Vec<f64> = (0..p).map(|i| rho * u[i]).collect();
+        let nu: Vec<f64> = (0..m).map(|i| rho * u[p + i]).collect();
+        (
+            Solution { x, s, lam, nu, jacobian: jx, iters, step_rel, trace },
+            rho,
+        )
+    }
+
+    /// One forward-mode Jacobian update: the derivative of the fixed-ρ
+    /// iteration map at the current projection pattern. `v` is the fresh
+    /// projection input (its comparison against `h` is the gate).
+    #[allow(clippy::too_many_arguments)]
+    fn jacobian_step(
+        &self,
+        param: Param,
+        alpha: f64,
+        v: &[f64],
+        h: &[f64],
+        jx: &mut Mat,
+        jz: &mut Mat,
+        ju: &mut Mat,
+        w: &mut FwdWork,
+    ) {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        let rho = self.rho;
+        let d = jx.cols;
+
+        // Jx = K⁻¹(∂(−q)/∂θ + ρCᵀ(Jz − Ju))
+        w.jzu.data.fill(0.0);
+        w.jzu.axpy(1.0, jz);
+        w.jzu.axpy(-1.0, ju);
+        w.lrhs.data.fill(0.0);
+        gemm_acc(&mut w.lrhs, rho, &self.stacked.ct, &w.jzu);
+        if param == Param::Q {
+            for i in 0..n.min(d) {
+                w.lrhs[(i, i)] -= 1.0;
+            }
+        }
+        w.newjx.data.fill(0.0);
+        gemm_acc(&mut w.newjx, 1.0, &self.kinv_cache, &w.lrhs);
+        std::mem::swap(jx, &mut w.newjx);
+
+        // Jv = αC Jx + (1−α)Jz + Ju
+        w.jv.data.fill(0.0);
+        gemm_acc(&mut w.jv, alpha, &self.stacked.c, jx);
+        w.jv.axpy(1.0 - alpha, jz);
+        w.jv.axpy(1.0, ju);
+
+        // projection rows: Jz⁺ = ∂(projection)/∂θ, Ju⁺ = Jv − Jz⁺
+        for r in 0..p {
+            jz.row_mut(r).fill(0.0);
+            if param == Param::B {
+                jz[(r, r)] = 1.0;
+            }
+            for c in 0..d {
+                ju[(r, c)] = w.jv[(r, c)] - jz[(r, c)];
+            }
+        }
+        for i in 0..m {
+            let r = p + i;
+            if v[r] < h[i] {
+                // inactive: the projection passes Jv straight through
+                for c in 0..d {
+                    jz[(r, c)] = w.jv[(r, c)];
+                    ju[(r, c)] = 0.0;
+                }
+            } else {
+                jz.row_mut(r).fill(0.0);
+                if param == Param::H {
+                    jz[(r, i)] = 1.0;
+                }
+                for c in 0..d {
+                    ju[(r, c)] = w.jv[(r, c)] - jz[(r, c)];
+                }
+            }
+        }
+    }
+
+    /// Reverse-mode backward against an already-solved forward pass:
+    /// iterate the transposed derivative of the projection/relaxation
+    /// map to its fixed point, then project out vᵀ∂x*/∂θ for all three
+    /// parameters at once. With t = K⁻¹v, gₛ = ρCt and gate e = 1 on
+    /// inactive rows:
+    ///
+    ///   a  = e ⊙ w_z + (1−e) ⊙ w_u
+    ///   Sa = αρ C K⁻¹ Cᵀ a
+    ///   w_z ← Sa + (1−α)a + gₛ,    w_u ← a − Sa − gₛ
+    ///
+    /// Cost per iteration: one Cholesky solve + two gemvs — independent
+    /// of the parameter dimension d, O(p+m) state, mirroring the
+    /// Alt-Diff adjoint (DESIGN.md §3c). Truncation on w_z (`opts.tol`;
+    /// `tol = 0` runs exactly `opts.max_iter` iterations).
+    pub fn vjp(&self, slack: &[f64], v: &[f64], opts: &Options) -> Vjp {
+        self.vjp_from(slack, v, None, opts).0
+    }
+
+    /// [`Self::vjp`] resuming the transposed recursion from a harvested
+    /// [`AdmmSeed`] and returning the final state for the next caller —
+    /// the family sibling of
+    /// [`DenseAltDiff::vjp_from`](crate::altdiff::DenseAltDiff::vjp_from).
+    /// `warm = None` is bit-identical to the cold [`Self::vjp`].
+    pub fn vjp_from(
+        &self,
+        slack: &[f64],
+        v: &[f64],
+        warm: Option<&AdmmSeed>,
+        opts: &Options,
+    ) -> (Vjp, AdmmSeed) {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        let pm = p + m;
+        let rho = self.rho;
+        let alpha = self.settings.alpha;
+        assert_eq!(slack.len(), m, "slack dimension");
+        assert_eq!(v.len(), n, "v dimension");
+        // gate e = 1 on INACTIVE inequality rows (the projection is the
+        // identity there); equality and active rows pin z to a constant
+        let gate: Vec<f64> = slack
+            .iter()
+            .map(|&s| if s > 0.0 { 1.0 } else { 0.0 })
+            .collect();
+
+        // t = K⁻¹v and the parameter-independent seed g = ρCt (= −g on
+        // the u leg)
+        let mut t = v.to_vec();
+        self.chol.solve_in_place(&mut t);
+        let mut seedz = vec![0.0; pm];
+        gemv_acc(&mut seedz, rho, &self.stacked.c, &t);
+
+        // first series term, unless a harvested state resumes it
+        let mut wz = seedz.clone();
+        let mut wu: Vec<f64> = seedz.iter().map(|&g| -g).collect();
+        let seeded = warm.is_some();
+        if let Some(seed) = warm {
+            assert_eq!(seed.dim(), pm, "adjoint-seed dimensions");
+            wz.copy_from_slice(&seed.wz);
+            wu.copy_from_slice(&seed.wu);
+        }
+
+        let mut a = vec![0.0; pm];
+        let mut cta = vec![0.0; n];
+        let mut sa = vec![0.0; pm];
+        let mut wzprev = vec![0.0; pm];
+        let mut iters = 1;
+        let mut step_rel = f64::INFINITY;
+
+        let astep = |a: &mut Vec<f64>, wz: &[f64], wu: &[f64]| {
+            for i in 0..p {
+                a[i] = wu[i];
+            }
+            for i in 0..m {
+                a[p + i] =
+                    gate[i] * wz[p + i] + (1.0 - gate[i]) * wu[p + i];
+            }
+        };
+
+        for k in 1..opts.max_iter {
+            wzprev.copy_from_slice(&wz);
+            astep(&mut a, &wz, &wu);
+            // Sa = αρ C K⁻¹ Cᵀ a — one Cholesky solve + two gemvs
+            cta.iter_mut().for_each(|c| *c = 0.0);
+            gemv_t_acc(&mut cta, 1.0, &self.stacked.c, &a);
+            self.chol.solve_in_place(&mut cta);
+            sa.iter_mut().for_each(|si| *si = 0.0);
+            gemv_acc(&mut sa, alpha * rho, &self.stacked.c, &cta);
+            // W ← FᵀW + g
+            for i in 0..pm {
+                wz[i] = sa[i] + (1.0 - alpha) * a[i] + seedz[i];
+                wu[i] = a[i] - sa[i] - seedz[i];
+            }
+            iters = k + 1;
+            let dz: f64 = wz
+                .iter()
+                .zip(&wzprev)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            step_rel = dz / norm2(&wzprev).max(1.0);
+            // a seeded first iteration reproduces the harvested state
+            // exactly — require one genuine step before trusting it
+            if step_rel < opts.tol && (k > 1 || !seeded) {
+                break;
+            }
+        }
+
+        // the reusable adjoint state, harvested before the projection
+        // consumes the w's
+        let seed_out = AdmmSeed { wz: wz.clone(), wu: wu.clone() };
+
+        // project: the converged a feeds every gradient at once
+        astep(&mut a, &wz, &wu);
+        cta.iter_mut().for_each(|c| *c = 0.0);
+        gemv_t_acc(&mut cta, 1.0, &self.stacked.c, &a);
+        self.chol.solve_in_place(&mut cta);
+        let grad_q: Vec<f64> =
+            (0..n).map(|i| -t[i] - alpha * cta[i]).collect();
+        let grad_b: Vec<f64> = (0..p).map(|i| wz[i] - wu[i]).collect();
+        let grad_h: Vec<f64> = (0..m)
+            .map(|i| (1.0 - gate[i]) * (wz[p + i] - wu[p + i]))
+            .collect();
+        (Vjp { grad_q, grad_b, grad_h, iters, step_rel }, seed_out)
+    }
+
+    /// Forward solve + reverse-mode backward in one call — the training
+    /// entry point, d-free like
+    /// [`DenseAltDiff::solve_vjp`](crate::altdiff::DenseAltDiff::solve_vjp).
+    pub fn solve_vjp(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        v: &[f64],
+        opts: &Options,
+    ) -> VjpSolution {
+        let fopts =
+            Options { backward: BackwardMode::None, ..opts.clone() };
+        let solution = self.solve_with(q, b, h, &fopts);
+        let vjp = self.vjp(&solution.s, v, opts);
+        VjpSolution { solution, vjp }
+    }
+}
+
+/// Forward-mode work buffers, allocated once per solve and reused
+/// across iterations (hoisted out of the hot loop).
+struct FwdWork {
+    jzu: Mat,
+    lrhs: Mat,
+    newjx: Mat,
+    jv: Mat,
+}
+
+impl FwdWork {
+    fn new(n: usize, pm: usize, d: usize) -> Self {
+        FwdWork {
+            jzu: Mat::zeros(pm, d),
+            lrhs: Mat::zeros(n, d),
+            newjx: Mat::zeros(n, d),
+            jv: Mat::zeros(pm, d),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::altdiff::DenseAltDiff;
+    use crate::prob::{dense_qp, ill_conditioned_qp};
+
+    fn solver(n: usize, m: usize, p: usize, seed: u64) -> AdmmQp {
+        AdmmQp::new(dense_qp(n, m, p, seed), 1.0).unwrap()
+    }
+
+    fn tight() -> Options {
+        Options {
+            tol: 1e-12,
+            max_iter: 200_000,
+            backward: BackwardMode::None,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn forward_reaches_kkt_point() {
+        let s = solver(20, 10, 4, 1);
+        let sol = s.solve(&tight());
+        let r = s.qp.kkt_residual(&sol.x, &sol.lam, &sol.nu);
+        assert!(r < 1e-6, "kkt residual {r}");
+        assert!(sol.iters < 200_000, "did not converge");
+    }
+
+    #[test]
+    fn matches_dense_altdiff() {
+        for seed in [2, 5, 11] {
+            let qp = dense_qp(16, 8, 3, seed);
+            let admm = AdmmQp::new(qp.clone(), 1.0).unwrap();
+            let alt = DenseAltDiff::new(qp, 1.0).unwrap();
+            let sa = admm.solve(&tight());
+            let sd = alt.solve(&tight());
+            for i in 0..16 {
+                assert!((sa.x[i] - sd.x[i]).abs() < 1e-8, "x[{i}]");
+            }
+            for i in 0..3 {
+                assert!((sa.lam[i] - sd.lam[i]).abs() < 1e-8, "lam[{i}]");
+            }
+            for i in 0..8 {
+                assert!((sa.nu[i] - sd.nu[i]).abs() < 1e-8, "nu[{i}]");
+                assert!((sa.s[i] - sd.s[i]).abs() < 1e-8, "s[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn jacobian_b_matches_finite_difference() {
+        let s = solver(10, 5, 2, 7);
+        let opts = Options {
+            backward: BackwardMode::Forward(Param::B),
+            ..tight()
+        };
+        let sol = s.solve(&opts);
+        let jac = sol.jacobian.unwrap();
+        let eps = 1e-5;
+        for j in 0..2 {
+            let mut bp = s.qp.b.clone();
+            bp[j] += eps;
+            let mut bm = s.qp.b.clone();
+            bm[j] -= eps;
+            let fopts = Options { backward: BackwardMode::None, ..tight() };
+            let xp = s.solve_with(None, Some(&bp), None, &fopts).x;
+            let xm = s.solve_with(None, Some(&bm), None, &fopts).x;
+            for i in 0..10 {
+                let fd = (xp[i] - xm[i]) / (2.0 * eps);
+                assert!(
+                    (jac[(i, j)] - fd).abs() < 1e-5,
+                    "jac[({i},{j})]={} fd={fd}",
+                    jac[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vjp_matches_finite_difference() {
+        let s = solver(8, 4, 2, 13);
+        let v: Vec<f64> = (0..8).map(|i| 0.3 * (i as f64) - 1.0).collect();
+        let out = s.solve_vjp(None, None, None, &v, &tight());
+        let eps = 1e-5;
+        let loss = |q: &[f64], b: &[f64], h: &[f64]| -> f64 {
+            let fopts = Options { backward: BackwardMode::None, ..tight() };
+            let x = s.solve_with(Some(q), Some(b), Some(h), &fopts).x;
+            x.iter().zip(&v).map(|(xi, vi)| xi * vi).sum()
+        };
+        let check = |got: f64, fd: f64, tag: &str| {
+            assert!(
+                (got - fd).abs() < 1e-3 * (1.0 + fd.abs()),
+                "{tag}: got {got} fd {fd}"
+            );
+        };
+        for j in 0..8 {
+            let mut qp_ = s.qp.q.clone();
+            qp_[j] += eps;
+            let mut qm_ = s.qp.q.clone();
+            qm_[j] -= eps;
+            let fd = (loss(&qp_, &s.qp.b, &s.qp.h)
+                - loss(&qm_, &s.qp.b, &s.qp.h))
+                / (2.0 * eps);
+            check(out.vjp.grad_q[j], fd, "grad_q");
+        }
+        for j in 0..2 {
+            let mut bp = s.qp.b.clone();
+            bp[j] += eps;
+            let mut bm = s.qp.b.clone();
+            bm[j] -= eps;
+            let fd = (loss(&s.qp.q, &bp, &s.qp.h)
+                - loss(&s.qp.q, &bm, &s.qp.h))
+                / (2.0 * eps);
+            check(out.vjp.grad_b[j], fd, "grad_b");
+        }
+        for j in 0..4 {
+            let mut hp = s.qp.h.clone();
+            hp[j] += eps;
+            let mut hm = s.qp.h.clone();
+            hm[j] -= eps;
+            let fd = (loss(&s.qp.q, &s.qp.b, &hp)
+                - loss(&s.qp.q, &s.qp.b, &hm))
+                / (2.0 * eps);
+            check(out.vjp.grad_h[j], fd, "grad_h");
+        }
+    }
+
+    #[test]
+    fn warm_fixed_point_stops_immediately() {
+        let s = solver(12, 6, 2, 17);
+        let cold = s.solve(&tight());
+        let warm = crate::warm::WarmStart::new(
+            cold.x.clone(),
+            cold.lam.clone(),
+            cold.nu.clone(),
+        );
+        let opts = Options { tol: 1e-8, ..tight() };
+        let resumed = s.solve_from(None, None, None, Some(&warm), &opts);
+        assert_eq!(resumed.iters, 1, "fixed point should stop in one");
+        for i in 0..12 {
+            assert!((resumed.x[i] - cold.x[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn adaptation_balances_ill_conditioned() {
+        let qp = ill_conditioned_qp(10, 5, 2, 1e4, 3);
+        let adapted =
+            AdmmQp::new_adapted(qp.clone(), 1.0, AdmmSettings::default())
+                .unwrap();
+        assert!(
+            adapted.rho > 30.0,
+            "balancing should push rho up, got {}",
+            adapted.rho
+        );
+        let fixed = AdmmQp::new(qp, 1.0).unwrap();
+        let opts = Options {
+            tol: 1e-8,
+            max_iter: 3000,
+            backward: BackwardMode::None,
+            ..Default::default()
+        };
+        let sa = adapted.solve(&opts);
+        let sf = fixed.solve(&opts);
+        assert!(sa.iters < 3000, "adapted should converge, {}", sa.iters);
+        assert!(
+            sf.iters == 3000 && sa.iters < sf.iters,
+            "fixed unit rho should crawl: adapted {} fixed {}",
+            sa.iters,
+            sf.iters
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn alpha_out_of_range_panics() {
+        let _ = AdmmQp::with_settings(
+            dense_qp(4, 2, 1, 1),
+            1.0,
+            AdmmSettings { alpha: 2.5, ..Default::default() },
+        );
+    }
+}

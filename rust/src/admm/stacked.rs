@@ -1,0 +1,49 @@
+//! Registration-time state shared by the ADMM engines: the stacked
+//! constraint operator C = [A; G] and the factorization of
+//! K(ρ) = P + ρCᵀC — exactly the H(ρ) the Alt-Diff registration
+//! factors, so the two families share conditioning behavior at equal ρ.
+
+use crate::error::Result;
+use crate::linalg::{ata, Chol, Mat};
+use crate::prob::Qp;
+
+/// Cached stacked-constraint products, built once per registration.
+#[derive(Clone)]
+pub(crate) struct Stacked {
+    /// C = [A; G], ((p+m), n).
+    pub c: Mat,
+    /// Cᵀ, (n, (p+m)).
+    pub ct: Mat,
+    /// CᵀC, (n, n) — lets a ρ change reassemble K without re-touching C.
+    pub ctc: Mat,
+    /// Symmetrized P.
+    pub psym: Mat,
+}
+
+impl Stacked {
+    pub fn new(qp: &Qp) -> Stacked {
+        let c = qp.a.vstack(&qp.g);
+        let ct = c.transpose();
+        let ctc = ata(&c);
+        let mut psym = qp.p.clone();
+        psym.symmetrize();
+        Stacked { c, ct, ctc, psym }
+    }
+
+    /// Factor K(ρ) = P + ρCᵀC, with the same PSD ridge retry the
+    /// Alt-Diff registration applies to H.
+    pub fn factor(&self, rho: f64) -> Result<Chol> {
+        let mut k = self.psym.clone();
+        k.axpy(rho, &self.ctc);
+        match Chol::factor(&k) {
+            Ok(ch) => Ok(ch),
+            Err(_) => {
+                let ridge = 1e-8 * (1.0 + k.fro() / k.rows as f64);
+                for i in 0..k.rows {
+                    k[(i, i)] += ridge;
+                }
+                Chol::factor(&k)
+            }
+        }
+    }
+}

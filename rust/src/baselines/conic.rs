@@ -1,4 +1,4 @@
-//! CvxpyLayer-style comparator (simulated — see DESIGN.md §7).
+//! CvxpyLayer-style comparator (simulated — see DESIGN.md §8).
 //!
 //! CvxpyLayer canonicalizes the program into cone form, solves it with an
 //! operator-splitting conic solver (SCS), and differentiates the *cone

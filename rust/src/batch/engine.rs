@@ -557,8 +557,9 @@ impl BatchedAltDiff {
 }
 
 /// Batch-major parameter matrix: provided per-element slices or the
-/// registered fallback broadcast to every row.
-fn gather(
+/// registered fallback broadcast to every row. Shared with the batched
+/// ADMM engine, which gathers θ the same way.
+pub(crate) fn gather(
     rows: Option<&[&[f64]]>,
     fallback: &[f64],
     bsz: usize,
@@ -595,7 +596,9 @@ struct JacState {
     ajx: Mat,
 }
 
-fn zero_cols(mat: &mut Mat, ranges: &[(usize, usize)]) {
+/// Zero the given column ranges of every row (live-block reset between
+/// masked GEMM accumulations). Shared with the batched ADMM engine.
+pub(crate) fn zero_cols(mat: &mut Mat, ranges: &[(usize, usize)]) {
     for i in 0..mat.rows {
         let row = mat.row_mut(i);
         for &(j0, j1) in ranges {

@@ -1,11 +1,14 @@
 //! Dynamic batcher: groups compatible requests into padded batches.
 //!
-//! Compatibility key = (layer, k, is_grad): only requests against the
-//! same registered layer, the same routed iteration count, and the same
-//! kind (solve vs adjoint-gradient) may share an executable launch. Flush policy: a batch launches when it reaches the
-//! target batch size, or when its oldest member has waited past the
-//! deadline (classic vLLM-style deadline batching — latency bounded, and
-//! throughput recovers the MXU efficiency of the batched artifact).
+//! Compatibility key = (layer, family, k, is_grad): only requests
+//! against the same registered layer, routed to the same engine family
+//! and the same iteration count, and of the same kind (solve vs
+//! adjoint-gradient) may share an executable launch — the two families
+//! run different iterations, so a batch never mixes them. Flush policy:
+//! a batch launches when it reaches the target batch size, or when its
+//! oldest member has waited past the deadline (classic vLLM-style
+//! deadline batching — latency bounded, and throughput recovers the MXU
+//! efficiency of the batched artifact).
 //!
 //! Layer names are interned as `Arc<str>` on first sight, so the
 //! per-push hot path pays one map lookup and a refcount bump instead of
@@ -17,6 +20,7 @@
 //! protects (see `net::server`).
 
 use super::messages::Request;
+use crate::warm::EngineFamily;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -26,6 +30,8 @@ use std::time::{Duration, Instant};
 pub struct Batch {
     /// Target layer (interned name).
     pub layer: Arc<str>,
+    /// Engine family every member was routed to.
+    pub family: EngineFamily,
     /// Routed iteration count shared by every member.
     pub k: usize,
     /// True for a batch of adjoint-gradient requests (every member
@@ -34,6 +40,8 @@ pub struct Batch {
     /// The member requests, in arrival order.
     pub requests: Vec<Request>,
 }
+
+type Key = (Arc<str>, EngineFamily, usize, bool);
 
 /// Keyed accumulation with deadline-based flushing.
 pub struct Batcher {
@@ -44,7 +52,7 @@ pub struct Batcher {
     /// layer-name intern table (bounded by the number of distinct layer
     /// names ever seen; `Arc<str>: Borrow<str>` gives by-&str lookup)
     names: BTreeSet<Arc<str>>,
-    pending: BTreeMap<(Arc<str>, usize, bool), Vec<Request>>,
+    pending: BTreeMap<Key, Vec<Request>>,
 }
 
 impl Batcher {
@@ -69,21 +77,42 @@ impl Batcher {
 
     /// Add a routed request (keyed by its own `layer` field); returns a
     /// full batch if one is ready.
-    pub fn push(&mut self, k: usize, req: Request) -> Option<Batch> {
+    pub fn push(
+        &mut self,
+        family: EngineFamily,
+        k: usize,
+        req: Request,
+    ) -> Option<Batch> {
         let name = self.intern(&req.layer);
-        let key = (name, k, req.is_grad());
+        let key = (name, family, k, req.is_grad());
         let slot = self.pending.entry(key.clone()).or_default();
         slot.push(req);
         if slot.len() >= self.max_batch {
             let requests = self.pending.remove(&key).unwrap();
-            return Some(Batch { layer: key.0, k, grad: key.2, requests });
+            return Some(Batch {
+                layer: key.0,
+                family,
+                k,
+                grad: key.3,
+                requests,
+            });
         }
         None
     }
 
+    fn unpack(key: Key, requests: Vec<Request>) -> Batch {
+        Batch {
+            layer: key.0,
+            family: key.1,
+            k: key.2,
+            grad: key.3,
+            requests,
+        }
+    }
+
     /// Flush every group whose oldest request has exceeded the deadline.
     pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch> {
-        let expired: Vec<(Arc<str>, usize, bool)> = self
+        let expired: Vec<Key> = self
             .pending
             .iter()
             .filter(|(_, reqs)| {
@@ -97,19 +126,18 @@ impl Batcher {
             .into_iter()
             .map(|key| {
                 let requests = self.pending.remove(&key).unwrap();
-                Batch { layer: key.0, k: key.1, grad: key.2, requests }
+                Batcher::unpack(key, requests)
             })
             .collect()
     }
 
     /// Flush everything (shutdown).
     pub fn flush_all(&mut self) -> Vec<Batch> {
-        let keys: Vec<(Arc<str>, usize, bool)> =
-            self.pending.keys().cloned().collect();
+        let keys: Vec<Key> = self.pending.keys().cloned().collect();
         keys.into_iter()
             .map(|key| {
                 let requests = self.pending.remove(&key).unwrap();
-                Batch { layer: key.0, k: key.1, grad: key.2, requests }
+                Batcher::unpack(key, requests)
             })
             .collect()
     }
@@ -133,6 +161,9 @@ impl Batcher {
 mod tests {
     use super::*;
 
+    const ALT: EngineFamily = EngineFamily::AltDiff;
+    const ADMM: EngineFamily = EngineFamily::Admm;
+
     fn req(id: u64, layer: &str) -> Request {
         Request {
             id,
@@ -154,9 +185,9 @@ mod tests {
     #[test]
     fn fills_batch_at_max() {
         let mut b = Batcher::new(3, Duration::from_millis(100));
-        assert!(b.push(10, req(1, "l")).is_none());
-        assert!(b.push(10, req(2, "l")).is_none());
-        let batch = b.push(10, req(3, "l")).unwrap();
+        assert!(b.push(ALT, 10, req(1, "l")).is_none());
+        assert!(b.push(ALT, 10, req(2, "l")).is_none());
+        let batch = b.push(ALT, 10, req(3, "l")).unwrap();
         assert_eq!(batch.requests.len(), 3);
         assert_eq!(b.pending_count(), 0);
     }
@@ -164,11 +195,11 @@ mod tests {
     #[test]
     fn never_mixes_layers_or_k() {
         let mut b = Batcher::new(2, Duration::from_millis(100));
-        assert!(b.push(10, req(1, "a")).is_none());
-        assert!(b.push(10, req(2, "b")).is_none());
-        assert!(b.push(20, req(3, "a")).is_none());
+        assert!(b.push(ALT, 10, req(1, "a")).is_none());
+        assert!(b.push(ALT, 10, req(2, "b")).is_none());
+        assert!(b.push(ALT, 20, req(3, "a")).is_none());
         assert_eq!(b.pending_count(), 3);
-        let batch = b.push(10, req(4, "a")).unwrap();
+        let batch = b.push(ALT, 10, req(4, "a")).unwrap();
         assert_eq!(batch.k, 10);
         assert!(batch.requests.iter().all(|r| r.layer == "a"));
         assert_eq!(batch.requests.len(), 2);
@@ -177,7 +208,7 @@ mod tests {
     #[test]
     fn deadline_flush() {
         let mut b = Batcher::new(10, Duration::from_millis(1));
-        b.push(10, req(1, "l"));
+        b.push(ALT, 10, req(1, "l"));
         let later = Instant::now() + Duration::from_millis(5);
         let flushed = b.flush_expired(later);
         assert_eq!(flushed.len(), 1);
@@ -188,7 +219,7 @@ mod tests {
     #[test]
     fn not_expired_not_flushed() {
         let mut b = Batcher::new(10, Duration::from_secs(60));
-        b.push(10, req(1, "l"));
+        b.push(ALT, 10, req(1, "l"));
         assert!(b.flush_expired(Instant::now()).is_empty());
         assert_eq!(b.pending_count(), 1);
     }
@@ -196,9 +227,9 @@ mod tests {
     #[test]
     fn preserves_arrival_order_within_key() {
         let mut b = Batcher::new(3, Duration::from_millis(100));
-        b.push(10, req(7, "l"));
-        b.push(10, req(8, "l"));
-        let batch = b.push(10, req(9, "l")).unwrap();
+        b.push(ALT, 10, req(7, "l"));
+        b.push(ALT, 10, req(8, "l"));
+        let batch = b.push(ALT, 10, req(9, "l")).unwrap();
         let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![7, 8, 9]);
     }
@@ -206,8 +237,8 @@ mod tests {
     #[test]
     fn flush_all_drains() {
         let mut b = Batcher::new(10, Duration::from_secs(1));
-        b.push(10, req(1, "a"));
-        b.push(20, req(2, "b"));
+        b.push(ALT, 10, req(1, "a"));
+        b.push(ALT, 20, req(2, "b"));
         let all = b.flush_all();
         assert_eq!(all.len(), 2);
         assert_eq!(b.pending_count(), 0);
@@ -217,22 +248,38 @@ mod tests {
     #[test]
     fn never_mixes_solve_and_grad_requests() {
         let mut b = Batcher::new(2, Duration::from_millis(100));
-        assert!(b.push(10, req(1, "l")).is_none());
-        assert!(b.push(10, grad_req(2, "l")).is_none());
+        assert!(b.push(ALT, 10, req(1, "l")).is_none());
+        assert!(b.push(ALT, 10, grad_req(2, "l")).is_none());
         assert_eq!(b.pending_count(), 2);
-        let batch = b.push(10, grad_req(3, "l")).unwrap();
+        let batch = b.push(ALT, 10, grad_req(3, "l")).unwrap();
         assert!(batch.grad);
         assert!(batch.requests.iter().all(|r| r.is_grad()));
-        let batch = b.push(10, req(4, "l")).unwrap();
+        let batch = b.push(ALT, 10, req(4, "l")).unwrap();
         assert!(!batch.grad);
         assert!(batch.requests.iter().all(|r| !r.is_grad()));
     }
 
     #[test]
+    fn never_mixes_engine_families() {
+        let mut b = Batcher::new(2, Duration::from_millis(100));
+        assert!(b.push(ALT, 10, req(1, "l")).is_none());
+        assert!(b.push(ADMM, 10, req(2, "l")).is_none());
+        assert_eq!(b.pending_count(), 2);
+        let batch = b.push(ADMM, 10, req(3, "l")).unwrap();
+        assert_eq!(batch.family, ADMM);
+        assert_eq!(
+            batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![2, 3]
+        );
+        let batch = b.push(ALT, 10, req(4, "l")).unwrap();
+        assert_eq!(batch.family, ALT);
+    }
+
+    #[test]
     fn interned_names_are_shared_across_batches() {
         let mut b = Batcher::new(1, Duration::from_secs(1));
-        let b1 = b.push(10, req(1, "layer")).unwrap();
-        let b2 = b.push(10, req(2, "layer")).unwrap();
+        let b1 = b.push(ALT, 10, req(1, "layer")).unwrap();
+        let b2 = b.push(ALT, 10, req(2, "layer")).unwrap();
         assert!(Arc::ptr_eq(&b1.layer, &b2.layer), "name not interned");
         assert_eq!(&*b1.layer, "layer");
     }

@@ -61,7 +61,8 @@ pub struct Response {
     pub batch_size: usize,
     /// end-to-end latency in seconds
     pub latency: f64,
-    /// which backend served it ("pjrt" | "native" | "native-sparse")
+    /// which backend served it
+    /// ("pjrt" | "native" | "native-sparse" | "native-admm")
     pub backend: &'static str,
 }
 
@@ -88,7 +89,8 @@ pub struct GradientResponse {
     pub batch_size: usize,
     /// end-to-end latency in seconds
     pub latency: f64,
-    /// which backend served it ("native" | "native-sparse")
+    /// which backend served it
+    /// ("native" | "native-sparse" | "native-admm")
     pub backend: &'static str,
 }
 

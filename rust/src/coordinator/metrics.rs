@@ -23,6 +23,20 @@ pub struct Metrics {
     pub native_execs: AtomicU64,
     /// the subset of native launches executed by the sparse batch engine
     pub native_sparse_execs: AtomicU64,
+    /// native launches executed by the ADMM engine family (forward +
+    /// adjoint; disjoint from the Alt-Diff native/sparse counters)
+    pub admm_execs: AtomicU64,
+    /// requests served by ADMM launches
+    pub admm_elems: AtomicU64,
+    /// routed batches the cross-method router sent to the ADMM family
+    pub router_admm_picks: AtomicU64,
+    /// routed batches the cross-method router kept on Alt-Diff
+    pub router_altdiff_picks: AtomicU64,
+    /// solver iterations run by ADMM launches (summed over elements)
+    pub admm_iters: AtomicU64,
+    /// solver iterations run by native Alt-Diff launches (summed over
+    /// elements; PJRT executions are fixed-k and not counted here)
+    pub altdiff_iters: AtomicU64,
     /// requests served by native launches (occupancy numerator)
     pub native_elems: AtomicU64,
     /// adjoint (gradient) batched launches — one per gradient `Batch`;
@@ -189,6 +203,42 @@ impl Metrics {
         );
         c(
             &mut out,
+            "admm_execs_total",
+            "native launches executed by the ADMM engine family",
+            self.admm_execs.load(ld),
+        );
+        c(
+            &mut out,
+            "admm_elems_total",
+            "requests served by ADMM launches",
+            self.admm_elems.load(ld),
+        );
+        c(
+            &mut out,
+            "router_admm_picks_total",
+            "routed batches dispatched to the ADMM family",
+            self.router_admm_picks.load(ld),
+        );
+        c(
+            &mut out,
+            "router_altdiff_picks_total",
+            "routed batches kept on the Alt-Diff family",
+            self.router_altdiff_picks.load(ld),
+        );
+        c(
+            &mut out,
+            "admm_iters_total",
+            "solver iterations run by ADMM launches",
+            self.admm_iters.load(ld),
+        );
+        c(
+            &mut out,
+            "altdiff_iters_total",
+            "solver iterations run by native Alt-Diff launches",
+            self.altdiff_iters.load(ld),
+        );
+        c(
+            &mut out,
             "adjoint_execs_total",
             "adjoint (gradient) batched launches",
             self.adjoint_execs.load(ld),
@@ -271,8 +321,9 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "req={} resp={} fail={} batches={} pjrt={} native={} \
-             sparse={} adjoint={} native_occ={:.1} pad={} bumps={} \
-             warm={}/{} saved={} mean_lat={:.0}us p90<={}us",
+             sparse={} admm={} routed={}:{} adjoint={} native_occ={:.1} \
+             pad={} bumps={} warm={}/{} saved={} mean_lat={:.0}us \
+             p90<={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.failures.load(Ordering::Relaxed),
@@ -280,6 +331,9 @@ impl Metrics {
             self.pjrt_execs.load(Ordering::Relaxed),
             self.native_execs.load(Ordering::Relaxed),
             self.native_sparse_execs.load(Ordering::Relaxed),
+            self.admm_execs.load(Ordering::Relaxed),
+            self.router_altdiff_picks.load(Ordering::Relaxed),
+            self.router_admm_picks.load(Ordering::Relaxed),
             self.adjoint_execs.load(Ordering::Relaxed),
             self.native_batch_occupancy(),
             self.padded_slots.load(Ordering::Relaxed),

@@ -5,6 +5,13 @@
 //! count via a calibrated [`truncation::TruncationTable`]; the
 //! [`batcher::Batcher`] groups compatible requests; workers execute the
 //! AOT PJRT artifacts (or the native engine as fallback/oracle).
+//!
+//! Layers registered via
+//! [`server::CoordinatorBuilder::register_routed`] carry BOTH engine
+//! families (Alt-Diff and ADMM) plus a [`truncation::EngineRouter`]
+//! calibrated from fixed-k probes of each — the dispatcher then routes
+//! every request to the per-tolerance winning family, observable in the
+//! [`Metrics`] router counters.
 pub mod batcher;
 pub mod messages;
 pub mod metrics;
@@ -17,6 +24,7 @@ pub use messages::{
 };
 pub use metrics::Metrics;
 pub use server::{
-    Config, Coordinator, CoordinatorBuilder, LayerEngine, RegisteredLayer,
+    AdmmEngines, Config, Coordinator, CoordinatorBuilder, LayerEngine,
+    RegisteredLayer,
 };
-pub use truncation::TruncationTable;
+pub use truncation::{EngineRouter, TruncationTable};

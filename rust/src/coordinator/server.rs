@@ -18,7 +18,8 @@ use super::messages::{
     Failure, FailureKind, GradientResponse, Reply, Request, Response,
 };
 use super::metrics::Metrics;
-use super::truncation::TruncationTable;
+use super::truncation::{EngineRouter, TruncationTable};
+use crate::admm::{AdmmQp, AdmmSettings, BatchedAdmm};
 use crate::altdiff::{
     BackwardMode, DenseAltDiff, Options, Param, SparseAltDiff,
 };
@@ -28,7 +29,10 @@ use crate::batch::{
 use crate::error::{AltDiffError, Result};
 use crate::prob::{Qp, SparseQp};
 use crate::runtime::Engine;
-use crate::warm::{fingerprint, AdjointSeed, WarmStart, WarmStartCache};
+use crate::warm::{
+    fingerprint, AdjointSeed, AdmmSeed, EngineFamily, EngineSeed,
+    WarmStart, WarmStartCache,
+};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -63,6 +67,24 @@ pub enum LayerEngine {
         /// batched engine sharing the solver's registration
         batched: BatchedSparseAltDiff,
     },
+    /// Dense QP layer served exclusively by the ADMM engine family
+    /// (registered via [`CoordinatorBuilder::register_admm`]): no
+    /// compiled family — every batch is one [`BatchedAdmm`] launch.
+    Admm {
+        /// single-problem engine (calibration + residual reporting)
+        solver: AdmmQp,
+        /// batched engine sharing the solver's factorization caches
+        batched: BatchedAdmm,
+    },
+}
+
+/// The ADMM engine pair a routed dual-family layer keeps *next to* its
+/// Alt-Diff engines (see [`CoordinatorBuilder::register_routed`]).
+pub struct AdmmEngines {
+    /// single-problem engine (probes + residual reporting)
+    pub solver: AdmmQp,
+    /// batched engine sharing the solver's factorization caches
+    pub batched: BatchedAdmm,
 }
 
 /// A layer registered with the server (immutable after startup, shared
@@ -80,8 +102,36 @@ pub struct RegisteredLayer {
     pub rho: f64,
     /// The execution engines backing this layer.
     pub engine: LayerEngine,
+    /// The second engine family, present on routed layers (the
+    /// cross-method router dispatches each batch to `engine` or here).
+    pub admm: Option<AdmmEngines>,
+    /// Cross-method routing table, present when BOTH families were
+    /// probed at registration ([`CoordinatorBuilder::register_routed`]);
+    /// absent layers route per [`Self::family`] through `table`.
+    pub router: Option<EngineRouter>,
     /// tol → k router table (Mutex: workers bump it online)
     pub table: Mutex<TruncationTable>,
+}
+
+impl RegisteredLayer {
+    /// The engine family a non-routed layer serves with.
+    pub fn family(&self) -> EngineFamily {
+        match self.engine {
+            LayerEngine::Admm { .. } => EngineFamily::Admm,
+            _ => EngineFamily::AltDiff,
+        }
+    }
+
+    /// The ADMM engine pair, wherever it lives (primary engine for
+    /// [`LayerEngine::Admm`] layers, the sidecar for routed layers).
+    pub fn admm_engines(&self) -> Option<(&AdmmQp, &BatchedAdmm)> {
+        match &self.engine {
+            LayerEngine::Admm { solver, batched } => {
+                Some((solver, batched))
+            }
+            _ => self.admm.as_ref().map(|e| (&e.solver, &e.batched)),
+        }
+    }
 }
 
 /// Server configuration.
@@ -247,6 +297,8 @@ impl CoordinatorBuilder {
                 batched,
                 batches,
             },
+            admm: None,
+            router: None,
             table: Mutex::new(table),
         };
         self.layers.insert(name.to_string(), Arc::new(layer));
@@ -285,10 +337,124 @@ impl CoordinatorBuilder {
             p,
             rho,
             engine: LayerEngine::Sparse { solver, batched },
+            admm: None,
+            router: None,
             table: Mutex::new(table),
         };
         self.layers.insert(name.to_string(), Arc::new(layer));
         Ok(self)
+    }
+
+    /// Register a dense QP layer served exclusively by the ADMM engine
+    /// family: ρ is residual-balanced once at registration
+    /// ([`AdmmQp::new_adapted`]), the truncation table is calibrated
+    /// from the ADMM convergence trace, and every dispatched batch
+    /// becomes one [`BatchedAdmm`] launch (backend `"native-admm"`).
+    pub fn register_admm(
+        mut self,
+        name: &str,
+        qp: Qp,
+        rho: f64,
+    ) -> Result<Self> {
+        let n = qp.n();
+        let m = qp.m_ineq();
+        let p = qp.p_eq();
+        let solver =
+            AdmmQp::new_adapted(qp, rho, AdmmSettings::default())?;
+        let sol = solver.solve(&Options {
+            tol: 1e-9,
+            max_iter: self.calib_iters(),
+            backward: BackwardMode::None,
+            trace: true,
+            ..Default::default()
+        });
+        let trace: Vec<f64> =
+            sol.trace.iter().map(|t| t.step_rel).collect();
+        let table = self.calibrate(&trace);
+        let batched = BatchedAdmm::from_single(&solver);
+        let layer = RegisteredLayer {
+            name: name.to_string(),
+            n,
+            m,
+            p,
+            rho: solver.rho,
+            engine: LayerEngine::Admm { solver, batched },
+            admm: None,
+            router: None,
+            table: Mutex::new(table),
+        };
+        self.layers.insert(name.to_string(), Arc::new(layer));
+        Ok(self)
+    }
+
+    /// Register a dense QP layer behind the cross-method router: BOTH
+    /// engine families are built (Alt-Diff exactly as [`Self::register`],
+    /// ADMM with registration-time ρ balancing), both probe the
+    /// registered θ with fixed-k solves at every ladder rung, and the
+    /// per-tolerance winner table ([`EngineRouter`]) decides which
+    /// family serves each subsequent batch. The compiled PJRT family
+    /// remains available for Alt-Diff-routed batches only.
+    pub fn register_routed(
+        self,
+        name: &str,
+        qp: Qp,
+        rho: f64,
+    ) -> Result<Self> {
+        let admm_qp = qp.clone();
+        let mut this = self.register(name, qp, rho)?;
+        let layer = this.layers.remove(name).expect("just registered");
+        let layer =
+            Arc::into_inner(layer).expect("single-owner at build time");
+        let admm_solver =
+            AdmmQp::new_adapted(admm_qp, rho, AdmmSettings::default())?;
+        let LayerEngine::Dense { solver, .. } = &layer.engine else {
+            unreachable!("register() builds a Dense layer");
+        };
+        // conditioning probe: (max ℓᵢᵢ / min ℓᵢᵢ)² of the registration
+        // Cholesky of H(ρ) — a cheap spectral-range proxy
+        let diag: Vec<f64> =
+            (0..layer.n).map(|i| solver.chol.l[(i, i)]).collect();
+        let dmax = diag.iter().cloned().fold(f64::MIN, f64::max);
+        let dmin = diag.iter().cloned().fold(f64::MAX, f64::min);
+        let cond = (dmax / dmin.max(f64::MIN_POSITIVE)).powi(2);
+        // residual-anchored rung probes on the registered θ, per family
+        let mut alt_res = Vec::with_capacity(this.ladder.len());
+        let mut admm_res = Vec::with_capacity(this.ladder.len());
+        for &kk in &this.ladder {
+            let popts = Options {
+                tol: 0.0,
+                max_iter: kk,
+                backward: BackwardMode::None,
+                rho,
+                trace: false,
+            };
+            let sa = solver.solve(&popts);
+            alt_res
+                .push(solver.qp.kkt_residual(&sa.x, &sa.lam, &sa.nu));
+            let sm = admm_solver.solve(&popts);
+            admm_res.push(
+                admm_solver.qp.kkt_residual(&sm.x, &sm.lam, &sm.nu),
+            );
+        }
+        let router = EngineRouter::from_probes(
+            &this.ladder,
+            &alt_res,
+            &admm_res,
+            &this.config.calib_tols,
+            cond,
+            (layer.n, layer.m, layer.p),
+        );
+        let admm_batched = BatchedAdmm::from_single(&admm_solver);
+        let layer = RegisteredLayer {
+            admm: Some(AdmmEngines {
+                solver: admm_solver,
+                batched: admm_batched,
+            }),
+            router: Some(router),
+            ..layer
+        };
+        this.layers.insert(name.to_string(), Arc::new(layer));
+        Ok(this)
     }
 
     /// Start dispatcher + workers.
@@ -480,15 +646,31 @@ fn dispatcher_loop(
                             // rung that certifies it — reject instead
                             // of silently clamping to the top rung
                             // (which would quietly serve at unknown
-                            // accuracy)
-                            let (k, tightest) = {
-                                let table = layer.table.lock().unwrap();
-                                (
-                                    table.k_for_checked(req.tol),
-                                    table.tightest_calibrated(),
-                                )
+                            // accuracy). Dual-family layers route
+                            // through the cross-method EngineRouter
+                            // (tol → winning family + its rung);
+                            // single-family layers keep the truncation
+                            // table and their registration family.
+                            let (routed, tightest) = match &layer.router
+                            {
+                                Some(router) => (
+                                    router.route_checked(req.tol),
+                                    router.tightest_calibrated(),
+                                ),
+                                None => {
+                                    let table =
+                                        layer.table.lock().unwrap();
+                                    (
+                                        table
+                                            .k_for_checked(req.tol)
+                                            .map(|k| {
+                                                (layer.family(), k)
+                                            }),
+                                        table.tightest_calibrated(),
+                                    )
+                                }
                             };
-                            let Some(k) = k else {
+                            let Some((family, k)) = routed else {
                                 metrics.failures.fetch_add(
                                     1,
                                     std::sync::atomic::Ordering::Relaxed,
@@ -514,7 +696,22 @@ fn dispatcher_loop(
                                 }));
                                 continue;
                             };
-                            if let Some(b) = batcher.push(k, req) {
+                            // cross-method choice observability: only
+                            // routed layers move these counters
+                            if layer.router.is_some() {
+                                let ord =
+                                    std::sync::atomic::Ordering::Relaxed;
+                                match family {
+                                    EngineFamily::Admm => metrics
+                                        .router_admm_picks
+                                        .fetch_add(1, ord),
+                                    EngineFamily::AltDiff => metrics
+                                        .router_altdiff_picks
+                                        .fetch_add(1, ord),
+                                };
+                            }
+                            if let Some(b) = batcher.push(family, k, req)
+                            {
                                 send_batch(b, &mut rr);
                             }
                         }
@@ -644,10 +841,11 @@ fn worker_loop(
 fn warm_lookup(
     cache: &Mutex<WarmStartCache>,
     layer: &str,
+    family: EngineFamily,
     k: usize,
     reqs: &[Request],
     metrics: &Metrics,
-) -> (Vec<u64>, Vec<Option<WarmStart>>, Vec<Option<AdjointSeed>>) {
+) -> (Vec<u64>, Vec<Option<WarmStart>>, Vec<Option<EngineSeed>>) {
     let mut c = cache.lock().unwrap();
     let mut fps = Vec::with_capacity(reqs.len());
     let mut warms = Vec::with_capacity(reqs.len());
@@ -655,7 +853,7 @@ fn warm_lookup(
     let mut hits = 0u64;
     for r in reqs {
         let fp = fingerprint(r.session, &r.q, &r.b, &r.h);
-        let got = c.get(layer, k, fp, &r.q, &r.b, &r.h);
+        let got = c.get(layer, family, k, fp, &r.q, &r.b, &r.h);
         if got.is_some() {
             hits += 1;
         }
@@ -673,19 +871,22 @@ fn warm_lookup(
 /// Write a finished native batch's converged iterates back into the
 /// warm cache (entry e under fingerprint `fps[e]`, recording the θ the
 /// solve ran at for later staleness checks).
+#[allow(clippy::too_many_arguments)]
 fn warm_writeback(
     cache: &Mutex<WarmStartCache>,
     layer: &str,
+    family: EngineFamily,
     k: usize,
     reqs: &[Request],
     fps: &[u64],
     sol: &BatchSolution,
-    seeds: Option<&[AdjointSeed]>,
+    seeds: Option<&[EngineSeed]>,
 ) {
     let mut c = cache.lock().unwrap();
     for (e, req) in reqs.iter().enumerate() {
         c.put(
             layer,
+            family,
             k,
             fps[e],
             req.q.clone(),
@@ -694,6 +895,28 @@ fn warm_writeback(
             sol.warm_start(e),
             seeds.map(|s| s[e].clone()),
         );
+    }
+}
+
+/// Primal feasibility ‖[Ax−b; (Gx−h)₊]‖ of a served iterate against the
+/// *request's* (b, h), evaluated with whichever solver holds the
+/// layer's constraint matrices (the residual is engine-independent).
+fn layer_feasibility(
+    layer: &RegisteredLayer,
+    x: &[f64],
+    b: &[f64],
+    h: &[f64],
+) -> f64 {
+    match &layer.engine {
+        LayerEngine::Dense { solver, .. } => {
+            solver.qp.feasibility_with(x, b, h).0
+        }
+        LayerEngine::Sparse { solver, .. } => {
+            solver.qp.feasibility_with(x, b, h).0
+        }
+        LayerEngine::Admm { solver, .. } => {
+            solver.qp.feasibility_with(x, b, h).0
+        }
     }
 }
 
@@ -713,15 +936,18 @@ fn execute_batch(
     if batch.grad {
         return execute_grad_batch(layer, batch, metrics, warm);
     }
-    // PJRT path (dense layers only): pick the smallest compiled batch
-    // size >= len, pad.
-    if let LayerEngine::Dense {
-        hinv_f32,
-        a_f32,
-        g_f32,
-        batches,
-        ..
-    } = &layer.engine
+    // PJRT path (dense Alt-Diff-routed batches only — no compiled ADMM
+    // family exists): pick the smallest compiled batch size >= len, pad.
+    if let (
+        EngineFamily::AltDiff,
+        LayerEngine::Dense {
+            hinv_f32,
+            a_f32,
+            g_f32,
+            batches,
+            ..
+        },
+    ) = (batch.family, &layer.engine)
     {
         if let Some(eng) = engine.as_mut() {
             if let Some(&bsz) =
@@ -766,14 +992,18 @@ fn execute_batch(
     // slack gates are correct from iteration 1), so warm solve batches
     // buy accuracy rather than iterations; the iteration savings land
     // on the gradient path, which truncates.
-    metrics
-        .native_execs
-        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-    metrics
-        .native_elems
-        .fetch_add(reqs.len() as u64, std::sync::atomic::Ordering::Relaxed);
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    metrics.native_execs.fetch_add(1, ord);
+    metrics.native_elems.fetch_add(reqs.len() as u64, ord);
     let warm_ctx = warm.map(|cache| {
-        warm_lookup(cache, &batch.layer, batch.k, reqs, metrics)
+        warm_lookup(
+            cache,
+            &batch.layer,
+            batch.family,
+            batch.k,
+            reqs,
+            metrics,
+        )
     });
     let warms = warm_ctx.as_ref().map(|(_, w, _)| w.as_slice());
     let opts = Options {
@@ -786,9 +1016,15 @@ fn execute_batch(
     let qs: Vec<&[f64]> = reqs.iter().map(|r| r.q.as_slice()).collect();
     let bs: Vec<&[f64]> = reqs.iter().map(|r| r.b.as_slice()).collect();
     let hs: Vec<&[f64]> = reqs.iter().map(|r| r.h.as_slice()).collect();
-    let (sol, backend): (BatchSolution, &'static str) = match &layer.engine
+    let (sol, backend): (BatchSolution, &'static str) = if batch.family
+        == EngineFamily::Admm
     {
-        LayerEngine::Dense { batched, .. } => (
+        let (_, batched) = layer
+            .admm_engines()
+            .expect("ADMM-routed batch on a layer with ADMM engines");
+        metrics.admm_execs.fetch_add(1, ord);
+        metrics.admm_elems.fetch_add(reqs.len() as u64, ord);
+        (
             batched.solve_batch_from(
                 Some(&qs),
                 Some(&bs),
@@ -796,44 +1032,65 @@ fn execute_batch(
                 warms,
                 &opts,
             ),
-            "native",
-        ),
-        LayerEngine::Sparse { batched, .. } => {
-            metrics
-                .native_sparse_execs
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            // fallible: a blocked-CG breakdown must become per-request
-            // failure replies, never a worker panic (which would kill
-            // the thread and silently drop every batch routed to it)
-            match batched.try_solve_batch_from(
-                Some(&qs),
-                Some(&bs),
-                Some(&hs),
-                warms,
-                &opts,
-            ) {
-                Ok(sol) => (sol, "native-sparse"),
-                Err(e) => {
-                    return reqs
-                        .iter()
-                        .map(|req| {
-                            Reply::Err(Failure {
-                                id: req.id,
-                                kind: FailureKind::Exec,
-                                error: format!(
-                                    "sparse batched solve failed: {e}"
-                                ),
+            "native-admm",
+        )
+    } else {
+        match &layer.engine {
+            LayerEngine::Dense { batched, .. } => (
+                batched.solve_batch_from(
+                    Some(&qs),
+                    Some(&bs),
+                    Some(&hs),
+                    warms,
+                    &opts,
+                ),
+                "native",
+            ),
+            LayerEngine::Sparse { batched, .. } => {
+                metrics.native_sparse_execs.fetch_add(1, ord);
+                // fallible: a blocked-CG breakdown must become per-request
+                // failure replies, never a worker panic (which would kill
+                // the thread and silently drop every batch routed to it)
+                match batched.try_solve_batch_from(
+                    Some(&qs),
+                    Some(&bs),
+                    Some(&hs),
+                    warms,
+                    &opts,
+                ) {
+                    Ok(sol) => (sol, "native-sparse"),
+                    Err(e) => {
+                        return reqs
+                            .iter()
+                            .map(|req| {
+                                Reply::Err(Failure {
+                                    id: req.id,
+                                    kind: FailureKind::Exec,
+                                    error: format!(
+                                        "sparse batched solve failed: {e}"
+                                    ),
+                                })
                             })
-                        })
-                        .collect();
+                            .collect();
+                    }
                 }
             }
+            LayerEngine::Admm { .. } => unreachable!(
+                "Alt-Diff-routed batch on an ADMM-only layer"
+            ),
         }
     };
+    let iters_total: u64 = sol.iters.iter().map(|&i| i as u64).sum();
+    if batch.family == EngineFamily::Admm {
+        metrics.admm_iters.fetch_add(iters_total, ord);
+    } else {
+        metrics.altdiff_iters.fetch_add(iters_total, ord);
+    }
     if let (Some(cache), Some((fps, _, _))) = (warm, warm_ctx.as_ref()) {
         warm_writeback(
             cache,
             &batch.layer,
+            batch.family,
             batch.k,
             reqs,
             fps,
@@ -845,14 +1102,7 @@ fn execute_batch(
     reqs.iter()
         .zip(sol.xs)
         .map(|(req, x)| {
-            let prim = match &layer.engine {
-                LayerEngine::Dense { solver, .. } => {
-                    solver.qp.feasibility_with(&x, &req.b, &req.h).0
-                }
-                LayerEngine::Sparse { solver, .. } => {
-                    solver.qp.feasibility_with(&x, &req.b, &req.h).0
-                }
-            };
+            let prim = layer_feasibility(layer, &x, &req.b, &req.h);
             Reply::Ok(Response {
                 id: req.id,
                 x,
@@ -893,10 +1143,16 @@ fn execute_grad_batch(
         std::sync::atomic::Ordering::Relaxed,
     );
     let warm_ctx = warm.map(|cache| {
-        warm_lookup(cache, &batch.layer, batch.k, reqs, metrics)
+        warm_lookup(
+            cache,
+            &batch.layer,
+            batch.family,
+            batch.k,
+            reqs,
+            metrics,
+        )
     });
     let warms = warm_ctx.as_ref().map(|(_, w, _)| w.as_slice());
-    let seeds = warm_ctx.as_ref().map(|(_, _, s)| s.as_slice());
     let any_warm = warms
         .map(|w| w.iter().any(|e| e.is_some()))
         .unwrap_or(false);
@@ -939,52 +1195,117 @@ fn execute_grad_batch(
             })
             .collect::<Vec<Reply>>()
     };
+    // Adjoint seeds in the cache are engine-tagged: each family only
+    // ever consumes a seed its own backward iteration produced (a
+    // cross-family seed is dropped here, never reinterpreted).
     let (forward, vjp, adj_states, backend): (
         BatchSolution,
         BatchVjp,
-        Vec<AdjointSeed>,
+        Vec<EngineSeed>,
         &'static str,
-    ) = match &layer.engine {
-        LayerEngine::Dense { batched, .. } => {
-            let forward = batched.solve_batch_from(
-                Some(&qs),
-                Some(&bs),
-                Some(&hs),
-                warms,
-                &fopts,
-            );
-            let (vjp, states) = batched.batch_vjp_from(
-                &forward.slack_refs(),
-                &vs,
-                seeds,
-                &bopts,
-            );
-            (forward, vjp, states, "native")
-        }
-        LayerEngine::Sparse { batched, .. } => {
-            let forward = match batched.try_solve_batch_from(
-                Some(&qs),
-                Some(&bs),
-                Some(&hs),
-                warms,
-                &fopts,
-            ) {
-                Ok(f) => f,
-                Err(e) => return fail(reqs, &e),
-            };
-            match batched.try_batch_vjp_from(
-                &forward.slack_refs(),
-                &vs,
-                seeds,
-                &bopts,
-            ) {
-                Ok((vjp, states)) => {
-                    (forward, vjp, states, "native-sparse")
-                }
-                Err(e) => return fail(reqs, &e),
+    ) = if batch.family == EngineFamily::Admm {
+        let (_, batched) = layer
+            .admm_engines()
+            .expect("ADMM-routed batch on a layer with ADMM engines");
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        metrics.admm_execs.fetch_add(1, ord);
+        metrics.admm_elems.fetch_add(reqs.len() as u64, ord);
+        let admm_seeds: Option<Vec<Option<AdmmSeed>>> =
+            warm_ctx.as_ref().map(|(_, _, s)| {
+                s.iter()
+                    .map(|o| o.clone().and_then(EngineSeed::into_admm))
+                    .collect()
+            });
+        let forward = batched.solve_batch_from(
+            Some(&qs),
+            Some(&bs),
+            Some(&hs),
+            warms,
+            &fopts,
+        );
+        let (vjp, states) = batched.batch_vjp_from(
+            &forward.slack_refs(),
+            &vs,
+            admm_seeds.as_deref(),
+            &bopts,
+        );
+        let states =
+            states.into_iter().map(EngineSeed::Admm).collect();
+        (forward, vjp, states, "native-admm")
+    } else {
+        let alt_seeds: Option<Vec<Option<AdjointSeed>>> =
+            warm_ctx.as_ref().map(|(_, _, s)| {
+                s.iter()
+                    .map(|o| o.clone().and_then(EngineSeed::into_altdiff))
+                    .collect()
+            });
+        let seeds = alt_seeds.as_deref();
+        match &layer.engine {
+            LayerEngine::Dense { batched, .. } => {
+                let forward = batched.solve_batch_from(
+                    Some(&qs),
+                    Some(&bs),
+                    Some(&hs),
+                    warms,
+                    &fopts,
+                );
+                let (vjp, states) = batched.batch_vjp_from(
+                    &forward.slack_refs(),
+                    &vs,
+                    seeds,
+                    &bopts,
+                );
+                let states =
+                    states.into_iter().map(EngineSeed::AltDiff).collect();
+                (forward, vjp, states, "native")
             }
+            LayerEngine::Sparse { batched, .. } => {
+                let forward = match batched.try_solve_batch_from(
+                    Some(&qs),
+                    Some(&bs),
+                    Some(&hs),
+                    warms,
+                    &fopts,
+                ) {
+                    Ok(f) => f,
+                    Err(e) => return fail(reqs, &e),
+                };
+                match batched.try_batch_vjp_from(
+                    &forward.slack_refs(),
+                    &vs,
+                    seeds,
+                    &bopts,
+                ) {
+                    Ok((vjp, states)) => {
+                        let states = states
+                            .into_iter()
+                            .map(EngineSeed::AltDiff)
+                            .collect();
+                        (forward, vjp, states, "native-sparse")
+                    }
+                    Err(e) => return fail(reqs, &e),
+                }
+            }
+            LayerEngine::Admm { .. } => unreachable!(
+                "Alt-Diff-routed batch on an ADMM-only layer"
+            ),
         }
     };
+    let iters_total: u64 = forward
+        .iters
+        .iter()
+        .chain(vjp.iters.iter())
+        .map(|&i| i as u64)
+        .sum();
+    if batch.family == EngineFamily::Admm {
+        metrics
+            .admm_iters
+            .fetch_add(iters_total, std::sync::atomic::Ordering::Relaxed);
+    } else {
+        metrics
+            .altdiff_iters
+            .fetch_add(iters_total, std::sync::atomic::Ordering::Relaxed);
+    }
     if let (Some(cache), Some((fps, lookups, _))) =
         (warm, warm_ctx.as_ref())
     {
@@ -1003,6 +1324,7 @@ fn execute_grad_batch(
         warm_writeback(
             cache,
             &batch.layer,
+            batch.family,
             batch.k,
             reqs,
             fps,
@@ -1016,14 +1338,7 @@ fn execute_grad_batch(
     reqs.iter()
         .zip(forward.xs)
         .map(|(req, x)| {
-            let prim = match &layer.engine {
-                LayerEngine::Dense { solver, .. } => {
-                    solver.qp.feasibility_with(&x, &req.b, &req.h).0
-                }
-                LayerEngine::Sparse { solver, .. } => {
-                    solver.qp.feasibility_with(&x, &req.b, &req.h).0
-                }
-            };
+            let prim = layer_feasibility(layer, &x, &req.b, &req.h);
             Reply::Grad(GradientResponse {
                 id: req.id,
                 x,

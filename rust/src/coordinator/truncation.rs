@@ -1,4 +1,5 @@
-//! Truncation policy: tolerance → iteration count.
+//! Truncation policy: tolerance → iteration count (and, for
+//! dual-family layers, tolerance → engine family).
 //!
 //! The paper's §4.3 result (gradient error = O(iterate error), Thm 4.3)
 //! makes truncation safe; serving makes it *discrete*: compiled variants
@@ -12,7 +13,15 @@
 //! up to the artifact ladder. The table self-corrects online: if an
 //! executed batch reports a dual residual above the requested tolerance,
 //! the entry for that tolerance is bumped to the next rung.
+//!
+//! [`EngineRouter`] extends the same idea across *engine families*: at
+//! registration both the Alt-Diff and ADMM engines run fixed-k probe
+//! solves at every ladder rung, the KKT residual of each probe is
+//! recorded, and per calibrated tolerance the family that certifies the
+//! tolerance at the smaller rung wins (ties go to Alt-Diff, the paper's
+//! engine). See DESIGN.md §6.
 
+use crate::warm::EngineFamily;
 use std::collections::BTreeMap;
 
 /// Calibrated tol → k table over a fixed k-ladder.
@@ -147,6 +156,149 @@ impl TruncationTable {
     }
 }
 
+/// Per-layer cross-family routing table, calibrated at registration
+/// from fixed-k probe solves of BOTH engine families.
+///
+/// For each rung k of the artifact ladder, each family ran the
+/// registered θ for exactly k iterations and the resulting KKT residual
+/// was recorded (residual-anchored, not step-anchored: the truncation
+/// step criterion measures progress per iteration, which flatters a
+/// slowly-crawling fixed-ρ run — the KKT residual measures distance to
+/// the answer). Per calibrated tolerance, each family's cost is the
+/// smallest rung whose probe residual certifies the tolerance (top rung
+/// when none does), and the family with the strictly smaller rung wins;
+/// ties keep Alt-Diff, the paper's engine.
+///
+/// ```
+/// use altdiff::coordinator::EngineRouter;
+/// use altdiff::warm::EngineFamily;
+///
+/// // Alt-Diff stalls near 1e-1 while ADMM reaches 1e-5 by rung 20
+/// let router = EngineRouter::from_probes(
+///     &[10, 20, 40],
+///     &[2e-1, 1.5e-1, 1.2e-1],
+///     &[1e-3, 1e-5, 1e-7],
+///     &[1e-2, 1e-4],
+///     500.0,
+///     (8, 4, 2),
+/// );
+/// assert_eq!(
+///     router.route_checked(1e-2),
+///     Some((EngineFamily::Admm, 10))
+/// );
+/// // tighter than everything calibrated: refused, like the table
+/// assert_eq!(router.route_checked(1e-9), None);
+/// ```
+#[derive(Clone, Debug)]
+pub struct EngineRouter {
+    ladder: Vec<usize>,
+    /// tolerance bits → the winning family and its rung
+    entries: BTreeMap<u64, (EngineFamily, usize)>,
+    /// conditioning probe recorded at calibration, (max ℓᵢᵢ/min ℓᵢᵢ)²
+    /// of the registration Cholesky — observability only
+    cond: f64,
+    dims: (usize, usize, usize),
+}
+
+impl EngineRouter {
+    /// Build from per-rung probe residuals. `alt_residuals[i]` and
+    /// `admm_residuals[i]` are the KKT residuals after exactly
+    /// `ladder[i]` iterations of the respective family on the
+    /// registered θ; `cond` is the layer's conditioning probe and
+    /// `dims = (n, m, p)`.
+    pub fn from_probes(
+        ladder: &[usize],
+        alt_residuals: &[f64],
+        admm_residuals: &[f64],
+        tols: &[f64],
+        cond: f64,
+        dims: (usize, usize, usize),
+    ) -> Self {
+        assert!(!ladder.is_empty(), "empty artifact ladder");
+        assert_eq!(ladder.len(), alt_residuals.len(), "probe arity");
+        assert_eq!(ladder.len(), admm_residuals.len(), "probe arity");
+        let mut order: Vec<usize> = (0..ladder.len()).collect();
+        order.sort_unstable_by_key(|&i| ladder[i]);
+        let sorted: Vec<usize> = order.iter().map(|&i| ladder[i]).collect();
+        let cost = |residuals: &[f64], tol: f64| -> usize {
+            order
+                .iter()
+                .find(|&&i| residuals[i] <= tol)
+                .map(|&i| ladder[i])
+                .unwrap_or(*sorted.last().unwrap())
+        };
+        let mut entries = BTreeMap::new();
+        for &tol in tols {
+            let ka = cost(alt_residuals, tol);
+            let km = cost(admm_residuals, tol);
+            let pick = if km < ka {
+                (EngineFamily::Admm, km)
+            } else {
+                (EngineFamily::AltDiff, ka)
+            };
+            entries.insert(tol_key(tol), pick);
+        }
+        EngineRouter { ladder: sorted, entries, cond, dims }
+    }
+
+    /// The winning `(family, k)` for a requested tolerance: the exact
+    /// calibrated entry, else the entry of the tightest calibrated
+    /// tolerance ≤ requested (safe: more accuracy than asked for), else
+    /// `None` — same refusal semantics as
+    /// [`TruncationTable::k_for_checked`], so the coordinator can answer
+    /// `FailureKind::Invalid` naming the tightest calibrated tolerance.
+    pub fn route_checked(&self, tol: f64) -> Option<(EngineFamily, usize)> {
+        if let Some(&pick) = self.entries.get(&tol_key(tol)) {
+            return Some(pick);
+        }
+        let mut best: Option<(EngineFamily, usize)> = None;
+        let mut best_tol = 0.0f64;
+        for (&key, &pick) in &self.entries {
+            let t = f64::from_bits(key);
+            if t <= tol && t > best_tol {
+                best_tol = t;
+                best = Some(pick);
+            }
+        }
+        best
+    }
+
+    /// The tightest tolerance the router was calibrated for; `None`
+    /// only for an empty tolerance list.
+    pub fn tightest_calibrated(&self) -> Option<f64> {
+        self.entries
+            .keys()
+            .map(|&k| f64::from_bits(k))
+            .fold(None, |acc: Option<f64>, t| {
+                Some(acc.map_or(t, |a| a.min(t)))
+            })
+    }
+
+    /// Calibrated `(tol, family, k)` rows, ascending by tolerance bits —
+    /// for tests and the layers listing.
+    pub fn entries(&self) -> Vec<(f64, EngineFamily, usize)> {
+        self.entries
+            .iter()
+            .map(|(&key, &(fam, k))| (f64::from_bits(key), fam, k))
+            .collect()
+    }
+
+    /// The conditioning probe recorded at calibration.
+    pub fn cond(&self) -> f64 {
+        self.cond
+    }
+
+    /// Problem dimensions `(n, m, p)` recorded at calibration.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        self.dims
+    }
+
+    /// The ascending artifact iteration ladder.
+    pub fn ladder(&self) -> &[usize] {
+        &self.ladder
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,5 +387,71 @@ mod tests {
         let c = TruncationTable::conservative(&[10, 20]);
         assert_eq!(c.k_for_checked(1e-3), None);
         assert_eq!(c.tightest_calibrated(), None);
+    }
+
+    #[test]
+    fn router_picks_smaller_rung_and_breaks_ties_altdiff() {
+        // ADMM certifies 1e-2 at rung 10; Alt-Diff needs rung 40
+        let r = EngineRouter::from_probes(
+            &[10, 20, 40],
+            &[5e-1, 1e-1, 5e-3],
+            &[5e-3, 1e-5, 1e-8],
+            &[1e-2, 1e-4],
+            100.0,
+            (10, 5, 2),
+        );
+        assert_eq!(r.route_checked(1e-2), Some((EngineFamily::Admm, 10)));
+        assert_eq!(r.route_checked(1e-4), Some((EngineFamily::Admm, 20)));
+        // equal rung → Alt-Diff keeps the layer
+        let tie = EngineRouter::from_probes(
+            &[10, 20],
+            &[1e-3, 1e-6],
+            &[1e-3, 1e-6],
+            &[1e-2],
+            1.0,
+            (4, 2, 1),
+        );
+        assert_eq!(
+            tie.route_checked(1e-2),
+            Some((EngineFamily::AltDiff, 10))
+        );
+    }
+
+    #[test]
+    fn router_checked_semantics_match_table() {
+        let r = EngineRouter::from_probes(
+            &[10, 20, 40],
+            &[1e-2, 1e-4, 1e-6],
+            &[1e-1, 1e-3, 1e-5],
+            &[1e-3, 1e-5],
+            10.0,
+            (6, 3, 1),
+        );
+        // uncalibrated looser tol reuses the tightest safe entry
+        assert_eq!(r.route_checked(1e-4), r.route_checked(1e-5));
+        // tighter than calibrated: refused
+        assert_eq!(r.route_checked(1e-9), None);
+        assert_eq!(r.tightest_calibrated(), Some(1e-5));
+        assert_eq!(r.entries().len(), 2);
+        assert_eq!(r.ladder(), &[10, 20, 40]);
+        assert_eq!(r.dims(), (6, 3, 1));
+        assert!((r.cond() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn router_unreached_tolerance_costs_top_rung() {
+        // neither family certifies 1e-8 → both cost the top rung → tie
+        let r = EngineRouter::from_probes(
+            &[10, 20],
+            &[1.0, 0.5],
+            &[1.0, 0.9],
+            &[1e-8],
+            1e6,
+            (8, 4, 2),
+        );
+        assert_eq!(
+            r.route_checked(1e-8),
+            Some((EngineFamily::AltDiff, 20))
+        );
     }
 }

@@ -1,4 +1,4 @@
-//! Procedurally rendered digit images (MNIST substitute — DESIGN.md §7).
+//! Procedurally rendered digit images (MNIST substitute — DESIGN.md §8).
 //!
 //! 16×16 seven-segment-style digits with random per-sample translation,
 //! thickness jitter and pixel noise. Harder than it sounds at high noise;

@@ -1,5 +1,5 @@
 //! Synthetic hourly electricity demand (the paper's §5.2 uses PJM data,
-//! which is access-gated; see DESIGN.md §7 for the substitution argument).
+//! which is access-gated; see DESIGN.md §8 for the substitution argument).
 //!
 //! Model: daily + weekly harmonics + AR(1) noise + occasional demand
 //! spikes, normalized into [0, 100] exactly as the paper describes.

@@ -1,5 +1,5 @@
 //! Synthetic datasets replacing the paper's gated/external data
-//! (substitutions documented in DESIGN.md §7).
+//! (substitutions documented in DESIGN.md §8).
 
 pub mod digits;
 pub mod energy;

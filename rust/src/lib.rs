@@ -17,6 +17,10 @@
 //!   accepts a prior (x, λ, ν) triple, and an LRU cache with staleness
 //!   bounds threads it through the coordinator, the wire protocol's
 //!   session keys, and the training loops)
+//! - second engine family: [`admm`] (consensus-form over-relaxed ADMM
+//!   behind the same solve/differentiate/batch/warm contracts; the
+//!   coordinator calibrates both families per layer and routes each
+//!   batch to the winner)
 
 // Numeric-kernel house style: explicit index loops mirror the paper's
 // equations and the blocked-BLAS layout; several solver entry points
@@ -29,6 +33,7 @@
 // (`cargo doc --no-deps` with RUSTDOCFLAGS="-D warnings").
 #![warn(missing_docs)]
 
+pub mod admm;
 pub mod altdiff;
 pub mod baselines;
 pub mod batch;

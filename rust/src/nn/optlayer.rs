@@ -20,14 +20,23 @@
 //! constraints, e.g. a constrained-sparsemax output layer). Minibatch
 //! forwards route through the matching batched engine
 //! ([`BatchedAltDiff`] / [`BatchedSparseAltDiff`]): B samples per launch.
+//!
+//! A third backend, [`OptBackend::Admm`], swaps in the second engine
+//! family ([`AdmmQp`] / [`BatchedAdmm`]) behind the identical module
+//! interface — same reverse-mode contract (slack-gated adjoint, no
+//! materialized Jacobians), with registration-time ρ balancing for
+//! ill-conditioned layer structures (see DESIGN.md §6).
 
+use crate::admm::{AdmmQp, AdmmSettings, BatchedAdmm};
 use crate::altdiff::{DenseAltDiff, Options, Param, SparseAltDiff};
 use crate::baselines;
 use crate::batch::{BatchedAltDiff, BatchedSparseAltDiff};
 use crate::error::Result;
 use crate::linalg::{gemv_t, Mat};
 use crate::prob::{Qp, SparseQp};
-use crate::warm::{fingerprint, AdjointSeed, WarmStart, WarmStartCache};
+use crate::warm::{
+    fingerprint, EngineFamily, EngineSeed, WarmStart, WarmStartCache,
+};
 
 /// Cache-layer name the optimization layer files its warm entries
 /// under (it owns its cache, so the name only has to be stable).
@@ -40,6 +49,10 @@ pub enum OptBackend {
     AltDiff,
     /// OptNet semantics: interior point + KKT implicit differentiation.
     OptNetKkt,
+    /// Consensus-form ADMM (the second engine family): same truncation
+    /// and reverse-mode contracts as Alt-Diff, with ρ residual-balanced
+    /// once at registration.
+    Admm,
 }
 
 /// Structure-specific solver pair: the sequential engine plus the
@@ -54,6 +67,10 @@ enum LayerSolver {
     Sparse {
         solver: SparseAltDiff,
         batched: BatchedSparseAltDiff,
+    },
+    Admm {
+        solver: AdmmQp,
+        batched: BatchedAdmm,
     },
 }
 
@@ -86,23 +103,34 @@ pub struct OptLayer {
     /// θ of the last keyed forward (cache write-backs record it)
     last_qs: Vec<Vec<f64>>,
     /// adjoint seeds recalled alongside the last keyed forward's warm
-    /// iterates — the backward resumes from them
-    last_seeds: Vec<Option<AdjointSeed>>,
+    /// iterates — the backward resumes from them (engine-tagged; a seed
+    /// of the other family is never consumed)
+    last_seeds: Vec<Option<EngineSeed>>,
     /// converged iterates of the last keyed forward (the backward's
     /// cache write-back pairs them with fresh adjoint seeds)
     last_warm_out: Vec<WarmStart>,
 }
 
 impl OptLayer {
-    /// Register a dense QP layer.
+    /// Register a dense QP layer. [`OptBackend::Admm`] builds the
+    /// second engine family instead of the Alt-Diff pair, with ρ
+    /// residual-balanced once here ([`AdmmQp::new_adapted`]).
     pub fn new(qp: Qp, rho: f64, backend: OptBackend, tol: f64)
         -> Result<Self>
     {
-        let solver = DenseAltDiff::new(qp, rho)?;
-        let batched = (backend == OptBackend::AltDiff)
-            .then(|| BatchedAltDiff::from_dense(&solver));
+        let solver = if backend == OptBackend::Admm {
+            let solver =
+                AdmmQp::new_adapted(qp, rho, AdmmSettings::default())?;
+            let batched = BatchedAdmm::from_single(&solver);
+            LayerSolver::Admm { solver, batched }
+        } else {
+            let solver = DenseAltDiff::new(qp, rho)?;
+            let batched = (backend == OptBackend::AltDiff)
+                .then(|| BatchedAltDiff::from_dense(&solver));
+            LayerSolver::Dense { solver, batched }
+        };
         Ok(OptLayer {
-            solver: LayerSolver::Dense { solver, batched },
+            solver,
             backend,
             tol,
             last_jac: None,
@@ -148,6 +176,16 @@ impl OptLayer {
         match &self.solver {
             LayerSolver::Dense { solver, .. } => solver.qp.n(),
             LayerSolver::Sparse { solver, .. } => solver.qp.n(),
+            LayerSolver::Admm { solver, .. } => solver.qp.n(),
+        }
+    }
+
+    /// The engine family serving this layer (tags warm-cache entries so
+    /// cross-family iterates are never reused).
+    fn family(&self) -> EngineFamily {
+        match self.backend {
+            OptBackend::Admm => EngineFamily::Admm,
+            _ => EngineFamily::AltDiff,
         }
     }
 
@@ -166,7 +204,7 @@ impl OptLayer {
     /// [`crate::warm::theta_distance`]) — training inputs drift slowly,
     /// so a generous radius (≈1.0) is the right default.
     pub fn enable_warm_start(&mut self, capacity: usize, radius: f64) {
-        self.warm = (self.backend == OptBackend::AltDiff
+        self.warm = (self.backend != OptBackend::OptNetKkt
             && capacity > 0)
             .then(|| WarmStartCache::new(capacity, radius));
     }
@@ -196,17 +234,18 @@ impl OptLayer {
             return self.forward_batch(qs);
         }
         let opts = self.opts();
+        let fam = self.family();
         // recall prior iterates (and the adjoint seeds their backwards
         // left behind) per sample key
         let mut warms: Vec<Option<WarmStart>> =
             Vec::with_capacity(qs.len());
-        let mut seeds: Vec<Option<AdjointSeed>> =
+        let mut seeds: Vec<Option<EngineSeed>> =
             Vec::with_capacity(qs.len());
         {
             let cache = self.warm.as_mut().expect("warm enabled");
             for (q, &key) in qs.iter().zip(keys) {
                 let fp = fingerprint(Some(key), q, &[], &[]);
-                match cache.get(WARM_LAYER, 0, fp, q, &[], &[]) {
+                match cache.get(WARM_LAYER, fam, 0, fp, q, &[], &[]) {
                     Some((w, a)) => {
                         warms.push(Some(w));
                         seeds.push(a);
@@ -240,6 +279,14 @@ impl OptLayer {
                     &opts,
                 )
                 .expect("batched sparse solve failed"),
+            LayerSolver::Admm { batched, .. } => batched
+                .solve_batch_from(
+                    Some(&qrefs),
+                    None,
+                    None,
+                    Some(&warms),
+                    &opts,
+                ),
         };
         // write the converged iterates back, preserving each entry's
         // previous adjoint seed (this epoch's backward resumes from it
@@ -252,6 +299,7 @@ impl OptLayer {
                 let fp = fingerprint(Some(key), q, &[], &[]);
                 cache.put(
                     WARM_LAYER,
+                    fam,
                     0,
                     fp,
                     q.clone(),
@@ -298,6 +346,10 @@ impl OptLayer {
                 let sol = solver.solve_with(Some(q), None, None, &opts);
                 (sol.x, Some(sol.s), None, sol.iters)
             }
+            (LayerSolver::Admm { solver, .. }, _) => {
+                let sol = solver.solve_with(Some(q), None, None, &opts);
+                (sol.x, Some(sol.s), None, sol.iters)
+            }
         };
         self.last_iters = iters;
         self.last_slack = slack;
@@ -323,6 +375,9 @@ impl OptLayer {
                 solver.vjp(slack, gx, &opts).grad_q
             }
             LayerSolver::Sparse { solver, .. } => {
+                solver.vjp(slack, gx, &opts).grad_q
+            }
+            LayerSolver::Admm { solver, .. } => {
                 solver.vjp(slack, gx, &opts).grad_q
             }
         }
@@ -369,6 +424,9 @@ impl OptLayer {
             LayerSolver::Sparse { batched, .. } => {
                 batched.solve_batch(Some(&qrefs), None, None, &opts)
             }
+            LayerSolver::Admm { batched, .. } => {
+                batched.solve_batch(Some(&qrefs), None, None, &opts)
+            }
         };
         self.last_batch_iters = sol.iters.clone();
         self.last_iters = sol.iters.iter().sum::<usize>() / sol.iters.len();
@@ -397,6 +455,9 @@ impl OptLayer {
                 solver.vjp(slack, gx, &opts).grad_q
             }
             LayerSolver::Sparse { solver, .. } => {
+                solver.vjp(slack, gx, &opts).grad_q
+            }
+            LayerSolver::Admm { solver, .. } => {
                 solver.vjp(slack, gx, &opts).grad_q
             }
         }
@@ -430,20 +491,80 @@ impl OptLayer {
         let opts = self.opts();
         let use_warm =
             self.warm.is_some() && self.last_keys.len() == gxs.len();
-        let seeds_in = use_warm.then(|| self.last_seeds.as_slice());
-        let (vjp, seeds_out) = match &self.solver {
-            LayerSolver::Dense { batched, .. } => batched
-                .as_ref()
-                .expect("alt-diff backend has engine")
-                .batch_vjp_from(&slack_refs, &gx_refs, seeds_in, &opts),
-            LayerSolver::Sparse { batched, .. } => batched
-                .try_batch_vjp_from(
+        // seeds are engine-tagged: unwrap this layer's family (the keyed
+        // forward only ever recalled same-family entries, but the
+        // conversion keeps the invariant explicit in the types)
+        let fam = self.family();
+        let (vjp, seeds_out): (_, Vec<EngineSeed>) = match &self.solver {
+            LayerSolver::Dense { batched, .. } => {
+                let alt = use_warm.then(|| {
+                    self.last_seeds
+                        .iter()
+                        .map(|o| {
+                            o.clone().and_then(EngineSeed::into_altdiff)
+                        })
+                        .collect::<Vec<_>>()
+                });
+                let (vjp, states) = batched
+                    .as_ref()
+                    .expect("alt-diff backend has engine")
+                    .batch_vjp_from(
+                        &slack_refs,
+                        &gx_refs,
+                        alt.as_deref(),
+                        &opts,
+                    );
+                (
+                    vjp,
+                    states
+                        .into_iter()
+                        .map(EngineSeed::AltDiff)
+                        .collect(),
+                )
+            }
+            LayerSolver::Sparse { batched, .. } => {
+                let alt = use_warm.then(|| {
+                    self.last_seeds
+                        .iter()
+                        .map(|o| {
+                            o.clone().and_then(EngineSeed::into_altdiff)
+                        })
+                        .collect::<Vec<_>>()
+                });
+                let (vjp, states) = batched
+                    .try_batch_vjp_from(
+                        &slack_refs,
+                        &gx_refs,
+                        alt.as_deref(),
+                        &opts,
+                    )
+                    .expect("batched sparse adjoint failed");
+                (
+                    vjp,
+                    states
+                        .into_iter()
+                        .map(EngineSeed::AltDiff)
+                        .collect(),
+                )
+            }
+            LayerSolver::Admm { batched, .. } => {
+                let admm = use_warm.then(|| {
+                    self.last_seeds
+                        .iter()
+                        .map(|o| o.clone().and_then(EngineSeed::into_admm))
+                        .collect::<Vec<_>>()
+                });
+                let (vjp, states) = batched.batch_vjp_from(
                     &slack_refs,
                     &gx_refs,
-                    seeds_in,
+                    admm.as_deref(),
                     &opts,
+                );
+                (
+                    vjp,
+                    states.into_iter().map(EngineSeed::Admm).collect(),
                 )
-                .expect("batched sparse adjoint failed"),
+            }
         };
         if use_warm {
             let cache = self.warm.as_mut().expect("warm enabled");
@@ -452,6 +573,7 @@ impl OptLayer {
                 let fp = fingerprint(Some(key), q, &[], &[]);
                 cache.put(
                     WARM_LAYER,
+                    fam,
                     0,
                     fp,
                     q.clone(),
@@ -573,6 +695,62 @@ mod tests {
                 "g[{c}]={} fd={fd}",
                 g[c]
             );
+        }
+    }
+
+    #[test]
+    fn admm_backend_matches_altdiff() {
+        let mut a = layer(OptBackend::AltDiff);
+        let mut m = layer(OptBackend::Admm);
+        let q: Vec<f64> = (0..10).map(|i| 0.08 * i as f64 - 0.3).collect();
+        let xa = a.forward(&q);
+        let xm = m.forward(&q);
+        for i in 0..10 {
+            assert!(
+                (xa[i] - xm[i]).abs() < 1e-6,
+                "x[{i}]: altdiff {} admm {}",
+                xa[i],
+                xm[i]
+            );
+        }
+        let gx: Vec<f64> = (0..10).map(|i| 0.9 - 0.15 * i as f64).collect();
+        let ga = a.backward(&gx);
+        let gm = m.backward(&gx);
+        for i in 0..10 {
+            assert!(
+                (ga[i] - gm[i]).abs() < 1e-5,
+                "g[{i}]: altdiff {} admm {}",
+                ga[i],
+                gm[i]
+            );
+        }
+    }
+
+    #[test]
+    fn admm_batch_roundtrip_and_keyed_warm_starts() {
+        let mut l = layer(OptBackend::Admm);
+        l.enable_warm_start(64, 1.0);
+        let qs: Vec<Vec<f64>> = (0..3)
+            .map(|s| {
+                (0..10)
+                    .map(|i| 0.1 * i as f64 - 0.2 + 0.15 * s as f64)
+                    .collect()
+            })
+            .collect();
+        let keys = [11u64, 22, 33];
+        let xs1 = l.forward_batch_keyed(&qs, &keys);
+        let gxs: Vec<Vec<f64>> = vec![vec![1.0; 10]; 3];
+        let g1 = l.backward_batch(&gxs);
+        // second epoch, same keys: warm hits, identical answers
+        let xs2 = l.forward_batch_keyed(&qs, &keys);
+        let g2 = l.backward_batch(&gxs);
+        let (hits, _) = l.warm_stats().unwrap();
+        assert!(hits >= 3, "expected warm hits on revisit, got {hits}");
+        for e in 0..3 {
+            for i in 0..10 {
+                assert!((xs1[e][i] - xs2[e][i]).abs() < 1e-7);
+                assert!((g1[e][i] - g2[e][i]).abs() < 1e-6);
+            }
         }
     }
 

@@ -34,6 +34,28 @@ pub fn dense_qp(n: usize, m: usize, p: usize, seed: u64) -> Qp {
     Qp { p: pm, q, a, b, g, h }
 }
 
+/// [`dense_qp`] with the objective blown up by `scale`: P and q are
+/// both multiplied by it, so the minimizer x* is *unchanged* while the
+/// duals scale by `scale` — the stationarity residual of any fixed
+/// iterate scales with it too. At `scale ≫ 1` a fixed unit penalty ρ
+/// crawls (the splitting step P + ρCᵀC is dominated by P), which is
+/// exactly the regime residual-balancing ρ adaptation — and hence the
+/// coordinator's cross-method router — is built for.
+pub fn ill_conditioned_qp(
+    n: usize,
+    m: usize,
+    p: usize,
+    scale: f64,
+    seed: u64,
+) -> Qp {
+    let mut qp = dense_qp(n, m, p, seed);
+    qp.p.scale(scale);
+    for v in qp.q.iter_mut() {
+        *v *= scale;
+    }
+    qp
+}
+
 /// Constrained-sparsemax layer (paper Table 3/4):
 ///     min ‖x − y‖²  s.t.  1ᵀx = 1,  0 ≤ x ≤ u
 /// i.e. P = 2I, q = −2y, A = 1ᵀ (p=1), G = [−I; I], h = [0; u].
@@ -158,6 +180,27 @@ mod tests {
             .solve(&qp.b),
         ));
         assert!(eq < 1e-8, "min-norm equality solution exists, eq={eq}");
+    }
+
+    #[test]
+    fn ill_conditioned_scales_objective_only() {
+        let base = dense_qp(12, 6, 3, 5);
+        let ill = ill_conditioned_qp(12, 6, 3, 1e4, 5);
+        // constraints untouched → same feasible set, same minimizer
+        assert_eq!(base.b, ill.b);
+        assert_eq!(base.h, ill.h);
+        assert_eq!(base.a.data, ill.a.data);
+        assert_eq!(base.g.data, ill.g.data);
+        for i in 0..12 {
+            assert!((ill.q[i] - 1e4 * base.q[i]).abs() < 1e-9);
+            for j in 0..12 {
+                assert!(
+                    (ill.p[(i, j)] - 1e4 * base.p[(i, j)]).abs()
+                        < 1e-6 * base.p[(i, j)].abs().max(1.0)
+                );
+            }
+        }
+        assert!(crate::linalg::Chol::factor(&ill.p).is_ok());
     }
 
     #[test]

@@ -2,6 +2,6 @@
 pub mod generator;
 pub mod qp;
 
-pub use generator::{dense_qp, energy_qp, softmax_layer, sparse_qp,
-                    sparsemax_qp};
+pub use generator::{dense_qp, energy_qp, ill_conditioned_qp,
+                    softmax_layer, sparse_qp, sparsemax_qp};
 pub use qp::{EntropyObjective, Objective, Qp, QuadObjective, SparseQp};

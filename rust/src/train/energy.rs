@@ -24,7 +24,9 @@ use crate::linalg::gemv_t;
 use crate::nn::{mse_loss, Adam, Mlp};
 use crate::prob::energy_qp;
 use crate::util::rng::Pcg64;
-use crate::warm::{fingerprint, WarmStart, WarmStartCache};
+use crate::warm::{
+    fingerprint, EngineFamily, WarmStart, WarmStartCache,
+};
 use std::time::Instant;
 
 /// Differentiation backend for the scheduling layer.
@@ -124,13 +126,24 @@ fn recall(
     q: &[f64],
 ) -> Option<WarmStart> {
     let fp = fingerprint(Some(key), q, &[], &[]);
-    c.get("energy", 0, fp, q, &[], &[]).map(|(w, _)| w)
+    c.get("energy", EngineFamily::AltDiff, 0, fp, q, &[], &[])
+        .map(|(w, _)| w)
 }
 
 /// Cache window-key `key`'s converged iterate for the next epoch.
 fn store(c: &mut WarmStartCache, key: u64, q: &[f64], w: WarmStart) {
     let fp = fingerprint(Some(key), q, &[], &[]);
-    c.put("energy", 0, fp, q.to_vec(), vec![], vec![], w, None);
+    c.put(
+        "energy",
+        EngineFamily::AltDiff,
+        0,
+        fp,
+        q.to_vec(),
+        vec![],
+        vec![],
+        w,
+        None,
+    );
 }
 
 /// Train the forecaster through the scheduling layer.

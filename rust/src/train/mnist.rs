@@ -1,5 +1,5 @@
 //! Image classification with an embedded QP layer (paper §5.3, Table 6,
-//! Fig. 4), on the synthetic-digits substitute for MNIST (DESIGN.md §7).
+//! Fig. 4), on the synthetic-digits substitute for MNIST (DESIGN.md §8).
 //!
 //! Network (the paper's shape at reduced scale): feature MLP → dense QP
 //! optimization layer (input = q, output = x*) → linear head → softmax.

@@ -25,13 +25,21 @@
 //!   ([`DenseAltDiff::vjp_from`](crate::altdiff::DenseAltDiff::vjp_from)
 //!   and siblings) shortens the next one the same way the primal warm
 //!   start shortens the forward pass.
-//! - [`WarmStartCache`]: an LRU map keyed by `(layer, k, fingerprint)`
-//!   with a staleness radius — a cached iterate is only handed out when
-//!   the requesting θ is within a configurable relative distance of the
-//!   θ the iterate was solved at. The coordinator consults it before
-//!   every native batched launch and writes converged iterates back
-//!   after; `nn::OptLayer` and the `train::{mnist,energy}` loops use the
-//!   same cache keyed by sample index.
+//! - [`WarmStartCache`]: an LRU map keyed by `(layer, family, k,
+//!   fingerprint)` with a staleness radius — a cached iterate is only
+//!   handed out when the requesting θ is within a configurable relative
+//!   distance of the θ the iterate was solved at. The coordinator
+//!   consults it before every native batched launch and writes
+//!   converged iterates back after; `nn::OptLayer` and the
+//!   `train::{mnist,energy}` loops use the same cache keyed by sample
+//!   index.
+//! - [`EngineFamily`] tags every cache slot with the engine family that
+//!   produced the iterate. The primal triple would be a mathematically
+//!   valid warm start across families, but the *k* it was truncated at
+//!   was calibrated against one family's convergence trajectory, and
+//!   the adjoint state is family-specific state-space — so an
+//!   ADMM-produced iterate must never seed an Alt-Diff solve (or vice
+//!   versa). Cross-family lookups are structural misses.
 //!
 //! **Forward-mode caveat.** A warm primal converges before a cold
 //! Jacobian recursion does, so warm starts compose with
@@ -107,6 +115,78 @@ impl AdjointSeed {
     /// State dimensions as `(n, p, m)`.
     pub fn dims(&self) -> (usize, usize, usize) {
         (self.z.len(), self.wl.len(), self.ws.len())
+    }
+}
+
+/// Which differentiable-solver family produced (or will consume) an
+/// iterate. The forward [`WarmStart`] triple is portable mathematics,
+/// but cached entries are routed-*k* artifacts calibrated per family,
+/// and adjoint states live in family-specific state spaces — so the
+/// cache keys on this tag and a cross-family lookup is always a miss.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EngineFamily {
+    /// The paper's Algorithm 1 (dense or sparse, single or batched).
+    AltDiff,
+    /// The consensus-form over-relaxed ADMM family
+    /// ([`AdmmQp`](crate::admm::AdmmQp) and
+    /// [`BatchedAdmm`](crate::admm::BatchedAdmm)).
+    Admm,
+}
+
+/// The ADMM family's reverse-mode resume state: the splitting-variable
+/// adjoint pair (w_z, w_u), each of length p + m — returned by
+/// [`AdmmQp::vjp_from`](crate::admm::AdmmQp::vjp_from) and
+/// [`BatchedAdmm::batch_vjp_from`](crate::admm::BatchedAdmm::batch_vjp_from).
+#[derive(Clone, Debug)]
+pub struct AdmmSeed {
+    /// Adjoint of the consensus variable z (length p + m).
+    pub wz: Vec<f64>,
+    /// Adjoint of the scaled dual u (length p + m).
+    pub wu: Vec<f64>,
+}
+
+impl AdmmSeed {
+    /// Stacked state dimension p + m.
+    pub fn dim(&self) -> usize {
+        self.wz.len()
+    }
+}
+
+/// A family-tagged adjoint resume state, as the cache stores it: the
+/// Alt-Diff and ADMM backward recursions iterate in different state
+/// spaces, so the seed carries its family and the consuming engine
+/// unwraps (and the type system rejects) the other family's state.
+#[derive(Clone, Debug)]
+pub enum EngineSeed {
+    /// An Alt-Diff adjoint state `(z, wₛ, w_λ, w_ν)`.
+    AltDiff(AdjointSeed),
+    /// An ADMM adjoint state `(w_z, w_u)`.
+    Admm(AdmmSeed),
+}
+
+impl EngineSeed {
+    /// The family whose backward produced this state.
+    pub fn family(&self) -> EngineFamily {
+        match self {
+            EngineSeed::AltDiff(_) => EngineFamily::AltDiff,
+            EngineSeed::Admm(_) => EngineFamily::Admm,
+        }
+    }
+
+    /// Consume into an Alt-Diff seed; `None` if this is ADMM state.
+    pub fn into_altdiff(self) -> Option<AdjointSeed> {
+        match self {
+            EngineSeed::AltDiff(s) => Some(s),
+            EngineSeed::Admm(_) => None,
+        }
+    }
+
+    /// Consume into an ADMM seed; `None` if this is Alt-Diff state.
+    pub fn into_admm(self) -> Option<AdmmSeed> {
+        match self {
+            EngineSeed::Admm(s) => Some(s),
+            EngineSeed::AltDiff(_) => None,
+        }
     }
 }
 
@@ -191,7 +271,7 @@ struct Entry {
     b: Vec<f64>,
     h: Vec<f64>,
     warm: WarmStart,
-    adjoint: Option<AdjointSeed>,
+    adjoint: Option<EngineSeed>,
     stamp: u64,
 }
 
@@ -210,32 +290,39 @@ fn layer_hash(layer: &str) -> u64 {
     acc
 }
 
-/// LRU warm-start cache keyed by `(layer, k, fingerprint)`.
+/// LRU warm-start cache keyed by `(layer, family, k, fingerprint)`.
 ///
 /// `k` is the routed iteration count the iterate was produced under
 /// (callers outside the serving router — `nn::OptLayer`, training
-/// loops — use `k = 0` as the "tolerance-routed" sentinel). Lookups
-/// reject entries whose stored θ is farther than the configured
-/// `radius` from the requesting θ ([`theta_distance`]), so a slot never
-/// hands out an iterate that has drifted out of usefulness; a capacity
-/// of 0 disables the cache entirely (every `get` misses, `put` is a
-/// no-op — the serving default, so cold fixed-k semantics are opt-out).
+/// loops — use `k = 0` as the "tolerance-routed" sentinel), and
+/// `family` is the [`EngineFamily`] that produced the iterate — an
+/// ADMM-produced iterate never seeds an Alt-Diff solve of the same
+/// `(layer, k, fingerprint)`, or vice versa. Lookups reject entries
+/// whose stored θ is farther than the configured `radius` from the
+/// requesting θ ([`theta_distance`]), so a slot never hands out an
+/// iterate that has drifted out of usefulness; a capacity of 0 disables
+/// the cache entirely (every `get` misses, `put` is a no-op — the
+/// serving default, so cold fixed-k semantics are opt-out).
 ///
 /// ```
-/// use altdiff::warm::{fingerprint, WarmStart, WarmStartCache};
+/// use altdiff::warm::{fingerprint, EngineFamily, WarmStart, WarmStartCache};
 ///
 /// let mut cache = WarmStartCache::new(2, 0.5);
 /// let q = vec![1.0, 2.0];
 /// let fp = fingerprint(Some(7), &q, &[], &[]);
 /// let warm = WarmStart::new(vec![0.1, 0.2], vec![], vec![0.0]);
-/// cache.put("layer", 10, fp, q.clone(), vec![], vec![], warm, None);
+/// let fam = EngineFamily::AltDiff;
+/// cache.put("layer", fam, 10, fp, q.clone(), vec![], vec![], warm, None);
 /// // same session, slightly drifted θ: within the radius → hit
-/// assert!(cache.get("layer", 10, fp, &[1.01, 2.0], &[], &[]).is_some());
+/// assert!(cache.get("layer", fam, 10, fp, &[1.01, 2.0], &[], &[]).is_some());
 /// // same slot, θ far away: stale → miss
-/// assert!(cache.get("layer", 10, fp, &[99.0, -50.0], &[], &[]).is_none());
+/// assert!(cache.get("layer", fam, 10, fp, &[99.0, -50.0], &[], &[]).is_none());
 /// // a different routed k is a different slot
-/// assert!(cache.get("layer", 20, fp, &[1.0, 2.0], &[], &[]).is_none());
-/// assert_eq!((cache.hits(), cache.misses()), (1, 2));
+/// assert!(cache.get("layer", fam, 20, fp, &[1.0, 2.0], &[], &[]).is_none());
+/// // ... and so is the other engine family
+/// let admm = EngineFamily::Admm;
+/// assert!(cache.get("layer", admm, 10, fp, &[1.0, 2.0], &[], &[]).is_none());
+/// assert_eq!((cache.hits(), cache.misses()), (1, 3));
 /// ```
 pub struct WarmStartCache {
     capacity: usize,
@@ -243,9 +330,9 @@ pub struct WarmStartCache {
     clock: u64,
     hits: u64,
     misses: u64,
-    /// keyed (layer-name hash, routed k, fingerprint) — see
-    /// [`layer_hash`] for why the name is hashed rather than cloned
-    map: HashMap<(u64, usize, u64), Entry>,
+    /// keyed (layer-name hash, engine family, routed k, fingerprint) —
+    /// see [`layer_hash`] for why the name is hashed rather than cloned
+    map: HashMap<(u64, EngineFamily, usize, u64), Entry>,
 }
 
 impl WarmStartCache {
@@ -268,25 +355,27 @@ impl WarmStartCache {
         self.capacity > 0
     }
 
-    /// Look up a warm iterate for `(layer, k, fp)` at the requesting θ.
-    /// Misses on absence, dimension mismatch, or staleness (stored θ
-    /// farther than the radius); hits bump the entry's LRU stamp and
-    /// return clones (the entry stays cached).
+    /// Look up a warm iterate for `(layer, family, k, fp)` at the
+    /// requesting θ. Misses on absence, dimension mismatch, staleness
+    /// (stored θ farther than the radius), or an entry produced by the
+    /// other engine family; hits bump the entry's LRU stamp and return
+    /// clones (the entry stays cached).
     pub fn get(
         &mut self,
         layer: &str,
+        family: EngineFamily,
         k: usize,
         fp: u64,
         q: &[f64],
         b: &[f64],
         h: &[f64],
-    ) -> Option<(WarmStart, Option<AdjointSeed>)> {
+    ) -> Option<(WarmStart, Option<EngineSeed>)> {
         if self.capacity == 0 {
             return None;
         }
         self.clock += 1;
         let clock = self.clock;
-        let key = (layer_hash(layer), k, fp);
+        let key = (layer_hash(layer), family, k, fp);
         match self.map.get_mut(&key) {
             Some(e)
                 if theta_distance(
@@ -305,29 +394,31 @@ impl WarmStartCache {
         }
     }
 
-    /// Insert (or replace) the iterate for `(layer, k, fp)`, recording
-    /// the θ it was solved at for later staleness checks. Evicts the
-    /// least-recently-used entry when over capacity. `adjoint = None`
-    /// clears any previously stored seed (solve-path writes invalidate
-    /// the adjoint state, whose gates belonged to the old forward).
+    /// Insert (or replace) the iterate for `(layer, family, k, fp)`,
+    /// recording the θ it was solved at for later staleness checks.
+    /// Evicts the least-recently-used entry when over capacity.
+    /// `adjoint = None` clears any previously stored seed (solve-path
+    /// writes invalidate the adjoint state, whose gates belonged to the
+    /// old forward).
     #[allow(clippy::too_many_arguments)]
     pub fn put(
         &mut self,
         layer: &str,
+        family: EngineFamily,
         k: usize,
         fp: u64,
         q: Vec<f64>,
         b: Vec<f64>,
         h: Vec<f64>,
         warm: WarmStart,
-        adjoint: Option<AdjointSeed>,
+        adjoint: Option<EngineSeed>,
     ) {
         if self.capacity == 0 {
             return;
         }
         self.clock += 1;
         self.map.insert(
-            (layer_hash(layer), k, fp),
+            (layer_hash(layer), family, k, fp),
             Entry { q, b, h, warm, adjoint, stamp: self.clock },
         );
         // LRU eviction by a min-stamp scan: O(capacity), but the scan
@@ -376,6 +467,9 @@ impl WarmStartCache {
 mod tests {
     use super::*;
 
+    const ALT: EngineFamily = EngineFamily::AltDiff;
+    const ADMM: EngineFamily = EngineFamily::Admm;
+
     fn warm(n: usize) -> WarmStart {
         WarmStart::new(vec![1.0; n], vec![0.5; 1], vec![0.25; 2])
     }
@@ -385,25 +479,26 @@ mod tests {
         let mut c = WarmStartCache::new(4, 0.1);
         let q = vec![1.0, 1.0];
         let fp = fingerprint(Some(3), &q, &[], &[]);
-        c.put("l", 10, fp, q.clone(), vec![], vec![], warm(2), None);
-        assert!(c.get("l", 10, fp, &[1.0, 1.0], &[], &[]).is_some());
-        assert!(c.get("l", 10, fp, &[1.05, 1.0], &[], &[]).is_some());
+        c.put("l", ALT, 10, fp, q.clone(), vec![], vec![], warm(2), None);
+        assert!(c.get("l", ALT, 10, fp, &[1.0, 1.0], &[], &[]).is_some());
+        assert!(c.get("l", ALT, 10, fp, &[1.05, 1.0], &[], &[]).is_some());
         // beyond the 0.1 relative radius
-        assert!(c.get("l", 10, fp, &[2.0, 1.0], &[], &[]).is_none());
-        // different layer / k / fingerprint: different slots
-        assert!(c.get("m", 10, fp, &q, &[], &[]).is_none());
-        assert!(c.get("l", 20, fp, &q, &[], &[]).is_none());
-        assert!(c.get("l", 10, fp ^ 1, &q, &[], &[]).is_none());
+        assert!(c.get("l", ALT, 10, fp, &[2.0, 1.0], &[], &[]).is_none());
+        // different layer / family / k / fingerprint: different slots
+        assert!(c.get("m", ALT, 10, fp, &q, &[], &[]).is_none());
+        assert!(c.get("l", ADMM, 10, fp, &q, &[], &[]).is_none());
+        assert!(c.get("l", ALT, 20, fp, &q, &[], &[]).is_none());
+        assert!(c.get("l", ALT, 10, fp ^ 1, &q, &[], &[]).is_none());
         assert_eq!(c.hits(), 2);
-        assert_eq!(c.misses(), 4);
+        assert_eq!(c.misses(), 5);
     }
 
     #[test]
     fn dimension_mismatch_is_a_miss() {
         let mut c = WarmStartCache::new(4, 10.0);
         let fp = fingerprint(Some(1), &[1.0], &[], &[]);
-        c.put("l", 0, fp, vec![1.0], vec![], vec![], warm(1), None);
-        assert!(c.get("l", 0, fp, &[1.0, 2.0], &[], &[]).is_none());
+        c.put("l", ALT, 0, fp, vec![1.0], vec![], vec![], warm(1), None);
+        assert!(c.get("l", ALT, 0, fp, &[1.0, 2.0], &[], &[]).is_none());
     }
 
     #[test]
@@ -411,15 +506,15 @@ mod tests {
         let mut c = WarmStartCache::new(2, 1.0);
         let fps: Vec<u64> =
             (0..3).map(|i| fingerprint(Some(i), &[], &[], &[])).collect();
-        c.put("l", 0, fps[0], vec![1.0], vec![], vec![], warm(1), None);
-        c.put("l", 0, fps[1], vec![1.0], vec![], vec![], warm(1), None);
+        c.put("l", ALT, 0, fps[0], vec![1.0], vec![], vec![], warm(1), None);
+        c.put("l", ALT, 0, fps[1], vec![1.0], vec![], vec![], warm(1), None);
         // touch slot 0 so slot 1 becomes the LRU
-        assert!(c.get("l", 0, fps[0], &[1.0], &[], &[]).is_some());
-        c.put("l", 0, fps[2], vec![1.0], vec![], vec![], warm(1), None);
+        assert!(c.get("l", ALT, 0, fps[0], &[1.0], &[], &[]).is_some());
+        c.put("l", ALT, 0, fps[2], vec![1.0], vec![], vec![], warm(1), None);
         assert_eq!(c.len(), 2);
-        assert!(c.get("l", 0, fps[0], &[1.0], &[], &[]).is_some());
-        assert!(c.get("l", 0, fps[1], &[1.0], &[], &[]).is_none());
-        assert!(c.get("l", 0, fps[2], &[1.0], &[], &[]).is_some());
+        assert!(c.get("l", ALT, 0, fps[0], &[1.0], &[], &[]).is_some());
+        assert!(c.get("l", ALT, 0, fps[1], &[1.0], &[], &[]).is_none());
+        assert!(c.get("l", ALT, 0, fps[2], &[1.0], &[], &[]).is_some());
     }
 
     #[test]
@@ -427,10 +522,47 @@ mod tests {
         let mut c = WarmStartCache::new(0, 1.0);
         assert!(!c.enabled());
         let fp = fingerprint(None, &[1.0], &[], &[]);
-        c.put("l", 0, fp, vec![1.0], vec![], vec![], warm(1), None);
-        assert!(c.get("l", 0, fp, &[1.0], &[], &[]).is_none());
+        c.put("l", ALT, 0, fp, vec![1.0], vec![], vec![], warm(1), None);
+        assert!(c.get("l", ALT, 0, fp, &[1.0], &[], &[]).is_none());
         assert_eq!(c.len(), 0);
         assert_eq!((c.hits(), c.misses()), (0, 0));
+    }
+
+    #[test]
+    fn cross_family_seeding_is_a_miss() {
+        // an ADMM-produced iterate must never seed an Alt-Diff solve
+        // of the same (layer, k, fingerprint) — and vice versa
+        let mut c = WarmStartCache::new(4, 10.0);
+        let q = vec![1.0, 1.0];
+        let fp = fingerprint(Some(42), &q, &[], &[]);
+        let seed = EngineSeed::Admm(AdmmSeed {
+            wz: vec![0.1, 0.2, 0.3],
+            wu: vec![0.4, 0.5, 0.6],
+        });
+        c.put(
+            "l",
+            ADMM,
+            10,
+            fp,
+            q.clone(),
+            vec![],
+            vec![],
+            warm(2),
+            Some(seed),
+        );
+        assert!(c.get("l", ALT, 10, fp, &q, &[], &[]).is_none());
+        let (_, adj) = c.get("l", ADMM, 10, fp, &q, &[], &[]).unwrap();
+        let adj = adj.expect("seed survives in its own family");
+        assert_eq!(adj.family(), ADMM);
+        // the typed unwrap rejects the wrong family too
+        assert!(adj.clone().into_altdiff().is_none());
+        let admm = adj.into_admm().expect("round trip");
+        assert_eq!(admm.dim(), 3);
+        // both slots coexist: an Alt-Diff entry does not clobber ADMM's
+        c.put("l", ALT, 10, fp, q.clone(), vec![], vec![], warm(2), None);
+        assert_eq!(c.len(), 2);
+        assert!(c.get("l", ADMM, 10, fp, &q, &[], &[]).is_some());
+        assert!(c.get("l", ALT, 10, fp, &q, &[], &[]).is_some());
     }
 
     #[test]
@@ -453,15 +585,16 @@ mod tests {
     fn put_replaces_and_adjoint_round_trips() {
         let mut c = WarmStartCache::new(2, 1.0);
         let fp = fingerprint(Some(5), &[], &[], &[]);
-        c.put("l", 0, fp, vec![1.0], vec![], vec![], warm(1), None);
-        let seed = AdjointSeed {
+        c.put("l", ALT, 0, fp, vec![1.0], vec![], vec![], warm(1), None);
+        let seed = EngineSeed::AltDiff(AdjointSeed {
             z: vec![0.5],
             ws: vec![0.1, 0.2],
             wl: vec![0.3],
             wn: vec![0.4, 0.5],
-        };
+        });
         c.put(
             "l",
+            ALT,
             0,
             fp,
             vec![1.0],
@@ -471,8 +604,11 @@ mod tests {
             Some(seed),
         );
         assert_eq!(c.len(), 1);
-        let (_, adj) = c.get("l", 0, fp, &[1.0], &[], &[]).unwrap();
-        let adj = adj.expect("adjoint seed survives");
+        let (_, adj) = c.get("l", ALT, 0, fp, &[1.0], &[], &[]).unwrap();
+        let adj = adj
+            .expect("adjoint seed survives")
+            .into_altdiff()
+            .expect("stored as Alt-Diff state");
         assert_eq!(adj.dims(), (1, 1, 2));
         assert_eq!(adj.ws, vec![0.1, 0.2]);
     }
