@@ -4,6 +4,7 @@
 //! with the native engine as fallback. Reports latency & throughput.
 //!
 //! Run: cargo run --release --example serve [--requests 200] [--workers 2]
+//!      [--shards S]
 //!      (needs `make artifacts` for the compiled path; otherwise serves
 //!       natively and says so)
 //!
@@ -71,7 +72,8 @@ fn main() {
     let mut coord = Coordinator::builder(Config {
         workers,
         max_batch: 8,
-        batch_deadline: Duration::from_millis(2),
+        batch_timeout_us: 2_000,
+        shards: args.get_usize("shards", 1),
         artifacts,
         ..Default::default()
     })

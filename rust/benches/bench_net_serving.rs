@@ -5,9 +5,12 @@
 //! end (loopback, pipelined loadgen clients) and once via direct
 //! `Coordinator::submit` calls with the same concurrency — isolating
 //! what the codec + event loop + admission control cost on top of the
-//! in-process serving stack. Reports p50/p99 round trips and
+//! in-process serving stack. A second grid drives the same bursty
+//! open-loop trace (`LoadgenOpts::burst`) against 1 vs N coordinator
+//! shards to watch the scaling path. Reports p50/p99 round trips and
 //! throughput; JSON via `util::bench::JsonReport` (`--smoke` runs a
-//! tiny grid and never writes the committed repo-root baselines).
+//! tiny grid — including the 1-vs-2-shard cell — and never writes the
+//! committed repo-root baselines).
 
 use altdiff::coordinator::{Config, Coordinator, Reply};
 use altdiff::net::{
@@ -19,11 +22,12 @@ use std::time::{Duration, Instant};
 
 const LAYER: &str = "qp16";
 
-fn coordinator(workers: usize) -> Coordinator {
+fn coordinator(workers: usize, shards: usize) -> Coordinator {
     Coordinator::builder(Config {
         workers,
         max_batch: 8,
-        batch_deadline: Duration::from_millis(2),
+        batch_timeout_us: 2_000,
+        shards,
         artifacts: None,
         ..Default::default()
     })
@@ -42,8 +46,17 @@ struct Cell {
 }
 
 /// Serve over loopback TCP, drive with the pipelined load generator.
-fn run_net(nreq: usize, window: usize, clients: usize) -> Cell {
-    let coord = coordinator(2);
+/// `shards` sizes the coordinator pool; `burst > 0` switches the
+/// loadgen to open-loop bursts of that size (the shard-scaling cells
+/// use it so arrivals are ragged rather than self-paced).
+fn run_net(
+    nreq: usize,
+    window: usize,
+    clients: usize,
+    shards: usize,
+    burst: usize,
+) -> Cell {
+    let coord = coordinator(2, shards);
     let server =
         NetServer::bind("127.0.0.1:0", coord, NetConfig::default())
             .expect("bind");
@@ -60,7 +73,9 @@ fn run_net(nreq: usize, window: usize, clients: usize) -> Cell {
             layer: LAYER.to_string(),
             tol: 1e-3,
             seed: 1,
-            sessions: false,
+            sessions: burst > 0,
+            burst,
+            ..Default::default()
         },
     )
     .expect("loadgen");
@@ -82,7 +97,7 @@ fn run_net(nreq: usize, window: usize, clients: usize) -> Cell {
 /// so threads funnel through one submit/recv owner — mirroring what
 /// the event loop does, minus the wire.
 fn run_inproc(nreq: usize, window: usize, clients: usize) -> Cell {
-    let mut coord = coordinator(2);
+    let mut coord = coordinator(2, 1);
     // same request count as run_net (the loadgen distributes the
     // remainder across clients; here the trace is one stream anyway)
     let total = nreq;
@@ -208,7 +223,7 @@ fn main() {
     for &b in &windows {
         for mode in ["net", "inproc"] {
             let cell = if mode == "net" {
-                run_net(nreq, b, clients)
+                run_net(nreq, b, clients, 1, 0)
             } else {
                 run_inproc(nreq, b, clients)
             };
@@ -239,6 +254,45 @@ fn main() {
             );
         }
     }
+    // shard-scaling cells: same bursty open-loop trace against 1 vs N
+    // coordinator shards (smoke keeps the 1-vs-2 cell so CI watches
+    // the scaling path on every push)
+    let shard_grid: Vec<usize> =
+        if smoke { vec![1, 2] } else { vec![1, 2, 4] };
+    let burst_b = 8;
+    for &s in &shard_grid {
+        let cell = run_net(nreq, burst_b, clients, s, burst_b);
+        table.row(&[
+            format!("net ×{s} shard{}", if s == 1 { "" } else { "s" }),
+            format!("{burst_b} (burst)"),
+            format!("{:.0}", cell.throughput),
+            format!("{:.0}", cell.p50_us),
+            format!("{:.0}", cell.p99_us),
+            cell.shed.to_string(),
+            cell.failed.to_string(),
+        ]);
+        assert_eq!(
+            cell.failed, 0,
+            "shards={s}: no request may fail under bursty load within \
+             the default in-flight budget"
+        );
+        let stats = Stats::from_samples(&cell.rtts);
+        report.entry(
+            &[
+                ("mode", "net-burst"),
+                ("shards", &s.to_string()),
+                ("B", &burst_b.to_string()),
+            ],
+            &stats,
+            &[
+                ("throughput_rps", cell.throughput),
+                ("p50_us", cell.p50_us),
+                ("p99_us", cell.p99_us),
+                ("shed", cell.shed as f64),
+            ],
+        );
+    }
+
     table.print();
     table.write_csv("net_serving").unwrap();
     println!("json: {}", report.write().unwrap());

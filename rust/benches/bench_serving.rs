@@ -21,7 +21,7 @@ fn run_trace(
     let mut coord = Coordinator::builder(Config {
         workers: 2,
         max_batch,
-        batch_deadline: Duration::from_millis(2),
+        batch_timeout_us: 2_000,
         artifacts,
         ..Default::default()
     })

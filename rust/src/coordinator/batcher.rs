@@ -6,18 +6,26 @@
 //! adjoint-gradient) may share an executable launch — the two families
 //! run different iterations, so a batch never mixes them. Flush policy:
 //! a batch launches when it reaches the target batch size, or when its
-//! oldest member has waited past the deadline (classic vLLM-style
+//! oldest member has waited past `batch_timeout_us` (classic vLLM-style
 //! deadline batching — latency bounded, and throughput recovers the MXU
-//! efficiency of the batched artifact).
+//! efficiency of the batched artifact). A timeout-flushed *partial*
+//! batch is an ordinary batch in every respect — same key, same routed
+//! k, same execution path — only smaller; the exact-k contract does not
+//! see the flush reason.
+//!
+//! Since the shard pool refactor each coordinator shard owns a private
+//! `Batcher` on its router thread, so this type stays single-threaded
+//! and lock-free; cross-shard effects (stealing) happen downstream on
+//! *formed* batches, never inside the batcher.
 //!
 //! Layer names are interned as `Arc<str>` on first sight, so the
 //! per-push hot path pays one map lookup and a refcount bump instead of
 //! a heap `String` clone per request.
 //!
-//! [`Batcher::pending_count`] backs the `queue_depth` gauge
-//! ([`super::Metrics::queue_depth`], refreshed by the dispatcher each
-//! loop) — the backlog signal the network front end's admission budget
-//! protects (see `net::server`).
+//! [`Batcher::pending_count`] backs the per-shard `queue_depth` gauge
+//! ([`super::ShardMetrics::queue_depth`], refreshed by each shard
+//! router) — the backlog signal the network front end's admission
+//! budget protects (see `net::server`).
 
 use super::messages::Request;
 use crate::warm::EngineFamily;
@@ -64,6 +72,13 @@ impl Batcher {
             names: BTreeSet::new(),
             pending: BTreeMap::new(),
         }
+    }
+
+    /// [`Batcher::new`] with the deadline given in microseconds — the
+    /// coordinator's `batch_timeout_us` knob (0 clamps to 1µs so a
+    /// pending partial batch always flushes on the next router pass).
+    pub fn with_timeout_us(max_batch: usize, timeout_us: u64) -> Self {
+        Batcher::new(max_batch, Duration::from_micros(timeout_us.max(1)))
     }
 
     fn intern(&mut self, layer: &str) -> Arc<str> {
@@ -147,7 +162,8 @@ impl Batcher {
         self.pending.values().map(|v| v.len()).sum()
     }
 
-    /// Earliest deadline among pending groups (for the dispatcher's sleep).
+    /// Earliest deadline among pending groups (bounds the shard
+    /// router's sleep so timeout flushes fire on time).
     pub fn next_deadline(&self) -> Option<Instant> {
         self.pending
             .values()
@@ -273,6 +289,35 @@ mod tests {
         );
         let batch = b.push(ALT, 10, req(4, "l")).unwrap();
         assert_eq!(batch.family, ALT);
+    }
+
+    #[test]
+    fn timeout_us_constructor_clamps_zero() {
+        let b = Batcher::with_timeout_us(4, 0);
+        assert_eq!(b.deadline, Duration::from_micros(1));
+        let b = Batcher::with_timeout_us(4, 2_500);
+        assert_eq!(b.deadline, Duration::from_micros(2_500));
+    }
+
+    #[test]
+    fn timeout_flush_keeps_key_and_order() {
+        // a timeout-flushed partial batch carries the same routed k and
+        // family as a full one — the exact-k contract can't see the
+        // flush reason
+        let mut b = Batcher::with_timeout_us(8, 100);
+        b.push(ADMM, 17, grad_req(3, "l"));
+        b.push(ADMM, 17, grad_req(4, "l"));
+        let later = Instant::now() + Duration::from_millis(5);
+        let flushed = b.flush_expired(later);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].k, 17);
+        assert_eq!(flushed[0].family, ADMM);
+        assert!(flushed[0].grad);
+        assert!(flushed[0].requests.len() < b.max_batch);
+        assert_eq!(
+            flushed[0].requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![3, 4]
+        );
     }
 
     #[test]

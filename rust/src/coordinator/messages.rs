@@ -173,6 +173,16 @@ impl Reply {
             Reply::Err(f) => f.id,
         }
     }
+
+    /// Failure classification of an `Err` reply; `None` on success —
+    /// reconciliation code (client-side shed/drain tallies vs server
+    /// counters) branches on this instead of matching the envelope.
+    pub fn failure_kind(&self) -> Option<FailureKind> {
+        match self {
+            Reply::Err(f) => Some(f.kind),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -195,6 +205,8 @@ mod tests {
     #[test]
     fn reply_id_covers_every_arm() {
         let f = Failure::new(7, FailureKind::Overloaded, "busy");
-        assert_eq!(Reply::Err(f).id(), 7);
+        let r = Reply::Err(f);
+        assert_eq!(r.id(), 7);
+        assert_eq!(r.failure_kind(), Some(FailureKind::Overloaded));
     }
 }

@@ -6,10 +6,52 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub const LAT_BUCKETS_US: [u64; 8] =
     [50, 100, 250, 500, 1_000, 5_000, 25_000, u64::MAX];
 
-/// Counters and latency histogram shared by dispatcher and workers.
+/// Batch-occupancy histogram buckets (requests per formed batch, upper
+/// bounds). The last bucket is +Inf.
+pub const OCC_BUCKETS: [u64; 6] = [1, 2, 4, 8, 16, u64::MAX];
+
+/// Per-shard scheduler counters. One slot per coordinator shard lives in
+/// [`Metrics::shards`]; the shard's router thread owns the gauge, the
+/// router and (for steals) sibling workers bump the counters.
+#[derive(Default)]
+pub struct ShardMetrics {
+    /// gauge: requests waiting on this shard (bounded submit queue plus
+    /// the shard batcher's pending map; refreshed by the shard router)
+    pub queue_depth: AtomicU64,
+    /// batches this shard's batcher formed (full or timeout-flushed)
+    pub batches: AtomicU64,
+    /// requests carried by those batches (occupancy numerator; summed
+    /// over shards this equals `native_elems + adjoint_elems` when no
+    /// PJRT artifacts are loaded)
+    pub elems: AtomicU64,
+    /// batches flushed by `batch_timeout_us` before reaching `max_batch`
+    pub partial_flushes: AtomicU64,
+    /// formed batches stolen *from* this shard by an idle sibling worker
+    pub steals: AtomicU64,
+    /// requests carried by stolen batches
+    pub stolen_elems: AtomicU64,
+    /// occupancy histogram over formed batches (buckets [`OCC_BUCKETS`])
+    pub occ_hist: [AtomicU64; 6],
+}
+
+impl ShardMetrics {
+    /// Record one formed batch of `elems` requests.
+    pub fn observe_batch(&self, elems: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.elems.fetch_add(elems as u64, Ordering::Relaxed);
+        for (i, &ub) in OCC_BUCKETS.iter().enumerate() {
+            if elems as u64 <= ub {
+                self.occ_hist[i].fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+    }
+}
+
+/// Counters and latency histogram shared by shard routers and workers.
 #[derive(Default)]
 pub struct Metrics {
-    /// requests accepted by the dispatcher
+    /// requests accepted by the shard routers
     pub requests: AtomicU64,
     /// successful replies sent
     pub responses: AtomicU64,
@@ -58,10 +100,14 @@ pub struct Metrics {
     /// truncation-table online corrections
     pub bumps: AtomicU64,
     /// requests shed by admission control (the network front end replies
-    /// `Failure::Overloaded` instead of queueing past its budget)
+    /// `Failure::Overloaded` instead of queueing past its budget, and a
+    /// full bounded shard queue sheds the same way)
     pub shed: AtomicU64,
-    /// gauge: requests currently waiting in the dynamic batcher (the
-    /// dispatcher refreshes it every loop iteration)
+    /// requests answered `Failure::Shutdown` because a graceful drain was
+    /// already underway when they arrived or were still queued
+    pub drained: AtomicU64,
+    /// gauge: requests currently waiting across every shard (sum of the
+    /// per-shard gauges; shard routers refresh their own slice)
     pub queue_depth: AtomicU64,
     /// gauge: requests admitted by the network front end and not yet
     /// answered (the serving in-flight budget's numerator)
@@ -69,12 +115,34 @@ pub struct Metrics {
     /// summed end-to-end latency (µs) over all responses
     pub total_latency_us: AtomicU64,
     lat_hist: [AtomicU64; 8],
+    /// per-shard scheduler counters (length = shard count, ≥ 1 when
+    /// built by a coordinator; empty under plain `Default`)
+    pub shards: Vec<ShardMetrics>,
 }
 
 impl Metrics {
-    /// All-zero metrics.
+    /// All-zero metrics with a single shard slot.
     pub fn new() -> Self {
-        Metrics::default()
+        Metrics::for_shards(1)
+    }
+
+    /// All-zero metrics with `n` shard slots (`n` clamped to ≥ 1).
+    pub fn for_shards(n: usize) -> Self {
+        Metrics {
+            shards: (0..n.max(1)).map(|_| ShardMetrics::default()).collect(),
+            ..Metrics::default()
+        }
+    }
+
+    /// Refresh the global queue-depth gauge as the sum of the per-shard
+    /// gauges. Each shard router calls this after updating its own slot.
+    pub fn refresh_queue_depth(&self) {
+        let sum: u64 = self
+            .shards
+            .iter()
+            .map(|s| s.queue_depth.load(Ordering::Relaxed))
+            .sum();
+        self.queue_depth.store(sum, Ordering::Relaxed);
     }
 
     /// Record one response's end-to-end latency (seconds).
@@ -150,7 +218,7 @@ impl Metrics {
         c(
             &mut out,
             "requests_total",
-            "requests accepted by the dispatcher",
+            "requests accepted by the shard routers",
             self.requests.load(ld),
         );
         c(
@@ -279,6 +347,12 @@ impl Metrics {
             "truncation-table online corrections",
             self.bumps.load(ld),
         );
+        c(
+            &mut out,
+            "drained_total",
+            "requests answered Shutdown during a graceful drain",
+            self.drained.load(ld),
+        );
         g(
             &mut out,
             "queue_depth",
@@ -314,16 +388,136 @@ impl Metrics {
             self.total_latency_us.load(ld)
         ));
         out.push_str(&format!("altdiff_latency_us_count {acc}\n"));
+        // per-shard scheduler series: one HELP/TYPE per family, one
+        // labeled sample per shard
+        let shard_family =
+            |out: &mut String, name: &str, help: &str, kind: &str| {
+                out.push_str(&format!(
+                    "# HELP altdiff_{name} {help}\n\
+                     # TYPE altdiff_{name} {kind}\n"
+                ));
+            };
+        shard_family(
+            &mut out,
+            "shard_queue_depth",
+            "requests waiting on this shard (queue + batcher)",
+            "gauge",
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "altdiff_shard_queue_depth{{shard=\"{i}\"}} {}\n",
+                s.queue_depth.load(ld)
+            ));
+        }
+        shard_family(
+            &mut out,
+            "shard_batches_total",
+            "batches formed by this shard's batcher",
+            "counter",
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "altdiff_shard_batches_total{{shard=\"{i}\"}} {}\n",
+                s.batches.load(ld)
+            ));
+        }
+        shard_family(
+            &mut out,
+            "shard_elems_total",
+            "requests carried by this shard's formed batches",
+            "counter",
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "altdiff_shard_elems_total{{shard=\"{i}\"}} {}\n",
+                s.elems.load(ld)
+            ));
+        }
+        shard_family(
+            &mut out,
+            "shard_partial_flush_total",
+            "batches flushed by batch_timeout_us before max_batch",
+            "counter",
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "altdiff_shard_partial_flush_total{{shard=\"{i}\"}} {}\n",
+                s.partial_flushes.load(ld)
+            ));
+        }
+        shard_family(
+            &mut out,
+            "shard_steals_total",
+            "formed batches stolen from this shard by idle siblings",
+            "counter",
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "altdiff_shard_steals_total{{shard=\"{i}\"}} {}\n",
+                s.steals.load(ld)
+            ));
+        }
+        shard_family(
+            &mut out,
+            "shard_stolen_elems_total",
+            "requests carried by stolen batches",
+            "counter",
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "altdiff_shard_stolen_elems_total{{shard=\"{i}\"}} {}\n",
+                s.stolen_elems.load(ld)
+            ));
+        }
+        shard_family(
+            &mut out,
+            "shard_batch_occupancy",
+            "requests per formed batch, per shard",
+            "histogram",
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            let mut occ_acc = 0u64;
+            for (j, &ub) in OCC_BUCKETS.iter().enumerate() {
+                occ_acc += s.occ_hist[j].load(ld);
+                let le = if ub == u64::MAX {
+                    "+Inf".to_string()
+                } else {
+                    ub.to_string()
+                };
+                out.push_str(&format!(
+                    "altdiff_shard_batch_occupancy_bucket\
+                     {{shard=\"{i}\",le=\"{le}\"}} {occ_acc}\n"
+                ));
+            }
+            out.push_str(&format!(
+                "altdiff_shard_batch_occupancy_sum{{shard=\"{i}\"}} {}\n",
+                s.elems.load(ld)
+            ));
+            out.push_str(&format!(
+                "altdiff_shard_batch_occupancy_count{{shard=\"{i}\"}} {}\n",
+                s.batches.load(ld)
+            ));
+        }
         out
     }
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
+        let steals: u64 = self
+            .shards
+            .iter()
+            .map(|s| s.steals.load(Ordering::Relaxed))
+            .sum();
+        let pflush: u64 = self
+            .shards
+            .iter()
+            .map(|s| s.partial_flushes.load(Ordering::Relaxed))
+            .sum();
         format!(
             "req={} resp={} fail={} batches={} pjrt={} native={} \
              sparse={} admm={} routed={}:{} adjoint={} native_occ={:.1} \
-             pad={} bumps={} warm={}/{} saved={} mean_lat={:.0}us \
-             p90<={}us",
+             pad={} bumps={} warm={}/{} saved={} shards={} steals={} \
+             pflush={} mean_lat={:.0}us p90<={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.failures.load(Ordering::Relaxed),
@@ -341,6 +535,9 @@ impl Metrics {
             self.warm_hits.load(Ordering::Relaxed),
             self.warm_misses.load(Ordering::Relaxed),
             self.warm_iters_saved.load(Ordering::Relaxed),
+            self.shards.len(),
+            steals,
+            pflush,
             self.mean_latency_us(),
             match self.latency_quantile_us(0.9) {
                 u64::MAX => 999_999_999, // top (unbounded) bucket
@@ -410,5 +607,76 @@ mod tests {
         m.native_elems.store(10, Ordering::Relaxed);
         assert!((m.native_batch_occupancy() - 2.5).abs() < 1e-12);
         assert!(m.summary().contains("native_occ=2.5"));
+    }
+
+    #[test]
+    fn shard_slots_and_queue_depth_roll_up() {
+        let m = Metrics::for_shards(3);
+        assert_eq!(m.shards.len(), 3);
+        m.shards[0].queue_depth.store(2, Ordering::Relaxed);
+        m.shards[2].queue_depth.store(5, Ordering::Relaxed);
+        m.refresh_queue_depth();
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 7);
+        // Metrics::new() keeps the single-shard shape
+        assert_eq!(Metrics::new().shards.len(), 1);
+        assert_eq!(Metrics::for_shards(0).shards.len(), 1);
+    }
+
+    #[test]
+    fn shard_batch_observation_fills_occupancy_histogram() {
+        let m = Metrics::for_shards(2);
+        m.shards[0].observe_batch(1); // bucket le=1
+        m.shards[0].observe_batch(3); // bucket le=4
+        m.shards[1].observe_batch(8); // bucket le=8
+        assert_eq!(m.shards[0].batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.shards[0].elems.load(Ordering::Relaxed), 4);
+        assert_eq!(m.shards[0].occ_hist[0].load(Ordering::Relaxed), 1);
+        assert_eq!(m.shards[0].occ_hist[2].load(Ordering::Relaxed), 1);
+        assert_eq!(m.shards[1].occ_hist[3].load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn render_text_carries_labeled_shard_series() {
+        let m = Metrics::for_shards(2);
+        m.shards[0].observe_batch(2);
+        m.shards[1].steals.store(4, Ordering::Relaxed);
+        m.shards[1].stolen_elems.store(9, Ordering::Relaxed);
+        m.shards[0].partial_flushes.store(1, Ordering::Relaxed);
+        m.shards[1].queue_depth.store(6, Ordering::Relaxed);
+        m.drained.store(3, Ordering::Relaxed);
+        let text = m.render_text();
+        assert!(text.contains("altdiff_drained_total 3"));
+        assert!(text.contains("altdiff_shard_queue_depth{shard=\"1\"} 6"));
+        assert!(text
+            .contains("altdiff_shard_batches_total{shard=\"0\"} 1"));
+        assert!(text.contains("altdiff_shard_elems_total{shard=\"0\"} 2"));
+        assert!(text
+            .contains("altdiff_shard_partial_flush_total{shard=\"0\"} 1"));
+        assert!(text.contains("altdiff_shard_steals_total{shard=\"1\"} 4"));
+        assert!(text
+            .contains("altdiff_shard_stolen_elems_total{shard=\"1\"} 9"));
+        // occupancy histogram: batch of 2 lands in le=2 and cumulates
+        assert!(text.contains(
+            "altdiff_shard_batch_occupancy_bucket{shard=\"0\",le=\"1\"} 0"
+        ));
+        assert!(text.contains(
+            "altdiff_shard_batch_occupancy_bucket{shard=\"0\",le=\"2\"} 1"
+        ));
+        assert!(text.contains(
+            "altdiff_shard_batch_occupancy_bucket{shard=\"0\",le=\"+Inf\"} 1"
+        ));
+        assert!(text
+            .contains("altdiff_shard_batch_occupancy_sum{shard=\"0\"} 2"));
+        assert!(text
+            .contains("altdiff_shard_batch_occupancy_count{shard=\"0\"} 1"));
+        // HELP/TYPE pairing survives the labeled families
+        assert_eq!(
+            text.matches("# HELP").count(),
+            text.matches("# TYPE").count()
+        );
+        // summary mentions the shard roll-ups
+        assert!(m.summary().contains("shards=2"));
+        assert!(m.summary().contains("steals=4"));
+        assert!(m.summary().contains("pflush=1"));
     }
 }

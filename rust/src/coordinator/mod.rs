@@ -6,10 +6,18 @@
 //! [`batcher::Batcher`] groups compatible requests; workers execute the
 //! AOT PJRT artifacts (or the native engine as fallback/oracle).
 //!
+//! The scheduler is a **shard pool** ([`server::shard_for`]): each shard
+//! owns a bounded submit queue, a router thread with a private batcher
+//! (deadline-aware — `batch_timeout_us` flushes partial batches), and a
+//! slice of the worker pool; idle workers steal formed batches from the
+//! deepest sibling shard. Per-shard counters (queue depth, steals,
+//! partial flushes, occupancy histogram) live in
+//! [`metrics::ShardMetrics`] and render in the Prometheus text.
+//!
 //! Layers registered via
 //! [`server::CoordinatorBuilder::register_routed`] carry BOTH engine
 //! families (Alt-Diff and ADMM) plus a [`truncation::EngineRouter`]
-//! calibrated from fixed-k probes of each — the dispatcher then routes
+//! calibrated from fixed-k probes of each — the shard routers then route
 //! every request to the per-tolerance winning family, observable in the
 //! [`Metrics`] router counters.
 pub mod batcher;
@@ -22,9 +30,9 @@ pub use batcher::{Batch, Batcher};
 pub use messages::{
     Failure, FailureKind, GradientResponse, Reply, Request, Response,
 };
-pub use metrics::Metrics;
+pub use metrics::{Metrics, ShardMetrics};
 pub use server::{
-    AdmmEngines, Config, Coordinator, CoordinatorBuilder, LayerEngine,
-    RegisteredLayer,
+    shard_for, AdmmEngines, Config, Coordinator, CoordinatorBuilder,
+    LayerEngine, RegisteredLayer,
 };
 pub use truncation::{EngineRouter, TruncationTable};

@@ -1,11 +1,26 @@
-//! The optimization-layer server: router → dynamic batcher → worker pool.
+//! The optimization-layer server: a sharded pool of
+//! router → dynamic batcher → worker pipelines.
 //!
 //! Topology (std threads; tokio is unavailable offline and the workload is
 //! CPU-bound anyway):
 //!
-//!   clients ──tx──▶ dispatcher ──(round-robin)──▶ worker 0..W ──▶ replies
-//!                     │ routes tol→k (truncation table)
-//!                     │ batches per (layer, k), deadline-flushed
+//! ```text
+//!   clients ──▶ shard_for(layer, session) ─┬─▶ shard 0 ─▶ workers ─▶ replies
+//!                (FNV-1a; round-robin      ├─▶ shard 1 ─▶ workers ─▶   │
+//!                 for session-less         └─▶ shard S ─▶ workers ─▶   │
+//!                 requests)                     ▲ steal oldest batch ──┘
+//! ```
+//!
+//! Each shard owns a **bounded** submit queue, a router thread with a
+//! private [`Batcher`] (tol→k via the truncation table, batches keyed per
+//! (layer, family, k, grad), flushed at `max_batch` or after
+//! `batch_timeout_us`), and a slice of the worker pool. Formed batches
+//! land on the shard's batch queue; an idle worker first drains its own
+//! shard, then **steals the oldest batch from the deepest sibling** so
+//! ragged load can't strand work behind one hot shard. Requests carrying
+//! a session key always hash to the same shard, so warm-start locality
+//! survives sharding; with `pin_cores` each worker additionally pins
+//! itself to a CPU (best effort, see [`crate::util::affinity`]).
 //!
 //! Each worker owns its own PJRT [`Engine`] (the xla handles are not Send,
 //! so engines are constructed *inside* the worker thread) and falls back
@@ -137,12 +152,35 @@ impl RegisteredLayer {
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
-    /// Worker threads (each owns its own PJRT engine).
+    /// Worker threads across the whole pool (each owns its own PJRT
+    /// engine). Distributed round-robin over the shards; effectively
+    /// raised to `shards` so every shard keeps at least one worker.
     pub workers: usize,
     /// Dynamic-batcher flush threshold.
     pub max_batch: usize,
-    /// Dynamic-batcher deadline (latency bound on partial batches).
-    pub batch_deadline: Duration,
+    /// Deadline-aware batching knob (microseconds): a partial batch
+    /// flushes when its oldest request has waited this long, instead of
+    /// holding out for `max_batch` occupancy. 0 clamps to 1µs
+    /// (flush-on-next-pass). The flush reason is invisible to the
+    /// exact-k contract — a timeout-flushed batch runs the same routed
+    /// k as a full one.
+    pub batch_timeout_us: u64,
+    /// Coordinator shards. Each shard owns a bounded submit queue, a
+    /// router thread with a private batcher, and a slice of the worker
+    /// pool; requests hash to shards by (layer, session) so warm-start
+    /// locality survives sharding. 1 (the default) reproduces the
+    /// single-dispatcher topology.
+    pub shards: usize,
+    /// Per-shard backlog bound, in requests. The submit queue sheds
+    /// (`FailureKind::Overloaded`) once the shard already holds this
+    /// many unserved requests; the shard router additionally pauses
+    /// draining while its formed-batch backlog is at the bound, so the
+    /// bound covers queued *and* batched-but-unexecuted work.
+    pub shard_queue: usize,
+    /// Pin each worker thread to a CPU (`worker_index % cores`), best
+    /// effort — placement only, never correctness (see
+    /// [`crate::util::affinity::pin_current_thread`]).
+    pub pin_cores: bool,
     /// artifact directory; None → native backend only
     pub artifacts: Option<PathBuf>,
     /// calibration tolerances for new layers
@@ -169,7 +207,10 @@ impl Default for Config {
         Config {
             workers: 2,
             max_batch: 8,
-            batch_deadline: Duration::from_millis(2),
+            batch_timeout_us: 2_000,
+            shards: 1,
+            shard_queue: 1024,
+            pin_cores: false,
             artifacts: None,
             calib_tols: vec![1e-1, 1e-2, 1e-3, 1e-4],
             warm_capacity: 0,
@@ -178,27 +219,216 @@ impl Default for Config {
     }
 }
 
-enum DispatchMsg {
-    Req(Request),
-    Shutdown,
+/// Deterministic shard routing: FNV-1a over the layer name and the
+/// session key, mod `shards`. Requests sharing (layer, session) always
+/// land on the same shard, so a warm-start session's cache entry is
+/// only ever raced by its own shard's workers. Exposed so tests and
+/// operators debugging a hot shard can predict placement.
+pub fn shard_for(layer: &str, session: u64, shards: usize) -> usize {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut hash = FNV_OFFSET;
+    for &byte in layer.as_bytes() {
+        hash ^= byte as u64;
+        hash = hash.wrapping_mul(FNV_PRIME);
+    }
+    for byte in session.to_le_bytes() {
+        hash ^= byte as u64;
+        hash = hash.wrapping_mul(FNV_PRIME);
+    }
+    (hash % shards.max(1) as u64) as usize
 }
 
-enum WorkerMsg {
-    Work(Batch),
-    Shutdown,
+/// What [`ShardQueue::push`] did with a request.
+enum PushOutcome {
+    /// Accepted; the shard router will route it.
+    Queued,
+    /// The shard is at its backlog bound — shed (Overloaded).
+    Full,
+    /// A graceful drain is underway — reject (Shutdown).
+    Draining,
+}
+
+struct ShardQueueState {
+    q: std::collections::VecDeque<Request>,
+    shutdown: bool,
+}
+
+/// One shard's bounded submit queue (clients push, the shard's router
+/// thread drains). Mutex + Condvar: the router parks here between
+/// arrivals, bounded by its batcher's next flush deadline.
+struct ShardQueue {
+    state: Mutex<ShardQueueState>,
+    cv: std::sync::Condvar,
+    cap: usize,
+}
+
+impl ShardQueue {
+    fn new(cap: usize) -> Self {
+        ShardQueue {
+            state: Mutex::new(ShardQueueState {
+                q: std::collections::VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: std::sync::Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    fn push(&self, req: Request) -> PushOutcome {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return PushOutcome::Draining;
+        }
+        if st.q.len() >= self.cap {
+            return PushOutcome::Full;
+        }
+        st.q.push_back(req);
+        drop(st);
+        self.cv.notify_one();
+        PushOutcome::Queued
+    }
+
+    /// Block up to `timeout` for arrivals, then drain the burst (batches
+    /// only form if concurrent arrivals are routed together — same
+    /// rationale as the old dispatcher's recv-then-try_recv drain).
+    /// Returns the drained requests and the shutdown flag.
+    fn pop_all(&self, timeout: Duration) -> (Vec<Request>, bool) {
+        let mut st = self.state.lock().unwrap();
+        if st.q.is_empty() && !st.shutdown {
+            let (guard, _) = self.cv.wait_timeout(st, timeout).unwrap();
+            st = guard;
+        }
+        (st.q.drain(..).collect(), st.shutdown)
+    }
+
+    /// Shutdown flag without draining (used while the router is paused
+    /// on formed-batch backpressure).
+    fn is_shutdown(&self) -> bool {
+        self.state.lock().unwrap().shutdown
+    }
+
+    fn len(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    fn begin_shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// One shard's queue of *formed* batches (router pushes, the shard's
+/// workers pop, idle sibling workers steal). `elems`/`closed` are
+/// atomics so stealers and the router's backpressure check can peek
+/// without taking the lock.
+struct BatchQueue {
+    state: Mutex<std::collections::VecDeque<Batch>>,
+    cv: std::sync::Condvar,
+    depth: std::sync::atomic::AtomicUsize,
+    elems: std::sync::atomic::AtomicUsize,
+    closed: std::sync::atomic::AtomicBool,
+}
+
+impl BatchQueue {
+    fn new() -> Self {
+        BatchQueue {
+            state: Mutex::new(std::collections::VecDeque::new()),
+            cv: std::sync::Condvar::new(),
+            depth: std::sync::atomic::AtomicUsize::new(0),
+            elems: std::sync::atomic::AtomicUsize::new(0),
+            closed: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    fn push(&self, b: Batch) {
+        use std::sync::atomic::Ordering;
+        let add = b.requests.len();
+        let mut q = self.state.lock().unwrap();
+        q.push_back(b);
+        self.depth.store(q.len(), Ordering::Release);
+        self.elems.fetch_add(add, Ordering::Release);
+        drop(q);
+        self.cv.notify_one();
+    }
+
+    /// Pop the oldest batch, waiting up to `timeout` when open+empty.
+    /// Returns immediately (None) when closed+empty.
+    fn pop_wait(&self, timeout: Duration) -> Option<Batch> {
+        use std::sync::atomic::Ordering;
+        let mut q = self.state.lock().unwrap();
+        if q.is_empty() && !self.closed.load(Ordering::Acquire) {
+            let (guard, _) = self.cv.wait_timeout(q, timeout).unwrap();
+            q = guard;
+        }
+        let b = q.pop_front();
+        self.depth.store(q.len(), Ordering::Release);
+        if let Some(batch) = &b {
+            self.elems
+                .fetch_sub(batch.requests.len(), Ordering::Release);
+        }
+        b
+    }
+
+    /// Nonblocking steal of the oldest batch; `None` when empty or when
+    /// the owner currently holds the lock (the thief just retries its
+    /// next idle cycle instead of contending).
+    fn try_steal(&self) -> Option<Batch> {
+        use std::sync::atomic::Ordering;
+        if self.depth.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let mut q = self.state.try_lock().ok()?;
+        let b = q.pop_front();
+        self.depth.store(q.len(), Ordering::Release);
+        if let Some(batch) = &b {
+            self.elems
+                .fetch_sub(batch.requests.len(), Ordering::Release);
+        }
+        b
+    }
+
+    fn depth_batches(&self) -> usize {
+        self.depth.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    fn depth_elems(&self) -> usize {
+        self.elems.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    /// Router is done (drain complete): wake every parked worker.
+    fn close(&self) {
+        self.closed.store(true, std::sync::atomic::Ordering::Release);
+        let _guard = self.state.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    fn drained(&self) -> bool {
+        use std::sync::atomic::Ordering;
+        self.closed.load(Ordering::Acquire)
+            && self.depth.load(Ordering::Acquire) == 0
+    }
 }
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
-    tx: Sender<DispatchMsg>,
+    queues: Arc<Vec<ShardQueue>>,
+    /// Kept so shed/drain replies can be issued at submit time; dropped
+    /// at the end of [`Self::shutdown`] so `recv` disconnects once every
+    /// buffered reply is consumed.
+    reply_tx: Option<Sender<Reply>>,
     reply_rx: Receiver<Reply>,
     /// Shared serving metrics (live; read any time).
     pub metrics: Arc<Metrics>,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
+    routers: Vec<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     ready: Arc<std::sync::atomic::AtomicUsize>,
     n_workers: usize,
     next_id: u64,
+    /// Round-robin cursor for session-less requests.
+    rr: u64,
     layer_dims: Vec<(String, usize, usize, usize)>,
 }
 
@@ -457,19 +687,25 @@ impl CoordinatorBuilder {
         Ok(this)
     }
 
-    /// Start dispatcher + workers.
+    /// Start the shard pool: one router thread + a slice of the worker
+    /// pool per shard.
     pub fn start(self) -> Coordinator {
-        let metrics = Arc::new(Metrics::new());
+        let shards = self.config.shards.max(1);
+        let metrics = Arc::new(Metrics::for_shards(shards));
         let layer_dims: Vec<(String, usize, usize, usize)> = self
             .layers
             .values()
             .map(|l| (l.name.clone(), l.n, l.m, l.p))
             .collect();
-        let (tx, dispatch_rx) = channel::<DispatchMsg>();
         let (reply_tx, reply_rx) = channel::<Reply>();
 
         // shared warm-start cache (None when disabled): workers consult
-        // it before each native batched launch and write back after
+        // it before each native batched launch and write back after.
+        // One Arc<Mutex> across ALL shards — session-hashed routing
+        // means a session's entry is only contended by its own shard,
+        // but the cache itself must stay correct even when stolen
+        // batches touch it from a sibling's worker (it is: every access
+        // holds the one lock for the whole batch lookup/writeback).
         let warm: Option<Arc<Mutex<WarmStartCache>>> =
             (self.config.warm_capacity > 0).then(|| {
                 Arc::new(Mutex::new(WarmStartCache::new(
@@ -478,302 +714,378 @@ impl CoordinatorBuilder {
                 )))
             });
 
-        // worker channels
+        let queues: Arc<Vec<ShardQueue>> = Arc::new(
+            (0..shards)
+                .map(|_| ShardQueue::new(self.config.shard_queue))
+                .collect(),
+        );
+        let bqueues: Arc<Vec<BatchQueue>> =
+            Arc::new((0..shards).map(|_| BatchQueue::new()).collect());
+
+        // workers, distributed round-robin over the shards (≥ 1 each)
         let ready = Arc::new(std::sync::atomic::AtomicUsize::new(0));
-        let mut worker_txs = Vec::new();
+        let total_workers = self.config.workers.max(1).max(shards);
+        let cores = crate::util::affinity::available_cores();
         let mut workers = Vec::new();
-        let n_workers = self.config.workers.max(1);
-        for wid in 0..n_workers {
-            let (wtx, wrx) = channel::<WorkerMsg>();
-            worker_txs.push(wtx);
+        let mut global_idx = 0usize;
+        for sidx in 0..shards {
+            let per_shard = total_workers / shards
+                + usize::from(sidx < total_workers % shards);
+            for widx in 0..per_shard {
+                let pin = self
+                    .config
+                    .pin_cores
+                    .then_some(global_idx % cores);
+                global_idx += 1;
+                let bqueues = bqueues.clone();
+                let layers = self.layers.clone();
+                let reply_tx = reply_tx.clone();
+                let metrics = metrics.clone();
+                let artifacts = self.config.artifacts.clone();
+                let ready = ready.clone();
+                let warm = warm.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("altdiff-worker-s{sidx}-{widx}"))
+                        .spawn(move || {
+                            shard_worker_loop(
+                                sidx, bqueues, layers, reply_tx,
+                                metrics, artifacts, ready, warm, pin,
+                            )
+                        })
+                        .expect("spawn worker"),
+                );
+            }
+        }
+        let n_workers = global_idx;
+
+        // shard routers
+        let mut routers = Vec::new();
+        for sidx in 0..shards {
+            let queues = queues.clone();
+            let bqueues = bqueues.clone();
             let layers = self.layers.clone();
-            let reply_tx = reply_tx.clone();
+            let config = self.config.clone();
             let metrics = metrics.clone();
-            let artifacts = self.config.artifacts.clone();
-            let ready = ready.clone();
-            let warm = warm.clone();
-            workers.push(
+            let reply_tx = reply_tx.clone();
+            routers.push(
                 std::thread::Builder::new()
-                    .name(format!("altdiff-worker-{wid}"))
+                    .name(format!("altdiff-shard-{sidx}"))
                     .spawn(move || {
-                        worker_loop(
-                            wrx, layers, reply_tx, metrics, artifacts,
-                            ready, warm,
+                        shard_router_loop(
+                            sidx, queues, bqueues, layers, config,
+                            metrics, reply_tx,
                         )
                     })
-                    .expect("spawn worker"),
+                    .expect("spawn shard router"),
             );
         }
 
-        // dispatcher
-        let layers = self.layers.clone();
-        let metrics_d = metrics.clone();
-        let config = self.config.clone();
-        let reply_tx_d = reply_tx;
-        let dispatcher = std::thread::Builder::new()
-            .name("altdiff-dispatcher".into())
-            .spawn(move || {
-                dispatcher_loop(
-                    dispatch_rx,
-                    worker_txs,
-                    layers,
-                    config,
-                    metrics_d,
-                    reply_tx_d,
-                )
-            })
-            .expect("spawn dispatcher");
-
         Coordinator {
-            tx,
+            queues,
+            reply_tx: Some(reply_tx),
             reply_rx,
             metrics,
-            dispatcher: Some(dispatcher),
+            routers,
             workers,
             ready,
             n_workers,
             next_id: 0,
+            rr: 0,
             layer_dims,
         }
     }
 }
 
-fn dispatcher_loop(
-    rx: Receiver<DispatchMsg>,
-    worker_txs: Vec<Sender<WorkerMsg>>,
+/// Validate + route one request: `Some((family, k, req))` when it can
+/// join a batch; `None` after an `Invalid` failure reply was sent. The
+/// routing logic is shard-independent — every shard router runs this
+/// exact path, which is what makes shard-pool results reproduce the
+/// single-dispatcher results (same table, same checked lookups).
+fn route_one(
+    req: Request,
+    layers: &BTreeMap<String, Arc<RegisteredLayer>>,
+    metrics: &Metrics,
+    reply_tx: &Sender<Reply>,
+) -> Option<(EngineFamily, usize, Request)> {
+    let Some(layer) = layers.get(&req.layer) else {
+        metrics
+            .failures
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let _ = reply_tx.send(Reply::Err(Failure {
+            id: req.id,
+            kind: FailureKind::Invalid,
+            error: format!("unknown layer '{}'", req.layer),
+        }));
+        return None;
+    };
+    // validate θ dimensions here so a malformed request becomes a
+    // Failure reply instead of panicking the worker's batched launch
+    // (and taking its whole batch down with it)
+    let bad_v = req
+        .grad_v
+        .as_ref()
+        .map(|v| v.len() != layer.n)
+        .unwrap_or(false);
+    if req.q.len() != layer.n
+        || req.b.len() != layer.p
+        || req.h.len() != layer.m
+        || bad_v
+    {
+        metrics
+            .failures
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let _ = reply_tx.send(Reply::Err(Failure {
+            id: req.id,
+            kind: FailureKind::Invalid,
+            error: format!(
+                "bad θ/v dims for layer '{}': q={} b={} h={} v={:?}, \
+                 want n={} p={} m={}",
+                req.layer,
+                req.q.len(),
+                req.b.len(),
+                req.h.len(),
+                req.grad_v.as_ref().map(|v| v.len()),
+                layer.n,
+                layer.p,
+                layer.m
+            ),
+        }));
+        return None;
+    }
+    // routed via the *checked* lookup: a tolerance tighter than
+    // everything the layer's table was calibrated for has no rung that
+    // certifies it — reject instead of silently clamping to the top
+    // rung (which would quietly serve at unknown accuracy). Dual-family
+    // layers route through the cross-method EngineRouter (tol → winning
+    // family + its rung); single-family layers keep the truncation
+    // table and their registration family.
+    let (routed, tightest) = match &layer.router {
+        Some(router) => {
+            (router.route_checked(req.tol), router.tightest_calibrated())
+        }
+        None => {
+            let table = layer.table.lock().unwrap();
+            (
+                table.k_for_checked(req.tol).map(|k| (layer.family(), k)),
+                table.tightest_calibrated(),
+            )
+        }
+    };
+    let Some((family, k)) = routed else {
+        metrics
+            .failures
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let _ = reply_tx.send(Reply::Err(Failure {
+            id: req.id,
+            kind: FailureKind::Invalid,
+            error: format!(
+                "requested tolerance {:.1e} exceeds the registered \
+                 truncation table for layer '{}' (tightest calibrated \
+                 tolerance: {}); relax the tolerance or recalibrate \
+                 the layer",
+                req.tol,
+                req.layer,
+                tightest
+                    .map_or("none".to_string(), |t| format!("{t:.1e}")),
+            ),
+        }));
+        return None;
+    };
+    // cross-method choice observability: only routed layers move these
+    // counters
+    if layer.router.is_some() {
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        match family {
+            EngineFamily::Admm => {
+                metrics.router_admm_picks.fetch_add(1, ord)
+            }
+            EngineFamily::AltDiff => {
+                metrics.router_altdiff_picks.fetch_add(1, ord)
+            }
+        };
+    }
+    Some((family, k, req))
+}
+
+/// One shard's router thread: drain the shard's bounded submit queue,
+/// route (tol→k), batch, and publish formed batches on the shard's
+/// batch queue. Pauses draining while the formed-batch backlog is at
+/// the shard's bound (backpressure: arrivals then pile into the bounded
+/// submit queue, whose overflow sheds at `submit` time), and counts
+/// every deadline flush as a partial flush — a group can only sit in
+/// the batcher with fewer than `max_batch` members, so an expired
+/// flush is partial by construction.
+fn shard_router_loop(
+    sidx: usize,
+    queues: Arc<Vec<ShardQueue>>,
+    bqueues: Arc<Vec<BatchQueue>>,
     layers: BTreeMap<String, Arc<RegisteredLayer>>,
     config: Config,
     metrics: Arc<Metrics>,
     reply_tx: Sender<Reply>,
 ) {
-    let mut batcher = Batcher::new(config.max_batch, config.batch_deadline);
-    let mut rr = 0usize;
-    let send_batch = |b: Batch, rr: &mut usize| {
-        metrics
-            .batches
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let t = &worker_txs[*rr % worker_txs.len()];
-        *rr += 1;
-        let _ = t.send(WorkerMsg::Work(b));
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    let queue = &queues[sidx];
+    let bq = &bqueues[sidx];
+    let shard_m = &metrics.shards[sidx];
+    let mut batcher =
+        Batcher::with_timeout_us(config.max_batch, config.batch_timeout_us);
+    let dispatch = |b: Batch| {
+        metrics.batches.fetch_add(1, ord);
+        shard_m.observe_batch(b.requests.len());
+        bq.push(b);
     };
-    let mut shutdown = false;
-    'outer: loop {
-        // sleep until next deadline or new message
+    loop {
+        // sleep until the next batch deadline or a new arrival
         let timeout = batcher
             .next_deadline()
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
-        // block for the first message, then DRAIN the burst: batches only
-        // form if concurrent arrivals are routed before dispatching (perf:
-        // this took the serve bench from batches-of-1 to full batches).
-        let mut msgs: Vec<DispatchMsg> = Vec::new();
-        match rx.recv_timeout(timeout) {
-            Ok(m) => {
-                msgs.push(m);
-                while let Ok(m) = rx.try_recv() {
-                    msgs.push(m);
-                }
-            }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                break 'outer;
-            }
-        }
-        for msg in msgs {
-            match msg {
-                DispatchMsg::Req(req) => {
-                    metrics
-                        .requests
-                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    match layers.get(&req.layer) {
-                        None => {
-                            metrics.failures.fetch_add(
-                                1,
-                                std::sync::atomic::Ordering::Relaxed,
-                            );
-                            let _ = reply_tx.send(Reply::Err(Failure {
-                                id: req.id,
-                                kind: FailureKind::Invalid,
-                                error: format!(
-                                    "unknown layer '{}'",
-                                    req.layer
-                                ),
-                            }));
-                        }
-                        Some(layer) => {
-                            // validate θ dimensions here so a malformed
-                            // request becomes a Failure reply instead of
-                            // panicking the worker's batched launch (and
-                            // taking its whole batch down with it)
-                            let bad_v = req
-                                .grad_v
-                                .as_ref()
-                                .map(|v| v.len() != layer.n)
-                                .unwrap_or(false);
-                            if req.q.len() != layer.n
-                                || req.b.len() != layer.p
-                                || req.h.len() != layer.m
-                                || bad_v
-                            {
-                                metrics.failures.fetch_add(
-                                    1,
-                                    std::sync::atomic::Ordering::Relaxed,
-                                );
-                                let _ = reply_tx.send(Reply::Err(Failure {
-                                    id: req.id,
-                                    kind: FailureKind::Invalid,
-                                    error: format!(
-                                        "bad θ/v dims for layer '{}': \
-                                         q={} b={} h={} v={:?}, want \
-                                         n={} p={} m={}",
-                                        req.layer,
-                                        req.q.len(),
-                                        req.b.len(),
-                                        req.h.len(),
-                                        req.grad_v
-                                            .as_ref()
-                                            .map(|v| v.len()),
-                                        layer.n,
-                                        layer.p,
-                                        layer.m
-                                    ),
-                                }));
-                                continue;
-                            }
-                            // routed via the *checked* lookup: a
-                            // tolerance tighter than everything the
-                            // layer's table was calibrated for has no
-                            // rung that certifies it — reject instead
-                            // of silently clamping to the top rung
-                            // (which would quietly serve at unknown
-                            // accuracy). Dual-family layers route
-                            // through the cross-method EngineRouter
-                            // (tol → winning family + its rung);
-                            // single-family layers keep the truncation
-                            // table and their registration family.
-                            let (routed, tightest) = match &layer.router
-                            {
-                                Some(router) => (
-                                    router.route_checked(req.tol),
-                                    router.tightest_calibrated(),
-                                ),
-                                None => {
-                                    let table =
-                                        layer.table.lock().unwrap();
-                                    (
-                                        table
-                                            .k_for_checked(req.tol)
-                                            .map(|k| {
-                                                (layer.family(), k)
-                                            }),
-                                        table.tightest_calibrated(),
-                                    )
-                                }
-                            };
-                            let Some((family, k)) = routed else {
-                                metrics.failures.fetch_add(
-                                    1,
-                                    std::sync::atomic::Ordering::Relaxed,
-                                );
-                                let _ = reply_tx.send(Reply::Err(Failure {
-                                    id: req.id,
-                                    kind: FailureKind::Invalid,
-                                    error: format!(
-                                        "requested tolerance {:.1e} \
-                                         exceeds the registered \
-                                         truncation table for layer \
-                                         '{}' (tightest calibrated \
-                                         tolerance: {}); relax the \
-                                         tolerance or recalibrate the \
-                                         layer",
-                                        req.tol,
-                                        req.layer,
-                                        tightest.map_or(
-                                            "none".to_string(),
-                                            |t| format!("{t:.1e}")
-                                        ),
-                                    ),
-                                }));
-                                continue;
-                            };
-                            // cross-method choice observability: only
-                            // routed layers move these counters
-                            if layer.router.is_some() {
-                                let ord =
-                                    std::sync::atomic::Ordering::Relaxed;
-                                match family {
-                                    EngineFamily::Admm => metrics
-                                        .router_admm_picks
-                                        .fetch_add(1, ord),
-                                    EngineFamily::AltDiff => metrics
-                                        .router_altdiff_picks
-                                        .fetch_add(1, ord),
-                                };
-                            }
-                            if let Some(b) = batcher.push(family, k, req)
-                            {
-                                send_batch(b, &mut rr);
-                            }
-                        }
-                    }
-                }
-                DispatchMsg::Shutdown => {
-                    shutdown = true;
+        let (reqs, shutdown) =
+            if bq.depth_elems() >= config.shard_queue.max(1) {
+                // formed-batch backlog at the bound: leave arrivals in
+                // the bounded submit queue until the workers catch up
+                std::thread::sleep(Duration::from_micros(100));
+                (Vec::new(), queue.is_shutdown())
+            } else {
+                queue.pop_all(timeout)
+            };
+        for req in reqs {
+            metrics.requests.fetch_add(1, ord);
+            if let Some((family, k, req)) =
+                route_one(req, &layers, &metrics, &reply_tx)
+            {
+                if let Some(b) = batcher.push(family, k, req) {
+                    dispatch(b);
                 }
             }
         }
         for b in batcher.flush_expired(Instant::now()) {
-            send_batch(b, &mut rr);
+            shard_m.partial_flushes.fetch_add(1, ord);
+            dispatch(b);
         }
-        metrics.queue_depth.store(
-            batcher.pending_count() as u64,
-            std::sync::atomic::Ordering::Relaxed,
+        shard_m.queue_depth.store(
+            (queue.len() + batcher.pending_count()) as u64,
+            ord,
         );
+        metrics.refresh_queue_depth();
         if shutdown {
             break;
         }
     }
-    // Graceful drain. Everything already routed is flushed to the
-    // workers and executes normally; anything that raced into the
-    // channel *after* the shutdown marker gets an explicit
-    // `Failure::Shutdown` reply — reply channels are never silently
-    // dropped.
-    for b in batcher.flush_all() {
-        send_batch(b, &mut rr);
-    }
-    while let Ok(msg) = rx.try_recv() {
-        if let DispatchMsg::Req(req) = msg {
-            metrics
-                .failures
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            let _ = reply_tx.send(Reply::Err(Failure {
-                id: req.id,
-                kind: FailureKind::Shutdown,
-                error: "coordinator is shutting down".to_string(),
-            }));
+    // Graceful drain. Everything accepted into the submit queue before
+    // the shutdown flag is routed (the final pop_all below catches
+    // requests left queued when the loop exited from the backpressure
+    // pause) and flushed to the batch queue; requests arriving after
+    // the flag get an explicit `Failure::Shutdown` reply at submit time
+    // — reply channels are never silently dropped.
+    let (rest, _) = queue.pop_all(Duration::ZERO);
+    for req in rest {
+        metrics.requests.fetch_add(1, ord);
+        if let Some((family, k, req)) =
+            route_one(req, &layers, &metrics, &reply_tx)
+        {
+            if let Some(b) = batcher.push(family, k, req) {
+                dispatch(b);
+            }
         }
     }
-    metrics
-        .queue_depth
-        .store(0, std::sync::atomic::Ordering::Relaxed);
-    for t in &worker_txs {
-        let _ = t.send(WorkerMsg::Shutdown);
+    for b in batcher.flush_all() {
+        dispatch(b);
+    }
+    shard_m.queue_depth.store(0, ord);
+    metrics.refresh_queue_depth();
+    bq.close();
+}
+
+/// Execute one batch and ship its replies (counting them as the old
+/// worker loop did). Shared by the owned-batch and stolen-batch paths.
+fn run_batch(
+    engine: &mut Option<Engine>,
+    batch: &Batch,
+    layers: &BTreeMap<String, Arc<RegisteredLayer>>,
+    reply_tx: &Sender<Reply>,
+    metrics: &Metrics,
+    warm: Option<&Mutex<WarmStartCache>>,
+) {
+    let layer = match layers.get(&*batch.layer) {
+        Some(l) => l.clone(),
+        None => return,
+    };
+    let replies = execute_batch(engine, &layer, batch, metrics, warm);
+    for r in replies {
+        match &r {
+            Reply::Ok(resp) => {
+                metrics
+                    .responses
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                metrics.observe_latency(resp.latency);
+            }
+            Reply::Grad(resp) => {
+                metrics
+                    .responses
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                metrics.observe_latency(resp.latency);
+            }
+            Reply::Err(_) => {
+                metrics
+                    .failures
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+        let _ = reply_tx.send(r);
     }
 }
 
-fn worker_loop(
-    rx: Receiver<WorkerMsg>,
+/// Pick the deepest sibling batch queue and steal its oldest batch.
+/// Returns the victim shard index with the batch so the thief can
+/// attribute the steal to the shard it relieved.
+fn steal_batch(
+    own: usize,
+    bqueues: &[BatchQueue],
+) -> Option<(usize, Batch)> {
+    let mut victim = None;
+    let mut deepest = 0usize;
+    for (i, q) in bqueues.iter().enumerate() {
+        if i == own {
+            continue;
+        }
+        let d = q.depth_batches();
+        if d > deepest {
+            deepest = d;
+            victim = Some(i);
+        }
+    }
+    let v = victim?;
+    bqueues[v].try_steal().map(|b| (v, b))
+}
+
+/// One worker of shard `sidx`: drain the shard's batch queue; when
+/// idle, steal the oldest batch from the deepest sibling (ragged-load
+/// relief — a formed batch executes identically on any worker, every
+/// engine is shared immutably). Exits once every shard's batch queue is
+/// closed AND empty, so workers keep helping the pool drain after
+/// their own router finished.
+#[allow(clippy::too_many_arguments)]
+fn shard_worker_loop(
+    sidx: usize,
+    bqueues: Arc<Vec<BatchQueue>>,
     layers: BTreeMap<String, Arc<RegisteredLayer>>,
     reply_tx: Sender<Reply>,
     metrics: Arc<Metrics>,
     artifacts: Option<PathBuf>,
     ready: Arc<std::sync::atomic::AtomicUsize>,
     warm: Option<Arc<Mutex<WarmStartCache>>>,
+    pin: Option<usize>,
 ) {
+    // best effort, placement-only: a false return changes nothing
+    if let Some(cpu) = pin {
+        let _ = crate::util::affinity::pin_current_thread(cpu);
+    }
     // PJRT engine is constructed inside the worker thread (not Send).
-    let mut engine: Option<Engine> = artifacts
-        .as_deref()
-        .and_then(|dir| Engine::new(dir).ok());
+    let mut engine: Option<Engine> =
+        artifacts.as_deref().and_then(|dir| Engine::new(dir).ok());
     // Eagerly compile the variants matching registered layer sizes so the
     // first request doesn't pay XLA compile latency (perf: this cut the
     // serve example's max latency from ~3.6s to the steady-state ms range).
@@ -794,42 +1106,50 @@ fn worker_loop(
         }
     }
     ready.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-    while let Ok(WorkerMsg::Work(batch)) = rx.recv() {
-        let layer = match layers.get(&*batch.layer) {
-            Some(l) => l.clone(),
-            None => continue,
-        };
-        let replies = execute_batch(
-            &mut engine,
-            &layer,
-            &batch,
-            &metrics,
-            warm.as_deref(),
-        );
-        for r in replies {
-            match &r {
-                Reply::Ok(resp) => {
-                    metrics.responses.fetch_add(
-                        1,
-                        std::sync::atomic::Ordering::Relaxed,
-                    );
-                    metrics.observe_latency(resp.latency);
-                }
-                Reply::Grad(resp) => {
-                    metrics.responses.fetch_add(
-                        1,
-                        std::sync::atomic::Ordering::Relaxed,
-                    );
-                    metrics.observe_latency(resp.latency);
-                }
-                Reply::Err(_) => {
-                    metrics.failures.fetch_add(
-                        1,
-                        std::sync::atomic::Ordering::Relaxed,
-                    );
-                }
-            }
-            let _ = reply_tx.send(r);
+    let own = &bqueues[sidx];
+    // single shard: nothing to steal, park long between arrivals (the
+    // condvar wakes us on push); sharded: short waits so idle workers
+    // notice overloaded siblings quickly
+    let idle = if bqueues.len() == 1 {
+        Duration::from_millis(50)
+    } else {
+        Duration::from_micros(200)
+    };
+    loop {
+        if let Some(batch) = own.pop_wait(idle) {
+            run_batch(
+                &mut engine,
+                &batch,
+                &layers,
+                &reply_tx,
+                &metrics,
+                warm.as_deref(),
+            );
+            continue;
+        }
+        if let Some((victim, batch)) = steal_batch(sidx, &bqueues) {
+            let ord = std::sync::atomic::Ordering::Relaxed;
+            metrics.shards[victim].steals.fetch_add(1, ord);
+            metrics.shards[victim]
+                .stolen_elems
+                .fetch_add(batch.requests.len() as u64, ord);
+            run_batch(
+                &mut engine,
+                &batch,
+                &layers,
+                &reply_tx,
+                &metrics,
+                warm.as_deref(),
+            );
+            continue;
+        }
+        if bqueues.iter().all(|q| q.drained()) {
+            break;
+        }
+        // own queue already drained but a sibling's router is still
+        // live: pop_wait returned instantly, so pace the steal polling
+        if own.drained() {
+            std::thread::sleep(idle);
         }
     }
 }
@@ -1440,17 +1760,66 @@ impl Coordinator {
         true
     }
 
+    /// Shards in the pool (≥ 1).
+    pub fn shard_count(&self) -> usize {
+        self.queues.len()
+    }
+
     /// Submit an already-built [`Request`] (the network front end's
     /// path: the request was constructed at frame-decode time and its
     /// `submitted` timestamp is preserved, so served latency includes
     /// time spent queued in the event loop's tick). The coordinator
     /// assigns and returns its own correlation id, overwriting
     /// `req.id`.
+    ///
+    /// Routing: a request with a session key lands on
+    /// `shard_for(layer, session)` — deterministic, so its warm-start
+    /// state stays on one shard; session-less requests round-robin for
+    /// load spread. A full shard sheds here with
+    /// `FailureKind::Overloaded` (retryable), and a draining one
+    /// answers `FailureKind::Shutdown`; both arrive as ordinary replies
+    /// under the returned id.
     pub fn submit_request(&mut self, mut req: Request) -> u64 {
         self.next_id += 1;
         req.id = self.next_id;
-        let _ = self.tx.send(DispatchMsg::Req(req));
-        self.next_id
+        let id = self.next_id;
+        let shard = match req.session {
+            Some(s) => shard_for(&req.layer, s, self.queues.len()),
+            None => {
+                self.rr = self.rr.wrapping_add(1);
+                (self.rr % self.queues.len() as u64) as usize
+            }
+        };
+        match self.queues[shard].push(req) {
+            PushOutcome::Queued => {}
+            PushOutcome::Full => {
+                let ord = std::sync::atomic::Ordering::Relaxed;
+                self.metrics.shed.fetch_add(1, ord);
+                self.metrics.failures.fetch_add(1, ord);
+                if let Some(tx) = &self.reply_tx {
+                    let _ = tx.send(Reply::Err(Failure {
+                        id,
+                        kind: FailureKind::Overloaded,
+                        error: format!(
+                            "shard {shard} is at its backlog bound"
+                        ),
+                    }));
+                }
+            }
+            PushOutcome::Draining => {
+                let ord = std::sync::atomic::Ordering::Relaxed;
+                self.metrics.drained.fetch_add(1, ord);
+                self.metrics.failures.fetch_add(1, ord);
+                if let Some(tx) = &self.reply_tx {
+                    let _ = tx.send(Reply::Err(Failure {
+                        id,
+                        kind: FailureKind::Shutdown,
+                        error: "coordinator is shutting down".to_string(),
+                    }));
+                }
+            }
+        }
+        id
     }
 
     /// Submit a request; returns its id. Replies arrive on [`Self::recv`].
@@ -1601,15 +1970,25 @@ impl Coordinator {
         out
     }
 
-    /// Graceful shutdown (also runs on Drop).
+    /// Graceful shutdown (also runs on Drop): flag every shard queue,
+    /// join the routers (each drains its queue, flushes its batcher,
+    /// and closes its batch queue), then join the workers (which keep
+    /// executing — and stealing — until every batch queue is drained).
+    /// Already-accepted requests are served; late arrivals get
+    /// `Failure::Shutdown` replies. Finally the coordinator's reply
+    /// sender is dropped so `recv` disconnects once the buffered
+    /// replies are consumed.
     pub fn shutdown(&mut self) {
-        let _ = self.tx.send(DispatchMsg::Shutdown);
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
+        for q in self.queues.iter() {
+            q.begin_shutdown();
+        }
+        for r in self.routers.drain(..) {
+            let _ = r.join();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        self.reply_tx = None;
     }
 }
 

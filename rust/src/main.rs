@@ -109,9 +109,15 @@ fn serve_coordinator(args: &Args) -> Coordinator {
     Coordinator::builder(Config {
         workers,
         max_batch: args.get_usize("max-batch", 8),
-        batch_deadline: Duration::from_millis(
-            args.get_usize("deadline-ms", 2) as u64,
-        ),
+        // --batch-timeout-us is the primary knob; legacy --deadline-ms
+        // still works when the new flag is absent
+        batch_timeout_us: args.get_usize(
+            "batch-timeout-us",
+            args.get_usize("deadline-ms", 2) * 1000,
+        ) as u64,
+        shards: args.get_usize("shards", 1),
+        shard_queue: args.get_usize("shard-queue", 1024),
+        pin_cores: args.get_bool("pin-cores", false),
         artifacts,
         // --warm-cache N enables cross-request warm starts (0 = the
         // cold default); pair with a loadgen running --sessions
@@ -217,7 +223,8 @@ fn cmd_loadgen(args: &Args) {
         eprintln!(
             "usage: altdiff loadgen <addr> [--requests N] [--clients C] \
              [--window W] [--grad-share F] [--layer NAME] [--tol T] \
-             [--sessions] [--stop-server]"
+             [--sessions] [--burst B] [--burst-gap-us G] \
+             [--stop-server]"
         );
         std::process::exit(2);
     };
@@ -230,6 +237,8 @@ fn cmd_loadgen(args: &Args) {
         tol: args.get_f64("tol", 1e-3),
         seed: args.get_usize("seed", 1) as u64,
         sessions: args.get_bool("sessions", false),
+        burst: args.get_usize("burst", 0),
+        burst_gap_us: args.get_usize("burst-gap-us", 2_000) as u64,
     };
     match altdiff::net::run_loadgen(addr.as_str(), &opts) {
         Ok(report) => {

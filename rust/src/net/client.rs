@@ -371,6 +371,16 @@ pub struct LoadgenOpts {
     /// `warm_hits`/`warm_misses`/`warm_iters_saved` metrics quantify
     /// the effect — see the README's cold-vs-warm comparison.
     pub sessions: bool,
+    /// Open-loop bursty arrivals: each client fires `burst` requests
+    /// back-to-back (the pipelined window is widened to at least the
+    /// burst size so the burst is not self-paced by replies), then
+    /// sleeps [`LoadgenOpts::burst_gap_us`] before the next burst. 0
+    /// (the default) keeps the classic closed-loop stream. Bursts are
+    /// what actually exercise deadline flushes and cross-shard work
+    /// stealing — steady closed-loop traffic keeps every queue shallow.
+    pub burst: usize,
+    /// Idle gap between bursts (microseconds; only with `burst > 0`).
+    pub burst_gap_us: u64,
 }
 
 impl Default for LoadgenOpts {
@@ -384,6 +394,8 @@ impl Default for LoadgenOpts {
             tol: 1e-3,
             seed: 1,
             sessions: false,
+            burst: 0,
+            burst_gap_us: 2_000,
         }
     }
 }
@@ -531,7 +543,10 @@ pub fn run_loadgen<A: ToSocketAddrs>(
             // scaling q keeps it feasible (b, h untouched)
             let qp = dense_qp(info.n, info.m, info.p, opts.seed);
             let mut rng = Pcg64::new(opts.seed ^ (c as u64 + 1));
-            let mut cl = PipelinedClient::connect(addr, opts.window)?;
+            // open-loop bursts must not be self-paced by replies: the
+            // window is widened to hold a whole burst in flight
+            let window = opts.window.max(opts.burst);
+            let mut cl = PipelinedClient::connect(addr, window)?;
             cl.set_timeout(Some(Duration::from_secs(120)))?;
             if opts.sessions {
                 // one session per connection: its θ stream drifts
@@ -539,7 +554,7 @@ pub fn run_loadgen<A: ToSocketAddrs>(
                 cl.set_session(opts.seed ^ (0x5e55 + c as u64));
             }
             let mut report = LoadgenReport::default();
-            for _ in 0..per_client {
+            for i in 0..per_client {
                 let s = 1.0 + 0.1 * rng.normal();
                 let q: Vec<f64> =
                     qp.q.iter().map(|&v| v * s).collect();
@@ -555,6 +570,11 @@ pub fn run_loadgen<A: ToSocketAddrs>(
                     opts.tol,
                 )? {
                     tally(&mut report, &t);
+                }
+                if opts.burst > 0 && (i + 1) % opts.burst == 0 {
+                    std::thread::sleep(Duration::from_micros(
+                        opts.burst_gap_us,
+                    ));
                 }
             }
             for t in cl.drain()? {

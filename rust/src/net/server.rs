@@ -336,6 +336,9 @@ impl NetServer {
                             metrics
                                 .failures
                                 .fetch_add(1, Ordering::Relaxed);
+                            metrics
+                                .drained
+                                .fetch_add(1, Ordering::Relaxed);
                             conn.push_reply(&Reply::Err(Failure::new(
                                 client_id,
                                 FailureKind::Shutdown,
@@ -438,6 +441,7 @@ fn handle_frame(
                     .metrics
                     .failures
                     .fetch_add(1, Ordering::Relaxed);
+                coord.metrics.drained.fetch_add(1, Ordering::Relaxed);
                 conn.push_reply(&Reply::Err(Failure::new(
                     peek_id,
                     FailureKind::Shutdown,
@@ -484,7 +488,11 @@ fn handle_frame(
             };
             // hand the decoded request straight to the coordinator —
             // its decode-time `submitted` stamp survives, so latency
-            // accounting starts at server-side decode as documented
+            // accounting starts at server-side decode as documented.
+            // The coordinator hashes (layer, session) to a shard (or
+            // round-robins session-less requests); a full shard queue
+            // answers Overloaded through the ordinary reply route, so
+            // coordinator-level shedding still reaches the client.
             let client_id = req.id;
             let sid = coord.submit_request(req);
             routes.insert(sid, (cid, client_id));

@@ -1,0 +1,117 @@
+//! Best-effort thread→core pinning for the sharded coordinator pool.
+//!
+//! The crate is dependency-free, so there is no `libc` to call
+//! `sched_setaffinity(2)` through. On Linux (x86_64 / aarch64) the
+//! syscall is issued directly with inline assembly — the only `unsafe`
+//! in the crate, contained to this module and exercised only when an
+//! operator opts in (`Config::pin_cores` / `serve --pin-cores`). On
+//! every other target pinning is a no-op that reports `false`, and the
+//! coordinator runs unpinned exactly as before.
+//!
+//! Pinning is *best effort by contract*: a `false` return (unsupported
+//! target, restricted cpuset, masked-out CPU) must never change
+//! behavior, only placement. Callers ignore the result except for
+//! logging.
+
+/// Number of CPUs visible to this process (≥ 1). The coordinator uses
+/// it to wrap worker→core assignment (`core = worker_index % cores`).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Pin the *calling* thread to the single CPU `cpu`. Returns `true` if
+/// the kernel accepted the affinity mask, `false` on any failure or on
+/// targets where pinning is unsupported (the thread then keeps its
+/// inherited mask — correctness is unaffected either way).
+pub fn pin_current_thread(cpu: usize) -> bool {
+    // cpu_set_t is 1024 bits on Linux: 16 × u64 words.
+    let mut mask = [0u64; 16];
+    let word = cpu / 64;
+    if word >= mask.len() {
+        return false;
+    }
+    mask[word] = 1u64 << (cpu % 64);
+    sched_setaffinity_self(&mask)
+}
+
+/// `sched_setaffinity(0, sizeof(mask), &mask)` for the calling thread
+/// (pid 0 = self), issued as a raw syscall. Returns `true` on success.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn sched_setaffinity_self(mask: &[u64; 16]) -> bool {
+    let ret: isize;
+    // SAFETY: syscall 203 (sched_setaffinity) reads `cpusetsize` bytes
+    // from the pointer in rdx and touches no other user memory; the
+    // mask outlives the call, and rcx/r11 (clobbered by `syscall`) are
+    // declared as outputs.
+    unsafe {
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 203isize => ret,
+            in("rdi") 0usize,                       // pid 0 = this thread
+            in("rsi") core::mem::size_of_val(mask), // cpusetsize
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+/// `sched_setaffinity` raw syscall, aarch64 flavor (syscall 122).
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+fn sched_setaffinity_self(mask: &[u64; 16]) -> bool {
+    let ret: isize;
+    // SAFETY: as the x86_64 variant — the kernel only reads
+    // `cpusetsize` bytes from x2 for the duration of the call.
+    unsafe {
+        core::arch::asm!(
+            "svc #0",
+            in("x8") 122usize,
+            inlateout("x0") 0usize => ret,
+            in("x1") core::mem::size_of_val(mask),
+            in("x2") mask.as_ptr(),
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+/// Unsupported targets: report failure, pin nothing.
+#[cfg(not(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+)))]
+fn sched_setaffinity_self(_mask: &[u64; 16]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn available_cores_is_positive() {
+        assert!(available_cores() >= 1);
+    }
+
+    #[test]
+    fn pinning_never_panics_and_out_of_range_fails() {
+        // cpu 0 exists on every machine; the call may still legally
+        // fail (restricted cpuset), but it must not panic, and the
+        // thread keeps working either way.
+        let _ = pin_current_thread(0);
+        assert!(!pin_current_thread(16 * 64)); // beyond cpu_set_t
+    }
+
+    #[test]
+    fn pinned_thread_still_computes() {
+        let h = std::thread::spawn(|| {
+            let _ = pin_current_thread(0);
+            (0..100u64).sum::<u64>()
+        });
+        assert_eq!(h.join().unwrap(), 4950);
+    }
+}

@@ -1,9 +1,11 @@
 //! Self-contained utilities. The offline environment lacks rand / clap /
 //! criterion / serde; these modules replace exactly what this repo needs.
+pub mod affinity;
 pub mod args;
 pub mod bench;
 pub mod rng;
 
+pub use affinity::{available_cores, pin_current_thread};
 pub use args::Args;
 pub use bench::{fmt_secs, Bencher, JsonReport, Stats, Table};
 pub use rng::Pcg64;

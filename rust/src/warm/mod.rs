@@ -32,7 +32,14 @@
 //!   consults it before every native batched launch and writes
 //!   converged iterates back after; `nn::OptLayer` and the
 //!   `train::{mnist,energy}` loops use the same cache keyed by sample
-//!   index.
+//!   index. Under the sharded coordinator one cache instance is shared
+//!   by every shard behind a single `Arc<Mutex>`, and each lookup/
+//!   write-back holds the lock across the whole batch — so concurrent
+//!   shards (and stolen batches executing on a sibling shard's worker)
+//!   stay linearizable without per-shard cache partitions. Session-
+//!   hashed routing means a given session's entries are normally
+//!   touched by exactly one shard; steals only move *where* the
+//!   write-back happens, never its key or content.
 //! - [`EngineFamily`] tags every cache slot with the engine family that
 //!   produced the iterate. The primal triple would be a mathematically
 //!   valid warm start across families, but the *k* it was truncated at

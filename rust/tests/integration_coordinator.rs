@@ -20,7 +20,7 @@ fn native_coordinator(n: usize, m: usize, p: usize) -> Coordinator {
     Coordinator::builder(Config {
         workers: 2,
         max_batch: 4,
-        batch_deadline: Duration::from_millis(1),
+        batch_timeout_us: 1_000,
         artifacts: None,
         ..Default::default()
     })
@@ -122,7 +122,7 @@ fn native_fallback_is_one_batched_launch_per_batch() {
         // generous deadline: the 8 requests below are submitted in a
         // tight loop, so they coalesce long before a flush can fire
         // even on a heavily loaded CI machine
-        batch_deadline: Duration::from_millis(200),
+        batch_timeout_us: 200_000,
         artifacts: None,
         ..Default::default()
     })
@@ -175,7 +175,7 @@ fn sparse_layer_batches_run_on_the_sparse_engine() {
     let mut c = Coordinator::builder(Config {
         workers: 1,
         max_batch: 8,
-        batch_deadline: Duration::from_millis(200),
+        batch_timeout_us: 200_000,
         artifacts: None,
         ..Default::default()
     })
@@ -232,7 +232,7 @@ fn dense_and_sparse_layers_coexist() {
     let mut c = Coordinator::builder(Config {
         workers: 2,
         max_batch: 4,
-        batch_deadline: Duration::from_millis(1),
+        batch_timeout_us: 1_000,
         artifacts: None,
         ..Default::default()
     })
@@ -287,7 +287,7 @@ fn pjrt_backend_serves_compiled_sizes() {
     let mut c = Coordinator::builder(Config {
         workers: 1,
         max_batch: 8,
-        batch_deadline: Duration::from_millis(1),
+        batch_timeout_us: 1_000,
         artifacts: Some(dir),
         ..Default::default()
     })
@@ -329,7 +329,7 @@ fn pjrt_and_native_agree_through_coordinator() {
         Coordinator::builder(Config {
             workers: 1,
             max_batch: 1,
-            batch_deadline: Duration::from_millis(1),
+            batch_timeout_us: 1_000,
             artifacts,
             ..Default::default()
         })
@@ -415,7 +415,7 @@ fn grad_and_solve_requests_share_the_server_but_not_batches() {
     let mut c = Coordinator::builder(Config {
         workers: 1,
         max_batch: 4,
-        batch_deadline: Duration::from_millis(5),
+        batch_timeout_us: 5_000,
         artifacts: None,
         ..Default::default()
     })

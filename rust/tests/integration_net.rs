@@ -23,7 +23,7 @@ fn test_coordinator() -> Coordinator {
     Coordinator::builder(Config {
         workers: 2,
         max_batch: 4,
-        batch_deadline: Duration::from_millis(1),
+        batch_timeout_us: 1_000,
         artifacts: None,
         ..Default::default()
     })

@@ -420,7 +420,7 @@ fn coordinator_session_requests_hit_the_warm_cache() {
     let mut c = Coordinator::builder(Config {
         workers: 1,
         max_batch: 1,
-        batch_deadline: Duration::from_millis(1),
+        batch_timeout_us: 1_000,
         artifacts: None,
         warm_capacity: 64,
         warm_radius: 0.5,
@@ -478,7 +478,7 @@ fn wire_session_key_warms_across_requests() {
     let coord = Coordinator::builder(Config {
         workers: 1,
         max_batch: 1,
-        batch_deadline: Duration::from_millis(1),
+        batch_timeout_us: 1_000,
         artifacts: None,
         warm_capacity: 64,
         warm_radius: 0.5,

@@ -1,0 +1,587 @@
+//! Cross-shard parity & stress suite for the sharded coordinator pool.
+//!
+//! The shard-pool scheduler (bounded per-shard queues, deadline-aware
+//! batching, work stealing) must be invisible to the serving contract:
+//! the same request trace answered by 1, 2, or 4 shards produces the
+//! same numbers (to 1e-8), no reply is ever lost — not under shedding,
+//! not under graceful drain — and the new per-shard counters reconcile
+//! exactly with the global execution counters. Each test here pins one
+//! of those claims; `ragged_load_*` additionally forces the scheduler
+//! into its interesting regime (one hot shard, idle siblings) and
+//! demands observable steals and partial flushes.
+
+use altdiff::coordinator::{
+    shard_for, Config, Coordinator, FailureKind, Reply,
+};
+use altdiff::prob::dense_qp;
+use altdiff::util::Pcg64;
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering::Relaxed;
+use std::time::Duration;
+
+const TOLS: [f64; 3] = [1e-1, 1e-2, 1e-3];
+
+/// Receive exactly `n` replies, panicking on duplicates or on a lost
+/// reply (timeout) — the zero-lost-replies contract every stress
+/// scenario asserts.
+fn collect_replies(c: &Coordinator, n: usize) -> BTreeMap<u64, Reply> {
+    let mut got = BTreeMap::new();
+    while got.len() < n {
+        let reply = c
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|| {
+                panic!("lost replies: {}/{} received", got.len(), n)
+            });
+        assert!(
+            got.insert(reply.id(), reply).is_none(),
+            "duplicate reply id"
+        );
+    }
+    got
+}
+
+/// Identical two-layer registration (one Alt-Diff dense layer, one
+/// ADMM-family layer) over `shards` coordinator shards.
+fn two_family_pool(shards: usize) -> Coordinator {
+    Coordinator::builder(Config {
+        workers: 4,
+        max_batch: 4,
+        batch_timeout_us: 1_000,
+        shards,
+        artifacts: None,
+        ..Default::default()
+    })
+    .register("d12", dense_qp(12, 6, 3, 9), 1.0)
+    .unwrap()
+    .register_admm("a10", dense_qp(10, 5, 2, 3), 1.0)
+    .unwrap()
+    .start()
+}
+
+/// Deterministic mixed trace: both layers, both request kinds, sessioned
+/// and session-less, three tolerances. Returns submitted ids in order
+/// (coordinators assign ids sequentially, so the same trace yields the
+/// same id→request mapping on every pool).
+fn submit_mixed_trace(c: &mut Coordinator, n: usize) -> Vec<u64> {
+    let d12 = dense_qp(12, 6, 3, 9);
+    let a10 = dense_qp(10, 5, 2, 3);
+    let mut rng = Pcg64::new(42);
+    let mut ids = Vec::with_capacity(n);
+    for i in 0..n {
+        let tol = TOLS[i % TOLS.len()];
+        let admm = i % 3 == 2;
+        let (layer, qp, dim) =
+            if admm { ("a10", &a10, 10) } else { ("d12", &d12, 12) };
+        let s = 1.0 + 0.05 * rng.normal();
+        let q: Vec<f64> = qp.q.iter().map(|&v| v * s).collect();
+        let grad = i % 4 == 1;
+        let session = (i % 3 == 0).then_some((i % 5) as u64);
+        let id = match (grad, session) {
+            (false, None) => {
+                c.submit(layer, q, qp.b.clone(), qp.h.clone(), tol)
+            }
+            (false, Some(sk)) => c.submit_session(
+                layer,
+                q,
+                qp.b.clone(),
+                qp.h.clone(),
+                tol,
+                sk,
+            ),
+            (true, None) => c.submit_grad(
+                layer,
+                q,
+                qp.b.clone(),
+                qp.h.clone(),
+                vec![1.0; dim],
+                tol,
+            ),
+            (true, Some(sk)) => c.submit_grad_session(
+                layer,
+                q,
+                qp.b.clone(),
+                qp.h.clone(),
+                vec![1.0; dim],
+                tol,
+                sk,
+            ),
+        };
+        ids.push(id);
+    }
+    ids
+}
+
+fn assert_vec_close(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() < 1e-8,
+            "{what}[{i}]: {x} vs {y} (diff {:.2e})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[test]
+fn shard_routing_is_deterministic_and_covers_all_shards() {
+    // same (layer, session) → same shard, every time
+    for s in [1usize, 2, 4, 7] {
+        for session in 0..64u64 {
+            let a = shard_for("qp16", session, s);
+            assert_eq!(a, shard_for("qp16", session, s));
+            assert!(a < s);
+        }
+    }
+    // varying sessions reach every shard (no dead shard under FNV-1a)
+    for s in [2usize, 4] {
+        let hit: std::collections::BTreeSet<usize> =
+            (0..256u64).map(|k| shard_for("qp16", k, s)).collect();
+        assert_eq!(hit.len(), s, "{s}-shard routing left a shard cold");
+    }
+    // layer name participates in the hash
+    assert!(
+        (0..64u64)
+            .any(|k| shard_for("a", k, 4) != shard_for("b", k, 4)),
+        "layer name ignored by the routing hash"
+    );
+}
+
+/// The tentpole acceptance criterion: the same mixed trace served by
+/// 1, 2, and 4 shards is numerically identical per request (x, ∂x/∂b,
+/// gradients, and the routed k) to 1e-8 — batch composition may differ
+/// (and does), results may not. Every reply arrives exactly once.
+#[test]
+fn cross_shard_parity_zero_lost_replies() {
+    const N: usize = 36;
+    let run = |shards: usize| -> BTreeMap<u64, Reply> {
+        let mut c = two_family_pool(shards);
+        assert_eq!(c.shard_count(), shards);
+        let ids = submit_mixed_trace(&mut c, N);
+        let replies = collect_replies(&c, N);
+        for id in &ids {
+            assert!(replies.contains_key(id), "id {id} unanswered");
+        }
+        replies
+    };
+    let base = run(1);
+    for shards in [2usize, 4] {
+        let pool = run(shards);
+        for (id, want) in &base {
+            match (want, &pool[id]) {
+                (Reply::Ok(a), Reply::Ok(b)) => {
+                    assert_eq!(
+                        a.k_used, b.k_used,
+                        "id {id}: routed k diverged at {shards} shards"
+                    );
+                    assert_vec_close(&a.x, &b.x, "x");
+                    assert_vec_close(&a.jx, &b.jx, "jx");
+                }
+                (Reply::Grad(a), Reply::Grad(b)) => {
+                    assert_eq!(a.k_used, b.k_used, "id {id}: k diverged");
+                    assert_vec_close(&a.x, &b.x, "grad x");
+                    assert_vec_close(&a.grad_q, &b.grad_q, "grad_q");
+                    assert_vec_close(&a.grad_b, &b.grad_b, "grad_b");
+                    assert_vec_close(&a.grad_h, &b.grad_h, "grad_h");
+                }
+                (a, b) => panic!(
+                    "id {id}: reply kind diverged across shard counts \
+                     ({a:?} vs {b:?})"
+                ),
+            }
+        }
+    }
+}
+
+/// Deadline-aware batching property: a timeout-flushed *partial* batch
+/// runs the same routed k and produces the same numbers as the same
+/// requests served in full batches — the exact-k contract cannot see
+/// the flush reason. The partial-flush counter proves the timeout path
+/// actually fired.
+#[test]
+fn deadline_flush_preserves_exact_k_and_results() {
+    let qp = dense_qp(12, 6, 3, 9);
+    let thetas: Vec<Vec<f64>> = (0..3)
+        .map(|i| {
+            qp.q.iter().map(|&v| v * (1.0 + 0.02 * i as f64)).collect()
+        })
+        .collect();
+    let run = |max_batch: usize, timeout_us: u64| {
+        let mut c = Coordinator::builder(Config {
+            workers: 1,
+            max_batch,
+            batch_timeout_us: timeout_us,
+            artifacts: None,
+            ..Default::default()
+        })
+        .register("d12", qp.clone(), 1.0)
+        .unwrap()
+        .start();
+        for q in &thetas {
+            c.submit("d12", q.clone(), qp.b.clone(), qp.h.clone(), 1e-3);
+        }
+        let replies = collect_replies(&c, thetas.len());
+        let pflush: u64 = c
+            .metrics
+            .shards
+            .iter()
+            .map(|s| s.partial_flushes.load(Relaxed))
+            .sum();
+        (replies, pflush)
+    };
+    // 3 requests can never fill max_batch=8: only the 500µs deadline
+    // can flush them. max_batch=3 with a generous deadline serves the
+    // same θ in full (push-flushed) batches.
+    let (partial, pflush) = run(8, 500);
+    let (full, _) = run(3, 200_000);
+    assert!(pflush >= 1, "no partial flush recorded at max_batch=8");
+    for (id, reply) in &partial {
+        let (Reply::Ok(p), Reply::Ok(f)) = (reply, &full[id]) else {
+            panic!("expected solve replies");
+        };
+        assert!(
+            p.batch_size < 8,
+            "a 3-request trace cannot fill an 8-slot batch"
+        );
+        assert_eq!(
+            p.k_used, f.k_used,
+            "timeout flush changed the routed iteration count"
+        );
+        assert_vec_close(&p.x, &f.x, "x (partial vs full batch)");
+        assert_vec_close(&p.jx, &f.jx, "jx (partial vs full batch)");
+    }
+}
+
+/// Ragged load: every request hashes to shard 0 (hot), shard 1 idle.
+/// Shard 1's workers must steal formed batches from shard 0, the lone
+/// odd-tolerance straggler must flush by deadline, and the per-shard
+/// elems counters must reconcile exactly with the native execution
+/// counters — stealing moves work, never double-counts it.
+#[test]
+fn ragged_load_steals_partial_flushes_and_sum_consistency() {
+    const SHARDS: usize = 2;
+    let qp = dense_qp(64, 32, 12, 2);
+    let mut c = Coordinator::builder(Config {
+        workers: 4,
+        max_batch: 4,
+        batch_timeout_us: 1_000,
+        shards: SHARDS,
+        artifacts: None,
+        ..Default::default()
+    })
+    .register("d64", qp.clone(), 1.0)
+    .unwrap()
+    .start();
+    // session keys that all route to shard 0
+    let hot: Vec<u64> = (0..1024u64)
+        .filter(|&s| shard_for("d64", s, SHARDS) == 0)
+        .take(8)
+        .collect();
+    assert!(!hot.is_empty());
+    let steals = |c: &Coordinator| -> u64 {
+        c.metrics.shards.iter().map(|s| s.steals.load(Relaxed)).sum()
+    };
+    // waves until a steal is observed (virtually always the first wave:
+    // shard 1's workers poll for steal targets every 200µs while shard
+    // 0's queue holds several n=64 batches)
+    for wave in 0..6 {
+        if wave > 0 && steals(&c) >= 1 {
+            break;
+        }
+        for i in 0..32usize {
+            let s = 1.0 + 0.01 * i as f64;
+            let q: Vec<f64> = qp.q.iter().map(|&v| v * s).collect();
+            let session = hot[i % hot.len()];
+            if i % 8 == 7 {
+                c.submit_grad_session(
+                    "d64",
+                    q,
+                    qp.b.clone(),
+                    qp.h.clone(),
+                    vec![1.0; 64],
+                    1e-3,
+                    session,
+                );
+            } else {
+                c.submit_session(
+                    "d64",
+                    q,
+                    qp.b.clone(),
+                    qp.h.clone(),
+                    1e-3,
+                    session,
+                );
+            }
+        }
+        // lone straggler at a different tolerance: its (layer, k) group
+        // can never reach max_batch, so only the deadline can flush it
+        c.submit_session(
+            "d64",
+            qp.q.clone(),
+            qp.b.clone(),
+            qp.h.clone(),
+            1e-1,
+            hot[0],
+        );
+        let replies = collect_replies(&c, 33);
+        assert!(replies.values().all(|r| r.failure_kind().is_none()));
+        for r in replies.values() {
+            if let Reply::Ok(ok) = r {
+                assert!(ok.x.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+    let m = &c.metrics;
+    assert!(
+        steals(&c) >= 1,
+        "no work steal observed under a 100% hot-shard load"
+    );
+    let pflush: u64 = m
+        .shards
+        .iter()
+        .map(|s| s.partial_flushes.load(Relaxed))
+        .sum();
+    assert!(pflush >= 1, "straggler never flushed by deadline");
+    // the idle shard formed nothing; everything it served was stolen
+    assert_eq!(m.shards[1].batches.load(Relaxed), 0);
+    assert_eq!(m.shards[1].elems.load(Relaxed), 0);
+    // sum consistency: every request flowed through exactly one formed
+    // batch on exactly one shard, and every formed batch was executed
+    // natively (no artifacts loaded) — stolen batches count for the
+    // shard that formed them
+    let shard_elems: u64 =
+        m.shards.iter().map(|s| s.elems.load(Relaxed)).sum();
+    let executed =
+        m.native_elems.load(Relaxed) + m.adjoint_elems.load(Relaxed);
+    assert_eq!(shard_elems, executed, "stolen work double-counted");
+    let shard_batches: u64 =
+        m.shards.iter().map(|s| s.batches.load(Relaxed)).sum();
+    assert_eq!(shard_batches, m.batches.load(Relaxed));
+    for s in &m.shards {
+        assert!(s.steals.load(Relaxed) <= s.batches.load(Relaxed));
+        assert!(s.stolen_elems.load(Relaxed) <= s.elems.load(Relaxed));
+        assert!(
+            s.partial_flushes.load(Relaxed) <= s.batches.load(Relaxed)
+        );
+    }
+}
+
+/// Shedding reconciliation: a tiny shard queue plus slow heavy batches
+/// forces coordinator-level shedding. Every submitted request is
+/// answered exactly once — `Overloaded` for the shed ones — and the
+/// client-side tally matches the server's `shed` counter exactly.
+/// After `shutdown`, late submits are counted by `drained` and produce
+/// no reply (the reply channel is already disconnected).
+#[test]
+fn shed_replies_reconcile_with_metrics_and_drain_accounting() {
+    const SHARDS: usize = 2;
+    let qp = dense_qp(64, 32, 12, 2);
+    let mut c = Coordinator::builder(Config {
+        workers: 2,
+        max_batch: 1,
+        batch_timeout_us: 1_000,
+        shards: SHARDS,
+        shard_queue: 2,
+        artifacts: None,
+        ..Default::default()
+    })
+    .register("d64", qp.clone(), 1.0)
+    .unwrap()
+    .start();
+    c.wait_ready(Duration::from_secs(60));
+    let hot = (0..1024u64)
+        .find(|&s| shard_for("d64", s, SHARDS) == 0)
+        .unwrap();
+    const N: usize = 64;
+    for i in 0..N {
+        let s = 1.0 + 0.01 * i as f64;
+        c.submit_session(
+            "d64",
+            qp.q.iter().map(|&v| v * s).collect(),
+            qp.b.clone(),
+            qp.h.clone(),
+            1e-3,
+            hot,
+        );
+    }
+    let replies = collect_replies(&c, N);
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    for r in replies.values() {
+        match r.failure_kind() {
+            None => served += 1,
+            Some(FailureKind::Overloaded) => shed += 1,
+            Some(k) => panic!("unexpected failure kind {k:?}"),
+        }
+    }
+    assert_eq!(served + shed, N as u64, "request lost under shedding");
+    assert!(
+        shed >= 1,
+        "64 rapid heavy submits against a 2-deep shard queue must shed"
+    );
+    assert_eq!(
+        c.metrics.shed.load(Relaxed),
+        shed,
+        "server shed counter disagrees with client Overloaded tally"
+    );
+    assert_eq!(c.metrics.responses.load(Relaxed), served);
+    // graceful drain: late submits are refused, counted, and get no
+    // reply — the channel disconnected when the last buffered reply
+    // (already consumed above) was taken
+    c.shutdown();
+    for _ in 0..3 {
+        c.submit(
+            "d64",
+            qp.q.clone(),
+            qp.b.clone(),
+            qp.h.clone(),
+            1e-3,
+        );
+    }
+    assert_eq!(c.metrics.drained.load(Relaxed), 3);
+    assert!(c.try_recv().is_none());
+    assert!(c.recv_timeout(Duration::from_millis(50)).is_none());
+}
+
+/// Warm-start sessions survive sharding: a session's repeated gradient
+/// solves hash to one shard, hit the shared cache after the first
+/// solve, and the hit/miss tally covers every adjoint element exactly
+/// once.
+#[test]
+fn warm_sessions_survive_sharding() {
+    let qp = dense_qp(12, 6, 3, 9);
+    let mut c = Coordinator::builder(Config {
+        workers: 4,
+        max_batch: 4,
+        batch_timeout_us: 500,
+        shards: 2,
+        warm_capacity: 32,
+        artifacts: None,
+        ..Default::default()
+    })
+    .register("d12", qp.clone(), 1.0)
+    .unwrap()
+    .start();
+    const ROUNDS: usize = 5;
+    for _ in 0..ROUNDS {
+        // sequential (wait for each reply): every solve after the first
+        // finds the session's written-back iterate
+        c.submit_grad_session(
+            "d12",
+            qp.q.clone(),
+            qp.b.clone(),
+            qp.h.clone(),
+            vec![1.0; 12],
+            1e-3,
+            7,
+        );
+        match c.recv_timeout(Duration::from_secs(60)).expect("reply") {
+            Reply::Grad(g) => {
+                assert!(g.grad_q.iter().all(|v| v.is_finite()))
+            }
+            other => panic!("expected grad reply, got {other:?}"),
+        }
+    }
+    let hits = c.metrics.warm_hits.load(Relaxed);
+    let misses = c.metrics.warm_misses.load(Relaxed);
+    assert!(hits >= 1, "repeat session solves never hit the warm cache");
+    assert_eq!(
+        hits + misses,
+        c.metrics.adjoint_elems.load(Relaxed),
+        "every adjoint element does exactly one cache lookup"
+    );
+}
+
+/// Randomized mixed trace over 4 shards: the per-shard counters are
+/// monotone while the pool runs, and at quiescence they reconcile with
+/// the global execution counters (elems, batches, occupancy
+/// histogram).
+#[test]
+fn randomized_trace_counters_monotone_and_reconciled() {
+    const N: usize = 60;
+    let mut c = two_family_pool(4);
+    let mut rng = Pcg64::new(7);
+    // interleave submission with a mid-flight snapshot
+    let d12 = dense_qp(12, 6, 3, 9);
+    for i in 0..N {
+        let s = 1.0 + 0.05 * rng.normal();
+        let q: Vec<f64> = d12.q.iter().map(|&v| v * s).collect();
+        let tol = TOLS[rng.below(TOLS.len())];
+        if rng.uniform() < 0.3 {
+            c.submit_grad(
+                "d12",
+                q,
+                d12.b.clone(),
+                d12.h.clone(),
+                vec![1.0; 12],
+                tol,
+            );
+        } else if rng.uniform() < 0.5 {
+            c.submit_session(
+                "d12",
+                q,
+                d12.b.clone(),
+                d12.h.clone(),
+                tol,
+                (i % 9) as u64,
+            );
+        } else {
+            c.submit("d12", q, d12.b.clone(), d12.h.clone(), tol);
+        }
+    }
+    let snapshot = |c: &Coordinator| -> Vec<u64> {
+        let m = &c.metrics;
+        let mut v = vec![
+            m.requests.load(Relaxed),
+            m.responses.load(Relaxed),
+            m.batches.load(Relaxed),
+            m.native_elems.load(Relaxed),
+            m.adjoint_elems.load(Relaxed),
+        ];
+        for s in &m.shards {
+            v.push(s.batches.load(Relaxed));
+            v.push(s.elems.load(Relaxed));
+            v.push(s.partial_flushes.load(Relaxed));
+            v.push(s.steals.load(Relaxed));
+            v.push(s.stolen_elems.load(Relaxed));
+        }
+        v
+    };
+    // take a snapshot after roughly half the replies, then drain
+    let mut got = 0usize;
+    let mut mid: Option<Vec<u64>> = None;
+    while got < N {
+        let r = c
+            .recv_timeout(Duration::from_secs(120))
+            .expect("lost reply in randomized trace");
+        assert!(r.failure_kind().is_none());
+        got += 1;
+        if got == N / 2 {
+            mid = Some(snapshot(&c));
+        }
+    }
+    let fin = snapshot(&c);
+    for (i, (a, b)) in mid.unwrap().iter().zip(&fin).enumerate() {
+        assert!(a <= b, "counter {i} went backwards ({a} → {b})");
+    }
+    let m = &c.metrics;
+    let shard_elems: u64 =
+        m.shards.iter().map(|s| s.elems.load(Relaxed)).sum();
+    assert_eq!(
+        shard_elems,
+        m.native_elems.load(Relaxed) + m.adjoint_elems.load(Relaxed)
+    );
+    let shard_batches: u64 =
+        m.shards.iter().map(|s| s.batches.load(Relaxed)).sum();
+    assert_eq!(shard_batches, m.batches.load(Relaxed));
+    for s in &m.shards {
+        let hist: u64 =
+            s.occ_hist.iter().map(|b| b.load(Relaxed)).sum();
+        assert_eq!(
+            hist,
+            s.batches.load(Relaxed),
+            "occupancy histogram must count every formed batch once"
+        );
+        assert!(s.stolen_elems.load(Relaxed) <= s.elems.load(Relaxed));
+    }
+    assert_eq!(m.responses.load(Relaxed), N as u64);
+}
