@@ -190,6 +190,8 @@ mod tests {
             tol: 1e-3,
             grad_v: None,
             session: None,
+            priority: super::super::messages::Priority::Normal,
+            deadline_us: None,
             submitted: Instant::now(),
         }
     }

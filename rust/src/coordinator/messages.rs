@@ -1,6 +1,64 @@
 //! Request/response types of the optimization-layer server.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Request priority class. Under admission or queue pressure the
+/// traffic plane sheds strictly in priority order — [`Priority::Low`]
+/// sheds before [`Priority::Normal`] before [`Priority::High`] — by
+/// giving each class a graduated slice of the relevant budget (see
+/// `net::server` admission and the coordinator's shard queues). The
+/// declaration order gives `High < Normal < Low`, so the derived `Ord`
+/// sorts by *shedding preference* (greater = shed sooner).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-critical traffic: sheds last, full budgets.
+    High,
+    /// The default class (wire-compatible with pre-priority clients).
+    #[default]
+    Normal,
+    /// Best-effort traffic: first to shed under pressure.
+    Low,
+}
+
+impl Priority {
+    /// Every class, in shedding order (High last).
+    pub const ALL: [Priority; 3] =
+        [Priority::High, Priority::Normal, Priority::Low];
+
+    /// Stable wire tag (see `net::proto`).
+    pub fn code(self) -> u8 {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    /// Inverse of [`Priority::code`]; `None` on an unknown tag (the
+    /// codec maps that to a `Protocol` error, never a panic).
+    pub fn from_code(c: u8) -> Option<Self> {
+        match c {
+            0 => Some(Priority::High),
+            1 => Some(Priority::Normal),
+            2 => Some(Priority::Low),
+            _ => None,
+        }
+    }
+
+    /// Metric-label form ("high" | "normal" | "low").
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    /// Index into per-class counter arrays (== `code()` as usize).
+    pub fn idx(self) -> usize {
+        self.code() as usize
+    }
+}
 
 /// A differentiation request against a registered layer.
 #[derive(Clone, Debug)]
@@ -33,6 +91,18 @@ pub struct Request {
     /// Remote callers set it per connection (see
     /// [`crate::net::PipelinedClient::set_session`]).
     pub session: Option<u64>,
+    /// Priority class: decides shedding order under pressure (Low
+    /// first), never execution order — admitted requests batch and
+    /// execute identically whatever their class.
+    pub priority: Priority,
+    /// Optional per-request deadline budget in microseconds, measured
+    /// from `submitted`. An expired request is shed with
+    /// [`FailureKind::DeadlineExceeded`] at the next checkpoint
+    /// (admission, batch formation, pre-execution) instead of consuming
+    /// a solve — principled by the paper's truncation bound: work that
+    /// can no longer be useful is dropped, work that can is untouched.
+    /// `None` (the wire default) never expires.
+    pub deadline_us: Option<u32>,
     /// submission timestamp (end-to-end latency accounting)
     pub submitted: Instant,
 }
@@ -41,6 +111,23 @@ impl Request {
     /// True when this is an adjoint (gradient) request.
     pub fn is_grad(&self) -> bool {
         self.grad_v.is_some()
+    }
+
+    /// True when the request's deadline budget has elapsed at `now`
+    /// (always false without a deadline).
+    pub fn expired_at(&self, now: Instant) -> bool {
+        match self.deadline_us {
+            Some(us) => {
+                now.duration_since(self.submitted)
+                    >= Duration::from_micros(us as u64)
+            }
+            None => false,
+        }
+    }
+
+    /// [`Self::expired_at`] against `Instant::now()`.
+    pub fn expired(&self) -> bool {
+        self.expired_at(Instant::now())
     }
 }
 
@@ -110,6 +197,11 @@ pub enum FailureKind {
     Shutdown,
     /// The solver/engine failed while executing the request's batch.
     Exec,
+    /// The request's own deadline budget elapsed before execution; it
+    /// was shed at an admission / batch-formation / pre-execution
+    /// checkpoint without consuming a solve. Retrying is pointless at
+    /// the same deadline — the caller's budget, not the server, decides.
+    DeadlineExceeded,
 }
 
 impl FailureKind {
@@ -120,6 +212,7 @@ impl FailureKind {
             FailureKind::Overloaded => 1,
             FailureKind::Shutdown => 2,
             FailureKind::Exec => 3,
+            FailureKind::DeadlineExceeded => 4,
         }
     }
 
@@ -130,6 +223,7 @@ impl FailureKind {
             1 => Some(FailureKind::Overloaded),
             2 => Some(FailureKind::Shutdown),
             3 => Some(FailureKind::Exec),
+            4 => Some(FailureKind::DeadlineExceeded),
             _ => None,
         }
     }
@@ -196,10 +290,51 @@ mod tests {
             FailureKind::Overloaded,
             FailureKind::Shutdown,
             FailureKind::Exec,
+            FailureKind::DeadlineExceeded,
         ] {
             assert_eq!(FailureKind::from_code(k.code()), Some(k));
         }
         assert_eq!(FailureKind::from_code(200), None);
+    }
+
+    #[test]
+    fn priority_codes_round_trip_and_order_by_shed_preference() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::from_code(p.code()), Some(p));
+            assert_eq!(p.idx(), p.code() as usize);
+        }
+        assert_eq!(Priority::from_code(3), None);
+        assert_eq!(Priority::default(), Priority::Normal);
+        // derived Ord sorts by shedding preference: Low sheds first
+        assert!(Priority::High < Priority::Normal);
+        assert!(Priority::Normal < Priority::Low);
+        assert_eq!(Priority::Low.label(), "low");
+        assert_eq!(Priority::High.label(), "high");
+    }
+
+    #[test]
+    fn deadline_expiry_is_measured_from_submission() {
+        let mk = |deadline_us| Request {
+            id: 1,
+            layer: "l".into(),
+            q: vec![],
+            b: vec![],
+            h: vec![],
+            tol: 1e-3,
+            grad_v: None,
+            session: None,
+            priority: Priority::Normal,
+            deadline_us,
+            submitted: Instant::now(),
+        };
+        let never = mk(None);
+        let soon = mk(Some(50));
+        let generous = mk(Some(60_000_000));
+        let later = Instant::now() + Duration::from_millis(5);
+        assert!(!never.expired_at(later));
+        assert!(soon.expired_at(later));
+        assert!(!generous.expired_at(later));
+        assert!(!generous.expired());
     }
 
     #[test]

@@ -1,10 +1,18 @@
 //! Lock-free serving metrics (atomics only on the hot path).
 
+use super::messages::Priority;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Latency histogram buckets (microseconds, upper bounds).
 pub const LAT_BUCKETS_US: [u64; 8] =
     [50, 100, 250, 500, 1_000, 5_000, 25_000, u64::MAX];
+
+/// Per-class latency SLO thresholds in microseconds, indexed by
+/// [`Priority::idx`] (High, Normal, Low). A served reply whose
+/// end-to-end latency is within its class budget counts `slo_ok`,
+/// otherwise `slo_miss` — the pair gives an instant per-class SLO
+/// attainment ratio without histogram math.
+pub const SLO_BUDGET_US: [u64; 3] = [5_000, 25_000, 100_000];
 
 /// Batch-occupancy histogram buckets (requests per formed batch, upper
 /// bounds). The last bucket is +Inf.
@@ -30,6 +38,14 @@ pub struct ShardMetrics {
     pub steals: AtomicU64,
     /// requests carried by stolen batches
     pub stolen_elems: AtomicU64,
+    /// requests this shard's bounded submit queue shed (Overloaded) —
+    /// the per-shard slice of the global `shed` counter
+    pub shed: AtomicU64,
+    /// requests shed `DeadlineExceeded` at this shard's batch-formation
+    /// checkpoint (expired while queued; pre-execution sheds count only
+    /// in the global `deadline_shed` — a stolen batch may execute on a
+    /// sibling's worker, so attribution stops at the router)
+    pub deadline_shed: AtomicU64,
     /// occupancy histogram over formed batches (buckets [`OCC_BUCKETS`])
     pub occ_hist: [AtomicU64; 6],
 }
@@ -106,6 +122,29 @@ pub struct Metrics {
     /// requests answered `Failure::Shutdown` because a graceful drain was
     /// already underway when they arrived or were still queued
     pub drained: AtomicU64,
+    /// requests shed `DeadlineExceeded` at ANY checkpoint (net
+    /// admission, batch formation, pre-execution). Every such shed
+    /// sends exactly one failure reply, so this equals the
+    /// DeadlineExceeded replies clients observe — the chaos suite
+    /// reconciles the two sides against this counter.
+    pub deadline_shed: AtomicU64,
+    /// per-class slice of `shed` (Overloaded), indexed by
+    /// [`Priority::idx`] — under pressure Low should lead Normal
+    /// should lead High
+    pub shed_by_class: [AtomicU64; 3],
+    /// per-class slice of `deadline_shed`, indexed by [`Priority::idx`]
+    pub deadline_by_class: [AtomicU64; 3],
+    /// successfully served replies per class, indexed by
+    /// [`Priority::idx`] (sums to the class-attributable subset of
+    /// `responses`; coordinator-internal failure replies have no class
+    /// row)
+    pub served_by_class: [AtomicU64; 3],
+    /// served replies within their class latency SLO
+    /// ([`SLO_BUDGET_US`]), indexed by [`Priority::idx`]
+    pub slo_ok_by_class: [AtomicU64; 3],
+    /// served replies over their class latency SLO, indexed by
+    /// [`Priority::idx`]
+    pub slo_miss_by_class: [AtomicU64; 3],
     /// gauge: requests currently waiting across every shard (sum of the
     /// per-shard gauges; shard routers refresh their own slice)
     pub queue_depth: AtomicU64,
@@ -154,6 +193,39 @@ impl Metrics {
                 self.lat_hist[i].fetch_add(1, Ordering::Relaxed);
                 break;
             }
+        }
+    }
+
+    /// Record one Overloaded shed of a `p`-class request: the global
+    /// shed + failure counters plus the class row, in one place so the
+    /// global and per-class totals reconcile by construction.
+    pub fn note_shed(&self, p: Priority) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.failures.fetch_add(1, Ordering::Relaxed);
+        self.shed_by_class[p.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one DeadlineExceeded shed of a `p`-class request
+    /// (whichever checkpoint caught it). Counts the failure reply too —
+    /// callers send exactly one reply per call, which is what keeps the
+    /// server counter equal to the client-observed DeadlineExceeded
+    /// tally.
+    pub fn note_deadline_shed(&self, p: Priority) {
+        self.deadline_shed.fetch_add(1, Ordering::Relaxed);
+        self.failures.fetch_add(1, Ordering::Relaxed);
+        self.deadline_by_class[p.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one served `p`-class reply and judge it against the class
+    /// latency SLO ([`SLO_BUDGET_US`]).
+    pub fn note_served(&self, p: Priority, latency_secs: f64) {
+        let i = p.idx();
+        self.served_by_class[i].fetch_add(1, Ordering::Relaxed);
+        let us = (latency_secs * 1e6) as u64;
+        if us <= SLO_BUDGET_US[i] {
+            self.slo_ok_by_class[i].fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.slo_miss_by_class[i].fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -353,6 +425,60 @@ impl Metrics {
             "requests answered Shutdown during a graceful drain",
             self.drained.load(ld),
         );
+        c(
+            &mut out,
+            "deadline_shed_total",
+            "requests shed DeadlineExceeded before execution",
+            self.deadline_shed.load(ld),
+        );
+        // per-priority-class series: one HELP/TYPE per family, one
+        // labeled sample per class
+        let class_family = |out: &mut String,
+                            name: &str,
+                            help: &str,
+                            rows: &[AtomicU64; 3]| {
+            out.push_str(&format!(
+                "# HELP altdiff_{name} {help}\n\
+                 # TYPE altdiff_{name} counter\n"
+            ));
+            for p in Priority::ALL {
+                out.push_str(&format!(
+                    "altdiff_{name}{{class=\"{}\"}} {}\n",
+                    p.label(),
+                    rows[p.idx()].load(ld)
+                ));
+            }
+        };
+        class_family(
+            &mut out,
+            "class_shed_total",
+            "Overloaded sheds per priority class",
+            &self.shed_by_class,
+        );
+        class_family(
+            &mut out,
+            "class_deadline_shed_total",
+            "DeadlineExceeded sheds per priority class",
+            &self.deadline_by_class,
+        );
+        class_family(
+            &mut out,
+            "class_served_total",
+            "served replies per priority class",
+            &self.served_by_class,
+        );
+        class_family(
+            &mut out,
+            "class_slo_ok_total",
+            "served replies within the class latency SLO",
+            &self.slo_ok_by_class,
+        );
+        class_family(
+            &mut out,
+            "class_slo_miss_total",
+            "served replies over the class latency SLO",
+            &self.slo_miss_by_class,
+        );
         g(
             &mut out,
             "queue_depth",
@@ -471,6 +597,31 @@ impl Metrics {
         }
         shard_family(
             &mut out,
+            "shard_shed_total",
+            "requests shed Overloaded by this shard's bounded queue",
+            "counter",
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "altdiff_shard_shed_total{{shard=\"{i}\"}} {}\n",
+                s.shed.load(ld)
+            ));
+        }
+        shard_family(
+            &mut out,
+            "shard_deadline_shed_total",
+            "requests shed DeadlineExceeded at this shard's \
+             batch-formation checkpoint",
+            "counter",
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "altdiff_shard_deadline_shed_total{{shard=\"{i}\"}} {}\n",
+                s.deadline_shed.load(ld)
+            ));
+        }
+        shard_family(
+            &mut out,
             "shard_batch_occupancy",
             "requests per formed batch, per shard",
             "histogram",
@@ -514,13 +665,15 @@ impl Metrics {
             .map(|s| s.partial_flushes.load(Ordering::Relaxed))
             .sum();
         format!(
-            "req={} resp={} fail={} batches={} pjrt={} native={} \
-             sparse={} admm={} routed={}:{} adjoint={} native_occ={:.1} \
-             pad={} bumps={} warm={}/{} saved={} shards={} steals={} \
-             pflush={} mean_lat={:.0}us p90<={}us",
+            "req={} resp={} fail={} shed={} ddl={} batches={} pjrt={} \
+             native={} sparse={} admm={} routed={}:{} adjoint={} \
+             native_occ={:.1} pad={} bumps={} warm={}/{} saved={} \
+             shards={} steals={} pflush={} mean_lat={:.0}us p90<={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.failures.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.deadline_shed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.pjrt_execs.load(Ordering::Relaxed),
             self.native_execs.load(Ordering::Relaxed),
@@ -633,6 +786,69 @@ mod tests {
         assert_eq!(m.shards[0].occ_hist[0].load(Ordering::Relaxed), 1);
         assert_eq!(m.shards[0].occ_hist[2].load(Ordering::Relaxed), 1);
         assert_eq!(m.shards[1].occ_hist[3].load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn class_counters_reconcile_and_render_labeled() {
+        let m = Metrics::new();
+        m.note_shed(Priority::Low);
+        m.note_shed(Priority::Low);
+        m.note_shed(Priority::Normal);
+        m.note_deadline_shed(Priority::High);
+        m.note_served(Priority::High, 1e-3); // 1ms ≤ 5ms SLO → ok
+        m.note_served(Priority::Low, 0.5); // 500ms > 100ms SLO → miss
+        // globals == Σ class rows, by construction of the note_* fns
+        assert_eq!(m.shed.load(Ordering::Relaxed), 3);
+        let by_class: u64 = m
+            .shed_by_class
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(by_class, 3);
+        assert_eq!(m.deadline_shed.load(Ordering::Relaxed), 1);
+        // every shed counted its failure reply exactly once
+        assert_eq!(m.failures.load(Ordering::Relaxed), 4);
+        let hi = Priority::High.idx();
+        let lo = Priority::Low.idx();
+        assert_eq!(m.served_by_class[hi].load(Ordering::Relaxed), 1);
+        assert_eq!(m.slo_ok_by_class[hi].load(Ordering::Relaxed), 1);
+        assert_eq!(m.slo_miss_by_class[hi].load(Ordering::Relaxed), 0);
+        assert_eq!(m.slo_miss_by_class[lo].load(Ordering::Relaxed), 1);
+        let text = m.render_text();
+        assert!(text
+            .contains("altdiff_class_shed_total{class=\"low\"} 2"));
+        assert!(text
+            .contains("altdiff_class_shed_total{class=\"normal\"} 1"));
+        assert!(text.contains(
+            "altdiff_class_deadline_shed_total{class=\"high\"} 1"
+        ));
+        assert!(text
+            .contains("altdiff_class_served_total{class=\"high\"} 1"));
+        assert!(text
+            .contains("altdiff_class_slo_miss_total{class=\"low\"} 1"));
+        assert!(text.contains("altdiff_deadline_shed_total 1"));
+        assert_eq!(
+            text.matches("# HELP").count(),
+            text.matches("# TYPE").count()
+        );
+        assert!(m.summary().contains("shed=3"));
+        assert!(m.summary().contains("ddl=1"));
+    }
+
+    #[test]
+    fn shard_shed_families_render_labeled() {
+        let m = Metrics::for_shards(2);
+        m.shards[1].shed.store(4, Ordering::Relaxed);
+        m.shards[0].deadline_shed.store(2, Ordering::Relaxed);
+        let text = m.render_text();
+        assert!(text.contains("altdiff_shard_shed_total{shard=\"1\"} 4"));
+        assert!(text.contains(
+            "altdiff_shard_deadline_shed_total{shard=\"0\"} 2"
+        ));
+        assert_eq!(
+            text.matches("# HELP").count(),
+            text.matches("# TYPE").count()
+        );
     }
 
     #[test]

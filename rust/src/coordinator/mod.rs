@@ -28,11 +28,12 @@ pub mod truncation;
 
 pub use batcher::{Batch, Batcher};
 pub use messages::{
-    Failure, FailureKind, GradientResponse, Reply, Request, Response,
+    Failure, FailureKind, GradientResponse, Priority, Reply, Request,
+    Response,
 };
 pub use metrics::{Metrics, ShardMetrics};
 pub use server::{
-    shard_for, AdmmEngines, Config, Coordinator, CoordinatorBuilder,
-    LayerEngine, RegisteredLayer,
+    class_budget, shard_for, AdmmEngines, Config, Coordinator,
+    CoordinatorBuilder, LayerEngine, RegisteredLayer,
 };
 pub use truncation::{EngineRouter, TruncationTable};

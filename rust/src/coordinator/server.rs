@@ -30,7 +30,8 @@
 
 use super::batcher::{Batch, Batcher};
 use super::messages::{
-    Failure, FailureKind, GradientResponse, Reply, Request, Response,
+    Failure, FailureKind, GradientResponse, Priority, Reply, Request,
+    Response,
 };
 use super::metrics::Metrics;
 use super::truncation::{EngineRouter, TruncationTable};
@@ -239,6 +240,24 @@ pub fn shard_for(layer: &str, session: u64, shards: usize) -> usize {
     (hash % shards.max(1) as u64) as usize
 }
 
+/// Graduated per-class share of a bounded admission/backlog budget:
+/// High keeps the full budget, Normal forfeits 1/8, Low forfeits 1/4 —
+/// so as pressure rises Low sheds strictly before Normal before High
+/// (the last budget slots are reserved for higher classes), while
+/// execution order for *admitted* requests is untouched. Tiny budgets
+/// (< 4) collapse to equal shares rather than starving a class
+/// outright, which also keeps single-slot test configurations
+/// class-blind. Used by both the coordinator's [`ShardQueue`]s and the
+/// network front end's in-flight admission gate.
+pub fn class_budget(max: usize, p: Priority) -> usize {
+    let forfeit = match p {
+        Priority::High => 0,
+        Priority::Normal => max / 8,
+        Priority::Low => max / 4,
+    };
+    max.saturating_sub(forfeit).max(1)
+}
+
 /// What [`ShardQueue::push`] did with a request.
 enum PushOutcome {
     /// Accepted; the shard router will route it.
@@ -280,7 +299,10 @@ impl ShardQueue {
         if st.shutdown {
             return PushOutcome::Draining;
         }
-        if st.q.len() >= self.cap {
+        // priority-ordered shedding: each class sees a graduated slice
+        // of the backlog bound, so Low overflows first, then Normal,
+        // then High — strictly ordered at equal arrival pressure
+        if st.q.len() >= class_budget(self.cap, req.priority) {
             return PushOutcome::Full;
         }
         st.q.push_back(req);
@@ -936,6 +958,23 @@ fn shard_router_loop(
         shard_m.observe_batch(b.requests.len());
         bq.push(b);
     };
+    // Batch-formation deadline checkpoint: a request whose budget
+    // elapsed while it sat in the shard's submit queue is shed here —
+    // it must not join a batch and consume a solve it can no longer
+    // use (principled by the truncation theorem: late work is dropped,
+    // timely work is untouched).
+    let shed_expired = |req: &Request| {
+        metrics.note_deadline_shed(req.priority);
+        shard_m.deadline_shed.fetch_add(1, ord);
+        let _ = reply_tx.send(Reply::Err(Failure {
+            id: req.id,
+            kind: FailureKind::DeadlineExceeded,
+            error: format!(
+                "deadline budget {}µs elapsed in shard {sidx}'s queue",
+                req.deadline_us.unwrap_or(0)
+            ),
+        }));
+    };
     loop {
         // sleep until the next batch deadline or a new arrival
         let timeout = batcher
@@ -953,6 +992,10 @@ fn shard_router_loop(
             };
         for req in reqs {
             metrics.requests.fetch_add(1, ord);
+            if req.expired() {
+                shed_expired(&req);
+                continue;
+            }
             if let Some((family, k, req)) =
                 route_one(req, &layers, &metrics, &reply_tx)
             {
@@ -983,6 +1026,10 @@ fn shard_router_loop(
     let (rest, _) = queue.pop_all(Duration::ZERO);
     for req in rest {
         metrics.requests.fetch_add(1, ord);
+        if req.expired() {
+            shed_expired(&req);
+            continue;
+        }
         if let Some((family, k, req)) =
             route_one(req, &layers, &metrics, &reply_tx)
         {
@@ -1001,9 +1048,15 @@ fn shard_router_loop(
 
 /// Execute one batch and ship its replies (counting them as the old
 /// worker loop did). Shared by the owned-batch and stolen-batch paths.
+///
+/// Pre-execution deadline checkpoint: members whose budget elapsed
+/// while the batch waited in a batch queue (or in a sibling's steal
+/// backlog) are split off and answered `DeadlineExceeded` — an expired
+/// request never reaches an engine, and the survivors execute as a
+/// smaller batch under the same routed k.
 fn run_batch(
     engine: &mut Option<Engine>,
-    batch: &Batch,
+    mut batch: Batch,
     layers: &BTreeMap<String, Arc<RegisteredLayer>>,
     reply_tx: &Sender<Reply>,
     metrics: &Metrics,
@@ -1013,20 +1066,55 @@ fn run_batch(
         Some(l) => l.clone(),
         None => return,
     };
-    let replies = execute_batch(engine, &layer, batch, metrics, warm);
-    for r in replies {
+    let now = Instant::now();
+    if batch.requests.iter().any(|r| r.expired_at(now)) {
+        let (live, expired): (Vec<Request>, Vec<Request>) = batch
+            .requests
+            .drain(..)
+            .partition(|r| !r.expired_at(now));
+        for req in expired {
+            metrics.note_deadline_shed(req.priority);
+            let _ = reply_tx.send(Reply::Err(Failure {
+                id: req.id,
+                kind: FailureKind::DeadlineExceeded,
+                error: format!(
+                    "deadline budget {}µs elapsed before execution",
+                    req.deadline_us.unwrap_or(0)
+                ),
+            }));
+        }
+        if live.is_empty() {
+            return;
+        }
+        batch.requests = live;
+    }
+    // execute_batch emits exactly one reply per request, in request
+    // order (every path maps `reqs` positionally) — zip for the
+    // per-class served/SLO accounting
+    let prios: Vec<Priority> =
+        batch.requests.iter().map(|r| r.priority).collect();
+    let replies = execute_batch(engine, &layer, &batch, metrics, warm);
+    for (i, r) in replies.into_iter().enumerate() {
         match &r {
             Reply::Ok(resp) => {
                 metrics
                     .responses
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 metrics.observe_latency(resp.latency);
+                metrics.note_served(
+                    prios.get(i).copied().unwrap_or_default(),
+                    resp.latency,
+                );
             }
             Reply::Grad(resp) => {
                 metrics
                     .responses
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 metrics.observe_latency(resp.latency);
+                metrics.note_served(
+                    prios.get(i).copied().unwrap_or_default(),
+                    resp.latency,
+                );
             }
             Reply::Err(_) => {
                 metrics
@@ -1119,7 +1207,7 @@ fn shard_worker_loop(
         if let Some(batch) = own.pop_wait(idle) {
             run_batch(
                 &mut engine,
-                &batch,
+                batch,
                 &layers,
                 &reply_tx,
                 &metrics,
@@ -1135,7 +1223,7 @@ fn shard_worker_loop(
                 .fetch_add(batch.requests.len() as u64, ord);
             run_batch(
                 &mut engine,
-                &batch,
+                batch,
                 &layers,
                 &reply_tx,
                 &metrics,
@@ -1765,6 +1853,19 @@ impl Coordinator {
         self.queues.len()
     }
 
+    /// Current depth of every shard's submit queue — the health
+    /// endpoint reads this to report backlog saturation without
+    /// touching the routers' locks for longer than a `len()`.
+    pub fn shard_queue_depths(&self) -> Vec<usize> {
+        self.queues.iter().map(|q| q.len()).collect()
+    }
+
+    /// The per-shard backlog bound the queues were built with
+    /// ([`Config::shard_queue`], clamped to ≥ 1).
+    pub fn shard_queue_cap(&self) -> usize {
+        self.queues.first().map(|q| q.cap).unwrap_or(1)
+    }
+
     /// Submit an already-built [`Request`] (the network front end's
     /// path: the request was constructed at frame-decode time and its
     /// `submitted` timestamp is preserved, so served latency includes
@@ -1790,18 +1891,21 @@ impl Coordinator {
                 (self.rr % self.queues.len() as u64) as usize
             }
         };
+        let prio = req.priority;
         match self.queues[shard].push(req) {
             PushOutcome::Queued => {}
             PushOutcome::Full => {
                 let ord = std::sync::atomic::Ordering::Relaxed;
-                self.metrics.shed.fetch_add(1, ord);
-                self.metrics.failures.fetch_add(1, ord);
+                self.metrics.note_shed(prio);
+                self.metrics.shards[shard].shed.fetch_add(1, ord);
                 if let Some(tx) = &self.reply_tx {
                     let _ = tx.send(Reply::Err(Failure {
                         id,
                         kind: FailureKind::Overloaded,
                         error: format!(
-                            "shard {shard} is at its backlog bound"
+                            "shard {shard} is at its backlog bound \
+                             for class {}",
+                            prio.label()
                         ),
                     }));
                 }
@@ -1840,6 +1944,8 @@ impl Coordinator {
             tol,
             grad_v: None,
             session: None,
+            priority: Priority::default(),
+            deadline_us: None,
             submitted: Instant::now(),
         })
     }
@@ -1866,6 +1972,8 @@ impl Coordinator {
             tol,
             grad_v: None,
             session: Some(session),
+            priority: Priority::default(),
+            deadline_us: None,
             submitted: Instant::now(),
         })
     }
@@ -1892,6 +2000,8 @@ impl Coordinator {
             tol,
             grad_v: Some(v),
             session: None,
+            priority: Priority::default(),
+            deadline_us: None,
             submitted: Instant::now(),
         })
     }
@@ -1920,6 +2030,8 @@ impl Coordinator {
             tol,
             grad_v: Some(v),
             session: Some(session),
+            priority: Priority::default(),
+            deadline_us: None,
             submitted: Instant::now(),
         })
     }

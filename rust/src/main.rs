@@ -12,7 +12,9 @@
 
 use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::coordinator::{Config, Coordinator, Reply};
-use altdiff::net::{Client, LoadgenOpts, NetConfig, NetServer};
+use altdiff::net::{
+    ChaosConfig, ChaosProxy, Client, LoadgenOpts, NetConfig, NetServer,
+};
 use altdiff::prob::{dense_qp, sparsemax_qp};
 use altdiff::runtime::{Engine, Manifest};
 use altdiff::util::{Args, Pcg64};
@@ -163,15 +165,22 @@ fn cmd_serve_net(args: &Args, listen: &str) {
             stop.store(true, std::sync::atomic::Ordering::SeqCst);
         });
     }
+    let selftest_failed =
+        std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     if args.get_bool("selftest", false) {
         let opts = LoadgenOpts {
             requests: args.get_usize("requests", 200),
             ..Default::default()
         };
+        let failed = selftest_failed.clone();
         std::thread::spawn(move || {
             match altdiff::net::run_loadgen(addr, &opts) {
                 Ok(report) => println!("selftest: {}", report.render()),
-                Err(e) => eprintln!("selftest loadgen failed: {e}"),
+                Err(e) => {
+                    eprintln!("selftest loadgen failed: {e}");
+                    failed
+                        .store(true, std::sync::atomic::Ordering::SeqCst);
+                }
             }
             if let Ok(mut c) = Client::connect(addr) {
                 let _ = c.stop_server();
@@ -180,6 +189,9 @@ fn cmd_serve_net(args: &Args, listen: &str) {
     }
     let coord = server.run();
     println!("{}", coord.metrics.render_text());
+    if selftest_failed.load(std::sync::atomic::Ordering::SeqCst) {
+        std::process::exit(1);
+    }
 }
 
 fn cmd_serve(args: &Args) {
@@ -218,16 +230,21 @@ fn cmd_serve(args: &Args) {
 }
 
 /// `loadgen <addr>`: drive a running `serve --listen` server.
+/// `--chaos` interposes a seeded fault-injection proxy on the path
+/// (pair it with `--retry` unless an aborted run is the point).
 fn cmd_loadgen(args: &Args) {
     let Some(addr) = args.positional().get(1).cloned() else {
         eprintln!(
             "usage: altdiff loadgen <addr> [--requests N] [--clients C] \
              [--window W] [--grad-share F] [--layer NAME] [--tol T] \
              [--sessions] [--burst B] [--burst-gap-us G] \
+             [--priorities] [--deadline-us D] [--retry] \
+             [--chaos] [--chaos-seed S] [--chaos-reset-prob P] \
              [--stop-server]"
         );
         std::process::exit(2);
     };
+    let deadline_us = args.get_usize("deadline-us", 0);
     let opts = LoadgenOpts {
         requests: args.get_usize("requests", 200),
         clients: args.get_usize("clients", 4),
@@ -239,10 +256,33 @@ fn cmd_loadgen(args: &Args) {
         sessions: args.get_bool("sessions", false),
         burst: args.get_usize("burst", 0),
         burst_gap_us: args.get_usize("burst-gap-us", 2_000) as u64,
+        priorities: args.get_bool("priorities", false),
+        deadline_us: (deadline_us > 0).then_some(deadline_us as u32),
+        retry: args.get_bool("retry", false),
     };
-    match altdiff::net::run_loadgen(addr.as_str(), &opts) {
+    // with --chaos, clients talk to the fault proxy; the real server
+    // address stays in `addr` for --stop-server's direct connection
+    let proxy = args.get_bool("chaos", false).then(|| {
+        let cfg = ChaosConfig {
+            seed: args.get_usize("chaos-seed", 5) as u64,
+            reset_prob: args.get_f64("chaos-reset-prob", 0.0),
+            ..ChaosConfig::default()
+        };
+        ChaosProxy::spawn(addr.as_str(), cfg).unwrap_or_else(|e| {
+            eprintln!("chaos proxy failed to start: {e}");
+            std::process::exit(1);
+        })
+    });
+    let target = proxy
+        .as_ref()
+        .map(|p| p.addr().to_string())
+        .unwrap_or_else(|| addr.clone());
+    match altdiff::net::run_loadgen(target.as_str(), &opts) {
         Ok(report) => {
             println!("{}", report.render());
+            if let Some(p) = &proxy {
+                println!("{}", p.stats().render());
+            }
             if args.get_bool("stop-server", false) {
                 match Client::connect(addr.as_str())
                     .and_then(|mut c| c.stop_server())

@@ -6,13 +6,91 @@
 use super::frame::blocking::{read_frame_buffered, write_frame};
 use super::frame::{Frame, FrameReader, MAX_PAYLOAD};
 use super::proto::{self, op, LayerInfo};
-use crate::coordinator::{FailureKind, Reply, Request};
+use crate::coordinator::{FailureKind, Priority, Reply, Request};
 use crate::error::{AltDiffError, Result};
 use crate::prob::dense_qp;
 use crate::util::Pcg64;
 use std::collections::BTreeMap;
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
+
+/// Default end-to-end operation deadline for the blocking [`Client`]:
+/// a silently dead peer fails the call with a timeout instead of
+/// hanging the caller forever (mid-frame partial bytes stay buffered,
+/// so a *slow* peer is still fine — only a stalled one times out).
+pub const DEFAULT_OP_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Bounded retry with exponential backoff + deterministic jitter.
+///
+/// Retry fires only on conditions where a repeat can plausibly
+/// succeed: transport errors (refused/reset/torn connections, read
+/// timeouts) and [`FailureKind::Overloaded`] sheds. It NEVER fires on
+/// [`FailureKind::Invalid`] (a malformed request fails identically
+/// forever), [`FailureKind::DeadlineExceeded`] (the caller's budget,
+/// not the server, is the limit), or [`FailureKind::Shutdown`].
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Max retry attempts after the initial try.
+    pub max_retries: u32,
+    /// Backoff before retry 1; doubles per attempt.
+    pub base_backoff: Duration,
+    /// Backoff growth cap.
+    pub max_backoff: Duration,
+    /// Jitter RNG seed (deterministic for reproducible tests).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(500),
+            seed: 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (1-based): the exponential
+    /// schedule capped at `max_backoff`, jittered over its upper half
+    /// so synchronized clients decorrelate.
+    pub fn backoff(&self, attempt: u32, rng: &mut Pcg64) -> Duration {
+        let doublings = attempt.max(1).min(16) - 1;
+        let exp = self.base_backoff.saturating_mul(1u32 << doublings);
+        let capped = exp.min(self.max_backoff);
+        capped.mul_f64(0.5 + 0.5 * rng.uniform())
+    }
+}
+
+/// Transient transport conditions a bounded retry may recover from.
+fn io_retryable(k: std::io::ErrorKind) -> bool {
+    use std::io::ErrorKind::*;
+    matches!(
+        k,
+        TimedOut
+            | WouldBlock
+            | ConnectionReset
+            | ConnectionAborted
+            | ConnectionRefused
+            | BrokenPipe
+            | UnexpectedEof
+            | Interrupted
+    )
+}
+
+/// True when the error is a retryable transport failure (never a
+/// protocol or server-classified failure).
+fn transport_retryable(e: &AltDiffError) -> bool {
+    matches!(e, AltDiffError::Io(io) if io_retryable(io.kind()))
+}
+
+fn op_timeout_err() -> AltDiffError {
+    AltDiffError::Io(std::io::Error::new(
+        std::io::ErrorKind::TimedOut,
+        "op deadline elapsed with no reply from the server",
+    ))
+}
 
 /// Encode a request, rejecting locally anything the server's frame
 /// validation would kill the connection over. Mirrors the reply-side
@@ -62,12 +140,34 @@ fn checked_request_bytes(req: &Request) -> Result<Vec<u8>> {
 /// ```
 pub struct Client {
     inner: PipelinedClient,
+    addr: SocketAddr,
+    op_timeout: Option<Duration>,
+    retry: Option<RetryPolicy>,
+    rng: Pcg64,
+    retries: u64,
+    reconnects: u64,
 }
 
 impl Client {
-    /// Connect to a running [`super::NetServer`].
+    /// Connect to a running [`super::NetServer`]. Every operation is
+    /// bounded by [`DEFAULT_OP_TIMEOUT`] end to end (see
+    /// [`Client::set_timeout`]); retry is off until
+    /// [`Client::set_retry`] arms it.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
-        Ok(Client { inner: PipelinedClient::connect(addr, 1)? })
+        let addr = addr.to_socket_addrs()?.next().ok_or_else(|| {
+            AltDiffError::Coordinator("client: no address".into())
+        })?;
+        let mut c = Client {
+            inner: PipelinedClient::connect(addr, 1)?,
+            addr,
+            op_timeout: Some(DEFAULT_OP_TIMEOUT),
+            retry: None,
+            rng: Pcg64::new(0xc11e_47),
+            retries: 0,
+            reconnects: 0,
+        };
+        c.inner.stream.set_write_timeout(c.op_timeout)?;
+        Ok(c)
     }
 
     /// Attach a warm-start session key to every subsequent request
@@ -76,21 +176,100 @@ impl Client {
         self.inner.set_session(key);
     }
 
-    /// Bound the wait for any single reply (default: unbounded). A
-    /// timeout mid-frame is recoverable: partial bytes stay buffered.
+    /// Priority class attached to every subsequent request (see
+    /// [`PipelinedClient::set_priority`]).
+    pub fn set_priority(&mut self, p: Priority) {
+        self.inner.set_priority(p);
+    }
+
+    /// Per-request deadline budget in µs attached to every subsequent
+    /// request (see [`PipelinedClient::set_deadline_us`]).
+    pub fn set_deadline_us(&mut self, us: impl Into<Option<u32>>) {
+        self.inner.set_deadline_us(us);
+    }
+
+    /// Bound every operation end to end (default:
+    /// [`DEFAULT_OP_TIMEOUT`]): the remaining budget re-arms the
+    /// socket's read timeout before each frame, so a silently dead
+    /// server fails the call instead of hanging it forever. `None`
+    /// opts out (unbounded, the pre-deadline behaviour). A timeout
+    /// mid-frame is recoverable: partial bytes stay buffered.
     pub fn set_timeout(&mut self, d: Option<Duration>) -> Result<()> {
-        self.inner.set_timeout(d)
+        self.op_timeout = d;
+        self.inner.set_timeout(d)?;
+        self.inner.stream.set_write_timeout(d)?;
+        Ok(())
+    }
+
+    /// Arm bounded retry (see [`RetryPolicy`] for what is — and is
+    /// never — retried). `None` disarms it.
+    pub fn set_retry(&mut self, policy: impl Into<Option<RetryPolicy>>) {
+        self.retry = policy.into();
+        if let Some(p) = &self.retry {
+            self.rng = Pcg64::new(p.seed);
+        }
+    }
+
+    /// `(retries, reconnects)` performed by the retry policy so far.
+    pub fn retry_counts(&self) -> (u64, u64) {
+        (self.retries, self.reconnects)
+    }
+
+    /// Re-arm the socket's read timeout with the budget remaining
+    /// since `t0`; errors with `TimedOut` once the budget is gone.
+    /// No-op when the op deadline is disabled.
+    fn arm_read_timeout(&mut self, t0: Instant) -> Result<()> {
+        let Some(d) = self.op_timeout else { return Ok(()) };
+        let rem =
+            d.checked_sub(t0.elapsed()).ok_or_else(op_timeout_err)?;
+        self.inner
+            .set_timeout(Some(rem.max(Duration::from_millis(1))))?;
+        Ok(())
+    }
+
+    /// Tear down and rebuild the connection after a transport failure,
+    /// carrying over session/priority/deadline state. The old stream's
+    /// in-flight bookkeeping is dropped: those replies are gone.
+    fn reconnect(&mut self) -> Result<()> {
+        let mut fresh = PipelinedClient::connect(self.addr, 1)?;
+        fresh.session = self.inner.session;
+        fresh.priority = self.inner.priority;
+        fresh.deadline_us = self.inner.deadline_us;
+        fresh.set_timeout(self.op_timeout)?;
+        fresh.stream.set_write_timeout(self.op_timeout)?;
+        self.inner = fresh;
+        self.reconnects += 1;
+        Ok(())
     }
 
     /// Read until a frame with opcode `want` arrives, skipping stale
     /// replies of *any* kind left over from previously timed-out calls
-    /// (data and admin alike) so one timeout does not poison later ops.
+    /// (data and admin alike) so one timeout does not poison later
+    /// ops. Bounded end to end by the op deadline.
     fn read_expected(&mut self, want: u8) -> Result<Frame> {
+        let t0 = Instant::now();
         loop {
-            let f = read_frame_buffered(
+            self.arm_read_timeout(t0)?;
+            let f = match read_frame_buffered(
                 &mut self.inner.stream,
                 &mut self.inner.rbuf,
-            )?;
+            ) {
+                Ok(f) => f,
+                // a per-read timeout under an armed op deadline is not
+                // final: loop back, where arm_read_timeout converts an
+                // exhausted budget into the terminal error
+                Err(AltDiffError::Io(e))
+                    if self.op_timeout.is_some()
+                        && matches!(
+                            e.kind(),
+                            std::io::ErrorKind::TimedOut
+                                | std::io::ErrorKind::WouldBlock
+                        ) =>
+                {
+                    continue
+                }
+                Err(e) => return Err(e),
+            };
             if f.op == want {
                 return Ok(f);
             }
@@ -125,6 +304,52 @@ impl Client {
     /// before closing — is returned as the classified failure it is
     /// instead of being masked by the EOF that follows it; stale
     /// replies from earlier timed-out calls are skipped by id.
+    /// Bounded end to end by the op deadline.
+    fn roundtrip_once(
+        &mut self,
+        layer: &str,
+        q: Vec<f64>,
+        b: Vec<f64>,
+        h: Vec<f64>,
+        grad_v: Option<Vec<f64>>,
+        tol: f64,
+    ) -> Result<Reply> {
+        let t0 = Instant::now();
+        // re-arm with the full budget up front: submit may itself read
+        // (stale in-flight entries from a timed-out predecessor) and
+        // must not inherit that predecessor's dregs of a timeout
+        self.arm_read_timeout(t0)?;
+        self.inner.submit(layer, q, b, h, grad_v, tol)?;
+        let id = self.inner.next_id;
+        loop {
+            self.arm_read_timeout(t0)?;
+            match self.inner.read_one() {
+                Ok(t) => {
+                    if t.reply.id() == id || t.reply.id() == 0 {
+                        return Ok(t.reply);
+                    }
+                }
+                Err(AltDiffError::Io(e))
+                    if self.op_timeout.is_some()
+                        && matches!(
+                            e.kind(),
+                            std::io::ErrorKind::TimedOut
+                                | std::io::ErrorKind::WouldBlock
+                        ) =>
+                {
+                    // deadline loop: arm_read_timeout terminates this
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// [`Client::roundtrip_once`] under the armed [`RetryPolicy`] (a
+    /// plain single attempt when retry is disarmed). Retryable
+    /// outcomes are transport errors — the connection is rebuilt, its
+    /// state being unknowable after a torn read — and `Overloaded`
+    /// sheds; `Invalid`, `DeadlineExceeded`, and `Shutdown` replies
+    /// return immediately.
     fn roundtrip(
         &mut self,
         layer: &str,
@@ -134,12 +359,38 @@ impl Client {
         grad_v: Option<Vec<f64>>,
         tol: f64,
     ) -> Result<Reply> {
-        self.inner.submit(layer, q, b, h, grad_v, tol)?;
-        let id = self.inner.next_id;
+        let Some(policy) = self.retry.clone() else {
+            return self.roundtrip_once(layer, q, b, h, grad_v, tol);
+        };
+        let mut attempt = 0u32;
         loop {
-            let t = self.inner.read_one()?;
-            if t.reply.id() == id || t.reply.id() == 0 {
-                return Ok(t.reply);
+            let res = self.roundtrip_once(
+                layer,
+                q.clone(),
+                b.clone(),
+                h.clone(),
+                grad_v.clone(),
+                tol,
+            );
+            let (retry, rebuild) = match &res {
+                Ok(Reply::Err(f))
+                    if f.kind == FailureKind::Overloaded =>
+                {
+                    (true, false)
+                }
+                Ok(_) => (false, false),
+                Err(e) => (transport_retryable(e), true),
+            };
+            if !retry || attempt >= policy.max_retries {
+                return res;
+            }
+            attempt += 1;
+            self.retries += 1;
+            std::thread::sleep(policy.backoff(attempt, &mut self.rng));
+            if rebuild {
+                // best effort: a refused reconnect burns the attempt
+                // and the next roundtrip fails fast on the dead stream
+                let _ = self.reconnect();
             }
         }
     }
@@ -238,6 +489,8 @@ pub struct PipelinedClient {
     window: usize,
     next_id: u64,
     session: Option<u64>,
+    priority: Priority,
+    deadline_us: Option<u32>,
     sent_at: BTreeMap<u64, Instant>,
 }
 
@@ -255,8 +508,41 @@ impl PipelinedClient {
             window: window.max(1),
             next_id: 0,
             session: None,
+            priority: Priority::Normal,
+            deadline_us: None,
             sent_at: BTreeMap::new(),
         })
+    }
+
+    /// [`PipelinedClient::connect`] with bounded-backoff retries on
+    /// transient connect failures (refused/reset/timed out — exactly
+    /// the window a restarting or chaos-proxied server presents).
+    /// Non-transport errors return immediately.
+    pub fn connect_with_retry<A: ToSocketAddrs>(
+        addr: A,
+        window: usize,
+        policy: &RetryPolicy,
+    ) -> Result<Self> {
+        let addr = addr.to_socket_addrs()?.next().ok_or_else(|| {
+            AltDiffError::Coordinator("client: no address".into())
+        })?;
+        let mut rng = Pcg64::new(policy.seed ^ 0xc0_aa);
+        let mut attempt = 0u32;
+        loop {
+            match PipelinedClient::connect(addr, window) {
+                Ok(cl) => return Ok(cl),
+                Err(e)
+                    if transport_retryable(&e)
+                        && attempt < policy.max_retries =>
+                {
+                    attempt += 1;
+                    std::thread::sleep(
+                        policy.backoff(attempt, &mut rng),
+                    );
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// Attach a warm-start session key to every subsequent request:
@@ -265,6 +551,24 @@ impl PipelinedClient {
     /// [`crate::warm`]). `None` reverts to anonymous requests.
     pub fn set_session(&mut self, key: impl Into<Option<u64>>) {
         self.session = key.into();
+    }
+
+    /// Priority class attached to every subsequent request (default
+    /// [`Priority::Normal`]). Priority decides *shedding order* under
+    /// pressure — Low forfeits queue/admission budget before Normal
+    /// before High — never execution order of admitted work.
+    pub fn set_priority(&mut self, p: Priority) {
+        self.priority = p;
+    }
+
+    /// Per-request deadline budget in microseconds attached to every
+    /// subsequent request (`None` = no deadline, the default). The
+    /// server sheds a request whose budget has elapsed at its decode,
+    /// batch-formation, and pre-execution checkpoints, replying
+    /// [`FailureKind::DeadlineExceeded`] instead of burning a solve
+    /// whose answer can no longer be useful.
+    pub fn set_deadline_us(&mut self, us: impl Into<Option<u32>>) {
+        self.deadline_us = us.into();
     }
 
     /// Bound the wait for any single reply (default: unbounded). A
@@ -322,6 +626,8 @@ impl PipelinedClient {
             tol,
             grad_v,
             session: self.session,
+            priority: self.priority,
+            deadline_us: self.deadline_us,
             submitted: Instant::now(),
         };
         let bytes = checked_request_bytes(&req)?;
@@ -381,6 +687,21 @@ pub struct LoadgenOpts {
     pub burst: usize,
     /// Idle gap between bursts (microseconds; only with `burst > 0`).
     pub burst_gap_us: u64,
+    /// Cycle each connection's requests through the three priority
+    /// classes (High/Normal/Low round-robin per request), so equal
+    /// arrival pressure per class makes priority-ordered shedding
+    /// directly observable in the per-class server counters.
+    pub priorities: bool,
+    /// Attach this deadline budget (µs) to every request; `None` (the
+    /// default) sends deadline-free traffic.
+    pub deadline_us: Option<u32>,
+    /// Survive transport faults: bounded-backoff connects, plus
+    /// reconnect-and-resubmit when a connection tears mid-run (replies
+    /// stranded on the dead connection are counted `failed`, never
+    /// silently dropped). Off (the default), any transport error
+    /// aborts the run — the right behaviour against a healthy server,
+    /// useless against a chaos proxy.
+    pub retry: bool,
 }
 
 impl Default for LoadgenOpts {
@@ -396,6 +717,9 @@ impl Default for LoadgenOpts {
             sessions: false,
             burst: 0,
             burst_gap_us: 2_000,
+            priorities: false,
+            deadline_us: None,
+            retry: false,
         }
     }
 }
@@ -411,8 +735,16 @@ pub struct LoadgenReport {
     pub grads: usize,
     /// Replies shed by admission control (`Overloaded`).
     pub shed: usize,
-    /// Other failure replies.
+    /// Replies shed because the request's own deadline budget elapsed
+    /// (`DeadlineExceeded`) — never retried.
+    pub deadline: usize,
+    /// Other failure replies, plus replies stranded on connections the
+    /// retry path had to rebuild.
     pub failed: usize,
+    /// Requests re-sent by the retry path after a transport fault.
+    pub retries: u64,
+    /// Connections rebuilt by the retry path after a transport fault.
+    pub reconnects: u64,
     /// Wall-clock seconds for the whole run.
     pub wall: f64,
     /// Median client-observed round trip (µs).
@@ -436,19 +768,27 @@ impl LoadgenReport {
 
     /// Human-readable multi-line summary.
     pub fn render(&self) -> String {
-        format!(
-            "sent {} → ok {} grad {} shed {} failed {} in {:.3}s \
-             ({:.0} req/s)\nrtt p50 {:.0}µs p99 {:.0}µs",
+        let mut s = format!(
+            "sent {} → ok {} grad {} shed {} ddl {} failed {} in \
+             {:.3}s ({:.0} req/s)\nrtt p50 {:.0}µs p99 {:.0}µs",
             self.sent,
             self.ok,
             self.grads,
             self.shed,
+            self.deadline,
             self.failed,
             self.wall,
             self.throughput(),
             self.p50_us,
             self.p99_us,
-        )
+        );
+        if self.retries > 0 || self.reconnects > 0 {
+            s.push_str(&format!(
+                "\nretries {} reconnects {}",
+                self.retries, self.reconnects
+            ));
+        }
+        s
     }
 }
 
@@ -478,6 +818,11 @@ fn tally(report: &mut LoadgenReport, t: &TimedReply) {
         }
         Reply::Err(f) if f.kind == FailureKind::Overloaded => {
             report.shed += 1
+        }
+        Reply::Err(f)
+            if f.kind == FailureKind::DeadlineExceeded =>
+        {
+            report.deadline += 1
         }
         Reply::Err(_) => report.failed += 1,
     }
@@ -546,39 +891,103 @@ pub fn run_loadgen<A: ToSocketAddrs>(
             // open-loop bursts must not be self-paced by replies: the
             // window is widened to hold a whole burst in flight
             let window = opts.window.max(opts.burst);
-            let mut cl = PipelinedClient::connect(addr, window)?;
-            cl.set_timeout(Some(Duration::from_secs(120)))?;
-            if opts.sessions {
-                // one session per connection: its θ stream drifts
-                // slowly, which is exactly what the warm cache serves
-                cl.set_session(opts.seed ^ (0x5e55 + c as u64));
-            }
+            let policy = RetryPolicy {
+                seed: opts.seed ^ (0xba_c0ff ^ c as u64),
+                ..RetryPolicy::default()
+            };
+            let mut backoff_rng = Pcg64::new(policy.seed ^ 0xb0ff);
+            let timeout = Some(Duration::from_secs(120));
+            let fresh_client = |report: &mut LoadgenReport,
+                                first: bool|
+             -> Result<PipelinedClient> {
+                let mut cl = if opts.retry {
+                    PipelinedClient::connect_with_retry(
+                        addr, window, &policy,
+                    )?
+                } else {
+                    PipelinedClient::connect(addr, window)?
+                };
+                if !first {
+                    report.reconnects += 1;
+                }
+                cl.set_timeout(timeout)?;
+                if opts.sessions {
+                    // one session per connection: its θ stream drifts
+                    // slowly, exactly what the warm cache serves
+                    cl.set_session(opts.seed ^ (0x5e55 + c as u64));
+                }
+                cl.set_deadline_us(opts.deadline_us);
+                Ok(cl)
+            };
             let mut report = LoadgenReport::default();
-            for i in 0..per_client {
+            let mut cl = fresh_client(&mut report, true)?;
+            let mut i = 0usize;
+            let mut attempts = 0u32;
+            while i < per_client {
+                if opts.priorities {
+                    cl.set_priority(Priority::ALL[i % 3]);
+                }
                 let s = 1.0 + 0.1 * rng.normal();
                 let q: Vec<f64> =
                     qp.q.iter().map(|&v| v * s).collect();
                 let grad_v = (rng.uniform() < opts.grad_share)
                     .then(|| rng.normal_vec(info.n));
-                report.sent += 1;
-                for t in cl.submit(
+                match cl.submit(
                     &info.name,
                     q,
                     qp.b.clone(),
                     qp.h.clone(),
                     grad_v,
                     opts.tol,
-                )? {
-                    tally(&mut report, &t);
-                }
-                if opts.burst > 0 && (i + 1) % opts.burst == 0 {
-                    std::thread::sleep(Duration::from_micros(
-                        opts.burst_gap_us,
-                    ));
+                ) {
+                    Ok(ts) => {
+                        report.sent += 1;
+                        for t in &ts {
+                            tally(&mut report, t);
+                        }
+                        i += 1;
+                        attempts = 0;
+                        if opts.burst > 0 && i % opts.burst == 0 {
+                            std::thread::sleep(Duration::from_micros(
+                                opts.burst_gap_us,
+                            ));
+                        }
+                    }
+                    Err(e) => {
+                        if !opts.retry
+                            || !transport_retryable(&e)
+                            || attempts >= policy.max_retries
+                        {
+                            return Err(e);
+                        }
+                        attempts += 1;
+                        report.retries += 1;
+                        // the failed submit's own id may already be in
+                        // the in-flight book; drop it so only genuinely
+                        // stranded predecessors are counted failed
+                        cl.sent_at.remove(&cl.next_id);
+                        report.failed += cl.inflight();
+                        std::thread::sleep(
+                            policy.backoff(attempts, &mut backoff_rng),
+                        );
+                        cl = fresh_client(&mut report, false)?;
+                    }
                 }
             }
-            for t in cl.drain()? {
-                tally(&mut report, &t);
+            match cl.drain() {
+                Ok(ts) => {
+                    for t in &ts {
+                        tally(&mut report, t);
+                    }
+                }
+                Err(e)
+                    if opts.retry && transport_retryable(&e) =>
+                {
+                    // replies stranded on the torn connection are
+                    // unrecoverable: account them, don't hide them
+                    report.failed += cl.inflight();
+                }
+                Err(e) => return Err(e),
             }
             Ok(report)
         }));
@@ -596,7 +1005,10 @@ pub fn run_loadgen<A: ToSocketAddrs>(
         merged.ok += r.ok;
         merged.grads += r.grads;
         merged.shed += r.shed;
+        merged.deadline += r.deadline;
         merged.failed += r.failed;
+        merged.retries += r.retries;
+        merged.reconnects += r.reconnects;
         merged.rtts.extend(r.rtts);
     }
     merged.wall = t0.elapsed().as_secs_f64();
@@ -605,4 +1017,73 @@ pub fn run_loadgen<A: ToSocketAddrs>(
     merged.p50_us = percentile_us(&sorted, 0.50);
     merged.p99_us = percentile_us(&sorted, 0.99);
     Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Failure;
+
+    #[test]
+    fn backoff_is_bounded_and_grows() {
+        let p = RetryPolicy::default();
+        let mut rng = Pcg64::new(7);
+        let b1 = p.backoff(1, &mut rng);
+        assert!(b1 >= p.base_backoff / 2, "jitter floor is half");
+        assert!(b1 <= p.base_backoff);
+        for attempt in 1..64 {
+            let b = p.backoff(attempt, &mut rng);
+            assert!(b <= p.max_backoff, "attempt {attempt}: {b:?}");
+            assert!(b >= p.base_backoff / 2);
+        }
+        // deep attempts saturate at the cap's jitter band
+        let deep = p.backoff(60, &mut rng);
+        assert!(deep >= p.max_backoff / 2);
+    }
+
+    #[test]
+    fn retry_classification_never_touches_terminal_failures() {
+        // Overloaded is the only retryable *reply*; the terminal kinds
+        // must stay terminal no matter what
+        for kind in [
+            FailureKind::Invalid,
+            FailureKind::DeadlineExceeded,
+            FailureKind::Shutdown,
+            FailureKind::Exec,
+        ] {
+            assert_ne!(kind, FailureKind::Overloaded);
+        }
+        assert!(io_retryable(std::io::ErrorKind::ConnectionRefused));
+        assert!(io_retryable(std::io::ErrorKind::TimedOut));
+        assert!(!io_retryable(std::io::ErrorKind::PermissionDenied));
+        assert!(!transport_retryable(&AltDiffError::Protocol(
+            "bad".into()
+        )));
+        assert!(transport_retryable(&AltDiffError::Io(
+            std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                "torn"
+            )
+        )));
+    }
+
+    #[test]
+    fn tally_routes_deadline_sheds_to_their_own_counter() {
+        let mut r = LoadgenReport::default();
+        let mk = |kind| TimedReply {
+            reply: Reply::Err(Failure::new(1, kind, "")),
+            rtt: 0.0,
+        };
+        tally(&mut r, &mk(FailureKind::Overloaded));
+        tally(&mut r, &mk(FailureKind::DeadlineExceeded));
+        tally(&mut r, &mk(FailureKind::Exec));
+        assert_eq!((r.shed, r.deadline, r.failed), (1, 1, 1));
+        let text = r.render();
+        assert!(text.contains("ddl 1"), "{text}");
+        // retry lines only appear when the retry path actually fired
+        assert!(!text.contains("retries"), "{text}");
+        r.retries = 2;
+        r.reconnects = 1;
+        assert!(r.render().contains("retries 2 reconnects 1"));
+    }
 }

@@ -22,19 +22,28 @@
 //!   connection write backpressure, and a graceful drain that says
 //!   goodbye;
 //! - [`client`]: blocking and pipelined clients plus the
-//!   multi-connection load generator ([`client::run_loadgen`]).
+//!   multi-connection load generator ([`client::run_loadgen`]), both
+//!   with bounded [`client::RetryPolicy`] backoff and a default
+//!   end-to-end op deadline;
+//! - [`chaos`]: a deterministic fault-injection TCP proxy
+//!   ([`chaos::ChaosProxy`]) that tears frames, stalls mid-frame,
+//!   throttles readers, and resets connections mid-solve — the harness
+//!   behind `tests/chaos_net.rs` and `loadgen --chaos`.
 //!
 //! See `DESIGN.md` §4b for the frame layout and the admission-control /
-//! backpressure semantics.
+//! backpressure semantics, §4c for priorities/deadlines and the chaos
+//! harness.
 
+pub mod chaos;
 pub mod client;
 pub mod frame;
 pub mod proto;
 pub mod server;
 
+pub use chaos::{ChaosConfig, ChaosProxy, ChaosStats};
 pub use client::{
     run_loadgen, Client, LoadgenOpts, LoadgenReport, PipelinedClient,
-    TimedReply,
+    RetryPolicy, TimedReply, DEFAULT_OP_TIMEOUT,
 };
 pub use proto::LayerInfo;
 pub use server::{NetConfig, NetServer};

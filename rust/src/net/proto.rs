@@ -12,6 +12,7 @@
 //!   id u64 · tol f64 · session u8 [· key u64] · layer str16
 //!   · q f64vec · b f64vec · h f64vec
 //!   [· v f64vec]                      -- GRAD only (adjoint seed)
+//!   [· prio u8 [· class u8] · ddl u8 [· budget u32]]   -- extension
 //! ```
 //!
 //! `session` is the optional warm-start session key: a one-byte
@@ -21,13 +22,24 @@
 //! cache (see [`crate::warm`]), so a remote caller's repeated solves
 //! resume from each other's iterates across requests.
 //!
+//! The trailing **extension block** carries the traffic-plane fields
+//! (priority class and per-request deadline budget in µs) with the same
+//! presence-tag style. It is *omitted entirely* when both are at their
+//! defaults (Normal priority, no deadline), so pre-extension encoders
+//! and decoders stay byte-compatible: an old client's payload simply
+//! ends after h/v and decodes to the defaults, and a new client talking
+//! to an old server only breaks if it actually sets the new fields.
+//! Malformed values (tag ∉ {0,1}, class > 2, budget 0) come back as
+//! [`AltDiffError::Protocol`] — never a panic.
+//!
 //! Reply payloads mirror [`Reply`]'s three arms (`op::R_SOLVE`,
 //! `op::R_GRAD`, `op::R_ERR`); admin ops (`op::STATS`, `op::LAYERS`,
 //! `op::STOP`) have empty request payloads. `str16` is a u16 byte count
 //! plus UTF-8 bytes; `f64vec` is a u32 element count plus raw LE f64s.
 
 use crate::coordinator::{
-    Failure, FailureKind, GradientResponse, Reply, Request, Response,
+    Failure, FailureKind, GradientResponse, Priority, Reply, Request,
+    Response,
 };
 use crate::error::{AltDiffError, Result};
 use super::frame::header;
@@ -69,6 +81,7 @@ fn backend_code(b: &str) -> u8 {
         "native" => 0,
         "native-sparse" => 1,
         "pjrt" => 2,
+        "native-admm" => 3,
         _ => 255,
     }
 }
@@ -78,6 +91,7 @@ fn backend_str(c: u8) -> &'static str {
         0 => "native",
         1 => "native-sparse",
         2 => "pjrt",
+        3 => "native-admm",
         _ => "unknown",
     }
 }
@@ -266,6 +280,19 @@ pub fn request_payload_len(req: &Request) -> usize {
         + vec_len(&req.b)
         + vec_len(&req.h)
         + req.grad_v.as_deref().map(vec_len).unwrap_or(0)
+        + extension_len(req)
+}
+
+/// Size of the trailing traffic-plane extension block (0 when both
+/// fields are at their defaults and the block is omitted).
+fn extension_len(req: &Request) -> usize {
+    if req.priority == Priority::Normal && req.deadline_us.is_none() {
+        return 0;
+    }
+    // prio tag u8 [+ class u8] + ddl tag u8 [+ budget u32]
+    1 + if req.priority != Priority::Normal { 1 } else { 0 }
+        + 1
+        + if req.deadline_us.is_some() { 4 } else { 0 }
 }
 
 /// Encode a request as one frame (opcode chosen by the adjoint seed:
@@ -290,6 +317,24 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
     w.f64_vec(&req.h);
     if let Some(v) = &req.grad_v {
         w.f64_vec(v);
+    }
+    // traffic-plane extension: omitted entirely at the defaults, so
+    // default-request frames are byte-identical to pre-extension ones
+    if req.priority != Priority::Normal || req.deadline_us.is_some() {
+        match req.priority {
+            Priority::Normal => w.u8(0),
+            p => {
+                w.u8(1);
+                w.u8(p.code());
+            }
+        }
+        match req.deadline_us {
+            Some(us) => {
+                w.u8(1);
+                w.u32(us);
+            }
+            None => w.u8(0),
+        }
     }
     let frame = w.finish();
     debug_assert_eq!(
@@ -328,6 +373,7 @@ pub fn decode_request(opcode: u8, payload: &[u8]) -> Result<Request> {
     } else {
         None
     };
+    let (priority, deadline_us) = decode_extension(&mut r)?;
     r.done()?;
     Ok(Request {
         id,
@@ -338,8 +384,99 @@ pub fn decode_request(opcode: u8, payload: &[u8]) -> Result<Request> {
         tol,
         grad_v,
         session,
+        priority,
+        deadline_us,
         submitted: Instant::now(),
     })
+}
+
+/// Decode the trailing traffic-plane extension block. An exhausted
+/// reader (a pre-extension client's payload) yields the defaults;
+/// anything present must be well-formed or the whole request is a
+/// `Protocol` error.
+fn decode_extension(r: &mut Rd<'_>) -> Result<(Priority, Option<u32>)> {
+    if r.pos == r.b.len() {
+        return Ok((Priority::Normal, None));
+    }
+    let priority = match r.u8()? {
+        0 => Priority::Normal,
+        1 => {
+            let code = r.u8()?;
+            Priority::from_code(code).ok_or_else(|| {
+                AltDiffError::Protocol(format!(
+                    "priority class must be 0..=2, got {code}"
+                ))
+            })?
+        }
+        tag => {
+            return Err(AltDiffError::Protocol(format!(
+                "priority presence tag must be 0 or 1, got {tag}"
+            )))
+        }
+    };
+    let deadline_us = match r.u8()? {
+        0 => None,
+        1 => {
+            let us = r.u32()?;
+            if us == 0 {
+                return Err(AltDiffError::Protocol(
+                    "deadline budget must be positive".into(),
+                ));
+            }
+            Some(us)
+        }
+        tag => {
+            return Err(AltDiffError::Protocol(format!(
+                "deadline presence tag must be 0 or 1, got {tag}"
+            )))
+        }
+    };
+    Ok((priority, deadline_us))
+}
+
+/// Allocation-free skip-parse of a request payload's traffic-plane
+/// metadata: `(client id, priority, deadline budget)`. The admission
+/// path uses this to shed expired or over-budget requests *before*
+/// paying the full θ deserialization — no `Vec` is ever allocated, the
+/// reader only skips over the count-prefixed fields. Returns the same
+/// `Protocol` errors full decoding would, so a caller that sheds on
+/// `Ok` and falls through to [`decode_request`] on `Err` reports the
+/// identical failure.
+pub fn peek_request_meta(
+    opcode: u8,
+    payload: &[u8],
+) -> Result<(u64, Priority, Option<u32>)> {
+    if opcode != op::SOLVE && opcode != op::GRAD {
+        return Err(AltDiffError::Protocol(format!(
+            "opcode 0x{opcode:02x} is not a request"
+        )));
+    }
+    let mut r = Rd::new(payload);
+    let id = r.u64()?;
+    r.bytes(8)?; // tol
+    match r.u8()? {
+        0 => {}
+        1 => {
+            r.bytes(8)?; // session key
+        }
+        tag => {
+            return Err(AltDiffError::Protocol(format!(
+                "session presence tag must be 0 or 1, got {tag}"
+            )))
+        }
+    }
+    let name_len = r.u16()? as usize;
+    r.bytes(name_len)?;
+    let vecs = if opcode == op::GRAD { 4 } else { 3 };
+    for _ in 0..vecs {
+        let n = r.u32()? as usize;
+        r.bytes(n.checked_mul(8).ok_or_else(|| {
+            AltDiffError::Protocol("vector count overflows".into())
+        })?)?;
+    }
+    let (priority, deadline_us) = decode_extension(&mut r)?;
+    r.done()?;
+    Ok((id, priority, deadline_us))
 }
 
 // -------------------------------------------------------------- replies
@@ -609,6 +746,8 @@ mod tests {
             tol: 1e-3,
             grad_v: None,
             session: None,
+            priority: Priority::Normal,
+            deadline_us: None,
             submitted: Instant::now(),
         };
         let frame = encode_request(&req);
@@ -622,6 +761,8 @@ mod tests {
         assert_eq!(back.h, req.h);
         assert_eq!(back.tol, req.tol);
         assert!(back.grad_v.is_none());
+        assert_eq!(back.priority, Priority::Normal);
+        assert_eq!(back.deadline_us, None);
     }
 
     #[test]
@@ -635,6 +776,8 @@ mod tests {
             tol: 1e-2,
             grad_v: Some(vec![1.0, 0.0, -1.0, 2.0]),
             session: Some(0xfeed_beef),
+            priority: Priority::Normal,
+            deadline_us: None,
             submitted: Instant::now(),
         };
         let frame = encode_request(&req);
@@ -670,13 +813,162 @@ mod tests {
             tol: 0.1,
             grad_v: None,
             session: None,
+            priority: Priority::Normal,
+            deadline_us: None,
             submitted: Instant::now(),
         };
         let frame = encode_request(&req);
         let (op_, payload) = strip(&frame);
+        // a single appended byte now reads as a truncated extension
+        // block (prio tag with nothing after) — still a Protocol error
         let mut longer = payload.to_vec();
         longer.push(0);
         assert!(decode_request(op_, &longer).is_err());
+        // two appended zero bytes parse as an explicit all-default
+        // extension, which is legal; three are trailing garbage again
+        let mut explicit = payload.to_vec();
+        explicit.extend_from_slice(&[0, 0]);
+        let back = decode_request(op_, &explicit).unwrap();
+        assert_eq!(back.priority, Priority::Normal);
+        assert_eq!(back.deadline_us, None);
+        let mut garbage = payload.to_vec();
+        garbage.extend_from_slice(&[0, 0, 0]);
+        assert!(decode_request(op_, &garbage).is_err());
+    }
+
+    #[test]
+    fn priority_and_deadline_round_trip() {
+        for (prio, ddl) in [
+            (Priority::High, Some(1_500u32)),
+            (Priority::Low, None),
+            (Priority::Normal, Some(250_000)),
+            (Priority::High, None),
+        ] {
+            let req = Request {
+                id: 11,
+                layer: "qp16".into(),
+                q: vec![1.0, 2.0],
+                b: vec![3.0],
+                h: vec![4.0],
+                tol: 1e-3,
+                grad_v: None,
+                session: Some(9),
+                priority: prio,
+                deadline_us: ddl,
+                submitted: Instant::now(),
+            };
+            let frame = encode_request(&req);
+            let (op_, payload) = strip(&frame);
+            let back = decode_request(op_, payload).unwrap();
+            assert_eq!(back.priority, prio);
+            assert_eq!(back.deadline_us, ddl);
+            // the skip-parse peek agrees with the full decode
+            let (id, p, d) = peek_request_meta(op_, payload).unwrap();
+            assert_eq!((id, p, d), (11, prio, ddl));
+        }
+    }
+
+    #[test]
+    fn default_requests_omit_the_extension_block() {
+        // old decoders must keep working: a default request's payload
+        // ends exactly where the pre-extension format did
+        let mut req = Request {
+            id: 5,
+            layer: "l".into(),
+            q: vec![1.0],
+            b: vec![],
+            h: vec![],
+            tol: 1e-2,
+            grad_v: None,
+            session: None,
+            priority: Priority::Normal,
+            deadline_us: None,
+            submitted: Instant::now(),
+        };
+        let default_len = encode_request(&req).len();
+        req.priority = Priority::Low;
+        // prio tag + class code + (empty) deadline tag
+        assert_eq!(encode_request(&req).len(), default_len + 3);
+        req.deadline_us = Some(1000);
+        assert_eq!(encode_request(&req).len(), default_len + 3 + 4);
+    }
+
+    #[test]
+    fn malformed_extension_fields_are_protocol_errors() {
+        let req = Request {
+            id: 1,
+            layer: "l".into(),
+            q: vec![],
+            b: vec![],
+            h: vec![],
+            tol: 0.1,
+            grad_v: None,
+            session: None,
+            priority: Priority::Normal,
+            deadline_us: None,
+            submitted: Instant::now(),
+        };
+        let frame = encode_request(&req);
+        let (op_, payload) = strip(&frame);
+        let check = |ext: &[u8]| {
+            let mut p = payload.to_vec();
+            p.extend_from_slice(ext);
+            let err = decode_request(op_, &p).unwrap_err();
+            assert!(matches!(err, AltDiffError::Protocol(_)), "{ext:?}");
+            let err = peek_request_meta(op_, &p).unwrap_err();
+            assert!(matches!(err, AltDiffError::Protocol(_)), "{ext:?}");
+        };
+        check(&[2, 0]); // bad priority presence tag
+        check(&[1, 3, 0]); // priority class out of range
+        check(&[0, 2]); // bad deadline presence tag
+        check(&[0, 1, 0, 0, 0, 0]); // zero deadline budget
+        check(&[1, 1]); // truncated: deadline tag missing
+    }
+
+    #[test]
+    fn peek_meta_defaults_match_old_payloads() {
+        let req = Request {
+            id: 77,
+            layer: "qp".into(),
+            q: vec![0.5; 3],
+            b: vec![1.0],
+            h: vec![2.0; 2],
+            tol: 1e-3,
+            grad_v: Some(vec![1.0; 3]),
+            session: None,
+            priority: Priority::Normal,
+            deadline_us: None,
+            submitted: Instant::now(),
+        };
+        let frame = encode_request(&req);
+        let (op_, payload) = strip(&frame);
+        let (id, p, d) = peek_request_meta(op_, payload).unwrap();
+        assert_eq!(id, 77);
+        assert_eq!(p, Priority::Normal);
+        assert_eq!(d, None);
+        // hostile: peek must reject what decode rejects, without panic
+        assert!(peek_request_meta(op::R_SOLVE, payload).is_err());
+        assert!(peek_request_meta(op_, &payload[..5]).is_err());
+    }
+
+    #[test]
+    fn admm_backend_survives_the_wire() {
+        let reply = Reply::Ok(Response {
+            id: 1,
+            x: vec![1.0],
+            jx: vec![],
+            prim_residual: 0.0,
+            k_used: 10,
+            batch_size: 1,
+            latency: 0.0,
+            backend: "native-admm",
+        });
+        let frame = encode_reply(&reply);
+        let (op_, payload) = strip(&frame);
+        match decode_reply(op_, payload).unwrap() {
+            Reply::Ok(r) => assert_eq!(r.backend, "native-admm"),
+            _ => panic!("wrong arm"),
+        }
     }
 
     #[test]

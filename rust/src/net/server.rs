@@ -34,7 +34,9 @@
 
 use super::frame::{FrameReader, WriteBuf};
 use super::proto::{self, op};
-use crate::coordinator::{Coordinator, Failure, FailureKind, Reply};
+use crate::coordinator::{
+    class_budget, Coordinator, Failure, FailureKind, Priority, Reply,
+};
 use crate::error::Result;
 use std::collections::BTreeMap;
 use std::io::Read;
@@ -78,6 +80,20 @@ impl Default for NetConfig {
     }
 }
 
+/// What the first byte of a connection said it speaks.
+#[derive(Clone, Copy, PartialEq)]
+enum ConnMode {
+    /// No bytes seen yet.
+    Unknown,
+    /// The framed binary protocol (including garbage that fails frame
+    /// validation — malformed peers keep the framed error path).
+    Framed,
+    /// An HTTP/1.x scrape (`GET /metrics`, `GET /healthz`): first byte
+    /// was an ASCII uppercase method letter, which no valid frame
+    /// starts with (the magic is 0xAD).
+    Http,
+}
+
 /// Per-connection state.
 struct Conn {
     stream: TcpStream,
@@ -96,6 +112,15 @@ struct Conn {
     /// sent the STOP op and is owed the post-drain stats ack — kept
     /// alive through the drain even if half-closed
     awaiting_stop_ack: bool,
+    /// protocol this connection speaks (sniffed from its first byte)
+    mode: ConnMode,
+    /// buffered HTTP request bytes (Http mode only)
+    http_buf: Vec<u8>,
+    /// when the write-backpressure gate first parked this connection
+    /// with bytes already buffered — frames decoded after the gate
+    /// lifts aged this long before decode, which is the pre-decode
+    /// deadline checkpoint's clock
+    parked_since: Option<Instant>,
 }
 
 impl Conn {
@@ -184,6 +209,9 @@ impl NetServer {
                                 eof: false,
                                 inflight: 0,
                                 awaiting_stop_ack: false,
+                                mode: ConnMode::Unknown,
+                                http_buf: Vec::new(),
+                                parked_since: None,
                             };
                             if conns.len() >= cfg.max_conns {
                                 conn.wbuf.push(&proto::encode_goodbye(
@@ -214,10 +242,22 @@ impl NetServer {
                     continue;
                 }
                 // backpressure: a connection over its write budget is
-                // not read until the peer drains what it already owes
+                // not read until the peer drains what it already owes.
+                // Frames already buffered in the reader park with it —
+                // note when, so their deadline clock keeps running.
                 if conn.wbuf.len() > cfg.write_backpressure {
+                    if conn.reader.buffered() > 0
+                        && conn.parked_since.is_none()
+                    {
+                        conn.parked_since = Some(Instant::now());
+                    }
                     continue;
                 }
+                let parked_for = conn
+                    .parked_since
+                    .take()
+                    .map(|t| t.elapsed())
+                    .unwrap_or(Duration::ZERO);
                 // bounded read burst so one firehose connection cannot
                 // starve the tick
                 for _ in 0..16 {
@@ -228,7 +268,24 @@ impl NetServer {
                         }
                         Ok(n) => {
                             progress = true;
-                            conn.reader.extend(&scratch[..n]);
+                            // first byte decides the protocol: frames
+                            // start 0xAD, HTTP methods start with an
+                            // ASCII uppercase letter; anything else
+                            // keeps the framed (error) path
+                            if conn.mode == ConnMode::Unknown {
+                                conn.mode =
+                                    if scratch[0].is_ascii_uppercase() {
+                                        ConnMode::Http
+                                    } else {
+                                        ConnMode::Framed
+                                    };
+                            }
+                            if conn.mode == ConnMode::Http {
+                                conn.http_buf
+                                    .extend_from_slice(&scratch[..n]);
+                            } else {
+                                conn.reader.extend(&scratch[..n]);
+                            }
                             if n < scratch.len() {
                                 break;
                             }
@@ -248,6 +305,10 @@ impl NetServer {
                         }
                     }
                 }
+                if conn.mode == ConnMode::Http {
+                    handle_http(conn, &coord, draining);
+                    continue;
+                }
                 loop {
                     match conn.reader.next_frame() {
                         Ok(None) => break,
@@ -263,6 +324,7 @@ impl NetServer {
                                 &mut stop_acks,
                                 &cfg,
                                 &mut draining,
+                                parked_for,
                             );
                             if conn.closing {
                                 break;
@@ -412,7 +474,10 @@ fn set_reply_id(reply: &mut Reply, id: u64) {
     }
 }
 
-/// Handle one decoded frame on `conn`.
+/// Handle one decoded frame on `conn`. `parked_for` is how long the
+/// frame's bytes sat in the connection's reader while the
+/// write-backpressure gate held reads — the pre-decode deadline
+/// checkpoint charges that wait against the request's budget.
 #[allow(clippy::too_many_arguments)]
 fn handle_frame(
     opcode: u8,
@@ -425,17 +490,27 @@ fn handle_frame(
     stop_acks: &mut Vec<u64>,
     cfg: &NetConfig,
     draining: &mut bool,
+    parked_for: Duration,
 ) {
     match opcode {
         op::SOLVE | op::GRAD => {
-            // Admission control runs on the RAW frame: the client id
-            // is the first 8 payload bytes, so rejecting (drain/shed)
-            // never pays the full θ deserialization — keeping the
-            // reject path cheap is the point of shedding.
-            let peek_id = payload
-                .get(..8)
-                .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
-                .unwrap_or(0);
+            // Admission control runs on the RAW frame: id, priority
+            // class, and deadline budget come from an allocation-free
+            // metadata peek, so rejecting (drain/deadline/shed) never
+            // pays the full θ deserialization — keeping the reject
+            // path cheap is the point of shedding. A malformed frame
+            // falls through to decode_request for its Protocol error.
+            let (peek_id, prio, deadline_us) =
+                proto::peek_request_meta(opcode, payload).unwrap_or((
+                    payload
+                        .get(..8)
+                        .map(|b| {
+                            u64::from_le_bytes(b.try_into().unwrap())
+                        })
+                        .unwrap_or(0),
+                    Priority::Normal,
+                    None,
+                ));
             if *draining {
                 coord
                     .metrics
@@ -449,28 +524,44 @@ fn handle_frame(
                 )));
                 return;
             }
-            if *inflight >= cfg.max_inflight {
+            // pre-decode deadline checkpoint: a frame parked under
+            // write backpressure longer than its whole budget is dead
+            // on arrival — shed before decode
+            if let Some(us) = deadline_us {
+                if parked_for >= Duration::from_micros(us as u64) {
+                    coord.metrics.note_deadline_shed(prio);
+                    conn.push_reply(&Reply::Err(Failure::new(
+                        peek_id,
+                        FailureKind::DeadlineExceeded,
+                        format!(
+                            "deadline budget {us}µs elapsed before \
+                             decode ({}µs parked under write \
+                             backpressure)",
+                            parked_for.as_micros()
+                        ),
+                    )));
+                    return;
+                }
+            }
+            let budget = class_budget(cfg.max_inflight, prio);
+            if *inflight >= budget {
                 // shed instead of queueing: the reply goes out on this
-                // tick, the connection stays healthy
-                coord
-                    .metrics
-                    .shed
-                    .fetch_add(1, Ordering::Relaxed);
-                coord
-                    .metrics
-                    .failures
-                    .fetch_add(1, Ordering::Relaxed);
+                // tick, the connection stays healthy. Budgets are
+                // graduated by class, so Low sheds before Normal
+                // before High as the pool fills.
+                coord.metrics.note_shed(prio);
                 conn.push_reply(&Reply::Err(Failure::new(
                     peek_id,
                     FailureKind::Overloaded,
                     format!(
-                        "in-flight budget {} exhausted; retry later",
-                        cfg.max_inflight
+                        "in-flight budget {budget} exhausted for \
+                         class {}; retry later",
+                        prio.label()
                     ),
                 )));
                 return;
             }
-            let req = match proto::decode_request(opcode, payload) {
+            let mut req = match proto::decode_request(opcode, payload) {
                 Ok(r) => r,
                 Err(e) => {
                     coord
@@ -486,6 +577,15 @@ fn handle_frame(
                     return;
                 }
             };
+            // the frame aged `parked_for` before decode could stamp
+            // `submitted`; backdate so the later checkpoints (and
+            // latency accounting) see the request's true age
+            if parked_for > Duration::ZERO {
+                req.submitted = req
+                    .submitted
+                    .checked_sub(parked_for)
+                    .unwrap_or(req.submitted);
+            }
             // hand the decoded request straight to the coordinator —
             // its decode-time `submitted` stamp survives, so latency
             // accounting starts at server-side decode as documented.
@@ -551,4 +651,109 @@ fn handle_frame(
             conn.closing = true;
         }
     }
+}
+
+/// Render one HTTP/1.0 response (`Connection: close`; HEAD callers
+/// pass an empty body and get a zero Content-Length).
+fn http_response(status: &str, ctype: &str, body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.0 {status}\r\n\
+         Content-Type: {ctype}\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Serve one sniffed HTTP connection: a zero-dep `GET /metrics` +
+/// `GET /healthz` responder multiplexed on the same poll loop as the
+/// framed protocol, so a Prometheus scrape or a load balancer's health
+/// probe works *live* against a serving front end — no separate port,
+/// no extra thread, and the render cost is paid by the scraper's tick
+/// only. One request per connection (HTTP/1.0 semantics): the response
+/// queues on the ordinary write buffer and the connection closes after
+/// the flush.
+fn handle_http(conn: &mut Conn, coord: &Coordinator, draining: bool) {
+    const MAX_HEADER: usize = 8 * 1024;
+    let end = conn.http_buf.windows(4).position(|w| w == b"\r\n\r\n");
+    let Some(end) = end else {
+        if conn.http_buf.len() > MAX_HEADER {
+            conn.wbuf.push(&http_response(
+                "400 Bad Request",
+                "text/plain",
+                "request header too large\n",
+            ));
+            conn.closing = true;
+        } else if conn.eof {
+            // peer gave up mid-request: nothing to answer
+            conn.closing = true;
+        }
+        return;
+    };
+    let head = String::from_utf8_lossy(&conn.http_buf[..end]);
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_ascii_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let response = if method != "GET" && method != "HEAD" {
+        http_response(
+            "405 Method Not Allowed",
+            "text/plain",
+            "only GET and HEAD are served\n",
+        )
+    } else {
+        match path {
+            "/metrics" => {
+                let text = coord.metrics.render_text();
+                let body = if method == "HEAD" { "" } else { &text };
+                // version=0.0.4 is the Prometheus text exposition format
+                http_response(
+                    "200 OK",
+                    "text/plain; version=0.0.4",
+                    body,
+                )
+            }
+            "/healthz" => {
+                // health reflects drain state and shard saturation: a
+                // draining server answers 503 so balancers stop
+                // routing to it; a shard queue at ≥ 90% of its bound
+                // degrades the report without failing the probe
+                let depths = coord.shard_queue_depths();
+                let cap = coord.shard_queue_cap().max(1);
+                let saturated =
+                    depths.iter().any(|&d| d * 10 >= cap * 9);
+                let status = if draining {
+                    "draining"
+                } else if saturated {
+                    "degraded"
+                } else {
+                    "ok"
+                };
+                let code = if draining {
+                    "503 Service Unavailable"
+                } else {
+                    "200 OK"
+                };
+                let body = format!(
+                    "{{\"status\":\"{status}\",\"shards\":{},\
+                     \"queue_cap\":{cap},\"queue_depth\":{:?},\
+                     \"inflight\":{}}}\n",
+                    depths.len(),
+                    depths,
+                    coord.metrics.net_inflight.load(Ordering::Relaxed)
+                );
+                let body =
+                    if method == "HEAD" { String::new() } else { body };
+                http_response(code, "application/json", &body)
+            }
+            _ => http_response(
+                "404 Not Found",
+                "text/plain",
+                "known paths: /metrics /healthz\n",
+            ),
+        }
+    };
+    conn.wbuf.push(&response);
+    conn.closing = true;
 }

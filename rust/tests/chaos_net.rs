@@ -1,0 +1,555 @@
+//! Chaos suite: the serving plane under injected network faults.
+//!
+//! A seeded `ChaosProxy` sits between every client and the server,
+//! tearing frames, stalling mid-frame, delaying and throttling bytes,
+//! and (in the retry test) killing connections mid-solve. The
+//! contracts under test:
+//!
+//! - **exactly-once**: zero lost and zero duplicated replies, no
+//!   matter how the byte stream is mistreated;
+//! - **parity**: every delivered solve/gradient matches a direct
+//!   engine call at the served iteration count to 1e-8 — chaos may
+//!   delay answers, never corrupt them;
+//! - **priority order**: under equal per-class pressure, Low sheds
+//!   strictly before High, and the per-class server counters
+//!   reconcile exactly with the client-observed tallies;
+//! - **deadline accounting**: expired requests come back
+//!   `DeadlineExceeded`, never consume a solve, and the server's
+//!   deadline-shed counter equals the client's tally;
+//! - **liveness**: `GET /metrics` and `GET /healthz` answer on the
+//!   same port while the chaos run is in flight.
+
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
+use altdiff::coordinator::{
+    Config, Coordinator, FailureKind, Priority, Reply,
+};
+use altdiff::net::{
+    ChaosConfig, ChaosProxy, Client, NetConfig, NetServer,
+    PipelinedClient, RetryPolicy,
+};
+use altdiff::prob::dense_qp;
+use std::collections::BTreeSet;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const ORD: Ordering = Ordering::Relaxed;
+
+struct Loopback {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<Coordinator>,
+}
+
+fn start_server(config: Config, net: NetConfig) -> Loopback {
+    let coord = Coordinator::builder(config)
+        .register("dense12", dense_qp(12, 6, 3, 9), 1.0)
+        .unwrap()
+        .register("d64", dense_qp(64, 32, 12, 2), 1.0)
+        .unwrap()
+        .start();
+    let server =
+        NetServer::bind("127.0.0.1:0", coord, net).expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run());
+    Loopback { addr, stop, handle }
+}
+
+impl Loopback {
+    fn finish(self) -> Coordinator {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handle.join().expect("server thread")
+    }
+}
+
+/// Minimal HTTP/1.0 GET against the serving port; returns
+/// (status line, body). The server closes after one response.
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("http connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())
+        .unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("http response");
+    let (head, body) =
+        raw.split_once("\r\n\r\n").expect("header terminator");
+    let status = head.lines().next().unwrap_or("").to_string();
+    (status, body.to_string())
+}
+
+/// Torn frames, mid-frame stalls, delays, and a slow-reader throttle:
+/// every reply arrives exactly once and matches the direct engine to
+/// 1e-8, while /metrics and /healthz answer mid-run on the same port.
+#[test]
+fn torn_frames_never_lose_or_corrupt_replies_and_http_stays_live() {
+    let lb = start_server(
+        Config {
+            workers: 2,
+            max_batch: 4,
+            batch_timeout_us: 1_000,
+            artifacts: None,
+            ..Default::default()
+        },
+        NetConfig::default(),
+    );
+    let mut proxy = ChaosProxy::spawn(
+        lb.addr,
+        ChaosConfig {
+            seed: 11,
+            tear_prob: 0.6,
+            stall_prob: 0.7,
+            stall_us: 1_500,
+            delay_prob: 0.3,
+            delay_us: 800,
+            throttle: 96,
+            ..ChaosConfig::default()
+        },
+    )
+    .expect("proxy");
+    let paddr = proxy.addr();
+    let qp = dense_qp(12, 6, 3, 9);
+
+    const CLIENTS: u64 = 4;
+    const PER: u64 = 12;
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let qp = qp.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut cl = PipelinedClient::connect(paddr, PER as usize)
+                .expect("connect");
+            cl.set_timeout(Some(Duration::from_secs(120))).unwrap();
+            let mut replies = Vec::new();
+            for i in 0..PER {
+                // open-loop burst at mixed priorities: the window
+                // holds the whole burst, replies never pace sends
+                cl.set_priority(Priority::ALL[i as usize % 3]);
+                let s = 1.0 + 0.02 * (c * PER + i) as f64;
+                let grad_v = (i % 4 == 1).then(|| {
+                    (0..12).map(|j| 1.0 - 0.1 * j as f64).collect()
+                });
+                replies.extend(
+                    cl.submit(
+                        "dense12",
+                        qp.q.iter().map(|&v| v * s).collect(),
+                        qp.b.clone(),
+                        qp.h.clone(),
+                        grad_v,
+                        1e-3,
+                    )
+                    .expect("submit under chaos"),
+                );
+            }
+            replies.extend(cl.drain().expect("drain under chaos"));
+            (c, replies)
+        }));
+    }
+
+    // liveness while the chaos traffic is in flight: the observability
+    // endpoints share the serving socket and must answer immediately
+    let (status, body) = http_get(lb.addr, "/metrics");
+    assert!(status.contains("200"), "mid-run /metrics: {status}");
+    assert!(body.contains("altdiff_requests_total"));
+    assert!(body.contains("altdiff_class_served_total{class=\"high\"}"));
+    let (status, body) = http_get(lb.addr, "/healthz");
+    assert!(status.contains("200"), "mid-run /healthz: {status}");
+    assert!(body.contains("\"status\""));
+    assert!(body.contains("\"queue_depth\""));
+
+    let direct = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+    for h in handles {
+        let (c, replies) = h.join().expect("client thread");
+        assert_eq!(
+            replies.len(),
+            PER as usize,
+            "client {c}: lost replies under chaos"
+        );
+        let ids: BTreeSet<u64> =
+            replies.iter().map(|t| t.reply.id()).collect();
+        assert_eq!(
+            ids.len(),
+            PER as usize,
+            "client {c}: duplicated replies under chaos"
+        );
+        for t in &replies {
+            let i = t.reply.id() - 1; // ids are 1-based, send order
+            let s = 1.0 + 0.02 * (c * PER + i) as f64;
+            let q: Vec<f64> = qp.q.iter().map(|&v| v * s).collect();
+            match &t.reply {
+                Reply::Ok(r) => {
+                    let opts = Options {
+                        tol: 0.0,
+                        max_iter: r.k_used,
+                        backward: BackwardMode::Forward(Param::B),
+                        ..Default::default()
+                    };
+                    let want =
+                        direct.solve_with(Some(&q), None, None, &opts);
+                    for (a, b) in r.x.iter().zip(&want.x) {
+                        assert!(
+                            (a - b).abs() < 1e-8,
+                            "chaos corrupted x: {a} vs {b}"
+                        );
+                    }
+                }
+                Reply::Grad(g) => {
+                    let v: Vec<f64> = (0..12)
+                        .map(|j| 1.0 - 0.1 * j as f64)
+                        .collect();
+                    let opts = Options {
+                        tol: 0.0,
+                        max_iter: g.k_used,
+                        backward: BackwardMode::Adjoint,
+                        ..Default::default()
+                    };
+                    let want = direct
+                        .solve_vjp(Some(&q), None, None, &v, &opts);
+                    for (a, b) in
+                        g.grad_q.iter().zip(&want.vjp.grad_q)
+                    {
+                        assert!(
+                            (a - b).abs() < 1e-8,
+                            "chaos corrupted grad_q: {a} vs {b}"
+                        );
+                    }
+                }
+                Reply::Err(f) => {
+                    panic!("unexpected failure under chaos: {}", f.error)
+                }
+            }
+        }
+    }
+    proxy.stop();
+    let coord = lb.finish();
+    assert!(coord.metrics.requests.load(ORD) >= CLIENTS * PER);
+    assert_eq!(coord.metrics.shed.load(ORD), 0, "no pressure, no sheds");
+    assert!(proxy.stats().torn.load(ORD) > 0, "chaos never fired");
+}
+
+/// Equal per-class pressure against a small in-flight budget, through
+/// the chaos proxy: Low sheds strictly before High, nothing is lost,
+/// and the per-class server counters equal the client-side tallies.
+#[test]
+fn mixed_priority_bursts_shed_low_before_high_exactly_once() {
+    let lb = start_server(
+        Config {
+            workers: 1,
+            max_batch: 1,
+            batch_timeout_us: 500,
+            artifacts: None,
+            ..Default::default()
+        },
+        // class budgets: High 16, Normal 14, Low 12
+        NetConfig { max_inflight: 16, ..Default::default() },
+    );
+    let mut proxy = ChaosProxy::spawn(
+        lb.addr,
+        ChaosConfig {
+            seed: 23,
+            tear_prob: 0.3,
+            stall_prob: 0.4,
+            stall_us: 500,
+            delay_prob: 0.1,
+            delay_us: 300,
+            ..ChaosConfig::default()
+        },
+    )
+    .expect("proxy");
+    let qp = dense_qp(64, 32, 12, 2);
+    const N: u64 = 90;
+    let mut cl = PipelinedClient::connect(proxy.addr(), N as usize)
+        .expect("connect");
+    cl.set_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut replies = Vec::new();
+    for i in 0..N {
+        // strict H/N/L cycling = equal arrival pressure per class;
+        // id (1-based) → class ALL[(id-1) % 3] is the reply oracle.
+        // tol 1e-6 keeps each solve slow enough that the burst
+        // saturates the in-flight budget long before the single
+        // worker drains it — the shed bands must actually engage.
+        cl.set_priority(Priority::ALL[i as usize % 3]);
+        let s = 1.0 + 0.01 * i as f64;
+        replies.extend(
+            cl.submit(
+                "d64",
+                qp.q.iter().map(|&v| v * s).collect(),
+                qp.b.clone(),
+                qp.h.clone(),
+                None,
+                1e-6,
+            )
+            .expect("submit"),
+        );
+    }
+    replies.extend(cl.drain().expect("drain"));
+    assert_eq!(replies.len(), N as usize, "lost replies under pressure");
+    let ids: BTreeSet<u64> =
+        replies.iter().map(|t| t.reply.id()).collect();
+    assert_eq!(ids.len(), N as usize, "duplicated replies");
+
+    let direct = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+    let mut served = [0u64; 3];
+    let mut shed = [0u64; 3];
+    for t in &replies {
+        let class = Priority::ALL[(t.reply.id() - 1) as usize % 3];
+        match &t.reply {
+            Reply::Ok(r) => {
+                served[class.idx()] += 1;
+                // delivered replies stay exact even while shedding
+                let s = 1.0 + 0.01 * (t.reply.id() - 1) as f64;
+                let q: Vec<f64> =
+                    qp.q.iter().map(|&v| v * s).collect();
+                let opts = Options {
+                    tol: 0.0,
+                    max_iter: r.k_used,
+                    backward: BackwardMode::Forward(Param::B),
+                    ..Default::default()
+                };
+                let want =
+                    direct.solve_with(Some(&q), None, None, &opts);
+                for (a, b) in r.x.iter().zip(&want.x) {
+                    assert!((a - b).abs() < 1e-8);
+                }
+            }
+            Reply::Err(f) if f.kind == FailureKind::Overloaded => {
+                assert!(f.error.contains("budget"), "{}", f.error);
+                shed[class.idx()] += 1;
+            }
+            other => panic!("unexpected reply: {other:?}"),
+        }
+    }
+    let (sh, sn, sl) = (
+        shed[Priority::High.idx()],
+        shed[Priority::Normal.idx()],
+        shed[Priority::Low.idx()],
+    );
+    assert!(
+        sl >= sn && sn >= sh,
+        "shed order violated: low {sl} normal {sn} high {sh}"
+    );
+    assert!(sl > sh, "Low must shed strictly before High ({sl} vs {sh})");
+    proxy.stop();
+    let coord = lb.finish();
+    for p in Priority::ALL {
+        assert_eq!(
+            coord.metrics.shed_by_class[p.idx()].load(ORD),
+            shed[p.idx()],
+            "{} shed counter != client tally",
+            p.label()
+        );
+        assert_eq!(
+            coord.metrics.served_by_class[p.idx()].load(ORD),
+            served[p.idx()],
+            "{} served counter != client tally",
+            p.label()
+        );
+    }
+    assert_eq!(
+        coord.metrics.shed.load(ORD),
+        shed.iter().sum::<u64>()
+    );
+}
+
+/// Deadline budgets through the chaos proxy: a worker pinned by a live
+/// solve means the 1µs-budget requests behind it are long expired at
+/// every checkpoint — all come back `DeadlineExceeded`, the server's
+/// deadline counter equals the client tally, and the execution
+/// counters prove no expired request ever consumed a solve.
+#[test]
+fn deadline_sheds_reconcile_and_never_consume_a_solve() {
+    let lb = start_server(
+        Config {
+            workers: 1,
+            max_batch: 1,
+            batch_timeout_us: 500,
+            artifacts: None,
+            ..Default::default()
+        },
+        NetConfig::default(),
+    );
+    let mut proxy = ChaosProxy::spawn(
+        lb.addr,
+        ChaosConfig {
+            seed: 31,
+            tear_prob: 0.4,
+            stall_prob: 0.5,
+            stall_us: 1_000,
+            ..ChaosConfig::default()
+        },
+    )
+    .expect("proxy");
+    let qp = dense_qp(64, 32, 12, 2);
+    const DOOMED: u64 = 12;
+    let mut cl =
+        PipelinedClient::connect(proxy.addr(), DOOMED as usize + 1)
+            .expect("connect");
+    cl.set_timeout(Some(Duration::from_secs(120))).unwrap();
+    // id 1: no deadline, occupies the single worker for milliseconds
+    let mut replies = cl
+        .submit("d64", qp.q.clone(), qp.b.clone(), qp.h.clone(), None, 1e-3)
+        .expect("live submit");
+    // ids 2..: 1µs budgets, dead on arrival at whichever checkpoint
+    // (shard queue or pre-execution) sees them first
+    cl.set_deadline_us(1);
+    for i in 0..DOOMED {
+        cl.set_priority(Priority::ALL[i as usize % 3]);
+        let s = 1.0 + 0.01 * i as f64;
+        replies.extend(
+            cl.submit(
+                "d64",
+                qp.q.iter().map(|&v| v * s).collect(),
+                qp.b.clone(),
+                qp.h.clone(),
+                None,
+                1e-3,
+            )
+            .expect("doomed submit"),
+        );
+    }
+    replies.extend(cl.drain().expect("drain"));
+    assert_eq!(replies.len(), DOOMED as usize + 1);
+    let mut client_deadline_tally = 0u64;
+    let direct = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+    for t in &replies {
+        match &t.reply {
+            Reply::Ok(r) => {
+                assert_eq!(t.reply.id(), 1, "only id 1 may be served");
+                let opts = Options {
+                    tol: 0.0,
+                    max_iter: r.k_used,
+                    backward: BackwardMode::Forward(Param::B),
+                    ..Default::default()
+                };
+                let want = direct.solve_with(None, None, None, &opts);
+                for (a, b) in r.x.iter().zip(&want.x) {
+                    assert!((a - b).abs() < 1e-8);
+                }
+            }
+            Reply::Err(f) => {
+                assert_eq!(
+                    f.kind,
+                    FailureKind::DeadlineExceeded,
+                    "id {}: {}",
+                    f.id,
+                    f.error
+                );
+                assert!(f.error.contains("deadline"), "{}", f.error);
+                client_deadline_tally += 1;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert_eq!(client_deadline_tally, DOOMED);
+    proxy.stop();
+    let coord = lb.finish();
+    let m = &coord.metrics;
+    assert_eq!(
+        m.deadline_shed.load(ORD),
+        client_deadline_tally,
+        "server deadline-shed counter != client DeadlineExceeded tally"
+    );
+    let by_class: u64 =
+        (0..3).map(|i| m.deadline_by_class[i].load(ORD)).sum();
+    assert_eq!(by_class, DOOMED);
+    // only the live solve executed: one n=64 element, once
+    assert_eq!(
+        m.native_elems.load(ORD) + m.adjoint_elems.load(ORD),
+        1,
+        "an expired request consumed a solve"
+    );
+}
+
+/// Connection kills mid-solve: a retry-armed blocking client keeps
+/// its correctness contract — every answer it does deliver passes
+/// 1e-8 parity, terminal failures are surfaced (not retried forever),
+/// and the reconnect machinery demonstrably engaged.
+#[test]
+fn retry_client_survives_connection_kills_without_wrong_answers() {
+    let lb = start_server(
+        Config {
+            workers: 2,
+            max_batch: 4,
+            batch_timeout_us: 1_000,
+            artifacts: None,
+            ..Default::default()
+        },
+        NetConfig::default(),
+    );
+    let mut proxy = ChaosProxy::spawn(
+        lb.addr,
+        ChaosConfig {
+            seed: 47,
+            tear_prob: 0.3,
+            stall_prob: 0.3,
+            stall_us: 500,
+            reset_prob: 0.35,
+            ..ChaosConfig::default()
+        },
+    )
+    .expect("proxy");
+    let qp = dense_qp(12, 6, 3, 9);
+    let direct = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+    let mut cl = Client::connect(proxy.addr()).expect("connect");
+    cl.set_timeout(Some(Duration::from_secs(20))).unwrap();
+    cl.set_retry(RetryPolicy {
+        max_retries: 6,
+        base_backoff: Duration::from_millis(2),
+        max_backoff: Duration::from_millis(40),
+        seed: 5,
+    });
+    let mut ok = 0u32;
+    let mut transport_failures = 0u32;
+    for i in 0..10u32 {
+        let s = 1.0 + 0.03 * i as f64;
+        let q: Vec<f64> = qp.q.iter().map(|&v| v * s).collect();
+        match cl.solve(
+            "dense12",
+            q.clone(),
+            qp.b.clone(),
+            qp.h.clone(),
+            1e-3,
+        ) {
+            Ok(Reply::Ok(r)) => {
+                ok += 1;
+                let opts = Options {
+                    tol: 0.0,
+                    max_iter: r.k_used,
+                    backward: BackwardMode::Forward(Param::B),
+                    ..Default::default()
+                };
+                let want =
+                    direct.solve_with(Some(&q), None, None, &opts);
+                for (a, b) in r.x.iter().zip(&want.x) {
+                    assert!(
+                        (a - b).abs() < 1e-8,
+                        "retry delivered a wrong answer: {a} vs {b}"
+                    );
+                }
+            }
+            Ok(other) => panic!("unexpected reply {other:?}"),
+            // retries exhausted against a kill-happy proxy: an honest
+            // transport error, never a silent wrong answer
+            Err(e) => {
+                transport_failures += 1;
+                let msg = e.to_string();
+                assert!(!msg.is_empty());
+            }
+        }
+    }
+    assert!(
+        ok >= 1,
+        "bounded retry never completed a solve through resets \
+         ({transport_failures} transport failures)"
+    );
+    let (retries, reconnects) = cl.retry_counts();
+    assert!(
+        retries >= 1 && reconnects >= 1,
+        "reset_prob 0.35 over 10 ops must engage the retry path \
+         (retries {retries}, reconnects {reconnects})"
+    );
+    proxy.stop();
+    assert!(proxy.stats().resets.load(ORD) >= 1);
+    lb.finish();
+}

@@ -2,7 +2,8 @@
 //! available offline; seeds are explicit so failures reproduce).
 
 use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
-use altdiff::coordinator::{Batcher, Request, TruncationTable};
+use altdiff::coordinator::{Batcher, Priority, Request, TruncationTable};
+use altdiff::warm::EngineFamily;
 use altdiff::linalg::{gemv, Chol, Lu, Mat};
 use altdiff::prob::dense_qp;
 use altdiff::sparse::Csr;
@@ -177,9 +178,11 @@ fn prop_batcher_conservation() {
                 tol: 1e-3,
                 grad_v: None,
                 session: None,
+                priority: Priority::Normal,
+                deadline_us: None,
                 submitted: Instant::now(),
             };
-            if let Some(batch) = b.push(k, req) {
+            if let Some(batch) = b.push(EngineFamily::AltDiff, k, req) {
                 assert!(batch.requests.len() <= max_batch);
                 for r in &batch.requests {
                     assert_eq!(

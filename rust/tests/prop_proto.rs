@@ -5,7 +5,8 @@
 //! over-allocate.
 
 use altdiff::coordinator::{
-    Failure, FailureKind, GradientResponse, Reply, Request, Response,
+    Failure, FailureKind, GradientResponse, Priority, Reply, Request,
+    Response,
 };
 use altdiff::net::frame::{
     header, parse_header, FrameReader, HEADER_LEN, MAX_PAYLOAD,
@@ -36,6 +37,9 @@ fn rand_request(rng: &mut Pcg64, grad: bool) -> Request {
         tol: 10f64.powi(-(rng.below(9) as i32)),
         grad_v: grad.then(|| rand_vec(rng, 40)),
         session: (rng.below(2) == 1).then(|| rng.next_u64()),
+        priority: Priority::from_code(rng.below(3) as u8).unwrap(),
+        deadline_us: (rng.below(2) == 1)
+            .then(|| 1 + rng.next_u64() as u32 % 1_000_000),
         submitted: Instant::now(),
     }
 }
@@ -63,6 +67,8 @@ fn request_encode_decode_is_identity() {
         assert_eq!(back.tol, req.tol);
         assert_eq!(back.grad_v, req.grad_v);
         assert_eq!(back.session, req.session);
+        assert_eq!(back.priority, req.priority);
+        assert_eq!(back.deadline_us, req.deadline_us);
     }
 }
 
@@ -96,7 +102,8 @@ fn reply_encode_decode_is_identity_all_variants() {
             }),
             _ => Reply::Err(Failure::new(
                 rng.next_u64(),
-                FailureKind::from_code(rng.below(4) as u8).unwrap(),
+                // all five kinds, DeadlineExceeded (code 4) included
+                FailureKind::from_code(rng.below(5) as u8).unwrap(),
                 rand_name(&mut rng),
             )),
         };
@@ -192,6 +199,8 @@ fn wrong_version_and_magic_are_rejected() {
         tol: 0.1,
         grad_v: None,
         session: None,
+        priority: Priority::Normal,
+        deadline_us: None,
         submitted: Instant::now(),
     });
     let mut bad_ver = good.clone();
@@ -246,6 +255,38 @@ fn bad_session_tag_is_rejected() {
         // must be 0 or 1 — anything else is a protocol violation
         payload[16] = 2;
         assert!(proto::decode_request(op_, &payload).is_err());
+    }
+}
+
+#[test]
+fn malformed_priority_and_deadline_extensions_are_rejected() {
+    let mut rng = Pcg64::new(21);
+    for _ in 0..50 {
+        let mut req = rand_request(&mut rng, false);
+        // force the extension block onto the wire
+        req.priority = Priority::Low;
+        req.deadline_us = Some(1 + rng.below(1_000_000) as u32);
+        let (op_, payload) = strip(&proto::encode_request(&req));
+        // priority class byte is third-from... locate from the tail:
+        // [prio tag, class, ddl tag, 4×budget] = last 7 bytes
+        let base = payload.len() - 7;
+        let mut bad_class = payload.clone();
+        bad_class[base + 1] = 3 + (rng.below(250) as u8); // only 0..=2 valid
+        assert!(proto::decode_request(op_, &bad_class).is_err());
+        let mut bad_prio_tag = payload.clone();
+        bad_prio_tag[base] = 2 + (rng.below(250) as u8); // tag is 0/1
+        assert!(proto::decode_request(op_, &bad_prio_tag).is_err());
+        let mut bad_ddl_tag = payload.clone();
+        bad_ddl_tag[base + 2] = 2 + (rng.below(250) as u8);
+        assert!(proto::decode_request(op_, &bad_ddl_tag).is_err());
+        // truncations *inside* the extension must error too (cutting
+        // the whole block off is legal — that's a pre-extension frame)
+        for cut in base + 1..payload.len() {
+            assert!(
+                proto::decode_request(op_, &payload[..cut]).is_err(),
+                "extension truncated at {cut} decoded"
+            );
+        }
     }
 }
 
