@@ -9,8 +9,14 @@
 //! open-loop trace (`LoadgenOpts::burst`) against 1 vs N coordinator
 //! shards to watch the scaling path. Reports p50/p99 round trips and
 //! throughput; JSON via `util::bench::JsonReport` (`--smoke` runs a
-//! tiny grid — including the 1-vs-2-shard cell — and never writes the
-//! committed repo-root baselines).
+//! tiny grid — including the 1-vs-2-shard cell and the trace-overhead
+//! pair — and never writes the committed repo-root baselines).
+//!
+//! The trace-overhead pair reruns one closed-loop cell with the
+//! tracing plane off vs fully on (stamps + 1-in-1 sampling + stage
+//! echo) and asserts the enabled plane stays within a generous noise
+//! bound of the disabled one — the "near-free" contract from
+//! DESIGN.md §Observability as a measured number.
 
 use altdiff::coordinator::{Config, Coordinator, Reply};
 use altdiff::net::{
@@ -22,13 +28,16 @@ use std::time::{Duration, Instant};
 
 const LAYER: &str = "qp16";
 
-fn coordinator(workers: usize, shards: usize) -> Coordinator {
+fn coordinator(workers: usize, shards: usize, traced: bool) -> Coordinator {
     Coordinator::builder(Config {
         workers,
         max_batch: 8,
         batch_timeout_us: 2_000,
         shards,
         artifacts: None,
+        stamps: traced,
+        trace_every: if traced { 1 } else { 0 },
+        trace_ring: 512,
         ..Default::default()
     })
     .register(LAYER, dense_qp(16, 8, 4, 1), 1.0)
@@ -55,8 +64,9 @@ fn run_net(
     clients: usize,
     shards: usize,
     burst: usize,
+    traced: bool,
 ) -> Cell {
-    let coord = coordinator(2, shards);
+    let coord = coordinator(2, shards, traced);
     let server =
         NetServer::bind("127.0.0.1:0", coord, NetConfig::default())
             .expect("bind");
@@ -75,6 +85,7 @@ fn run_net(
             seed: 1,
             sessions: burst > 0,
             burst,
+            stages: traced,
             ..Default::default()
         },
     )
@@ -97,7 +108,7 @@ fn run_net(
 /// so threads funnel through one submit/recv owner — mirroring what
 /// the event loop does, minus the wire.
 fn run_inproc(nreq: usize, window: usize, clients: usize) -> Cell {
-    let mut coord = coordinator(2, 1);
+    let mut coord = coordinator(2, 1, false);
     // same request count as run_net (the loadgen distributes the
     // remainder across clients; here the trace is one stream anyway)
     let total = nreq;
@@ -223,7 +234,7 @@ fn main() {
     for &b in &windows {
         for mode in ["net", "inproc"] {
             let cell = if mode == "net" {
-                run_net(nreq, b, clients, 1, 0)
+                run_net(nreq, b, clients, 1, 0, false)
             } else {
                 run_inproc(nreq, b, clients)
             };
@@ -261,7 +272,7 @@ fn main() {
         if smoke { vec![1, 2] } else { vec![1, 2, 4] };
     let burst_b = 8;
     for &s in &shard_grid {
-        let cell = run_net(nreq, burst_b, clients, s, burst_b);
+        let cell = run_net(nreq, burst_b, clients, s, burst_b, false);
         table.row(&[
             format!("net ×{s} shard{}", if s == 1 { "" } else { "s" }),
             format!("{burst_b} (burst)"),
@@ -292,6 +303,53 @@ fn main() {
             ],
         );
     }
+
+    // trace-overhead cells: the identical closed-loop trace with the
+    // tracing plane fully off (the default) and fully on (stage
+    // stamps + 1-in-1 solver sampling + per-reply stage echo). The
+    // observability contract — disabled tracing is near-free, enabled
+    // tracing costs a bounded slice — is measured here, not claimed;
+    // the cells run in --smoke so CI watches the delta on every push.
+    let trace_b = 8;
+    let mut trace_cells = Vec::new();
+    for (label, traced) in [("trace-off", false), ("trace-on", true)] {
+        let cell = run_net(nreq, trace_b, clients, 1, 0, traced);
+        table.row(&[
+            label.to_string(),
+            trace_b.to_string(),
+            format!("{:.0}", cell.throughput),
+            format!("{:.0}", cell.p50_us),
+            format!("{:.0}", cell.p99_us),
+            cell.shed.to_string(),
+            cell.failed.to_string(),
+        ]);
+        assert_eq!(
+            cell.failed, 0,
+            "{label}: no request may fail under the default budget"
+        );
+        let stats = Stats::from_samples(&cell.rtts);
+        report.entry(
+            &[("mode", label), ("B", &trace_b.to_string())],
+            &stats,
+            &[
+                ("throughput_rps", cell.throughput),
+                ("p50_us", cell.p50_us),
+                ("p99_us", cell.p99_us),
+            ],
+        );
+        trace_cells.push(cell);
+    }
+    // generous noise bound (loopback RTTs are jittery at this scale):
+    // even with every request sampled and echoing, the plane may not
+    // cost half the throughput — a real regression (a lock on the hot
+    // path, an allocation per iteration) lands far below this
+    let (off, on) = (&trace_cells[0], &trace_cells[1]);
+    assert!(
+        on.throughput >= off.throughput * 0.5,
+        "tracing overhead out of bounds: {:.0} req/s on vs {:.0} off",
+        on.throughput,
+        off.throughput
+    );
 
     table.print();
     table.write_csv("net_serving").unwrap();

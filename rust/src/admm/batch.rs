@@ -20,6 +20,7 @@ use crate::linalg::{
     axpy_cols, gemm_acc_cols, gemm_acc_rows, gemv, norm2, par_gemm_acc,
     Mat,
 };
+use crate::obs::IterObserver;
 use crate::prob::Qp;
 use crate::warm::{AdmmSeed, WarmStart};
 
@@ -95,6 +96,24 @@ impl BatchedAdmm {
         hs: Option<&[&[f64]]>,
         warms: Option<&[Option<WarmStart>]>,
         opts: &Options,
+    ) -> BatchSolution {
+        self.solve_batch_observed(qs, bs, hs, warms, opts, None)
+    }
+
+    /// [`Self::solve_batch_from`] with a per-iteration
+    /// [`IterObserver`] hook (see
+    /// [`BatchedAltDiff::solve_batch_observed`](crate::batch::BatchedAltDiff::solve_batch_observed)
+    /// for the contract): residuals only for claimed elements,
+    /// `observer = None` is the unsampled fast path, identical solution
+    /// either way.
+    pub fn solve_batch_observed(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        warms: Option<&[Option<WarmStart>]>,
+        opts: &Options,
+        mut observer: Option<&mut dyn IterObserver>,
     ) -> BatchSolution {
         let n = self.qp.n();
         let m = self.qp.m_ineq();
@@ -256,6 +275,27 @@ impl BatchedAdmm {
                     .map(|(a, b)| (a - b) * (a - b))
                     .sum::<f64>()
                     .sqrt();
+                // sampled-trace hook: cx = Cx = [Ax; Gx] at the k+1
+                // iterate, slack re-derived as the unpack step does
+                if let Some(obs) = observer.as_deref_mut() {
+                    if obs.wants(e) {
+                        let cr = cx.row(e);
+                        let br = bm.row(e);
+                        let hr = hm.row(e);
+                        let vr = vm.row(e);
+                        let mut pr = 0.0;
+                        for i in 0..p {
+                            let v = cr[i] - br[i];
+                            pr += v * v;
+                        }
+                        for i in 0..m {
+                            let si = (hr[i] - vr[p + i]).max(0.0);
+                            let v = cr[p + i] + si - hr[i];
+                            pr += v * v;
+                        }
+                        obs.on_iter(e, k, pr.sqrt(), rho * dx);
+                    }
+                }
                 let step = dx / norm2(xp).max(1.0);
                 step_rel[e] = step;
                 if step < opts.tol {

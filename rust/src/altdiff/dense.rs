@@ -13,6 +13,7 @@ use crate::error::Result;
 use crate::linalg::{
     self, gemm_acc, gemv_acc, gemv_t_acc, norm2, Chol, Mat,
 };
+use crate::obs::IterObserver;
 use crate::prob::Qp;
 use crate::warm::{AdjointSeed, WarmStart};
 
@@ -100,6 +101,25 @@ impl DenseAltDiff {
         h: Option<&[f64]>,
         warm: Option<&WarmStart>,
         opts: &Options,
+    ) -> Solution {
+        self.solve_observed(q, b, h, warm, opts, None)
+    }
+
+    /// [`Self::solve_from`] with a per-iteration [`IterObserver`] hook
+    /// (the single-problem form of
+    /// [`BatchedAltDiff::solve_batch_observed`](crate::batch::BatchedAltDiff::solve_batch_observed)):
+    /// the solve is element 0 of a batch of one, so the observer is
+    /// consulted with `elem = 0`. KKT residuals are computed only when
+    /// the observer claims the element; `observer = None` costs one
+    /// branch per iteration and the returned solution is identical.
+    pub fn solve_observed(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        warm: Option<&WarmStart>,
+        opts: &Options,
+        mut observer: Option<&mut dyn IterObserver>,
     ) -> Solution {
         let n = self.qp.n();
         let m = self.qp.m_ineq();
@@ -212,6 +232,21 @@ impl DenseAltDiff {
                 .map(|(a, b)| (a - b) * (a - b))
                 .sum::<f64>()
                 .sqrt();
+            // sampled-trace hook: ax/gx/s hold the k+1 iterate here
+            if let Some(obs) = observer.as_deref_mut() {
+                if obs.wants(0) {
+                    let mut pr = 0.0;
+                    for i in 0..p {
+                        let v = ax[i] - b[i];
+                        pr += v * v;
+                    }
+                    for i in 0..m {
+                        let v = gx[i] + s[i] - h[i];
+                        pr += v * v;
+                    }
+                    obs.on_iter(0, k, pr.sqrt(), rho * dx);
+                }
+            }
             step_rel = dx / norm2(&xprev).max(1.0);
             if opts.trace {
                 trace.push(TraceEntry {

@@ -20,6 +20,7 @@ use crate::linalg::{
     axpy_cols, gemm_acc, gemm_acc_cols, gemm_acc_rows, gemv, norm2,
     par_gemm_acc, Mat,
 };
+use crate::obs::IterObserver;
 use crate::prob::Qp;
 use crate::warm::{AdjointSeed, WarmStart};
 
@@ -103,6 +104,26 @@ impl BatchedAltDiff {
         hs: Option<&[&[f64]]>,
         warms: Option<&[Option<WarmStart>]>,
         opts: &Options,
+    ) -> BatchSolution {
+        self.solve_batch_observed(qs, bs, hs, warms, opts, None)
+    }
+
+    /// [`Self::solve_batch_from`] with a per-iteration
+    /// [`IterObserver`] hook — the serving tracing plane's entry point.
+    /// KKT residuals are computed only for elements the observer
+    /// claims via [`IterObserver::wants`]; `observer = None` costs one
+    /// branch per live element per iteration and allocates nothing,
+    /// and the returned solution is bit-identical to
+    /// [`Self::solve_batch_from`] either way (the observer never feeds
+    /// back into the iteration).
+    pub fn solve_batch_observed(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        warms: Option<&[Option<WarmStart>]>,
+        opts: &Options,
+        mut observer: Option<&mut dyn IterObserver>,
     ) -> BatchSolution {
         let n = self.qp.n();
         let m = self.qp.m_ineq();
@@ -251,6 +272,27 @@ impl BatchedAltDiff {
                     .map(|(a, b)| (a - b) * (a - b))
                     .sum::<f64>()
                     .sqrt();
+                // sampled-trace hook: gx/ax/s hold the k+1 iterate here,
+                // so the KKT residual is free of extra matvecs
+                if let Some(obs) = observer.as_deref_mut() {
+                    if obs.wants(e) {
+                        let mut pr = 0.0;
+                        let axr = ax.row(e);
+                        let br = bm.row(e);
+                        for i in 0..p {
+                            let v = axr[i] - br[i];
+                            pr += v * v;
+                        }
+                        let gxr = gx.row(e);
+                        let sr = s.row(e);
+                        let hr = hm.row(e);
+                        for i in 0..m {
+                            let v = gxr[i] + sr[i] - hr[i];
+                            pr += v * v;
+                        }
+                        obs.on_iter(e, k, pr.sqrt(), rho * dx);
+                    }
+                }
                 let step = dx / norm2(xp).max(1.0);
                 step_rel[e] = step;
                 if step < opts.tol {

@@ -33,6 +33,7 @@ use crate::altdiff::sparse::Engine;
 use crate::altdiff::{BackwardMode, Options, Param, SparseAltDiff};
 use crate::error::Result;
 use crate::linalg::Mat;
+use crate::obs::IterObserver;
 use crate::prob::SparseQp;
 use crate::sparse::block_cg::zero_cols;
 use crate::sparse::{block_cg, BlockHessianOp};
@@ -188,6 +189,24 @@ impl BatchedSparseAltDiff {
         hs: Option<&[&[f64]]>,
         warms: Option<&[Option<WarmStart>]>,
         opts: &Options,
+    ) -> Result<BatchSolution> {
+        self.try_solve_batch_observed(qs, bs, hs, warms, opts, None)
+    }
+
+    /// [`Self::try_solve_batch_from`] with a per-iteration
+    /// [`IterObserver`] hook (see
+    /// [`BatchedAltDiff::solve_batch_observed`](super::BatchedAltDiff::solve_batch_observed)
+    /// for the contract): residuals are computed only for claimed
+    /// elements, `observer = None` is the unsampled fast path, and the
+    /// returned solution is identical either way.
+    pub fn try_solve_batch_observed(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        warms: Option<&[Option<WarmStart>]>,
+        opts: &Options,
+        mut observer: Option<&mut dyn IterObserver>,
     ) -> Result<BatchSolution> {
         let n = self.qp.n();
         let m = self.qp.h.len();
@@ -386,6 +405,22 @@ impl BatchedSparseAltDiff {
                     let pv = xprev[(i, e)];
                     dx2 += (xv - pv) * (xv - pv);
                     xp2 += pv * pv;
+                }
+                // sampled-trace hook: ax/gx/s hold the k+1 iterate here
+                if let Some(obs) = observer.as_deref_mut() {
+                    if obs.wants(e) {
+                        let mut pr = 0.0;
+                        for i in 0..p {
+                            let v = ax[(i, e)] - bm[(i, e)];
+                            pr += v * v;
+                        }
+                        for i in 0..m {
+                            let v =
+                                gx[(i, e)] + s[(i, e)] - hm[(i, e)];
+                            pr += v * v;
+                        }
+                        obs.on_iter(e, k, pr.sqrt(), rho * dx2.sqrt());
+                    }
                 }
                 let step = dx2.sqrt() / xp2.sqrt().max(1.0);
                 step_rel[e] = step;

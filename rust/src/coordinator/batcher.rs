@@ -28,6 +28,7 @@
 //! budget protects (see `net::server`).
 
 use super::messages::Request;
+use crate::obs::Stage;
 use crate::warm::EngineFamily;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
@@ -103,7 +104,8 @@ impl Batcher {
         let slot = self.pending.entry(key.clone()).or_default();
         slot.push(req);
         if slot.len() >= self.max_batch {
-            let requests = self.pending.remove(&key).unwrap();
+            let mut requests = self.pending.remove(&key).unwrap();
+            stamp_formed(&mut requests);
             return Some(Batch {
                 layer: key.0,
                 family,
@@ -115,7 +117,8 @@ impl Batcher {
         None
     }
 
-    fn unpack(key: Key, requests: Vec<Request>) -> Batch {
+    fn unpack(key: Key, mut requests: Vec<Request>) -> Batch {
+        stamp_formed(&mut requests);
         Batch {
             layer: key.0,
             family: key.1,
@@ -173,6 +176,16 @@ impl Batcher {
     }
 }
 
+/// Stamp every member of a batch at emission — full, timeout-flushed,
+/// and shutdown-flushed batches all pass through here, so the
+/// `BatchFormed` stamp covers every exit path. A no-op per request
+/// unless the record was enabled at admission (tracing plane).
+fn stamp_formed(requests: &mut [Request]) {
+    for r in requests {
+        r.stamps.stamp(Stage::BatchFormed);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,6 +206,9 @@ mod tests {
             priority: super::super::messages::Priority::Normal,
             deadline_us: None,
             submitted: Instant::now(),
+            stamps: crate::obs::StageStamps::off(),
+            sampled: false,
+            echo_stages: false,
         }
     }
 
@@ -320,6 +336,43 @@ mod tests {
             flushed[0].requests.iter().map(|r| r.id).collect::<Vec<_>>(),
             vec![3, 4]
         );
+    }
+
+    #[test]
+    fn emission_stamps_batch_formed_on_every_exit_path() {
+        use crate::obs::{Stage, StageStamps};
+        let stamped = |id, layer: &str| {
+            let mut r = req(id, layer);
+            r.stamps = StageStamps::enabled();
+            r
+        };
+        // full-batch path
+        let mut b = Batcher::new(2, Duration::from_secs(1));
+        b.push(ALT, 10, stamped(1, "l"));
+        let batch = b.push(ALT, 10, stamped(2, "l")).unwrap();
+        assert!(batch
+            .requests
+            .iter()
+            .all(|r| r.stamps.get(Stage::BatchFormed).is_some()));
+        // timeout-flush path
+        b.push(ALT, 10, stamped(3, "l"));
+        let later = Instant::now() + Duration::from_secs(2);
+        let flushed = b.flush_expired(later);
+        assert!(flushed[0].requests[0]
+            .stamps
+            .get(Stage::BatchFormed)
+            .is_some());
+        // shutdown-flush path
+        b.push(ALT, 10, stamped(4, "l"));
+        let all = b.flush_all();
+        assert!(all[0].requests[0]
+            .stamps
+            .get(Stage::BatchFormed)
+            .is_some());
+        // disabled records stay inert
+        b.push(ALT, 10, req(5, "l"));
+        let all = b.flush_all();
+        assert_eq!(all[0].requests[0].stamps, StageStamps::off());
     }
 
     #[test]

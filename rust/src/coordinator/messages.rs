@@ -2,6 +2,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::obs::{StageSpans, StageStamps};
+
 /// Request priority class. Under admission or queue pressure the
 /// traffic plane sheds strictly in priority order — [`Priority::Low`]
 /// sheds before [`Priority::Normal`] before [`Priority::High`] — by
@@ -105,6 +107,20 @@ pub struct Request {
     pub deadline_us: Option<u32>,
     /// submission timestamp (end-to-end latency accounting)
     pub submitted: Instant,
+    /// Stage-stamp record (the tracing plane, see [`crate::obs`]).
+    /// Disabled ([`StageStamps::off`], the default) unless the server
+    /// runs with `Config::stamps` — every stamp site is then a no-op
+    /// and replies stay byte-identical to the pre-tracing wire.
+    pub stamps: StageStamps,
+    /// Set at admission by the coordinator's 1-in-N
+    /// [`crate::obs::TraceSampler`]: this request's solve records
+    /// per-iteration residuals into the trace ring. Never set by
+    /// clients; the wire has no bit for it.
+    pub sampled: bool,
+    /// Client asked the server to echo its stage breakdown on the
+    /// reply (the opt-in wire extension — old servers reject frames
+    /// carrying it, so clients only set it knowingly).
+    pub echo_stages: bool,
 }
 
 impl Request {
@@ -151,6 +167,15 @@ pub struct Response {
     /// which backend served it
     /// ("pjrt" | "native" | "native-sparse" | "native-admm")
     pub backend: &'static str,
+    /// The request's stage stamps as of reply construction (server
+    /// side only — never crosses the wire verbatim; the net front end
+    /// adds the reply-written stamp and derives [`Response::stages`]).
+    pub stamps: StageStamps,
+    /// Server-side stage breakdown in µs, present on a decoded wire
+    /// reply when the request set [`Request::echo_stages`] (and filled
+    /// by the net front end just before encoding). `None` everywhere
+    /// else — and `None` keeps the wire byte-identical to pre-tracing.
+    pub stages: Option<StageSpans>,
 }
 
 /// The reply to a gradient ([`Request::grad_v`]) request: the solved
@@ -179,6 +204,10 @@ pub struct GradientResponse {
     /// which backend served it
     /// ("native" | "native-sparse" | "native-admm")
     pub backend: &'static str,
+    /// Stage stamps as of reply construction (see [`Response::stamps`]).
+    pub stamps: StageStamps,
+    /// Echoed stage breakdown (see [`Response::stages`]).
+    pub stages: Option<StageSpans>,
 }
 
 /// Machine-readable failure classification — clients (in particular the
@@ -277,6 +306,45 @@ impl Reply {
             _ => None,
         }
     }
+
+    /// Mutable stage stamps of a served reply (`None` for failures,
+    /// which carry no stamps). The net front end uses this to take the
+    /// reply-written stamp just before encoding.
+    pub fn stamps_mut(&mut self) -> Option<&mut StageStamps> {
+        match self {
+            Reply::Ok(r) => Some(&mut r.stamps),
+            Reply::Grad(g) => Some(&mut g.stamps),
+            Reply::Err(_) => None,
+        }
+    }
+
+    /// Stage stamps of a served reply (`None` for failures).
+    pub fn stamps(&self) -> Option<&StageStamps> {
+        match self {
+            Reply::Ok(r) => Some(&r.stamps),
+            Reply::Grad(g) => Some(&g.stamps),
+            Reply::Err(_) => None,
+        }
+    }
+
+    /// Echoed stage breakdown of a decoded wire reply, whichever arm.
+    pub fn stages(&self) -> Option<&StageSpans> {
+        match self {
+            Reply::Ok(r) => r.stages.as_ref(),
+            Reply::Grad(g) => g.stages.as_ref(),
+            Reply::Err(_) => None,
+        }
+    }
+
+    /// Set the echoed stage breakdown on a served reply (no-op for
+    /// failures). Used by the net front end at encode time.
+    pub fn set_stages(&mut self, spans: StageSpans) {
+        match self {
+            Reply::Ok(r) => r.stages = Some(spans),
+            Reply::Grad(g) => g.stages = Some(spans),
+            Reply::Err(_) => {}
+        }
+    }
 }
 
 #[cfg(test)]
@@ -326,6 +394,9 @@ mod tests {
             priority: Priority::Normal,
             deadline_us,
             submitted: Instant::now(),
+            stamps: StageStamps::off(),
+            sampled: false,
+            echo_stages: false,
         };
         let never = mk(None);
         let soon = mk(Some(50));

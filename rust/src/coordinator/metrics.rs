@@ -1,6 +1,7 @@
 //! Lock-free serving metrics (atomics only on the hot path).
 
 use super::messages::Priority;
+use crate::obs::{StageSpans, N_SPANS, SPAN_LABELS};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Latency histogram buckets (microseconds, upper bounds).
@@ -154,6 +155,18 @@ pub struct Metrics {
     /// summed end-to-end latency (µs) over all responses
     pub total_latency_us: AtomicU64,
     lat_hist: [AtomicU64; 8],
+    /// per-(class × stage) latency histograms over the tracing plane's
+    /// stage spans ([`crate::obs::StageStamps`]), indexed
+    /// `[Priority::idx()][span][bucket]` with [`LAT_BUCKETS_US`]
+    /// buckets. Only populated when the server runs with stage stamps
+    /// enabled — the stamp record is inert otherwise and the net front
+    /// end never calls [`Metrics::note_stages`].
+    pub stage_hist: [[[AtomicU64; 8]; N_SPANS]; 3],
+    /// per-(class × stage) summed span µs (the histogram `_sum` rows)
+    pub stage_sum_us: [[AtomicU64; N_SPANS]; 3],
+    /// per-class count of stage-stamped replies (the `_count` rows,
+    /// shared by all six spans of a class)
+    pub stage_count: [AtomicU64; 3],
     /// per-shard scheduler counters (length = shard count, ≥ 1 when
     /// built by a coordinator; empty under plain `Default`)
     pub shards: Vec<ShardMetrics>,
@@ -229,6 +242,25 @@ impl Metrics {
         }
     }
 
+    /// Record one stamped reply's stage breakdown against the
+    /// per-(class × stage) histograms. Called by the net front end at
+    /// reply-write time (the only point where every span is known).
+    pub fn note_stages(&self, p: Priority, spans: &StageSpans) {
+        let ci = p.idx();
+        self.stage_count[ci].fetch_add(1, Ordering::Relaxed);
+        for (si, &us) in spans.iter().enumerate() {
+            self.stage_sum_us[ci][si]
+                .fetch_add(us as u64, Ordering::Relaxed);
+            for (bi, &ub) in LAT_BUCKETS_US.iter().enumerate() {
+                if us as u64 <= ub {
+                    self.stage_hist[ci][si][bi]
+                        .fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+            }
+        }
+    }
+
     /// Mean end-to-end latency in microseconds (0 with no responses).
     pub fn mean_latency_us(&self) -> f64 {
         let n = self.responses.load(Ordering::Relaxed);
@@ -238,20 +270,37 @@ impl Metrics {
         self.total_latency_us.load(Ordering::Relaxed) as f64 / n as f64
     }
 
-    /// Approximate latency quantile from the histogram.
+    /// Approximate latency quantile from the histogram, linearly
+    /// interpolated within the winning bucket (uniform-within-bucket
+    /// assumption) rather than snapped to the bucket's upper bound —
+    /// so p50/p99 move continuously instead of quantizing to the 8
+    /// bucket edges. A quantile landing in the unbounded overflow
+    /// bucket returns `u64::MAX` (there is no finite upper bound to
+    /// interpolate toward; `summary()` prints it as 999999999us).
     pub fn latency_quantile_us(&self, q: f64) -> u64 {
-        let total: u64 =
-            self.lat_hist.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        let counts: Vec<u64> = self
+            .lat_hist
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
         if total == 0 {
             return 0;
         }
-        let target = (q * total as f64).ceil() as u64;
-        let mut acc = 0;
-        for (i, b) in self.lat_hist.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return LAT_BUCKETS_US[i];
+        let target = (q * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if acc + c >= target && c > 0 {
+                let hi = LAT_BUCKETS_US[i];
+                if hi == u64::MAX {
+                    return u64::MAX;
+                }
+                let lo = if i == 0 { 0 } else { LAT_BUCKETS_US[i - 1] };
+                // rank within this bucket is 1..=c → fraction (0, 1]
+                let frac = (target - acc) as f64 / c as f64;
+                return lo + ((hi - lo) as f64 * frac).round() as u64;
             }
+            acc += c;
         }
         u64::MAX
     }
@@ -514,6 +563,43 @@ impl Metrics {
             self.total_latency_us.load(ld)
         ));
         out.push_str(&format!("altdiff_latency_us_count {acc}\n"));
+        // per-(class × stage) span histograms from the tracing plane
+        out.push_str(
+            "# HELP altdiff_stage_latency_us per-stage request latency \
+             decomposition (microseconds; only moves with stage stamps \
+             enabled)\n\
+             # TYPE altdiff_stage_latency_us histogram\n",
+        );
+        for p in Priority::ALL {
+            for (si, stage) in SPAN_LABELS.iter().enumerate() {
+                let mut sacc = 0u64;
+                for (bi, &ub) in LAT_BUCKETS_US.iter().enumerate() {
+                    sacc += self.stage_hist[p.idx()][si][bi].load(ld);
+                    let le = if ub == u64::MAX {
+                        "+Inf".to_string()
+                    } else {
+                        ub.to_string()
+                    };
+                    out.push_str(&format!(
+                        "altdiff_stage_latency_us_bucket{{class=\"{}\",\
+                         stage=\"{stage}\",le=\"{le}\"}} {sacc}\n",
+                        p.label()
+                    ));
+                }
+                out.push_str(&format!(
+                    "altdiff_stage_latency_us_sum{{class=\"{}\",\
+                     stage=\"{stage}\"}} {}\n",
+                    p.label(),
+                    self.stage_sum_us[p.idx()][si].load(ld)
+                ));
+                out.push_str(&format!(
+                    "altdiff_stage_latency_us_count{{class=\"{}\",\
+                     stage=\"{stage}\"}} {}\n",
+                    p.label(),
+                    self.stage_count[p.idx()].load(ld)
+                ));
+            }
+        }
         // per-shard scheduler series: one HELP/TYPE per family, one
         // labeled sample per shard
         let shard_family =
@@ -714,6 +800,83 @@ mod tests {
         assert!((m.mean_latency_us() - 200.0).abs() < 1.0);
         assert!(m.latency_quantile_us(0.5) <= 500);
         assert!(m.latency_quantile_us(1.0) >= 250);
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_the_winning_bucket() {
+        // Four samples at 200µs all land in the (100, 250] bucket.
+        // Pre-fix the quantile snapped to the bucket edge (250 for any
+        // q); interpolation spreads ranks 1..=4 uniformly across the
+        // bucket width instead.
+        let m = Metrics::new();
+        for _ in 0..4 {
+            m.observe_latency(200e-6);
+        }
+        // p50 → rank 2 of 4 → 100 + 150·(2/4) = 175
+        assert_eq!(m.latency_quantile_us(0.5), 175);
+        // p25 → rank 1 of 4 → 100 + 150·(1/4) ≈ 138
+        assert_eq!(m.latency_quantile_us(0.25), 138);
+        // p100 → rank 4 of 4 → the bucket's upper bound
+        assert_eq!(m.latency_quantile_us(1.0), 250);
+        // q=0 clamps to rank 1, never panics or returns 0
+        assert_eq!(m.latency_quantile_us(0.0), 138);
+    }
+
+    #[test]
+    fn quantiles_across_buckets_pick_the_right_bucket() {
+        let m = Metrics::new();
+        m.observe_latency(10e-6); // (0, 50]
+        m.observe_latency(200e-6); // (100, 250]
+        // p50 → rank 1 → first bucket, rank 1 of 1 → upper bound 50
+        assert_eq!(m.latency_quantile_us(0.5), 50);
+        // p99 → rank 2 → second occupied bucket, rank 1 of 1 → 250
+        assert_eq!(m.latency_quantile_us(0.99), 250);
+    }
+
+    #[test]
+    fn overflow_bucket_is_explicit() {
+        let m = Metrics::new();
+        m.observe_latency(1.0); // 1s → unbounded overflow bucket
+        m.observe_latency(30e-3); // 30ms → same (>25ms is +Inf here)
+        assert_eq!(m.latency_quantile_us(0.9), u64::MAX);
+        // summary maps the sentinel instead of printing u64::MAX
+        assert!(m.summary().contains("p90<=999999999us"));
+    }
+
+    #[test]
+    fn stage_histograms_bucket_by_class_and_stage() {
+        let m = Metrics::new();
+        // decode=10µs, admit=0, queue=300µs, sched=60µs, exec=900µs,
+        // write=30µs
+        m.note_stages(Priority::High, &[10, 0, 300, 60, 900, 30]);
+        m.note_stages(Priority::Low, &[10, 0, 300, 60, 900, 30]);
+        let hi = Priority::High.idx();
+        let ld = Ordering::Relaxed;
+        // queue=300 lands in the (250, 500] bucket (index 3)
+        assert_eq!(m.stage_hist[hi][2][3].load(ld), 1);
+        // exec=900 lands in the (500, 1000] bucket (index 4)
+        assert_eq!(m.stage_hist[hi][4][4].load(ld), 1);
+        assert_eq!(m.stage_sum_us[hi][4].load(ld), 900);
+        assert_eq!(m.stage_count[hi].load(ld), 1);
+        // untouched class rows stay zero
+        assert_eq!(m.stage_count[Priority::Normal.idx()].load(ld), 0);
+        let text = m.render_text();
+        assert!(text.contains(
+            "altdiff_stage_latency_us_bucket{class=\"high\",\
+             stage=\"exec\",le=\"1000\"} 1"
+        ));
+        assert!(text.contains(
+            "altdiff_stage_latency_us_sum{class=\"low\",\
+             stage=\"queue\"} 300"
+        ));
+        assert!(text.contains(
+            "altdiff_stage_latency_us_count{class=\"high\",\
+             stage=\"decode\"} 1"
+        ));
+        assert_eq!(
+            text.matches("# HELP").count(),
+            text.matches("# TYPE").count()
+        );
     }
 
     #[test]

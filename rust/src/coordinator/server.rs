@@ -43,6 +43,10 @@ use crate::batch::{
     BatchSolution, BatchVjp, BatchedAltDiff, BatchedSparseAltDiff,
 };
 use crate::error::{AltDiffError, Result};
+use crate::obs::{
+    IterObserver, Stage, StageStamps, TraceCollector, TraceEvent,
+    TraceRing, TraceSampler,
+};
 use crate::prob::{Qp, SparseQp};
 use crate::runtime::Engine;
 use crate::warm::{
@@ -201,6 +205,23 @@ pub struct Config {
     /// when the requesting θ is within this relative distance of the θ
     /// it was solved at (see [`crate::warm::theta_distance`]).
     pub warm_radius: f64,
+    /// Stage-stamp tracing (the [`crate::obs`] plane). Off by default:
+    /// every request then carries an inert [`StageStamps::off`] record,
+    /// stamp sites cost one predictable branch, nothing extra is
+    /// counted, and replies stay byte-identical to the pre-tracing
+    /// wire. On, each request is stamped at every handoff and the
+    /// per-(stage × class) histograms fill.
+    pub stamps: bool,
+    /// Deep-trace sampling period: every N-th admitted request records
+    /// per-iteration solver residuals into the trace ring. 0 (the
+    /// default) disables sampling — engines run with no observer.
+    pub trace_every: u64,
+    /// Trace ring capacity in events (see [`TraceRing::new`] for
+    /// stripe rounding). Only consulted when `trace_every > 0`.
+    pub trace_ring: usize,
+    /// Sampler phase seed, so co-located servers don't all trace the
+    /// same ordinal positions ([`TraceSampler::new`]).
+    pub trace_seed: u64,
 }
 
 impl Default for Config {
@@ -216,6 +237,10 @@ impl Default for Config {
             calib_tols: vec![1e-1, 1e-2, 1e-3, 1e-4],
             warm_capacity: 0,
             warm_radius: 0.5,
+            stamps: false,
+            trace_every: 0,
+            trace_ring: 256,
+            trace_seed: 0,
         }
     }
 }
@@ -452,6 +477,13 @@ pub struct Coordinator {
     /// Round-robin cursor for session-less requests.
     rr: u64,
     layer_dims: Vec<(String, usize, usize, usize)>,
+    /// [`Config::stamps`]: in-process submissions get enabled stamp
+    /// records at admission when set.
+    stamps_on: bool,
+    /// 1-in-N deep-trace sampler ([`Config::trace_every`]).
+    sampler: Arc<TraceSampler>,
+    /// Finished solver traces, drained by `GET /trace`.
+    ring: Arc<TraceRing>,
 }
 
 /// Builder: register layers, then start.
@@ -744,6 +776,14 @@ impl CoordinatorBuilder {
         let bqueues: Arc<Vec<BatchQueue>> =
             Arc::new((0..shards).map(|_| BatchQueue::new()).collect());
 
+        // tracing plane: the sampler decides at admission, workers push
+        // finished traces into the ring, `GET /trace` drains it
+        let sampler = Arc::new(TraceSampler::new(
+            self.config.trace_every,
+            self.config.trace_seed,
+        ));
+        let ring = Arc::new(TraceRing::new(self.config.trace_ring));
+
         // workers, distributed round-robin over the shards (≥ 1 each)
         let ready = Arc::new(std::sync::atomic::AtomicUsize::new(0));
         let total_workers = self.config.workers.max(1).max(shards);
@@ -766,6 +806,7 @@ impl CoordinatorBuilder {
                 let artifacts = self.config.artifacts.clone();
                 let ready = ready.clone();
                 let warm = warm.clone();
+                let ring = ring.clone();
                 workers.push(
                     std::thread::Builder::new()
                         .name(format!("altdiff-worker-s{sidx}-{widx}"))
@@ -773,6 +814,7 @@ impl CoordinatorBuilder {
                             shard_worker_loop(
                                 sidx, bqueues, layers, reply_tx,
                                 metrics, artifacts, ready, warm, pin,
+                                ring,
                             )
                         })
                         .expect("spawn worker"),
@@ -815,6 +857,9 @@ impl CoordinatorBuilder {
             next_id: 0,
             rr: 0,
             layer_dims,
+            stamps_on: self.config.stamps,
+            sampler,
+            ring,
         }
     }
 }
@@ -1054,6 +1099,7 @@ fn shard_router_loop(
 /// backlog) are split off and answered `DeadlineExceeded` — an expired
 /// request never reaches an engine, and the survivors execute as a
 /// smaller batch under the same routed k.
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     engine: &mut Option<Engine>,
     mut batch: Batch,
@@ -1061,6 +1107,7 @@ fn run_batch(
     reply_tx: &Sender<Reply>,
     metrics: &Metrics,
     warm: Option<&Mutex<WarmStartCache>>,
+    ring: &TraceRing,
 ) {
     let layer = match layers.get(&*batch.layer) {
         Some(l) => l.clone(),
@@ -1093,7 +1140,11 @@ fn run_batch(
     // per-class served/SLO accounting
     let prios: Vec<Priority> =
         batch.requests.iter().map(|r| r.priority).collect();
-    let replies = execute_batch(engine, &layer, &batch, metrics, warm);
+    for r in batch.requests.iter_mut() {
+        r.stamps.stamp(Stage::ExecStart);
+    }
+    let replies =
+        execute_batch(engine, &layer, &batch, metrics, warm, ring);
     for (i, r) in replies.into_iter().enumerate() {
         match &r {
             Reply::Ok(resp) => {
@@ -1166,6 +1217,7 @@ fn shard_worker_loop(
     ready: Arc<std::sync::atomic::AtomicUsize>,
     warm: Option<Arc<Mutex<WarmStartCache>>>,
     pin: Option<usize>,
+    ring: Arc<TraceRing>,
 ) {
     // best effort, placement-only: a false return changes nothing
     if let Some(cpu) = pin {
@@ -1212,6 +1264,7 @@ fn shard_worker_loop(
                 &reply_tx,
                 &metrics,
                 warm.as_deref(),
+                &ring,
             );
             continue;
         }
@@ -1228,6 +1281,7 @@ fn shard_worker_loop(
                 &reply_tx,
                 &metrics,
                 warm.as_deref(),
+                &ring,
             );
             continue;
         }
@@ -1328,6 +1382,57 @@ fn layer_feasibility(
     }
 }
 
+/// A [`TraceCollector`] watching the batch's sampled members, or `None`
+/// when no member is sampled — the engines then run observer-free (the
+/// unsampled fast path: no allocation, one branch per iteration).
+fn trace_collector(reqs: &[Request]) -> Option<TraceCollector> {
+    if !reqs.iter().any(|r| r.sampled) {
+        return None;
+    }
+    let mut c = TraceCollector::new(reqs.len());
+    for (e, r) in reqs.iter().enumerate() {
+        if r.sampled {
+            c.watch(e);
+        }
+    }
+    Some(c)
+}
+
+/// Package the sampled members of a finished batch into [`TraceEvent`]s
+/// and push them into the ring. `collector = None` on paths with no
+/// per-iteration state (PJRT): sampled members then trace with an empty
+/// iteration series, which still carries stage spans and the routing
+/// outcome.
+fn push_trace_events(
+    ring: &TraceRing,
+    batch: &Batch,
+    backend: &'static str,
+    mut collector: Option<TraceCollector>,
+) {
+    for (e, req) in batch.requests.iter().enumerate() {
+        if !req.sampled {
+            continue;
+        }
+        let iters = collector
+            .as_mut()
+            .and_then(|c| c.take(e))
+            .unwrap_or_default();
+        let mut stamps = req.stamps;
+        stamps.stamp(Stage::ExecEnd);
+        ring.push(TraceEvent {
+            id: req.id,
+            layer: batch.layer.to_string(),
+            backend,
+            class: req.priority.label(),
+            k: batch.k,
+            batch: batch.requests.len(),
+            grad: batch.grad,
+            stamps,
+            iters,
+        });
+    }
+}
+
 /// Execute one batch on the best available backend.
 fn execute_batch(
     engine: &mut Option<Engine>,
@@ -1335,6 +1440,7 @@ fn execute_batch(
     batch: &Batch,
     metrics: &Metrics,
     warm: Option<&Mutex<WarmStartCache>>,
+    ring: &TraceRing,
 ) -> Vec<Reply> {
     let t0 = Instant::now();
     let reqs = &batch.requests;
@@ -1342,7 +1448,7 @@ fn execute_batch(
     // launch plus one batched adjoint launch, always native (no compiled
     // adjoint family exists — and none is needed, the backward is d-free).
     if batch.grad {
-        return execute_grad_batch(layer, batch, metrics, warm);
+        return execute_grad_batch(layer, batch, metrics, warm, ring);
     }
     // PJRT path (dense Alt-Diff-routed batches only — no compiled ADMM
     // family exists): pick the smallest compiled batch size >= len, pad.
@@ -1379,6 +1485,11 @@ fn execute_batch(
                                 resp.latency = lat
                                     + resp.latency; // queue time added below
                             }
+                        }
+                        // compiled path exposes no per-iteration state:
+                        // sampled members trace spans + routing only
+                        if reqs.iter().any(|r| r.sampled) {
+                            push_trace_events(ring, batch, "pjrt", None);
                         }
                         return replies;
                     }
@@ -1424,6 +1535,9 @@ fn execute_batch(
     let qs: Vec<&[f64]> = reqs.iter().map(|r| r.q.as_slice()).collect();
     let bs: Vec<&[f64]> = reqs.iter().map(|r| r.b.as_slice()).collect();
     let hs: Vec<&[f64]> = reqs.iter().map(|r| r.h.as_slice()).collect();
+    // Some only when a member was promoted by the 1-in-N sampler —
+    // the common case hands the engines no observer at all
+    let mut collector = trace_collector(reqs);
     let (sol, backend): (BatchSolution, &'static str) = if batch.family
         == EngineFamily::Admm
     {
@@ -1433,24 +1547,28 @@ fn execute_batch(
         metrics.admm_execs.fetch_add(1, ord);
         metrics.admm_elems.fetch_add(reqs.len() as u64, ord);
         (
-            batched.solve_batch_from(
+            batched.solve_batch_observed(
                 Some(&qs),
                 Some(&bs),
                 Some(&hs),
                 warms,
                 &opts,
+                collector.as_mut().map(|c| c as &mut dyn IterObserver),
             ),
             "native-admm",
         )
     } else {
         match &layer.engine {
             LayerEngine::Dense { batched, .. } => (
-                batched.solve_batch_from(
+                batched.solve_batch_observed(
                     Some(&qs),
                     Some(&bs),
                     Some(&hs),
                     warms,
                     &opts,
+                    collector
+                        .as_mut()
+                        .map(|c| c as &mut dyn IterObserver),
                 ),
                 "native",
             ),
@@ -1459,12 +1577,15 @@ fn execute_batch(
                 // fallible: a blocked-CG breakdown must become per-request
                 // failure replies, never a worker panic (which would kill
                 // the thread and silently drop every batch routed to it)
-                match batched.try_solve_batch_from(
+                match batched.try_solve_batch_observed(
                     Some(&qs),
                     Some(&bs),
                     Some(&hs),
                     warms,
                     &opts,
+                    collector
+                        .as_mut()
+                        .map(|c| c as &mut dyn IterObserver),
                 ) {
                     Ok(sol) => (sol, "native-sparse"),
                     Err(e) => {
@@ -1506,11 +1627,16 @@ fn execute_batch(
             None,
         );
     }
+    if collector.is_some() {
+        push_trace_events(ring, batch, backend, collector);
+    }
     let mut jacs = sol.jacobians.unwrap_or_default().into_iter();
     reqs.iter()
         .zip(sol.xs)
         .map(|(req, x)| {
             let prim = layer_feasibility(layer, &x, &req.b, &req.h);
+            let mut stamps = req.stamps;
+            stamps.stamp(Stage::ExecEnd);
             Reply::Ok(Response {
                 id: req.id,
                 x,
@@ -1520,6 +1646,8 @@ fn execute_batch(
                 batch_size: reqs.len(),
                 latency: req.submitted.elapsed().as_secs_f64(),
                 backend,
+                stamps,
+                stages: None,
             })
         })
         .collect()
@@ -1541,6 +1669,7 @@ fn execute_grad_batch(
     batch: &Batch,
     metrics: &Metrics,
     warm: Option<&Mutex<WarmStartCache>>,
+    ring: &TraceRing,
 ) -> Vec<Reply> {
     let reqs = &batch.requests;
     metrics
@@ -1603,6 +1732,9 @@ fn execute_grad_batch(
             })
             .collect::<Vec<Reply>>()
     };
+    // Sampled members trace the forward launch (the adjoint recursion
+    // has no per-iteration primal residual to report)
+    let mut collector = trace_collector(reqs);
     // Adjoint seeds in the cache are engine-tagged: each family only
     // ever consumes a seed its own backward iteration produced (a
     // cross-family seed is dropped here, never reinterpreted).
@@ -1624,12 +1756,13 @@ fn execute_grad_batch(
                     .map(|o| o.clone().and_then(EngineSeed::into_admm))
                     .collect()
             });
-        let forward = batched.solve_batch_from(
+        let forward = batched.solve_batch_observed(
             Some(&qs),
             Some(&bs),
             Some(&hs),
             warms,
             &fopts,
+            collector.as_mut().map(|c| c as &mut dyn IterObserver),
         );
         let (vjp, states) = batched.batch_vjp_from(
             &forward.slack_refs(),
@@ -1650,12 +1783,15 @@ fn execute_grad_batch(
         let seeds = alt_seeds.as_deref();
         match &layer.engine {
             LayerEngine::Dense { batched, .. } => {
-                let forward = batched.solve_batch_from(
+                let forward = batched.solve_batch_observed(
                     Some(&qs),
                     Some(&bs),
                     Some(&hs),
                     warms,
                     &fopts,
+                    collector
+                        .as_mut()
+                        .map(|c| c as &mut dyn IterObserver),
                 );
                 let (vjp, states) = batched.batch_vjp_from(
                     &forward.slack_refs(),
@@ -1668,12 +1804,15 @@ fn execute_grad_batch(
                 (forward, vjp, states, "native")
             }
             LayerEngine::Sparse { batched, .. } => {
-                let forward = match batched.try_solve_batch_from(
+                let forward = match batched.try_solve_batch_observed(
                     Some(&qs),
                     Some(&bs),
                     Some(&hs),
                     warms,
                     &fopts,
+                    collector
+                        .as_mut()
+                        .map(|c| c as &mut dyn IterObserver),
                 ) {
                     Ok(f) => f,
                     Err(e) => return fail(reqs, &e),
@@ -1740,6 +1879,9 @@ fn execute_grad_batch(
             Some(&adj_states),
         );
     }
+    if collector.is_some() {
+        push_trace_events(ring, batch, backend, collector);
+    }
     let mut gq = vjp.grads_q.into_iter();
     let mut gb = vjp.grads_b.into_iter();
     let mut gh = vjp.grads_h.into_iter();
@@ -1747,6 +1889,8 @@ fn execute_grad_batch(
         .zip(forward.xs)
         .map(|(req, x)| {
             let prim = layer_feasibility(layer, &x, &req.b, &req.h);
+            let mut stamps = req.stamps;
+            stamps.stamp(Stage::ExecEnd);
             Reply::Grad(GradientResponse {
                 id: req.id,
                 x,
@@ -1758,6 +1902,8 @@ fn execute_grad_batch(
                 batch_size: reqs.len(),
                 latency: req.submitted.elapsed().as_secs_f64(),
                 backend,
+                stamps,
+                stages: None,
             })
         })
         .collect()
@@ -1812,6 +1958,8 @@ fn execute_pjrt(
         if out.dual[i] as f64 > req.tol * 10.0 {
             layer.table.lock().unwrap().bump(req.tol);
         }
+        let mut stamps = req.stamps;
+        stamps.stamp(Stage::ExecEnd);
         replies.push(Reply::Ok(Response {
             id: req.id,
             x,
@@ -1821,6 +1969,8 @@ fn execute_pjrt(
             batch_size: reqs.len(),
             latency: req.submitted.elapsed().as_secs_f64(),
             backend: "pjrt",
+            stamps,
+            stages: None,
         }));
     }
     Ok(replies)
@@ -1866,6 +2016,30 @@ impl Coordinator {
         self.queues.first().map(|q| q.cap).unwrap_or(1)
     }
 
+    /// Whether stage-stamp tracing is on ([`Config::stamps`]). The net
+    /// front end consults this to build enabled stamp records at
+    /// frame-accept time.
+    pub fn stamps_enabled(&self) -> bool {
+        self.stamps_on
+    }
+
+    /// A stamp record matching the server's tracing configuration:
+    /// enabled when [`Config::stamps`] is set, inert otherwise.
+    pub fn new_stamps(&self) -> StageStamps {
+        if self.stamps_on {
+            StageStamps::enabled()
+        } else {
+            StageStamps::off()
+        }
+    }
+
+    /// The trace ring (finished sampled solver traces). The net front
+    /// end drains it for `GET /trace`; always present, empty unless
+    /// [`Config::trace_every`] > 0.
+    pub fn trace_ring(&self) -> Arc<TraceRing> {
+        self.ring.clone()
+    }
+
     /// Submit an already-built [`Request`] (the network front end's
     /// path: the request was constructed at frame-decode time and its
     /// `submitted` timestamp is preserved, so served latency includes
@@ -1884,6 +2058,17 @@ impl Coordinator {
         self.next_id += 1;
         req.id = self.next_id;
         let id = self.next_id;
+        // tracing plane admission: in-process submissions get a fresh
+        // enabled record here (net-front-end requests already carry one
+        // with accepted/decoded taken); the sampler promotes 1-in-N
+        // requests to full solver traces
+        if self.stamps_on && !req.stamps.is_on() {
+            req.stamps = StageStamps::enabled();
+        }
+        req.stamps.stamp(Stage::Enqueued);
+        if !req.sampled {
+            req.sampled = self.sampler.sample();
+        }
         let shard = match req.session {
             Some(s) => shard_for(&req.layer, s, self.queues.len()),
             None => {
@@ -1947,6 +2132,9 @@ impl Coordinator {
             priority: Priority::default(),
             deadline_us: None,
             submitted: Instant::now(),
+            stamps: StageStamps::off(),
+            sampled: false,
+            echo_stages: false,
         })
     }
 
@@ -1975,6 +2163,9 @@ impl Coordinator {
             priority: Priority::default(),
             deadline_us: None,
             submitted: Instant::now(),
+            stamps: StageStamps::off(),
+            sampled: false,
+            echo_stages: false,
         })
     }
 
@@ -2003,6 +2194,9 @@ impl Coordinator {
             priority: Priority::default(),
             deadline_us: None,
             submitted: Instant::now(),
+            stamps: StageStamps::off(),
+            sampled: false,
+            echo_stages: false,
         })
     }
 
@@ -2033,6 +2227,9 @@ impl Coordinator {
             priority: Priority::default(),
             deadline_us: None,
             submitted: Instant::now(),
+            stamps: StageStamps::off(),
+            sampled: false,
+            echo_stages: false,
         })
     }
 

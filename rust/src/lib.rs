@@ -13,6 +13,9 @@
 //!   per dynamic batch)
 //! - network: [`net`] (wire protocol + nonblocking TCP front end with
 //!   admission control, plus clients and a load generator)
+//! - tracing plane: [`obs`] (per-request stage stamps, the seeded
+//!   1-in-N solver-trace sampler, the engines' per-iteration residual
+//!   observer, and the lock-striped trace ring behind `GET /trace`)
 //! - warm starts: [`warm`] (cross-solve iterate reuse — every engine
 //!   accepts a prior (x, λ, ν) triple, and an LRU cache with staleness
 //!   bounds threads it through the coordinator, the wire protocol's
@@ -43,6 +46,7 @@ pub mod error;
 pub mod linalg;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod prob;
 pub mod runtime;
 pub mod sparse;

@@ -125,6 +125,13 @@ fn serve_coordinator(args: &Args) -> Coordinator {
         // cold default); pair with a loadgen running --sessions
         warm_capacity: args.get_usize("warm-cache", 0),
         warm_radius: args.get_f64("warm-radius", 0.5),
+        // --stamps turns on the per-request tracing plane (stage
+        // stamps + histograms + reply echo); --trace-sample N promotes
+        // 1-in-N requests to full convergence traces served at /trace
+        stamps: args.get_bool("stamps", false),
+        trace_every: args.get_usize("trace-sample", 0) as u64,
+        trace_ring: args.get_usize("trace-ring", 256),
+        trace_seed: args.get_usize("trace-seed", 0) as u64,
         ..Default::default()
     })
     // both dense layers use generator seed 1 so a default `loadgen`
@@ -238,7 +245,7 @@ fn cmd_loadgen(args: &Args) {
             "usage: altdiff loadgen <addr> [--requests N] [--clients C] \
              [--window W] [--grad-share F] [--layer NAME] [--tol T] \
              [--sessions] [--burst B] [--burst-gap-us G] \
-             [--priorities] [--deadline-us D] [--retry] \
+             [--priorities] [--deadline-us D] [--stages] [--retry] \
              [--chaos] [--chaos-seed S] [--chaos-reset-prob P] \
              [--stop-server]"
         );
@@ -258,6 +265,7 @@ fn cmd_loadgen(args: &Args) {
         burst_gap_us: args.get_usize("burst-gap-us", 2_000) as u64,
         priorities: args.get_bool("priorities", false),
         deadline_us: (deadline_us > 0).then_some(deadline_us as u32),
+        stages: args.get_bool("stages", false),
         retry: args.get_bool("retry", false),
     };
     // with --chaos, clients talk to the fault proxy; the real server

@@ -8,6 +8,7 @@ use super::frame::{Frame, FrameReader, MAX_PAYLOAD};
 use super::proto::{self, op, LayerInfo};
 use crate::coordinator::{FailureKind, Priority, Reply, Request};
 use crate::error::{AltDiffError, Result};
+use crate::obs::{StageStamps, N_SPANS, SPAN_LABELS};
 use crate::prob::dense_qp;
 use crate::util::Pcg64;
 use std::collections::BTreeMap;
@@ -491,6 +492,7 @@ pub struct PipelinedClient {
     session: Option<u64>,
     priority: Priority,
     deadline_us: Option<u32>,
+    echo_stages: bool,
     sent_at: BTreeMap<u64, Instant>,
 }
 
@@ -510,6 +512,7 @@ impl PipelinedClient {
             session: None,
             priority: Priority::Normal,
             deadline_us: None,
+            echo_stages: false,
             sent_at: BTreeMap::new(),
         })
     }
@@ -571,6 +574,16 @@ impl PipelinedClient {
         self.deadline_us = us.into();
     }
 
+    /// Opt every subsequent request into the server's stage echo: the
+    /// reply then carries the per-stage server-side latency breakdown
+    /// (decode/admit/queue/sched/exec/write, µs), provided the server
+    /// runs with its tracing plane on (`serve --stamps`). Against a
+    /// stamps-off or pre-echo server the replies simply come back
+    /// without the block — the opt-in never breaks interop.
+    pub fn set_echo_stages(&mut self, on: bool) {
+        self.echo_stages = on;
+    }
+
     /// Bound the wait for any single reply (default: unbounded). A
     /// timeout mid-frame is recoverable: partial bytes stay buffered.
     pub fn set_timeout(&mut self, d: Option<Duration>) -> Result<()> {
@@ -629,6 +642,9 @@ impl PipelinedClient {
             priority: self.priority,
             deadline_us: self.deadline_us,
             submitted: Instant::now(),
+            stamps: StageStamps::off(),
+            sampled: false,
+            echo_stages: self.echo_stages,
         };
         let bytes = checked_request_bytes(&req)?;
         self.sent_at.insert(req.id, Instant::now());
@@ -695,6 +711,13 @@ pub struct LoadgenOpts {
     /// Attach this deadline budget (µs) to every request; `None` (the
     /// default) sends deadline-free traffic.
     pub deadline_us: Option<u32>,
+    /// Opt every request into the server's per-stage latency echo and
+    /// print the end-to-end stage-attribution table: client-observed
+    /// round trips reconciled against the sum of server-side stages,
+    /// so the network + client share of latency falls out as the
+    /// difference. Needs a server running with `--stamps`; against a
+    /// stamps-off server the table is simply absent.
+    pub stages: bool,
     /// Survive transport faults: bounded-backoff connects, plus
     /// reconnect-and-resubmit when a connection tears mid-run (replies
     /// stranded on the dead connection are counted `failed`, never
@@ -719,6 +742,7 @@ impl Default for LoadgenOpts {
             burst_gap_us: 2_000,
             priorities: false,
             deadline_us: None,
+            stages: false,
             retry: false,
         }
     }
@@ -755,6 +779,15 @@ pub struct LoadgenReport {
     /// unsorted — shed/failed fast-replies are excluded so quantiles
     /// reflect service latency even under overload.
     pub rtts: Vec<f64>,
+    /// Replies that carried the server's stage echo.
+    pub stage_count: usize,
+    /// Summed per-stage server-side spans (µs) over those replies,
+    /// [`SPAN_LABELS`] order.
+    pub stage_sum_us: [f64; N_SPANS],
+    /// Summed client-observed round trips (µs) over those same
+    /// replies — the reconciliation baseline for the attribution
+    /// table (Σ server stages ≤ client rtt; the gap is wire + client).
+    pub stage_rtt_sum_us: f64,
 }
 
 impl LoadgenReport {
@@ -788,6 +821,42 @@ impl LoadgenReport {
                 self.retries, self.reconnects
             ));
         }
+        let stages = self.render_stages();
+        if !stages.is_empty() {
+            s.push('\n');
+            s.push_str(&stages);
+        }
+        s
+    }
+
+    /// End-to-end stage-attribution table from the echoed server-side
+    /// breakdowns: mean µs per stage, their sum, and the mean
+    /// client-observed round trip of the same replies — the difference
+    /// is the wire + client share the server cannot see. Empty when no
+    /// reply carried an echo (stages off, or a stamps-off server).
+    pub fn render_stages(&self) -> String {
+        if self.stage_count == 0 {
+            return String::new();
+        }
+        let n = self.stage_count as f64;
+        let mut s = format!(
+            "stage attribution ({} echoed replies, mean µs):\n ",
+            self.stage_count
+        );
+        let mut server = 0.0;
+        for (label, &sum) in
+            SPAN_LABELS.iter().zip(self.stage_sum_us.iter())
+        {
+            let mean = sum / n;
+            server += mean;
+            s.push_str(&format!(" {label} {mean:.0}"));
+        }
+        let rtt = self.stage_rtt_sum_us / n;
+        let gap = (rtt - server).max(0.0);
+        s.push_str(&format!(
+            "\n  Σ server {server:.0}µs · client rtt {rtt:.0}µs · \
+             wire+client {gap:.0}µs"
+        ));
         s
     }
 }
@@ -800,6 +869,20 @@ fn percentile_us(sorted: &[f64], q: f64) -> f64 {
 }
 
 fn tally(report: &mut LoadgenReport, t: &TimedReply) {
+    // echoed stage breakdowns accumulate against the same replies'
+    // client-observed rtts, so the attribution table reconciles like
+    // with like
+    if let Some(spans) = t.reply.stages() {
+        if t.rtt > 0.0 {
+            report.stage_count += 1;
+            report.stage_rtt_sum_us += t.rtt * 1e6;
+            for (acc, &v) in
+                report.stage_sum_us.iter_mut().zip(spans.iter())
+            {
+                *acc += v as f64;
+            }
+        }
+    }
     // only *served* replies contribute latency samples: shed replies
     // return in microseconds and would drag p50/p99 far below the real
     // service latency exactly when overload makes those numbers matter
@@ -917,6 +1000,7 @@ pub fn run_loadgen<A: ToSocketAddrs>(
                     cl.set_session(opts.seed ^ (0x5e55 + c as u64));
                 }
                 cl.set_deadline_us(opts.deadline_us);
+                cl.set_echo_stages(opts.stages);
                 Ok(cl)
             };
             let mut report = LoadgenReport::default();
@@ -1010,6 +1094,13 @@ pub fn run_loadgen<A: ToSocketAddrs>(
         merged.retries += r.retries;
         merged.reconnects += r.reconnects;
         merged.rtts.extend(r.rtts);
+        merged.stage_count += r.stage_count;
+        merged.stage_rtt_sum_us += r.stage_rtt_sum_us;
+        for (acc, v) in
+            merged.stage_sum_us.iter_mut().zip(r.stage_sum_us)
+        {
+            *acc += v;
+        }
     }
     merged.wall = t0.elapsed().as_secs_f64();
     let mut sorted = merged.rtts.clone();
@@ -1085,5 +1176,47 @@ mod tests {
         r.retries = 2;
         r.reconnects = 1;
         assert!(r.render().contains("retries 2 reconnects 1"));
+    }
+
+    #[test]
+    fn tally_builds_the_stage_attribution_table() {
+        use crate::coordinator::Response;
+        let mut r = LoadgenReport::default();
+        assert!(r.render_stages().is_empty());
+        let resp = |spans| Response {
+            id: 1,
+            x: vec![],
+            jx: vec![],
+            prim_residual: 0.0,
+            k_used: 1,
+            batch_size: 1,
+            latency: 0.0,
+            backend: "native",
+            stamps: StageStamps::off(),
+            stages: spans,
+        };
+        // no echo → no stage row, but still an ok tally
+        tally(
+            &mut r,
+            &TimedReply { reply: Reply::Ok(resp(None)), rtt: 1e-3 },
+        );
+        assert_eq!((r.ok, r.stage_count), (1, 0));
+        // echoed spans accumulate against the same reply's rtt
+        let spans: [u32; N_SPANS] = [10, 0, 100, 20, 800, 5];
+        tally(
+            &mut r,
+            &TimedReply {
+                reply: Reply::Ok(resp(Some(spans))),
+                rtt: 1.2e-3,
+            },
+        );
+        assert_eq!((r.ok, r.stage_count), (2, 1));
+        assert_eq!(r.stage_sum_us[4], 800.0);
+        let table = r.render_stages();
+        assert!(table.contains("exec 800"), "{table}");
+        // Σ server = 935µs, rtt = 1200µs → 265µs wire+client gap
+        assert!(table.contains("Σ server 935µs"), "{table}");
+        assert!(table.contains("wire+client 265µs"), "{table}");
+        assert!(r.render().contains("stage attribution"));
     }
 }

@@ -12,7 +12,8 @@
 //!   id u64 · tol f64 · session u8 [· key u64] · layer str16
 //!   · q f64vec · b f64vec · h f64vec
 //!   [· v f64vec]                      -- GRAD only (adjoint seed)
-//!   [· prio u8 [· class u8] · ddl u8 [· budget u32]]   -- extension
+//!   [· prio u8 [· class u8] · ddl u8 [· budget u32]    -- extension
+//!    [· echo u8]]                     -- stage-echo opt-in (tag = 1)
 //! ```
 //!
 //! `session` is the optional warm-start session key: a one-byte
@@ -24,13 +25,18 @@
 //!
 //! The trailing **extension block** carries the traffic-plane fields
 //! (priority class and per-request deadline budget in µs) with the same
-//! presence-tag style. It is *omitted entirely* when both are at their
-//! defaults (Normal priority, no deadline), so pre-extension encoders
-//! and decoders stay byte-compatible: an old client's payload simply
-//! ends after h/v and decodes to the defaults, and a new client talking
-//! to an old server only breaks if it actually sets the new fields.
-//! Malformed values (tag ∉ {0,1}, class > 2, budget 0) come back as
-//! [`AltDiffError::Protocol`] — never a panic.
+//! presence-tag style. It is *omitted entirely* when everything is at
+//! its default (Normal priority, no deadline, no stage echo), so
+//! pre-extension encoders and decoders stay byte-compatible: an old
+//! client's payload simply ends after h/v and decodes to the defaults,
+//! and a new client talking to an old server only breaks if it actually
+//! sets the new fields. The final **stage-echo** byte opts the request
+//! into the observability plane: when present (value 1) the server's
+//! reply appends the per-stage latency breakdown (see
+//! [`reply_payload_len`]); a payload that ends after the deadline field
+//! decodes as echo-off, so pre-echo traffic-plane frames still parse.
+//! Malformed values (tag ∉ {0,1}, class > 2, budget 0, echo ≠ 1) come
+//! back as [`AltDiffError::Protocol`] — never a panic.
 //!
 //! Reply payloads mirror [`Reply`]'s three arms (`op::R_SOLVE`,
 //! `op::R_GRAD`, `op::R_ERR`); admin ops (`op::STATS`, `op::LAYERS`,
@@ -42,6 +48,7 @@ use crate::coordinator::{
     Response,
 };
 use crate::error::{AltDiffError, Result};
+use crate::obs::{StageSpans, StageStamps, N_SPANS};
 use super::frame::header;
 use std::time::Instant;
 
@@ -283,16 +290,20 @@ pub fn request_payload_len(req: &Request) -> usize {
         + extension_len(req)
 }
 
-/// Size of the trailing traffic-plane extension block (0 when both
-/// fields are at their defaults and the block is omitted).
+/// Size of the trailing traffic-plane extension block (0 when every
+/// field is at its default and the block is omitted).
 fn extension_len(req: &Request) -> usize {
-    if req.priority == Priority::Normal && req.deadline_us.is_none() {
+    if req.priority == Priority::Normal
+        && req.deadline_us.is_none()
+        && !req.echo_stages
+    {
         return 0;
     }
-    // prio tag u8 [+ class u8] + ddl tag u8 [+ budget u32]
+    // prio tag u8 [+ class u8] + ddl tag u8 [+ budget u32] [+ echo u8]
     1 + if req.priority != Priority::Normal { 1 } else { 0 }
         + 1
         + if req.deadline_us.is_some() { 4 } else { 0 }
+        + usize::from(req.echo_stages)
 }
 
 /// Encode a request as one frame (opcode chosen by the adjoint seed:
@@ -319,8 +330,13 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
         w.f64_vec(v);
     }
     // traffic-plane extension: omitted entirely at the defaults, so
-    // default-request frames are byte-identical to pre-extension ones
-    if req.priority != Priority::Normal || req.deadline_us.is_some() {
+    // default-request frames are byte-identical to pre-extension ones.
+    // The stage-echo byte rides at the tail and is only written when
+    // set, so echo-off frames match pre-echo encoders byte for byte.
+    if req.priority != Priority::Normal
+        || req.deadline_us.is_some()
+        || req.echo_stages
+    {
         match req.priority {
             Priority::Normal => w.u8(0),
             p => {
@@ -334,6 +350,9 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
                 w.u32(us);
             }
             None => w.u8(0),
+        }
+        if req.echo_stages {
+            w.u8(1);
         }
     }
     let frame = w.finish();
@@ -373,7 +392,7 @@ pub fn decode_request(opcode: u8, payload: &[u8]) -> Result<Request> {
     } else {
         None
     };
-    let (priority, deadline_us) = decode_extension(&mut r)?;
+    let (priority, deadline_us, echo_stages) = decode_extension(&mut r)?;
     r.done()?;
     Ok(Request {
         id,
@@ -387,16 +406,23 @@ pub fn decode_request(opcode: u8, payload: &[u8]) -> Result<Request> {
         priority,
         deadline_us,
         submitted: Instant::now(),
+        stamps: StageStamps::off(),
+        sampled: false,
+        echo_stages,
     })
 }
 
 /// Decode the trailing traffic-plane extension block. An exhausted
 /// reader (a pre-extension client's payload) yields the defaults;
 /// anything present must be well-formed or the whole request is a
-/// `Protocol` error.
-fn decode_extension(r: &mut Rd<'_>) -> Result<(Priority, Option<u32>)> {
+/// `Protocol` error. The stage-echo byte is likewise optional *within*
+/// the block: a payload that ends after the deadline field (a pre-echo
+/// traffic-plane client) decodes as echo-off.
+fn decode_extension(
+    r: &mut Rd<'_>,
+) -> Result<(Priority, Option<u32>, bool)> {
     if r.pos == r.b.len() {
-        return Ok((Priority::Normal, None));
+        return Ok((Priority::Normal, None, false));
     }
     let priority = match r.u8()? {
         0 => Priority::Normal,
@@ -431,7 +457,19 @@ fn decode_extension(r: &mut Rd<'_>) -> Result<(Priority, Option<u32>)> {
             )))
         }
     };
-    Ok((priority, deadline_us))
+    let echo_stages = if r.pos == r.b.len() {
+        false
+    } else {
+        match r.u8()? {
+            1 => true,
+            tag => {
+                return Err(AltDiffError::Protocol(format!(
+                    "stage-echo tag must be 1, got {tag}"
+                )))
+            }
+        }
+    };
+    Ok((priority, deadline_us, echo_stages))
 }
 
 /// Allocation-free skip-parse of a request payload's traffic-plane
@@ -474,7 +512,7 @@ pub fn peek_request_meta(
             AltDiffError::Protocol("vector count overflows".into())
         })?)?;
     }
-    let (priority, deadline_us) = decode_extension(&mut r)?;
+    let (priority, deadline_us, _echo) = decode_extension(&mut r)?;
     r.done()?;
     Ok((id, priority, deadline_us))
 }
@@ -489,14 +527,30 @@ fn reply_payload_len(reply: &Reply) -> usize {
     // fixed: id u64 + k u32 + bs u32 + prim f64 + lat f64 + backend u8
     const DATA_FIXED: usize = 8 + 4 + 4 + 8 + 8 + 1;
     let vec_len = |v: &[f64]| 4 + 8 * v.len();
+    // optional trailing stage-echo block: tag u8 + N_SPANS × u32.
+    // Present only when the request opted in (`stages = Some`), so a
+    // non-echo reply is byte-identical to a pre-echo server's.
+    let stage_len = |s: &Option<StageSpans>| {
+        if s.is_some() {
+            1 + 4 * N_SPANS
+        } else {
+            0
+        }
+    };
     match reply {
-        Reply::Ok(r) => DATA_FIXED + vec_len(&r.x) + vec_len(&r.jx),
+        Reply::Ok(r) => {
+            DATA_FIXED
+                + vec_len(&r.x)
+                + vec_len(&r.jx)
+                + stage_len(&r.stages)
+        }
         Reply::Grad(g) => {
             DATA_FIXED
                 + vec_len(&g.x)
                 + vec_len(&g.grad_q)
                 + vec_len(&g.grad_b)
                 + vec_len(&g.grad_h)
+                + stage_len(&g.stages)
         }
         Reply::Err(f) => 8 + 1 + 4 + f.error.len(),
     }
@@ -545,6 +599,7 @@ fn encode_reply_unchecked(reply: &Reply) -> Vec<u8> {
             w.u8(backend_code(r.backend));
             w.f64_vec(&r.x);
             w.f64_vec(&r.jx);
+            encode_stage_echo(&mut w, &r.stages);
             w.finish()
         }
         Reply::Grad(g) => {
@@ -559,6 +614,7 @@ fn encode_reply_unchecked(reply: &Reply) -> Vec<u8> {
             w.f64_vec(&g.grad_q);
             w.f64_vec(&g.grad_b);
             w.f64_vec(&g.grad_h);
+            encode_stage_echo(&mut w, &g.stages);
             w.finish()
         }
         Reply::Err(f) => {
@@ -568,6 +624,39 @@ fn encode_reply_unchecked(reply: &Reply) -> Vec<u8> {
             w.str32(&f.error);
             w.finish()
         }
+    }
+}
+
+/// Write the optional stage-echo block: tag 1 + the six span widths
+/// in µs (decode order matches [`crate::obs::SPAN_LABELS`]). Nothing
+/// is written when the request did not opt in.
+fn encode_stage_echo(w: &mut Wr, stages: &Option<StageSpans>) {
+    if let Some(spans) = stages {
+        w.u8(1);
+        for &v in spans.iter() {
+            w.u32(v);
+        }
+    }
+}
+
+/// Parse the optional trailing stage-echo block. An exhausted reader
+/// (a pre-echo server, or a request that did not opt in) yields
+/// `None`; a present block must be well-formed.
+fn decode_stage_echo(r: &mut Rd<'_>) -> Result<Option<StageSpans>> {
+    if r.pos == r.b.len() {
+        return Ok(None);
+    }
+    match r.u8()? {
+        1 => {
+            let mut spans: StageSpans = [0; N_SPANS];
+            for s in spans.iter_mut() {
+                *s = r.u32()?;
+            }
+            Ok(Some(spans))
+        }
+        tag => Err(AltDiffError::Protocol(format!(
+            "stage-echo tag must be 1, got {tag}"
+        ))),
     }
 }
 
@@ -584,6 +673,7 @@ pub fn decode_reply(opcode: u8, payload: &[u8]) -> Result<Reply> {
             let backend = backend_str(r.u8()?);
             let x = r.f64_vec()?;
             let jx = r.f64_vec()?;
+            let stages = decode_stage_echo(&mut r)?;
             r.done()?;
             Ok(Reply::Ok(Response {
                 id,
@@ -594,6 +684,8 @@ pub fn decode_reply(opcode: u8, payload: &[u8]) -> Result<Reply> {
                 batch_size,
                 latency,
                 backend,
+                stamps: StageStamps::off(),
+                stages,
             }))
         }
         op::R_GRAD => {
@@ -607,6 +699,7 @@ pub fn decode_reply(opcode: u8, payload: &[u8]) -> Result<Reply> {
             let grad_q = r.f64_vec()?;
             let grad_b = r.f64_vec()?;
             let grad_h = r.f64_vec()?;
+            let stages = decode_stage_echo(&mut r)?;
             r.done()?;
             Ok(Reply::Grad(GradientResponse {
                 id,
@@ -619,6 +712,8 @@ pub fn decode_reply(opcode: u8, payload: &[u8]) -> Result<Reply> {
                 batch_size,
                 latency,
                 backend,
+                stamps: StageStamps::off(),
+                stages,
             }))
         }
         op::R_ERR => {
@@ -749,6 +844,9 @@ mod tests {
             priority: Priority::Normal,
             deadline_us: None,
             submitted: Instant::now(),
+            stamps: StageStamps::off(),
+            sampled: false,
+            echo_stages: false,
         };
         let frame = encode_request(&req);
         let (op_, payload) = strip(&frame);
@@ -779,6 +877,9 @@ mod tests {
             priority: Priority::Normal,
             deadline_us: None,
             submitted: Instant::now(),
+            stamps: StageStamps::off(),
+            sampled: false,
+            echo_stages: false,
         };
         let frame = encode_request(&req);
         let (op_, payload) = strip(&frame);
@@ -816,6 +917,9 @@ mod tests {
             priority: Priority::Normal,
             deadline_us: None,
             submitted: Instant::now(),
+            stamps: StageStamps::off(),
+            sampled: false,
+            echo_stages: false,
         };
         let frame = encode_request(&req);
         let (op_, payload) = strip(&frame);
@@ -825,15 +929,24 @@ mod tests {
         longer.push(0);
         assert!(decode_request(op_, &longer).is_err());
         // two appended zero bytes parse as an explicit all-default
-        // extension, which is legal; three are trailing garbage again
+        // extension, which is legal
         let mut explicit = payload.to_vec();
         explicit.extend_from_slice(&[0, 0]);
         let back = decode_request(op_, &explicit).unwrap();
         assert_eq!(back.priority, Priority::Normal);
         assert_eq!(back.deadline_us, None);
+        assert!(!back.echo_stages);
+        // a third byte is the stage-echo tag: 1 opts in, 0 is invalid
+        let mut echoed = payload.to_vec();
+        echoed.extend_from_slice(&[0, 0, 1]);
+        assert!(decode_request(op_, &echoed).unwrap().echo_stages);
         let mut garbage = payload.to_vec();
         garbage.extend_from_slice(&[0, 0, 0]);
         assert!(decode_request(op_, &garbage).is_err());
+        // anything after the echo byte is trailing garbage again
+        let mut longer_still = payload.to_vec();
+        longer_still.extend_from_slice(&[0, 0, 1, 1]);
+        assert!(decode_request(op_, &longer_still).is_err());
     }
 
     #[test]
@@ -856,6 +969,9 @@ mod tests {
                 priority: prio,
                 deadline_us: ddl,
                 submitted: Instant::now(),
+                stamps: StageStamps::off(),
+                sampled: false,
+                echo_stages: false,
             };
             let frame = encode_request(&req);
             let (op_, payload) = strip(&frame);
@@ -884,6 +1000,9 @@ mod tests {
             priority: Priority::Normal,
             deadline_us: None,
             submitted: Instant::now(),
+            stamps: StageStamps::off(),
+            sampled: false,
+            echo_stages: false,
         };
         let default_len = encode_request(&req).len();
         req.priority = Priority::Low;
@@ -891,6 +1010,19 @@ mod tests {
         assert_eq!(encode_request(&req).len(), default_len + 3);
         req.deadline_us = Some(1000);
         assert_eq!(encode_request(&req).len(), default_len + 3 + 4);
+        // stage echo adds exactly one opt-in byte at the tail
+        req.echo_stages = true;
+        assert_eq!(encode_request(&req).len(), default_len + 3 + 4 + 1);
+        // echo alone forces the block with explicit default tags
+        req.priority = Priority::Normal;
+        req.deadline_us = None;
+        assert_eq!(encode_request(&req).len(), default_len + 3);
+        let frame = encode_request(&req);
+        let (op_, payload) = strip(&frame);
+        let back = decode_request(op_, payload).unwrap();
+        assert!(back.echo_stages);
+        assert_eq!(back.priority, Priority::Normal);
+        assert_eq!(back.deadline_us, None);
     }
 
     #[test]
@@ -907,6 +1039,9 @@ mod tests {
             priority: Priority::Normal,
             deadline_us: None,
             submitted: Instant::now(),
+            stamps: StageStamps::off(),
+            sampled: false,
+            echo_stages: false,
         };
         let frame = encode_request(&req);
         let (op_, payload) = strip(&frame);
@@ -923,6 +1058,7 @@ mod tests {
         check(&[0, 2]); // bad deadline presence tag
         check(&[0, 1, 0, 0, 0, 0]); // zero deadline budget
         check(&[1, 1]); // truncated: deadline tag missing
+        check(&[0, 0, 2]); // bad stage-echo tag
     }
 
     #[test]
@@ -939,6 +1075,9 @@ mod tests {
             priority: Priority::Normal,
             deadline_us: None,
             submitted: Instant::now(),
+            stamps: StageStamps::off(),
+            sampled: false,
+            echo_stages: false,
         };
         let frame = encode_request(&req);
         let (op_, payload) = strip(&frame);
@@ -962,6 +1101,8 @@ mod tests {
             batch_size: 1,
             latency: 0.0,
             backend: "native-admm",
+            stamps: StageStamps::off(),
+            stages: None,
         });
         let frame = encode_reply(&reply);
         let (op_, payload) = strip(&frame);
@@ -1013,6 +1154,8 @@ mod tests {
             batch_size: 1,
             latency: 0.0,
             backend: "native",
+            stamps: StageStamps::off(),
+            stages: None,
         });
         let frame = encode_reply(&reply);
         let (op_, payload) = strip(&frame);
@@ -1040,5 +1183,71 @@ mod tests {
         let (op_, payload) = strip(&frame);
         let err = decode_request(op_, payload).unwrap_err();
         assert!(matches!(err, AltDiffError::Protocol(_)));
+    }
+
+    #[test]
+    fn stage_echo_reply_round_trips() {
+        let spans: StageSpans = [3, 1, 250, 40, 900, 7];
+        let mut resp = Response {
+            id: 21,
+            x: vec![1.0, 2.0],
+            jx: vec![0.5],
+            prim_residual: 1e-6,
+            k_used: 16,
+            batch_size: 4,
+            latency: 0.002,
+            backend: "native",
+            stamps: StageStamps::off(),
+            stages: Some(spans),
+        };
+        let frame = encode_reply(&Reply::Ok(resp.clone()));
+        let (op_, payload) = strip(&frame);
+        match decode_reply(op_, payload).unwrap() {
+            Reply::Ok(r) => {
+                assert_eq!(r.stages, Some(spans));
+                assert_eq!(r.x, resp.x);
+            }
+            _ => panic!("wrong arm"),
+        }
+        // without the echo the frame is byte-identical to a pre-echo
+        // encoder's, and decodes with stages = None
+        resp.stages = None;
+        let bare = encode_reply(&Reply::Ok(resp));
+        assert_eq!(bare.len(), frame.len() - 1 - 4 * N_SPANS);
+        let (op_, payload) = strip(&bare);
+        match decode_reply(op_, payload).unwrap() {
+            Reply::Ok(r) => assert_eq!(r.stages, None),
+            _ => panic!("wrong arm"),
+        }
+    }
+
+    #[test]
+    fn stage_echo_grad_reply_round_trips() {
+        let spans: StageSpans = [0, 0, 12, 0, 500, 1];
+        let g = GradientResponse {
+            id: 8,
+            x: vec![1.0],
+            grad_q: vec![0.1],
+            grad_b: vec![],
+            grad_h: vec![0.2],
+            prim_residual: 0.0,
+            k_used: 12,
+            batch_size: 1,
+            latency: 0.001,
+            backend: "native-sparse",
+            stamps: StageStamps::off(),
+            stages: Some(spans),
+        };
+        let frame = encode_reply(&Reply::Grad(g));
+        let (op_, payload) = strip(&frame);
+        match decode_reply(op_, payload).unwrap() {
+            Reply::Grad(g) => assert_eq!(g.stages, Some(spans)),
+            _ => panic!("wrong arm"),
+        }
+        // a malformed stage-echo tag is a Protocol error, not a panic
+        let mut bad = payload.to_vec();
+        let tail = bad.len() - 1 - 4 * N_SPANS;
+        bad[tail] = 7;
+        assert!(decode_reply(op_, &bad).is_err());
     }
 }

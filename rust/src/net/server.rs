@@ -38,6 +38,7 @@ use crate::coordinator::{
     class_budget, Coordinator, Failure, FailureKind, Priority, Reply,
 };
 use crate::error::Result;
+use crate::obs::Stage;
 use std::collections::BTreeMap;
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -92,6 +93,17 @@ enum ConnMode {
     /// was an ASCII uppercase method letter, which no valid frame
     /// starts with (the magic is 0xAD).
     Http,
+}
+
+/// Routing record for one admitted request: which connection to answer
+/// on, the client's correlation id, and the observability plane's
+/// per-request choices (stage echo opt-in, priority class for the
+/// stage-histogram labels).
+struct Route {
+    cid: u64,
+    client_id: u64,
+    echo: bool,
+    class: Priority,
 }
 
 /// Per-connection state.
@@ -175,8 +187,8 @@ impl NetServer {
         let metrics = coord.metrics.clone();
         let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
         let mut next_conn: u64 = 0;
-        // coordinator request id → (connection, client-side id)
-        let mut routes: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+        // coordinator request id → reply routing record
+        let mut routes: BTreeMap<u64, Route> = BTreeMap::new();
         let mut inflight: usize = 0;
         // connections owed the post-drain stats reply to a STOP op
         let mut stop_acks: Vec<u64> = Vec::new();
@@ -353,12 +365,29 @@ impl NetServer {
             // --- route coordinator replies -----------------------------
             while let Some(mut reply) = coord.try_recv() {
                 progress = true;
-                if let Some((cid, client_id)) =
-                    routes.remove(&reply.id())
-                {
+                if let Some(route) = routes.remove(&reply.id()) {
                     inflight = inflight.saturating_sub(1);
-                    set_reply_id(&mut reply, client_id);
-                    if let Some(conn) = conns.get_mut(&cid) {
+                    set_reply_id(&mut reply, route.client_id);
+                    // reply-written stamp + stage accounting happen at
+                    // the last server-side touch point, right before
+                    // the frame enters the write buffer; the stamp is
+                    // a no-op when the tracing plane is off
+                    let spans = match reply.stamps_mut() {
+                        Some(stamps) => {
+                            stamps.stamp(Stage::ReplyWritten);
+                            stamps
+                                .is_on()
+                                .then(|| stamps.spans_us())
+                        }
+                        None => None,
+                    };
+                    if let Some(spans) = spans {
+                        metrics.note_stages(route.class, &spans);
+                        if route.echo {
+                            reply.set_stages(spans);
+                        }
+                    }
+                    if let Some(conn) = conns.get_mut(&route.cid) {
                         conn.inflight = conn.inflight.saturating_sub(1);
                         conn.push_reply(&reply);
                     }
@@ -391,10 +420,8 @@ impl NetServer {
                     *drain_start.get_or_insert_with(Instant::now);
                 let expired = started.elapsed() > cfg.drain_timeout;
                 if inflight == 0 || expired {
-                    for (_, (cid, client_id)) in
-                        std::mem::take(&mut routes)
-                    {
-                        if let Some(conn) = conns.get_mut(&cid) {
+                    for (_, route) in std::mem::take(&mut routes) {
+                        if let Some(conn) = conns.get_mut(&route.cid) {
                             metrics
                                 .failures
                                 .fetch_add(1, Ordering::Relaxed);
@@ -402,7 +429,7 @@ impl NetServer {
                                 .drained
                                 .fetch_add(1, Ordering::Relaxed);
                             conn.push_reply(&Reply::Err(Failure::new(
-                                client_id,
+                                route.client_id,
                                 FailureKind::Shutdown,
                                 "server stopped before this request \
                                  finished",
@@ -485,7 +512,7 @@ fn handle_frame(
     cid: u64,
     conn: &mut Conn,
     coord: &mut Coordinator,
-    routes: &mut BTreeMap<u64, (u64, u64)>,
+    routes: &mut BTreeMap<u64, Route>,
     inflight: &mut usize,
     stop_acks: &mut Vec<u64>,
     cfg: &NetConfig,
@@ -561,6 +588,11 @@ fn handle_frame(
                 )));
                 return;
             }
+            // accepted-stamp before decode, decoded-stamp after: the
+            // first span is exactly the deserialization cost. Both are
+            // single no-op branches when the tracing plane is off.
+            let mut stamps = coord.new_stamps();
+            stamps.stamp(Stage::Accepted);
             let mut req = match proto::decode_request(opcode, payload) {
                 Ok(r) => r,
                 Err(e) => {
@@ -577,6 +609,8 @@ fn handle_frame(
                     return;
                 }
             };
+            stamps.stamp(Stage::Decoded);
+            req.stamps = stamps;
             // the frame aged `parked_for` before decode could stamp
             // `submitted`; backdate so the later checkpoints (and
             // latency accounting) see the request's true age
@@ -594,8 +628,13 @@ fn handle_frame(
             // answers Overloaded through the ordinary reply route, so
             // coordinator-level shedding still reaches the client.
             let client_id = req.id;
+            let echo = req.echo_stages;
+            let class = req.priority;
             let sid = coord.submit_request(req);
-            routes.insert(sid, (cid, client_id));
+            routes.insert(
+                sid,
+                Route { cid, client_id, echo, class },
+            );
             conn.inflight += 1;
             *inflight += 1;
         }
@@ -667,13 +706,15 @@ fn http_response(status: &str, ctype: &str, body: &str) -> Vec<u8> {
 }
 
 /// Serve one sniffed HTTP connection: a zero-dep `GET /metrics` +
-/// `GET /healthz` responder multiplexed on the same poll loop as the
-/// framed protocol, so a Prometheus scrape or a load balancer's health
-/// probe works *live* against a serving front end — no separate port,
-/// no extra thread, and the render cost is paid by the scraper's tick
-/// only. One request per connection (HTTP/1.0 semantics): the response
-/// queues on the ordinary write buffer and the connection closes after
-/// the flush.
+/// `GET /healthz` + `GET /trace` responder multiplexed on the same
+/// poll loop as the framed protocol, so a Prometheus scrape, a load
+/// balancer's health probe, or a convergence-trace pull works *live*
+/// against a serving front end — no separate port, no extra thread,
+/// and the render cost is paid by the scraper's tick only. `/trace`
+/// *drains* the sampled-trace ring (each event is delivered exactly
+/// once across scrapers) as JSON-lines. One request per connection
+/// (HTTP/1.0 semantics): the response queues on the ordinary write
+/// buffer and the connection closes after the flush.
 fn handle_http(conn: &mut Conn, coord: &Coordinator, draining: bool) {
     const MAX_HEADER: usize = 8 * 1024;
     let end = conn.http_buf.windows(4).position(|w| w == b"\r\n\r\n");
@@ -747,10 +788,22 @@ fn handle_http(conn: &mut Conn, coord: &Coordinator, draining: bool) {
                     if method == "HEAD" { String::new() } else { body };
                 http_response(code, "application/json", &body)
             }
+            "/trace" => {
+                // destructive read: the ring is drained, so repeated
+                // scrapes stream fresh events instead of re-sending —
+                // HEAD still drains nothing observable body-wise but
+                // would consume events, so it short-circuits first
+                let body = if method == "HEAD" {
+                    String::new()
+                } else {
+                    coord.trace_ring().drain_jsonl()
+                };
+                http_response("200 OK", "application/x-ndjson", &body)
+            }
             _ => http_response(
                 "404 Not Found",
                 "text/plain",
-                "known paths: /metrics /healthz\n",
+                "known paths: /metrics /healthz /trace\n",
             ),
         }
     };

@@ -1,0 +1,129 @@
+//! L4.5: the per-request tracing plane.
+//!
+//! Cumulative counters ([`crate::coordinator::Metrics`]) say *that* p99
+//! blew past an SLO; this module says *where the time went* and *what
+//! the solver was doing*. Two cooperating mechanisms, both zero-dep and
+//! both provably near-free when disabled:
+//!
+//! - **Stage spans** ([`StageStamps`]): every request carries seven
+//!   monotonic-µs stamps (accepted → decoded → enqueued → batch-formed
+//!   → exec-start → exec-end → reply-written), stamped at each handoff
+//!   by the net front end, the shard router, the batcher, and the
+//!   execution workers. Each `stamp()` is a single branch on a per-record
+//!   flag fixed at admission from [`Config::stamps`]
+//!   (crate::coordinator::Config); with the flag off the record never
+//!   mutates and replies stay byte-identical to the pre-tracing wire.
+//!   Stage durations feed per-(stage × priority-class) Prometheus
+//!   histograms and an opt-in reply echo the load generator reconciles
+//!   against client-observed latency.
+//!
+//! - **Sampled deep traces** ([`TraceSampler`] + [`IterObserver`] +
+//!   [`TraceRing`]): a seeded 1-in-N sampler promotes requests to full
+//!   traces. The engines call a per-iteration observer hook that records
+//!   primal/dual residuals for watched batch elements only — the
+//!   unsampled path pays one `Option` branch per iteration and allocates
+//!   nothing. Finished traces land in a fixed-capacity lock-striped ring
+//!   and drain as JSON-lines from `GET /trace` on the serving port.
+//!
+//! The paper's Thm 4.3 bounds the Jacobian error by the iterate error,
+//! so the residual trajectory in a trace is exactly the evidence needed
+//! to pick the truncation rung k — see DESIGN.md §"Observability".
+
+pub mod ring;
+pub mod sampler;
+pub mod stamps;
+
+pub use ring::{IterSample, TraceEvent, TraceRing};
+pub use sampler::TraceSampler;
+pub use stamps::{
+    now_us, sum_spans_us, Stage, StageSpans, StageStamps, N_SPANS,
+    SPAN_LABELS,
+};
+
+/// Per-iteration solver hook. Engines call [`IterObserver::wants`] once
+/// per live batch element per iteration and compute the (relatively
+/// expensive) KKT residuals only for elements the observer claims —
+/// passing `None` for the observer costs a single branch per iteration
+/// and zero allocation.
+pub trait IterObserver {
+    /// Whether batch element `elem` should be traced this launch.
+    fn wants(&self, elem: usize) -> bool;
+    /// Record iteration `iter` of element `elem`: `primal` is the
+    /// constraint-violation norm ‖(Ax−b, Gx+s−h)‖₂ at the new iterate,
+    /// `dual` the scaled iterate step ρ‖x_{k+1}−x_k‖₂ (the standard
+    /// ADMM dual-residual surrogate for this splitting).
+    fn on_iter(&mut self, elem: usize, iter: usize, primal: f64, dual: f64);
+}
+
+/// The coordinator-side [`IterObserver`]: collects residual series for
+/// the sampled elements of one batch launch, to be packaged into
+/// [`TraceEvent`]s after the launch returns.
+#[derive(Debug)]
+pub struct TraceCollector {
+    slots: Vec<Option<Vec<IterSample>>>,
+}
+
+impl TraceCollector {
+    /// A collector for a batch of `batch` elements, watching none.
+    pub fn new(batch: usize) -> Self {
+        TraceCollector { slots: vec![None; batch] }
+    }
+
+    /// Mark element `elem` as sampled (its residuals will be recorded).
+    pub fn watch(&mut self, elem: usize) {
+        self.slots[elem] = Some(Vec::new());
+    }
+
+    /// Whether any element is being watched (skip the observer pass
+    /// entirely — and the collector itself — when false).
+    pub fn any(&self) -> bool {
+        self.slots.iter().any(|s| s.is_some())
+    }
+
+    /// Take element `elem`'s recorded series (None if unwatched).
+    pub fn take(&mut self, elem: usize) -> Option<Vec<IterSample>> {
+        self.slots[elem].take()
+    }
+}
+
+impl IterObserver for TraceCollector {
+    fn wants(&self, elem: usize) -> bool {
+        self.slots.get(elem).is_some_and(|s| s.is_some())
+    }
+
+    fn on_iter(&mut self, elem: usize, iter: usize, primal: f64, dual: f64) {
+        if let Some(Some(buf)) = self.slots.get_mut(elem) {
+            buf.push(IterSample { iter: iter as u32, primal, dual });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collector_watches_only_marked_elements() {
+        let mut c = TraceCollector::new(3);
+        assert!(!c.any());
+        c.watch(1);
+        assert!(c.any());
+        assert!(!c.wants(0) && c.wants(1) && !c.wants(2));
+        c.on_iter(1, 0, 1.0, 2.0);
+        c.on_iter(1, 1, 0.5, 1.0);
+        c.on_iter(0, 0, 9.0, 9.0); // unwatched: dropped
+        let s = c.take(1).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].iter, 0);
+        assert_eq!(s[1].primal, 0.5);
+        assert!(c.take(0).is_none());
+        assert!(c.take(1).is_none()); // taken
+    }
+
+    #[test]
+    fn out_of_range_elem_is_ignored() {
+        let mut c = TraceCollector::new(1);
+        assert!(!c.wants(5));
+        c.on_iter(5, 0, 1.0, 1.0); // no panic
+    }
+}

@@ -1,0 +1,302 @@
+//! The trace ring: a fixed-capacity, lock-striped buffer of finished
+//! [`TraceEvent`]s, drained as JSON-lines by `GET /trace`.
+//!
+//! Writers (execution workers) hash a request id to one of a small
+//! power-of-two set of stripes and take only that stripe's mutex, so
+//! concurrent workers almost never contend; each stripe is a bounded
+//! `VecDeque` that drops its oldest event when full (newest-wins, with
+//! a dropped counter). The reader (`/trace`) drains every stripe and
+//! merges by id. Total memory is bounded by construction: capacity
+//! events, each holding at most the solver's iteration count of
+//! 24-byte samples.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::stamps::{StageStamps, SPAN_LABELS};
+
+/// One recorded solver iteration of one traced request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IterSample {
+    /// Iteration index (0-based).
+    pub iter: u32,
+    /// Constraint-violation norm ‖(Ax−b, Gx+s−h)‖₂ at the new iterate.
+    pub primal: f64,
+    /// Scaled iterate step ρ‖x_{k+1}−x_k‖₂ (dual-residual surrogate).
+    pub dual: f64,
+}
+
+/// One traced request: identity, routing outcome, stage spans, and the
+/// per-iteration residual series (empty on the compiled/PJRT path,
+/// which exposes no per-iteration state).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Coordinator-assigned request id.
+    pub id: u64,
+    /// Layer the request solved against.
+    pub layer: String,
+    /// Executing backend label (`"native"`, `"native-admm"`, …).
+    pub backend: &'static str,
+    /// Priority-class label (`"high"` / `"normal"` / `"low"`).
+    pub class: &'static str,
+    /// Truncation rung the router chose.
+    pub k: usize,
+    /// Size of the batch this request executed in.
+    pub batch: usize,
+    /// Whether this was a gradient (VJP) request.
+    pub grad: bool,
+    /// The request's stage stamps as of trace capture (exec-end; the
+    /// reply-written stamp happens after capture by construction).
+    pub stamps: StageStamps,
+    /// Per-iteration residuals recorded by the engine observer.
+    pub iters: Vec<IterSample>,
+}
+
+/// JSON-escape + format an f64 (non-finite → `null`, which keeps every
+/// emitted line machine-parseable).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+impl TraceEvent {
+    /// Render one JSON-lines record (no trailing newline).
+    pub fn render_jsonl(&self) -> String {
+        let spans = self.stamps.spans_us();
+        let mut out = String::with_capacity(128 + 48 * self.iters.len());
+        out.push_str(&format!(
+            "{{\"id\":{},\"layer\":{},\"backend\":{},\"class\":{},\
+             \"k\":{},\"batch\":{},\"grad\":{}",
+            self.id,
+            json_str(&self.layer),
+            json_str(self.backend),
+            json_str(self.class),
+            self.k,
+            self.batch,
+            self.grad,
+        ));
+        out.push_str(",\"stages_us\":{");
+        for (i, name) in SPAN_LABELS.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{}:{}", json_str(name), spans[i]));
+        }
+        out.push_str("},\"iters\":[");
+        for (i, s) in self.iters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"iter\":{},\"primal\":{},\"dual\":{}}}",
+                s.iter,
+                json_f64(s.primal),
+                json_f64(s.dual)
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+const STRIPES: usize = 8;
+
+struct Stripe {
+    buf: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// Fixed-capacity lock-striped ring of [`TraceEvent`]s.
+pub struct TraceRing {
+    stripes: Vec<Mutex<Stripe>>,
+    per_stripe: usize,
+}
+
+impl std::fmt::Debug for TraceRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRing")
+            .field("capacity", &self.capacity())
+            .field("len", &self.len())
+            .finish()
+    }
+}
+
+impl TraceRing {
+    /// A ring holding at most `capacity` events (rounded up to a
+    /// multiple of the stripe count; minimum one event per stripe).
+    pub fn new(capacity: usize) -> Self {
+        let per_stripe = capacity.div_ceil(STRIPES).max(1);
+        let stripes = (0..STRIPES)
+            .map(|_| {
+                Mutex::new(Stripe {
+                    buf: VecDeque::with_capacity(per_stripe),
+                    dropped: 0,
+                })
+            })
+            .collect();
+        TraceRing { stripes, per_stripe }
+    }
+
+    /// Total event capacity.
+    pub fn capacity(&self) -> usize {
+        self.per_stripe * STRIPES
+    }
+
+    /// Events currently buffered.
+    pub fn len(&self) -> usize {
+        self.stripes
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).buf.len())
+            .sum()
+    }
+
+    /// True when no events are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted unread because their stripe was full.
+    pub fn dropped(&self) -> u64 {
+        self.stripes
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).dropped)
+            .sum()
+    }
+
+    /// Record a finished trace. Takes one stripe mutex; evicts that
+    /// stripe's oldest event when full.
+    pub fn push(&self, ev: TraceEvent) {
+        let idx = (ev.id as usize) % STRIPES;
+        let mut s =
+            self.stripes[idx].lock().unwrap_or_else(|e| e.into_inner());
+        if s.buf.len() >= self.per_stripe {
+            s.buf.pop_front();
+            s.dropped += 1;
+        }
+        s.buf.push_back(ev);
+    }
+
+    /// Drain every buffered event, merged in id order (oldest first).
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut all: Vec<TraceEvent> = Vec::new();
+        for s in &self.stripes {
+            let mut s = s.lock().unwrap_or_else(|e| e.into_inner());
+            all.extend(s.buf.drain(..));
+        }
+        all.sort_by_key(|e| e.id);
+        all
+    }
+
+    /// Drain and render as JSON-lines (one event per `\n`-terminated
+    /// line; empty string when no events are buffered).
+    pub fn drain_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.drain() {
+            out.push_str(&ev.render_jsonl());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::stamps::StageStamps;
+
+    fn ev(id: u64) -> TraceEvent {
+        TraceEvent {
+            id,
+            layer: "qp".to_string(),
+            backend: "native",
+            class: "normal",
+            k: 30,
+            batch: 4,
+            grad: false,
+            stamps: StageStamps::enabled(),
+            iters: vec![
+                IterSample { iter: 0, primal: 1.5e-2, dual: 3.0e-2 },
+                IterSample { iter: 1, primal: 4.0e-3, dual: 8.0e-3 },
+            ],
+        }
+    }
+
+    #[test]
+    fn push_drain_roundtrip_in_id_order() {
+        let r = TraceRing::new(16);
+        for id in [3u64, 1, 2] {
+            r.push(ev(id));
+        }
+        assert_eq!(r.len(), 3);
+        let out = r.drain();
+        assert_eq!(
+            out.iter().map(|e| e.id).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_and_counts_drops() {
+        let r = TraceRing::new(8); // 1 per stripe
+        r.push(ev(0));
+        r.push(ev(8)); // same stripe as 0 → evicts it
+        assert_eq!(r.dropped(), 1);
+        let out = r.drain();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 8);
+    }
+
+    #[test]
+    fn jsonl_lines_are_well_formed() {
+        let r = TraceRing::new(16);
+        r.push(ev(7));
+        let text = r.drain_jsonl();
+        let line = text.trim_end();
+        assert!(line.starts_with('{') && line.ends_with('}'));
+        assert!(line.contains("\"id\":7"));
+        assert!(line.contains("\"stages_us\""));
+        assert!(line.contains("\"primal\":1.5e-2"));
+        assert!(!line.contains('\n'));
+        // balanced braces/brackets (cheap well-formedness proxy)
+        let opens = line.matches('{').count();
+        let closes = line.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn non_finite_residuals_render_null() {
+        let mut e = ev(1);
+        e.iters[0].primal = f64::INFINITY;
+        let line = e.render_jsonl();
+        assert!(line.contains("\"primal\":null"));
+    }
+
+    #[test]
+    fn layer_names_are_escaped() {
+        let mut e = ev(1);
+        e.layer = "we\"ird\\name".to_string();
+        let line = e.render_jsonl();
+        assert!(line.contains("we\\\"ird\\\\name"));
+    }
+}

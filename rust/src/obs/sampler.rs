@@ -1,0 +1,81 @@
+//! The 1-in-N trace sampler: decides at admission which requests are
+//! promoted to full solver traces.
+//!
+//! Deterministic by design — a counter with a seeded phase, not a PRNG
+//! draw per request — so (a) the decision costs one `fetch_add`, (b) a
+//! fixed workload samples a fixed set of requests (tests and incident
+//! replays are reproducible), and (c) the sample rate is exactly 1/N
+//! rather than 1/N in expectation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Seeded 1-in-N sampler. `every = 0` disables sampling entirely.
+#[derive(Debug)]
+pub struct TraceSampler {
+    every: u64,
+    count: AtomicU64,
+}
+
+impl TraceSampler {
+    /// Sample every `every`-th request; `seed` shifts the phase so
+    /// co-located servers don't all sample the same ordinal positions.
+    pub fn new(every: u64, seed: u64) -> Self {
+        let phase = if every > 1 { seed % every } else { 0 };
+        TraceSampler { every, count: AtomicU64::new(phase) }
+    }
+
+    /// A sampler that never samples.
+    pub fn off() -> Self {
+        TraceSampler::new(0, 0)
+    }
+
+    /// The configured period (0 = off).
+    pub fn every(&self) -> u64 {
+        self.every
+    }
+
+    /// Admission-time decision: is this request sampled? Thread-safe,
+    /// one relaxed `fetch_add` when enabled, one branch when disabled.
+    #[inline]
+    pub fn sample(&self) -> bool {
+        if self.every == 0 {
+            return false;
+        }
+        self.count.fetch_add(1, Ordering::Relaxed) % self.every == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_period_never_samples() {
+        let s = TraceSampler::off();
+        assert!((0..1000).all(|_| !s.sample()));
+    }
+
+    #[test]
+    fn one_in_n_is_exact() {
+        let s = TraceSampler::new(4, 0);
+        let hits = (0..1000).filter(|_| s.sample()).count();
+        assert_eq!(hits, 250);
+    }
+
+    #[test]
+    fn seed_shifts_the_phase() {
+        let a = TraceSampler::new(4, 0);
+        let b = TraceSampler::new(4, 1);
+        let pa: Vec<bool> = (0..8).map(|_| a.sample()).collect();
+        let pb: Vec<bool> = (0..8).map(|_| b.sample()).collect();
+        assert_eq!(pa.iter().filter(|&&x| x).count(), 2);
+        assert_eq!(pb.iter().filter(|&&x| x).count(), 2);
+        assert_ne!(pa, pb);
+    }
+
+    #[test]
+    fn every_one_samples_everything() {
+        let s = TraceSampler::new(1, 7);
+        assert!((0..100).all(|_| s.sample()));
+    }
+}

@@ -1,0 +1,200 @@
+//! Stage stamps: a fixed-size record of monotonic-µs handoff times
+//! carried by every [`Request`](crate::coordinator::Request).
+//!
+//! All stamps are µs offsets from one process-wide monotonic anchor
+//! (first use of [`now_us`]), so stamps taken on different threads are
+//! directly comparable and differences are wall-clock stage durations.
+//! The record is `Copy` (64 bytes + flag) and every mutation is gated
+//! on a flag fixed at construction — the disabled record is inert, which
+//! is the whole overhead contract: tracing off costs one predictable
+//! branch per stamp site.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static ANCHOR: OnceLock<Instant> = OnceLock::new();
+
+/// Microseconds since the process-wide monotonic anchor. The anchor is
+/// fixed on first call; all threads share it.
+pub fn now_us() -> u64 {
+    ANCHOR.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// The seven handoff points of a request's life, in path order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// First byte of the frame read off the socket.
+    Accepted = 0,
+    /// Wire payload decoded into a [`Request`](crate::coordinator::Request).
+    Decoded = 1,
+    /// Admitted into a shard queue by the coordinator.
+    Enqueued = 2,
+    /// Emitted from the batcher as part of a formed batch.
+    BatchFormed = 3,
+    /// Execution worker picked the batch up (pre-solve).
+    ExecStart = 4,
+    /// Solve finished, reply constructed.
+    ExecEnd = 5,
+    /// Reply encoded into the connection's write buffer.
+    ReplyWritten = 6,
+}
+
+/// Number of stages (and stamp slots).
+pub const N_STAGES: usize = 7;
+
+/// Number of inter-stage durations (`N_STAGES − 1`).
+pub const N_SPANS: usize = 6;
+
+/// Short label for the span *ending* at stage `i + 1` — the Prometheus
+/// `stage` label and the loadgen table row name.
+pub const SPAN_LABELS: [&str; N_SPANS] =
+    ["decode", "admit", "queue", "sched", "exec", "write"];
+
+/// The six inter-stage durations in µs, as echoed on the wire and fed
+/// to the per-(stage × class) histograms.
+pub type StageSpans = [u32; N_SPANS];
+
+/// The per-request stamp record. Inert (never mutates) unless built
+/// with [`StageStamps::enabled`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StageStamps {
+    on: bool,
+    t: [u64; N_STAGES],
+}
+
+impl Default for StageStamps {
+    fn default() -> Self {
+        StageStamps::off()
+    }
+}
+
+impl StageStamps {
+    /// A disabled record: `stamp` is a no-op, all slots stay unset.
+    pub fn off() -> Self {
+        StageStamps { on: false, t: [0; N_STAGES] }
+    }
+
+    /// An enabled record with no stamps taken yet.
+    pub fn enabled() -> Self {
+        StageStamps { on: true, t: [0; N_STAGES] }
+    }
+
+    /// Whether this record stamps at all.
+    pub fn is_on(&self) -> bool {
+        self.on
+    }
+
+    /// Record `stage` at the current monotonic time. Single branch when
+    /// disabled; later stamps of the same stage overwrite.
+    #[inline]
+    pub fn stamp(&mut self, stage: Stage) {
+        if self.on {
+            self.t[stage as usize] = now_us().max(1);
+        }
+    }
+
+    /// The stamp for `stage`, if taken (µs since the anchor).
+    pub fn get(&self, stage: Stage) -> Option<u64> {
+        match self.t[stage as usize] {
+            0 => None,
+            v => Some(v),
+        }
+    }
+
+    /// True when every *taken* stamp is non-decreasing in stage order.
+    /// Unset slots (e.g. no net front end → no `Accepted`) are skipped.
+    pub fn monotone(&self) -> bool {
+        let mut prev = 0u64;
+        for &v in &self.t {
+            if v == 0 {
+                continue;
+            }
+            if v < prev {
+                return false;
+            }
+            prev = v;
+        }
+        true
+    }
+
+    /// Span durations in µs: slot `i` is `t[i+1] − t[i]`, or 0 when
+    /// either endpoint is unset (the span never happened on this path)
+    /// or the pair is out of order. Saturates at `u32::MAX` (~71 min).
+    pub fn spans_us(&self) -> [u32; N_SPANS] {
+        let mut d = [0u32; N_SPANS];
+        for i in 0..N_SPANS {
+            let (a, b) = (self.t[i], self.t[i + 1]);
+            if a != 0 && b >= a {
+                d[i] = (b - a).min(u32::MAX as u64) as u32;
+            }
+        }
+        d
+    }
+
+    /// First-to-last taken stamp, µs (0 if fewer than two stamps).
+    pub fn total_us(&self) -> u64 {
+        let taken: Vec<u64> =
+            self.t.iter().copied().filter(|&v| v != 0).collect();
+        match (taken.first(), taken.last()) {
+            (Some(&a), Some(&b)) if b >= a => b - a,
+            _ => 0,
+        }
+    }
+}
+
+/// Sum of span durations — the server-side attributed latency a client
+/// reconciles its observed RTT against.
+pub fn sum_spans_us(spans: &[u32; N_SPANS]) -> u64 {
+    spans.iter().map(|&d| d as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_record_is_inert() {
+        let mut s = StageStamps::off();
+        s.stamp(Stage::Accepted);
+        s.stamp(Stage::ReplyWritten);
+        assert_eq!(s, StageStamps::off());
+        assert_eq!(s.spans_us(), [0; N_SPANS]);
+        assert_eq!(s.total_us(), 0);
+        assert!(s.monotone());
+    }
+
+    #[test]
+    fn stamps_are_monotone_and_spans_reconcile() {
+        let mut s = StageStamps::enabled();
+        s.stamp(Stage::Accepted);
+        s.stamp(Stage::Decoded);
+        s.stamp(Stage::Enqueued);
+        s.stamp(Stage::BatchFormed);
+        s.stamp(Stage::ExecStart);
+        s.stamp(Stage::ExecEnd);
+        s.stamp(Stage::ReplyWritten);
+        assert!(s.monotone());
+        let spans = s.spans_us();
+        assert_eq!(sum_spans_us(&spans), s.total_us());
+    }
+
+    #[test]
+    fn unset_interior_stamp_zeroes_adjacent_spans() {
+        // In-process submission: no net front end, Accepted/Decoded unset.
+        let mut s = StageStamps::enabled();
+        s.stamp(Stage::Enqueued);
+        s.stamp(Stage::BatchFormed);
+        let spans = s.spans_us();
+        assert_eq!(spans[0], 0); // accepted→decoded: both unset
+        assert_eq!(spans[1], 0); // decoded→enqueued: start unset
+        assert!(s.monotone());
+        assert_eq!(sum_spans_us(&spans), s.total_us());
+    }
+
+    #[test]
+    fn now_us_is_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,417 @@
+//! Observability-plane integration suite: stage-latency decomposition
+//! and sampled solver convergence traces, end to end.
+//!
+//! Contracts under test:
+//!
+//! - **monotone stamps + reconciliation**: every traced request's
+//!   stamps are monotone, the per-stage spans sum exactly to the
+//!   stamped end-to-end width, and the client-observed latency is
+//!   never smaller than the server-side stage sum (1 ms slack);
+//! - **convergence traces**: a sampled solve at fixed k records one
+//!   residual pair per iteration, with decreasing primal/dual
+//!   residuals — the raw material for Thm 4.3 truncation tuning;
+//! - **observer transparency**: observing a solve never changes its
+//!   iterates (bit-identical solutions with and without a collector);
+//! - **`GET /trace`**: the ring drains as well-formed JSON-lines over
+//!   the sniffed HTTP path while solve traffic is in flight;
+//! - **off means off**: with the tracing plane disabled (the default)
+//!   stamps stay zeroed, replies carry no stage echo even when the
+//!   client asks, the stage histograms never move, and `/trace` is
+//!   empty.
+
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options};
+use altdiff::coordinator::{Config, Coordinator, Reply};
+use altdiff::net::{
+    run_loadgen, LoadgenOpts, NetConfig, NetServer, PipelinedClient,
+};
+use altdiff::obs::{
+    sum_spans_us, IterObserver, IterSample, Stage, TraceCollector,
+    N_SPANS,
+};
+use altdiff::prob::dense_qp;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// In-process coordinator with the tracing plane fully on.
+fn traced_coordinator(trace_every: u64) -> Coordinator {
+    Coordinator::builder(Config {
+        workers: 2,
+        max_batch: 4,
+        stamps: true,
+        trace_every,
+        trace_ring: 256,
+        trace_seed: 7,
+        ..Default::default()
+    })
+    .register("qp16", dense_qp(16, 8, 4, 1), 1.0)
+    .unwrap()
+    .start()
+}
+
+struct Loopback {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<Coordinator>,
+}
+
+fn start_server(config: Config) -> Loopback {
+    let coord = Coordinator::builder(config)
+        .register("qp16", dense_qp(16, 8, 4, 1), 1.0)
+        .unwrap()
+        .start();
+    let server =
+        NetServer::bind("127.0.0.1:0", coord, NetConfig::default())
+            .expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run());
+    Loopback { addr, stop, handle }
+}
+
+impl Loopback {
+    fn finish(self) -> Coordinator {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handle.join().expect("server thread")
+    }
+}
+
+/// Minimal HTTP/1.0 GET against the serving port; returns
+/// (status line, body).
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("http connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())
+        .unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("http response");
+    let (head, body) =
+        raw.split_once("\r\n\r\n").expect("header terminator");
+    (head.lines().next().unwrap_or("").to_string(), body.to_string())
+}
+
+/// Structural JSON-lines check (the CI smoke runs a real JSON parser;
+/// this guards the invariants the renderer owns).
+fn assert_trace_line_shape(line: &str) {
+    assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+    for key in ["\"id\":", "\"layer\":", "\"class\":", "\"iters\":"] {
+        assert!(line.contains(key), "missing {key} in {line}");
+    }
+    assert_eq!(
+        line.bytes().filter(|&b| b == b'"').count() % 2,
+        0,
+        "unbalanced quotes: {line}"
+    );
+}
+
+// ------------------------------------------------- stage decomposition
+
+#[test]
+fn stamps_are_monotone_and_spans_reconcile_in_process() {
+    let mut coord = traced_coordinator(0);
+    coord.wait_ready(Duration::from_secs(60));
+    let qp = dense_qp(16, 8, 4, 1);
+    let t0 = Instant::now();
+    let n = 24;
+    for _ in 0..n {
+        coord.submit(
+            "qp16",
+            qp.q.clone(),
+            qp.b.clone(),
+            qp.h.clone(),
+            1e-3,
+        );
+    }
+    for _ in 0..n {
+        let reply = coord
+            .recv_timeout(Duration::from_secs(60))
+            .expect("reply");
+        let stamps = match &reply {
+            Reply::Ok(r) => r.stamps,
+            other => panic!("expected Ok, got {other:?}"),
+        };
+        assert!(stamps.is_on(), "tracing plane is on");
+        assert!(stamps.monotone(), "stamps out of order: {stamps:?}");
+        // in-process requests stamp enqueued → batch-formed →
+        // exec-start → exec-end; the adjacent spans must sum exactly
+        // to the stamped end-to-end width
+        for st in [Stage::Enqueued, Stage::ExecEnd] {
+            assert!(stamps.get(st).is_some(), "{st:?} missing");
+        }
+        let spans = stamps.spans_us();
+        assert_eq!(
+            sum_spans_us(&spans),
+            stamps.total_us(),
+            "span sum ≠ stamped total: {spans:?}"
+        );
+        // the stamped server-side total can never exceed the
+        // client-observed wall clock for the whole run (1 ms slack
+        // for the µs-quantization at each stamp site)
+        let wall_us = t0.elapsed().as_micros() as u64;
+        assert!(
+            stamps.total_us() <= wall_us + 1_000,
+            "server stages {}µs exceed wall {}µs",
+            stamps.total_us(),
+            wall_us
+        );
+    }
+    coord.shutdown();
+}
+
+// ------------------------------------------------- convergence traces
+
+#[test]
+fn observed_fixed_k_solve_records_decreasing_residuals() {
+    let k = 60;
+    let eng = DenseAltDiff::new(dense_qp(16, 8, 4, 1), 1.0).unwrap();
+    let opts = Options {
+        rho: 1.0,
+        tol: 0.0, // fixed-k: run exactly max_iter iterations
+        max_iter: k,
+        backward: BackwardMode::None,
+        trace: false,
+    };
+    let mut coll = TraceCollector::new(1);
+    coll.watch(0);
+    let sol = eng.solve_observed(
+        None,
+        None,
+        None,
+        None,
+        &opts,
+        Some(&mut coll as &mut dyn IterObserver),
+    );
+    assert_eq!(sol.iters, k);
+    let iters: Vec<IterSample> = coll.take(0).expect("watched");
+    assert_eq!(iters.len(), k, "one sample per iteration");
+    for (i, s) in iters.iter().enumerate() {
+        assert_eq!(s.iter as usize, i, "iteration indices in order");
+        assert!(s.primal.is_finite() && s.primal >= 0.0);
+        assert!(s.dual.is_finite() && s.dual >= 0.0);
+    }
+    // Alt-Diff converges linearly on a strongly convex QP (Thm 4.2):
+    // the residual trace must fall, both endpoint-to-endpoint and in
+    // window averages (jitter-tolerant monotonicity)
+    let head = |v: &[IterSample], f: fn(&IterSample) -> f64| {
+        v[..10].iter().map(f).sum::<f64>() / 10.0
+    };
+    let tail = |v: &[IterSample], f: fn(&IterSample) -> f64| {
+        v[k - 10..].iter().map(f).sum::<f64>() / 10.0
+    };
+    let (p0, pk) =
+        (head(&iters, |s| s.primal), tail(&iters, |s| s.primal));
+    let (d0, dk) = (head(&iters, |s| s.dual), tail(&iters, |s| s.dual));
+    assert!(pk < p0 * 0.5, "primal did not fall: {p0:.3e} → {pk:.3e}");
+    assert!(dk < d0 * 0.5, "dual did not fall: {d0:.3e} → {dk:.3e}");
+    assert!(
+        iters[k - 1].dual <= iters[0].dual,
+        "dual endpoint rose over the trace"
+    );
+}
+
+#[test]
+fn observer_never_perturbs_the_solve() {
+    let eng = DenseAltDiff::new(dense_qp(16, 8, 4, 3), 1.0).unwrap();
+    let opts = Options {
+        backward: BackwardMode::None,
+        ..Options::with_tol(1e-6)
+    };
+    let plain = eng.solve_from(None, None, None, None, &opts);
+    let mut coll = TraceCollector::new(1);
+    coll.watch(0);
+    let observed = eng.solve_observed(
+        None,
+        None,
+        None,
+        None,
+        &opts,
+        Some(&mut coll as &mut dyn IterObserver),
+    );
+    // bit-identical, not approximately equal: the observer reads the
+    // iterate, it never feeds back into it
+    assert_eq!(plain.x, observed.x);
+    assert_eq!(plain.iters, observed.iters);
+    assert!(!coll.take(0).expect("watched").is_empty());
+}
+
+#[test]
+fn sampled_requests_reach_the_ring_with_iteration_traces() {
+    let mut coord = traced_coordinator(1); // sample every request
+    coord.wait_ready(Duration::from_secs(60));
+    let qp = dense_qp(16, 8, 4, 1);
+    let n = 12;
+    for _ in 0..n {
+        coord.submit(
+            "qp16",
+            qp.q.clone(),
+            qp.b.clone(),
+            qp.h.clone(),
+            1e-3,
+        );
+    }
+    for _ in 0..n {
+        coord.recv_timeout(Duration::from_secs(60)).expect("reply");
+    }
+    let events = coord.trace_ring().drain();
+    assert_eq!(events.len(), n, "1-in-1 sampling traces every request");
+    for ev in &events {
+        assert_eq!(ev.layer, "qp16");
+        assert_eq!(ev.class, "normal");
+        assert!(!ev.grad);
+        assert!(ev.stamps.is_on() && ev.stamps.monotone());
+        assert!(!ev.iters.is_empty(), "native path records iterations");
+        assert!(ev.iters.len() <= ev.k.max(1));
+        for w in ev.iters.windows(2) {
+            assert!(w[1].iter > w[0].iter, "iteration order");
+        }
+        let line = ev.render_jsonl();
+        assert_trace_line_shape(&line);
+    }
+    // drained means drained
+    assert!(coord.trace_ring().drain().is_empty());
+    coord.shutdown();
+}
+
+// ----------------------------------------------------- /trace endpoint
+
+#[test]
+fn trace_endpoint_streams_jsonl_under_concurrent_load() {
+    let lb = start_server(Config {
+        workers: 2,
+        max_batch: 4,
+        stamps: true,
+        trace_every: 1,
+        trace_ring: 512,
+        ..Default::default()
+    });
+    let addr = lb.addr;
+    let done = Arc::new(AtomicBool::new(false));
+    // concurrent scraper: drains /trace while the loadgen hammers the
+    // same port with solve traffic
+    let scraper = {
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let mut lines = 0usize;
+            while !done.load(Ordering::SeqCst) {
+                let (status, body) = http_get(addr, "/trace");
+                assert!(status.contains("200"), "{status}");
+                for line in body.lines().filter(|l| !l.is_empty()) {
+                    assert_trace_line_shape(line);
+                    lines += 1;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            lines
+        })
+    };
+    let report = run_loadgen(
+        addr,
+        &LoadgenOpts {
+            requests: 90,
+            clients: 3,
+            window: 8,
+            grad_share: 0.2,
+            stages: true,
+            ..Default::default()
+        },
+    )
+    .expect("loadgen");
+    done.store(true, Ordering::SeqCst);
+    let mid_run_lines = scraper.join().expect("scraper");
+    assert_eq!(report.ok + report.grads, 90, "all requests served");
+    // every served reply echoed its stage breakdown...
+    assert_eq!(report.stage_count, 90);
+    // ...and the reconciliation holds in aggregate: the client-side
+    // round trips can only exceed the server-side stage sums (1 ms
+    // slack per reply for stamp quantization)
+    let server_us: f64 = report.stage_sum_us.iter().sum();
+    assert!(
+        report.stage_rtt_sum_us + 1_000.0 * report.stage_count as f64
+            >= server_us,
+        "client rtt sum {:.0}µs < server stage sum {server_us:.0}µs",
+        report.stage_rtt_sum_us
+    );
+    let table = report.render_stages();
+    assert!(table.contains("stage attribution"), "{table}");
+    assert!(table.contains("Σ server"), "{table}");
+    // the final scrape picks up whatever the mid-run scrapes missed
+    let (_, body) = http_get(addr, "/trace");
+    let final_lines =
+        body.lines().filter(|l| !l.is_empty()).count();
+    for line in body.lines().filter(|l| !l.is_empty()) {
+        assert_trace_line_shape(line);
+    }
+    assert!(
+        mid_run_lines + final_lines > 0,
+        "no trace events surfaced over /trace"
+    );
+    lb.finish();
+}
+
+// ----------------------------------------------------------- off = off
+
+#[test]
+fn disabled_tracing_is_inert_end_to_end() {
+    // default config: stamps off, sampler off, ring empty
+    let lb = start_server(Config {
+        workers: 2,
+        max_batch: 4,
+        ..Default::default()
+    });
+    let mut cl = PipelinedClient::connect(lb.addr, 4).expect("connect");
+    cl.set_timeout(Some(Duration::from_secs(60))).unwrap();
+    // the client may *ask* for the echo; a stamps-off server answers
+    // without the block, exactly like a pre-echo server would
+    cl.set_echo_stages(true);
+    let qp = dense_qp(16, 8, 4, 1);
+    let mut replies = Vec::new();
+    for _ in 0..8 {
+        replies.extend(
+            cl.submit(
+                "qp16",
+                qp.q.clone(),
+                qp.b.clone(),
+                qp.h.clone(),
+                None,
+                1e-3,
+            )
+            .expect("submit"),
+        );
+    }
+    replies.extend(cl.drain().expect("drain"));
+    assert_eq!(replies.len(), 8);
+    for t in &replies {
+        assert!(
+            matches!(t.reply, Reply::Ok(_)),
+            "expected Ok, got {:?}",
+            t.reply
+        );
+        assert!(t.reply.stages().is_none(), "echo on a stamps-off server");
+        let stamps = t.reply.stamps().expect("served reply");
+        assert!(!stamps.is_on(), "stamps moved while disabled");
+        assert_eq!(stamps.total_us(), 0);
+    }
+    // the stage histograms never moved...
+    let (_, metrics) = http_get(lb.addr, "/metrics");
+    assert!(metrics.contains("altdiff_stage_latency_us"));
+    for class in ["high", "normal", "low"] {
+        for stage in ["decode", "queue", "exec", "write"] {
+            let needle = format!(
+                "altdiff_stage_latency_us_count{{class=\"{class}\",\
+                 stage=\"{stage}\"}} 0"
+            );
+            assert!(metrics.contains(&needle), "missing `{needle}`");
+        }
+    }
+    // ...and the trace ring has nothing to say
+    let (status, body) = http_get(lb.addr, "/trace");
+    assert!(status.contains("200"), "{status}");
+    assert!(body.is_empty(), "events on a tracing-off server: {body}");
+    let coord = lb.finish();
+    assert_eq!(coord.trace_ring().len(), 0);
+    assert_eq!(coord.trace_ring().dropped(), 0);
+    // the spans type stayed fixed-width (wire contract: 6 × u32)
+    assert_eq!(N_SPANS, 6);
+}

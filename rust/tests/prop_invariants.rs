@@ -181,6 +181,9 @@ fn prop_batcher_conservation() {
                 priority: Priority::Normal,
                 deadline_us: None,
                 submitted: Instant::now(),
+                stamps: altdiff::obs::StageStamps::off(),
+                sampled: false,
+                echo_stages: false,
             };
             if let Some(batch) = b.push(EngineFamily::AltDiff, k, req) {
                 assert!(batch.requests.len() <= max_batch);

@@ -12,6 +12,7 @@ use altdiff::net::frame::{
     header, parse_header, FrameReader, HEADER_LEN, MAX_PAYLOAD,
 };
 use altdiff::net::proto::{self, op};
+use altdiff::obs::{StageStamps, N_SPANS};
 use altdiff::util::Pcg64;
 use std::time::Instant;
 
@@ -41,7 +42,20 @@ fn rand_request(rng: &mut Pcg64, grad: bool) -> Request {
         deadline_us: (rng.below(2) == 1)
             .then(|| 1 + rng.next_u64() as u32 % 1_000_000),
         submitted: Instant::now(),
+        stamps: StageStamps::off(),
+        sampled: false,
+        echo_stages: rng.below(2) == 1,
     }
+}
+
+fn rand_stages(rng: &mut Pcg64) -> Option<[u32; N_SPANS]> {
+    (rng.below(2) == 1).then(|| {
+        let mut s = [0u32; N_SPANS];
+        for v in s.iter_mut() {
+            *v = rng.next_u64() as u32 % 1_000_000;
+        }
+        s
+    })
 }
 
 fn strip(frame: &[u8]) -> (u8, Vec<u8>) {
@@ -69,6 +83,7 @@ fn request_encode_decode_is_identity() {
         assert_eq!(back.session, req.session);
         assert_eq!(back.priority, req.priority);
         assert_eq!(back.deadline_us, req.deadline_us);
+        assert_eq!(back.echo_stages, req.echo_stages);
     }
 }
 
@@ -87,6 +102,8 @@ fn reply_encode_decode_is_identity_all_variants() {
                 batch_size: 1 + rng.below(32),
                 latency: rng.uniform(),
                 backend: backends[rng.below(3)],
+                stamps: StageStamps::off(),
+                stages: rand_stages(&mut rng),
             }),
             1 => Reply::Grad(GradientResponse {
                 id: rng.next_u64(),
@@ -99,6 +116,8 @@ fn reply_encode_decode_is_identity_all_variants() {
                 batch_size: 1 + rng.below(32),
                 latency: rng.uniform(),
                 backend: backends[rng.below(2)],
+                stamps: StageStamps::off(),
+                stages: rand_stages(&mut rng),
             }),
             _ => Reply::Err(Failure::new(
                 rng.next_u64(),
@@ -119,6 +138,7 @@ fn reply_encode_decode_is_identity_all_variants() {
                 assert_eq!(a.batch_size, b.batch_size);
                 assert_eq!(a.latency, b.latency);
                 assert_eq!(a.backend, b.backend);
+                assert_eq!(a.stages, b.stages);
             }
             (Reply::Grad(a), Reply::Grad(b)) => {
                 assert_eq!(a.id, b.id);
@@ -127,6 +147,7 @@ fn reply_encode_decode_is_identity_all_variants() {
                 assert_eq!(a.grad_b, b.grad_b);
                 assert_eq!(a.grad_h, b.grad_h);
                 assert_eq!(a.backend, b.backend);
+                assert_eq!(a.stages, b.stages);
             }
             (Reply::Err(a), Reply::Err(b)) => {
                 assert_eq!(a.id, b.id);
@@ -202,6 +223,9 @@ fn wrong_version_and_magic_are_rejected() {
         priority: Priority::Normal,
         deadline_us: None,
         submitted: Instant::now(),
+        stamps: StageStamps::off(),
+        sampled: false,
+        echo_stages: false,
     });
     let mut bad_ver = good.clone();
     bad_ver[1] = 2; // future version

@@ -609,6 +609,9 @@ fn prio_request(
         priority,
         deadline_us,
         submitted: Instant::now(),
+        stamps: altdiff::obs::StageStamps::off(),
+        sampled: false,
+        echo_stages: false,
     }
 }
 
