@@ -133,6 +133,7 @@ impl BatchedAltDiff {
             .map(|v| v.len())
             .or_else(|| bs.map(|v| v.len()))
             .or_else(|| hs.map(|v| v.len()))
+            .or_else(|| warms.map(|v| v.len()))
             .unwrap_or(1);
         assert!(bsz > 0, "empty batch");
 

@@ -93,6 +93,15 @@ pub struct Metrics {
     pub router_altdiff_picks: AtomicU64,
     /// solver iterations run by ADMM launches (summed over elements)
     pub admm_iters: AtomicU64,
+    /// native launches executed by the Frank–Wolfe engine family
+    /// (forward + adjoint; disjoint from the other native counters)
+    pub fw_execs: AtomicU64,
+    /// requests served by FW launches
+    pub fw_elems: AtomicU64,
+    /// routed batches the cross-method router sent to the FW family
+    pub router_fw_picks: AtomicU64,
+    /// solver iterations run by FW launches (summed over elements)
+    pub fw_iters: AtomicU64,
     /// solver iterations run by native Alt-Diff launches (summed over
     /// elements; PJRT executions are fixed-k and not counted here)
     pub altdiff_iters: AtomicU64,
@@ -413,6 +422,30 @@ impl Metrics {
             "router_altdiff_picks_total",
             "routed batches kept on the Alt-Diff family",
             self.router_altdiff_picks.load(ld),
+        );
+        c(
+            &mut out,
+            "fw_execs_total",
+            "native launches executed by the Frank-Wolfe engine family",
+            self.fw_execs.load(ld),
+        );
+        c(
+            &mut out,
+            "fw_elems_total",
+            "requests served by Frank-Wolfe launches",
+            self.fw_elems.load(ld),
+        );
+        c(
+            &mut out,
+            "router_fw_picks_total",
+            "routed batches dispatched to the Frank-Wolfe family",
+            self.router_fw_picks.load(ld),
+        );
+        c(
+            &mut out,
+            "fw_iters_total",
+            "solver iterations run by Frank-Wolfe launches",
+            self.fw_iters.load(ld),
         );
         c(
             &mut out,
@@ -752,7 +785,7 @@ impl Metrics {
             .sum();
         format!(
             "req={} resp={} fail={} shed={} ddl={} batches={} pjrt={} \
-             native={} sparse={} admm={} routed={}:{} adjoint={} \
+             native={} sparse={} admm={} fw={} routed={}:{}:{} adjoint={} \
              native_occ={:.1} pad={} bumps={} warm={}/{} saved={} \
              shards={} steals={} pflush={} mean_lat={:.0}us p90<={}us",
             self.requests.load(Ordering::Relaxed),
@@ -765,8 +798,10 @@ impl Metrics {
             self.native_execs.load(Ordering::Relaxed),
             self.native_sparse_execs.load(Ordering::Relaxed),
             self.admm_execs.load(Ordering::Relaxed),
+            self.fw_execs.load(Ordering::Relaxed),
             self.router_altdiff_picks.load(Ordering::Relaxed),
             self.router_admm_picks.load(Ordering::Relaxed),
+            self.router_fw_picks.load(Ordering::Relaxed),
             self.adjoint_execs.load(Ordering::Relaxed),
             self.native_batch_occupancy(),
             self.padded_slots.load(Ordering::Relaxed),

@@ -43,6 +43,7 @@ use crate::batch::{
     BatchSolution, BatchVjp, BatchedAltDiff, BatchedSparseAltDiff,
 };
 use crate::error::{AltDiffError, Result};
+use crate::fw::{BatchedFw, FwQp};
 use crate::obs::{
     IterObserver, Stage, StageStamps, TraceCollector, TraceEvent,
     TraceRing, TraceSampler,
@@ -51,7 +52,7 @@ use crate::prob::{Qp, SparseQp};
 use crate::runtime::Engine;
 use crate::warm::{
     fingerprint, AdjointSeed, AdmmSeed, EngineFamily, EngineSeed,
-    WarmStart, WarmStartCache,
+    FwSeed, WarmStart, WarmStartCache,
 };
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -96,15 +97,35 @@ pub enum LayerEngine {
         /// batched engine sharing the solver's factorization caches
         batched: BatchedAdmm,
     },
+    /// Vertex-enumerable QP layer served exclusively by the
+    /// projection-free Frank–Wolfe family (registered via
+    /// [`CoordinatorBuilder::register_fw`]): no compiled family — every
+    /// batch is one [`BatchedFw`] launch.
+    Fw {
+        /// single-problem engine (calibration + residual reporting)
+        solver: FwQp,
+        /// batched engine sharing the solver's registration
+        batched: BatchedFw,
+    },
 }
 
-/// The ADMM engine pair a routed dual-family layer keeps *next to* its
+/// The ADMM engine pair a routed multi-family layer keeps *next to* its
 /// Alt-Diff engines (see [`CoordinatorBuilder::register_routed`]).
 pub struct AdmmEngines {
     /// single-problem engine (probes + residual reporting)
     pub solver: AdmmQp,
     /// batched engine sharing the solver's factorization caches
     pub batched: BatchedAdmm,
+}
+
+/// The Frank–Wolfe engine pair a routed multi-family layer keeps next
+/// to its Alt-Diff engines — present only when the layer's feasible set
+/// is FW-servable ([`crate::fw::FeasibleSet::detect`]).
+pub struct FwEngines {
+    /// single-problem engine (probes + residual reporting)
+    pub solver: FwQp,
+    /// batched engine sharing the solver's registration
+    pub batched: BatchedFw,
 }
 
 /// A layer registered with the server (immutable after startup, shared
@@ -125,7 +146,10 @@ pub struct RegisteredLayer {
     /// The second engine family, present on routed layers (the
     /// cross-method router dispatches each batch to `engine` or here).
     pub admm: Option<AdmmEngines>,
-    /// Cross-method routing table, present when BOTH families were
+    /// The third engine family, present on routed layers whose feasible
+    /// set is FW-servable (box/simplex/ℓ1 ball).
+    pub fw: Option<FwEngines>,
+    /// Cross-method routing table, present when the families were
     /// probed at registration ([`CoordinatorBuilder::register_routed`]);
     /// absent layers route per [`Self::family`] through `table`.
     pub router: Option<EngineRouter>,
@@ -138,6 +162,7 @@ impl RegisteredLayer {
     pub fn family(&self) -> EngineFamily {
         match self.engine {
             LayerEngine::Admm { .. } => EngineFamily::Admm,
+            LayerEngine::Fw { .. } => EngineFamily::Fw,
             _ => EngineFamily::AltDiff,
         }
     }
@@ -150,6 +175,15 @@ impl RegisteredLayer {
                 Some((solver, batched))
             }
             _ => self.admm.as_ref().map(|e| (&e.solver, &e.batched)),
+        }
+    }
+
+    /// The Frank–Wolfe engine pair, wherever it lives (primary engine
+    /// for [`LayerEngine::Fw`] layers, the sidecar for routed layers).
+    pub fn fw_engines(&self) -> Option<(&FwQp, &BatchedFw)> {
+        match &self.engine {
+            LayerEngine::Fw { solver, batched } => Some((solver, batched)),
+            _ => self.fw.as_ref().map(|e| (&e.solver, &e.batched)),
         }
     }
 }
@@ -582,6 +616,7 @@ impl CoordinatorBuilder {
                 batches,
             },
             admm: None,
+            fw: None,
             router: None,
             table: Mutex::new(table),
         };
@@ -622,6 +657,7 @@ impl CoordinatorBuilder {
             rho,
             engine: LayerEngine::Sparse { solver, batched },
             admm: None,
+            fw: None,
             router: None,
             table: Mutex::new(table),
         };
@@ -664,6 +700,7 @@ impl CoordinatorBuilder {
             rho: solver.rho,
             engine: LayerEngine::Admm { solver, batched },
             admm: None,
+            fw: None,
             router: None,
             table: Mutex::new(table),
         };
@@ -671,13 +708,58 @@ impl CoordinatorBuilder {
         Ok(self)
     }
 
-    /// Register a dense QP layer behind the cross-method router: BOTH
-    /// engine families are built (Alt-Diff exactly as [`Self::register`],
-    /// ADMM with registration-time ρ balancing), both probe the
-    /// registered θ with fixed-k solves at every ladder rung, and the
-    /// per-tolerance winner table ([`EngineRouter`]) decides which
-    /// family serves each subsequent batch. The compiled PJRT family
-    /// remains available for Alt-Diff-routed batches only.
+    /// Register a dense QP layer served exclusively by the Frank–Wolfe
+    /// engine family: the constraint block must encode one of the
+    /// servable LMO structures (box / simplex / ℓ1 ball — see
+    /// [`crate::fw::FeasibleSet`]), the truncation table is calibrated
+    /// from the FW convergence trace, and every dispatched batch
+    /// becomes one [`BatchedFw`] launch (backend `"native-fw"`).
+    pub fn register_fw(
+        mut self,
+        name: &str,
+        qp: Qp,
+        rho: f64,
+    ) -> Result<Self> {
+        let n = qp.n();
+        let m = qp.m_ineq();
+        let p = qp.p_eq();
+        let solver = FwQp::new(qp, rho)?;
+        let sol = solver.solve(&Options {
+            tol: 1e-9,
+            max_iter: self.calib_iters(),
+            backward: BackwardMode::None,
+            trace: true,
+            ..Default::default()
+        });
+        let trace: Vec<f64> =
+            sol.trace.iter().map(|t| t.step_rel).collect();
+        let table = self.calibrate(&trace);
+        let batched = BatchedFw::from_single(&solver);
+        let layer = RegisteredLayer {
+            name: name.to_string(),
+            n,
+            m,
+            p,
+            rho,
+            engine: LayerEngine::Fw { solver, batched },
+            admm: None,
+            fw: None,
+            router: None,
+            table: Mutex::new(table),
+        };
+        self.layers.insert(name.to_string(), Arc::new(layer));
+        Ok(self)
+    }
+
+    /// Register a dense QP layer behind the cross-method router: every
+    /// servable engine family is built (Alt-Diff exactly as
+    /// [`Self::register`], ADMM with registration-time ρ balancing, and
+    /// Frank–Wolfe whenever the constraint block matches a servable LMO
+    /// structure), each probes the registered θ with fixed-k solves at
+    /// every ladder rung, and the per-tolerance winner table
+    /// ([`EngineRouter`]) decides which family serves each subsequent
+    /// batch. The compiled PJRT family remains available for
+    /// Alt-Diff-routed batches only.
     pub fn register_routed(
         self,
         name: &str,
@@ -685,6 +767,7 @@ impl CoordinatorBuilder {
         rho: f64,
     ) -> Result<Self> {
         let admm_qp = qp.clone();
+        let fw_qp = qp.clone();
         let mut this = self.register(name, qp, rho)?;
         let layer = this.layers.remove(name).expect("just registered");
         let layer =
@@ -701,9 +784,14 @@ impl CoordinatorBuilder {
         let dmax = diag.iter().cloned().fold(f64::MIN, f64::max);
         let dmin = diag.iter().cloned().fold(f64::MAX, f64::min);
         let cond = (dmax / dmin.max(f64::MIN_POSITIVE)).powi(2);
+        // FW is only probed when the constraint block encodes a
+        // servable LMO structure; otherwise the router sees two
+        // families, exactly as before FW existed.
+        let fw_solver = FwQp::new(fw_qp, rho).ok();
         // residual-anchored rung probes on the registered θ, per family
         let mut alt_res = Vec::with_capacity(this.ladder.len());
         let mut admm_res = Vec::with_capacity(this.ladder.len());
+        let mut fw_res = Vec::with_capacity(this.ladder.len());
         for &kk in &this.ladder {
             let popts = Options {
                 tol: 0.0,
@@ -719,21 +807,39 @@ impl CoordinatorBuilder {
             admm_res.push(
                 admm_solver.qp.kkt_residual(&sm.x, &sm.lam, &sm.nu),
             );
+            if let Some(fs) = &fw_solver {
+                let sf = fs.solve(&popts);
+                fw_res
+                    .push(fs.qp.kkt_residual(&sf.x, &sf.lam, &sf.nu));
+            }
         }
-        let router = EngineRouter::from_probes(
+        // probe order is the tie-break order: Alt-Diff keeps ties (the
+        // paper's method), FW beats ADMM on equal residuals (no
+        // projection, no factorization per iteration).
+        let mut probes: Vec<(EngineFamily, &[f64])> =
+            vec![(EngineFamily::AltDiff, alt_res.as_slice())];
+        if fw_solver.is_some() {
+            probes.push((EngineFamily::Fw, fw_res.as_slice()));
+        }
+        probes.push((EngineFamily::Admm, admm_res.as_slice()));
+        let router = EngineRouter::from_family_probes(
             &this.ladder,
-            &alt_res,
-            &admm_res,
+            &probes,
             &this.config.calib_tols,
             cond,
             (layer.n, layer.m, layer.p),
         );
         let admm_batched = BatchedAdmm::from_single(&admm_solver);
+        let fw = fw_solver.map(|solver| {
+            let batched = BatchedFw::from_single(&solver);
+            FwEngines { solver, batched }
+        });
         let layer = RegisteredLayer {
             admm: Some(AdmmEngines {
                 solver: admm_solver,
                 batched: admm_batched,
             }),
+            fw,
             router: Some(router),
             ..layer
         };
@@ -969,6 +1075,9 @@ fn route_one(
             }
             EngineFamily::AltDiff => {
                 metrics.router_altdiff_picks.fetch_add(1, ord)
+            }
+            EngineFamily::Fw => {
+                metrics.router_fw_picks.fetch_add(1, ord)
             }
         };
     }
@@ -1379,6 +1488,9 @@ fn layer_feasibility(
         LayerEngine::Admm { solver, .. } => {
             solver.qp.feasibility_with(x, b, h).0
         }
+        LayerEngine::Fw { solver, .. } => {
+            solver.qp.feasibility_with(x, b, h).0
+        }
     }
 }
 
@@ -1557,6 +1669,23 @@ fn execute_batch(
             ),
             "native-admm",
         )
+    } else if batch.family == EngineFamily::Fw {
+        let (_, batched) = layer
+            .fw_engines()
+            .expect("FW-routed batch on a layer with FW engines");
+        metrics.fw_execs.fetch_add(1, ord);
+        metrics.fw_elems.fetch_add(reqs.len() as u64, ord);
+        (
+            batched.solve_batch_observed(
+                Some(&qs),
+                Some(&bs),
+                Some(&hs),
+                warms,
+                &opts,
+                collector.as_mut().map(|c| c as &mut dyn IterObserver),
+            ),
+            "native-fw",
+        )
     } else {
         match &layer.engine {
             LayerEngine::Dense { batched, .. } => (
@@ -1607,11 +1736,16 @@ fn execute_batch(
             LayerEngine::Admm { .. } => unreachable!(
                 "Alt-Diff-routed batch on an ADMM-only layer"
             ),
+            LayerEngine::Fw { .. } => unreachable!(
+                "Alt-Diff-routed batch on an FW-only layer"
+            ),
         }
     };
     let iters_total: u64 = sol.iters.iter().map(|&i| i as u64).sum();
     if batch.family == EngineFamily::Admm {
         metrics.admm_iters.fetch_add(iters_total, ord);
+    } else if batch.family == EngineFamily::Fw {
+        metrics.fw_iters.fetch_add(iters_total, ord);
     } else {
         metrics.altdiff_iters.fetch_add(iters_total, ord);
     }
@@ -1773,6 +1907,35 @@ fn execute_grad_batch(
         let states =
             states.into_iter().map(EngineSeed::Admm).collect();
         (forward, vjp, states, "native-admm")
+    } else if batch.family == EngineFamily::Fw {
+        let (_, batched) = layer
+            .fw_engines()
+            .expect("FW-routed batch on a layer with FW engines");
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        metrics.fw_execs.fetch_add(1, ord);
+        metrics.fw_elems.fetch_add(reqs.len() as u64, ord);
+        let fw_seeds: Option<Vec<Option<FwSeed>>> =
+            warm_ctx.as_ref().map(|(_, _, s)| {
+                s.iter()
+                    .map(|o| o.clone().and_then(EngineSeed::into_fw))
+                    .collect()
+            });
+        let forward = batched.solve_batch_observed(
+            Some(&qs),
+            Some(&bs),
+            Some(&hs),
+            warms,
+            &fopts,
+            collector.as_mut().map(|c| c as &mut dyn IterObserver),
+        );
+        let (vjp, states) = batched.batch_vjp_from(
+            &forward.slack_refs(),
+            &vs,
+            fw_seeds.as_deref(),
+            &bopts,
+        );
+        let states = states.into_iter().map(EngineSeed::Fw).collect();
+        (forward, vjp, states, "native-fw")
     } else {
         let alt_seeds: Option<Vec<Option<AdjointSeed>>> =
             warm_ctx.as_ref().map(|(_, _, s)| {
@@ -1836,6 +1999,9 @@ fn execute_grad_batch(
             LayerEngine::Admm { .. } => unreachable!(
                 "Alt-Diff-routed batch on an ADMM-only layer"
             ),
+            LayerEngine::Fw { .. } => unreachable!(
+                "Alt-Diff-routed batch on an FW-only layer"
+            ),
         }
     };
     let iters_total: u64 = forward
@@ -1847,6 +2013,10 @@ fn execute_grad_batch(
     if batch.family == EngineFamily::Admm {
         metrics
             .admm_iters
+            .fetch_add(iters_total, std::sync::atomic::Ordering::Relaxed);
+    } else if batch.family == EngineFamily::Fw {
+        metrics
+            .fw_iters
             .fetch_add(iters_total, std::sync::atomic::Ordering::Relaxed);
     } else {
         metrics

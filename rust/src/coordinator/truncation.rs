@@ -157,7 +157,7 @@ impl TruncationTable {
 }
 
 /// Per-layer cross-family routing table, calibrated at registration
-/// from fixed-k probe solves of BOTH engine families.
+/// from fixed-k probe solves of every servable engine family.
 ///
 /// For each rung k of the artifact ladder, each family ran the
 /// registered θ for exactly k iterations and the resulting KKT residual
@@ -214,9 +214,42 @@ impl EngineRouter {
         cond: f64,
         dims: (usize, usize, usize),
     ) -> Self {
+        Self::from_family_probes(
+            ladder,
+            &[
+                (EngineFamily::AltDiff, alt_residuals),
+                (EngineFamily::Admm, admm_residuals),
+            ],
+            tols,
+            cond,
+            dims,
+        )
+    }
+
+    /// The general N-family construction behind [`Self::from_probes`]:
+    /// one `(family, per-rung KKT residuals)` pair per calibrated
+    /// engine, in *preference order* — per tolerance the family with
+    /// the strictly smallest certifying rung wins, and ties keep the
+    /// earliest probe in the list (the coordinator passes Alt-Diff
+    /// first, so ties still fall to the paper's engine). Families whose
+    /// probe could not run (e.g. FW on a non-vertex-enumerable set)
+    /// are simply absent from the list.
+    pub fn from_family_probes(
+        ladder: &[usize],
+        probes: &[(EngineFamily, &[f64])],
+        tols: &[f64],
+        cond: f64,
+        dims: (usize, usize, usize),
+    ) -> Self {
         assert!(!ladder.is_empty(), "empty artifact ladder");
-        assert_eq!(ladder.len(), alt_residuals.len(), "probe arity");
-        assert_eq!(ladder.len(), admm_residuals.len(), "probe arity");
+        assert!(!probes.is_empty(), "no engine probes");
+        for (fam, residuals) in probes {
+            assert_eq!(
+                ladder.len(),
+                residuals.len(),
+                "probe arity ({fam:?})"
+            );
+        }
         let mut order: Vec<usize> = (0..ladder.len()).collect();
         order.sort_unstable_by_key(|&i| ladder[i]);
         let sorted: Vec<usize> = order.iter().map(|&i| ladder[i]).collect();
@@ -229,13 +262,13 @@ impl EngineRouter {
         };
         let mut entries = BTreeMap::new();
         for &tol in tols {
-            let ka = cost(alt_residuals, tol);
-            let km = cost(admm_residuals, tol);
-            let pick = if km < ka {
-                (EngineFamily::Admm, km)
-            } else {
-                (EngineFamily::AltDiff, ka)
-            };
+            let mut pick = (probes[0].0, cost(probes[0].1, tol));
+            for &(fam, residuals) in &probes[1..] {
+                let k = cost(residuals, tol);
+                if k < pick.1 {
+                    pick = (fam, k);
+                }
+            }
             entries.insert(tol_key(tol), pick);
         }
         EngineRouter { ladder: sorted, entries, cond, dims }
@@ -436,6 +469,56 @@ mod tests {
         assert_eq!(r.ladder(), &[10, 20, 40]);
         assert_eq!(r.dims(), (6, 3, 1));
         assert!((r.cond() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn three_family_probes_pick_fw_on_strict_win() {
+        // FW certifies 1e-4 at rung 10; the factorizing families need
+        // 20 and 40 — FW takes the layer
+        let r = EngineRouter::from_family_probes(
+            &[10, 20, 40],
+            &[
+                (EngineFamily::AltDiff, &[1e-2, 1e-3, 1e-5][..]),
+                (EngineFamily::Fw, &[1e-5, 1e-8, 1e-10][..]),
+                (EngineFamily::Admm, &[1e-3, 1e-5, 1e-7][..]),
+            ],
+            &[1e-2, 1e-4],
+            3.0,
+            (8, 256, 0),
+        );
+        assert_eq!(r.route_checked(1e-2), Some((EngineFamily::Fw, 10)));
+        assert_eq!(r.route_checked(1e-4), Some((EngineFamily::Fw, 10)));
+        // a three-way tie keeps the earliest probe: Alt-Diff
+        let tie = EngineRouter::from_family_probes(
+            &[10],
+            &[
+                (EngineFamily::AltDiff, &[1e-6][..]),
+                (EngineFamily::Fw, &[1e-6][..]),
+                (EngineFamily::Admm, &[1e-6][..]),
+            ],
+            &[1e-4],
+            1.0,
+            (4, 8, 0),
+        );
+        assert_eq!(
+            tie.route_checked(1e-4),
+            Some((EngineFamily::AltDiff, 10))
+        );
+        // FW absent from the probe list (undetectable set) never wins
+        let no_fw = EngineRouter::from_family_probes(
+            &[10],
+            &[
+                (EngineFamily::AltDiff, &[1e-2][..]),
+                (EngineFamily::Admm, &[1e-6][..]),
+            ],
+            &[1e-4],
+            1.0,
+            (4, 8, 2),
+        );
+        assert_eq!(
+            no_fw.route_checked(1e-4),
+            Some((EngineFamily::Admm, 10))
+        );
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Batched Frank–Wolfe: B problems of one registered structure per
+//! launch — the family sibling of
+//! [`BatchedAltDiff`](crate::batch::BatchedAltDiff) and
+//! [`BatchedAdmm`](crate::admm::BatchedAdmm), same contracts.
+//!
+//! Honesty note on the execution model: FW has no shared factorization
+//! to amortize across a batch — the per-element state is an LMO vertex
+//! walk, not a panel against a cached K⁻¹ — so one launch advances all
+//! live elements in interleaved round-robin sweeps of the *identical*
+//! [`FwQp`] step (shared code, bit-identical per-element results). What
+//! the batch shape still buys is the serving contract: one call per
+//! coalesced batch, ragged truncation through the shared
+//! [`ActiveSet`] (converged elements deactivate and stop consuming
+//! budget mid-sweep), per-element warm/cold mixing, and true `(elem,
+//! iter)` indices into the observability plane.
+
+use super::qp::{FwQp, FwState, Geom};
+use crate::altdiff::Options;
+use crate::batch::{
+    ActiveSet, BatchSolution, BatchVjp, BatchVjpSolution,
+};
+use crate::error::Result;
+use crate::obs::IterObserver;
+use crate::prob::Qp;
+use crate::warm::{FwSeed, WarmStart};
+
+/// A registered Frank–Wolfe QP structure ready to solve B right-hand
+/// sides per launch.
+///
+/// ```
+/// use altdiff::altdiff::Options;
+/// use altdiff::fw::BatchedFw;
+/// use altdiff::prob::simplex_qp;
+///
+/// let engine = BatchedFw::new(simplex_qp(6, 1.0, 7), 1.0).unwrap();
+/// let q2: Vec<f64> = engine.qp.q.iter().map(|v| 0.5 * v).collect();
+/// let qs: Vec<&[f64]> = vec![&engine.qp.q, &q2];
+/// let sol = engine.solve_batch(Some(&qs), None, None, &Options::default());
+/// assert_eq!(sol.len(), 2);
+/// assert!(sol.xs.iter().flatten().all(|v| v.is_finite()));
+/// ```
+pub struct BatchedFw {
+    /// The registered problem (broadcast defaults for absent θ).
+    pub qp: Qp,
+    /// Interface parity with the factorizing families (never read).
+    pub rho: f64,
+    solver: FwQp,
+}
+
+impl BatchedFw {
+    /// Register from scratch (structural detection only, like
+    /// [`FwQp::new`]; there is no factorization to build).
+    pub fn new(qp: Qp, rho: f64) -> Result<BatchedFw> {
+        Ok(BatchedFw::from_single(&FwQp::new(qp, rho)?))
+    }
+
+    /// Share an already-registered layer — the cheap path for the
+    /// server, which keeps both shapes per layer.
+    pub fn from_single(solver: &FwQp) -> BatchedFw {
+        BatchedFw {
+            qp: solver.qp.clone(),
+            rho: solver.rho,
+            solver: solver.clone(),
+        }
+    }
+
+    /// Solve B problems sharing the registered structure; `None` slots
+    /// broadcast the registered θ. Same broadcast/arity contract as
+    /// [`BatchedAltDiff::solve_batch`](crate::batch::BatchedAltDiff::solve_batch).
+    pub fn solve_batch(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        opts: &Options,
+    ) -> BatchSolution {
+        self.solve_batch_from(qs, bs, hs, None, opts)
+    }
+
+    /// [`Self::solve_batch`] with per-element warm starts: a batch may
+    /// freely mix warm and cold members; warm state is expanded exactly
+    /// as in [`FwQp::solve_from`], and `warms = None` (or all-`None`)
+    /// is bit-identical to the cold [`Self::solve_batch`]. Warm
+    /// elements with forward-mode Jacobians require `tol = 0`
+    /// (asserted — see DESIGN.md §5).
+    pub fn solve_batch_from(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        warms: Option<&[Option<WarmStart>]>,
+        opts: &Options,
+    ) -> BatchSolution {
+        self.solve_batch_observed(qs, bs, hs, warms, opts, None)
+    }
+
+    /// [`Self::solve_batch_from`] with a per-iteration
+    /// [`IterObserver`] hook. FW reports (duality gap, iterate step)
+    /// per element — see the [module docs](crate::fw) — and only for
+    /// claimed elements; `observer = None` is the unsampled fast path,
+    /// identical solution either way.
+    pub fn solve_batch_observed(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        warms: Option<&[Option<WarmStart>]>,
+        opts: &Options,
+        mut observer: Option<&mut dyn IterObserver>,
+    ) -> BatchSolution {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        let bsz = qs
+            .map(|v| v.len())
+            .or_else(|| bs.map(|v| v.len()))
+            .or_else(|| hs.map(|v| v.len()))
+            .or_else(|| warms.map(|v| v.len()))
+            .unwrap_or(1);
+        assert!(bsz > 0, "empty batch");
+
+        let qe = |e: usize| qs.map_or(self.qp.q.as_slice(), |v| v[e]);
+        let be = |e: usize| bs.map_or(self.qp.b.as_slice(), |v| v[e]);
+        let he = |e: usize| hs.map_or(self.qp.h.as_slice(), |v| v[e]);
+
+        if let Some(ws_) = warms {
+            assert_eq!(ws_.len(), bsz, "warm-start arity");
+            if ws_.iter().any(|w| w.is_some()) {
+                assert!(
+                    opts.backward.forward_param().is_none()
+                        || opts.tol == 0.0,
+                    "warm starts with forward-mode Jacobians require \
+                     tol = 0 (fixed-k); use BackwardMode::None/Adjoint \
+                     for truncated warm solves"
+                );
+            }
+        }
+
+        let mut geoms: Vec<Geom> = Vec::with_capacity(bsz);
+        let mut states: Vec<FwState> = Vec::with_capacity(bsz);
+        for e in 0..bsz {
+            assert_eq!(qe(e).len(), n, "q dimension (element {e})");
+            assert_eq!(be(e).len(), p, "b dimension (element {e})");
+            assert_eq!(he(e).len(), m, "h dimension (element {e})");
+            let warm = warms.and_then(|w| w[e].as_ref());
+            if let Some(w) = warm {
+                assert_eq!(
+                    w.dims(),
+                    (n, p, m),
+                    "warm-start dimensions (element {e})"
+                );
+            }
+            let geom = self.solver.geom(be(e), he(e));
+            states.push(self.solver.init_state(&geom, qe(e), warm));
+            geoms.push(geom);
+        }
+
+        let mut act = ActiveSet::new(bsz);
+        let mut iters = vec![0usize; bsz];
+        let mut step_rel = vec![f64::INFINITY; bsz];
+        let mut live: Vec<usize> = Vec::with_capacity(bsz);
+        for k in 0..opts.max_iter {
+            if act.all_done() {
+                break;
+            }
+            live.clear();
+            live.extend(act.iter());
+            for &e in &live {
+                let info =
+                    self.solver.fw_step(&mut states[e], qe(e), &geoms[e]);
+                iters[e] = k + 1;
+                step_rel[e] = info.step_rel;
+                if let Some(obs) = observer.as_mut() {
+                    if obs.wants(e) {
+                        obs.on_iter(e, k, info.gap, info.dx_norm);
+                    }
+                }
+                if info.step_rel < opts.tol {
+                    act.deactivate(e);
+                }
+            }
+        }
+
+        let param = opts.backward.forward_param();
+        let mut xs = Vec::with_capacity(bsz);
+        let mut ss = Vec::with_capacity(bsz);
+        let mut lams = Vec::with_capacity(bsz);
+        let mut nus = Vec::with_capacity(bsz);
+        let mut jacobians = param.map(|_| Vec::with_capacity(bsz));
+        for (e, st) in states.into_iter().enumerate() {
+            let (s, lam, nu) =
+                self.solver.recover(&st.x, qe(e), he(e), &geoms[e]);
+            if let (Some(jl), Some(prm)) = (jacobians.as_mut(), param) {
+                jl.push(self.solver.forward_jacobian(&s, prm));
+            }
+            xs.push(st.x);
+            ss.push(s);
+            lams.push(lam);
+            nus.push(nu);
+        }
+        BatchSolution { xs, ss, lams, nus, jacobians, iters, step_rel }
+    }
+
+    /// Batched dimension-free adjoint: per-element ∂L/∂θ from each
+    /// element's ∂L/∂x, same gate convention as [`FwQp::vjp`].
+    pub fn batch_vjp(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        opts: &Options,
+    ) -> BatchVjp {
+        self.batch_vjp_from(slacks, vs, None, opts).0
+    }
+
+    /// [`Self::batch_vjp`] resuming per-element projected-CG states
+    /// from harvested [`FwSeed`]s (cold where `None`), returning the
+    /// final per-element states for the next caller — the family
+    /// sibling of
+    /// [`BatchedAltDiff::batch_vjp_from`](crate::batch::BatchedAltDiff::batch_vjp_from).
+    pub fn batch_vjp_from(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        warms: Option<&[Option<FwSeed>]>,
+        opts: &Options,
+    ) -> (BatchVjp, Vec<FwSeed>) {
+        let bsz = slacks.len();
+        assert_eq!(vs.len(), bsz, "v arity");
+        if let Some(w) = warms {
+            assert_eq!(w.len(), bsz, "adjoint-seed arity");
+        }
+        let mut grads_q = Vec::with_capacity(bsz);
+        let mut grads_b = Vec::with_capacity(bsz);
+        let mut grads_h = Vec::with_capacity(bsz);
+        let mut iters = Vec::with_capacity(bsz);
+        let mut step_rel = Vec::with_capacity(bsz);
+        let mut seeds = Vec::with_capacity(bsz);
+        for e in 0..bsz {
+            let warm = warms.and_then(|w| w[e].as_ref());
+            let (vjp, seed) =
+                self.solver.vjp_from(slacks[e], vs[e], warm, opts);
+            grads_q.push(vjp.grad_q);
+            grads_b.push(vjp.grad_b);
+            grads_h.push(vjp.grad_h);
+            iters.push(vjp.iters);
+            step_rel.push(vjp.step_rel);
+            seeds.push(seed);
+        }
+        (
+            BatchVjp { grads_q, grads_b, grads_h, iters, step_rel },
+            seeds,
+        )
+    }
+
+    /// Forward batch + reverse-mode backward in one call — the batched
+    /// training entry point.
+    pub fn solve_batch_vjp(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        vs: &[&[f64]],
+        opts: &Options,
+    ) -> BatchVjpSolution {
+        let fopts = Options {
+            backward: crate::altdiff::BackwardMode::None,
+            ..opts.clone()
+        };
+        let forward = self.solve_batch(qs, bs, hs, &fopts);
+        let slacks = forward.slack_refs();
+        let vjp = self.batch_vjp(&slacks, vs, opts);
+        BatchVjpSolution { forward, vjp }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::altdiff::{BackwardMode, Options, Param};
+    use crate::prob::{box_qp, l1_ball_qp, simplex_qp};
+
+    fn tight() -> Options {
+        Options {
+            tol: 1e-12,
+            max_iter: 200_000,
+            backward: BackwardMode::None,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn broadcast_matches_single_bitwise() {
+        let qp = simplex_qp(10, 1.0, 3);
+        let single = FwQp::new(qp.clone(), 1.0).unwrap();
+        let batched = BatchedFw::from_single(&single);
+        let q2: Vec<f64> =
+            qp.q.iter().map(|v| 1.3 * v + 0.1).collect();
+        let qs: Vec<&[f64]> = vec![&qp.q, &q2];
+        let sol = batched.solve_batch(Some(&qs), None, None, &tight());
+        for (e, qe) in qs.iter().enumerate() {
+            let se =
+                single.solve_with(Some(qe), None, None, &tight());
+            assert_eq!(sol.xs[e], se.x, "element {e} diverged");
+            assert_eq!(sol.iters[e], se.iters);
+        }
+    }
+
+    #[test]
+    fn ragged_truncation_freezes_converged_elements() {
+        let qp = box_qp(8, 9);
+        let batched = BatchedFw::new(qp.clone(), 1.0).unwrap();
+        // one near-trivial element (tiny q → lands on a vertex fast)
+        // and one hard element
+        let easy: Vec<f64> = qp.q.iter().map(|v| 1e-3 * v).collect();
+        let hard: Vec<f64> = qp.q.iter().map(|v| -2.0 * v).collect();
+        let qs: Vec<&[f64]> = vec![&easy, &hard];
+        let opts = Options { tol: 1e-10, ..tight() };
+        let sol = batched.solve_batch(Some(&qs), None, None, &opts);
+        assert!(sol.iters[0] <= sol.iters[1]);
+        assert!(sol.step_rel.iter().all(|&s| s < 1e-10));
+    }
+
+    #[test]
+    fn fixed_k_runs_lockstep() {
+        let qp = l1_ball_qp(5, 1.0, 4);
+        let single = FwQp::new(qp.clone(), 1.0).unwrap();
+        let batched = BatchedFw::from_single(&single);
+        let opts = Options {
+            tol: 0.0,
+            max_iter: 13,
+            backward: BackwardMode::None,
+            ..Default::default()
+        };
+        let qs: Vec<&[f64]> = vec![&qp.q, &qp.q];
+        let sol = batched.solve_batch(Some(&qs), None, None, &opts);
+        let se = single.solve(&opts);
+        assert!(sol.iters.iter().all(|&i| i == 13));
+        for e in 0..2 {
+            assert_eq!(sol.xs[e], se.x);
+        }
+    }
+
+    #[test]
+    fn mixed_warm_cold_isolation() {
+        let qp = simplex_qp(8, 1.0, 12);
+        let batched = BatchedFw::new(qp.clone(), 1.0).unwrap();
+        let cold = batched.solve_batch(None, None, None, &tight());
+        let ws = cold.warm_start(0);
+        let warms = vec![Some(ws), None];
+        let qs: Vec<&[f64]> = vec![&qp.q, &qp.q];
+        let mixed = batched
+            .solve_batch_from(Some(&qs), None, None, Some(&warms), &tight());
+        // warm element converges immediately; cold element is
+        // bit-identical to an all-cold solve
+        assert!(mixed.iters[0] <= 2);
+        assert_eq!(mixed.xs[1], cold.xs[0]);
+    }
+
+    #[test]
+    fn batch_vjp_matches_single_and_reseeds() {
+        let qp = box_qp(6, 21);
+        let single = FwQp::new(qp.clone(), 1.0).unwrap();
+        let batched = BatchedFw::from_single(&single);
+        let sol = batched.solve_batch(None, None, None, &tight());
+        let slacks = sol.slack_refs();
+        let v: Vec<f64> = (0..6).map(|i| 0.2 * i as f64 - 0.5).collect();
+        let vs: Vec<&[f64]> = vec![&v];
+        let (bv, seeds) =
+            batched.batch_vjp_from(&slacks, &vs, None, &tight());
+        let sv = single.vjp(&sol.ss[0], &v, &tight());
+        assert_eq!(bv.grads_q[0], sv.grad_q);
+        assert_eq!(bv.grads_h[0], sv.grad_h);
+        let warms = vec![Some(seeds[0].clone())];
+        let (re, _) =
+            batched.batch_vjp_from(&slacks, &vs, Some(&warms), &tight());
+        assert!(re.iters[0] <= 4, "seeded iters {}", re.iters[0]);
+    }
+
+    #[test]
+    fn batched_jacobians_match_single() {
+        let qp = simplex_qp(7, 1.0, 8);
+        let single = FwQp::new(qp.clone(), 1.0).unwrap();
+        let batched = BatchedFw::from_single(&single);
+        let opts = Options {
+            backward: BackwardMode::Forward(Param::B),
+            ..tight()
+        };
+        let sol = batched.solve_batch(None, None, None, &opts);
+        let se = single.solve(&opts);
+        let jb = &sol.jacobians.as_ref().unwrap()[0];
+        let js = se.jacobian.as_ref().unwrap();
+        for i in 0..7 {
+            assert_eq!(jb[(i, 0)], js[(i, 0)]);
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Third engine family: projection-free Frank–Wolfe (conditional
+//! gradient) for QP layers over vertex-friendly feasible sets.
+//!
+//! The paper's framework (§3) only needs an inner solver that exposes
+//! truncated iterates; Alt-Diff's alternating updates and the ADMM
+//! family both pay for a factorization of P + ρCᵀC and a projection per
+//! iteration. On polytopes whose *vertices* are cheap to enumerate —
+//! boxes, scaled simplices, ℓ1 balls (the DFWLayer regime from
+//! PAPERS.md) — a linear minimization oracle (LMO) replaces both: each
+//! iteration is one gradient, one LMO call, and an exact line search.
+//! No Cholesky, no projection, iterates feasible by construction.
+//!
+//! | set | constraint | LMO(g) | tie rule |
+//! |-----|------------|--------|----------|
+//! | box | l ≤ x ≤ u (G = [I; −I], h = [u; −l]) | vᵢ = lᵢ if gᵢ > 0 else uᵢ | gᵢ = 0 → uᵢ |
+//! | simplex | 1ᵀx = r, x ≥ 0 | r·eᵢ, i = argminᵢ gᵢ | smallest index |
+//! | ℓ1 ball | ‖x‖₁ ≤ r (all 2ⁿ facets σᵀx ≤ r) | −r·sign(gⱼ)·eⱼ, j = argmaxⱼ \|gⱼ\| | smallest index, sign(0) → +1 → +r·eⱼ |
+//!
+//! - [`FwQp`]: single-problem engine. Forward = **away-step** FW
+//!   (linear convergence on polytopes for strongly convex objectives —
+//!   plain FW's O(1/k) could never hit the 1e-8 parity bar), truncated
+//!   by the same ‖x_{k+1}−x_k‖/max(‖x_k‖,1) < tol criterion as every
+//!   other family, so Thm 4.3's fixed-k semantics apply unchanged.
+//!   Backward = dimension-free adjoint via a projected-CG solve of the
+//!   slack-gated KKT system (`vjp`/`vjp_from`, O(n)
+//!   [`FwSeed`](crate::warm::FwSeed) resume state).
+//! - [`BatchedFw`]: the batch-major sibling. There is no cross-element
+//!   factorization to amortize (the LMO walk is per-element state), so
+//!   one launch advances all live elements in interleaved round-robin
+//!   sweeps under a shared [`ActiveSet`](crate::batch::mask::ActiveSet)
+//!   — converged elements deactivate and stop consuming budget (ragged
+//!   truncation), and each element reproduces the single-engine
+//!   iteration exactly (shared step code, bit-identical results).
+//!
+//! **Observer convention.** FW iterates are feasible by construction,
+//! so the constraint-violation norm the other families report in the
+//! `primal` slot of [`IterObserver`](crate::obs::IterObserver) is
+//! identically ~0 and carries no information. The FW engines instead
+//! report the **duality gap** g_k = ∇f(x_k)ᵀ(x_k − v_k) — the
+//! conditional-gradient convergence certificate (f(x_k) − f* ≤ g_k) —
+//! in the primal slot, and the iterate step ‖x_{k+1}−x_k‖ in the dual
+//! slot. Sampled `/trace` series from FW solves therefore show the gap
+//! decaying, which is exactly the evidence an operator needs to pick
+//! the truncation rung k.
+
+pub mod batch;
+pub mod qp;
+
+pub use batch::BatchedFw;
+pub use qp::FwQp;
+
+use crate::prob::Qp;
+
+/// The vertex-enumerable feasible sets the FW engines serve, detected
+/// structurally from a standard `(A, b, G, h)` QP description so the
+/// same problem object feeds every engine family (parity oracles,
+/// uniform registration).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FeasibleSet {
+    /// l ≤ x ≤ u, encoded G = [I; −I], h = [u; −l], no (or vacuous)
+    /// equalities.
+    Box {
+        /// Lower bounds (length n), from −h[n..2n].
+        l: Vec<f64>,
+        /// Upper bounds (length n), from h[0..n].
+        u: Vec<f64>,
+    },
+    /// 1ᵀx = r, x ≥ 0, encoded A = 1ᵀ, b = [r], G = −I, h = 0.
+    Simplex {
+        /// Simplex scale r > 0, from b[0].
+        r: f64,
+    },
+    /// ‖x‖₁ ≤ r, encoded as all 2ⁿ facets σᵀx ≤ r, σ ∈ {±1}ⁿ, no (or
+    /// vacuous) equalities.
+    L1Ball {
+        /// Ball radius r > 0, from h[0].
+        r: f64,
+    },
+}
+
+/// Rows-of-A-and-b-are-all-zero check: the vacuous-equality precedent
+/// set by [`crate::prob::energy_qp`] (a 0ᵀx = 0 row added purely so the
+/// uniform (A, b) interface holds).
+fn vacuous_eq(qp: &Qp) -> bool {
+    let p = qp.p_eq();
+    if p == 0 {
+        return true;
+    }
+    qp.b.iter().all(|&v| v == 0.0)
+        && (0..p).all(|i| qp.a.row(i).iter().all(|&v| v == 0.0))
+}
+
+impl FeasibleSet {
+    /// Structurally detect one of the supported vertex-enumerable sets
+    /// from a standard QP description; `None` means the problem is not
+    /// FW-servable (the router then simply never probes this family).
+    ///
+    /// Detection is exact-match on the canonical encodings produced by
+    /// [`crate::prob::box_qp`], [`crate::prob::simplex_qp`], and
+    /// [`crate::prob::l1_ball_qp`] (ℓ1 additionally caps n at 16: the
+    /// facet description is 2ⁿ rows). The box shape is tried first, so
+    /// the n = 1 encoding — where a box and an ℓ1 ball are the same
+    /// interval — resolves deterministically.
+    pub fn detect(qp: &Qp) -> Option<FeasibleSet> {
+        let n = qp.n();
+        let m = qp.m_ineq();
+        if n == 0 {
+            return None;
+        }
+        // box: G = [I; −I] with vacuous equalities
+        if m == 2 * n && vacuous_eq(qp) {
+            let mut is_box = true;
+            'rows: for i in 0..n {
+                for j in 0..n {
+                    let up = if i == j { 1.0 } else { 0.0 };
+                    if qp.g[(i, j)] != up || qp.g[(n + i, j)] != -up {
+                        is_box = false;
+                        break 'rows;
+                    }
+                }
+            }
+            if is_box {
+                let u: Vec<f64> = qp.h[..n].to_vec();
+                let l: Vec<f64> =
+                    qp.h[n..].iter().map(|&v| -v).collect();
+                if l.iter().zip(&u).all(|(&lo, &hi)| lo < hi) {
+                    return Some(FeasibleSet::Box { l, u });
+                }
+            }
+        }
+        // simplex: A = 1ᵀ, b = [r > 0], G = −I, h = 0
+        if qp.p_eq() == 1
+            && m == n
+            && qp.b[0] > 0.0
+            && (0..n).all(|j| qp.a[(0, j)] == 1.0)
+            && qp.h.iter().all(|&v| v == 0.0)
+        {
+            let diag = (0..n).all(|i| {
+                (0..n).all(|j| {
+                    qp.g[(i, j)] == if i == j { -1.0 } else { 0.0 }
+                })
+            });
+            if diag {
+                return Some(FeasibleSet::Simplex { r: qp.b[0] });
+            }
+        }
+        // ℓ1 ball: every sign pattern σᵀx ≤ r exactly once
+        if n <= 16
+            && m == (1usize << n)
+            && vacuous_eq(qp)
+            && qp.h[0] > 0.0
+            && qp.h.iter().all(|&v| v == qp.h[0])
+        {
+            let mut seen = vec![false; m];
+            for row in 0..m {
+                let mut mask = 0usize;
+                for j in 0..n {
+                    match qp.g[(row, j)] {
+                        v if v == 1.0 => {}
+                        v if v == -1.0 => mask |= 1 << j,
+                        _ => return None,
+                    }
+                }
+                if seen[mask] {
+                    return None;
+                }
+                seen[mask] = true;
+            }
+            return Some(FeasibleSet::L1Ball { r: qp.h[0] });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prob::{box_qp, dense_qp, l1_ball_qp, simplex_qp};
+
+    #[test]
+    fn detects_the_three_canonical_shapes() {
+        match FeasibleSet::detect(&box_qp(7, 3)).unwrap() {
+            FeasibleSet::Box { l, u } => {
+                assert_eq!(l.len(), 7);
+                assert!(l.iter().zip(&u).all(|(a, b)| a < b));
+            }
+            other => panic!("expected box, got {other:?}"),
+        }
+        assert_eq!(
+            FeasibleSet::detect(&simplex_qp(9, 2.5, 1)),
+            Some(FeasibleSet::Simplex { r: 2.5 })
+        );
+        assert_eq!(
+            FeasibleSet::detect(&l1_ball_qp(6, 1.25, 2)),
+            Some(FeasibleSet::L1Ball { r: 1.25 })
+        );
+    }
+
+    #[test]
+    fn rejects_general_polytopes() {
+        assert_eq!(FeasibleSet::detect(&dense_qp(8, 4, 2, 3)), None);
+        // a box with one bound flipped (l ≥ u) is not servable
+        let mut qp = box_qp(4, 5);
+        qp.h[0] = -qp.h[4] - 1.0;
+        assert_eq!(FeasibleSet::detect(&qp), None);
+        // an ℓ1 encoding with a duplicated facet row is rejected
+        let mut qp = l1_ball_qp(4, 1.0, 6);
+        for j in 0..4 {
+            let v = qp.g[(0, j)];
+            qp.g[(1, j)] = v;
+        }
+        assert_eq!(FeasibleSet::detect(&qp), None);
+    }
+}

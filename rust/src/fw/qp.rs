@@ -1,0 +1,1202 @@
+//! Single-problem Frank–Wolfe engine — the projection-free family
+//! sibling of [`DenseAltDiff`](crate::altdiff::DenseAltDiff) and
+//! [`AdmmQp`](crate::admm::AdmmQp), same contracts.
+//!
+//! Forward pass: away-step conditional gradient with exact line search.
+//! The iterate is carried as an explicit convex combination
+//! x = Σ αᵥ·v over an active vertex set S, so an away step can move
+//! mass *off* a bad vertex (the ingredient that upgrades plain FW's
+//! O(1/k) to linear convergence on polytopes). Each iteration costs one
+//! gradient (n² flops), one LMO (O(n)), one away scan (O(|S|·n)), and
+//! one exact line search — no Cholesky at registration, no projection
+//! in the loop.
+//!
+//! Backward pass: the active-set KKT system is solved directly. The
+//! supported feasible sets make its null space trivial to parameterize
+//! (pinned coordinates + at most one dense row), so the adjoint is a
+//! projected conjugate-gradient solve of ΠPΠ y = Πv — O(n) state
+//! ([`FwSeed`]), d-free like the other families' adjoints, truncated by
+//! the same step_rel/tol criterion so `tol = 0` runs exactly
+//! `max_iter` iterations (Thm 4.3 fixed-k semantics). Forward-mode
+//! Jacobians are produced from the same gated system, one run-to-
+//! convergence CG per parameter column, *after* the primal loop —
+//! unrolling FW itself would differentiate through a piecewise-constant
+//! LMO and return zero almost everywhere.
+
+use super::FeasibleSet;
+use crate::altdiff::{
+    BackwardMode, Options, Param, Solution, TraceEntry, Vjp, VjpSolution,
+};
+use crate::error::{AltDiffError, Result};
+use crate::linalg::{axpy, dot, gemv, norm2, Mat};
+use crate::obs::IterObserver;
+use crate::prob::Qp;
+use crate::warm::{FwSeed, WarmStart};
+
+/// Vertex weights below this are dropped from the active set; the mass
+/// they carried is O(ε)·r and an away "drop step" lands on exactly this
+/// threshold after float cancellation.
+const WEIGHT_EPS: f64 = 1e-12;
+
+/// Per-request geometry, re-derived from the requested (b, h) so θ
+/// overrides move the bounds/scale without re-detection. The *class*
+/// is fixed at registration; a request must stay inside it (asserted).
+#[derive(Clone, Debug)]
+pub(crate) enum Geom {
+    /// l ≤ x ≤ u with l = −h[n..2n], u = h[0..n].
+    Box { l: Vec<f64>, u: Vec<f64> },
+    /// 1ᵀx = r, x ≥ 0 with r = b[0].
+    Simplex { r: f64 },
+    /// ‖x‖₁ ≤ r with r = h[0] (h must stay uniform).
+    L1 { r: f64 },
+}
+
+/// The conditional-gradient iterate: x plus the explicit convex
+/// combination it decomposes into (the away step needs the vertex
+/// weights). Shared verbatim with [`BatchedFw`](super::BatchedFw) —
+/// the batch engine drives one `FwState` per element through the same
+/// [`FwQp::fw_step`], which is what makes batch == single bit-exact.
+#[derive(Clone, Debug)]
+pub(crate) struct FwState {
+    pub(crate) x: Vec<f64>,
+    verts: Vec<Vec<f64>>,
+    alphas: Vec<f64>,
+}
+
+/// What one FW iteration reports upward: the duality gap (the
+/// convergence certificate, surfaced in the observer's primal slot),
+/// the relative step (truncation criterion), and the absolute step
+/// (observer dual slot).
+pub(crate) struct StepInfo {
+    pub(crate) gap: f64,
+    pub(crate) step_rel: f64,
+    pub(crate) dx_norm: f64,
+}
+
+/// Slack-gated tangent space of the active-set KKT system: which
+/// coordinates are pinned, plus the (at most one) dense constraint row
+/// the supported sets can contribute — 1ᵀ for the simplex equality,
+/// the shared support signs σ_S for a face of the ℓ1 ball.
+struct Tangent {
+    pins: Vec<bool>,
+    /// Dense row restricted to free coordinates (the projector uses it).
+    dense_masked: Option<Vec<f64>>,
+    /// The same row with pinned coordinates included (particular
+    /// solutions must honor the full constraint).
+    dense_full: Option<Vec<f64>>,
+    kind: TangentKind,
+}
+
+enum TangentKind {
+    /// Per coordinate: the active bound row and its ±1 coefficient.
+    Box { coeff_rows: Vec<Option<(usize, f64)>> },
+    Simplex,
+    /// Active facet rows, shared support signs (0 on pins), |S|.
+    L1 { active_rows: Vec<usize>, sigma: Vec<f64>, n_support: usize },
+}
+
+/// A registered Frank–Wolfe QP layer. Registration is O(1) — the only
+/// work is structural detection of the feasible set; there is no
+/// factorization to build or cache.
+#[derive(Clone)]
+pub struct FwQp {
+    /// The registered problem.
+    pub qp: Qp,
+    /// Interface parity with the factorizing families; the FW iteration
+    /// is penalty-free and never reads it.
+    pub rho: f64,
+    set: FeasibleSet,
+}
+
+impl FwQp {
+    /// Register a layer; fails unless the constraint structure matches
+    /// one of the supported vertex-enumerable sets
+    /// ([`FeasibleSet::detect`]).
+    pub fn new(qp: Qp, rho: f64) -> Result<FwQp> {
+        match FeasibleSet::detect(&qp) {
+            Some(set) => Ok(FwQp { qp, rho, set }),
+            None => Err(AltDiffError::DimMismatch(
+                "FW engine requires a box ([I; -I]), simplex (1ᵀx = r, \
+                 x ≥ 0), or ℓ1-ball (all 2ⁿ sign facets) constraint \
+                 encoding; structure not recognized"
+                    .into(),
+            )),
+        }
+    }
+
+    /// The detected feasible-set class this layer serves.
+    pub fn feasible_set(&self) -> &FeasibleSet {
+        &self.set
+    }
+
+    /// Solve + differentiate with per-request parameters; `None` means
+    /// the registered value. Same contract as
+    /// [`DenseAltDiff::solve_with`](crate::altdiff::DenseAltDiff::solve_with).
+    pub fn solve_with(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        opts: &Options,
+    ) -> Solution {
+        self.solve_from(q, b, h, None, opts)
+    }
+
+    /// [`Self::solve_with`] resuming from a prior iterate triple. The
+    /// shared warm format carries x; FW re-expands it into a vertex
+    /// combination (box: the nested-interval staircase, simplex/ℓ1:
+    /// coordinate vertices plus leftover mass), so a fixed-point x
+    /// reproduces itself and stops in one iteration. `warm.lam`/`nu`
+    /// are ignored — FW carries no dual state between solves. `warm =
+    /// None` is bit-identical to the cold [`Self::solve_with`]; the
+    /// forward-mode/tol composition rule is the same as the other
+    /// families' (asserted).
+    pub fn solve_from(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        warm: Option<&WarmStart>,
+        opts: &Options,
+    ) -> Solution {
+        self.solve_observed(q, b, h, warm, opts, None)
+    }
+
+    /// Convenience: registered parameters, default θ.
+    ///
+    /// ```
+    /// use altdiff::altdiff::Options;
+    /// use altdiff::fw::FwQp;
+    /// use altdiff::prob::simplex_qp;
+    ///
+    /// let qp = simplex_qp(12, 1.0, 7);
+    /// let layer = FwQp::new(qp.clone(), 1.0).unwrap();
+    /// let sol = layer.solve(&Options::with_tol(1e-10));
+    /// // iterates are convex combinations of simplex vertices —
+    /// // feasible by construction, no projection ever ran
+    /// let mass: f64 = sol.x.iter().sum();
+    /// assert!((mass - 1.0).abs() < 1e-9);
+    /// assert!(sol.x.iter().all(|&v| v >= -1e-12));
+    /// assert!(qp.kkt_residual(&sol.x, &sol.lam, &sol.nu) < 1e-5);
+    /// // ∂x/∂b rides along (default forward mode), d = p = 1
+    /// assert_eq!(sol.jacobian.as_ref().unwrap().cols, 1);
+    /// ```
+    pub fn solve(&self, opts: &Options) -> Solution {
+        self.solve_with(None, None, None, opts)
+    }
+
+    /// [`Self::solve_from`] streaming per-iteration progress into an
+    /// [`IterObserver`] (element index 0). FW reports the duality gap
+    /// gₖ = ∇f(xₖ)ᵀ(xₖ − vₖ) in the primal slot — its convergence
+    /// certificate, f(xₖ) − f* ≤ gₖ — and ‖xₖ₊₁ − xₖ‖ in the dual slot
+    /// (see the [module docs](crate::fw) for why this diverges from the
+    /// factorizing families' constraint-violation convention).
+    pub fn solve_observed(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        warm: Option<&WarmStart>,
+        opts: &Options,
+        mut observer: Option<&mut dyn IterObserver>,
+    ) -> Solution {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        let q = q.unwrap_or(&self.qp.q);
+        let b = b.unwrap_or(&self.qp.b);
+        let h = h.unwrap_or(&self.qp.h);
+        assert_eq!(q.len(), n, "q dimension");
+        assert_eq!(b.len(), p, "b dimension");
+        assert_eq!(h.len(), m, "h dimension");
+        if let Some(w) = warm {
+            assert!(
+                opts.backward.forward_param().is_none() || opts.tol == 0.0,
+                "warm starts with forward-mode Jacobians require tol = 0 \
+                 (fixed-k); use BackwardMode::None/Adjoint for truncated \
+                 warm solves"
+            );
+            assert_eq!(w.dims(), (n, p, m), "warm-start dimensions");
+        }
+
+        let geom = self.geom(b, h);
+        let mut st = self.init_state(&geom, q, warm);
+
+        let mut trace = Vec::new();
+        let mut iters = 0;
+        let mut step_rel = f64::INFINITY;
+        for k in 0..opts.max_iter {
+            iters = k + 1;
+            let info = self.fw_step(&mut st, q, &geom);
+            step_rel = info.step_rel;
+            if let Some(obs) = observer.as_mut() {
+                if obs.wants(0) {
+                    obs.on_iter(0, k, info.gap, info.dx_norm);
+                }
+            }
+            if opts.trace {
+                trace.push(TraceEntry { iter: k, step_rel, jac_norm: 0.0 });
+            }
+            if step_rel < opts.tol {
+                break;
+            }
+        }
+
+        let (s, lam, nu) = self.recover(&st.x, q, h, &geom);
+        let jacobian = opts
+            .backward
+            .forward_param()
+            .map(|prm| self.forward_jacobian(&s, prm));
+        Solution { x: st.x, s, lam, nu, jacobian, iters, step_rel, trace }
+    }
+
+    /// Dimension-free adjoint: ∂L/∂θ from v = ∂L/∂x via the slack-gated
+    /// KKT system, without ever forming a Jacobian. Truncation on the
+    /// CG step (`opts.tol`; `tol = 0` runs exactly `opts.max_iter`
+    /// iterations).
+    pub fn vjp(&self, slack: &[f64], v: &[f64], opts: &Options) -> Vjp {
+        self.vjp_from(slack, v, None, opts).0
+    }
+
+    /// [`Self::vjp`] resuming the projected-CG solve from a harvested
+    /// [`FwSeed`] and returning the final state for the next caller —
+    /// the family sibling of
+    /// [`DenseAltDiff::vjp_from`](crate::altdiff::DenseAltDiff::vjp_from).
+    /// `warm = None` is bit-identical to the cold [`Self::vjp`].
+    pub fn vjp_from(
+        &self,
+        slack: &[f64],
+        v: &[f64],
+        warm: Option<&FwSeed>,
+        opts: &Options,
+    ) -> (Vjp, FwSeed) {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        assert_eq!(slack.len(), m, "slack dimension");
+        assert_eq!(v.len(), n, "v dimension");
+        let tan = self.tangent(slack);
+        let seeded = warm.is_some();
+        let y0 = warm.map(|seed| {
+            assert_eq!(seed.dim(), n, "adjoint-seed dimensions");
+            seed.y.clone()
+        });
+        let (y, iters, step_rel) =
+            self.gated_cg(&tan, v, y0, opts, seeded);
+        let seed_out = FwSeed { y: y.clone() };
+
+        // residual v − Py lies (at convergence) in the span of the
+        // active constraint normals; reading the multipliers off it is
+        // geometry-specific
+        let mut res = gemv(&self.qp.p, &y);
+        for i in 0..n {
+            res[i] = v[i] - res[i];
+        }
+        let grad_q: Vec<f64> = y.iter().map(|&yi| -yi).collect();
+        let mut grad_b = vec![0.0; p];
+        let mut grad_h = vec![0.0; m];
+        match &tan.kind {
+            TangentKind::Box { coeff_rows } => {
+                for (i, cr) in coeff_rows.iter().enumerate() {
+                    if let Some((row, coeff)) = cr {
+                        grad_h[*row] = coeff * res[i];
+                    }
+                }
+            }
+            TangentKind::Simplex => {
+                let free = tan.pins.iter().filter(|&&pin| !pin).count();
+                let beta: f64 = res
+                    .iter()
+                    .zip(&tan.pins)
+                    .filter(|(_, &pin)| !pin)
+                    .map(|(&r, _)| r)
+                    .sum::<f64>()
+                    / free.max(1) as f64;
+                grad_b[0] = beta;
+                for i in 0..n {
+                    if tan.pins[i] {
+                        grad_h[i] = beta - res[i];
+                    }
+                }
+            }
+            TangentKind::L1 { active_rows, sigma, n_support } => {
+                if !active_rows.is_empty() && *n_support > 0 {
+                    let gamma_total: f64 = (0..n)
+                        .map(|j| sigma[j] * res[j])
+                        .sum::<f64>()
+                        / *n_support as f64;
+                    if gamma_total.abs() > 1e-300 {
+                        // distribute Γ over the active sub-cube so the
+                        // pinned coordinates of res are reproduced:
+                        // per-row weight Γ·Π (1 + σ'ⱼ·resⱼ/Γ)/2
+                        for &row in active_rows {
+                            let mut w = gamma_total;
+                            for j in 0..n {
+                                if tan.pins[j] {
+                                    let d = res[j] / gamma_total;
+                                    w *= (1.0 + self.qp.g[(row, j)] * d)
+                                        / 2.0;
+                                }
+                            }
+                            grad_h[row] = w;
+                        }
+                    }
+                }
+            }
+        }
+        (Vjp { grad_q, grad_b, grad_h, iters, step_rel }, seed_out)
+    }
+
+    /// Forward solve + reverse-mode backward in one call — the training
+    /// entry point, d-free like
+    /// [`DenseAltDiff::solve_vjp`](crate::altdiff::DenseAltDiff::solve_vjp).
+    pub fn solve_vjp(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        v: &[f64],
+        opts: &Options,
+    ) -> VjpSolution {
+        let fopts =
+            Options { backward: BackwardMode::None, ..opts.clone() };
+        let solution = self.solve_with(q, b, h, &fopts);
+        let vjp = self.vjp(&solution.s, v, opts);
+        VjpSolution { solution, vjp }
+    }
+
+    // ---- shared internals (the batch engine drives these directly) ----
+
+    /// Re-derive the request geometry from the requested right-hand
+    /// sides; the class is registration-fixed, the numbers are not.
+    pub(crate) fn geom(&self, b: &[f64], h: &[f64]) -> Geom {
+        let n = self.qp.n();
+        match &self.set {
+            FeasibleSet::Box { .. } => {
+                let u: Vec<f64> = h[..n].to_vec();
+                let l: Vec<f64> = h[n..].iter().map(|&v| -v).collect();
+                assert!(
+                    l.iter().zip(&u).all(|(lo, hi)| lo < hi),
+                    "per-request h left the box class (l < u violated)"
+                );
+                Geom::Box { l, u }
+            }
+            FeasibleSet::Simplex { .. } => {
+                assert!(
+                    b[0] > 0.0,
+                    "per-request b left the simplex class (r ≤ 0)"
+                );
+                Geom::Simplex { r: b[0] }
+            }
+            FeasibleSet::L1Ball { .. } => {
+                assert!(
+                    h[0] > 0.0 && h.iter().all(|&v| v == h[0]),
+                    "per-request h left the ℓ1-ball class (non-uniform \
+                     or non-positive radius)"
+                );
+                Geom::L1 { r: h[0] }
+            }
+        }
+    }
+
+    /// Linear minimization oracle: argmin over the feasible set of
+    /// ⟨grad, v⟩. Deterministic tie rules (module docs) keep batch and
+    /// single solves in lockstep.
+    fn lmo(geom: &Geom, grad: &[f64]) -> Vec<f64> {
+        match geom {
+            Geom::Box { l, u } => grad
+                .iter()
+                .zip(l.iter().zip(u))
+                .map(|(&g, (&lo, &hi))| if g > 0.0 { lo } else { hi })
+                .collect(),
+            Geom::Simplex { r } => {
+                let mut best = 0;
+                for (i, &g) in grad.iter().enumerate() {
+                    if g < grad[best] {
+                        best = i;
+                    }
+                }
+                let mut v = vec![0.0; grad.len()];
+                v[best] = *r;
+                v
+            }
+            Geom::L1 { r } => {
+                let mut best = 0;
+                for (i, &g) in grad.iter().enumerate() {
+                    if g.abs() > grad[best].abs() {
+                        best = i;
+                    }
+                }
+                let mut v = vec![0.0; grad.len()];
+                v[best] = if grad[best] > 0.0 { -*r } else { *r };
+                v
+            }
+        }
+    }
+
+    /// Cold start: the LMO vertex of the linear term (the minimizer of
+    /// the objective's gradient at 0). Warm start: re-expand the
+    /// carried x into an explicit convex combination of vertices.
+    pub(crate) fn init_state(
+        &self,
+        geom: &Geom,
+        q: &[f64],
+        warm: Option<&WarmStart>,
+    ) -> FwState {
+        match warm {
+            None => {
+                let v0 = Self::lmo(geom, q);
+                FwState { x: v0.clone(), verts: vec![v0], alphas: vec![1.0] }
+            }
+            Some(w) => self.decompose(geom, &w.x),
+        }
+    }
+
+    /// Vertex decomposition of an arbitrary (feasible) point. The
+    /// rebuilt x = Σ αᵥ·v replaces the carried one so the invariant the
+    /// away step relies on holds exactly; a fixed-point warm start then
+    /// reproduces itself to float accuracy and stops in one iteration.
+    fn decompose(&self, geom: &Geom, x: &[f64]) -> FwState {
+        let n = x.len();
+        let mut verts: Vec<Vec<f64>> = Vec::new();
+        let mut alphas: Vec<f64> = Vec::new();
+        match geom {
+            Geom::Box { l, u } => {
+                // nested-interval staircase: sort coordinates by their
+                // relative position t, walk the prefix-set vertices
+                let t: Vec<f64> = (0..n)
+                    .map(|i| {
+                        ((x[i] - l[i]) / (u[i] - l[i])).clamp(0.0, 1.0)
+                    })
+                    .collect();
+                let mut idx: Vec<usize> = (0..n).collect();
+                idx.sort_by(|&a, &b| {
+                    t[b].partial_cmp(&t[a]).unwrap().then(a.cmp(&b))
+                });
+                let mut cur = l.clone();
+                let w0 = 1.0 - t[idx[0]];
+                if w0 > WEIGHT_EPS {
+                    verts.push(cur.clone());
+                    alphas.push(w0);
+                }
+                for j in 0..n {
+                    cur[idx[j]] = u[idx[j]];
+                    let w = if j + 1 < n {
+                        t[idx[j]] - t[idx[j + 1]]
+                    } else {
+                        t[idx[j]]
+                    };
+                    if w > WEIGHT_EPS {
+                        verts.push(cur.clone());
+                        alphas.push(w);
+                    }
+                }
+            }
+            Geom::Simplex { r } => {
+                for i in 0..n {
+                    let w = x[i].max(0.0) / r;
+                    if w > WEIGHT_EPS {
+                        let mut v = vec![0.0; n];
+                        v[i] = *r;
+                        verts.push(v);
+                        alphas.push(w);
+                    }
+                }
+            }
+            Geom::L1 { r } => {
+                let mut sum = 0.0;
+                for i in 0..n {
+                    let w = x[i].abs() / r;
+                    if w > WEIGHT_EPS {
+                        let mut v = vec![0.0; n];
+                        v[i] = r * x[i].signum();
+                        verts.push(v);
+                        alphas.push(w);
+                        sum += w;
+                    }
+                }
+                if sum > 1.0 {
+                    for a in &mut alphas {
+                        *a /= sum;
+                    }
+                    sum = 1.0;
+                }
+                // leftover mass sits on a ± vertex pair so it cancels
+                let beta = 1.0 - sum;
+                if beta > WEIGHT_EPS {
+                    for sign in [1.0, -1.0] {
+                        let mut v = vec![0.0; n];
+                        v[0] = sign * r;
+                        match verts.iter().position(|w| *w == v) {
+                            Some(j) => alphas[j] += beta / 2.0,
+                            None => {
+                                verts.push(v);
+                                alphas.push(beta / 2.0);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if verts.is_empty() {
+            // degenerate carry (e.g. an all-clamped point); fall back to
+            // a single deterministic vertex
+            let v0 = Self::lmo(geom, &self.qp.q);
+            verts.push(v0);
+            alphas.push(1.0);
+        }
+        let total: f64 = alphas.iter().sum();
+        for a in &mut alphas {
+            *a /= total;
+        }
+        let mut x = vec![0.0; n];
+        for (v, &a) in verts.iter().zip(&alphas) {
+            axpy(&mut x, a, v);
+        }
+        FwState { x, verts, alphas }
+    }
+
+    /// One away-step FW iteration with exact line search. Zero-length
+    /// steps are genuine no-ops (state untouched up to exact float
+    /// identity), which is what keeps `tol = 0` fixed-k runs
+    /// deterministic past convergence.
+    pub(crate) fn fw_step(
+        &self,
+        st: &mut FwState,
+        q: &[f64],
+        geom: &Geom,
+    ) -> StepInfo {
+        let n = q.len();
+        let mut grad = gemv(&self.qp.p, &st.x);
+        for i in 0..n {
+            grad[i] += q[i];
+        }
+        let v_fw = Self::lmo(geom, &grad);
+        let gx = dot(&grad, &st.x);
+        let g_fw = gx - dot(&grad, &v_fw);
+        // away vertex: the active-set vertex the gradient most opposes
+        let mut aw = 0;
+        let mut aw_score = f64::NEG_INFINITY;
+        for (j, v) in st.verts.iter().enumerate() {
+            let sc = dot(&grad, v);
+            if sc > aw_score {
+                aw_score = sc;
+                aw = j;
+            }
+        }
+        let g_aw = aw_score - gx;
+
+        let away = g_aw > g_fw;
+        let (d, gamma_max): (Vec<f64>, f64) = if away {
+            let a = st.alphas[aw];
+            let d: Vec<f64> = st
+                .x
+                .iter()
+                .zip(&st.verts[aw])
+                .map(|(&xi, &vi)| xi - vi)
+                .collect();
+            let gmax = if a < 1.0 { a / (1.0 - a) } else { f64::MAX };
+            (d, gmax)
+        } else {
+            let d: Vec<f64> = v_fw
+                .iter()
+                .zip(&st.x)
+                .map(|(&vi, &xi)| vi - xi)
+                .collect();
+            (d, 1.0)
+        };
+
+        // exact line search on the quadratic: γ* = ⟨−grad, d⟩ / ⟨d, Pd⟩
+        let pd = gemv(&self.qp.p, &d);
+        let denom = dot(&d, &pd);
+        let descent = -dot(&grad, &d);
+        let mut gamma = if denom > 0.0 {
+            (descent / denom).clamp(0.0, gamma_max)
+        } else {
+            gamma_max
+        };
+        if !gamma.is_finite() || descent <= 0.0 {
+            gamma = 0.0;
+        }
+
+        let xprev_norm = norm2(&st.x);
+        let dx_norm = gamma * norm2(&d);
+        if gamma > 0.0 {
+            axpy(&mut st.x, gamma, &d);
+            if away {
+                for a in &mut st.alphas {
+                    *a *= 1.0 + gamma;
+                }
+                st.alphas[aw] -= gamma;
+            } else {
+                for a in &mut st.alphas {
+                    *a *= 1.0 - gamma;
+                }
+                match st.verts.iter().position(|v| *v == v_fw) {
+                    Some(j) => st.alphas[j] += gamma,
+                    None => {
+                        st.verts.push(v_fw);
+                        st.alphas.push(gamma);
+                    }
+                }
+            }
+            // drop spent vertices (away drop steps land here exactly)
+            let mut j = 0;
+            while j < st.alphas.len() {
+                if st.alphas[j] <= WEIGHT_EPS {
+                    st.alphas.swap_remove(j);
+                    st.verts.swap_remove(j);
+                } else {
+                    j += 1;
+                }
+            }
+        }
+        StepInfo {
+            gap: g_fw,
+            step_rel: dx_norm / xprev_norm.max(1.0),
+            dx_norm,
+        }
+    }
+
+    /// Post-loop slack/dual recovery: s = h − Gx with active rows
+    /// snapped to exact 0.0 (the same gate convention every adjoint in
+    /// the crate reads), duals read off the stationarity residual
+    /// res = −(Px + q) per geometry.
+    pub(crate) fn recover(
+        &self,
+        x: &[f64],
+        q: &[f64],
+        h: &[f64],
+        geom: &Geom,
+    ) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        let mut s = gemv(&self.qp.g, x);
+        for i in 0..m {
+            s[i] = h[i] - s[i];
+            if s[i] < 1e-9 * (1.0 + h[i].abs()) {
+                s[i] = 0.0;
+            }
+        }
+        let mut res = gemv(&self.qp.p, x);
+        for i in 0..n {
+            res[i] = -(res[i] + q[i]);
+        }
+        let mut lam = vec![0.0; p];
+        let mut nu = vec![0.0; m];
+        match geom {
+            Geom::Box { .. } => {
+                for i in 0..n {
+                    if s[i] == 0.0 {
+                        nu[i] = res[i];
+                    } else if s[n + i] == 0.0 {
+                        nu[n + i] = -res[i];
+                    }
+                }
+            }
+            Geom::Simplex { .. } => {
+                // free coordinates: ν = 0 ⇒ λ = resᵢ there; average
+                // for robustness at truncated iterates
+                let mut acc = 0.0;
+                let mut cnt = 0usize;
+                for i in 0..n {
+                    if s[i] > 0.0 {
+                        acc += res[i];
+                        cnt += 1;
+                    }
+                }
+                let l0 = acc / cnt.max(1) as f64;
+                lam[0] = l0;
+                for i in 0..n {
+                    if s[i] == 0.0 {
+                        nu[i] = l0 - res[i];
+                    }
+                }
+            }
+            Geom::L1 { .. } => {
+                let tan = self.tangent(&s);
+                if let TangentKind::L1 { active_rows, sigma, n_support } =
+                    &tan.kind
+                {
+                    if !active_rows.is_empty() && *n_support > 0 {
+                        let g_tot: f64 = (0..n)
+                            .map(|j| sigma[j] * res[j])
+                            .sum::<f64>()
+                            / *n_support as f64;
+                        if g_tot.abs() > 1e-300 {
+                            for &row in active_rows {
+                                let mut w = g_tot;
+                                for j in 0..n {
+                                    if tan.pins[j] {
+                                        let dj = res[j] / g_tot;
+                                        w *= (1.0
+                                            + self.qp.g[(row, j)] * dj)
+                                            / 2.0;
+                                    }
+                                }
+                                nu[row] = w;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (s, lam, nu)
+    }
+
+    /// Derive the slack-gated tangent space from a recovered slack.
+    fn tangent(&self, s: &[f64]) -> Tangent {
+        let n = self.qp.n();
+        match &self.set {
+            FeasibleSet::Box { .. } => {
+                let mut pins = vec![false; n];
+                let mut coeff_rows: Vec<Option<(usize, f64)>> =
+                    vec![None; n];
+                for i in 0..n {
+                    if s[i] == 0.0 {
+                        pins[i] = true;
+                        coeff_rows[i] = Some((i, 1.0));
+                    } else if s[n + i] == 0.0 {
+                        pins[i] = true;
+                        coeff_rows[i] = Some((n + i, -1.0));
+                    }
+                }
+                Tangent {
+                    pins,
+                    dense_masked: None,
+                    dense_full: None,
+                    kind: TangentKind::Box { coeff_rows },
+                }
+            }
+            FeasibleSet::Simplex { .. } => {
+                let pins: Vec<bool> =
+                    (0..n).map(|i| s[i] == 0.0).collect();
+                let full = vec![1.0; n];
+                let masked: Vec<f64> = pins
+                    .iter()
+                    .map(|&pin| if pin { 0.0 } else { 1.0 })
+                    .collect();
+                Tangent {
+                    pins,
+                    dense_masked: Some(masked),
+                    dense_full: Some(full),
+                    kind: TangentKind::Simplex,
+                }
+            }
+            FeasibleSet::L1Ball { .. } => {
+                let m = self.qp.m_ineq();
+                let active_rows: Vec<usize> =
+                    (0..m).filter(|&row| s[row] == 0.0).collect();
+                let mut pins = vec![false; n];
+                let mut sigma = vec![0.0; n];
+                let mut n_support = 0usize;
+                if !active_rows.is_empty() {
+                    for j in 0..n {
+                        let first = self.qp.g[(active_rows[0], j)];
+                        if active_rows
+                            .iter()
+                            .all(|&row| self.qp.g[(row, j)] == first)
+                        {
+                            sigma[j] = first;
+                            n_support += 1;
+                        } else {
+                            pins[j] = true;
+                        }
+                    }
+                }
+                let dense = if active_rows.is_empty() {
+                    None
+                } else {
+                    Some(sigma.clone())
+                };
+                Tangent {
+                    pins,
+                    dense_masked: dense.clone(),
+                    dense_full: dense,
+                    kind: TangentKind::L1 { active_rows, sigma, n_support },
+                }
+            }
+        }
+    }
+
+    /// Projected CG on ΠPΠ y = Πv, where Π zeroes the pinned
+    /// coordinates and removes the dense-row component. Iteration
+    /// conventions mirror the other adjoints: a converged (or
+    /// degenerate) state takes zero-length steps that still count, so
+    /// `tol = 0` runs exactly `max_iter` iterations, and a seeded first
+    /// iteration must take one genuine step before the truncation test
+    /// is trusted.
+    fn gated_cg(
+        &self,
+        tan: &Tangent,
+        rhs: &[f64],
+        y0: Option<Vec<f64>>,
+        opts: &Options,
+        seeded: bool,
+    ) -> (Vec<f64>, usize, f64) {
+        let n = self.qp.n();
+        let project = |w: &mut [f64]| {
+            for i in 0..n {
+                if tan.pins[i] {
+                    w[i] = 0.0;
+                }
+            }
+            if let Some(c) = &tan.dense_masked {
+                let cc = dot(c, c);
+                if cc > 0.0 {
+                    let t = dot(c, w) / cc;
+                    for i in 0..n {
+                        w[i] -= t * c[i];
+                    }
+                }
+            }
+        };
+
+        let mut y = y0.unwrap_or_else(|| vec![0.0; n]);
+        project(&mut y);
+        let mut r = gemv(&self.qp.p, &y);
+        for i in 0..n {
+            r[i] = rhs[i] - r[i];
+        }
+        project(&mut r);
+        let mut pv = r.clone();
+        let mut rs = dot(&r, &r);
+
+        let mut iters = 1;
+        let mut step_rel = f64::INFINITY;
+        for k in 1..opts.max_iter {
+            let mut dy_norm = 0.0;
+            let yprev_norm = norm2(&y);
+            if rs > 1e-300 {
+                let mut ap = gemv(&self.qp.p, &pv);
+                project(&mut ap);
+                let pap = dot(&pv, &ap);
+                if pap > 0.0 {
+                    let alpha = rs / pap;
+                    dy_norm = alpha * norm2(&pv);
+                    axpy(&mut y, alpha, &pv);
+                    axpy(&mut r, -alpha, &ap);
+                    let rs_new = dot(&r, &r);
+                    let beta = rs_new / rs;
+                    for i in 0..n {
+                        pv[i] = r[i] + beta * pv[i];
+                    }
+                    rs = rs_new;
+                }
+            }
+            iters = k + 1;
+            step_rel = dy_norm / yprev_norm.max(1.0);
+            if step_rel < opts.tol && (k > 1 || !seeded) {
+                break;
+            }
+        }
+        (y, iters, step_rel)
+    }
+
+    /// Run-to-convergence CG options for Jacobian columns: the columns
+    /// are the *exact* implicit derivative at the final active set, so
+    /// batch and single solves agree bit-for-bit.
+    fn exact_opts(&self) -> Options {
+        Options {
+            tol: 1e-14,
+            max_iter: 6 * self.qp.n() + 20,
+            backward: BackwardMode::None,
+            rho: self.rho,
+            trace: false,
+        }
+    }
+
+    /// One column of the implicit derivative: a particular solution
+    /// honoring the perturbed affine constraints (pinned values + the
+    /// full dense row), plus a gated-CG correction in the tangent
+    /// space.
+    fn constrained_column(
+        &self,
+        tan: &Tangent,
+        rhs_x: &[f64],
+        pin_vals: &[f64],
+        c_rhs: f64,
+    ) -> Vec<f64> {
+        let n = self.qp.n();
+        let mut xp = pin_vals.to_vec();
+        if let (Some(cm), Some(cf)) = (&tan.dense_masked, &tan.dense_full)
+        {
+            let cc = dot(cm, cm);
+            if cc > 0.0 {
+                let defect = c_rhs - dot(cf, &xp);
+                for i in 0..n {
+                    xp[i] += defect / cc * cm[i];
+                }
+            }
+        }
+        let mut rhs = gemv(&self.qp.p, &xp);
+        for i in 0..n {
+            rhs[i] = rhs_x[i] - rhs[i];
+        }
+        let (z, _, _) =
+            self.gated_cg(tan, &rhs, None, &self.exact_opts(), false);
+        let mut col = xp;
+        axpy(&mut col, 1.0, &z);
+        col
+    }
+
+    /// Forward-mode Jacobian ∂x/∂θ at the recovered active set,
+    /// computed by implicit differentiation after the primal loop (the
+    /// LMO is piecewise constant — unrolling would return zero).
+    ///
+    /// ℓ1 convention: an active sub-cube has non-unique per-facet
+    /// sensitivities; ∂x/∂hᵣₒᵥ is reported as the uniform-radius-bump
+    /// column split equally across the active rows, whose *sum* (the
+    /// ∂x/∂r direction) is the canonical well-defined object.
+    pub(crate) fn forward_jacobian(&self, s: &[f64], param: Param) -> Mat {
+        let n = self.qp.n();
+        let m = self.qp.m_ineq();
+        let p = self.qp.p_eq();
+        let d = param.dim(n, m, p);
+        let tan = self.tangent(s);
+        let mut jac = Mat::zeros(n, d);
+        let zero = vec![0.0; n];
+        match param {
+            Param::Q => {
+                for j in 0..d {
+                    let mut rhs = vec![0.0; n];
+                    rhs[j] = -1.0;
+                    let col =
+                        self.constrained_column(&tan, &rhs, &zero, 0.0);
+                    for i in 0..n {
+                        jac[(i, j)] = col[i];
+                    }
+                }
+            }
+            Param::B => {
+                // only the simplex class has a live equality; vacuous
+                // rows have zero sensitivity
+                if matches!(tan.kind, TangentKind::Simplex) && d > 0 {
+                    let col =
+                        self.constrained_column(&tan, &zero, &zero, 1.0);
+                    for i in 0..n {
+                        jac[(i, 0)] = col[i];
+                    }
+                }
+            }
+            Param::H => match &tan.kind {
+                TangentKind::Box { coeff_rows } => {
+                    for (i, cr) in coeff_rows.iter().enumerate() {
+                        if let Some((row, coeff)) = cr {
+                            let mut pv = vec![0.0; n];
+                            pv[i] = *coeff;
+                            let col = self
+                                .constrained_column(&tan, &zero, &pv, 0.0);
+                            for ii in 0..n {
+                                jac[(ii, *row)] = col[ii];
+                            }
+                        }
+                    }
+                }
+                TangentKind::Simplex => {
+                    for t in 0..n {
+                        if s[t] == 0.0 {
+                            let mut pv = vec![0.0; n];
+                            pv[t] = -1.0;
+                            let col = self
+                                .constrained_column(&tan, &zero, &pv, 0.0);
+                            for ii in 0..n {
+                                jac[(ii, t)] = col[ii];
+                            }
+                        }
+                    }
+                }
+                TangentKind::L1 { active_rows, .. } => {
+                    if !active_rows.is_empty() {
+                        let col = self
+                            .constrained_column(&tan, &zero, &zero, 1.0);
+                        let split = active_rows.len() as f64;
+                        for &row in active_rows {
+                            for ii in 0..n {
+                                jac[(ii, row)] = col[ii] / split;
+                            }
+                        }
+                    }
+                }
+            },
+        }
+        jac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::altdiff::DenseAltDiff;
+    use crate::prob::{box_qp, dense_qp, l1_ball_qp, simplex_qp};
+
+    fn tight() -> Options {
+        Options {
+            tol: 1e-12,
+            max_iter: 200_000,
+            backward: BackwardMode::None,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn rejects_unservable_structure() {
+        assert!(FwQp::new(dense_qp(8, 4, 2, 3), 1.0).is_err());
+    }
+
+    #[test]
+    fn box_solution_matches_dense_altdiff() {
+        for seed in [1, 4, 9] {
+            let qp = box_qp(10, seed);
+            let fw = FwQp::new(qp.clone(), 1.0).unwrap();
+            let alt = DenseAltDiff::new(qp, 1.0).unwrap();
+            let sf = fw.solve(&tight());
+            let sa = alt.solve(&tight());
+            for i in 0..10 {
+                assert!(
+                    (sf.x[i] - sa.x[i]).abs() < 1e-8,
+                    "x[{i}]: fw {} alt {}",
+                    sf.x[i],
+                    sa.x[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simplex_reaches_kkt_point_with_duals() {
+        let qp = simplex_qp(14, 1.0, 2);
+        let fw = FwQp::new(qp.clone(), 1.0).unwrap();
+        let sol = fw.solve(&tight());
+        let r = qp.kkt_residual(&sol.x, &sol.lam, &sol.nu);
+        assert!(r < 1e-6, "kkt residual {r}");
+        assert!(sol.iters < 200_000, "did not converge");
+        assert!(sol.nu.iter().all(|&v| v > -1e-7), "dual feasibility");
+    }
+
+    #[test]
+    fn l1_solution_matches_dense_altdiff_primal() {
+        let qp = l1_ball_qp(6, 1.0, 3);
+        let fw = FwQp::new(qp.clone(), 1.0).unwrap();
+        let alt = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+        let sf = fw.solve(&tight());
+        let sa = alt.solve(&tight());
+        for i in 0..6 {
+            assert!((sf.x[i] - sa.x[i]).abs() < 1e-7, "x[{i}]");
+        }
+        // FW's product-form duals still certify the KKT point
+        let r = qp.kkt_residual(&sf.x, &sf.lam, &sf.nu);
+        assert!(r < 1e-5, "kkt residual {r}");
+    }
+
+    #[test]
+    fn fixed_k_runs_exactly_k_iterations() {
+        let fw = FwQp::new(box_qp(8, 11), 1.0).unwrap();
+        for k in [1, 5, 40] {
+            let sol = fw.solve(&Options {
+                tol: 0.0,
+                max_iter: k,
+                backward: BackwardMode::None,
+                ..Default::default()
+            });
+            assert_eq!(sol.iters, k);
+        }
+    }
+
+    #[test]
+    fn warm_fixed_point_stops_immediately() {
+        let fw = FwQp::new(simplex_qp(10, 1.0, 5), 1.0).unwrap();
+        let cold = fw.solve(&tight());
+        let ws = WarmStart::new(
+            cold.x.clone(),
+            cold.lam.clone(),
+            cold.nu.clone(),
+        );
+        let warm = fw.solve_from(None, None, None, Some(&ws), &tight());
+        assert!(warm.iters <= 2, "warm iters {}", warm.iters);
+        for i in 0..10 {
+            assert!((warm.x[i] - cold.x[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn jacobian_b_matches_finite_difference_on_simplex() {
+        let qp = simplex_qp(9, 1.0, 6);
+        let fw = FwQp::new(qp.clone(), 1.0).unwrap();
+        let opts = Options {
+            backward: BackwardMode::Forward(Param::B),
+            ..tight()
+        };
+        let jac = fw.solve(&opts).jacobian.unwrap();
+        let eps = 1e-6;
+        let fopts = Options { backward: BackwardMode::None, ..tight() };
+        let bp = [qp.b[0] + eps];
+        let bm = [qp.b[0] - eps];
+        let xp = fw.solve_with(None, Some(&bp), None, &fopts).x;
+        let xm = fw.solve_with(None, Some(&bm), None, &fopts).x;
+        for i in 0..9 {
+            let fd = (xp[i] - xm[i]) / (2.0 * eps);
+            assert!(
+                (jac[(i, 0)] - fd).abs() < 1e-4,
+                "jac[({i},0)]={} fd={fd}",
+                jac[(i, 0)]
+            );
+        }
+    }
+
+    #[test]
+    fn vjp_matches_finite_difference_on_box() {
+        let qp = box_qp(7, 13);
+        let fw = FwQp::new(qp.clone(), 1.0).unwrap();
+        let v: Vec<f64> = (0..7).map(|i| 0.4 * i as f64 - 1.0).collect();
+        let out = fw.solve_vjp(None, None, None, &v, &tight());
+        let eps = 1e-6;
+        let loss = |q: &[f64], h: &[f64]| -> f64 {
+            let fopts =
+                Options { backward: BackwardMode::None, ..tight() };
+            let x = fw.solve_with(Some(q), None, Some(h), &fopts).x;
+            dot(&x, &v)
+        };
+        for j in 0..7 {
+            let mut qp_ = qp.q.clone();
+            qp_[j] += eps;
+            let mut qm_ = qp.q.clone();
+            qm_[j] -= eps;
+            let fd =
+                (loss(&qp_, &qp.h) - loss(&qm_, &qp.h)) / (2.0 * eps);
+            assert!(
+                (out.vjp.grad_q[j] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "grad_q[{j}] got {} fd {fd}",
+                out.vjp.grad_q[j]
+            );
+        }
+        for j in 0..14 {
+            let mut hp = qp.h.clone();
+            hp[j] += eps;
+            let mut hm = qp.h.clone();
+            hm[j] -= eps;
+            let fd =
+                (loss(&qp.q, &hp) - loss(&qp.q, &hm)) / (2.0 * eps);
+            assert!(
+                (out.vjp.grad_h[j] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "grad_h[{j}] got {} fd {fd}",
+                out.vjp.grad_h[j]
+            );
+        }
+    }
+
+    #[test]
+    fn vjp_seed_resumes_in_a_bounded_restart() {
+        let qp = simplex_qp(8, 1.0, 4);
+        let fw = FwQp::new(qp, 1.0).unwrap();
+        let sol = fw.solve(&tight());
+        let v = vec![0.5; 8];
+        let (cold, seed) = fw.vjp_from(&sol.s, &v, None, &tight());
+        let (warm, _) = fw.vjp_from(&sol.s, &v, Some(&seed), &tight());
+        assert!(warm.iters <= 4, "seeded iters {}", warm.iters);
+        for j in 0..8 {
+            assert!((warm.grad_q[j] - cold.grad_q[j]).abs() < 1e-9);
+        }
+    }
+}

@@ -22,8 +22,12 @@
 //!   session keys, and the training loops)
 //! - second engine family: [`admm`] (consensus-form over-relaxed ADMM
 //!   behind the same solve/differentiate/batch/warm contracts; the
-//!   coordinator calibrates both families per layer and routes each
+//!   coordinator calibrates the families per layer and routes each
 //!   batch to the winner)
+//! - third engine family: [`fw`] (projection-free away-step
+//!   Frank–Wolfe over box/simplex/ℓ1-ball feasible sets — LMO instead
+//!   of factorization + projection — same contracts, probed by the
+//!   same router calibration)
 
 // Numeric-kernel house style: explicit index loops mirror the paper's
 // equations and the blocked-BLAS layout; several solver entry points
@@ -43,6 +47,7 @@ pub mod batch;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod fw;
 pub mod linalg;
 pub mod net;
 pub mod nn;

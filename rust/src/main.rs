@@ -15,7 +15,7 @@ use altdiff::coordinator::{Config, Coordinator, Reply};
 use altdiff::net::{
     ChaosConfig, ChaosProxy, Client, LoadgenOpts, NetConfig, NetServer,
 };
-use altdiff::prob::{dense_qp, sparsemax_qp};
+use altdiff::prob::{dense_qp, simplex_qp, sparsemax_qp};
 use altdiff::runtime::{Engine, Manifest};
 use altdiff::util::{Args, Pcg64};
 use std::path::PathBuf;
@@ -98,8 +98,9 @@ fn cmd_solve(args: &Args) {
 }
 
 /// Build the default serve-mode coordinator: two dense layer sizes
-/// (matching the compiled-artifact family) plus a sparse sparsemax
-/// layer, so the wire exposes every native backend.
+/// (matching the compiled-artifact family), a sparse sparsemax layer,
+/// and a Frank–Wolfe simplex layer, so the wire exposes every native
+/// backend.
 fn serve_coordinator(args: &Args) -> Coordinator {
     let workers = args.get_usize("workers", 2);
     let dir = artifacts_dir(args);
@@ -143,6 +144,10 @@ fn serve_coordinator(args: &Args) -> Coordinator {
     .expect("register qp64")
     .register_sparse("smax40", sparsemax_qp(40, 7), 1.0)
     .expect("register smax40")
+    // a simplex layer on the projection-free Frank–Wolfe family, so
+    // the wire also exposes the "native-fw" backend
+    .register_fw("simplex24", simplex_qp(24, 1.0, 1), 1.0)
+    .expect("register simplex24")
     .start()
 }
 

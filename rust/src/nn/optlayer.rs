@@ -26,12 +26,20 @@
 //! interface — same reverse-mode contract (slack-gated adjoint, no
 //! materialized Jacobians), with registration-time ρ balancing for
 //! ill-conditioned layer structures (see DESIGN.md §6).
+//!
+//! A fourth backend, [`OptBackend::Fw`], swaps in the projection-free
+//! Frank–Wolfe family ([`FwQp`] / [`BatchedFw`]) for layers whose
+//! constraint block encodes a servable LMO structure (box / simplex /
+//! ℓ1 ball) — e.g. a simplex-constrained attention or portfolio layer.
+//! Same reverse-mode contract; registration fails fast when the
+//! structure is not recognized.
 
 use crate::admm::{AdmmQp, AdmmSettings, BatchedAdmm};
 use crate::altdiff::{DenseAltDiff, Options, Param, SparseAltDiff};
 use crate::baselines;
 use crate::batch::{BatchedAltDiff, BatchedSparseAltDiff};
 use crate::error::Result;
+use crate::fw::{BatchedFw, FwQp};
 use crate::linalg::{gemv_t, Mat};
 use crate::prob::{Qp, SparseQp};
 use crate::warm::{
@@ -53,6 +61,10 @@ pub enum OptBackend {
     /// and reverse-mode contracts as Alt-Diff, with ρ residual-balanced
     /// once at registration.
     Admm,
+    /// Projection-free away-step Frank–Wolfe (the third engine family):
+    /// same truncation and reverse-mode contracts, restricted to layers
+    /// whose constraint block encodes a box / simplex / ℓ1-ball LMO.
+    Fw,
 }
 
 /// Structure-specific solver pair: the sequential engine plus the
@@ -71,6 +83,10 @@ enum LayerSolver {
     Admm {
         solver: AdmmQp,
         batched: BatchedAdmm,
+    },
+    Fw {
+        solver: FwQp,
+        batched: BatchedFw,
     },
 }
 
@@ -123,6 +139,10 @@ impl OptLayer {
                 AdmmQp::new_adapted(qp, rho, AdmmSettings::default())?;
             let batched = BatchedAdmm::from_single(&solver);
             LayerSolver::Admm { solver, batched }
+        } else if backend == OptBackend::Fw {
+            let solver = FwQp::new(qp, rho)?;
+            let batched = BatchedFw::from_single(&solver);
+            LayerSolver::Fw { solver, batched }
         } else {
             let solver = DenseAltDiff::new(qp, rho)?;
             let batched = (backend == OptBackend::AltDiff)
@@ -177,6 +197,7 @@ impl OptLayer {
             LayerSolver::Dense { solver, .. } => solver.qp.n(),
             LayerSolver::Sparse { solver, .. } => solver.qp.n(),
             LayerSolver::Admm { solver, .. } => solver.qp.n(),
+            LayerSolver::Fw { solver, .. } => solver.qp.n(),
         }
     }
 
@@ -185,6 +206,7 @@ impl OptLayer {
     fn family(&self) -> EngineFamily {
         match self.backend {
             OptBackend::Admm => EngineFamily::Admm,
+            OptBackend::Fw => EngineFamily::Fw,
             _ => EngineFamily::AltDiff,
         }
     }
@@ -287,6 +309,14 @@ impl OptLayer {
                     Some(&warms),
                     &opts,
                 ),
+            LayerSolver::Fw { batched, .. } => batched
+                .solve_batch_from(
+                    Some(&qrefs),
+                    None,
+                    None,
+                    Some(&warms),
+                    &opts,
+                ),
         };
         // write the converged iterates back, preserving each entry's
         // previous adjoint seed (this epoch's backward resumes from it
@@ -350,6 +380,10 @@ impl OptLayer {
                 let sol = solver.solve_with(Some(q), None, None, &opts);
                 (sol.x, Some(sol.s), None, sol.iters)
             }
+            (LayerSolver::Fw { solver, .. }, _) => {
+                let sol = solver.solve_with(Some(q), None, None, &opts);
+                (sol.x, Some(sol.s), None, sol.iters)
+            }
         };
         self.last_iters = iters;
         self.last_slack = slack;
@@ -378,6 +412,9 @@ impl OptLayer {
                 solver.vjp(slack, gx, &opts).grad_q
             }
             LayerSolver::Admm { solver, .. } => {
+                solver.vjp(slack, gx, &opts).grad_q
+            }
+            LayerSolver::Fw { solver, .. } => {
                 solver.vjp(slack, gx, &opts).grad_q
             }
         }
@@ -427,6 +464,9 @@ impl OptLayer {
             LayerSolver::Admm { batched, .. } => {
                 batched.solve_batch(Some(&qrefs), None, None, &opts)
             }
+            LayerSolver::Fw { batched, .. } => {
+                batched.solve_batch(Some(&qrefs), None, None, &opts)
+            }
         };
         self.last_batch_iters = sol.iters.clone();
         self.last_iters = sol.iters.iter().sum::<usize>() / sol.iters.len();
@@ -458,6 +498,9 @@ impl OptLayer {
                 solver.vjp(slack, gx, &opts).grad_q
             }
             LayerSolver::Admm { solver, .. } => {
+                solver.vjp(slack, gx, &opts).grad_q
+            }
+            LayerSolver::Fw { solver, .. } => {
                 solver.vjp(slack, gx, &opts).grad_q
             }
         }
@@ -563,6 +606,24 @@ impl OptLayer {
                 (
                     vjp,
                     states.into_iter().map(EngineSeed::Admm).collect(),
+                )
+            }
+            LayerSolver::Fw { batched, .. } => {
+                let fw = use_warm.then(|| {
+                    self.last_seeds
+                        .iter()
+                        .map(|o| o.clone().and_then(EngineSeed::into_fw))
+                        .collect::<Vec<_>>()
+                });
+                let (vjp, states) = batched.batch_vjp_from(
+                    &slack_refs,
+                    &gx_refs,
+                    fw.as_deref(),
+                    &opts,
+                );
+                (
+                    vjp,
+                    states.into_iter().map(EngineSeed::Fw).collect(),
                 )
             }
         };
@@ -722,6 +783,50 @@ mod tests {
                 "g[{i}]: altdiff {} admm {}",
                 ga[i],
                 gm[i]
+            );
+        }
+    }
+
+    #[test]
+    fn fw_backend_serves_simplex_layers() {
+        use crate::prob::simplex_qp;
+        // FW refuses general polytopes at registration...
+        assert!(OptLayer::new(
+            dense_qp(10, 5, 2, 31),
+            1.0,
+            OptBackend::Fw,
+            1e-8
+        )
+        .is_err());
+        // ...and matches the Alt-Diff layer on a servable simplex one.
+        let qp = simplex_qp(12, 1.0, 7);
+        let mut a =
+            OptLayer::new(qp.clone(), 1.0, OptBackend::AltDiff, 1e-10)
+                .unwrap();
+        let mut f =
+            OptLayer::new(qp, 1.0, OptBackend::Fw, 1e-10).unwrap();
+        let q: Vec<f64> =
+            (0..12).map(|i| 0.07 * i as f64 - 0.4).collect();
+        let xa = a.forward(&q);
+        let xf = f.forward(&q);
+        for i in 0..12 {
+            assert!(
+                (xa[i] - xf[i]).abs() < 1e-6,
+                "x[{i}]: altdiff {} fw {}",
+                xa[i],
+                xf[i]
+            );
+        }
+        let gx: Vec<f64> =
+            (0..12).map(|i| 1.0 - 0.1 * i as f64).collect();
+        let ga = a.backward(&gx);
+        let gf = f.backward(&gx);
+        for i in 0..12 {
+            assert!(
+                (ga[i] - gf[i]).abs() < 1e-5,
+                "g[{i}]: altdiff {} fw {}",
+                ga[i],
+                gf[i]
             );
         }
     }

@@ -56,6 +56,89 @@ pub fn ill_conditioned_qp(
     qp
 }
 
+/// Well-conditioned SPD objective shared by the Frank–Wolfe workload
+/// generators: P = I + M Mᵀ/n (spectrum O(1), κ small enough that the
+/// away-step engine converges fast), q ~ N(0, 1).
+fn fw_objective(n: usize, rng: &mut Pcg64) -> (Mat, Vec<f64>) {
+    let mraw = Mat::from_vec(n, n, rng.normal_vec(n * n));
+    let mut pm = ata(&mraw);
+    pm.scale(1.0 / n as f64);
+    for i in 0..n {
+        pm[(i, i)] += 1.0;
+    }
+    let q = rng.normal_vec(n);
+    (pm, q)
+}
+
+/// Box-constrained QP — the projection-free (Frank–Wolfe) engine's home
+/// turf:
+///     min ½xᵀPx + qᵀx   s.t.   l ≤ x ≤ u
+/// encoded with no equalities (p = 0) and the canonical stacking
+/// G = [I; −I], h = [u; −l] that [`crate::fw::FeasibleSet::detect`]
+/// recognizes. Bounds straddle 0 with per-coordinate widths in
+/// (1, 3), so generic instances have a mix of active and free
+/// coordinates at the optimum.
+pub fn box_qp(n: usize, seed: u64) -> Qp {
+    let mut rng = Pcg64::new(seed);
+    let (pm, q) = fw_objective(n, &mut rng);
+    let mut g = Mat::zeros(2 * n, n);
+    let mut h = vec![0.0; 2 * n];
+    for i in 0..n {
+        g[(i, i)] = 1.0;
+        g[(n + i, i)] = -1.0;
+        let u = 0.5 + rng.uniform();
+        let l = -(0.5 + rng.uniform());
+        h[i] = u;
+        h[n + i] = -l;
+    }
+    Qp { p: pm, q, a: Mat::zeros(0, n), b: vec![], g, h }
+}
+
+/// Scaled-simplex QP:
+///     min ½xᵀPx + qᵀx   s.t.   1ᵀx = r,  x ≥ 0
+/// encoded as A = 1ᵀ (p = 1), b = [r], G = −I, h = 0 — the simplex
+/// shape [`crate::fw::FeasibleSet::detect`] recognizes. Strictly
+/// feasible at x = (r/n)·1.
+pub fn simplex_qp(n: usize, r: f64, seed: u64) -> Qp {
+    assert!(r > 0.0, "simplex radius must be positive");
+    let mut rng = Pcg64::new(seed);
+    let (pm, q) = fw_objective(n, &mut rng);
+    let a = Mat::from_vec(1, n, vec![1.0; n]);
+    let mut g = Mat::zeros(n, n);
+    for i in 0..n {
+        g[(i, i)] = -1.0;
+    }
+    Qp { p: pm, q, a, b: vec![r], g, h: vec![0.0; n] }
+}
+
+/// ℓ1-ball QP:
+///     min ½xᵀPx + qᵀx   s.t.   ‖x‖₁ ≤ r
+/// encoded explicitly as the 2ⁿ facet inequalities σᵀx ≤ r over every
+/// sign pattern σ ∈ {±1}ⁿ (p = 0) — exactly the polytope description
+/// the dense Alt-Diff/ADMM oracles consume, and the shape
+/// [`crate::fw::FeasibleSet::detect`] maps back to a vertex oracle
+/// over ±r·eⱼ. Exponential in n by construction, so n is capped; the
+/// linear term is scaled up so generic instances are *constrained*
+/// (the unconstrained minimizer falls outside the ball).
+pub fn l1_ball_qp(n: usize, r: f64, seed: u64) -> Qp {
+    assert!(r > 0.0, "l1 radius must be positive");
+    assert!(n <= 12, "l1_ball_qp materializes 2^n facets; keep n <= 12");
+    let mut rng = Pcg64::new(seed);
+    let (pm, mut q) = fw_objective(n, &mut rng);
+    for v in q.iter_mut() {
+        *v *= 2.0 * r.max(1.0);
+    }
+    let m = 1usize << n;
+    let mut g = Mat::zeros(m, n);
+    for row in 0..m {
+        for j in 0..n {
+            g[(row, j)] =
+                if (row >> j) & 1 == 1 { -1.0 } else { 1.0 };
+        }
+    }
+    Qp { p: pm, q, a: Mat::zeros(0, n), b: vec![], g, h: vec![r; m] }
+}
+
 /// Constrained-sparsemax layer (paper Table 3/4):
 ///     min ‖x − y‖²  s.t.  1ᵀx = 1,  0 ≤ x ≤ u
 /// i.e. P = 2I, q = −2y, A = 1ᵀ (p=1), G = [−I; I], h = [0; u].
@@ -211,6 +294,52 @@ mod tests {
         assert_eq!(a.p.data, b.p.data);
         let c = dense_qp(10, 5, 2, 4);
         assert_ne!(a.q, c.q);
+    }
+
+    #[test]
+    fn box_qp_stacking_and_feasibility() {
+        let qp = box_qp(6, 11);
+        assert_eq!(qp.p_eq(), 0);
+        assert_eq!(qp.m_ineq(), 12);
+        assert!(crate::linalg::Chol::factor(&qp.p).is_ok());
+        // bounds straddle 0: x = 0 strictly feasible
+        for i in 0..12 {
+            assert!(qp.h[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn simplex_qp_center_is_strictly_feasible() {
+        let qp = simplex_qp(9, 2.0, 4);
+        assert_eq!(qp.p_eq(), 1);
+        assert_eq!(qp.m_ineq(), 9);
+        let c = vec![2.0 / 9.0; 9];
+        let ax = crate::linalg::gemv(&qp.a, &c);
+        assert!((ax[0] - 2.0).abs() < 1e-12);
+        for i in 0..9 {
+            assert!(qp.h[i] == 0.0 && c[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn l1_ball_qp_enumerates_all_facets() {
+        let qp = l1_ball_qp(5, 1.5, 2);
+        assert_eq!(qp.p_eq(), 0);
+        assert_eq!(qp.m_ineq(), 32);
+        let mut seen = std::collections::BTreeSet::new();
+        for row in 0..32 {
+            let mut mask = 0usize;
+            for j in 0..5 {
+                let v = qp.g[(row, j)];
+                assert!(v == 1.0 || v == -1.0);
+                if v < 0.0 {
+                    mask |= 1 << j;
+                }
+            }
+            seen.insert(mask);
+            assert_eq!(qp.h[row], 1.5);
+        }
+        assert_eq!(seen.len(), 32, "every sign pattern appears once");
     }
 
     #[test]

@@ -2,6 +2,7 @@
 pub mod generator;
 pub mod qp;
 
-pub use generator::{dense_qp, energy_qp, ill_conditioned_qp,
-                    softmax_layer, sparse_qp, sparsemax_qp};
+pub use generator::{box_qp, dense_qp, energy_qp, ill_conditioned_qp,
+                    l1_ball_qp, simplex_qp, softmax_layer, sparse_qp,
+                    sparsemax_qp};
 pub use qp::{EntropyObjective, Objective, Qp, QuadObjective, SparseQp};

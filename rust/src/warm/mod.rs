@@ -45,8 +45,9 @@
 //!   valid warm start across families, but the *k* it was truncated at
 //!   was calibrated against one family's convergence trajectory, and
 //!   the adjoint state is family-specific state-space — so an
-//!   ADMM-produced iterate must never seed an Alt-Diff solve (or vice
-//!   versa). Cross-family lookups are structural misses.
+//!   ADMM-produced iterate must never seed an Alt-Diff or Frank–Wolfe
+//!   solve (and so on across the full family matrix). Cross-family
+//!   lookups are structural misses.
 //!
 //! **Forward-mode caveat.** A warm primal converges before a cold
 //! Jacobian recursion does, so warm starts compose with
@@ -138,6 +139,10 @@ pub enum EngineFamily {
     /// ([`AdmmQp`](crate::admm::AdmmQp) and
     /// [`BatchedAdmm`](crate::admm::BatchedAdmm)).
     Admm,
+    /// The projection-free Frank–Wolfe (conditional-gradient) family
+    /// ([`FwQp`](crate::fw::FwQp) and
+    /// [`BatchedFw`](crate::fw::BatchedFw)).
+    Fw,
 }
 
 /// The ADMM family's reverse-mode resume state: the splitting-variable
@@ -159,16 +164,37 @@ impl AdmmSeed {
     }
 }
 
+/// The Frank–Wolfe family's reverse-mode resume state: the projected-CG
+/// adjoint iterate y (length n, O(n) — dimension-free like the other
+/// families' seeds) — returned by
+/// [`FwQp::vjp_from`](crate::fw::FwQp::vjp_from) and
+/// [`BatchedFw::batch_vjp_from`](crate::fw::BatchedFw::batch_vjp_from).
+#[derive(Clone, Debug)]
+pub struct FwSeed {
+    /// Adjoint primal iterate y (length n), the CG warm start.
+    pub y: Vec<f64>,
+}
+
+impl FwSeed {
+    /// State dimension n.
+    pub fn dim(&self) -> usize {
+        self.y.len()
+    }
+}
+
 /// A family-tagged adjoint resume state, as the cache stores it: the
-/// Alt-Diff and ADMM backward recursions iterate in different state
-/// spaces, so the seed carries its family and the consuming engine
-/// unwraps (and the type system rejects) the other family's state.
+/// Alt-Diff, ADMM, and Frank–Wolfe backward recursions iterate in
+/// different state spaces, so the seed carries its family and the
+/// consuming engine unwraps (and the type system rejects) any other
+/// family's state.
 #[derive(Clone, Debug)]
 pub enum EngineSeed {
     /// An Alt-Diff adjoint state `(z, wₛ, w_λ, w_ν)`.
     AltDiff(AdjointSeed),
     /// An ADMM adjoint state `(w_z, w_u)`.
     Admm(AdmmSeed),
+    /// A Frank–Wolfe adjoint state (the projected-CG iterate y).
+    Fw(FwSeed),
 }
 
 impl EngineSeed {
@@ -177,22 +203,31 @@ impl EngineSeed {
         match self {
             EngineSeed::AltDiff(_) => EngineFamily::AltDiff,
             EngineSeed::Admm(_) => EngineFamily::Admm,
+            EngineSeed::Fw(_) => EngineFamily::Fw,
         }
     }
 
-    /// Consume into an Alt-Diff seed; `None` if this is ADMM state.
+    /// Consume into an Alt-Diff seed; `None` for any other family.
     pub fn into_altdiff(self) -> Option<AdjointSeed> {
         match self {
             EngineSeed::AltDiff(s) => Some(s),
-            EngineSeed::Admm(_) => None,
+            _ => None,
         }
     }
 
-    /// Consume into an ADMM seed; `None` if this is Alt-Diff state.
+    /// Consume into an ADMM seed; `None` for any other family.
     pub fn into_admm(self) -> Option<AdmmSeed> {
         match self {
             EngineSeed::Admm(s) => Some(s),
-            EngineSeed::AltDiff(_) => None,
+            _ => None,
+        }
+    }
+
+    /// Consume into a Frank–Wolfe seed; `None` for any other family.
+    pub fn into_fw(self) -> Option<FwSeed> {
+        match self {
+            EngineSeed::Fw(s) => Some(s),
+            _ => None,
         }
     }
 }
@@ -476,6 +511,7 @@ mod tests {
 
     const ALT: EngineFamily = EngineFamily::AltDiff;
     const ADMM: EngineFamily = EngineFamily::Admm;
+    const FW: EngineFamily = EngineFamily::Fw;
 
     fn warm(n: usize) -> WarmStart {
         WarmStart::new(vec![1.0; n], vec![0.5; 1], vec![0.25; 2])
@@ -537,39 +573,91 @@ mod tests {
 
     #[test]
     fn cross_family_seeding_is_a_miss() {
-        // an ADMM-produced iterate must never seed an Alt-Diff solve
-        // of the same (layer, k, fingerprint) — and vice versa
-        let mut c = WarmStartCache::new(4, 10.0);
+        // one family's iterate must never seed another family's solve
+        // of the same (layer, k, fingerprint) — the full 3×3 matrix:
+        // every off-diagonal (producer, consumer) pair is a structural
+        // miss, every diagonal pair hits with its own typed seed
+        let families = [ALT, ADMM, FW];
+        let mk_seed = |f: EngineFamily| match f {
+            EngineFamily::AltDiff => EngineSeed::AltDiff(AdjointSeed {
+                z: vec![0.5, 0.5],
+                ws: vec![0.1],
+                wl: vec![0.2],
+                wn: vec![0.3],
+            }),
+            EngineFamily::Admm => EngineSeed::Admm(AdmmSeed {
+                wz: vec![0.1, 0.2, 0.3],
+                wu: vec![0.4, 0.5, 0.6],
+            }),
+            EngineFamily::Fw => {
+                EngineSeed::Fw(FwSeed { y: vec![0.7, 0.8] })
+            }
+        };
         let q = vec![1.0, 1.0];
         let fp = fingerprint(Some(42), &q, &[], &[]);
-        let seed = EngineSeed::Admm(AdmmSeed {
-            wz: vec![0.1, 0.2, 0.3],
-            wu: vec![0.4, 0.5, 0.6],
-        });
-        c.put(
-            "l",
-            ADMM,
-            10,
-            fp,
-            q.clone(),
-            vec![],
-            vec![],
-            warm(2),
-            Some(seed),
-        );
-        assert!(c.get("l", ALT, 10, fp, &q, &[], &[]).is_none());
-        let (_, adj) = c.get("l", ADMM, 10, fp, &q, &[], &[]).unwrap();
-        let adj = adj.expect("seed survives in its own family");
-        assert_eq!(adj.family(), ADMM);
-        // the typed unwrap rejects the wrong family too
-        assert!(adj.clone().into_altdiff().is_none());
-        let admm = adj.into_admm().expect("round trip");
-        assert_eq!(admm.dim(), 3);
-        // both slots coexist: an Alt-Diff entry does not clobber ADMM's
-        c.put("l", ALT, 10, fp, q.clone(), vec![], vec![], warm(2), None);
-        assert_eq!(c.len(), 2);
-        assert!(c.get("l", ADMM, 10, fp, &q, &[], &[]).is_some());
-        assert!(c.get("l", ALT, 10, fp, &q, &[], &[]).is_some());
+        // off-diagonal pairs: only the producer's entry exists, every
+        // other consumer family misses structurally
+        for producer in families {
+            let mut c = WarmStartCache::new(8, 10.0);
+            c.put(
+                "l",
+                producer,
+                10,
+                fp,
+                q.clone(),
+                vec![],
+                vec![],
+                warm(2),
+                Some(mk_seed(producer)),
+            );
+            for consumer in families {
+                let hit = c.get("l", consumer, 10, fp, &q, &[], &[]);
+                if consumer != producer {
+                    assert!(
+                        hit.is_none(),
+                        "{consumer:?} must never resume from a \
+                         {producer:?} iterate"
+                    );
+                    continue;
+                }
+                let (_, adj) = hit.expect("own-family entry hits");
+                let adj = adj.expect("seed survives in its own family");
+                assert_eq!(adj.family(), producer);
+                // the typed unwraps reject every other family too
+                assert_eq!(
+                    adj.clone().into_altdiff().is_some(),
+                    producer == ALT
+                );
+                assert_eq!(
+                    adj.clone().into_admm().is_some(),
+                    producer == ADMM
+                );
+                assert_eq!(adj.into_fw().is_some(), producer == FW);
+            }
+        }
+        // all three family slots coexist under one (layer, k, fp):
+        // no family's put clobbers another's
+        let mut c = WarmStartCache::new(8, 10.0);
+        for f in families {
+            c.put(
+                "l",
+                f,
+                10,
+                fp,
+                q.clone(),
+                vec![],
+                vec![],
+                warm(2),
+                Some(mk_seed(f)),
+            );
+        }
+        assert_eq!(c.len(), 3);
+        for f in families {
+            let (_, adj) = c
+                .get("l", f, 10, fp, &q, &[], &[])
+                .expect("own slot survives the other families' puts");
+            assert_eq!(adj.expect("typed seed kept").family(), f);
+        }
     }
 
     #[test]

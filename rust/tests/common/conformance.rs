@@ -1,0 +1,776 @@
+//! Shared cross-engine conformance suite.
+//!
+//! Every engine family (Alt-Diff, ADMM, Frank–Wolfe) serves the same
+//! contracts: solve parity against the dense Alt-Diff oracle, ragged
+//! batches reproducing sequential solves, fixed-k (tol = 0) running
+//! exactly k iterations in lockstep, warm `None` bit-identity plus
+//! mixed warm/cold isolation, and adjoint VJPs agreeing with central
+//! finite differences. This module states each contract ONCE as a
+//! generic component over two small traits; the per-family test files
+//! (`prop_admm.rs`, `prop_batched.rs`, `prop_fw.rs`) only instantiate
+//! the battery with their engines plus family-specific extras.
+//!
+//! Include from a test crate with
+//! `#[path = "common/conformance.rs"] mod conformance;` — CI greps for
+//! re-declared copies of the exported helpers in `tests/prop_*.rs`, so
+//! parity thresholds live here and nowhere else.
+#![allow(dead_code)]
+
+use altdiff::altdiff::{
+    BackwardMode, DenseAltDiff, Options, Param, Solution, Vjp,
+};
+use altdiff::batch::{BatchSolution, BatchVjp};
+use altdiff::prob::Qp;
+use altdiff::warm::WarmStart;
+
+// ------------------------------------------------------------- helpers
+
+/// Largest elementwise absolute difference (asserts equal lengths).
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// Elementwise closeness with a labelled failure message.
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() < tol,
+            "{what}[{i}]: {x} vs {y} (|Δ|={})",
+            (x - y).abs()
+        );
+    }
+}
+
+/// Deterministic pseudo-random vector in [-0.5, 0.5) (splitmix-style).
+pub fn pseudo(len: usize, seed: u64) -> Vec<f64> {
+    let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+    (0..len)
+        .map(|_| {
+            s = s
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            ((s >> 11) as f64 / (1u64 << 53) as f64) - 0.5
+        })
+        .collect()
+}
+
+/// Forward-only options tight enough that every family's fixed point is
+/// indistinguishable from exact at the parity thresholds below.
+pub fn tight() -> Options {
+    Options {
+        rho: 1.0,
+        tol: 1e-12,
+        max_iter: 200_000,
+        backward: BackwardMode::None,
+        trace: false,
+    }
+}
+
+/// Extract a Prometheus counter value from a `net/` stats text.
+pub fn counter(stats: &str, name: &str) -> u64 {
+    let prefix = format!("{name} ");
+    stats
+        .lines()
+        .find_map(|l| l.strip_prefix(prefix.as_str()))
+        .unwrap_or_else(|| panic!("counter {name} missing"))
+        .trim()
+        .parse()
+        .expect("counter value")
+}
+
+// -------------------------------------------------------- engine traits
+
+/// The sequential engine contract every family exposes (delegation-only
+/// impls — the suite never reaches past these five calls).
+pub trait SingleEngine {
+    /// Engine-tagged adjoint resume state.
+    type Seed: Clone;
+    /// The registered problem.
+    fn qp(&self) -> &Qp;
+    /// The engine's genuine cold entry point (`solve_with`) — kept
+    /// distinct from `solve_from(…, None, …)` so the warm=None
+    /// bit-identity contract compares two real code paths.
+    fn solve_cold(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        opts: &Options,
+    ) -> Solution;
+    /// Solve with per-request θ overrides, resuming from `warm`.
+    fn solve_from(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        warm: Option<&WarmStart>,
+        opts: &Options,
+    ) -> Solution;
+    /// Adjoint VJP gated by a forward solve's final slack, resuming
+    /// from `seed`; returns the final state for the next caller.
+    fn vjp_from(
+        &self,
+        slack: &[f64],
+        v: &[f64],
+        seed: Option<&Self::Seed>,
+        opts: &Options,
+    ) -> (Vjp, Self::Seed);
+}
+
+/// The batched engine contract (one launch, B elements, ragged
+/// truncation, mixed warm/cold).
+pub trait BatchEngine {
+    /// Same engine-tagged seed type as the family's sequential engine.
+    type Seed: Clone;
+    /// One batched forward launch.
+    fn solve_batch_from(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        warms: Option<&[Option<WarmStart>]>,
+        opts: &Options,
+    ) -> BatchSolution;
+    /// One batched adjoint launch.
+    fn batch_vjp_from(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        seeds: Option<&[Option<Self::Seed>]>,
+        opts: &Options,
+    ) -> (BatchVjp, Vec<Self::Seed>);
+}
+
+impl SingleEngine for DenseAltDiff {
+    type Seed = altdiff::warm::AdjointSeed;
+    fn qp(&self) -> &Qp {
+        &self.qp
+    }
+    fn solve_cold(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        opts: &Options,
+    ) -> Solution {
+        DenseAltDiff::solve_with(self, q, b, h, opts)
+    }
+    fn solve_from(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        warm: Option<&WarmStart>,
+        opts: &Options,
+    ) -> Solution {
+        DenseAltDiff::solve_from(self, q, b, h, warm, opts)
+    }
+    fn vjp_from(
+        &self,
+        slack: &[f64],
+        v: &[f64],
+        seed: Option<&Self::Seed>,
+        opts: &Options,
+    ) -> (Vjp, Self::Seed) {
+        DenseAltDiff::vjp_from(self, slack, v, seed, opts)
+    }
+}
+
+impl BatchEngine for altdiff::batch::BatchedAltDiff {
+    type Seed = altdiff::warm::AdjointSeed;
+    fn solve_batch_from(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        warms: Option<&[Option<WarmStart>]>,
+        opts: &Options,
+    ) -> BatchSolution {
+        altdiff::batch::BatchedAltDiff::solve_batch_from(
+            self, qs, bs, hs, warms, opts,
+        )
+    }
+    fn batch_vjp_from(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        seeds: Option<&[Option<Self::Seed>]>,
+        opts: &Options,
+    ) -> (BatchVjp, Vec<Self::Seed>) {
+        altdiff::batch::BatchedAltDiff::batch_vjp_from(
+            self, slacks, vs, seeds, opts,
+        )
+    }
+}
+
+impl SingleEngine for altdiff::admm::AdmmQp {
+    type Seed = altdiff::warm::AdmmSeed;
+    fn qp(&self) -> &Qp {
+        &self.qp
+    }
+    fn solve_cold(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        opts: &Options,
+    ) -> Solution {
+        altdiff::admm::AdmmQp::solve_with(self, q, b, h, opts)
+    }
+    fn solve_from(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        warm: Option<&WarmStart>,
+        opts: &Options,
+    ) -> Solution {
+        altdiff::admm::AdmmQp::solve_from(self, q, b, h, warm, opts)
+    }
+    fn vjp_from(
+        &self,
+        slack: &[f64],
+        v: &[f64],
+        seed: Option<&Self::Seed>,
+        opts: &Options,
+    ) -> (Vjp, Self::Seed) {
+        altdiff::admm::AdmmQp::vjp_from(self, slack, v, seed, opts)
+    }
+}
+
+impl BatchEngine for altdiff::admm::BatchedAdmm {
+    type Seed = altdiff::warm::AdmmSeed;
+    fn solve_batch_from(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        warms: Option<&[Option<WarmStart>]>,
+        opts: &Options,
+    ) -> BatchSolution {
+        altdiff::admm::BatchedAdmm::solve_batch_from(
+            self, qs, bs, hs, warms, opts,
+        )
+    }
+    fn batch_vjp_from(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        seeds: Option<&[Option<Self::Seed>]>,
+        opts: &Options,
+    ) -> (BatchVjp, Vec<Self::Seed>) {
+        altdiff::admm::BatchedAdmm::batch_vjp_from(
+            self, slacks, vs, seeds, opts,
+        )
+    }
+}
+
+impl SingleEngine for altdiff::fw::FwQp {
+    type Seed = altdiff::warm::FwSeed;
+    fn qp(&self) -> &Qp {
+        &self.qp
+    }
+    fn solve_cold(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        opts: &Options,
+    ) -> Solution {
+        altdiff::fw::FwQp::solve_with(self, q, b, h, opts)
+    }
+    fn solve_from(
+        &self,
+        q: Option<&[f64]>,
+        b: Option<&[f64]>,
+        h: Option<&[f64]>,
+        warm: Option<&WarmStart>,
+        opts: &Options,
+    ) -> Solution {
+        altdiff::fw::FwQp::solve_from(self, q, b, h, warm, opts)
+    }
+    fn vjp_from(
+        &self,
+        slack: &[f64],
+        v: &[f64],
+        seed: Option<&Self::Seed>,
+        opts: &Options,
+    ) -> (Vjp, Self::Seed) {
+        altdiff::fw::FwQp::vjp_from(self, slack, v, seed, opts)
+    }
+}
+
+impl BatchEngine for altdiff::fw::BatchedFw {
+    type Seed = altdiff::warm::FwSeed;
+    fn solve_batch_from(
+        &self,
+        qs: Option<&[&[f64]]>,
+        bs: Option<&[&[f64]]>,
+        hs: Option<&[&[f64]]>,
+        warms: Option<&[Option<WarmStart>]>,
+        opts: &Options,
+    ) -> BatchSolution {
+        altdiff::fw::BatchedFw::solve_batch_from(
+            self, qs, bs, hs, warms, opts,
+        )
+    }
+    fn batch_vjp_from(
+        &self,
+        slacks: &[&[f64]],
+        vs: &[&[f64]],
+        seeds: Option<&[Option<Self::Seed>]>,
+        opts: &Options,
+    ) -> (BatchVjp, Vec<Self::Seed>) {
+        altdiff::fw::BatchedFw::batch_vjp_from(
+            self, slacks, vs, seeds, opts,
+        )
+    }
+}
+
+// ----------------------------------------------------------- the cells
+
+/// One battery cell: a problem plus the perturbation/check flags its
+/// constraint structure allows.
+pub struct Cell {
+    /// Label used in failure messages.
+    pub name: &'static str,
+    /// The registered problem.
+    pub qp: Qp,
+    /// Registration ρ.
+    pub rho: f64,
+    /// Check dual (λ, ν) and gradient parity against the oracle — off
+    /// for structures whose duals are non-unique.
+    pub check_duals: bool,
+    /// Perturb b per element (off when p = 0 or the class pins b).
+    pub perturb_b: bool,
+    /// Relax h per element (off when the class pins h, e.g. simplex).
+    pub perturb_h: bool,
+}
+
+/// Per-element feasible perturbations of the cell's registered θ:
+/// q rescaled, b nudged (bounded ±5%, keeping class invariants like
+/// r > 0), h only *relaxed* so strictly feasible points stay feasible.
+pub fn perturb_thetas(
+    cell: &Cell,
+    bsz: usize,
+) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let qp = &cell.qp;
+    let mut qs = Vec::with_capacity(bsz);
+    let mut bs = Vec::with_capacity(bsz);
+    let mut hs = Vec::with_capacity(bsz);
+    for e in 0..bsz as u64 {
+        let dq = pseudo(qp.q.len(), 100 + e);
+        qs.push(
+            qp.q
+                .iter()
+                .zip(&dq)
+                .map(|(v, d)| v * (1.0 + 0.2 * d))
+                .collect::<Vec<_>>(),
+        );
+        if cell.perturb_b {
+            let db = pseudo(qp.b.len(), 200 + e);
+            bs.push(
+                qp.b.iter()
+                    .zip(&db)
+                    .map(|(v, d)| v + 0.1 * d)
+                    .collect::<Vec<_>>(),
+            );
+        } else {
+            bs.push(qp.b.clone());
+        }
+        if cell.perturb_h {
+            let dh = pseudo(qp.h.len(), 300 + e);
+            hs.push(
+                qp.h.iter()
+                    .zip(&dh)
+                    .map(|(v, d)| v + (0.2 * d).abs())
+                    .collect::<Vec<_>>(),
+            );
+        } else {
+            hs.push(qp.h.clone());
+        }
+    }
+    (qs, bs, hs)
+}
+
+fn refs(v: &[Vec<f64>]) -> Vec<&[f64]> {
+    v.iter().map(|x| x.as_slice()).collect()
+}
+
+// ----------------------------------------------------- the components
+
+/// Solve parity: at tight tolerance the engine's primal/slack iterates
+/// match the dense Alt-Diff oracle to 1e-8 (duals to 1e-7 when the
+/// cell's structure determines them uniquely).
+pub fn solve_parity_vs_dense<S: SingleEngine>(cell: &Cell, single: &S) {
+    let oracle = DenseAltDiff::new(cell.qp.clone(), cell.rho)
+        .expect("oracle registration")
+        .solve(&tight());
+    let sol = single.solve_from(None, None, None, None, &tight());
+    assert!(
+        max_abs_diff(&sol.x, &oracle.x) < 1e-8,
+        "{}: x parity {}",
+        cell.name,
+        max_abs_diff(&sol.x, &oracle.x)
+    );
+    assert!(
+        max_abs_diff(&sol.s, &oracle.s) < 1e-8,
+        "{}: slack parity",
+        cell.name
+    );
+    if cell.check_duals {
+        assert!(
+            max_abs_diff(&sol.lam, &oracle.lam) < 1e-7,
+            "{}: λ parity",
+            cell.name
+        );
+        assert!(
+            max_abs_diff(&sol.nu, &oracle.nu) < 1e-7,
+            "{}: ν parity",
+            cell.name
+        );
+    }
+}
+
+/// Ragged batches: a 5-element batch of distinct θ reproduces the
+/// sequential solves element-wise — x/s to 1e-8, duals to 1e-7 (gated),
+/// forward-mode Jacobians to 1e-7, iteration counts within ±1.
+pub fn ragged_batch_matches_singles<
+    S: SingleEngine,
+    B: BatchEngine<Seed = S::Seed>,
+>(
+    cell: &Cell,
+    single: &S,
+    batched: &B,
+) {
+    let bsz = 5;
+    let (qs, bs, hs) = perturb_thetas(cell, bsz);
+    let (qr, br, hr) = (refs(&qs), refs(&bs), refs(&hs));
+    // track ∂x/∂b where the cell has equalities, ∂x/∂q otherwise
+    let fparam =
+        if cell.qp.p_eq() > 0 { Param::B } else { Param::Q };
+    let opts = Options {
+        rho: cell.rho,
+        tol: 1e-11,
+        max_iter: 200_000,
+        backward: BackwardMode::Forward(fparam),
+        trace: false,
+    };
+    let sol = batched.solve_batch_from(
+        Some(&qr),
+        Some(&br),
+        Some(&hr),
+        None,
+        &opts,
+    );
+    let jacs = sol.jacobians.as_ref().expect("forward mode tracked");
+    for e in 0..bsz {
+        let one = single.solve_from(
+            Some(&qs[e]),
+            Some(&bs[e]),
+            Some(&hs[e]),
+            None,
+            &opts,
+        );
+        let ctx = format!("{} elem {e}", cell.name);
+        assert!(
+            max_abs_diff(&sol.xs[e], &one.x) < 1e-8,
+            "{ctx}: x parity {}",
+            max_abs_diff(&sol.xs[e], &one.x)
+        );
+        assert!(max_abs_diff(&sol.ss[e], &one.s) < 1e-8, "{ctx}: s");
+        if cell.check_duals {
+            assert!(
+                max_abs_diff(&sol.lams[e], &one.lam) < 1e-7,
+                "{ctx}: λ"
+            );
+            assert!(
+                max_abs_diff(&sol.nus[e], &one.nu) < 1e-7,
+                "{ctx}: ν"
+            );
+        }
+        let ja = one.jacobian.as_ref().expect("single jacobian");
+        assert_eq!(
+            (jacs[e].rows, jacs[e].cols),
+            (ja.rows, ja.cols),
+            "{ctx}: jacobian shape"
+        );
+        assert!(
+            max_abs_diff(&jacs[e].data, &ja.data) < 1e-7,
+            "{ctx}: jacobian parity"
+        );
+        assert!(
+            sol.iters[e].abs_diff(one.iters) <= 1,
+            "{ctx}: iters {} vs {}",
+            sol.iters[e],
+            one.iters
+        );
+    }
+}
+
+/// Fixed-k semantics (Thm 4.3, the compiled-artifact contract): tol = 0
+/// with max_iter = k runs EXACTLY k iterations — no early exit — and
+/// single/batched stay in lockstep at every k.
+pub fn fixed_k_exact<S: SingleEngine, B: BatchEngine<Seed = S::Seed>>(
+    cell: &Cell,
+    single: &S,
+    batched: &B,
+) {
+    for k in [1usize, 7, 23] {
+        let opts = Options {
+            rho: cell.rho,
+            tol: 0.0,
+            max_iter: k,
+            backward: BackwardMode::None,
+            trace: false,
+        };
+        let one = single.solve_from(None, None, None, None, &opts);
+        assert_eq!(one.iters, k, "{}: single fixed-k", cell.name);
+        let sol =
+            batched.solve_batch_from(None, None, None, None, &opts);
+        assert_eq!(
+            sol.iters,
+            vec![k],
+            "{}: batched fixed-k",
+            cell.name
+        );
+        assert!(
+            max_abs_diff(&sol.xs[0], &one.x) < 1e-10,
+            "{}: fixed-k lockstep at k={k}",
+            cell.name
+        );
+    }
+}
+
+/// Warm contract: `warm = None` is bit-identical to the cold solve, a
+/// converged iterate reproduces itself in ≤ 2 iterations, and a batch
+/// may mix warm and cold members without cross-talk.
+pub fn warm_equals_cold_and_mixed<
+    S: SingleEngine,
+    B: BatchEngine<Seed = S::Seed>,
+>(
+    cell: &Cell,
+    single: &S,
+    batched: &B,
+) {
+    let opts = Options {
+        rho: cell.rho,
+        tol: 1e-10,
+        max_iter: 200_000,
+        backward: BackwardMode::None,
+        trace: false,
+    };
+    let cold = single.solve_cold(None, None, None, &opts);
+    let resumed = single.solve_from(None, None, None, None, &opts);
+    assert_eq!(cold.x, resumed.x, "{}: warm=None bit-identity", cell.name);
+    assert_eq!(cold.iters, resumed.iters);
+
+    let ws = WarmStart::of(&cold);
+    let warm = single.solve_from(None, None, None, Some(&ws), &opts);
+    assert!(
+        warm.iters <= 2,
+        "{}: fixed point reproduces itself ({} iters)",
+        cell.name,
+        warm.iters
+    );
+    assert!(
+        max_abs_diff(&warm.x, &cold.x) < 1e-9,
+        "{}: warm x parity",
+        cell.name
+    );
+
+    // mixed batch: element 0 resumes the fixed point, element 1 is cold
+    let warms = vec![Some(ws), None];
+    let sol = batched.solve_batch_from(
+        None,
+        None,
+        None,
+        Some(&warms),
+        &opts,
+    );
+    assert!(
+        sol.iters[0] <= 2,
+        "{}: warm element truncates early",
+        cell.name
+    );
+    assert!(
+        sol.iters[1] > sol.iters[0],
+        "{}: cold element undisturbed by its warm neighbour",
+        cell.name
+    );
+    assert!(max_abs_diff(&sol.xs[0], &cold.x) < 1e-8, "{}", cell.name);
+    assert!(max_abs_diff(&sol.xs[1], &cold.x) < 1e-8, "{}", cell.name);
+}
+
+/// Adjoint correctness: the engine's VJP agrees with central finite
+/// differences of L(θ) = vᵀx*(θ) through the engine itself along a
+/// random direction per parameter, and grad_q matches the dense
+/// Alt-Diff oracle's adjoint (gated on `check_duals` — grad_b/grad_h
+/// parity rides the same gate since those flow through the duals).
+pub fn vjp_vs_oracle_and_fd<S: SingleEngine>(cell: &Cell, single: &S) {
+    let n = cell.qp.n();
+    let v = pseudo(n, 999);
+    let bopts = Options {
+        rho: cell.rho,
+        tol: 1e-12,
+        max_iter: 200_000,
+        backward: BackwardMode::Adjoint,
+        trace: false,
+    };
+    let fwd = single.solve_from(None, None, None, None, &tight());
+    let (vjp, _) = single.vjp_from(&fwd.s, &v, None, &bopts);
+
+    if cell.check_duals {
+        let oracle = DenseAltDiff::new(cell.qp.clone(), cell.rho)
+            .expect("oracle registration");
+        let osol = oracle.solve(&tight());
+        let ovjp = oracle.vjp(&osol.s, &v, &bopts);
+        assert!(
+            max_abs_diff(&vjp.grad_q, &ovjp.grad_q) < 1e-6,
+            "{}: grad_q oracle parity",
+            cell.name
+        );
+        assert!(
+            max_abs_diff(&vjp.grad_b, &ovjp.grad_b) < 1e-6,
+            "{}: grad_b oracle parity",
+            cell.name
+        );
+        assert!(
+            max_abs_diff(&vjp.grad_h, &ovjp.grad_h) < 1e-6,
+            "{}: grad_h oracle parity",
+            cell.name
+        );
+    }
+
+    // central differences through the engine itself, one random
+    // direction per perturbable parameter
+    let eps = 1e-6;
+    let loss = |q: &[f64], b: &[f64], h: &[f64]| -> f64 {
+        let s = single.solve_from(
+            Some(q),
+            Some(b),
+            Some(h),
+            None,
+            &tight(),
+        );
+        s.x.iter().zip(&v).map(|(x, vv)| x * vv).sum()
+    };
+    let mut dirs = vec![(pseudo(n, 41), Param::Q)];
+    if cell.perturb_b {
+        dirs.push((pseudo(cell.qp.b.len(), 42), Param::B));
+    }
+    if cell.perturb_h {
+        dirs.push((pseudo(cell.qp.h.len(), 43), Param::H));
+    }
+    for (dir, param) in &dirs {
+        let perturb = |sign: f64| {
+            let mut q = cell.qp.q.clone();
+            let mut b = cell.qp.b.clone();
+            let mut h = cell.qp.h.clone();
+            let target: &mut Vec<f64> = match param {
+                Param::Q => &mut q,
+                Param::B => &mut b,
+                Param::H => &mut h,
+            };
+            for (t, d) in target.iter_mut().zip(dir) {
+                *t += sign * eps * d;
+            }
+            loss(&q, &b, &h)
+        };
+        let fd = (perturb(1.0) - perturb(-1.0)) / (2.0 * eps);
+        let analytic: f64 = vjp
+            .grad(*param)
+            .iter()
+            .zip(dir)
+            .map(|(g, d)| g * d)
+            .sum();
+        assert!(
+            (fd - analytic).abs() < 1e-4 * analytic.abs().max(1.0),
+            "{} {param:?}: fd {fd} vs analytic {analytic}",
+            cell.name
+        );
+    }
+}
+
+/// Batched adjoints reproduce the single VJPs to 1e-8, and a harvested
+/// seed resumes the backward in a bounded restart (no slower than
+/// cold, and near-instant from the converged state).
+pub fn batch_vjp_matches_singles_and_seeds<
+    S: SingleEngine,
+    B: BatchEngine<Seed = S::Seed>,
+>(
+    cell: &Cell,
+    single: &S,
+    batched: &B,
+) {
+    let n = cell.qp.n();
+    let bopts = Options {
+        rho: cell.rho,
+        tol: 1e-11,
+        max_iter: 200_000,
+        backward: BackwardMode::Adjoint,
+        trace: false,
+    };
+    let fwd = single.solve_from(None, None, None, None, &tight());
+    let vs: Vec<Vec<f64>> = (0..3).map(|e| pseudo(n, 700 + e)).collect();
+    let vrefs: Vec<&[f64]> = vs.iter().map(|v| v.as_slice()).collect();
+    let slacks: Vec<&[f64]> =
+        (0..3).map(|_| fwd.s.as_slice()).collect();
+
+    let (bv, _) = batched.batch_vjp_from(&slacks, &vrefs, None, &bopts);
+    for e in 0..3 {
+        let (one, _) = single.vjp_from(&fwd.s, &vs[e], None, &bopts);
+        let ctx = format!("{} v{e}", cell.name);
+        assert!(
+            max_abs_diff(&bv.grads_q[e], &one.grad_q) < 1e-8,
+            "{ctx}: grads_q"
+        );
+        assert!(
+            max_abs_diff(&bv.grads_b[e], &one.grad_b) < 1e-8,
+            "{ctx}: grads_b"
+        );
+        assert!(
+            max_abs_diff(&bv.grads_h[e], &one.grad_h) < 1e-8,
+            "{ctx}: grads_h"
+        );
+    }
+
+    // seed round trip: the converged adjoint state reproduces itself
+    // in a bounded restart
+    let (cold, seed) = single.vjp_from(&fwd.s, &vs[0], None, &bopts);
+    let (warm, _) =
+        single.vjp_from(&fwd.s, &vs[0], Some(&seed), &bopts);
+    assert!(
+        warm.iters <= cold.iters && warm.iters <= 6,
+        "{}: seeded adjoint restarts bounded ({} vs cold {})",
+        cell.name,
+        warm.iters,
+        cold.iters
+    );
+    assert!(max_abs_diff(&warm.grad_q, &cold.grad_q) < 1e-8);
+    assert!(max_abs_diff(&warm.grad_h, &cold.grad_h) < 1e-8);
+}
+
+// ------------------------------------------------------------ battery
+
+/// Run every component on every cell. `mk` builds the family's
+/// (sequential, batched) engine pair for a cell; each family's test
+/// file calls this once — the contracts themselves live above and are
+/// never copied per family.
+pub fn run_battery<S, B>(cells: &[Cell], mk: impl Fn(&Cell) -> (S, B))
+where
+    S: SingleEngine,
+    B: BatchEngine<Seed = S::Seed>,
+{
+    for cell in cells {
+        let (single, batched) = mk(cell);
+        solve_parity_vs_dense(cell, &single);
+        ragged_batch_matches_singles(cell, &single, &batched);
+        fixed_k_exact(cell, &single, &batched);
+        warm_equals_cold_and_mixed(cell, &single, &batched);
+        vjp_vs_oracle_and_fd(cell, &single);
+        batch_vjp_matches_singles_and_seeds(cell, &single, &batched);
+    }
+}

@@ -350,6 +350,100 @@ fn trace_endpoint_streams_jsonl_under_concurrent_load() {
     lb.finish();
 }
 
+// ------------------------------------------------- FW duality-gap traces
+
+/// A Frank–Wolfe-registered layer rides the same tracing plane: sampled
+/// requests reach the ring tagged `native-fw`, their iteration samples
+/// carry the duality gap in the primal slot (FW's convergence
+/// certificate — see the `fw` module docs) and it falls over the routed
+/// fixed-k run, and the same events stream over `GET /trace`.
+#[test]
+fn fw_layer_traces_carry_decreasing_gap_over_trace_endpoint() {
+    use altdiff::prob::simplex_qp;
+    let qp = simplex_qp(16, 1.0, 3);
+    let coord = Coordinator::builder(Config {
+        workers: 2,
+        max_batch: 4,
+        stamps: true,
+        trace_every: 1,
+        trace_ring: 256,
+        trace_seed: 7,
+        ..Default::default()
+    })
+    .register_fw("simplex16", qp.clone(), 1.0)
+    .unwrap()
+    .start();
+    let server =
+        NetServer::bind("127.0.0.1:0", coord, NetConfig::default())
+            .expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let mut cl =
+        altdiff::net::Client::connect(addr).expect("connect");
+    cl.set_timeout(Some(Duration::from_secs(60))).unwrap();
+    for _ in 0..6 {
+        match cl
+            .solve(
+                "simplex16",
+                qp.q.clone(),
+                qp.b.clone(),
+                qp.h.clone(),
+                1e-3,
+            )
+            .expect("solve")
+        {
+            Reply::Ok(r) => assert_eq!(r.backend, "native-fw"),
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    // the first six drain over the HTTP path as tagged JSON-lines
+    let (status, body) = http_get(addr, "/trace");
+    assert!(status.contains("200"), "{status}");
+    let lines: Vec<&str> =
+        body.lines().filter(|l| !l.is_empty()).collect();
+    assert!(!lines.is_empty(), "no FW trace events over /trace");
+    for line in &lines {
+        assert_trace_line_shape(line);
+        assert!(line.contains("\"simplex16\""), "{line}");
+        assert!(line.contains("\"native-fw\""), "{line}");
+    }
+    // the next six stay in the ring for the typed-event checks
+    for _ in 0..6 {
+        cl.solve(
+            "simplex16",
+            qp.q.clone(),
+            qp.b.clone(),
+            qp.h.clone(),
+            1e-3,
+        )
+        .expect("solve");
+    }
+    drop(cl);
+    stop.store(true, Ordering::SeqCst);
+    let coord = handle.join().expect("server thread");
+    let events = coord.trace_ring().drain();
+    assert!(!events.is_empty(), "second batch left no typed events");
+    for ev in &events {
+        assert_eq!(ev.layer, "simplex16");
+        assert_eq!(ev.backend, "native-fw");
+        assert!(!ev.iters.is_empty(), "FW path records iterations");
+        // primal slot = duality gap gₖ = ∇f(xₖ)ᵀ(xₖ − vₖ): nonnegative
+        // (float slack only) and falling endpoint to endpoint
+        for s in &ev.iters {
+            assert!(s.primal.is_finite() && s.primal >= -1e-10);
+            assert!(s.dual.is_finite() && s.dual >= 0.0);
+        }
+        let first = ev.iters.first().unwrap().primal;
+        let last = ev.iters.last().unwrap().primal;
+        assert!(
+            last < first,
+            "duality gap did not fall: {first:.3e} → {last:.3e}"
+        );
+    }
+}
+
 // ----------------------------------------------------------- off = off
 
 #[test]

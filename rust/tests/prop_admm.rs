@@ -1,322 +1,53 @@
-//! Cross-family properties of the ADMM engine family: parity with the
-//! Alt-Diff engines to 1e-8 on solves and adjoints, the fixed-k and
-//! warm-start contracts, and the cross-method router dispatching each
-//! layer to its calibrated winning family — observable end-to-end
+//! ADMM-family instantiation of the shared cross-engine conformance
+//! battery (`tests/common/conformance.rs`), plus the cross-method
+//! router properties that are specific to this family: each layer is
+//! dispatched to its calibrated winning engine, observable end-to-end
 //! through the coordinator metrics and a `net/` stats round trip.
 
+#[path = "common/conformance.rs"]
+mod conformance;
+
 use altdiff::admm::{AdmmQp, AdmmSettings, BatchedAdmm};
-use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::coordinator::{Config, Coordinator, Reply};
 use altdiff::net::{Client, NetConfig, NetServer};
-use altdiff::prob::{dense_qp, ill_conditioned_qp, Qp};
-use altdiff::warm::WarmStart;
+use altdiff::prob::{dense_qp, ill_conditioned_qp};
+use conformance::{counter, max_abs_diff, pseudo, tight, Cell};
 use std::sync::atomic::Ordering;
 use std::time::Duration;
 
-fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
-    assert_eq!(a.len(), b.len(), "length mismatch");
-    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
-}
+// ------------------------------------------------------------- battery
 
-/// Deterministic pseudo-random vector in [-0.5, 0.5) (splitmix-style).
-fn pseudo(len: usize, seed: u64) -> Vec<f64> {
-    let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
-    (0..len)
-        .map(|_| {
-            s = s
-                .wrapping_mul(6364136223846793005)
-                .wrapping_add(1442695040888963407);
-            ((s >> 11) as f64 / (1u64 << 53) as f64) - 0.5
-        })
-        .collect()
-}
-
-fn tight() -> Options {
-    Options {
-        rho: 1.0,
-        tol: 1e-12,
-        max_iter: 50_000,
-        backward: BackwardMode::None,
-        trace: false,
-    }
-}
-
-// ---------------------------------------------------------------- parity
-
-/// Both families minimize the same strictly convex QP, so the primal,
-/// slack, and dual iterates must agree to 1e-8 at tight tolerance.
+/// The identical battery every engine family runs: solve parity vs the
+/// dense Alt-Diff oracle, ragged batch == singles, fixed-k, warm ==
+/// cold + mixed isolation, VJP vs oracle and finite differences, and
+/// batched adjoints with seed round trips. The contracts live in
+/// `common/conformance.rs`; this file only instantiates the ADMM pair.
 #[test]
-fn admm_matches_dense_altdiff_to_1e8() {
-    for (n, m, p, seed) in
-        [(8, 4, 2, 1), (12, 6, 3, 2), (15, 7, 4, 3), (10, 5, 2, 31)]
-    {
-        let qp = dense_qp(n, m, p, seed);
-        let alt =
-            DenseAltDiff::new(qp.clone(), 1.0).unwrap().solve(&tight());
-        let adm = AdmmQp::new(qp, 1.0).unwrap().solve(&tight());
-        assert!(
-            max_abs_diff(&alt.x, &adm.x) < 1e-8,
-            "x parity ({n},{m},{p},{seed}): {}",
-            max_abs_diff(&alt.x, &adm.x)
-        );
-        assert!(max_abs_diff(&alt.s, &adm.s) < 1e-8, "slack parity");
-        assert!(max_abs_diff(&alt.lam, &adm.lam) < 1e-7, "λ parity");
-        assert!(max_abs_diff(&alt.nu, &adm.nu) < 1e-7, "ν parity");
-    }
-}
-
-/// A ragged batch (every element a different θ) must reproduce the
-/// single-solve answers element-wise, Jacobians included.
-#[test]
-fn ragged_batch_matches_singles() {
-    let qp = dense_qp(10, 5, 2, 31);
-    let single = AdmmQp::new(qp.clone(), 1.0).unwrap();
-    let batched = BatchedAdmm::from_single(&single);
-    let opts = Options {
-        rho: 1.0,
-        tol: 1e-11,
-        max_iter: 50_000,
-        backward: BackwardMode::Forward(Param::B),
-        trace: false,
-    };
-
-    let mut qs = Vec::new();
-    let mut bs = Vec::new();
-    let mut hs = Vec::new();
-    for e in 0..5u64 {
-        let dq = pseudo(10, 100 + e);
-        let db = pseudo(2, 200 + e);
-        let dh = pseudo(5, 300 + e);
-        qs.push(
-            qp.q.iter().zip(&dq).map(|(v, d)| v + 0.3 * d).collect::<Vec<_>>(),
-        );
-        bs.push(
-            qp.b.iter().zip(&db).map(|(v, d)| v + 0.3 * d).collect::<Vec<_>>(),
-        );
-        hs.push(
-            qp.h.iter().zip(&dh).map(|(v, d)| v + 0.3 * d).collect::<Vec<_>>(),
-        );
-    }
-    let qr: Vec<&[f64]> = qs.iter().map(|v| v.as_slice()).collect();
-    let br: Vec<&[f64]> = bs.iter().map(|v| v.as_slice()).collect();
-    let hr: Vec<&[f64]> = hs.iter().map(|v| v.as_slice()).collect();
-
-    let sol =
-        batched.solve_batch(Some(&qr), Some(&br), Some(&hr), &opts);
-    let jacs = sol.jacobians.as_ref().expect("forward mode tracked");
-    for e in 0..5 {
-        let one = single.solve_with(
-            Some(&qs[e]),
-            Some(&bs[e]),
-            Some(&hs[e]),
-            &opts,
-        );
-        assert!(
-            max_abs_diff(&sol.xs[e], &one.x) < 1e-8,
-            "element {e} x parity"
-        );
-        assert!(max_abs_diff(&sol.ss[e], &one.s) < 1e-8);
-        let ja = one.jacobian.as_ref().unwrap();
-        assert_eq!((jacs[e].rows, jacs[e].cols), (ja.rows, ja.cols));
-        assert!(
-            max_abs_diff(&jacs[e].data, &ja.data) < 1e-7,
-            "element {e} Jacobian parity"
-        );
-        // batched and single truncation may differ by the one iteration
-        // the GEMM-vs-triangular-solve rounding moves
-        assert!(sol.iters[e].abs_diff(one.iters) <= 1);
-    }
-}
-
-// ------------------------------------------------------------- contracts
-
-/// tol = 0 + max_iter = k is the compiled-artifact contract: exactly k
-/// iterations, no early exit, single and batched in lockstep.
-#[test]
-fn fixed_k_runs_exactly_k_iterations() {
-    let qp = dense_qp(9, 4, 2, 11);
-    let single = AdmmQp::new(qp.clone(), 1.0).unwrap();
-    let batched = BatchedAdmm::from_single(&single);
-    for k in [1, 7, 23] {
-        let opts = Options {
+fn admm_passes_the_shared_conformance_battery() {
+    let cells = [
+        Cell {
+            name: "dense(10,5,2)",
+            qp: dense_qp(10, 5, 2, 31),
             rho: 1.0,
-            tol: 0.0,
-            max_iter: k,
-            backward: BackwardMode::None,
-            trace: false,
-        };
-        let one = single.solve(&opts);
-        assert_eq!(one.iters, k, "single ran exactly k");
-        let sol = batched.solve_batch(None, None, None, &opts);
-        assert_eq!(sol.iters, vec![k], "batched ran exactly k");
-        assert!(
-            max_abs_diff(&sol.xs[0], &one.x) < 1e-10,
-            "fixed-k lockstep at k={k}"
-        );
-    }
-}
-
-/// Warm contract: `warm = None` is bit-identical to the cold solve, a
-/// converged triple reproduces itself almost immediately, and a batch
-/// may mix warm and cold members without cross-talk.
-#[test]
-fn warm_equals_cold_and_mixed_batches_are_isolated() {
-    let qp = dense_qp(10, 5, 2, 13);
-    let single = AdmmQp::new(qp.clone(), 1.0).unwrap();
-    let batched = BatchedAdmm::from_single(&single);
-    let opts = Options {
-        rho: 1.0,
-        tol: 1e-10,
-        max_iter: 50_000,
-        backward: BackwardMode::None,
-        trace: false,
-    };
-
-    let cold = single.solve_with(None, None, None, &opts);
-    let resumed = single.solve_from(None, None, None, None, &opts);
-    assert_eq!(cold.x, resumed.x, "warm=None is bit-identical");
-    assert_eq!(cold.iters, resumed.iters);
-
-    let ws = WarmStart::of(&cold);
-    let warm =
-        single.solve_from(None, None, None, Some(&ws), &opts);
-    assert!(
-        warm.iters < cold.iters,
-        "fixed-point resume must truncate early ({} vs {})",
-        warm.iters,
-        cold.iters
-    );
-    assert!(warm.iters <= 2, "fixed point reproduces itself");
-    assert!(max_abs_diff(&warm.x, &cold.x) < 1e-9);
-
-    // mixed batch: element 0 resumes the fixed point, element 1 is cold
-    let warms = vec![Some(ws), None];
-    let sol =
-        batched.solve_batch_from(None, None, None, Some(&warms), &opts);
-    assert!(sol.iters[0] <= 2, "warm element truncates early");
-    assert!(
-        sol.iters[1] > sol.iters[0],
-        "cold element is undisturbed by its warm neighbour"
-    );
-    assert!(max_abs_diff(&sol.xs[0], &cold.x) < 1e-8);
-    assert!(max_abs_diff(&sol.xs[1], &cold.x) < 1e-8);
-}
-
-// -------------------------------------------------------------- adjoints
-
-/// The ADMM adjoint VJP must agree with (a) the Alt-Diff adjoint on the
-/// same problem to 1e-8 and (b) central finite differences of
-/// L(θ) = vᵀx*(θ) for every parameter.
-#[test]
-fn vjp_matches_altdiff_adjoint_and_finite_differences() {
-    let qp = dense_qp(9, 4, 2, 17);
-    let v = pseudo(9, 999);
-    let opts = Options {
-        rho: 1.0,
-        tol: 1e-12,
-        max_iter: 50_000,
-        backward: BackwardMode::Adjoint,
-        trace: false,
-    };
-
-    let alt = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
-    let adm = AdmmQp::new(qp.clone(), 1.0).unwrap();
-    let av = alt.solve_vjp(None, None, None, &v, &opts);
-    let dv = adm.solve_vjp(None, None, None, &v, &opts);
-    assert!(
-        max_abs_diff(&av.vjp.grad_q, &dv.vjp.grad_q) < 1e-8,
-        "grad_q family parity"
-    );
-    assert!(max_abs_diff(&av.vjp.grad_b, &dv.vjp.grad_b) < 1e-8);
-    assert!(max_abs_diff(&av.vjp.grad_h, &dv.vjp.grad_h) < 1e-8);
-
-    // central differences along one random direction per parameter
-    let eps = 1e-6;
-    let loss = |qp: &Qp, q: &[f64], b: &[f64], h: &[f64]| -> f64 {
-        let s = AdmmQp::new(qp.clone(), 1.0).unwrap().solve_with(
-            Some(q),
-            Some(b),
-            Some(h),
-            &tight(),
-        );
-        s.x.iter().zip(&v).map(|(x, vv)| x * vv).sum()
-    };
-    let dirs = [
-        (pseudo(9, 41), Param::Q),
-        (pseudo(2, 42), Param::B),
-        (pseudo(5, 43), Param::H),
+            check_duals: true,
+            perturb_b: true,
+            perturb_h: true,
+        },
+        Cell {
+            name: "dense(12,6,3)",
+            qp: dense_qp(12, 6, 3, 2),
+            rho: 1.0,
+            check_duals: true,
+            perturb_b: true,
+            perturb_h: true,
+        },
     ];
-    for (dir, param) in &dirs {
-        let perturb = |sign: f64| {
-            let mut q = qp.q.clone();
-            let mut b = qp.b.clone();
-            let mut h = qp.h.clone();
-            let target: &mut Vec<f64> = match param {
-                Param::Q => &mut q,
-                Param::B => &mut b,
-                Param::H => &mut h,
-            };
-            for (t, d) in target.iter_mut().zip(dir) {
-                *t += sign * eps * d;
-            }
-            loss(&qp, &q, &b, &h)
-        };
-        let fd = (perturb(1.0) - perturb(-1.0)) / (2.0 * eps);
-        let analytic: f64 = dv
-            .vjp
-            .grad(*param)
-            .iter()
-            .zip(dir)
-            .map(|(g, d)| g * d)
-            .sum();
-        assert!(
-            (fd - analytic).abs() < 1e-4 * analytic.abs().max(1.0),
-            "{param:?}: fd {fd} vs analytic {analytic}"
-        );
-    }
-}
-
-/// Batched adjoints reproduce the single VJPs, and a harvested adjoint
-/// seed resumes the transposed recursion with fewer iterations.
-#[test]
-fn batch_vjp_matches_singles_and_seeds_truncate_early() {
-    let qp = dense_qp(10, 5, 2, 23);
-    let single = AdmmQp::new(qp.clone(), 1.0).unwrap();
-    let batched = BatchedAdmm::from_single(&single);
-    let bopts = Options {
-        rho: 1.0,
-        tol: 1e-11,
-        max_iter: 50_000,
-        backward: BackwardMode::Adjoint,
-        trace: false,
-    };
-
-    let fwd = single.solve_with(None, None, None, &tight());
-    let vs: Vec<Vec<f64>> =
-        (0..3).map(|e| pseudo(10, 700 + e)).collect();
-    let vrefs: Vec<&[f64]> = vs.iter().map(|v| v.as_slice()).collect();
-    let slacks: Vec<&[f64]> = (0..3).map(|_| fwd.s.as_slice()).collect();
-
-    let bv = batched.batch_vjp(&slacks, &vrefs, &bopts);
-    for e in 0..3 {
-        let one = single.vjp(&fwd.s, &vs[e], &bopts);
-        assert!(max_abs_diff(&bv.grads_q[e], &one.grad_q) < 1e-8);
-        assert!(max_abs_diff(&bv.grads_b[e], &one.grad_b) < 1e-8);
-        assert!(max_abs_diff(&bv.grads_h[e], &one.grad_h) < 1e-8);
-    }
-
-    // seed round trip: the converged adjoint state reproduces itself
-    let (cold, seed) = single.vjp_from(&fwd.s, &vs[0], None, &bopts);
-    let (warm, _) =
-        single.vjp_from(&fwd.s, &vs[0], Some(&seed), &bopts);
-    assert!(
-        warm.iters < cold.iters,
-        "seeded adjoint truncates early ({} vs {})",
-        warm.iters,
-        cold.iters
-    );
-    assert!(max_abs_diff(&warm.grad_q, &cold.grad_q) < 1e-8);
-    assert!(max_abs_diff(&warm.grad_h, &cold.grad_h) < 1e-8);
+    conformance::run_battery(&cells, |cell| {
+        let single = AdmmQp::new(cell.qp.clone(), cell.rho)
+            .expect("admm registration");
+        let batched = BatchedAdmm::from_single(&single);
+        (single, batched)
+    });
 }
 
 // ---------------------------------------------------------------- router
@@ -440,18 +171,6 @@ fn router_dispatches_each_layer_to_its_winning_family() {
 }
 
 // -------------------------------------------------------------- net stats
-
-/// Extract a Prometheus counter value from the stats text.
-fn counter(stats: &str, name: &str) -> u64 {
-    let prefix = format!("{name} ");
-    stats
-        .lines()
-        .find_map(|l| l.strip_prefix(prefix.as_str()))
-        .unwrap_or_else(|| panic!("counter {name} missing"))
-        .trim()
-        .parse()
-        .expect("counter value")
-}
 
 /// The per-engine counters are observable over the wire protocol with
 /// no protocol change: solve both families through a loopback server,

@@ -1,13 +1,54 @@
-//! Property tests for the batched native engine: `BatchedAltDiff` must
-//! reproduce `DenseAltDiff` run element-by-element — solutions, duals,
-//! and Jacobians to 1e-8 — across ragged batch sizes, every Jacobian
-//! parameter, fixed-iteration (server) semantics, and mixed per-element
-//! convergence speeds (the truncation mask).
+//! Alt-Diff-family instantiation of the shared cross-engine conformance
+//! battery (`tests/common/conformance.rs`), plus the randomized
+//! property tests that are specific to the batched native engine:
+//! `BatchedAltDiff` must reproduce `DenseAltDiff` run element-by-element
+//! — solutions, duals, and Jacobians to 1e-8 — across random ragged
+//! batch sizes, every Jacobian parameter, fixed-iteration (server)
+//! semantics, and mixed per-element convergence speeds.
+
+#[path = "common/conformance.rs"]
+mod conformance;
 
 use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options, Param};
 use altdiff::batch::BatchedAltDiff;
 use altdiff::prob::dense_qp;
 use altdiff::util::Pcg64;
+use conformance::{max_abs_diff, Cell};
+
+// ------------------------------------------------------------- battery
+
+/// The identical battery every engine family runs (see
+/// `common/conformance.rs`); this file instantiates the founding
+/// Alt-Diff pair, so the oracle family is held to its own contracts.
+#[test]
+fn altdiff_passes_the_shared_conformance_battery() {
+    let cells = [
+        Cell {
+            name: "dense(10,5,2)",
+            qp: dense_qp(10, 5, 2, 31),
+            rho: 1.0,
+            check_duals: true,
+            perturb_b: true,
+            perturb_h: true,
+        },
+        Cell {
+            name: "dense(14,7,3)",
+            qp: dense_qp(14, 7, 3, 43),
+            rho: 1.0,
+            check_duals: true,
+            perturb_b: true,
+            perturb_h: true,
+        },
+    ];
+    conformance::run_battery(&cells, |cell| {
+        let single = DenseAltDiff::new(cell.qp.clone(), cell.rho)
+            .expect("dense registration");
+        let batched = BatchedAltDiff::from_dense(&single);
+        (single, batched)
+    });
+}
+
+// ---------------------------------------------------- randomized extras
 
 struct Thetas {
     qs: Vec<Vec<f64>>,
@@ -49,10 +90,6 @@ impl Thetas {
             self.hs.iter().map(|v| v.as_slice()).collect(),
         )
     }
-}
-
-fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
 }
 
 /// ∀ random QPs, ragged batch sizes, and Jacobian parameters: converged

@@ -6,11 +6,15 @@
 //! semantics, and mixed per-element convergence speeds (the truncation
 //! mask).
 
+#[path = "common/conformance.rs"]
+mod conformance;
+
 use altdiff::altdiff::{BackwardMode, Options, Param, SparseAltDiff};
 use altdiff::batch::BatchedSparseAltDiff;
 use altdiff::prob::{sparse_qp, sparsemax_qp, SparseQp};
 use altdiff::sparse::Csr;
 use altdiff::util::Pcg64;
+use conformance::max_abs_diff;
 
 /// Per-element q perturbations (q is unconstrained, so any perturbation
 /// keeps the problem feasible).
@@ -24,10 +28,6 @@ fn random_qs(base: &[f64], bsz: usize, rng: &mut Pcg64) -> Vec<Vec<f64>> {
 
 fn refs(v: &[Vec<f64>]) -> Vec<&[f64]> {
     v.iter().map(|x| x.as_slice()).collect()
-}
-
-fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
 }
 
 /// ∀ sparse problems (both engine picks), ragged batch sizes, and

@@ -1,0 +1,393 @@
+//! Frank–Wolfe-family instantiation of the shared cross-engine
+//! conformance battery (`tests/common/conformance.rs`), plus the
+//! FW-specific properties no other family has: ℓ1-ball solves with
+//! non-unique duals, LMO vertex-tie determinism, away-step purging of a
+//! polluted warm start, duality-gap traces, and the three-way router
+//! (Alt-Diff / FW / ADMM) observable end to end over the `net/` stats.
+
+#[path = "common/conformance.rs"]
+mod conformance;
+
+use altdiff::altdiff::{BackwardMode, DenseAltDiff, Options};
+use altdiff::coordinator::{Config, Coordinator, Reply};
+use altdiff::fw::FwQp;
+use altdiff::net::{Client, NetConfig, NetServer};
+use altdiff::obs::{IterObserver, IterSample, TraceCollector};
+use altdiff::prob::{
+    box_qp, dense_qp, ill_conditioned_qp, l1_ball_qp, simplex_qp, Qp,
+};
+use altdiff::warm::WarmStart;
+use conformance::{counter, max_abs_diff, pseudo, tight, Cell};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+// ------------------------------------------------------------- battery
+
+/// The identical battery the other two families run, over the two
+/// LMO structures whose duals the KKT system determines uniquely. The
+/// ℓ1 ball is deliberately *not* a battery cell: its 2ⁿ-facet duals are
+/// non-unique, so it gets the relaxed-tolerance extras below instead.
+#[test]
+fn fw_passes_the_shared_conformance_battery() {
+    let cells = [
+        Cell {
+            name: "box(10)",
+            qp: box_qp(10, 1),
+            rho: 1.0,
+            check_duals: true,
+            perturb_b: false, // boxes have no equality block
+            perturb_h: true,  // |δ| relaxation keeps l < u
+        },
+        Cell {
+            name: "simplex(12)",
+            qp: simplex_qp(12, 1.0, 7),
+            rho: 1.0,
+            perturb_b: true,  // r stays in [0.95, 1.05] > 0
+            perturb_h: false, // the class pins h = 0
+            check_duals: true,
+        },
+    ];
+    conformance::run_battery(&cells, |cell| {
+        let single =
+            FwQp::new(cell.qp.clone(), cell.rho).expect("fw registration");
+        let batched = altdiff::fw::BatchedFw::from_single(&single);
+        (single, batched)
+    });
+}
+
+// ------------------------------------------------------------ ℓ1 extras
+
+/// ℓ1-ball solves against the dense oracle at relaxed tolerances: the
+/// 2ⁿ sign facets make the duals non-unique (many facet combinations
+/// certify the same vertex), so only x, the KKT residual, the unique
+/// ∂L/∂q, and the *total* radius sensitivity Σᵢ ∂L/∂hᵢ are contracts.
+#[test]
+fn l1_ball_matches_the_oracle_with_relaxed_duals() {
+    for seed in [3u64, 8] {
+        let qp = l1_ball_qp(6, 1.5, seed);
+        let fw = FwQp::new(qp.clone(), 1.0).unwrap();
+        let oracle = DenseAltDiff::new(qp.clone(), 1.0).unwrap();
+        let sol = fw.solve(&tight());
+        let osol = oracle.solve(&tight());
+        assert!(
+            max_abs_diff(&sol.x, &osol.x) < 1e-6,
+            "seed {seed}: x parity {}",
+            max_abs_diff(&sol.x, &osol.x)
+        );
+        assert!(
+            qp.kkt_residual(&sol.x, &sol.lam, &sol.nu) < 1e-6,
+            "seed {seed}: recovered duals certify the solution"
+        );
+
+        // ∂L/∂q is unique even where the duals are not
+        let aopts =
+            Options { backward: BackwardMode::Adjoint, ..tight() };
+        let v = pseudo(6, 17 + seed);
+        let g = fw.vjp(&sol.s, &v, &aopts);
+        let og = oracle.vjp(&osol.s, &v, &aopts);
+        assert!(
+            max_abs_diff(&g.grad_q, &og.grad_q) < 1e-5,
+            "seed {seed}: grad_q parity {}",
+            max_abs_diff(&g.grad_q, &og.grad_q)
+        );
+
+        // total radius sensitivity: every facet row shares h = r, so a
+        // uniform bump is dL/dr and must match Σ grad_h by central FD
+        // through the FW engine itself
+        let dr: f64 = g.grad_h.iter().sum();
+        let eps = 1e-5;
+        let loss = |h: &[f64]| -> f64 {
+            let s = fw.solve_with(None, None, Some(h), &tight());
+            s.x.iter().zip(&v).map(|(x, w)| x * w).sum::<f64>()
+        };
+        let hp: Vec<f64> = qp.h.iter().map(|&x| x + eps).collect();
+        let hm: Vec<f64> = qp.h.iter().map(|&x| x - eps).collect();
+        let fd = (loss(&hp) - loss(&hm)) / (2.0 * eps);
+        assert!(
+            (dr - fd).abs() < 1e-4 * dr.abs().max(1.0),
+            "seed {seed}: Σ grad_h {dr} vs FD dL/dr {fd}"
+        );
+    }
+}
+
+// ------------------------------------------------------------- LMO ties
+
+/// Vertex ties resolve by the documented smallest-index rule, so a
+/// problem symmetric in two coordinates solves to a symmetric point and
+/// repeated solves are bitwise identical — no hidden iteration-order or
+/// hash-order nondeterminism in the active set.
+#[test]
+fn simplex_vertex_ties_break_deterministically() {
+    let mut qp = simplex_qp(8, 1.0, 5);
+    // make the objective exactly symmetric in coordinates 0 and 1:
+    // P = I and a shared linear pull
+    for i in 0..8 {
+        for j in 0..8 {
+            qp.p[(i, j)] = if i == j { 1.0 } else { 0.0 };
+        }
+    }
+    qp.q = (0..8).map(|i| 0.3 + 0.1 * i as f64).collect();
+    qp.q[0] = -0.8;
+    qp.q[1] = -0.8;
+    let fw = FwQp::new(qp, 1.0).unwrap();
+    let a = fw.solve(&tight());
+    let mass: f64 = a.x.iter().sum();
+    assert!((mass - 1.0).abs() < 1e-9, "simplex mass {mass}");
+    assert!(
+        (a.x[0] - a.x[1]).abs() < 1e-8,
+        "symmetric coordinates diverged: {} vs {}",
+        a.x[0],
+        a.x[1]
+    );
+    let b = fw.solve(&tight());
+    assert_eq!(a.x, b.x, "repeated solves are bitwise identical");
+    assert_eq!(a.iters, b.iters);
+}
+
+// ----------------------------------------------------------- away steps
+
+/// A warm start carrying mass on every vertex when the optimum is a
+/// single vertex: the away/drop steps must purge the other nine weights
+/// entirely, landing on the same fixed point as the cold solve.
+#[test]
+fn away_steps_purge_a_polluted_warm_start() {
+    let mut qp = simplex_qp(10, 1.0, 13);
+    qp.q = vec![0.5; 10];
+    qp.q[0] = -8.0; // optimum pinned at vertex e₀ with a wide margin
+    let fw = FwQp::new(qp.clone(), 1.0).unwrap();
+    let cold = fw.solve(&tight());
+    assert!(
+        (cold.x[0] - 1.0).abs() < 1e-8,
+        "vertex optimum: x₀ = {}",
+        cold.x[0]
+    );
+    let uniform = WarmStart::new(
+        vec![0.1; 10], // every vertex weighted — nine of them wrong
+        vec![0.0; qp.p_eq()],
+        vec![0.0; qp.m_ineq()],
+    );
+    let warm =
+        fw.solve_from(None, None, None, Some(&uniform), &tight());
+    assert!(
+        max_abs_diff(&warm.x, &cold.x) < 1e-8,
+        "away steps did not purge the polluted support: {}",
+        max_abs_diff(&warm.x, &cold.x)
+    );
+    for (i, &xi) in warm.x.iter().enumerate().skip(1) {
+        assert!(xi.abs() < 1e-8, "stale vertex {i} kept weight {xi}");
+    }
+}
+
+// ---------------------------------------------------------------- traces
+
+/// FW's observer convention: the primal slot carries the duality gap
+/// gₖ = ∇f(xₖ)ᵀ(xₖ − vₖ) — a true convergence certificate — and it
+/// falls over a fixed-k trace; observing never perturbs the solve.
+#[test]
+fn fw_traces_report_a_decreasing_duality_gap() {
+    let k = 40;
+    let fw = FwQp::new(simplex_qp(14, 1.0, 2), 1.0).unwrap();
+    let opts = Options {
+        rho: 1.0,
+        tol: 0.0, // fixed-k: run exactly max_iter iterations
+        max_iter: k,
+        backward: BackwardMode::None,
+        trace: false,
+    };
+    let mut coll = TraceCollector::new(1);
+    coll.watch(0);
+    let sol = fw.solve_observed(
+        None,
+        None,
+        None,
+        None,
+        &opts,
+        Some(&mut coll as &mut dyn IterObserver),
+    );
+    assert_eq!(sol.iters, k);
+    let samples: Vec<IterSample> = coll.take(0).expect("watched");
+    assert_eq!(samples.len(), k, "one gap sample per iteration");
+    for (i, s) in samples.iter().enumerate() {
+        assert_eq!(s.iter as usize, i, "iteration indices in order");
+        // the gap is nonnegative by LMO optimality (float slack only)
+        assert!(s.primal.is_finite() && s.primal >= -1e-10);
+        assert!(s.dual.is_finite() && s.dual >= 0.0);
+    }
+    assert!(
+        samples[0].primal > 1e-8,
+        "cold LMO init should not already be optimal"
+    );
+    let head: f64 =
+        samples[..5].iter().map(|s| s.primal).sum::<f64>() / 5.0;
+    let tail: f64 =
+        samples[k - 5..].iter().map(|s| s.primal).sum::<f64>() / 5.0;
+    assert!(
+        tail < head * 0.5,
+        "duality gap did not fall: {head:.3e} → {tail:.3e}"
+    );
+    // observer transparency: bit-identical with and without
+    let plain = fw.solve_from(None, None, None, None, &opts);
+    assert_eq!(plain.x, sol.x);
+    assert_eq!(plain.iters, sol.iters);
+}
+
+// ------------------------------------------------------------ the router
+
+/// A simplex layer whose optimum sits exactly on the first vertex (FW's
+/// cold LMO init — residual at float accuracy from rung one) while the
+/// widened spectrum stalls the fixed-ρ Alt-Diff probe, exactly like the
+/// `ill` layer does. FW therefore certifies every calibrated tolerance
+/// at the first rung and must win the cell outright.
+fn vertex_simplex_qp() -> Qp {
+    let mut qp = simplex_qp(14, 1.0, 11);
+    for i in 0..14 {
+        qp.p[(i, i)] += 1e4 * i as f64 / 13.0;
+    }
+    for v in qp.q.iter_mut() {
+        *v = v.abs() + 0.5;
+    }
+    qp.q[0] = -1e6;
+    qp
+}
+
+/// Coordinator whose router faces all three outcomes: a well-behaved
+/// dense layer (both probed families clear the first rung → tie →
+/// Alt-Diff, the paper's engine), an ill-conditioned dense layer (ADMM
+/// wins; FW is absent — the constraint block is not vertex-enumerable),
+/// and a vertex-pinned simplex layer (FW wins from the first rung).
+fn three_way_coordinator() -> Coordinator {
+    Coordinator::builder(Config {
+        workers: 2,
+        max_batch: 4,
+        batch_timeout_us: 1_000,
+        artifacts: None,
+        ..Default::default()
+    })
+    .ladder(vec![150, 600, 2400])
+    .register_routed("well", dense_qp(12, 6, 3, 9), 1.0)
+    .unwrap()
+    .register_routed("ill", ill_conditioned_qp(10, 5, 2, 1e4, 7), 1.0)
+    .unwrap()
+    .register_routed("vertex14", vertex_simplex_qp(), 1.0)
+    .unwrap()
+    .start()
+}
+
+/// Three-way calibration: each layer routes to its winning family —
+/// `native`, `native-admm`, `native-fw` — on solve AND gradient paths,
+/// with the per-engine counters recording the split.
+#[test]
+fn router_splits_three_ways_across_engine_families() {
+    let mut c = three_way_coordinator();
+    let well = dense_qp(12, 6, 3, 9);
+    let ill = ill_conditioned_qp(10, 5, 2, 1e4, 7);
+    let vqp = vertex_simplex_qp();
+
+    c.submit("well", well.q.clone(), well.b.clone(), well.h.clone(), 1e-1);
+    c.submit("ill", ill.q.clone(), ill.b.clone(), ill.h.clone(), 1e-1);
+    c.submit("vertex14", vqp.q.clone(), vqp.b.clone(), vqp.h.clone(), 1e-3);
+    let (mut well_seen, mut ill_seen, mut fw_seen) = (false, false, false);
+    for _ in 0..3 {
+        match c.recv_timeout(Duration::from_secs(60)).expect("reply") {
+            Reply::Ok(r) if r.x.len() == 12 => {
+                assert_eq!(r.backend, "native", "well layer → Alt-Diff");
+                well_seen = true;
+            }
+            Reply::Ok(r) if r.x.len() == 10 => {
+                assert_eq!(r.backend, "native-admm", "ill layer → ADMM");
+                ill_seen = true;
+            }
+            Reply::Ok(r) => {
+                assert_eq!(r.x.len(), 14);
+                assert_eq!(
+                    r.backend, "native-fw",
+                    "vertex simplex layer → FW"
+                );
+                assert!(
+                    [150, 600, 2400].contains(&r.k_used),
+                    "k_used is a ladder rung"
+                );
+                // the optimum IS the first vertex; FW serves it exactly
+                assert!((r.x[0] - 1.0).abs() < 1e-6, "x₀ = {}", r.x[0]);
+                assert!(r.x[1..].iter().all(|&v| v.abs() < 1e-6));
+                fw_seen = true;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert!(well_seen && ill_seen && fw_seen);
+
+    // gradient path routes through the same winner table
+    let v14 = pseudo(14, 3);
+    c.submit_grad(
+        "vertex14",
+        vqp.q.clone(),
+        vqp.b.clone(),
+        vqp.h.clone(),
+        v14,
+        1e-3,
+    );
+    match c.recv_timeout(Duration::from_secs(60)).expect("reply") {
+        Reply::Grad(g) => {
+            assert_eq!(g.backend, "native-fw");
+            assert_eq!(g.x.len(), 14);
+            assert_eq!(g.grad_q.len(), 14);
+            assert_eq!(g.grad_b.len(), 1);
+            assert_eq!(g.grad_h.len(), 14);
+        }
+        other => panic!("unexpected reply {other:?}"),
+    }
+
+    let ord = Ordering::Relaxed;
+    assert!(c.metrics.router_fw_picks.load(ord) >= 2, "fw picks");
+    assert!(c.metrics.router_admm_picks.load(ord) >= 1, "admm picks");
+    assert!(
+        c.metrics.router_altdiff_picks.load(ord) >= 1,
+        "altdiff picks"
+    );
+    assert!(c.metrics.fw_execs.load(ord) >= 2, "fw launches");
+    assert!(c.metrics.fw_elems.load(ord) >= 2);
+    assert!(c.metrics.fw_iters.load(ord) > 0);
+}
+
+/// The FW counters reconcile over the wire protocol: solve the FW-won
+/// layer and an Alt-Diff-won layer through a loopback server, then read
+/// the per-family split back out of the Prometheus stats op.
+#[test]
+fn fw_counters_round_trip_through_net_stats() {
+    let coord = three_way_coordinator();
+    let server = NetServer::bind("127.0.0.1:0", coord, NetConfig::default())
+        .expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run());
+
+    let well = dense_qp(12, 6, 3, 9);
+    let vqp = vertex_simplex_qp();
+    let mut cl = Client::connect(addr).expect("connect");
+    cl.set_timeout(Some(Duration::from_secs(60))).unwrap();
+    match cl
+        .solve("well", well.q.clone(), well.b.clone(), well.h.clone(), 1e-1)
+        .expect("well solve")
+    {
+        Reply::Ok(r) => assert_eq!(r.backend, "native"),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    match cl
+        .solve("vertex14", vqp.q.clone(), vqp.b.clone(), vqp.h.clone(), 1e-3)
+        .expect("vertex solve")
+    {
+        Reply::Ok(r) => assert_eq!(r.backend, "native-fw"),
+        other => panic!("unexpected reply {other:?}"),
+    }
+
+    let stats = cl.stats().expect("stats");
+    assert!(counter(&stats, "altdiff_fw_execs_total") >= 1);
+    assert!(counter(&stats, "altdiff_fw_elems_total") >= 1);
+    assert!(counter(&stats, "altdiff_router_fw_picks_total") >= 1);
+    assert!(counter(&stats, "altdiff_fw_iters_total") > 0);
+    assert!(counter(&stats, "altdiff_router_altdiff_picks_total") >= 1);
+
+    stop.store(true, Ordering::SeqCst);
+    handle.join().expect("server thread");
+}

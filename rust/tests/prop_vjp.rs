@@ -8,28 +8,20 @@
 //! and mixed per-element convergence; and against a finite-difference
 //! directional derivative of the solver itself.
 
+#[path = "common/conformance.rs"]
+mod conformance;
+
 use altdiff::altdiff::{
     BackwardMode, DenseAltDiff, Options, Param, SparseAltDiff,
 };
 use altdiff::batch::{BatchedAltDiff, BatchedSparseAltDiff};
 use altdiff::prob::{dense_qp, sparse_qp, sparsemax_qp};
 use altdiff::util::rng::Pcg64;
+use conformance::{max_abs_diff, tight};
 
-fn tight(backward: BackwardMode) -> Options {
-    Options {
-        tol: 1e-12,
-        max_iter: 200_000,
-        backward,
-        ..Default::default()
-    }
-}
-
-fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
-    assert_eq!(a.len(), b.len());
-    a.iter()
-        .zip(b)
-        .map(|(x, y)| (x - y).abs())
-        .fold(0.0, f64::max)
+/// The shared tight options with a backward pass attached.
+fn rev(backward: BackwardMode) -> Options {
+    Options { backward, ..tight() }
 }
 
 #[test]
@@ -43,11 +35,11 @@ fn dense_adjoint_matches_full_jacobian_every_param() {
         None,
         None,
         &v,
-        &tight(BackwardMode::Adjoint),
+        &rev(BackwardMode::Adjoint),
     );
     assert!(out.solution.jacobian.is_none());
     for param in [Param::Q, Param::B, Param::H] {
-        let sol = solver.solve(&tight(BackwardMode::Forward(param)));
+        let sol = solver.solve(&rev(BackwardMode::Forward(param)));
         let want = sol.vjp(&v);
         let got = out.vjp.grad(param);
         assert!(
@@ -67,9 +59,9 @@ fn dense_adjoint_matches_finite_difference_direction() {
         None,
         None,
         &v,
-        &tight(BackwardMode::Adjoint),
+        &rev(BackwardMode::Adjoint),
     );
-    let fopts = tight(BackwardMode::None);
+    let fopts = rev(BackwardMode::None);
     let eps = 1e-6;
     // directional derivative of L(θ) = vᵀx*(θ) along a random δ, per θ
     let dirs_q = rng.normal_vec(12);
@@ -155,10 +147,10 @@ fn sparse_adjoint_matches_full_jacobian_both_engines() {
             None,
             None,
             &v,
-            &tight(BackwardMode::Adjoint),
+            &rev(BackwardMode::Adjoint),
         );
         for param in [Param::Q, Param::B, Param::H] {
-            let sol = solver.solve(&tight(BackwardMode::Forward(param)));
+            let sol = solver.solve(&rev(BackwardMode::Forward(param)));
             let want = sol.vjp(&v);
             let got = out.vjp.grad(param);
             assert!(
@@ -194,14 +186,14 @@ fn batched_dense_adjoint_matches_sequential_and_forward_mode() {
         None,
         None,
         &vr,
-        &tight(BackwardMode::Adjoint),
+        &rev(BackwardMode::Adjoint),
     );
     assert!(out.forward.jacobians.is_none());
     let fwd = batched.solve_batch(
         Some(&qr),
         None,
         None,
-        &tight(BackwardMode::Forward(Param::Q)),
+        &rev(BackwardMode::Forward(Param::Q)),
     );
     for e in 0..3 {
         // vs the sequential adjoint
@@ -210,7 +202,7 @@ fn batched_dense_adjoint_matches_sequential_and_forward_mode() {
             None,
             None,
             &vs[e],
-            &tight(BackwardMode::Adjoint),
+            &rev(BackwardMode::Adjoint),
         );
         assert!(
             max_abs_diff(&out.vjp.grads_q[e], &seq.vjp.grad_q) < 1e-8,
@@ -261,13 +253,13 @@ fn batched_sparse_adjoint_matches_sequential_both_engines() {
             None,
             None,
             &vr,
-            &tight(BackwardMode::Adjoint),
+            &rev(BackwardMode::Adjoint),
         );
         let fwd = batched.solve_batch(
             Some(&qr),
             None,
             None,
-            &tight(BackwardMode::Forward(Param::Q)),
+            &rev(BackwardMode::Forward(Param::Q)),
         );
         for e in 0..3 {
             let s = seq.solve_vjp(
@@ -275,7 +267,7 @@ fn batched_sparse_adjoint_matches_sequential_both_engines() {
                 None,
                 None,
                 &vs[e],
-                &tight(BackwardMode::Adjoint),
+                &rev(BackwardMode::Adjoint),
             );
             assert!(
                 max_abs_diff(&out.vjp.grads_q[e], &s.vjp.grad_q) < 1e-8,
@@ -330,7 +322,7 @@ fn adjoint_truncation_error_shrinks_with_tolerance() {
     let mut rng = Pcg64::new(12);
     let v = rng.normal_vec(16);
     let exact = solver
-        .solve_vjp(None, None, None, &v, &tight(BackwardMode::Adjoint))
+        .solve_vjp(None, None, None, &v, &rev(BackwardMode::Adjoint))
         .vjp;
     let mut errs = Vec::new();
     for tol in [1e-2, 1e-4, 1e-8] {

@@ -5,6 +5,9 @@
 //! `nn::OptLayer`, and a wire round trip with a session key observes
 //! server-side warm hits.
 
+#[path = "common/conformance.rs"]
+mod conformance;
+
 use altdiff::altdiff::{
     BackwardMode, DenseAltDiff, Options, Param, SparseAltDiff,
 };
@@ -14,27 +17,8 @@ use altdiff::net::{Client, NetConfig, NetServer};
 use altdiff::nn::{OptBackend, OptLayer};
 use altdiff::prob::{dense_qp, sparse_qp, sparsemax_qp};
 use altdiff::warm::WarmStart;
+use conformance::{assert_close, tight};
 use std::time::Duration;
-
-fn tight() -> Options {
-    Options {
-        tol: 1e-11,
-        max_iter: 60_000,
-        backward: BackwardMode::None,
-        ..Default::default()
-    }
-}
-
-fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
-    assert_eq!(a.len(), b.len(), "{what}: length");
-    for (i, (x, y)) in a.iter().zip(b).enumerate() {
-        assert!(
-            (x - y).abs() < tol,
-            "{what}[{i}]: {x} vs {y} (|Δ|={})",
-            (x - y).abs()
-        );
-    }
-}
 
 #[test]
 fn warm_equals_cold_dense_sequential() {
